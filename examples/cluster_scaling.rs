@@ -1,0 +1,59 @@
+//! Multicore scaling deep-dive: where does the speedup plateau come
+//! from? Decomposes the simulated 64-core run into the paper's §5
+//! effects — workload imbalance, dispatch overhead, memory contention —
+//! by toggling each machine-model term.
+//!
+//! ```sh
+//! cargo run --release --example cluster_scaling
+//! ```
+
+use so3ft::bench_util::{env_usize, Table};
+use so3ft::simulator::cost::{measured_spec, TransformKind};
+use so3ft::simulator::machine::{simulate_transform, MachineParams};
+
+fn main() -> so3ft::Result<()> {
+    let b = env_usize("SO3FT_B", 32);
+    println!("measuring per-package costs at B={b}...\n");
+
+    for kind in [TransformKind::Forward, TransformKind::Inverse] {
+        let spec = measured_spec(b, kind)?;
+        let t1 = spec.sequential_seconds();
+
+        let ideal = MachineParams::ideal();
+        let mut no_contention = MachineParams::opteron_like();
+        no_contention.bw_cores = f64::INFINITY;
+        let mut no_overhead = MachineParams::opteron_like();
+        no_overhead.dispatch_overhead = 0.0;
+        no_overhead.region_barrier = 0.0;
+        let full = MachineParams::opteron_like();
+
+        let models = [
+            ("ideal machine (imbalance only)", &ideal),
+            ("+ dispatch/barrier overhead", &no_contention),
+            ("+ memory contention (no overhead)", &no_overhead),
+            ("full Opteron-like model", &full),
+        ];
+
+        println!("--- {} (sequential {:.4}s) ---", spec.label, t1);
+        let mut table = Table::new(&["model", "S(8)", "S(16)", "S(64)"]);
+        for (name, params) in models {
+            let s = |p: usize| t1 / simulate_transform(&spec, p, params);
+            table.row(&[
+                name.to_string(),
+                format!("{:.2}", s(8)),
+                format!("{:.2}", s(16)),
+                format!("{:.2}", s(64)),
+            ]);
+        }
+        table.print();
+        println!();
+    }
+    println!(
+        "Interpretation: imbalance alone is mild (the symmetry clusters are\n\
+         small and numerous — the paper's design goal); the plateau at high\n\
+         core counts is dominated by memory contention, which is exactly\n\
+         the paper's §5 explanation, and is stronger for the inverse\n\
+         transform because of the on-the-fly transposition."
+    );
+    Ok(())
+}

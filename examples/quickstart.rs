@@ -1,0 +1,57 @@
+//! Quickstart: synthesize a random band-limited function on SO(3), run
+//! the forward transform, verify the roundtrip, inspect the timing
+//! breakdown.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use so3ft::pool::Schedule;
+use so3ft::so3::coeffs::{coeff_count, So3Coeffs};
+use so3ft::transform::So3Fft;
+
+const B: usize = 32;
+
+fn main() -> so3ft::Result<()> {
+    println!(
+        "bandwidth {B}: grid (2B)^3 = {} nodes, {} coefficients",
+        (2 * B).pow(3),
+        coeff_count(B)
+    );
+
+    // Configure the transform like the paper's benchmark: dynamic
+    // scheduling, symmetry-clustered geometric partitioning, precomputed
+    // Wigner tables.
+    let fft = So3Fft::builder(B)
+        .threads(4)
+        .schedule(Schedule::Dynamic { chunk: 1 })
+        .build()?;
+
+    // The paper's workload: random coefficients, re/im uniform in [-1, 1].
+    let coeffs = So3Coeffs::random(B, 2024);
+
+    // Synthesis (iFSOFT), then analysis (FSOFT).
+    let (grid, inv_stats) = fft.inverse_with_stats(&coeffs)?;
+    let (back, fwd_stats) = fft.forward_with_stats(&grid)?;
+
+    println!(
+        "iFSOFT: {:?}  (dwt {:?} | transpose {:?} | fft {:?})",
+        inv_stats.total, inv_stats.dwt, inv_stats.transpose, inv_stats.fft
+    );
+    println!(
+        "FSOFT:  {:?}  (fft {:?} | transpose {:?} | dwt {:?})",
+        fwd_stats.total, fwd_stats.fft, fwd_stats.transpose, fwd_stats.dwt
+    );
+    println!(
+        "FFT stage fraction of forward: {:.1}% (paper §5 reports ~5-8% at B=512)",
+        100.0 * fwd_stats.fft_fraction()
+    );
+
+    let abs_err = coeffs.max_abs_error(&back);
+    let rel_err = coeffs.max_rel_error(&back);
+    println!("roundtrip max abs error: {abs_err:.3e}");
+    println!("roundtrip max rel error: {rel_err:.3e}");
+    assert!(abs_err < 1e-11, "roundtrip accuracy regression");
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Fast rotational matching — the application family from the paper's
+//! introduction (EM density fitting, molecular replacement, docking,
+//! spherical image registration).
+//!
+//! A synthetic "molecule" is modeled as a band-limited density on the
+//! sphere (a sum of Gaussian-like lobes). We rotate it by a hidden
+//! rotation, add noise, and recover the rotation with one iFSOFT over
+//! the full (2B)³ rotation grid.
+//!
+//! ```sh
+//! cargo run --release --example rotational_matching
+//! ```
+
+use so3ft::apps::matching;
+use so3ft::apps::sphere::{analysis, sphere_angles, SphCoeffs, SphGrid};
+use so3ft::prng::Xoshiro256;
+use so3ft::so3::rotation::{EulerZyz, Rotation};
+use so3ft::transform::So3Fft;
+use so3ft::Complex64;
+
+const B: usize = 16;
+
+/// Synthetic spherical density: a few smooth lobes at random directions.
+fn synthetic_molecule(seed: u64) -> SphCoeffs {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let n = 2 * B;
+    let (thetas, phis) = sphere_angles(B).unwrap();
+    // Lobe centers and widths.
+    let lobes: Vec<([f64; 3], f64, f64)> = (0..6)
+        .map(|_| {
+            let z: f64 = rng.next_signed();
+            let phi = rng.next_f64() * std::f64::consts::TAU;
+            let s = (1.0 - z * z).sqrt();
+            (
+                [s * phi.cos(), s * phi.sin(), z],
+                3.0 + 5.0 * rng.next_f64(),  // sharpness
+                0.5 + rng.next_f64(),        // weight
+            )
+        })
+        .collect();
+    let mut grid = SphGrid::zeros(B);
+    for (j, &theta) in thetas.iter().enumerate() {
+        for (k, &phi) in phis.iter().enumerate() {
+            let v = [
+                theta.sin() * phi.cos(),
+                theta.sin() * phi.sin(),
+                theta.cos(),
+            ];
+            let mut val = 0.0;
+            for (c, sharp, w) in &lobes {
+                let dot = v[0] * c[0] + v[1] * c[1] + v[2] * c[2];
+                val += w * (sharp * (dot - 1.0)).exp();
+            }
+            grid.data[j * n + k] = Complex64::new(val, 0.0);
+        }
+    }
+    // Band-limit by analysis (the projection onto H_B on the sphere).
+    analysis(&grid).unwrap()
+}
+
+fn main() -> so3ft::Result<()> {
+    let f = synthetic_molecule(7);
+
+    // Hidden rotation (not grid-aligned: tests real-world recovery).
+    let hidden = EulerZyz::new(2.135, 1.04, 5.58);
+    let mut g = f.rotate(hidden);
+
+    // Measurement noise on the rotated copy's coefficients.
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    for l in 0..B {
+        let li = l as i64;
+        for m in -li..=li {
+            let noise = Complex64::new(rng.next_signed(), rng.next_signed()).scale(0.01);
+            *g.at_mut(l, m) += noise;
+        }
+    }
+
+    println!("searching {} rotations with one iFSOFT (B = {B})...", (2 * B).pow(3));
+    let fft = So3Fft::builder(B).threads(4).build()?;
+    let t0 = std::time::Instant::now();
+    let result = matching::match_rotation(&fft, &f, &g)?;
+    let dt = t0.elapsed();
+
+    let r_hidden = Rotation::from_euler(hidden);
+    let r_found = Rotation::from_euler(result.euler);
+    let dist = r_hidden.angular_distance(&r_found);
+    let cell = std::f64::consts::PI / B as f64;
+
+    println!("hidden  rotation: α={:.4} β={:.4} γ={:.4}", hidden.alpha, hidden.beta, hidden.gamma);
+    println!(
+        "found   rotation: α={:.4} β={:.4} γ={:.4}  (peak {:.3}, {dt:?})",
+        result.euler.alpha, result.euler.beta, result.euler.gamma, result.peak
+    );
+    println!(
+        "angular distance: {:.4} rad  (grid cell ≈ {:.4} rad)",
+        dist, cell
+    );
+    assert!(
+        dist < 1.8 * cell,
+        "matching failed: distance {dist} exceeds ~2 grid cells"
+    );
+    println!("OK — recovered within grid resolution despite noise");
+    Ok(())
+}

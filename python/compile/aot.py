@@ -1,0 +1,83 @@
+"""AOT-lower the L2 DWT graphs to HLO **text** artifacts for the rust
+runtime (``rust/src/runtime``).
+
+Interchange format is HLO text, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (normally via ``make artifacts``):
+
+    python -m compile.aot --out-dir ../artifacts --bandwidths "4 8 16 32"
+
+Emits per bandwidth:
+    dwt_fwd_b{B}.hlo.txt   — forward contraction (see compile.model)
+    dwt_inv_b{B}.hlo.txt   — inverse contraction
+and a ``manifest.json`` describing shapes for the rust loader.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side unwraps a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bandwidth(b: int, out_dir: pathlib.Path) -> dict:
+    """Lower both artifacts for one bandwidth; returns manifest entries."""
+    fwd = jax.jit(model.dwt_forward_stage).lower(*model.forward_shapes(b))
+    inv = jax.jit(model.dwt_inverse_stage).lower(*model.inverse_shapes(b))
+    fwd_name = f"dwt_fwd_b{b}.hlo.txt"
+    inv_name = f"dwt_inv_b{b}.hlo.txt"
+    (out_dir / fwd_name).write_text(to_hlo_text(fwd))
+    (out_dir / inv_name).write_text(to_hlo_text(inv))
+    return {
+        "forward": fwd_name,
+        "inverse": inv_name,
+        "member_pad": model.MEMBER_PAD,
+        "l_dim": b,
+        "j_dim": 2 * b,
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--bandwidths",
+        default="4 8 16 32",
+        help="space- or comma-separated bandwidth list",
+    )
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    bandwidths = [int(tok) for tok in args.bandwidths.replace(",", " ").split()]
+
+    manifest = {"dtype": "f64", "bandwidths": {}}
+    for b in bandwidths:
+        manifest["bandwidths"][str(b)] = lower_bandwidth(b, out_dir)
+        print(f"lowered bandwidth {b}")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {len(bandwidths)}x2 artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Layer-1: the DWT contraction as Pallas kernels.
+
+The FSOFT hot spot is, per symmetry cluster, a small dense contraction
+between the base Wigner rows ``d[L, J]`` (J = 2B beta nodes) and the
+cluster's member vectors:
+
+* forward:  ``c[m, l] = sum_j d[l, j] * t[m, j]``   (t = weighted samples)
+* inverse:  ``s[m, j] = sum_l d[l, j] * chat[m, l]``
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets a
+64-core CPU with OpenMP, so there is no thread-block structure to port.
+For the TPU formulation we express the contraction as an MXU-shaped
+matmul and let BlockSpec stage HBM→VMEM panels of ``d``:
+
+* the L axis is tiled (``L_BLK`` rows of d per grid step) — each tile of
+  ``d`` plus the full member panel fits comfortably in VMEM
+  (L_BLK·J + M·J + M·L_BLK doubles; ~0.3 MB at B = 512, L_BLK = 64);
+* the member axis M (≤ 8, padded) rides along fully resident — it is the
+  tiny dimension of the systolic matmul;
+* accumulation happens in the kernel's output ref, one (M, L_BLK) panel
+  per grid step — no cross-step carries, so no scratch semaphores.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; on-TPU behaviour is estimated in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(d_ref, t_ref, o_ref):
+    """One grid step: o[M, L_BLK] = t[M, J] @ d[L_BLK, J]^T."""
+    o_ref[...] = jax.lax.dot_general(
+        t_ref[...],
+        d_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+def _inv_kernel(d_ref, c_ref, o_ref):
+    """One grid step: o[M, J] += chat[M, L_BLK] @ d[L_BLK, J].
+
+    The L axis is the *contraction* axis here, so each grid step adds one
+    partial product into the output panel.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        c_ref[...],
+        d_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+def _pick_block(n: int, target: int = 64) -> int:
+    """Largest divisor of n not exceeding target (keeps the grid exact)."""
+    best = 1
+    for cand in range(1, min(n, target) + 1):
+        if n % cand == 0:
+            best = cand
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("l_blk",))
+def dwt_contract_forward(d: jnp.ndarray, t: jnp.ndarray, l_blk: int | None = None):
+    """c[m, l] = sum_j d[l, j] * t[m, j] via the Pallas kernel.
+
+    d: [L, J] float; t: [M, J] float. Returns [M, L].
+    """
+    l, j = d.shape
+    m, j2 = t.shape
+    assert j == j2, f"J mismatch: {j} vs {j2}"
+    blk = l_blk if l_blk is not None else _pick_block(l)
+    grid = (l // blk,)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, j), lambda i: (i, 0)),   # d panel: HBM→VMEM per step
+            pl.BlockSpec((m, j), lambda i: (0, 0)),     # t resident across steps
+        ],
+        out_specs=pl.BlockSpec((m, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, l), d.dtype),
+        interpret=True,
+    )(d, t)
+
+
+@functools.partial(jax.jit, static_argnames=("l_blk",))
+def dwt_contract_inverse(d: jnp.ndarray, chat: jnp.ndarray, l_blk: int | None = None):
+    """s[m, j] = sum_l d[l, j] * chat[m, l] via the Pallas kernel.
+
+    d: [L, J] float; chat: [M, L] float. Returns [M, J].
+    """
+    l, j = d.shape
+    m, l2 = chat.shape
+    assert l == l2, f"L mismatch: {l} vs {l2}"
+    blk = l_blk if l_blk is not None else _pick_block(l)
+    grid = (l // blk,)
+    return pl.pallas_call(
+        _inv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, j), lambda i: (i, 0)),   # d panel per step
+            pl.BlockSpec((m, blk), lambda i: (0, i)),   # matching chat panel
+        ],
+        out_specs=pl.BlockSpec((m, j), lambda i: (0, 0)),  # accumulated output
+        out_shape=jax.ShapeDtypeStruct((m, j), d.dtype),
+        interpret=True,
+    )(d, chat)

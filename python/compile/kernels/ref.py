@@ -1,0 +1,110 @@
+"""Pure-jnp / numpy reference oracles for the Pallas DWT kernels.
+
+This module is the python-side ground truth:
+
+* ``dwt_contract_forward_ref`` / ``dwt_contract_inverse_ref`` — the exact
+  einsum the Pallas kernels must reproduce (the DWT's inner contraction;
+  signs, reflections, quadrature weights and the V(l) scale all live in
+  the rust coordinator, so the kernel is a pure contraction).
+* ``wigner_d_column`` — the paper's seed + three-term recurrence
+  (Eq. 2), mirroring ``rust/src/so3/wigner.rs``; used to build realistic
+  kernel inputs and to cross-check the rust implementation's convention.
+* ``quadrature_weights`` — paper Eq. 6.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def dwt_contract_forward_ref(d: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """c[m, l] = sum_j d[l, j] * t[m, j]."""
+    return jnp.einsum("lj,mj->ml", d, t)
+
+
+def dwt_contract_inverse_ref(d: jnp.ndarray, chat: jnp.ndarray) -> jnp.ndarray:
+    """s[m, j] = sum_l d[l, j] * chat[m, l]."""
+    return jnp.einsum("lj,ml->mj", d, chat)
+
+
+# ---------------------------------------------------------------------------
+# Wigner-d reference (numpy, mirrors the rust implementation)
+# ---------------------------------------------------------------------------
+
+
+def _reduce_orders(m: int, mp: int) -> tuple[int, int, float]:
+    """Reduce to the canonical domain m >= |m'| >= 0; returns sign."""
+    sign = 1.0
+    if abs(mp) > abs(m):
+        m, mp = -mp, -m  # d(l,m,m') = d(l,-m',-m)
+    if m < 0:
+        sign = -1.0 if (m - mp) % 2 else 1.0  # (-1)^{m-m'}
+        m, mp = -m, -mp
+    return m, mp, sign
+
+
+def _seed(m: int, mp: int, beta: float) -> float:
+    """Log-domain seed d(m, m, m'; beta) for m >= |m'|."""
+    if m == 0:
+        return 1.0
+    c, s = math.cos(beta / 2), math.sin(beta / 2)
+    ln = 0.5 * (
+        math.lgamma(2 * m + 1) - math.lgamma(m + mp + 1) - math.lgamma(m - mp + 1)
+    )
+    ln += (m + mp) * math.log(c) + (m - mp) * math.log(s)
+    return math.exp(ln)
+
+
+def wigner_d_column(b: int, m: int, mp: int, beta: float) -> np.ndarray:
+    """d(l, m, m'; beta) for l = 0..b-1 (zeros below l0)."""
+    out = np.zeros(b)
+    rm, rmp, sign = _reduce_orders(m, mp)
+    l0 = max(rm, abs(rmp))
+    if l0 >= b:
+        return out
+    x = math.cos(beta)
+    d_cur = sign * _seed(rm, rmp, beta)
+    d_prev = 0.0
+    for l in range(l0, b):
+        out[l] = d_cur
+        if l + 1 >= b:
+            break
+        if l == 0:
+            d_prev, d_cur = d_cur, x * d_cur
+        else:
+            lf = float(l)
+            l1 = lf + 1.0
+            norm = math.sqrt((l1 * l1 - rm * rm) * (l1 * l1 - rmp * rmp))
+            a1 = (2 * lf + 1) * l1 / norm
+            a2 = -(2 * lf + 1) * (rm * rmp) / (lf * norm)
+            a3 = l1 / lf * math.sqrt((lf * lf - rm * rm) * (lf * lf - rmp * rmp)) / norm
+            d_prev, d_cur = d_cur, (a1 * x + a2) * d_cur - a3 * d_prev
+    return out
+
+
+def grid_betas(b: int) -> np.ndarray:
+    """The K&R beta nodes: (2j+1)pi/4B, j = 0..2B-1."""
+    return np.array([(2 * j + 1) * math.pi / (4 * b) for j in range(2 * b)])
+
+
+def quadrature_weights(b: int) -> np.ndarray:
+    """Paper Eq. 6."""
+    betas = grid_betas(b)
+    w = np.zeros(2 * b)
+    for j, bj in enumerate(betas):
+        acc = sum(math.sin((2 * i + 1) * bj) / (2 * i + 1) for i in range(b))
+        w[j] = 2 * math.pi * math.sin(bj) / (b * b) * acc
+    return w
+
+
+def wigner_rows(b: int, m: int, mp: int) -> np.ndarray:
+    """Dense base rows d[l, j] for l = 0..b-1 over all beta nodes
+    (zero rows below l0) — the layout the AOT artifact consumes."""
+    betas = grid_betas(b)
+    rows = np.zeros((b, 2 * b))
+    for j, bj in enumerate(betas):
+        rows[:, j] = wigner_d_column(b, m, mp, bj)
+    return rows

@@ -1,0 +1,69 @@
+"""Layer-2: the complex DWT stage as a JAX graph over the Pallas kernels.
+
+The rust coordinator works in complex arithmetic with the real Wigner
+rows; across the PJRT boundary the complex member vectors travel as
+separate re/im planes, and the contraction is two real matmuls sharing
+the same ``d`` panel. This module assembles those graphs — these are the
+functions AOT-lowered by :mod:`compile.aot`, one pair per bandwidth:
+
+* ``dwt_forward_stage(d, t_re, t_im)   -> (c_re, c_im)``  with
+  ``c[m, l] = sum_j d[l, j] * t[m, j]``
+* ``dwt_inverse_stage(d, c_re, c_im)   -> (s_re, s_im)``  with
+  ``s[m, j] = sum_l d[l, j] * c[m, l]``
+
+Shapes are fixed per artifact: d is [B, 2B] (rows below the cluster's l0
+zero-padded), the member axis is padded to MEMBER_PAD = 8 (the maximum
+symmetry-cluster size). Zero padding is exact: padded rows/members
+produce zero outputs which the coordinator ignores.
+
+Signs, reflections, quadrature weights and the V(l) scale stay in rust —
+the artifact is a pure contraction, so one compiled executable serves
+every cluster of its bandwidth.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import dwt_pallas  # noqa: E402
+
+#: Maximum symmetry-cluster size (paper §3: groups of eight or less).
+MEMBER_PAD = 8
+
+
+def dwt_forward_stage(d: jnp.ndarray, t_re: jnp.ndarray, t_im: jnp.ndarray):
+    """Complex forward DWT contraction as two real Pallas matmuls."""
+    c_re = dwt_pallas.dwt_contract_forward(d, t_re)
+    c_im = dwt_pallas.dwt_contract_forward(d, t_im)
+    return c_re, c_im
+
+
+def dwt_inverse_stage(d: jnp.ndarray, c_re: jnp.ndarray, c_im: jnp.ndarray):
+    """Complex inverse DWT contraction as two real Pallas matmuls."""
+    s_re = dwt_pallas.dwt_contract_inverse(d, c_re)
+    s_im = dwt_pallas.dwt_contract_inverse(d, c_im)
+    return s_re, s_im
+
+
+def forward_shapes(b: int):
+    """Example-input shapes for the forward artifact of bandwidth b."""
+    f8 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((b, 2 * b), f8),          # d rows
+        jax.ShapeDtypeStruct((MEMBER_PAD, 2 * b), f8),  # t re
+        jax.ShapeDtypeStruct((MEMBER_PAD, 2 * b), f8),  # t im
+    )
+
+
+def inverse_shapes(b: int):
+    """Example-input shapes for the inverse artifact of bandwidth b."""
+    f8 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((b, 2 * b), f8),          # d rows
+        jax.ShapeDtypeStruct((MEMBER_PAD, b), f8),      # chat re
+        jax.ShapeDtypeStruct((MEMBER_PAD, b), f8),      # chat im
+    )

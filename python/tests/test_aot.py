@@ -1,0 +1,54 @@
+"""The AOT path: lowering must produce loadable HLO text with the right
+entry signature (the rust runtime parses these files)."""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entry = aot.lower_bandwidth(4, out)
+    (out / "manifest.json").write_text(json.dumps({"bandwidths": {"4": entry}}))
+    return out
+
+
+def test_files_exist(lowered_dir):
+    assert (lowered_dir / "dwt_fwd_b4.hlo.txt").exists()
+    assert (lowered_dir / "dwt_inv_b4.hlo.txt").exists()
+
+
+def test_hlo_text_structure(lowered_dir):
+    text = (lowered_dir / "dwt_fwd_b4.hlo.txt").read_text()
+    assert text.startswith("HloModule"), "must be HLO text, not a proto"
+    # Entry computation takes f64[4,8], f64[8,8], f64[8,8] and returns a
+    # tuple of two f64[8,4].
+    assert "f64[4,8]" in text
+    assert "f64[8,8]" in text
+    assert "(f64[8,4]{1,0}, f64[8,4]{1,0})" in text
+
+
+def test_inverse_hlo_shapes(lowered_dir):
+    text = (lowered_dir / "dwt_inv_b4.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    assert "f64[8,4]" in text  # chat inputs
+    assert "(f64[8,8]{1,0}, f64[8,8]{1,0})" in text  # member j-vector tuple
+
+
+def test_no_custom_calls(lowered_dir):
+    """interpret=True must lower to plain HLO the CPU client can run —
+    a Mosaic custom-call here would break the rust runtime."""
+    for name in ["dwt_fwd_b4.hlo.txt", "dwt_inv_b4.hlo.txt"]:
+        text = (lowered_dir / name).read_text()
+        assert "custom-call" not in text, f"{name} contains a custom-call"
+
+
+def test_manifest_contents(lowered_dir):
+    manifest = json.loads((lowered_dir / "manifest.json").read_text())
+    entry = manifest["bandwidths"]["4"]
+    assert entry["l_dim"] == 4
+    assert entry["j_dim"] == 8
+    assert entry["member_pad"] == model.MEMBER_PAD

@@ -1,0 +1,77 @@
+"""Sanity checks on the python Wigner/quadrature reference (which must
+mirror the rust implementation exactly — same seeds, same recurrence)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def test_legendre_special_case():
+    for beta in [0.4, 1.3, 2.2]:
+        col = ref.wigner_d_column(4, 0, 0, beta)
+        x = math.cos(beta)
+        np.testing.assert_allclose(
+            col, [1.0, x, 1.5 * x * x - 0.5, 2.5 * x**3 - 1.5 * x], atol=1e-13
+        )
+
+
+def test_d1_entries():
+    for beta in [0.3, 1.0, 2.5]:
+        assert ref.wigner_d_column(2, 1, 0, beta)[1] == pytest.approx(
+            math.sin(beta) / math.sqrt(2), abs=1e-13
+        )
+        assert ref.wigner_d_column(2, 1, 1, beta)[1] == pytest.approx(
+            (1 + math.cos(beta)) / 2, abs=1e-13
+        )
+        assert ref.wigner_d_column(2, 1, -1, beta)[1] == pytest.approx(
+            (1 - math.cos(beta)) / 2, abs=1e-13
+        )
+
+
+def test_symmetries():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        l = int(rng.integers(1, 10))
+        m = int(rng.integers(-l, l + 1))
+        mp = int(rng.integers(-l, l + 1))
+        beta = float(rng.uniform(0.05, math.pi - 0.05))
+        b = l + 1
+        d = ref.wigner_d_column(b, m, mp, beta)[l]
+        s = -1.0 if (m - mp) % 2 else 1.0
+        assert ref.wigner_d_column(b, -m, -mp, beta)[l] * s == pytest.approx(d, abs=1e-11)
+        assert ref.wigner_d_column(b, mp, m, beta)[l] * s == pytest.approx(d, abs=1e-11)
+        assert ref.wigner_d_column(b, -mp, -m, beta)[l] == pytest.approx(d, abs=1e-11)
+
+
+def test_quadrature_orthogonality():
+    """Sum_j w(j) d(l)d(l') = 2pi/(B(2l+1)) delta — the sampling theorem's
+    engine, and the cross-language convention lock with rust."""
+    b = 6
+    w = ref.quadrature_weights(b)
+    betas = ref.grid_betas(b)
+    for m, mp in [(0, 0), (2, 1), (3, -2)]:
+        l0 = max(abs(m), abs(mp))
+        cols = np.stack([ref.wigner_d_column(b, m, mp, bj) for bj in betas])  # [j, l]
+        for l1 in range(l0, b):
+            for l2 in range(l0, b):
+                dot = float(np.sum(w * cols[:, l1] * cols[:, l2]))
+                want = 2 * math.pi / (b * (2 * l1 + 1)) if l1 == l2 else 0.0
+                assert dot == pytest.approx(want, abs=1e-12)
+
+
+def test_weights_sum():
+    for b in [2, 8, 16]:
+        assert ref.quadrature_weights(b).sum() == pytest.approx(
+            2 * math.pi / b, rel=1e-12
+        )
+
+
+def test_wigner_rows_layout():
+    b = 5
+    rows = ref.wigner_rows(b, 3, 1)
+    assert rows.shape == (b, 2 * b)
+    assert np.all(rows[:3, :] == 0.0), "degrees below l0 are zero rows"
+    assert np.any(rows[3, :] != 0.0)

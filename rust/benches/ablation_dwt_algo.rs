@@ -1,0 +1,86 @@
+//! Ablation: DWT dataflow — the paper's benchmarked matvec (with
+//! precomputed tables or on-the-fly rows) vs the Clenshaw dataflow the
+//! paper's §5 announces as future work; plus the extended-precision
+//! accumulation mode the paper used for B = 512.
+
+use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
+use so3ft::dwt::tables::WignerStorage;
+use so3ft::dwt::{DwtAlgorithm, Precision};
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::transform::So3Fft;
+
+fn main() {
+    let b = env_usize("SO3FT_BENCH_B", 16);
+    let reps = env_usize("SO3FT_BENCH_REPS", 5);
+    println!("== ablation: DWT algorithm/storage/precision at B={b} ==");
+
+    let coeffs = So3Coeffs::random(b, 33);
+    let variants: &[(&str, DwtAlgorithm, WignerStorage, Precision)] = &[
+        (
+            "matvec+tables (paper)",
+            DwtAlgorithm::MatVec,
+            WignerStorage::Precomputed,
+            Precision::Double,
+        ),
+        (
+            "matvec+onthefly",
+            DwtAlgorithm::MatVec,
+            WignerStorage::OnTheFly,
+            Precision::Double,
+        ),
+        (
+            "clenshaw (paper §5 next)",
+            DwtAlgorithm::Clenshaw,
+            WignerStorage::OnTheFly,
+            Precision::Double,
+        ),
+        (
+            "matvec+tables, extended",
+            DwtAlgorithm::MatVec,
+            WignerStorage::Precomputed,
+            Precision::Extended,
+        ),
+    ];
+    let mut table = Table::new(&["variant", "table mem", "forward", "inverse", "rt err"]);
+    let mut csv = Vec::new();
+    for &(name, algorithm, storage, precision) in variants {
+        let fft = So3Fft::builder(b)
+            .algorithm(algorithm)
+            .storage(storage)
+            .precision(precision)
+            .build()
+            .unwrap();
+        let grid = fft.inverse(&coeffs).unwrap();
+        let back = fft.forward(&grid).unwrap();
+        let err = coeffs.max_abs_error(&back);
+        let fs = time_fn(reps, || {
+            std::hint::black_box(fft.forward(&grid).unwrap());
+        });
+        let is = time_fn(reps, || {
+            std::hint::black_box(fft.inverse(&coeffs).unwrap());
+        });
+        let mem = fft.executor().table_bytes();
+        table.row(&[
+            name.into(),
+            if mem == 0 {
+                "-".into()
+            } else {
+                format!("{:.1} MiB", mem as f64 / (1 << 20) as f64)
+            },
+            fmt_seconds(fs.median()),
+            fmt_seconds(is.median()),
+            format!("{err:.1e}"),
+        ]);
+        csv.push(format!(
+            "{name},{b},{mem},{:.4e},{:.4e},{err:.3e}",
+            fs.median(),
+            is.median()
+        ));
+    }
+    table.print();
+    csv_sink(
+        "ablation_dwt_algo",
+        "variant,b,table_bytes,fwd_s,inv_s,rt_err",
+        &csv,
+    );
+}

@@ -1,0 +1,79 @@
+//! Ablation: the paper's geometric κ index map (Fig. 1, integer ops)
+//! vs the σ map (Eq. 7/8, float sqrt) — both as a pure index-
+//! reconstruction microbench and end-to-end through the transform.
+
+use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
+use so3ft::coordinator::partition::{kappa_count, kappa_to_pair, sigma_count, sigma_to_pair};
+use so3ft::coordinator::PartitionStrategy;
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::transform::So3Fft;
+
+fn main() {
+    let b = env_usize("SO3FT_BENCH_B", 512);
+    let reps = env_usize("SO3FT_BENCH_REPS", 20);
+
+    println!("== ablation: index-map reconstruction at B={b} ==");
+    let mut table = Table::new(&["map", "domain size", "time/loop", "ns/index"]);
+    let mut csv = Vec::new();
+
+    let nk = kappa_count(b);
+    let s_kappa = time_fn(reps, || {
+        let mut acc = 0i64;
+        for k in 0..nk {
+            let (m, mp) = kappa_to_pair(k, b);
+            acc = acc.wrapping_add(m ^ mp);
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(&[
+        "geometric κ".into(),
+        nk.to_string(),
+        fmt_seconds(s_kappa.median()),
+        format!("{:.2}", s_kappa.median() / nk as f64 * 1e9),
+    ]);
+    csv.push(format!("kappa,{b},{:.3e}", s_kappa.median() / nk as f64));
+
+    let ns = sigma_count(b);
+    let s_sigma = time_fn(reps, || {
+        let mut acc = 0i64;
+        for s in 0..ns {
+            let (m, mp) = sigma_to_pair(s);
+            acc = acc.wrapping_add(m ^ mp);
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(&[
+        "σ (sqrt)".into(),
+        ns.to_string(),
+        fmt_seconds(s_sigma.median()),
+        format!("{:.2}", s_sigma.median() / ns as f64 * 1e9),
+    ]);
+    csv.push(format!("sigma,{b},{:.3e}", s_sigma.median() / ns as f64));
+    table.print();
+    println!(
+        "\nκ per-index cost / σ per-index cost = {:.2}",
+        (s_kappa.median() / nk as f64) / (s_sigma.median() / ns as f64)
+    );
+
+    // End-to-end: identical work, different package order — the paper's
+    // point is that κ is cheaper to reconstruct and trivially loopable.
+    let be = env_usize("SO3FT_BENCH_E2E_B", 16);
+    let e2e_reps = env_usize("SO3FT_BENCH_E2E_REPS", 5);
+    println!("\n== ablation: end-to-end FSOFT at B={be} ==");
+    let coeffs = So3Coeffs::random(be, 9);
+    let mut t2 = Table::new(&["strategy", "forward median"]);
+    for (name, strategy) in [
+        ("geometric", PartitionStrategy::GeometricClustered),
+        ("sigma", PartitionStrategy::SigmaClustered),
+    ] {
+        let fft = So3Fft::builder(be).strategy(strategy).build().unwrap();
+        let grid = fft.inverse(&coeffs).unwrap();
+        let s = time_fn(e2e_reps, || {
+            std::hint::black_box(fft.forward(&grid).unwrap());
+        });
+        t2.row(&[name.into(), fmt_seconds(s.median())]);
+        csv.push(format!("e2e_{name},{be},{:.3e}", s.median()));
+    }
+    t2.print();
+    csv_sink("ablation_mapping", "variant,b,seconds", &csv);
+}

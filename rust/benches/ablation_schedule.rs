@@ -1,0 +1,61 @@
+//! Ablation: loop-scheduling policy (the paper's `schedule(dynamic)`
+//! choice) — simulated on the Opteron-like model where thread scaling is
+//! visible, plus a real-pool smoke run on this container.
+
+use so3ft::bench_util::{csv_sink, env_usize, time_fn, Table};
+use so3ft::pool::Schedule;
+use so3ft::simulator::cost::{measured_spec, TransformKind};
+use so3ft::simulator::machine::{simulate_transform, MachineParams};
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::transform::So3Fft;
+
+fn main() {
+    let b = env_usize("SO3FT_BENCH_B", 32);
+    println!("== ablation: DWT-loop schedule at B={b} (simulated 8/64 cores) ==");
+
+    let mut spec = measured_spec(b, TransformKind::Forward).expect("spec");
+    let params = MachineParams::opteron_like();
+    let schedules = [
+        ("dynamic:1", Schedule::Dynamic { chunk: 1 }),
+        ("dynamic:8", Schedule::Dynamic { chunk: 8 }),
+        ("static", Schedule::Static),
+        ("interleaved", Schedule::StaticInterleaved),
+        ("guided:1", Schedule::Guided { min_chunk: 1 }),
+    ];
+    let mut table = Table::new(&["schedule", "sim speedup p=8", "sim speedup p=64"]);
+    let mut csv = Vec::new();
+    let t1 = simulate_transform(&spec, 1, &params);
+    for (name, schedule) in schedules {
+        // The DWT region is the last (forward) region in the spec.
+        let dwt_idx = spec.regions.len() - 1;
+        spec.regions[dwt_idx].schedule = schedule;
+        let s8 = t1 / simulate_transform(&spec, 8, &params);
+        let s64 = t1 / simulate_transform(&spec, 64, &params);
+        table.row(&[name.into(), format!("{s8:.2}"), format!("{s64:.2}")]);
+        csv.push(format!("{name},{b},{s8:.3},{s64:.3}"));
+    }
+    table.print();
+
+    // Real pool on this container (1 core: validates overhead ordering,
+    // not scaling).
+    let reps = env_usize("SO3FT_BENCH_REPS", 3);
+    let threads = env_usize("SO3FT_BENCH_THREADS", 4);
+    println!("\n== real pool, {threads} threads (single-core container) ==");
+    let coeffs = So3Coeffs::random(b, 5);
+    let mut t2 = Table::new(&["schedule", "forward median (s)"]);
+    for (name, schedule) in schedules {
+        let fft = So3Fft::builder(b)
+            .threads(threads)
+            .schedule(schedule)
+            .build()
+            .unwrap();
+        let grid = fft.inverse(&coeffs).unwrap();
+        let s = time_fn(reps, || {
+            std::hint::black_box(fft.forward(&grid).unwrap());
+        });
+        t2.row(&[name.into(), format!("{:.4}", s.median())]);
+        csv.push(format!("real_{name},{b},{:.4},", s.median()));
+    }
+    t2.print();
+    csv_sink("ablation_schedule", "schedule,b,s8_or_time,s64", &csv);
+}

@@ -1,0 +1,60 @@
+//! Ablation: Wigner-d symmetry clustering (paper §3 agglomeration) on vs
+//! off. Clustering shares one recurrence evaluation across ≤8 DWTs; the
+//! no-symmetry baseline pays it per order pair.
+
+use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
+use so3ft::coordinator::{PartitionStrategy, TransformPlan};
+use so3ft::dwt::tables::WignerStorage;
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::transform::So3Fft;
+
+fn main() {
+    let b = env_usize("SO3FT_BENCH_B", 16);
+    let reps = env_usize("SO3FT_BENCH_REPS", 5);
+    println!("== ablation: symmetry clustering at B={b} (on-the-fly rows) ==");
+
+    let coeffs = So3Coeffs::random(b, 21);
+    let mut table = Table::new(&[
+        "variant",
+        "packages",
+        "est. flops",
+        "forward",
+        "inverse",
+    ]);
+    let mut csv = Vec::new();
+    for (name, strategy) in [
+        ("clustered", PartitionStrategy::GeometricClustered),
+        ("no-symmetry", PartitionStrategy::NoSymmetry),
+    ] {
+        let fft = So3Fft::builder(b)
+            .strategy(strategy)
+            // On-the-fly isolates the symmetry effect (precomputed tables
+            // would amortize the recurrence differently).
+            .storage(WignerStorage::OnTheFly)
+            .build()
+            .unwrap();
+        let plan = TransformPlan::new(b, strategy);
+        let grid = fft.inverse(&coeffs).unwrap();
+        let fs = time_fn(reps, || {
+            std::hint::black_box(fft.forward(&grid).unwrap());
+        });
+        let is = time_fn(reps, || {
+            std::hint::black_box(fft.inverse(&coeffs).unwrap());
+        });
+        table.row(&[
+            name.into(),
+            plan.clusters.len().to_string(),
+            plan.total_flops().to_string(),
+            fmt_seconds(fs.median()),
+            fmt_seconds(is.median()),
+        ]);
+        csv.push(format!(
+            "{name},{b},{},{:.4e},{:.4e}",
+            plan.clusters.len(),
+            fs.median(),
+            is.median()
+        ));
+    }
+    table.print();
+    csv_sink("ablation_symmetry", "variant,b,packages,fwd_s,inv_s", &csv);
+}

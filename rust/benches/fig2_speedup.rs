@@ -1,0 +1,64 @@
+//! Paper Fig. 2 — speedup of the parallel FSOFT (left) and iFSOFT
+//! (right) vs core count, for bandwidths 32…512.
+//!
+//! Methodology (DESIGN.md §3 substitution): per-package costs are
+//! measured on this machine by instrumented sequential runs (bandwidths
+//! in `SO3FT_BENCH_MEASURED`, default "16 32"); the paper's large
+//! bandwidths (`SO3FT_BENCH_ANALYTIC`, default "64 128 256 512") use
+//! operation counts scaled by rates fitted at `SO3FT_BENCH_FIT_B`
+//! (default 32). The discrete-event machine model then replays the
+//! dynamic schedule on 1…64 virtual cores.
+//!
+//! The paper's published 64-core speedups are printed alongside for
+//! comparison.
+
+use so3ft::bench_util::{csv_sink, env_usize, env_usize_list, Table};
+use so3ft::simulator::machine::MachineParams;
+use so3ft::simulator::scaling::{figure_series, paper_core_counts, paper_speedup_64};
+
+fn main() {
+    let measured = env_usize_list("SO3FT_BENCH_MEASURED", &[16, 32]);
+    let analytic = env_usize_list("SO3FT_BENCH_ANALYTIC", &[64, 128, 256, 512]);
+    let fit_b = env_usize("SO3FT_BENCH_FIT_B", 32);
+    let cores = paper_core_counts();
+    let params = MachineParams::opteron_like();
+
+    println!("== fig2: speedup vs cores (simulated Opteron-like node) ==");
+    println!(
+        "measured bandwidths: {measured:?}; analytic: {analytic:?} (rates fit at B={fit_b})\n"
+    );
+
+    let series = figure_series(&measured, &analytic, fit_b, &cores, &params)
+        .expect("figure series");
+
+    let mut csv = Vec::new();
+    for kind_label in ["fsoft", "ifsoft"] {
+        println!("--- {kind_label} ---");
+        let mut headers: Vec<String> = vec!["B".into(), "src".into()];
+        headers.extend(cores.iter().map(|c| format!("p={c}")));
+        headers.push("paper p=64".into());
+        let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for s in series.iter().filter(|s| s.kind.label() == kind_label) {
+            let mut row = vec![
+                s.b.to_string(),
+                if s.measured { "meas" } else { "model" }.to_string(),
+            ];
+            for p in &s.points {
+                row.push(format!("{:.2}", p.speedup));
+                csv.push(format!(
+                    "{kind_label},{},{},{:.4},{:.6}",
+                    s.b, p.cores, p.speedup, p.seconds
+                ));
+            }
+            row.push(
+                paper_speedup_64(s.b, s.kind)
+                    .map(|v| format!("{v:.2}"))
+                    .unwrap_or_else(|| "-".into()),
+            );
+            table.row(&row);
+        }
+        table.print();
+        println!();
+    }
+    csv_sink("fig2_speedup", "kind,b,cores,speedup,seconds", &csv);
+}

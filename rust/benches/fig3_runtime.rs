@@ -1,0 +1,65 @@
+//! Paper Fig. 3 — runtime (log scale) of the parallel FSOFT/iFSOFT vs
+//! core count. Same simulation methodology as fig2 (see DESIGN.md §3);
+//! single-core times are the measured (or modeled) sequential runtimes
+//! on this machine.
+
+use so3ft::bench_util::{csv_sink, env_usize, env_usize_list, fmt_seconds, Table};
+use so3ft::simulator::machine::MachineParams;
+use so3ft::simulator::scaling::{figure_series, paper_core_counts};
+
+fn main() {
+    let measured = env_usize_list("SO3FT_BENCH_MEASURED", &[16, 32]);
+    let analytic = env_usize_list("SO3FT_BENCH_ANALYTIC", &[64, 128, 256, 512]);
+    let fit_b = env_usize("SO3FT_BENCH_FIT_B", 32);
+    let cores = paper_core_counts();
+    let params = MachineParams::opteron_like();
+
+    println!("== fig3: runtime vs cores (simulated Opteron-like node) ==");
+    println!(
+        "measured bandwidths: {measured:?}; analytic: {analytic:?} (rates fit at B={fit_b})\n"
+    );
+    let series = figure_series(&measured, &analytic, fit_b, &cores, &params)
+        .expect("figure series");
+
+    let mut csv = Vec::new();
+    for kind_label in ["fsoft", "ifsoft"] {
+        println!("--- {kind_label} ---");
+        let mut headers: Vec<String> = vec!["B".into(), "src".into()];
+        headers.extend(cores.iter().map(|c| format!("p={c}")));
+        let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for s in series.iter().filter(|s| s.kind.label() == kind_label) {
+            let mut row = vec![
+                s.b.to_string(),
+                if s.measured { "meas" } else { "model" }.to_string(),
+            ];
+            for p in &s.points {
+                row.push(fmt_seconds(p.seconds));
+                csv.push(format!(
+                    "{kind_label},{},{},{:.6e}",
+                    s.b, p.cores, p.seconds
+                ));
+            }
+            table.row(&row);
+        }
+        table.print();
+        println!();
+    }
+
+    // The paper's §5 headline: B=512 forward ≈ 3 min on 64 cores vs
+    // 1.53 h sequential; inverse ≈ 4.3 min vs 1.74 h.
+    for s in series.iter().filter(|s| s.b == 512) {
+        let t1 = s.points.iter().find(|p| p.cores == 1);
+        let t64 = s.points.iter().find(|p| p.cores == 64);
+        if let (Some(t1), Some(t64)) = (t1, t64) {
+            println!(
+                "B=512 {}: sequential {} -> 64-core {}  (paper: {} -> {})",
+                s.kind.label(),
+                fmt_seconds(t1.seconds),
+                fmt_seconds(t64.seconds),
+                if s.kind.label() == "fsoft" { "1.53 h" } else { "1.74 h" },
+                if s.kind.label() == "fsoft" { "~3 min" } else { "~4.3 min" },
+            );
+        }
+    }
+    csv_sink("fig3_runtime", "kind,b,cores,seconds", &csv);
+}

@@ -1,0 +1,46 @@
+//! Paper Fig. 4 — efficiency (speedup / cores) of the parallel FSOFT and
+//! iFSOFT vs core count. Same methodology as fig2.
+
+use so3ft::bench_util::{csv_sink, env_usize, env_usize_list, Table};
+use so3ft::simulator::machine::MachineParams;
+use so3ft::simulator::scaling::{figure_series, paper_core_counts};
+
+fn main() {
+    let measured = env_usize_list("SO3FT_BENCH_MEASURED", &[16, 32]);
+    let analytic = env_usize_list("SO3FT_BENCH_ANALYTIC", &[64, 128, 256, 512]);
+    let fit_b = env_usize("SO3FT_BENCH_FIT_B", 32);
+    let cores = paper_core_counts();
+    let params = MachineParams::opteron_like();
+
+    println!("== fig4: efficiency vs cores (simulated Opteron-like node) ==");
+    println!(
+        "measured bandwidths: {measured:?}; analytic: {analytic:?} (rates fit at B={fit_b})\n"
+    );
+    let series = figure_series(&measured, &analytic, fit_b, &cores, &params)
+        .expect("figure series");
+
+    let mut csv = Vec::new();
+    for kind_label in ["fsoft", "ifsoft"] {
+        println!("--- {kind_label} ---");
+        let mut headers: Vec<String> = vec!["B".into(), "src".into()];
+        headers.extend(cores.iter().map(|c| format!("p={c}")));
+        let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for s in series.iter().filter(|s| s.kind.label() == kind_label) {
+            let mut row = vec![
+                s.b.to_string(),
+                if s.measured { "meas" } else { "model" }.to_string(),
+            ];
+            for p in &s.points {
+                row.push(format!("{:.3}", p.efficiency));
+                csv.push(format!(
+                    "{kind_label},{},{},{:.4}",
+                    s.b, p.cores, p.efficiency
+                ));
+            }
+            table.row(&row);
+        }
+        table.print();
+        println!();
+    }
+    csv_sink("fig4_efficiency", "kind,b,cores,efficiency", &csv);
+}

@@ -1,0 +1,119 @@
+//! Microbench: single-cluster DWT kernels — the transform's hot spot —
+//! across cluster shapes and dataflows.
+
+use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
+use so3ft::dwt::cluster::Cluster;
+use so3ft::dwt::clenshaw;
+use so3ft::dwt::kernels::{forward_cluster, inverse_cluster, DwtScratch};
+use so3ft::dwt::tables::{OnTheFlySource, WignerSource, WignerTables};
+use so3ft::dwt::SMatrix;
+use so3ft::fft::Complex64;
+use so3ft::prng::Xoshiro256;
+use so3ft::so3::coeffs::{coeff_count, So3Coeffs};
+use so3ft::so3::quadrature;
+use so3ft::so3::sampling::GridAngles;
+use so3ft::util::SyncUnsafeSlice;
+
+fn main() {
+    let b = env_usize("SO3FT_BENCH_B", 64);
+    let reps = env_usize("SO3FT_BENCH_REPS", 30);
+    println!("== micro: per-cluster DWT kernels at B={b} ==");
+
+    let angles = GridAngles::new(b).unwrap();
+    let weights = quadrature::weights(b).unwrap();
+    let tables = WignerTables::build(b, &angles.betas);
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut smat = SMatrix::zeros(b).unwrap();
+    for v in smat.as_mut_slice().iter_mut() {
+        *v = Complex64::new(rng.next_signed(), rng.next_signed());
+    }
+    let coeffs = So3Coeffs::random(b, 2);
+    let layout = SMatrix::zeros(b).unwrap();
+    let mut scratch = DwtScratch::new(b);
+    let mut out = vec![Complex64::zero(); coeff_count(b)];
+    let mut smat_out = SMatrix::zeros(b).unwrap();
+
+    // Representative clusters: full 8-member low-l0 (big), diagonal,
+    // border, high-l0 (small).
+    let shapes = [
+        ("8-member, l0=2", Cluster::symmetric(2, 1)),
+        ("8-member, l0=B/2", Cluster::symmetric(b as i64 / 2, 1)),
+        ("diagonal (4)", Cluster::symmetric(b as i64 / 2, b as i64 / 2)),
+        ("border (4)", Cluster::symmetric(b as i64 / 2, 0)),
+        ("(0,0) single", Cluster::symmetric(0, 0)),
+    ];
+    let mut table = Table::new(&[
+        "cluster",
+        "fwd tables",
+        "fwd onthefly",
+        "fwd clenshaw",
+        "inv tables",
+        "inv clenshaw",
+    ]);
+    let mut csv = Vec::new();
+    for (name, cluster) in &shapes {
+        let shared = SyncUnsafeSlice::new(&mut out);
+        let f_tab = time_fn(reps, || {
+            let mut src = tables.source();
+            forward_cluster(b, cluster, &mut src, &weights, &smat, &shared, &mut scratch);
+        });
+        let f_fly = time_fn(reps, || {
+            let mut src = OnTheFlySource::new(&angles.betas);
+            src.reset(cluster.m, cluster.mp);
+            forward_cluster(b, cluster, &mut src, &weights, &smat, &shared, &mut scratch);
+        });
+        let mut acc = Vec::new();
+        let f_cl = time_fn(reps, || {
+            clenshaw::forward_cluster_clenshaw(
+                b, cluster, &angles.betas, &weights, &smat, &shared, &mut acc,
+            );
+        });
+        let shared_s = SyncUnsafeSlice::new(smat_out.as_mut_slice());
+        let i_tab = time_fn(reps, || {
+            let mut src = tables.source();
+            inverse_cluster(
+                b,
+                cluster,
+                &mut src,
+                coeffs.as_slice(),
+                &shared_s,
+                &layout,
+                &mut scratch,
+            );
+        });
+        let mut buf = Vec::new();
+        let i_cl = time_fn(reps, || {
+            clenshaw::inverse_cluster_clenshaw(
+                b,
+                cluster,
+                &angles.betas,
+                coeffs.as_slice(),
+                &shared_s,
+                &layout,
+                &mut buf,
+            );
+        });
+        table.row(&[
+            name.to_string(),
+            fmt_seconds(f_tab.median()),
+            fmt_seconds(f_fly.median()),
+            fmt_seconds(f_cl.median()),
+            fmt_seconds(i_tab.median()),
+            fmt_seconds(i_cl.median()),
+        ]);
+        csv.push(format!(
+            "{name},{b},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e}",
+            f_tab.median(),
+            f_fly.median(),
+            f_cl.median(),
+            i_tab.median(),
+            i_cl.median()
+        ));
+    }
+    table.print();
+    csv_sink(
+        "micro_dwt",
+        "cluster,b,fwd_tab,fwd_fly,fwd_clen,inv_tab,inv_clen",
+        &csv,
+    );
+}

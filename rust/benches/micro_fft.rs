@@ -1,0 +1,59 @@
+//! Microbench: the FFT substrate — 1-D radix-2/Bluestein and the 2-D
+//! slice transform at the sizes the FSOFT uses (2B for B = 16…512).
+
+use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
+use so3ft::fft::fft2::Fft2;
+use so3ft::fft::{Complex64, FftPlan, Sign};
+use so3ft::prng::Xoshiro256;
+
+fn signal(n: usize, seed: u64) -> Vec<Complex64> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| Complex64::new(rng.next_signed(), rng.next_signed()))
+        .collect()
+}
+
+fn main() {
+    let reps = env_usize("SO3FT_BENCH_REPS", 20);
+    let mut csv = Vec::new();
+
+    println!("== micro: 1-D FFT ==");
+    let mut t1 = Table::new(&["n", "algo", "median", "ns/point"]);
+    for &n in &[32usize, 64, 128, 256, 512, 1024, 96, 768] {
+        let plan = FftPlan::new(n);
+        let algo = if n.is_power_of_two() { "radix2" } else { "bluestein" };
+        let mut buf = signal(n, n as u64);
+        let s = time_fn(reps, || {
+            plan.process(&mut buf, Sign::Negative);
+            std::hint::black_box(&buf);
+        });
+        t1.row(&[
+            n.to_string(),
+            algo.into(),
+            fmt_seconds(s.median()),
+            format!("{:.1}", s.median() * 1e9 / n as f64),
+        ]);
+        csv.push(format!("fft1,{n},{algo},{:.4e}", s.median()));
+    }
+    t1.print();
+
+    println!("\n== micro: 2-D slice FFT (the FSOFT's per-β work) ==");
+    let mut t2 = Table::new(&["2B", "median", "ns/point"]);
+    for &n in &[32usize, 64, 128, 256] {
+        let fft2 = Fft2::with_size(n);
+        let mut buf = signal(n * n, 7);
+        let mut scratch = vec![Complex64::zero(); 4 * n];
+        let s = time_fn(reps, || {
+            fft2.process(&mut buf, &mut scratch, Sign::Positive);
+            std::hint::black_box(&buf);
+        });
+        t2.row(&[
+            n.to_string(),
+            fmt_seconds(s.median()),
+            format!("{:.1}", s.median() * 1e9 / (n * n) as f64),
+        ]);
+        csv.push(format!("fft2,{n},,{:.4e}", s.median()));
+    }
+    t2.print();
+    csv_sink("micro_fft", "bench,n,algo,seconds", &csv);
+}

@@ -1,0 +1,76 @@
+//! Microbench: Wigner-d machinery — row-stepper throughput (the
+//! recurrence that on-the-fly DWTs pay), full-table precomputation, and
+//! quadrature weights (the paper notes weight time is negligible).
+
+use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
+use so3ft::dwt::tables::WignerTables;
+use so3ft::so3::quadrature;
+use so3ft::so3::sampling::GridAngles;
+use so3ft::so3::wigner::WignerRowStepper;
+use so3ft::xprec::Dd;
+
+fn main() {
+    let reps = env_usize("SO3FT_BENCH_REPS", 10);
+    let mut csv = Vec::new();
+
+    println!("== micro: Wigner row stepper (full column sweep) ==");
+    let mut t = Table::new(&["B", "f64", "dd (extended)", "ratio"]);
+    for &b in &[32usize, 64, 128] {
+        let angles = GridAngles::new(b).unwrap();
+        let s_f64 = time_fn(reps, || {
+            let mut st: WignerRowStepper<f64> = WignerRowStepper::new(2, 1, &angles.betas);
+            for _ in 2..b {
+                st.advance();
+            }
+            std::hint::black_box(st.row()[0]);
+        });
+        let s_dd = time_fn(reps, || {
+            let mut st: WignerRowStepper<Dd> = WignerRowStepper::new(2, 1, &angles.betas);
+            for _ in 2..b {
+                st.advance();
+            }
+            std::hint::black_box(st.row()[0].to_f64());
+        });
+        t.row(&[
+            b.to_string(),
+            fmt_seconds(s_f64.median()),
+            fmt_seconds(s_dd.median()),
+            format!("{:.1}x", s_dd.median() / s_f64.median()),
+        ]);
+        csv.push(format!(
+            "stepper,{b},{:.4e},{:.4e}",
+            s_f64.median(),
+            s_dd.median()
+        ));
+    }
+    t.print();
+
+    println!("\n== micro: full table precomputation (paper's setup phase) ==");
+    let mut t2 = Table::new(&["B", "build time", "memory"]);
+    for &b in &[16usize, 32, 64] {
+        let angles = GridAngles::new(b).unwrap();
+        let s = time_fn(3.min(reps), || {
+            std::hint::black_box(WignerTables::build(b, &angles.betas));
+        });
+        let bytes = WignerTables::storage_len(b) * 8;
+        t2.row(&[
+            b.to_string(),
+            fmt_seconds(s.median()),
+            format!("{:.1} MiB", bytes as f64 / (1 << 20) as f64),
+        ]);
+        csv.push(format!("tables,{b},{:.4e},{bytes}", s.median()));
+    }
+    t2.print();
+
+    println!("\n== micro: quadrature weights (paper: 'negligibly short') ==");
+    let mut t3 = Table::new(&["B", "time"]);
+    for &b in &[64usize, 128, 256, 512] {
+        let s = time_fn(reps, || {
+            std::hint::black_box(quadrature::weights(b).unwrap());
+        });
+        t3.row(&[b.to_string(), fmt_seconds(s.median())]);
+        csv.push(format!("weights,{b},{:.4e},", s.median()));
+    }
+    t3.print();
+    csv_sink("micro_wigner", "bench,b,seconds,extra", &csv);
+}

@@ -1,0 +1,78 @@
+//! Paper Table 1 — maximum absolute and relative error of an iFSOFT
+//! followed by an FSOFT, mean ± std over `SO3FT_BENCH_ERROR_RUNS`
+//! (paper: 10) runs per bandwidth.
+//!
+//! Bandwidths default to "8 16 32" (native double precision) plus an
+//! extended-precision column when `SO3FT_BENCH_XPREC=1`. The paper's
+//! B = 512 row needs ~hours on one core; raise SO3FT_BENCH_ERROR_BS to
+//! reproduce it on a bigger box (the code path is identical).
+
+use so3ft::bench_util::{csv_sink, env_usize, env_usize_list, fmt_mean_std_sci, Table};
+use so3ft::dwt::Precision;
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::transform::So3Fft;
+
+fn mean_std(v: &[f64]) -> (f64, f64) {
+    let m = v.iter().sum::<f64>() / v.len() as f64;
+    let var = if v.len() < 2 {
+        0.0
+    } else {
+        v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (v.len() - 1) as f64
+    };
+    (m, var.sqrt())
+}
+
+fn main() {
+    let bandwidths = env_usize_list("SO3FT_BENCH_ERROR_BS", &[8, 16, 32]);
+    let runs = env_usize("SO3FT_BENCH_ERROR_RUNS", 10);
+    let xprec = std::env::var("SO3FT_BENCH_XPREC").is_ok();
+
+    println!("== table1: roundtrip error (iFSOFT then FSOFT), {runs} runs each ==");
+    println!("paper reference (double→extended precision on 64-core Opteron):");
+    println!("  B=32  (1.10±0.14)E-14 abs, (7.91±7.85)E-13 rel");
+    println!("  B=64  (2.79±0.23)E-14 abs, (3.08±2.31)E-12 rel");
+    println!("  B=128 (6.23±0.65)E-14 abs, (1.89±1.33)E-11 rel");
+    println!("  B=256 (2.21±0.13)E-13 abs, (9.21±4.57)E-11 rel");
+    println!("  B=512 (4.98±0.33)E-13 abs, (4.26±2.73)E-10 rel\n");
+
+    let mut table = Table::new(&["B", "precision", "max abs error", "max rel error"]);
+    let mut csv = Vec::new();
+    for &b in &bandwidths {
+        let precisions: &[Precision] = if xprec {
+            &[Precision::Double, Precision::Extended]
+        } else {
+            &[Precision::Double]
+        };
+        for &precision in precisions {
+            let fft = So3Fft::builder(b).precision(precision).build().unwrap();
+            let mut abs = Vec::with_capacity(runs);
+            let mut rel = Vec::with_capacity(runs);
+            for run in 0..runs {
+                let coeffs = So3Coeffs::random(b, 1000 + run as u64);
+                let grid = fft.inverse(&coeffs).unwrap();
+                let back = fft.forward(&grid).unwrap();
+                abs.push(coeffs.max_abs_error(&back));
+                rel.push(coeffs.max_rel_error(&back));
+            }
+            let (am, astd) = mean_std(&abs);
+            let (rm, rstd) = mean_std(&rel);
+            let pname = match precision {
+                Precision::Double => "double",
+                Precision::Extended => "extended",
+            };
+            table.row(&[
+                b.to_string(),
+                pname.to_string(),
+                fmt_mean_std_sci(am, astd),
+                fmt_mean_std_sci(rm, rstd),
+            ]);
+            csv.push(format!("{b},{pname},{am:.3e},{astd:.3e},{rm:.3e},{rstd:.3e}"));
+        }
+    }
+    table.print();
+    csv_sink(
+        "table1_error",
+        "b,precision,abs_mean,abs_std,rel_mean,rel_std",
+        &csv,
+    );
+}

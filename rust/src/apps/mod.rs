@@ -1,0 +1,14 @@
+//! Application layer: the workloads the paper's introduction motivates.
+//!
+//! * [`sphere`] — a spherical-harmonic transform substrate on S²
+//!   (analysis/synthesis/rotation of band-limited spherical functions),
+//!   built on the same Wigner-d machinery and quadrature as the SO(3)
+//!   transforms.
+//! * [`matching`] — fast rotational matching (Kovacs–Wriggers style):
+//!   find the rotation maximizing the correlation of two spherical
+//!   functions by evaluating the correlation on the full SO(3) grid with
+//!   one iFSOFT (the paper's flagship application family: EM fitting,
+//!   molecular replacement, docking, shape registration).
+
+pub mod matching;
+pub mod sphere;

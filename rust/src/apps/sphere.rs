@@ -1,0 +1,341 @@
+//! Band-limited functions on the sphere S².
+//!
+//! Basis convention (internal, self-consistent with the SO(3) stack):
+//! `Y(l, m; θ, φ) = e^{imφ} d(l, m, 0; θ)` with our Wigner-d convention,
+//! orthogonal with `⟨Y_lm, Y_lm⟩ = 4π/(2l+1)`.
+//!
+//! Grid: θ_j = (2j+1)π/4B (the K&R β nodes, reusing the SO(3) quadrature
+//! weights), φ_k = kπ/B; both axes 2B points.
+//!
+//! Rotation (validated numerically in tests, derivation in
+//! DESIGN.md §apps): for R = R(α, β, γ) (z-y-z) and (Λ_R f)(ω) := f(R⁻¹ω),
+//!
+//! `(Λ_R f)_{l,m} = Σ_{m'} e^{-imγ} d(l, m, m'; β) e^{-im'α} f_{l,m'}`.
+
+use crate::error::Result;
+use crate::fft::Complex64;
+use crate::so3::quadrature;
+use crate::so3::rotation::EulerZyz;
+use crate::so3::sampling::GridAngles;
+use crate::so3::wigner::{d_column, WignerRowBuf};
+
+/// Coefficients a_{l,m} of a band-limited spherical function, l < B,
+/// |m| ≤ l, stored flat with `index = l² + (m + l)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SphCoeffs {
+    b: usize,
+    data: Vec<Complex64>,
+}
+
+/// Number of spherical coefficients for bandwidth B: B².
+#[inline]
+pub fn sph_coeff_count(b: usize) -> usize {
+    b * b
+}
+
+#[inline]
+fn sph_index(l: usize, m: i64) -> usize {
+    l * l + (m + l as i64) as usize
+}
+
+impl SphCoeffs {
+    pub fn zeros(b: usize) -> Self {
+        assert!(b >= 1);
+        Self {
+            b,
+            data: vec![Complex64::zero(); sph_coeff_count(b)],
+        }
+    }
+
+    /// Random coefficients, uniform re/im on [-1, 1].
+    pub fn random(b: usize, seed: u64) -> Self {
+        let mut rng = crate::prng::Xoshiro256::seed_from_u64(seed);
+        let mut c = Self::zeros(b);
+        for v in c.data.iter_mut() {
+            *v = Complex64::new(rng.next_signed(), rng.next_signed());
+        }
+        c
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.b
+    }
+
+    #[inline]
+    pub fn at(&self, l: usize, m: i64) -> Complex64 {
+        debug_assert!(l < self.b && m.unsigned_abs() as usize <= l);
+        self.data[sph_index(l, m)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, l: usize, m: i64) -> &mut Complex64 {
+        debug_assert!(l < self.b && m.unsigned_abs() as usize <= l);
+        &mut self.data[sph_index(l, m)]
+    }
+
+    pub fn as_slice(&self) -> &[Complex64] {
+        &self.data
+    }
+
+    pub fn max_abs_error(&self, other: &SphCoeffs) -> f64 {
+        assert_eq!(self.b, other.b);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Evaluate the function at an arbitrary point (θ, φ).
+    pub fn eval(&self, theta: f64, phi: f64) -> Complex64 {
+        let mut buf = WignerRowBuf::new(self.b);
+        let mut acc = Complex64::zero();
+        for m in (1 - self.b as i64)..self.b as i64 {
+            d_column(self.b, m, 0, theta, &mut buf);
+            let mut radial = Complex64::zero();
+            let l0 = m.unsigned_abs() as usize;
+            for l in l0..self.b {
+                radial += self.at(l, m).scale(buf.values[l]);
+            }
+            acc += radial * Complex64::cis(m as f64 * phi);
+        }
+        acc
+    }
+
+    /// Rotate in coefficient space: returns the coefficients of
+    /// `ω ↦ f(R⁻¹ω)` for R = R(e).
+    pub fn rotate(&self, e: EulerZyz) -> SphCoeffs {
+        let b = self.b;
+        let mut out = SphCoeffs::zeros(b);
+        let mut buf = WignerRowBuf::new(b);
+        for l in 0..b {
+            let li = l as i64;
+            for m in -li..=li {
+                let mut acc = Complex64::zero();
+                for mp in -li..=li {
+                    d_column(b, m, mp, e.beta, &mut buf);
+                    let phase = Complex64::cis(-(m as f64) * e.gamma - mp as f64 * e.alpha);
+                    acc += self.at(l, mp) * phase.scale(buf.values[l]);
+                }
+                *out.at_mut(l, m) = acc;
+            }
+        }
+        out
+    }
+}
+
+/// Sampled spherical function on the 2B×2B (θ, φ) grid, row-major
+/// `[j (θ)][k (φ)]`.
+#[derive(Debug, Clone)]
+pub struct SphGrid {
+    b: usize,
+    pub data: Vec<Complex64>,
+}
+
+impl SphGrid {
+    pub fn zeros(b: usize) -> Self {
+        Self {
+            b,
+            data: vec![Complex64::zero(); 4 * b * b],
+        }
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.b
+    }
+
+    #[inline]
+    pub fn at(&self, j: usize, k: usize) -> Complex64 {
+        self.data[j * 2 * self.b + k]
+    }
+}
+
+/// Grid angles for the sphere (θ from the K&R β nodes, φ = kπ/B).
+pub fn sphere_angles(b: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+    let angles = GridAngles::new(b)?;
+    Ok((angles.betas, angles.alphas))
+}
+
+/// Synthesis: coefficients → grid samples.
+pub fn synthesis(coeffs: &SphCoeffs) -> Result<SphGrid> {
+    let b = coeffs.bandwidth();
+    let n = 2 * b;
+    let (thetas, phis) = sphere_angles(b)?;
+    let mut grid = SphGrid::zeros(b);
+    let mut buf = WignerRowBuf::new(b);
+    for (j, &theta) in thetas.iter().enumerate() {
+        // Radial sums per order, then a short Fourier sum over φ.
+        let mut radial = vec![Complex64::zero(); 2 * b - 1];
+        for m in (1 - b as i64)..b as i64 {
+            d_column(b, m, 0, theta, &mut buf);
+            let l0 = m.unsigned_abs() as usize;
+            let mut acc = Complex64::zero();
+            for l in l0..b {
+                acc += coeffs.at(l, m).scale(buf.values[l]);
+            }
+            radial[(m + b as i64 - 1) as usize] = acc;
+        }
+        for (k, &phi) in phis.iter().enumerate() {
+            let mut acc = Complex64::zero();
+            for m in (1 - b as i64)..b as i64 {
+                acc += radial[(m + b as i64 - 1) as usize] * Complex64::cis(m as f64 * phi);
+            }
+            grid.data[j * n + k] = acc;
+        }
+    }
+    Ok(grid)
+}
+
+/// Analysis: grid samples → coefficients, via the S² quadrature
+/// `a_lm = (2l+1)/(4π) Σ_{j,k} w_B(j) d(l,m,0;θ_j) f(θ_j,φ_k) e^{-imφ_k}`.
+pub fn analysis(grid: &SphGrid) -> Result<SphCoeffs> {
+    let b = grid.bandwidth();
+    let n = 2 * b;
+    let (thetas, phis) = sphere_angles(b)?;
+    let weights = quadrature::weights(b)?;
+    let mut coeffs = SphCoeffs::zeros(b);
+    let mut buf = WignerRowBuf::new(b);
+    for m in (1 - b as i64)..b as i64 {
+        // φ inner sums per θ row.
+        let mut phi_sums = vec![Complex64::zero(); n];
+        for j in 0..n {
+            let mut acc = Complex64::zero();
+            for (k, &phi) in phis.iter().enumerate() {
+                acc += grid.data[j * n + k] * Complex64::cis(-(m as f64) * phi);
+            }
+            phi_sums[j] = acc;
+        }
+        let l0 = m.unsigned_abs() as usize;
+        for l in l0..b {
+            let mut acc = Complex64::zero();
+            for (j, &theta) in thetas.iter().enumerate() {
+                d_column(b, m, 0, theta, &mut buf);
+                acc += phi_sums[j].scale(weights[j] * buf.values[l]);
+            }
+            let scale = (2 * l + 1) as f64 / (4.0 * std::f64::consts::PI);
+            *coeffs.at_mut(l, m) = acc.scale(scale);
+        }
+    }
+    Ok(coeffs)
+}
+
+/// Sample `f(R⁻¹ω)` pointwise on the grid (the slow oracle for
+/// [`SphCoeffs::rotate`]).
+pub fn rotate_pointwise(coeffs: &SphCoeffs, e: EulerZyz) -> Result<SphGrid> {
+    use crate::so3::rotation::Rotation;
+    let b = coeffs.bandwidth();
+    let n = 2 * b;
+    let (thetas, phis) = sphere_angles(b)?;
+    let rinv = Rotation::from_euler(e).inverse();
+    let mut grid = SphGrid::zeros(b);
+    for (j, &theta) in thetas.iter().enumerate() {
+        for (k, &phi) in phis.iter().enumerate() {
+            let v = [
+                theta.sin() * phi.cos(),
+                theta.sin() * phi.sin(),
+                theta.cos(),
+            ];
+            let w = rinv.apply(v);
+            let t2 = w[2].clamp(-1.0, 1.0).acos();
+            let p2 = w[1].atan2(w[0]).rem_euclid(std::f64::consts::TAU);
+            grid.data[j * n + k] = coeffs.eval(t2, p2);
+        }
+    }
+    Ok(grid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+
+    #[test]
+    fn analysis_inverts_synthesis() {
+        for b in [2usize, 4, 8] {
+            let coeffs = SphCoeffs::random(b, b as u64);
+            let grid = synthesis(&coeffs).unwrap();
+            let back = analysis(&grid).unwrap();
+            let err = coeffs.max_abs_error(&back);
+            assert!(err < 1e-12, "b={b}: sphere roundtrip error {err}");
+        }
+    }
+
+    #[test]
+    fn constant_function_has_only_l0() {
+        let b = 4;
+        let mut grid = SphGrid::zeros(b);
+        for v in grid.data.iter_mut() {
+            *v = Complex64::new(3.5, -1.0);
+        }
+        let coeffs = analysis(&grid).unwrap();
+        for l in 0..b {
+            let li = l as i64;
+            for m in -li..=li {
+                let want = if l == 0 {
+                    Complex64::new(3.5, -1.0)
+                } else {
+                    Complex64::zero()
+                };
+                assert!((coeffs.at(l, m) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_matches_grid_synthesis() {
+        let b = 4;
+        let coeffs = SphCoeffs::random(b, 9);
+        let grid = synthesis(&coeffs).unwrap();
+        let (thetas, phis) = sphere_angles(b).unwrap();
+        for j in [0usize, 3, 7] {
+            for k in [1usize, 4, 6] {
+                let direct = coeffs.eval(thetas[j], phis[k]);
+                assert!((direct - grid.at(j, k)).abs() < 1e-11);
+            }
+        }
+    }
+
+    /// The rotation formula — coefficient-space rotation must equal
+    /// pointwise rotation followed by analysis. This pins down the
+    /// convention the matching app depends on.
+    #[test]
+    fn coefficient_rotation_matches_pointwise() {
+        let b = 4;
+        let coeffs = SphCoeffs::random(b, 11);
+        Prop::new("sphere rotation convention").cases(8).run(|g| {
+            let e = EulerZyz::new(
+                g.f64_in(0.0, std::f64::consts::TAU),
+                g.f64_in(0.1, std::f64::consts::PI - 0.1),
+                g.f64_in(0.0, std::f64::consts::TAU),
+            );
+            let fast = coeffs.rotate(e);
+            let slow = analysis(&rotate_pointwise(&coeffs, e).unwrap()).unwrap();
+            Prop::assert_close(fast.max_abs_error(&slow), 0.0, 1e-9, "rotation")
+        });
+    }
+
+    #[test]
+    fn rotation_by_identity_is_identity() {
+        let b = 5;
+        let coeffs = SphCoeffs::random(b, 13);
+        let rotated = coeffs.rotate(EulerZyz::new(0.0, 1e-15, 0.0));
+        assert!(coeffs.max_abs_error(&rotated) < 1e-10);
+    }
+
+    #[test]
+    fn rotation_preserves_norm_per_degree() {
+        // Λ_R is unitary on each degree-l subspace.
+        let b = 5;
+        let coeffs = SphCoeffs::random(b, 17);
+        let e = EulerZyz::new(1.0, 0.7, 2.0);
+        let rot = coeffs.rotate(e);
+        for l in 0..b {
+            let li = l as i64;
+            let n0: f64 = (-li..=li).map(|m| coeffs.at(l, m).norm_sqr()).sum();
+            let n1: f64 = (-li..=li).map(|m| rot.at(l, m).norm_sqr()).sum();
+            assert!((n0 - n1).abs() < 1e-10 * n0.max(1.0), "l={l}: {n0} vs {n1}");
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Benchmark harness utilities (criterion is not in the vendored
+//! registry, so the benches carry their own timing/statistics/reporting
+//! substrate).
+//!
+//! Conventions shared by all benches under `rust/benches/`:
+//! * warm up once, then take `reps` timed samples;
+//! * report min / median / mean ± std;
+//! * print paper-style tables to stdout and, when `SO3FT_BENCH_CSV` is
+//!   set, append machine-readable rows to `bench_results/<name>.csv`.
+
+use std::time::Instant;
+
+/// Summary statistics over timed samples (seconds).
+#[derive(Debug, Clone)]
+pub struct Samples {
+    pub seconds: Vec<f64>,
+}
+
+impl Samples {
+    pub fn min(&self) -> f64 {
+        self.seconds.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.seconds.iter().sum::<f64>() / self.seconds.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.seconds.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self
+            .seconds
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / (self.seconds.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut v = self.seconds.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        if n % 2 == 1 {
+            v[n / 2]
+        } else {
+            0.5 * (v[n / 2 - 1] + v[n / 2])
+        }
+    }
+}
+
+/// Time `f` with one warm-up call and `reps` samples.
+pub fn time_fn<F: FnMut()>(reps: usize, mut f: F) -> Samples {
+    f(); // warm-up
+    let mut seconds = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        seconds.push(t0.elapsed().as_secs_f64());
+    }
+    Samples { seconds }
+}
+
+/// Pretty seconds: 1.234 s / 12.3 ms / 45.6 µs.
+pub fn fmt_seconds(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Mean ± std in the paper's `(a ± b)E-k` style.
+pub fn fmt_mean_std_sci(mean: f64, std: f64) -> String {
+    if mean == 0.0 {
+        return "0".to_string();
+    }
+    let exp = mean.abs().log10().floor() as i32;
+    let scale = 10f64.powi(exp);
+    format!("({:.2} ± {:.2})E{exp:+03}", mean / scale, std / scale)
+}
+
+/// A simple aligned-column table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut out = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                out.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            println!("{}", out.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Append CSV rows to `bench_results/<name>.csv` when SO3FT_BENCH_CSV is
+/// set (header written on creation).
+pub fn csv_sink(name: &str, header: &str, rows: &[String]) {
+    if std::env::var("SO3FT_BENCH_CSV").is_err() {
+        return;
+    }
+    let dir = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{name}.csv"));
+    let fresh = !path.exists();
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .expect("csv open");
+    if fresh {
+        writeln!(f, "{header}").unwrap();
+    }
+    for r in rows {
+        writeln!(f, "{r}").unwrap();
+    }
+}
+
+/// Read an env-var override for bench scale (small by default so `cargo
+/// bench` completes quickly; CI/full runs can raise it).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Parse an env-var list like "8 16 32".
+pub fn env_usize_list(name: &str, default: &[usize]) -> Vec<usize> {
+    match std::env::var(name) {
+        Ok(s) => s
+            .replace(',', " ")
+            .split_whitespace()
+            .filter_map(|t| t.parse().ok())
+            .collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Samples {
+            seconds: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        assert_eq!(s.min(), 1.0);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.median() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_fn_counts_reps() {
+        let mut calls = 0;
+        let s = time_fn(5, || calls += 1);
+        assert_eq!(calls, 6); // warm-up + 5
+        assert_eq!(s.seconds.len(), 5);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_seconds(2.5), "2.500 s");
+        assert_eq!(fmt_seconds(0.0025), "2.50 ms");
+        assert_eq!(fmt_seconds(2.5e-6), "2.50 µs");
+        assert!(fmt_mean_std_sci(1.1e-14, 1.4e-15).starts_with("(1.10 ± 0.14)E-14"));
+    }
+
+    #[test]
+    fn env_list_parsing() {
+        std::env::set_var("SO3FT_TEST_LIST_X", "4, 8 16");
+        assert_eq!(env_usize_list("SO3FT_TEST_LIST_X", &[1]), vec![4, 8, 16]);
+        assert_eq!(env_usize_list("SO3FT_TEST_NOPE_X", &[1, 2]), vec![1, 2]);
+    }
+}

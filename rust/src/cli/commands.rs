@@ -1,0 +1,210 @@
+//! CLI command implementations.
+
+use std::sync::Arc;
+
+use crate::apps::{matching, sphere};
+use crate::cli::Invocation;
+use crate::coordinator::TransformPlan;
+use crate::error::Result;
+use crate::runtime::{ArtifactRegistry, XlaDwt};
+use crate::simulator::cost::{measured_spec, TransformKind};
+use crate::simulator::machine::MachineParams;
+use crate::simulator::scaling::scaling_curve;
+use crate::so3::coeffs::{coeff_count, So3Coeffs};
+use crate::so3::quadrature;
+use crate::so3::rotation::Rotation;
+use crate::so3::sampling::GridAngles;
+use crate::transform::So3Fft;
+
+pub const HELP: &str = "\
+so3ft — parallel fast Fourier transforms on SO(3)
+
+usage: so3ft <command> [options]
+
+commands:
+  info        plan / memory / artifact diagnostics for a bandwidth
+  roundtrip   iFSOFT then FSOFT on random coefficients; report errors
+  forward     time the FSOFT on a synthesized grid
+  inverse     time the iFSOFT on random coefficients
+  match       rotational-matching demo (plant + recover a rotation)
+  simulate    multicore scaling curves (simulated Opteron-like node)
+  help        this text
+
+options: --config FILE, --bandwidth/-b B, --threads/-t N,
+  --schedule dynamic[:c]|static|interleaved|guided[:m],
+  --strategy geometric|sigma|nosym, --algorithm matvec|clenshaw,
+  --storage precomputed|onthefly|auto[:mb], --precision double|extended,
+  --seed N, --xla, --artifacts DIR, --cores LIST, --kind fwd|inv
+";
+
+fn build_fft(inv: &Invocation) -> Result<So3Fft> {
+    let mut builder = So3Fft::builder(inv.run.bandwidth).config(inv.run.exec.clone());
+    if inv.run.use_xla {
+        let xla = XlaDwt::load(&inv.run.artifacts_dir, inv.run.bandwidth)?;
+        builder = builder.offload(Arc::new(xla));
+    }
+    builder.build()
+}
+
+pub fn info(inv: &Invocation) -> Result<()> {
+    let b = inv.run.bandwidth;
+    let plan = TransformPlan::new(b, inv.run.exec.strategy);
+    let weights = quadrature::weights(b)?;
+    let angles = GridAngles::new(b)?;
+    println!("so3ft bandwidth {b}");
+    println!("  grid:            {n}^3 = {} nodes (n = 2B)", (2 * b) * (2 * b) * (2 * b), n = 2 * b);
+    println!("  coefficients:    {} (B(4B^2-1)/3)", coeff_count(b));
+    println!(
+        "  work packages:   {} clusters ({} order pairs), strategy {}",
+        plan.clusters.len(),
+        plan.member_count(),
+        plan.strategy.name()
+    );
+    println!("  est. DWT flops:  {}", plan.total_flops());
+    println!(
+        "  wigner tables:   {:.1} MiB when precomputed",
+        (crate::dwt::tables::WignerTables::storage_len(b) * 8) as f64 / (1 << 20) as f64
+    );
+    println!(
+        "  weight checksum: {:.6e} (expect {:.6e})",
+        weights.iter().sum::<f64>(),
+        quadrature::weight_sum_expected(b)
+    );
+    println!(
+        "  beta range:      [{:.4}, {:.4}]",
+        angles.betas[0],
+        angles.betas[2 * b - 1]
+    );
+    let reg = ArtifactRegistry::new(&inv.run.artifacts_dir);
+    let avail = reg.available();
+    println!(
+        "  artifacts:       {} in {:?}{}",
+        if avail.is_empty() {
+            "none".to_string()
+        } else {
+            format!("{avail:?}")
+        },
+        reg.dir(),
+        if avail.contains(&b) { " (this B: ok)" } else { "" }
+    );
+    Ok(())
+}
+
+pub fn roundtrip(inv: &Invocation) -> Result<()> {
+    let fft = build_fft(inv)?;
+    let b = inv.run.bandwidth;
+    let coeffs = So3Coeffs::random(b, inv.run.seed);
+    let (grid, istats) = fft.inverse_with_stats(&coeffs)?;
+    let (back, fstats) = fft.forward_with_stats(&grid)?;
+    println!(
+        "roundtrip b={b} threads={} seed={}",
+        inv.run.exec.threads, inv.run.seed
+    );
+    println!(
+        "  iFSOFT: {:?} (dwt {:?}, transpose {:?}, fft {:?})",
+        istats.total, istats.dwt, istats.transpose, istats.fft
+    );
+    println!(
+        "  FSOFT:  {:?} (fft {:?}, transpose {:?}, dwt {:?})",
+        fstats.total, fstats.fft, fstats.transpose, fstats.dwt
+    );
+    println!("  max abs error: {:.3e}", coeffs.max_abs_error(&back));
+    println!("  max rel error: {:.3e}", coeffs.max_rel_error(&back));
+    if let Some(r) = &fstats.dwt_region {
+        println!(
+            "  fwd DWT region: imbalance {:.3}, overhead {:.1}%",
+            r.imbalance(),
+            100.0 * r.overhead_fraction()
+        );
+    }
+    Ok(())
+}
+
+pub fn forward(inv: &Invocation) -> Result<()> {
+    let fft = build_fft(inv)?;
+    let coeffs = So3Coeffs::random(inv.run.bandwidth, inv.run.seed);
+    let grid = fft.inverse(&coeffs)?;
+    let (_, stats) = fft.forward_with_stats(&grid)?;
+    println!(
+        "forward b={} threads={}: total {:?} (fft {:?}, transpose {:?}, dwt {:?}; fft fraction {:.1}%)",
+        inv.run.bandwidth,
+        inv.run.exec.threads,
+        stats.total,
+        stats.fft,
+        stats.transpose,
+        stats.dwt,
+        100.0 * stats.fft_fraction()
+    );
+    Ok(())
+}
+
+pub fn inverse(inv: &Invocation) -> Result<()> {
+    let fft = build_fft(inv)?;
+    let coeffs = So3Coeffs::random(inv.run.bandwidth, inv.run.seed);
+    let (_, stats) = fft.inverse_with_stats(&coeffs)?;
+    println!(
+        "inverse b={} threads={}: total {:?} (dwt {:?}, transpose {:?}, fft {:?})",
+        inv.run.bandwidth, inv.run.exec.threads, stats.total, stats.dwt, stats.transpose, stats.fft
+    );
+    Ok(())
+}
+
+pub fn match_demo(inv: &Invocation) -> Result<()> {
+    let b = inv.run.bandwidth;
+    let fft = build_fft(inv)?;
+    let f = sphere::SphCoeffs::random(b, inv.run.seed);
+    let angles = GridAngles::new(b)?;
+    // Plant a grid-aligned rotation (reproducible from the seed).
+    let idx = (
+        (inv.run.seed as usize * 7 + 3) % (2 * b),
+        (inv.run.seed as usize * 5 + 1) % (2 * b),
+        (inv.run.seed as usize * 11 + 4) % (2 * b),
+    );
+    let planted = angles.euler(idx.0, idx.1, idx.2);
+    let g = f.rotate(planted);
+    let t0 = std::time::Instant::now();
+    let result = matching::match_rotation(&fft, &f, &g)?;
+    let dt = t0.elapsed();
+    let dist = Rotation::from_euler(planted).angular_distance(&Rotation::from_euler(result.euler));
+    println!("rotational matching b={b} ({} grid nodes searched in {dt:?})", (2 * b) * (2 * b) * (2 * b));
+    println!(
+        "  planted: alpha={:.4} beta={:.4} gamma={:.4}",
+        planted.alpha, planted.beta, planted.gamma
+    );
+    println!(
+        "  found:   alpha={:.4} beta={:.4} gamma={:.4} (peak {:.4})",
+        result.euler.alpha, result.euler.beta, result.euler.gamma, result.peak
+    );
+    println!(
+        "  angular distance {:.5} rad (grid cell ~{:.5} rad)",
+        dist,
+        std::f64::consts::PI / b as f64
+    );
+    Ok(())
+}
+
+pub fn simulate(inv: &Invocation) -> Result<()> {
+    let b = inv.run.bandwidth;
+    let kind = if inv.kind == "inv" {
+        TransformKind::Inverse
+    } else {
+        TransformKind::Forward
+    };
+    println!("measuring per-package costs for b={b} {} ...", kind.label());
+    let spec = measured_spec(b, kind)?;
+    let params = MachineParams::opteron_like();
+    let curve = scaling_curve(&spec, &inv.cores, &params);
+    println!(
+        "simulated Opteron-like scaling ({}; sequential {:.4}s):",
+        spec.label,
+        spec.sequential_seconds()
+    );
+    println!("  cores  seconds    speedup  efficiency");
+    for p in curve {
+        println!(
+            "  {:5}  {:9.4}  {:7.2}  {:9.3}",
+            p.cores, p.seconds, p.speedup, p.efficiency
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,255 @@
+//! Command-line interface (hand-rolled parser — no clap offline).
+//!
+//! ```text
+//! so3ft <command> [options]
+//!
+//! commands:
+//!   info        plan / memory / artifact diagnostics for a bandwidth
+//!   roundtrip   iFSOFT then FSOFT on random coefficients; report errors
+//!   forward     time the FSOFT on a synthesized grid
+//!   inverse     time the iFSOFT on random coefficients
+//!   match       rotational-matching demo (plant + recover a rotation)
+//!   simulate    multicore scaling curves (the Figs. 2-4 machinery)
+//!
+//! common options:
+//!   --config <file.toml>      load defaults from a config file
+//!   --bandwidth/-b <B>        transform bandwidth
+//!   --threads/-t <N>          worker threads
+//!   --schedule <spec>         dynamic[:c] | static | interleaved | guided[:m]
+//!   --strategy <spec>         geometric | sigma | nosym
+//!   --algorithm <spec>        matvec | clenshaw
+//!   --storage <spec>          precomputed | onthefly | auto[:mb]
+//!   --precision <spec>        double | extended
+//!   --seed <N>                workload seed
+//!   --xla                     offload the DWT to the PJRT artifacts
+//!   --artifacts <dir>         artifact directory
+//!   --cores <list>            (simulate) core counts, e.g. "1,8,64"
+//!   --kind <fwd|inv>          (simulate) transform direction
+//! ```
+
+pub mod commands;
+
+use crate::config::{parse_algorithm, parse_precision, parse_storage, RunConfig};
+use crate::coordinator::PartitionStrategy;
+use crate::error::{Error, Result};
+use crate::pool::Schedule;
+
+/// Parsed invocation.
+#[derive(Debug, Clone)]
+pub struct Invocation {
+    pub command: String,
+    pub run: RunConfig,
+    pub cores: Vec<usize>,
+    pub kind: String,
+}
+
+/// Parse argv (excluding the program name).
+pub fn parse_args(args: &[String]) -> Result<Invocation> {
+    if args.is_empty() {
+        return Err(Error::Config(
+            "missing command; try `so3ft info` (see --help)".into(),
+        ));
+    }
+    if args[0] == "--help" || args[0] == "-h" || args[0] == "help" {
+        return Ok(Invocation {
+            command: "help".into(),
+            run: RunConfig::default(),
+            cores: vec![],
+            kind: "fwd".into(),
+        });
+    }
+    let command = args[0].clone();
+    // First pass: --config loads defaults, then flags override.
+    let mut run = RunConfig::default();
+    let mut i = 1;
+    while i < args.len() {
+        if args[i] == "--config" {
+            let path = args
+                .get(i + 1)
+                .ok_or_else(|| Error::Config("--config needs a path".into()))?;
+            run = RunConfig::load(path)?;
+            break;
+        }
+        i += 1;
+    }
+    let mut cores = vec![1, 2, 4, 8, 16, 32, 64];
+    let mut kind = "fwd".to_string();
+    let mut i = 1;
+    let need = |args: &[String], i: usize, flag: &str| -> Result<String> {
+        args.get(i + 1)
+            .cloned()
+            .ok_or_else(|| Error::Config(format!("{flag} needs a value")))
+    };
+    while i < args.len() {
+        let a = args[i].as_str();
+        match a {
+            "--config" => {
+                i += 1; // handled above
+            }
+            "--bandwidth" | "-b" => {
+                run.bandwidth = need(args, i, a)?
+                    .parse()
+                    .map_err(|_| Error::Config("bad --bandwidth".into()))?;
+                i += 1;
+            }
+            "--threads" | "-t" => {
+                run.exec.threads = need(args, i, a)?
+                    .parse()
+                    .map_err(|_| Error::Config("bad --threads".into()))?;
+                i += 1;
+            }
+            "--schedule" => {
+                let v = need(args, i, a)?;
+                run.exec.schedule = Schedule::parse(&v)
+                    .ok_or_else(|| Error::Config(format!("bad --schedule {v:?}")))?;
+                i += 1;
+            }
+            "--strategy" => {
+                let v = need(args, i, a)?;
+                run.exec.strategy = PartitionStrategy::parse(&v)
+                    .ok_or_else(|| Error::Config(format!("bad --strategy {v:?}")))?;
+                i += 1;
+            }
+            "--algorithm" => {
+                run.exec.algorithm = parse_algorithm(&need(args, i, a)?)?;
+                i += 1;
+            }
+            "--storage" => {
+                let v = need(args, i, a)?;
+                run.exec.storage = parse_storage(&v, run.bandwidth)?;
+                i += 1;
+            }
+            "--precision" => {
+                run.exec.precision = parse_precision(&need(args, i, a)?)?;
+                i += 1;
+            }
+            "--seed" => {
+                run.seed = need(args, i, a)?
+                    .parse()
+                    .map_err(|_| Error::Config("bad --seed".into()))?;
+                i += 1;
+            }
+            "--xla" => run.use_xla = true,
+            "--artifacts" => {
+                run.artifacts_dir = need(args, i, a)?;
+                i += 1;
+            }
+            "--cores" => {
+                let v = need(args, i, a)?;
+                cores = v
+                    .replace(',', " ")
+                    .split_whitespace()
+                    .map(|t| t.parse().map_err(|_| Error::Config("bad --cores".into())))
+                    .collect::<Result<Vec<usize>>>()?;
+                i += 1;
+            }
+            "--kind" => {
+                kind = need(args, i, a)?;
+                if kind != "fwd" && kind != "inv" {
+                    return Err(Error::Config("--kind must be fwd or inv".into()));
+                }
+                i += 1;
+            }
+            _ => {
+                return Err(Error::Config(format!("unknown option {a:?}")));
+            }
+        }
+        i += 1;
+    }
+    Ok(Invocation {
+        command,
+        run,
+        cores,
+        kind,
+    })
+}
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    let args = &argv[1.min(argv.len())..];
+    let inv = match parse_args(args) {
+        Ok(inv) => inv,
+        Err(e) => {
+            eprintln!("so3ft: {e}");
+            return 2;
+        }
+    };
+    let result = match inv.command.as_str() {
+        "help" => {
+            print!("{}", commands::HELP);
+            Ok(())
+        }
+        "info" => commands::info(&inv),
+        "roundtrip" => commands::roundtrip(&inv),
+        "forward" => commands::forward(&inv),
+        "inverse" => commands::inverse(&inv),
+        "match" => commands::match_demo(&inv),
+        "simulate" => commands::simulate(&inv),
+        other => Err(Error::Config(format!(
+            "unknown command {other:?}; try `so3ft help`"
+        ))),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("so3ft {}: {e}", inv.command);
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_typical_invocation() {
+        let inv = parse_args(&argv(
+            "roundtrip -b 8 -t 4 --schedule dynamic:2 --strategy sigma --seed 9 --xla",
+        ))
+        .unwrap();
+        assert_eq!(inv.command, "roundtrip");
+        assert_eq!(inv.run.bandwidth, 8);
+        assert_eq!(inv.run.exec.threads, 4);
+        assert_eq!(inv.run.exec.schedule, Schedule::Dynamic { chunk: 2 });
+        assert_eq!(inv.run.exec.strategy, PartitionStrategy::SigmaClustered);
+        assert_eq!(inv.run.seed, 9);
+        assert!(inv.run.use_xla);
+    }
+
+    #[test]
+    fn cores_list_parses() {
+        let inv = parse_args(&argv("simulate --cores 1,8,64 --kind inv")).unwrap();
+        assert_eq!(inv.cores, vec![1, 8, 64]);
+        assert_eq!(inv.kind, "inv");
+    }
+
+    #[test]
+    fn rejects_unknown_flags_and_bad_values() {
+        assert!(parse_args(&argv("info --wat")).is_err());
+        assert!(parse_args(&argv("info -b x")).is_err());
+        assert!(parse_args(&argv("simulate --kind sideways")).is_err());
+        assert!(parse_args(&[]).is_err());
+    }
+
+    #[test]
+    fn config_file_then_flag_override() {
+        let dir = std::env::temp_dir().join(format!("so3ft-cli-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.toml");
+        std::fs::write(&path, "[transform]\nbandwidth = 32\nthreads = 2\n").unwrap();
+        let inv = parse_args(&argv(&format!(
+            "info --config {} -b 8",
+            path.display()
+        )))
+        .unwrap();
+        // Flag overrides file; file supplies threads.
+        assert_eq!(inv.run.bandwidth, 8);
+        assert_eq!(inv.run.exec.threads, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

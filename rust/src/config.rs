@@ -1,0 +1,279 @@
+//! Configuration system: a TOML-subset parser (no external deps are
+//! available offline) plus the typed [`RunConfig`] the CLI and launcher
+//! consume.
+//!
+//! Supported syntax — the subset real deployments need:
+//! ```toml
+//! # comments
+//! [transform]
+//! bandwidth = 16
+//! threads = 4
+//! schedule = "dynamic:1"
+//! strategy = "geometric"      # geometric | sigma | nosym
+//! algorithm = "matvec"        # matvec | clenshaw
+//! storage = "precomputed"     # precomputed | onthefly | auto
+//! precision = "double"        # double | extended
+//!
+//! [runtime]
+//! artifacts = "artifacts"
+//! use_xla = false
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::coordinator::{ExecutorConfig, PartitionStrategy};
+use crate::dwt::tables::{WignerStorage, WignerTables};
+use crate::dwt::{DwtAlgorithm, Precision};
+use crate::error::{Error, Result};
+use crate::pool::Schedule;
+
+/// Raw parsed file: section → key → value (strings unquoted).
+#[derive(Debug, Clone, Default)]
+pub struct ParsedConfig {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl ParsedConfig {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut sections: HashMap<String, HashMap<String, String>> = HashMap::new();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                current = name.trim().to_string();
+                sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let mut value = v.trim().to_string();
+                if value.len() >= 2 && value.starts_with('"') && value.ends_with('"') {
+                    value = value[1..value.len() - 1].to_string();
+                }
+                sections.entry(current.clone()).or_default().insert(key, value);
+            } else {
+                return Err(Error::Config(format!(
+                    "line {}: expected `key = value` or `[section]`, got {line:?}",
+                    lineno + 1
+                )));
+            }
+        }
+        Ok(Self { sections })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                Error::Config(format!("[{section}] {key}: expected integer, got {v:?}"))
+            }),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some("true") => Ok(Some(true)),
+            Some("false") => Ok(Some(false)),
+            Some(v) => Err(Error::Config(format!(
+                "[{section}] {key}: expected true/false, got {v:?}"
+            ))),
+        }
+    }
+}
+
+/// Fully-resolved run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub bandwidth: usize,
+    pub exec: ExecutorConfig,
+    pub artifacts_dir: String,
+    pub use_xla: bool,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            bandwidth: 16,
+            exec: ExecutorConfig::default(),
+            artifacts_dir: "artifacts".into(),
+            use_xla: false,
+            seed: 42,
+        }
+    }
+}
+
+/// Parse a storage spec: `precomputed | onthefly | auto[:budget_mb]`.
+pub fn parse_storage(s: &str, b: usize) -> Result<WignerStorage> {
+    match s {
+        "precomputed" => Ok(WignerStorage::Precomputed),
+        "onthefly" => Ok(WignerStorage::OnTheFly),
+        _ if s.starts_with("auto") => {
+            let budget_mb = s
+                .strip_prefix("auto:")
+                .map(|v| v.parse::<usize>())
+                .transpose()
+                .map_err(|_| Error::Config(format!("bad auto budget in {s:?}")))?
+                .unwrap_or(2048);
+            let _ = WignerTables::storage_len(b);
+            Ok(WignerStorage::auto(b, budget_mb << 20))
+        }
+        _ => Err(Error::Config(format!(
+            "storage: expected precomputed|onthefly|auto, got {s:?}"
+        ))),
+    }
+}
+
+/// Parse an algorithm spec.
+pub fn parse_algorithm(s: &str) -> Result<DwtAlgorithm> {
+    match s {
+        "matvec" => Ok(DwtAlgorithm::MatVec),
+        "clenshaw" => Ok(DwtAlgorithm::Clenshaw),
+        _ => Err(Error::Config(format!(
+            "algorithm: expected matvec|clenshaw, got {s:?}"
+        ))),
+    }
+}
+
+/// Parse a precision spec.
+pub fn parse_precision(s: &str) -> Result<Precision> {
+    match s {
+        "double" => Ok(Precision::Double),
+        "extended" => Ok(Precision::Extended),
+        _ => Err(Error::Config(format!(
+            "precision: expected double|extended, got {s:?}"
+        ))),
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed file, applying defaults for missing keys.
+    pub fn from_parsed(p: &ParsedConfig) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        if let Some(b) = p.get_usize("transform", "bandwidth")? {
+            cfg.bandwidth = b;
+        }
+        if let Some(t) = p.get_usize("transform", "threads")? {
+            cfg.exec.threads = t;
+        }
+        if let Some(s) = p.get("transform", "schedule") {
+            cfg.exec.schedule = Schedule::parse(s)
+                .ok_or_else(|| Error::Config(format!("bad schedule {s:?}")))?;
+        }
+        if let Some(s) = p.get("transform", "strategy") {
+            cfg.exec.strategy = PartitionStrategy::parse(s)
+                .ok_or_else(|| Error::Config(format!("bad strategy {s:?}")))?;
+        }
+        if let Some(s) = p.get("transform", "algorithm") {
+            cfg.exec.algorithm = parse_algorithm(s)?;
+        }
+        if let Some(s) = p.get("transform", "storage") {
+            cfg.exec.storage = parse_storage(s, cfg.bandwidth)?;
+        }
+        if let Some(s) = p.get("transform", "precision") {
+            cfg.exec.precision = parse_precision(s)?;
+        }
+        if let Some(s) = p.get("runtime", "artifacts") {
+            cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(v) = p.get_bool("runtime", "use_xla")? {
+            cfg.use_xla = v;
+        }
+        if let Some(s) = p.get_usize("run", "seed")? {
+            cfg.seed = s as u64;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_parsed(&ParsedConfig::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# sample config
+[transform]
+bandwidth = 8
+threads = 3
+schedule = "dynamic:2"
+strategy = "sigma"
+algorithm = "clenshaw"
+storage = "onthefly"
+precision = "double"
+
+[runtime]
+artifacts = "my-artifacts"
+use_xla = true
+
+[run]
+seed = 7
+"#;
+
+    #[test]
+    fn parses_full_sample() {
+        let cfg = RunConfig::from_parsed(&ParsedConfig::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.bandwidth, 8);
+        assert_eq!(cfg.exec.threads, 3);
+        assert_eq!(cfg.exec.schedule, Schedule::Dynamic { chunk: 2 });
+        assert_eq!(cfg.exec.strategy, PartitionStrategy::SigmaClustered);
+        assert_eq!(cfg.exec.algorithm, DwtAlgorithm::Clenshaw);
+        assert_eq!(cfg.exec.storage, WignerStorage::OnTheFly);
+        assert_eq!(cfg.artifacts_dir, "my-artifacts");
+        assert!(cfg.use_xla);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let cfg = RunConfig::from_parsed(&ParsedConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.bandwidth, 16);
+        assert_eq!(cfg.exec.threads, 1);
+    }
+
+    #[test]
+    fn comments_and_whitespace_tolerated() {
+        let p = ParsedConfig::parse("  # lead\n[a]\n x = 1  # trail\n\n y = \"s\"\n").unwrap();
+        assert_eq!(p.get("a", "x"), Some("1"));
+        assert_eq!(p.get("a", "y"), Some("s"));
+    }
+
+    #[test]
+    fn bad_lines_are_errors() {
+        assert!(ParsedConfig::parse("nonsense line").is_err());
+        assert!(RunConfig::from_parsed(
+            &ParsedConfig::parse("[transform]\nschedule = \"bogus\"").unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_parsed(
+            &ParsedConfig::parse("[transform]\nthreads = \"x\"").unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn storage_auto_parses() {
+        assert_eq!(parse_storage("auto:1", 64).unwrap(), WignerStorage::OnTheFly);
+        assert_eq!(
+            parse_storage("auto:100000", 8).unwrap(),
+            WignerStorage::Precomputed
+        );
+        assert!(parse_storage("auto:x", 8).is_err());
+        assert!(parse_storage("weird", 8).is_err());
+    }
+}

@@ -1,0 +1,1030 @@
+//! The parallel FSOFT/iFSOFT executor.
+//!
+//! A transform is three parallel regions over the worker pool:
+//!
+//! forward:  [FFT]   per-β-slice 2-D FFT (positive sign)
+//!           [TRN]   transpose slices → S-matrix (contiguous j)
+//!           [DWT]   symmetry-cluster loop under the configured schedule
+//! inverse:  [DWT]   iDWT cluster loop → S-matrix
+//!           [TRN]   transpose S-matrix → slices
+//!           [FFT]   per-slice 2-D FFT (negative sign)
+//!
+//! Every output element belongs to exactly one package in its region
+//! (slices, (m,m') vectors, (l,m,m') triples), so workers write through
+//! [`SyncUnsafeSlice`] without locks — the paper's "memory access of the
+//! different nodes can be made exclusive".
+
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::plan::{PartitionStrategy, TransformPlan};
+use crate::dwt::cluster::Cluster;
+use crate::dwt::clenshaw;
+use crate::dwt::kernels::{self, DwtScratch};
+use crate::dwt::tables::{OnTheFlySource, WignerSource, WignerStorage, WignerTables};
+use crate::dwt::{DwtAlgorithm, Precision, SMatrix};
+use crate::error::{Error, Result};
+use crate::fft::fft2::Fft2;
+use crate::fft::plan::FftPlan;
+use crate::fft::{Complex64, Sign};
+use crate::pool::{parallel_for, RegionStats, Schedule};
+use crate::so3::coeffs::{coeff_count, So3Coeffs};
+use crate::so3::quadrature;
+use crate::so3::sampling::{GridAngles, So3Grid};
+use crate::util::SyncUnsafeSlice;
+
+/// Offload interface for the DWT contraction (implemented by the PJRT
+/// runtime in `runtime::xla_dwt`). The executor hands over the packed
+/// base Wigner rows and member vectors; reflection/signs/V-scaling stay
+/// in the coordinator so native and offloaded paths share them.
+pub trait DwtOffload: Send + Sync {
+    /// `c[mi·nl + li] = Σ_j rows[li·2B + j] · t[mi·2B + j]`.
+    fn contract_forward(
+        &self,
+        b: usize,
+        nl: usize,
+        nm: usize,
+        rows: &[f64],
+        t: &[Complex64],
+    ) -> Result<Vec<Complex64>>;
+
+    /// `s[mi·2B + j] = Σ_li rows[li·2B + j] · chat[mi·nl + li]`.
+    fn contract_inverse(
+        &self,
+        b: usize,
+        nl: usize,
+        nm: usize,
+        rows: &[f64],
+        chat: &[Complex64],
+    ) -> Result<Vec<Complex64>>;
+}
+
+/// Executor configuration (the library's "launcher" level config).
+#[derive(Debug, Clone)]
+pub struct ExecutorConfig {
+    /// Worker threads (1 = the sequential algorithm).
+    pub threads: usize,
+    /// Loop schedule for the DWT region (paper: `dynamic`).
+    pub schedule: Schedule,
+    /// Order-domain partitioning.
+    pub strategy: PartitionStrategy,
+    /// DWT dataflow.
+    pub algorithm: DwtAlgorithm,
+    /// Wigner row storage.
+    pub storage: WignerStorage,
+    /// Accumulation precision.
+    pub precision: Precision,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        Self {
+            threads: 1,
+            schedule: Schedule::PAPER,
+            strategy: PartitionStrategy::GeometricClustered,
+            algorithm: DwtAlgorithm::MatVec,
+            storage: WignerStorage::Precomputed,
+            precision: Precision::Double,
+        }
+    }
+}
+
+/// Per-package wall times for each region of one sequential run — the
+/// multicore simulator's calibration input.
+#[derive(Debug, Clone, Default)]
+pub struct RegionProfiles {
+    /// One entry per β-slice 2-D FFT.
+    pub fft: Vec<f64>,
+    /// One entry per (m, m') transposition package.
+    pub transpose: Vec<f64>,
+    /// One entry per DWT cluster, in plan order.
+    pub dwt: Vec<f64>,
+}
+
+impl RegionProfiles {
+    /// Total sequential time across regions.
+    pub fn total(&self) -> f64 {
+        self.fft.iter().sum::<f64>()
+            + self.transpose.iter().sum::<f64>()
+            + self.dwt.iter().sum::<f64>()
+    }
+}
+
+/// Wall-clock breakdown of one transform run.
+#[derive(Debug, Clone, Default)]
+pub struct TransformStats {
+    pub fft: Duration,
+    pub transpose: Duration,
+    pub dwt: Duration,
+    pub total: Duration,
+    /// Region stats of the DWT loop (imbalance diagnostics).
+    pub dwt_region: Option<RegionStats>,
+}
+
+impl TransformStats {
+    /// Fraction of total time in the FFT stage (the paper's §5 ~5–8%
+    /// observation).
+    pub fn fft_fraction(&self) -> f64 {
+        if self.total.as_secs_f64() == 0.0 {
+            0.0
+        } else {
+            self.fft.as_secs_f64() / self.total.as_secs_f64()
+        }
+    }
+}
+
+/// A prepared transform engine for one bandwidth.
+pub struct Executor {
+    b: usize,
+    config: ExecutorConfig,
+    plan: TransformPlan,
+    angles: GridAngles,
+    weights: Vec<f64>,
+    fft2: Fft2,
+    tables: Option<WignerTables>,
+    offload: Option<Arc<dyn DwtOffload>>,
+    /// FFT bin of each order index: `order_bins[mi] = (mi - (B-1)) mod 2B`.
+    order_bins: Vec<usize>,
+}
+
+thread_local! {
+    /// Per-thread DWT scratch, recreated when the bandwidth changes.
+    static SCRATCH: RefCell<Option<(usize, DwtScratch)>> = const { RefCell::new(None) };
+}
+
+fn with_scratch<R>(b: usize, f: impl FnOnce(&mut DwtScratch) -> R) -> R {
+    SCRATCH.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        match slot.as_mut() {
+            Some((sb, scratch)) if *sb == b => f(scratch),
+            _ => {
+                let mut scratch = DwtScratch::new(b);
+                let r = f(&mut scratch);
+                *slot = Some((b, scratch));
+                r
+            }
+        }
+    })
+}
+
+impl Executor {
+    pub fn new(b: usize, config: ExecutorConfig) -> Result<Self> {
+        if b == 0 {
+            return Err(Error::InvalidBandwidth(b));
+        }
+        if config.threads == 0 {
+            return Err(Error::InvalidThreads(0));
+        }
+        // Unsupported combinations are config errors, not silent fallbacks.
+        if config.algorithm == DwtAlgorithm::Clenshaw
+            && config.precision == Precision::Extended
+        {
+            return Err(Error::Config(
+                "extended precision requires the matvec DWT".into(),
+            ));
+        }
+        if config.algorithm == DwtAlgorithm::Clenshaw
+            && config.strategy == PartitionStrategy::NoSymmetry
+        {
+            return Err(Error::Config(
+                "the Clenshaw DWT requires canonical (clustered) partitioning".into(),
+            ));
+        }
+        let angles = GridAngles::new(b)?;
+        let weights = quadrature::weights(b)?;
+        let plan = TransformPlan::new(b, config.strategy);
+        let tables = match (config.storage, config.algorithm) {
+            (WignerStorage::Precomputed, DwtAlgorithm::MatVec)
+                if config.strategy != PartitionStrategy::NoSymmetry =>
+            {
+                Some(WignerTables::build(b, &angles.betas))
+            }
+            _ => None,
+        };
+        let fft2 = Fft2::new(2 * b, Arc::new(FftPlan::new(2 * b)));
+        let n = 2 * b as i64;
+        let order_bins = (0..SMatrix::orders(b))
+            .map(|mi| (mi as i64 - (b as i64 - 1)).rem_euclid(n) as usize)
+            .collect();
+        Ok(Self {
+            b,
+            config,
+            plan,
+            angles,
+            weights,
+            fft2,
+            tables,
+            offload: None,
+            order_bins,
+        })
+    }
+
+    /// Attach a DWT offload backend (the PJRT runtime). Only the matvec /
+    /// double-precision path offloads; other configs keep the native path.
+    pub fn with_offload(mut self, offload: Arc<dyn DwtOffload>) -> Self {
+        self.offload = Some(offload);
+        self
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.b
+    }
+
+    pub fn config(&self) -> &ExecutorConfig {
+        &self.config
+    }
+
+    pub fn plan(&self) -> &TransformPlan {
+        &self.plan
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    pub fn angles(&self) -> &GridAngles {
+        &self.angles
+    }
+
+    /// Memory held by precomputed Wigner tables (bytes).
+    pub fn table_bytes(&self) -> usize {
+        self.tables.as_ref().map_or(0, |t| t.bytes())
+    }
+
+    // ------------------------------------------------------------------
+    // Forward (FSOFT)
+    // ------------------------------------------------------------------
+
+    /// Analysis: grid samples → Fourier coefficients (paper Eq. 5).
+    pub fn forward(&self, grid: &So3Grid) -> Result<So3Coeffs> {
+        self.forward_with_stats(grid).map(|(c, _)| c)
+    }
+
+    pub fn forward_with_stats(&self, grid: &So3Grid) -> Result<(So3Coeffs, TransformStats)> {
+        if grid.bandwidth() != self.b {
+            return Err(Error::shape(
+                self.b,
+                grid.bandwidth(),
+                "forward: grid bandwidth",
+            ));
+        }
+        let t_total = Instant::now();
+        let n = 2 * self.b;
+        let mut stats = TransformStats::default();
+
+        // [FFT] per-slice 2-D FFT with the positive-sign kernel:
+        // Ŝ_j[u][v] = Σ_{i,k} f e^{+i(uα_i + vγ_k)}.
+        let t0 = Instant::now();
+        let mut work = grid.as_slice().to_vec();
+        {
+            let shared = SyncUnsafeSlice::new(&mut work);
+            parallel_for(self.config.threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
+                // SAFETY: slice j is exclusive to this package.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(shared.ptr_at(j * n * n), n * n)
+                };
+                let mut scratch = vec![Complex64::zero(); 4 * n];
+                self.fft2.process(slice, &mut scratch, Sign::Positive);
+            });
+        }
+        stats.fft = t0.elapsed();
+
+        // [TRN] gather into the S-matrix layout (contiguous j), cache
+        // blocked: one u-row per package; inside, (m'-tile × j-tile)
+        // blocking keeps reads sequential in v and write lines resident
+        // across the j tile (§Perf in EXPERIMENTS.md: ~3× over the naive
+        // strided gather).
+        let t0 = Instant::now();
+        let mut smat = SMatrix::zeros(self.b)?;
+        let o = SMatrix::orders(self.b);
+        {
+            let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
+            let work_ref = &work;
+            let bins = &self.order_bins;
+            parallel_for(
+                self.config.threads,
+                o,
+                Schedule::Dynamic { chunk: 1 },
+                |mi| {
+                    const TJ: usize = 4;
+                    const TP: usize = 32;
+                    let u = bins[mi];
+                    for mpi0 in (0..o).step_by(TP) {
+                        let mpi1 = (mpi0 + TP).min(o);
+                        for j0 in (0..n).step_by(TJ) {
+                            let j1 = (j0 + TJ).min(n);
+                            for j in j0..j1 {
+                                let src = &work_ref[(j * n + u) * n..(j * n + u) * n + n];
+                                for mpi in mpi0..mpi1 {
+                                    // SAFETY: the (m, m') j-vector is
+                                    // row-package-exclusive.
+                                    unsafe {
+                                        shared.write((mi * o + mpi) * n + j, src[bins[mpi]])
+                                    };
+                                }
+                            }
+                        }
+                    }
+                },
+            );
+        }
+        stats.transpose = t0.elapsed();
+
+        // [DWT] the cluster loop — the paper's parallel region.
+        let t0 = Instant::now();
+        let mut out = vec![Complex64::zero(); coeff_count(self.b)];
+        {
+            let shared = SyncUnsafeSlice::new(&mut out);
+            let smat_ref = &smat;
+            let region = parallel_for(
+                self.config.threads,
+                self.plan.clusters.len(),
+                self.config.schedule,
+                |ci| {
+                    let cluster = &self.plan.clusters[ci];
+                    self.forward_cluster_dispatch(cluster, smat_ref, &shared);
+                },
+            );
+            stats.dwt_region = Some(region);
+        }
+        stats.dwt = t0.elapsed();
+        stats.total = t_total.elapsed();
+        Ok((So3Coeffs::from_vec(self.b, out)?, stats))
+    }
+
+    fn forward_cluster_dispatch(
+        &self,
+        cluster: &Cluster,
+        smat: &SMatrix,
+        out: &SyncUnsafeSlice<'_, Complex64>,
+    ) {
+        let b = self.b;
+        match (self.config.algorithm, self.config.precision) {
+            (DwtAlgorithm::Clenshaw, _) => with_scratch(b, |_s| {
+                let mut acc = Vec::new();
+                clenshaw::forward_cluster_clenshaw(
+                    b,
+                    cluster,
+                    &self.angles.betas,
+                    &self.weights,
+                    smat,
+                    out,
+                    &mut acc,
+                );
+            }),
+            (DwtAlgorithm::MatVec, precision) => with_scratch(b, |scratch| {
+                if precision == Precision::Double {
+                    if let Some(off) = &self.offload {
+                        self.forward_cluster_offload(cluster, smat, out, scratch, off.as_ref());
+                        return;
+                    }
+                }
+                let mut fly;
+                let mut tab;
+                let source: &mut dyn WignerSource = match &self.tables {
+                    Some(t) if cluster.m >= cluster.mp && cluster.mp >= 0 => {
+                        tab = t.source();
+                        &mut tab
+                    }
+                    _ => {
+                        fly = OnTheFlySource::new(&self.angles.betas);
+                        &mut fly
+                    }
+                };
+                match precision {
+                    Precision::Double => kernels::forward_cluster(
+                        b,
+                        cluster,
+                        source,
+                        &self.weights,
+                        smat,
+                        out,
+                        scratch,
+                    ),
+                    Precision::Extended => kernels::forward_cluster_extended(
+                        b,
+                        cluster,
+                        source,
+                        &self.weights,
+                        smat,
+                        out,
+                        scratch,
+                    ),
+                }
+            }),
+        }
+    }
+
+    /// Offloaded forward cluster: pack rows + member vectors, call the
+    /// backend, apply V·sign, store.
+    fn forward_cluster_offload(
+        &self,
+        cluster: &Cluster,
+        smat: &SMatrix,
+        out: &SyncUnsafeSlice<'_, Complex64>,
+        scratch: &mut DwtScratch,
+        off: &dyn DwtOffload,
+    ) {
+        let b = self.b;
+        let n = 2 * b;
+        let l0 = cluster.l_min();
+        let nl = b - l0;
+        let nm = cluster.members.len();
+        // Weighted member vectors (reversed for reflected members).
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let s = smat.vec(member.m, member.mp);
+            let t = &mut scratch.t[mi * n..(mi + 1) * n];
+            if member.reflected {
+                for j in 0..n {
+                    t[j] = s[n - 1 - j].scale(self.weights[n - 1 - j]);
+                }
+            } else {
+                for j in 0..n {
+                    t[j] = s[j].scale(self.weights[j]);
+                }
+            }
+        }
+        let rows = self.pack_rows(cluster, nl);
+        let c = off
+            .contract_forward(b, nl, nm, &rows, &scratch.t[..nm * n])
+            .expect("offload backend failed");
+        for (mi, member) in cluster.members.iter().enumerate() {
+            for li in 0..nl {
+                let l = l0 + li;
+                let v = c[mi * nl + li]
+                    .scale(crate::dwt::v_scale(l, b) * member.sign(l));
+                let idx = crate::so3::coeffs::flat_index(l, member.m, member.mp);
+                // SAFETY: (l, μ, μ') triples are cluster-exclusive.
+                unsafe { out.write(idx, v) };
+            }
+        }
+    }
+
+    /// Pack base Wigner rows d[l0..B][0..2B] densely for the offload.
+    fn pack_rows(&self, cluster: &Cluster, nl: usize) -> Vec<f64> {
+        let b = self.b;
+        let n = 2 * b;
+        let l0 = cluster.l_min();
+        let mut rows = vec![0.0f64; nl * n];
+        let mut fly;
+        let mut tab;
+        let source: &mut dyn WignerSource = match &self.tables {
+            Some(t) if cluster.m >= cluster.mp && cluster.mp >= 0 => {
+                tab = t.source();
+                &mut tab
+            }
+            _ => {
+                fly = OnTheFlySource::new(&self.angles.betas);
+                &mut fly
+            }
+        };
+        source.reset(cluster.m, cluster.mp);
+        let mut buf = vec![0.0f64; n];
+        for li in 0..nl {
+            let r = source.row(l0 + li, &mut buf);
+            rows[li * n..(li + 1) * n].copy_from_slice(r);
+        }
+        rows
+    }
+
+    // ------------------------------------------------------------------
+    // Profiling (simulator calibration)
+    // ------------------------------------------------------------------
+
+    /// Sequential instrumented forward run: per-package wall times for
+    /// each region, feeding the multicore simulator (DESIGN.md §3).
+    pub fn profile_forward(&self, grid: &So3Grid) -> Result<(So3Coeffs, RegionProfiles)> {
+        if grid.bandwidth() != self.b {
+            return Err(Error::shape(self.b, grid.bandwidth(), "profile_forward"));
+        }
+        let n = 2 * self.b;
+        let mut profiles = RegionProfiles::default();
+
+        let mut work = grid.as_slice().to_vec();
+        let mut scratch = vec![Complex64::zero(); 4 * n];
+        for j in 0..n {
+            let t0 = Instant::now();
+            self.fft2
+                .process(&mut work[j * n * n..(j + 1) * n * n], &mut scratch, Sign::Positive);
+            profiles.fft.push(t0.elapsed().as_secs_f64());
+        }
+
+        let mut smat = SMatrix::zeros(self.b)?;
+        let o = SMatrix::orders(self.b);
+        let layout = smat.clone();
+        {
+            let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
+            for p in 0..o * o {
+                let t0 = Instant::now();
+                let m = (p / o) as i64 - (self.b as i64 - 1);
+                let mp = (p % o) as i64 - (self.b as i64 - 1);
+                let u = m.rem_euclid(n as i64) as usize;
+                let v = mp.rem_euclid(n as i64) as usize;
+                let base = layout.vec_index(m, mp);
+                for j in 0..n {
+                    // SAFETY: sequential loop.
+                    unsafe { shared.write(base + j, work[(j * n + u) * n + v]) };
+                }
+                profiles.transpose.push(t0.elapsed().as_secs_f64());
+            }
+        }
+
+        let mut out = vec![Complex64::zero(); coeff_count(self.b)];
+        {
+            let shared = SyncUnsafeSlice::new(&mut out);
+            for cluster in &self.plan.clusters {
+                let t0 = Instant::now();
+                self.forward_cluster_dispatch(cluster, &smat, &shared);
+                profiles.dwt.push(t0.elapsed().as_secs_f64());
+            }
+        }
+        Ok((So3Coeffs::from_vec(self.b, out)?, profiles))
+    }
+
+    /// Sequential instrumented inverse run.
+    pub fn profile_inverse(&self, coeffs: &So3Coeffs) -> Result<(So3Grid, RegionProfiles)> {
+        if coeffs.bandwidth() != self.b {
+            return Err(Error::shape(self.b, coeffs.bandwidth(), "profile_inverse"));
+        }
+        let n = 2 * self.b;
+        let mut profiles = RegionProfiles::default();
+
+        let mut smat = SMatrix::zeros(self.b)?;
+        let layout = smat.clone();
+        {
+            let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
+            for cluster in &self.plan.clusters {
+                let t0 = Instant::now();
+                self.inverse_cluster_dispatch(cluster, coeffs, &shared, &layout);
+                profiles.dwt.push(t0.elapsed().as_secs_f64());
+            }
+        }
+
+        let mut work = vec![Complex64::zero(); n * n * n];
+        let o = SMatrix::orders(self.b);
+        let bi = self.b as i64;
+        {
+            let shared = SyncUnsafeSlice::new(&mut work);
+            for p in 0..o * o {
+                let t0 = Instant::now();
+                let m = (p / o) as i64 - (bi - 1);
+                let mp = (p % o) as i64 - (bi - 1);
+                let u = m.rem_euclid(n as i64) as usize;
+                let v = mp.rem_euclid(n as i64) as usize;
+                let s = smat.vec(m, mp);
+                for j in 0..n {
+                    // SAFETY: sequential loop.
+                    unsafe { shared.write((j * n + u) * n + v, s[j]) };
+                }
+                profiles.transpose.push(t0.elapsed().as_secs_f64());
+            }
+        }
+
+        let mut scratch = vec![Complex64::zero(); 4 * n];
+        for j in 0..n {
+            let t0 = Instant::now();
+            self.fft2
+                .process(&mut work[j * n * n..(j + 1) * n * n], &mut scratch, Sign::Negative);
+            profiles.fft.push(t0.elapsed().as_secs_f64());
+        }
+        Ok((So3Grid::from_vec(self.b, work)?, profiles))
+    }
+
+    // ------------------------------------------------------------------
+    // Inverse (iFSOFT)
+    // ------------------------------------------------------------------
+
+    /// Synthesis: Fourier coefficients → grid samples (paper Eq. 4).
+    pub fn inverse(&self, coeffs: &So3Coeffs) -> Result<So3Grid> {
+        self.inverse_with_stats(coeffs).map(|(g, _)| g)
+    }
+
+    pub fn inverse_with_stats(
+        &self,
+        coeffs: &So3Coeffs,
+    ) -> Result<(So3Grid, TransformStats)> {
+        if coeffs.bandwidth() != self.b {
+            return Err(Error::shape(
+                self.b,
+                coeffs.bandwidth(),
+                "inverse: coefficient bandwidth",
+            ));
+        }
+        let t_total = Instant::now();
+        let n = 2 * self.b;
+        let mut stats = TransformStats::default();
+
+        // [DWT] iDWT cluster loop → S-matrix.
+        let t0 = Instant::now();
+        let mut smat = SMatrix::zeros(self.b)?;
+        let layout = smat.clone();
+        {
+            let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
+            let region = parallel_for(
+                self.config.threads,
+                self.plan.clusters.len(),
+                self.config.schedule,
+                |ci| {
+                    let cluster = &self.plan.clusters[ci];
+                    self.inverse_cluster_dispatch(cluster, coeffs, &shared, &layout);
+                },
+            );
+            stats.dwt_region = Some(region);
+        }
+        stats.dwt = t0.elapsed();
+
+        // [TRN] scatter to per-slice layout (Nyquist bins stay zero),
+        // cache blocked like the forward gather: one target u-row per
+        // package, (m'-tile × j-tile) blocking inside.
+        let t0 = Instant::now();
+        let mut work = vec![Complex64::zero(); n * n * n];
+        {
+            let shared = SyncUnsafeSlice::new(&mut work);
+            let smat_ref = &smat;
+            let o = SMatrix::orders(self.b);
+            let bins = &self.order_bins;
+            parallel_for(
+                self.config.threads,
+                o,
+                Schedule::Dynamic { chunk: 1 },
+                |mi| {
+                    const TJ: usize = 4;
+                    const TP: usize = 32;
+                    let u = bins[mi];
+                    let smat_data = smat_ref.as_slice();
+                    for mpi0 in (0..o).step_by(TP) {
+                        let mpi1 = (mpi0 + TP).min(o);
+                        for j0 in (0..n).step_by(TJ) {
+                            let j1 = (j0 + TJ).min(n);
+                            for j in j0..j1 {
+                                let dst = (j * n + u) * n;
+                                for mpi in mpi0..mpi1 {
+                                    // SAFETY: bin (u, v) of slice j is
+                                    // written only by the row package
+                                    // owning u.
+                                    unsafe {
+                                        shared.write(
+                                            dst + bins[mpi],
+                                            smat_data[(mi * o + mpi) * n + j],
+                                        )
+                                    };
+                                }
+                            }
+                        }
+                    }
+                },
+            );
+        }
+        stats.transpose = t0.elapsed();
+
+        // [FFT] per-slice negative-sign 2-D FFT: the synthesis sum
+        // f = Σ_{m,m'} S e^{-i(mα + m'γ)}.
+        let t0 = Instant::now();
+        {
+            let shared = SyncUnsafeSlice::new(&mut work);
+            parallel_for(self.config.threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
+                // SAFETY: slice j is exclusive to this package.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(shared.ptr_at(j * n * n), n * n)
+                };
+                let mut scratch = vec![Complex64::zero(); 4 * n];
+                self.fft2.process(slice, &mut scratch, Sign::Negative);
+            });
+        }
+        stats.fft = t0.elapsed();
+        stats.total = t_total.elapsed();
+        Ok((So3Grid::from_vec(self.b, work)?, stats))
+    }
+
+    fn inverse_cluster_dispatch(
+        &self,
+        cluster: &Cluster,
+        coeffs: &So3Coeffs,
+        smat_out: &SyncUnsafeSlice<'_, Complex64>,
+        layout: &SMatrix,
+    ) {
+        let b = self.b;
+        match self.config.algorithm {
+            DwtAlgorithm::Clenshaw => {
+                let mut buf = Vec::new();
+                clenshaw::inverse_cluster_clenshaw(
+                    b,
+                    cluster,
+                    &self.angles.betas,
+                    coeffs.as_slice(),
+                    smat_out,
+                    layout,
+                    &mut buf,
+                );
+            }
+            DwtAlgorithm::MatVec => with_scratch(b, |scratch| {
+                if self.config.precision == Precision::Double {
+                    if let Some(off) = &self.offload {
+                        self.inverse_cluster_offload(
+                            cluster, coeffs, smat_out, layout, scratch, off.as_ref(),
+                        );
+                        return;
+                    }
+                    // Fast path: fused two-degree sweep over precomputed
+                    // tables (halves accumulator store traffic).
+                    if let Some(t) = &self.tables {
+                        if cluster.m >= cluster.mp && cluster.mp >= 0 {
+                            kernels::inverse_cluster_tables_fused(
+                                b,
+                                cluster,
+                                t,
+                                coeffs.as_slice(),
+                                smat_out,
+                                layout,
+                                scratch,
+                            );
+                            return;
+                        }
+                    }
+                }
+                let mut fly;
+                let mut tab;
+                let source: &mut dyn WignerSource = match &self.tables {
+                    Some(t) if cluster.m >= cluster.mp && cluster.mp >= 0 => {
+                        tab = t.source();
+                        &mut tab
+                    }
+                    _ => {
+                        fly = OnTheFlySource::new(&self.angles.betas);
+                        &mut fly
+                    }
+                };
+                match self.config.precision {
+                    Precision::Double => kernels::inverse_cluster(
+                        b,
+                        cluster,
+                        source,
+                        coeffs.as_slice(),
+                        smat_out,
+                        layout,
+                        scratch,
+                    ),
+                    Precision::Extended => kernels::inverse_cluster_extended(
+                        b,
+                        cluster,
+                        source,
+                        coeffs.as_slice(),
+                        smat_out,
+                        layout,
+                        scratch,
+                    ),
+                }
+            }),
+        }
+    }
+
+    fn inverse_cluster_offload(
+        &self,
+        cluster: &Cluster,
+        coeffs: &So3Coeffs,
+        smat_out: &SyncUnsafeSlice<'_, Complex64>,
+        layout: &SMatrix,
+        scratch: &mut DwtScratch,
+        off: &dyn DwtOffload,
+    ) {
+        let b = self.b;
+        let n = 2 * b;
+        let l0 = cluster.l_min();
+        let nl = b - l0;
+        let nm = cluster.members.len();
+        // ĉ with member signs folded in.
+        let mut chat = vec![Complex64::zero(); nm * nl];
+        for (mi, member) in cluster.members.iter().enumerate() {
+            for li in 0..nl {
+                let l = l0 + li;
+                chat[mi * nl + li] = coeffs.at(l, member.m, member.mp).scale(member.sign(l));
+            }
+        }
+        let rows = self.pack_rows(cluster, nl);
+        let s = off
+            .contract_inverse(b, nl, nm, &rows, &chat)
+            .expect("offload backend failed");
+        let _ = scratch;
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let base = layout.vec_index(member.m, member.mp);
+            for j in 0..n {
+                let src = if member.reflected { n - 1 - j } else { j };
+                // SAFETY: each (μ, μ') j-vector belongs to one cluster.
+                unsafe { smat_out.write(base + j, s[mi * n + src]) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_error(b: usize, config: ExecutorConfig) -> f64 {
+        let exec = Executor::new(b, config).unwrap();
+        let coeffs = So3Coeffs::random(b, 42);
+        let grid = exec.inverse(&coeffs).unwrap();
+        let back = exec.forward(&grid).unwrap();
+        coeffs.max_abs_error(&back)
+    }
+
+    #[test]
+    fn roundtrip_default_config() {
+        for b in [1usize, 2, 4, 8] {
+            let err = roundtrip_error(b, ExecutorConfig::default());
+            assert!(err < 1e-11, "b={b}: roundtrip error {err}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_non_power_of_two_bandwidth() {
+        // Exercises the Bluestein FFT path end to end.
+        for b in [3usize, 5, 6] {
+            let err = roundtrip_error(b, ExecutorConfig::default());
+            assert!(err < 1e-11, "b={b}: roundtrip error {err}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_algorithm_storage_combos() {
+        for algorithm in [DwtAlgorithm::MatVec, DwtAlgorithm::Clenshaw] {
+            for storage in [WignerStorage::Precomputed, WignerStorage::OnTheFly] {
+                let config = ExecutorConfig {
+                    algorithm,
+                    storage,
+                    ..Default::default()
+                };
+                let err = roundtrip_error(6, config);
+                assert!(
+                    err < 1e-11,
+                    "{algorithm:?}/{storage:?}: roundtrip error {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_extended_precision() {
+        let config = ExecutorConfig {
+            precision: Precision::Extended,
+            ..Default::default()
+        };
+        let err = roundtrip_error(6, config);
+        assert!(err < 1e-12, "extended precision roundtrip error {err}");
+    }
+
+    #[test]
+    fn parallel_matches_sequential_exactly() {
+        // Same plan, same kernels ⇒ bit-identical outputs regardless of
+        // thread count or schedule.
+        let b = 8;
+        let coeffs = So3Coeffs::random(b, 7);
+        let seq = Executor::new(b, ExecutorConfig::default()).unwrap();
+        let grid_seq = seq.inverse(&coeffs).unwrap();
+        let back_seq = seq.forward(&grid_seq).unwrap();
+        for threads in [2usize, 3, 4, 7] {
+            for schedule in [
+                Schedule::Dynamic { chunk: 1 },
+                Schedule::Static,
+                Schedule::Guided { min_chunk: 1 },
+            ] {
+                let par = Executor::new(
+                    b,
+                    ExecutorConfig {
+                        threads,
+                        schedule,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let grid_par = par.inverse(&coeffs).unwrap();
+                assert_eq!(
+                    grid_seq.as_slice(),
+                    grid_par.as_slice(),
+                    "inverse differs ({threads} threads, {schedule:?})"
+                );
+                let back_par = par.forward(&grid_par).unwrap();
+                assert_eq!(
+                    back_seq.as_slice(),
+                    back_par.as_slice(),
+                    "forward differs ({threads} threads, {schedule:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_strategies_agree() {
+        let b = 6;
+        let coeffs = So3Coeffs::random(b, 11);
+        let mk = |strategy| {
+            let exec = Executor::new(
+                b,
+                ExecutorConfig {
+                    strategy,
+                    storage: WignerStorage::OnTheFly,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let g = exec.inverse(&coeffs).unwrap();
+            let c = exec.forward(&g).unwrap();
+            (g, c)
+        };
+        let (g_geo, c_geo) = mk(PartitionStrategy::GeometricClustered);
+        let (g_sig, c_sig) = mk(PartitionStrategy::SigmaClustered);
+        let (g_non, c_non) = mk(PartitionStrategy::NoSymmetry);
+        assert!(g_geo.max_abs_error(&g_sig) < 1e-13);
+        assert!(g_geo.max_abs_error(&g_non) < 1e-11);
+        assert!(c_geo.max_abs_error(&c_sig) < 1e-13);
+        assert!(c_geo.max_abs_error(&c_non) < 1e-11);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(Executor::new(0, ExecutorConfig::default()).is_err());
+        assert!(Executor::new(
+            4,
+            ExecutorConfig {
+                threads: 0,
+                ..Default::default()
+            }
+        )
+        .is_err());
+        assert!(Executor::new(
+            4,
+            ExecutorConfig {
+                algorithm: DwtAlgorithm::Clenshaw,
+                precision: Precision::Extended,
+                ..Default::default()
+            }
+        )
+        .is_err());
+        assert!(Executor::new(
+            4,
+            ExecutorConfig {
+                algorithm: DwtAlgorithm::Clenshaw,
+                strategy: PartitionStrategy::NoSymmetry,
+                ..Default::default()
+            }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let exec = Executor::new(4, ExecutorConfig::default()).unwrap();
+        let wrong_grid = So3Grid::zeros(5).unwrap();
+        assert!(exec.forward(&wrong_grid).is_err());
+        let wrong_coeffs = So3Coeffs::random(3, 1);
+        assert!(exec.inverse(&wrong_coeffs).is_err());
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let exec = Executor::new(8, ExecutorConfig::default()).unwrap();
+        let coeffs = So3Coeffs::random(8, 3);
+        let (grid, istats) = exec.inverse_with_stats(&coeffs).unwrap();
+        let (_, fstats) = exec.forward_with_stats(&grid).unwrap();
+        for s in [&istats, &fstats] {
+            assert!(s.total >= s.dwt);
+            assert!(s.dwt.as_nanos() > 0);
+            assert!(s.dwt_region.is_some());
+            let frac = s.fft_fraction();
+            assert!((0.0..=1.0).contains(&frac));
+        }
+    }
+
+    /// The analysis operator applied to a single basis function must
+    /// produce a single coefficient — tests forward alone against the
+    /// mathematical definition (not just roundtrip consistency).
+    #[test]
+    fn forward_of_pure_basis_function() {
+        use crate::so3::wigner::d_single;
+        let b = 4usize;
+        let n = 2 * b;
+        let exec = Executor::new(b, ExecutorConfig::default()).unwrap();
+        let angles = GridAngles::new(b).unwrap();
+        let (l, m, mp) = (2usize, 1i64, -2i64);
+        let mut grid = So3Grid::zeros(b).unwrap();
+        for j in 0..n {
+            let d = d_single(l, m, mp, angles.betas[j]);
+            for i in 0..n {
+                for k in 0..n {
+                    let phase = -(m as f64 * angles.alphas[i] + mp as f64 * angles.gammas[k]);
+                    grid.set(i, j, k, Complex64::cis(phase).scale(d));
+                }
+            }
+        }
+        let coeffs = exec.forward(&grid).unwrap();
+        for (ll, mm, mmp, v) in coeffs.iter() {
+            let want = if (ll, mm, mmp) == (l, m, mp) { 1.0 } else { 0.0 };
+            assert!(
+                (v - Complex64::new(want, 0.0)).abs() < 1e-12,
+                "coeff ({ll},{mm},{mmp}) = {v}, want {want}"
+            );
+        }
+    }
+}

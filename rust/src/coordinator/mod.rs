@@ -1,0 +1,19 @@
+//! The parallel coordinator — the paper's contribution (Section 3).
+//!
+//! * [`partition`] — the two order-domain index maps: the sqrt-based σ
+//!   map (paper Eq. 7/8, the baseline) and the geometric
+//!   triangle→rectangle κ map (paper Fig. 1) that reconstructs (m, m')
+//!   with integer ops only.
+//! * [`plan`] — builds the ordered work-package list (symmetry clusters,
+//!   with the m=0 / m'=0 / m=m' specials "treated in advance") for a
+//!   bandwidth and partitioning strategy.
+//! * [`exec`] — the three-stage parallel FSOFT/iFSOFT executor: per-slice
+//!   2-D FFT region, transposition region, DWT-cluster region, all run
+//!   over the worker pool with the configured schedule.
+
+pub mod exec;
+pub mod partition;
+pub mod plan;
+
+pub use exec::{Executor, ExecutorConfig, TransformStats};
+pub use plan::{PartitionStrategy, TransformPlan};

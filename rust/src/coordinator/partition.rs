@@ -1,0 +1,198 @@
+//! Index maps over the order domain — the paper's *mapping* phase.
+//!
+//! The DWT work items live on the triangle m ≥ m' ≥ 0 (one symmetry
+//! cluster per base pair). To hand them to workers through a single
+//! linear loop index, the paper considers two bijections:
+//!
+//! * **σ map** (Eq. 7/8): `σ = m(m+1)/2 + m'` over the full triangle.
+//!   Inversion needs a floating-point square root per package.
+//! * **geometric κ map** (Fig. 1): the strict sub-triangle
+//!   {m = 2…B−1, m' = 1…m−1} is cut at m = ⌈(B+1)/2⌉ and the lower part
+//!   re-packed into a ⌊(B−1)/2⌋ × (B−1) rectangle, so κ inverts with one
+//!   integer division, one modulus and a conditional. The special cases
+//!   (m' = 0, m = m', and (0,0)) are "treated in advance" as a prologue.
+//!
+//! Both maps are exercised by the transforms (config-selectable) and
+//! compared in `benches/ablation_mapping.rs`.
+
+/// Total σ range for bandwidth b: the triangle m ≥ m' ≥ 0 has
+/// B(B+1)/2 cells.
+#[inline]
+pub fn sigma_count(b: usize) -> usize {
+    b * (b + 1) / 2
+}
+
+/// σ = m(m+1)/2 + m' (paper Eq. 7).
+#[inline]
+pub fn pair_to_sigma(m: i64, mp: i64) -> usize {
+    debug_assert!(m >= mp && mp >= 0);
+    (m * (m + 1) / 2 + mp) as usize
+}
+
+/// Invert σ with the paper's Eq. 8 — floating-point sqrt required.
+#[inline]
+pub fn sigma_to_pair(sigma: usize) -> (i64, i64) {
+    let m = ((2.0 * sigma as f64 + 0.25).sqrt() - 0.5).floor() as i64;
+    let mp = sigma as i64 - m * (m + 1) / 2;
+    (m, mp)
+}
+
+/// Number of κ cells: the strict triangle has (B−1)(B−2)/2 cells.
+#[inline]
+pub fn kappa_count(b: usize) -> usize {
+    if b < 3 {
+        0
+    } else {
+        (b - 1) * (b - 2) / 2
+    }
+}
+
+/// Invert κ via the geometric map (paper Fig. 1): integer ops only.
+///
+/// κ = (i−1)(B−1) + (j−1) with i = 1…⌊(B−1)/2⌋, j = 1…B−1, and
+/// `m = B−i, m' = B−j` when j > i (upper part), `m = i+1, m' = j`
+/// otherwise (lower part). For odd B the final row is only half used;
+/// the κ range cap guarantees those cells are never requested.
+#[inline]
+pub fn kappa_to_pair(kappa: usize, b: usize) -> (i64, i64) {
+    debug_assert!(kappa < kappa_count(b));
+    let bm1 = b - 1;
+    let i = (kappa / bm1 + 1) as i64;
+    let j = (kappa % bm1 + 1) as i64;
+    let bb = b as i64;
+    if j > i {
+        (bb - i, bb - j)
+    } else {
+        (i + 1, j)
+    }
+}
+
+/// Forward κ map (inverse of [`kappa_to_pair`]); used by tests and by
+/// the plan builder's bijectivity assertions.
+#[inline]
+pub fn pair_to_kappa(m: i64, mp: i64, b: usize) -> usize {
+    debug_assert!(m > mp && mp > 0, "κ domain is the strict triangle");
+    let half = ((b - 1) / 2) as i64;
+    let (i, j) = if m - 1 <= half {
+        // Lower part, stored at (i, j) = (m−1, m') with j ≤ i.
+        (m - 1, mp)
+    } else {
+        // Upper part, mirrored: (i, j) = (B−m, B−m') with j > i.
+        (b as i64 - m, b as i64 - mp)
+    };
+    ((i - 1) * (b as i64 - 1) + (j - 1)) as usize
+}
+
+/// The prologue pairs handled before the κ loop: (0,0), the m' = 0
+/// border, and the m = m' diagonal (paper Fig. 1 caption).
+pub fn prologue_pairs(b: usize) -> Vec<(i64, i64)> {
+    let mut v = Vec::with_capacity(2 * b);
+    v.push((0, 0));
+    for m in 1..b as i64 {
+        v.push((m, 0));
+        v.push((m, m));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+    use std::collections::HashSet;
+
+    #[test]
+    fn sigma_bijective_over_triangle() {
+        let b = 40usize;
+        let mut seen = HashSet::new();
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                let s = pair_to_sigma(m, mp);
+                assert!(s < sigma_count(b));
+                assert!(seen.insert(s), "σ collision at ({m},{mp})");
+                assert_eq!(sigma_to_pair(s), (m, mp), "σ inversion at ({m},{mp})");
+            }
+        }
+        assert_eq!(seen.len(), sigma_count(b));
+    }
+
+    #[test]
+    fn kappa_bijective_over_strict_triangle() {
+        for b in [3usize, 4, 5, 6, 7, 16, 17, 64, 65] {
+            let mut seen = HashSet::new();
+            for kappa in 0..kappa_count(b) {
+                let (m, mp) = kappa_to_pair(kappa, b);
+                assert!(
+                    m > mp && mp > 0 && (m as usize) < b,
+                    "b={b} κ={kappa} → ({m},{mp}) outside strict triangle"
+                );
+                assert!(seen.insert((m, mp)), "b={b}: pair ({m},{mp}) twice");
+                assert_eq!(
+                    pair_to_kappa(m, mp, b),
+                    kappa,
+                    "b={b}: κ inversion failed at ({m},{mp})"
+                );
+            }
+            // Surjectivity: every strict pair covered.
+            for m in 2..b as i64 {
+                for mp in 1..m {
+                    assert!(
+                        seen.contains(&(m, mp)),
+                        "b={b}: pair ({m},{mp}) never produced"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kappa_and_sigma_cover_same_domain_with_prologue() {
+        // prologue ∪ κ-domain = σ-domain (the full triangle).
+        for b in [3usize, 8, 31] {
+            let mut from_kappa: HashSet<(i64, i64)> =
+                prologue_pairs(b).into_iter().collect();
+            for kappa in 0..kappa_count(b) {
+                assert!(from_kappa.insert(kappa_to_pair(kappa, b)));
+            }
+            let mut from_sigma = HashSet::new();
+            for sigma in 0..sigma_count(b) {
+                from_sigma.insert(sigma_to_pair(sigma));
+            }
+            assert_eq!(from_kappa, from_sigma, "b={b}");
+        }
+    }
+
+    #[test]
+    fn property_random_bandwidths() {
+        Prop::new("κ bijection random b").cases(60).run(|g| {
+            let b = g.usize_in(3, 200);
+            let k = if kappa_count(b) == 0 {
+                return Ok(());
+            } else {
+                g.usize_in(0, kappa_count(b) - 1)
+            };
+            let (m, mp) = kappa_to_pair(k, b);
+            Prop::assert_true(m > mp && mp > 0, "strict triangle")?;
+            Prop::assert_eq_msg(pair_to_kappa(m, mp, b), k, "roundtrip")
+        });
+    }
+
+    #[test]
+    fn prologue_sizes() {
+        assert_eq!(prologue_pairs(1).len(), 1);
+        assert_eq!(prologue_pairs(2).len(), 3);
+        assert_eq!(prologue_pairs(8).len(), 15); // 1 + 2·7
+    }
+
+    #[test]
+    fn counts_consistency() {
+        // triangle = prologue + strict triangle.
+        for b in 1..50usize {
+            assert_eq!(
+                sigma_count(b),
+                prologue_pairs(b).len() + kappa_count(b),
+                "b={b}"
+            );
+        }
+    }
+}

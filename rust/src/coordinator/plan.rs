@@ -1,0 +1,198 @@
+//! Transform plans: the ordered work-package (cluster) list for one
+//! bandwidth — the paper's *partitioning* + *agglomeration* output.
+
+use crate::coordinator::partition;
+use crate::dwt::cluster::Cluster;
+
+/// How the order domain is partitioned into work packages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Geometric κ map with symmetry clusters, specials in a prologue —
+    /// the paper's design.
+    GeometricClustered,
+    /// σ map (Eq. 7/8) with symmetry clusters — the paper's intermediate
+    /// design (sqrt-based index reconstruction).
+    SigmaClustered,
+    /// No symmetry exploitation: one singleton package per (m, m') pair
+    /// over the full (2B−1)² square — the ablation baseline.
+    NoSymmetry,
+}
+
+impl PartitionStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "geometric" => Some(Self::GeometricClustered),
+            "sigma" => Some(Self::SigmaClustered),
+            "nosym" => Some(Self::NoSymmetry),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::GeometricClustered => "geometric",
+            Self::SigmaClustered => "sigma",
+            Self::NoSymmetry => "nosym",
+        }
+    }
+}
+
+/// The ordered package list for one transform.
+#[derive(Debug, Clone)]
+pub struct TransformPlan {
+    pub b: usize,
+    pub strategy: PartitionStrategy,
+    pub clusters: Vec<Cluster>,
+}
+
+impl TransformPlan {
+    pub fn new(b: usize, strategy: PartitionStrategy) -> Self {
+        assert!(b >= 1);
+        let clusters = match strategy {
+            PartitionStrategy::GeometricClustered => {
+                // Prologue (specials) first — "we treat these cases in
+                // advance" — then the κ loop.
+                let mut v: Vec<Cluster> = partition::prologue_pairs(b)
+                    .into_iter()
+                    .map(|(m, mp)| Cluster::symmetric(m, mp))
+                    .collect();
+                v.extend((0..partition::kappa_count(b)).map(|kappa| {
+                    let (m, mp) = partition::kappa_to_pair(kappa, b);
+                    Cluster::symmetric(m, mp)
+                }));
+                v
+            }
+            PartitionStrategy::SigmaClustered => (0..partition::sigma_count(b))
+                .map(|sigma| {
+                    let (m, mp) = partition::sigma_to_pair(sigma);
+                    Cluster::symmetric(m, mp)
+                })
+                .collect(),
+            PartitionStrategy::NoSymmetry => {
+                let bb = b as i64;
+                let mut v = Vec::with_capacity((2 * b - 1) * (2 * b - 1));
+                for m in (1 - bb)..bb {
+                    for mp in (1 - bb)..bb {
+                        v.push(Cluster::singleton(m, mp));
+                    }
+                }
+                v
+            }
+        };
+        Self {
+            b,
+            strategy,
+            clusters,
+        }
+    }
+
+    /// Total member (order-pair) count — must equal (2B−1)² for any
+    /// strategy (the coverage invariant).
+    pub fn member_count(&self) -> usize {
+        self.clusters.iter().map(|c| c.members.len()).sum()
+    }
+
+    /// Estimated flops over all packages (simulator input).
+    pub fn total_flops(&self) -> usize {
+        self.clusters.iter().map(|c| c.flops(self.b)).sum()
+    }
+
+    /// Per-package flop estimates, in plan order (simulator input).
+    pub fn package_flops(&self) -> Vec<usize> {
+        self.clusters.iter().map(|c| c.flops(self.b)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+    use std::collections::HashSet;
+
+    fn assert_full_coverage(plan: &TransformPlan) {
+        let b = plan.b as i64;
+        let mut seen = HashSet::new();
+        for c in &plan.clusters {
+            for m in &c.members {
+                assert!(
+                    seen.insert((m.m, m.mp)),
+                    "{:?}: pair ({},{}) in two packages",
+                    plan.strategy,
+                    m.m,
+                    m.mp
+                );
+            }
+        }
+        assert_eq!(seen.len(), ((2 * b - 1) * (2 * b - 1)) as usize);
+        for m in (1 - b)..b {
+            for mp in (1 - b)..b {
+                assert!(seen.contains(&(m, mp)));
+            }
+        }
+    }
+
+    #[test]
+    fn all_strategies_cover_order_square_exactly_once() {
+        for b in [1usize, 2, 3, 4, 5, 8, 16, 33] {
+            for strategy in [
+                PartitionStrategy::GeometricClustered,
+                PartitionStrategy::SigmaClustered,
+                PartitionStrategy::NoSymmetry,
+            ] {
+                let plan = TransformPlan::new(b, strategy);
+                assert_full_coverage(&plan);
+                assert_eq!(plan.member_count(), (2 * b - 1) * (2 * b - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn geometric_and_sigma_have_same_cluster_multiset() {
+        let b = 12;
+        let norm = |plan: &TransformPlan| {
+            let mut v: Vec<(i64, i64, usize)> = plan
+                .clusters
+                .iter()
+                .map(|c| (c.m, c.mp, c.members.len()))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        let g = TransformPlan::new(b, PartitionStrategy::GeometricClustered);
+        let s = TransformPlan::new(b, PartitionStrategy::SigmaClustered);
+        assert_eq!(norm(&g), norm(&s));
+    }
+
+    #[test]
+    fn geometric_prologue_comes_first() {
+        let b = 9;
+        let plan = TransformPlan::new(b, PartitionStrategy::GeometricClustered);
+        let n_prologue = 2 * b - 1;
+        for c in &plan.clusters[..n_prologue] {
+            assert!(c.mp == 0 || c.m == c.mp, "specials first");
+        }
+        for c in &plan.clusters[n_prologue..] {
+            assert!(c.m > c.mp && c.mp > 0, "strict pairs after");
+        }
+    }
+
+    #[test]
+    fn package_count_matches_paper_formulas() {
+        Prop::new("package counts").cases(50).run(|g| {
+            let b = g.usize_in(1, 128);
+            let plan = TransformPlan::new(b, PartitionStrategy::GeometricClustered);
+            // clusters = B(B+1)/2 base pairs.
+            Prop::assert_eq_msg(plan.clusters.len(), b * (b + 1) / 2, "cluster count")
+        });
+    }
+
+    #[test]
+    fn nosym_does_more_flops_than_clustered() {
+        let b = 16;
+        let sym = TransformPlan::new(b, PartitionStrategy::GeometricClustered);
+        let nosym = TransformPlan::new(b, PartitionStrategy::NoSymmetry);
+        // Without clustering every pair pays its own recurrence: strictly
+        // more work (that's the point of the symmetry design).
+        assert!(nosym.total_flops() > sym.total_flops());
+    }
+}

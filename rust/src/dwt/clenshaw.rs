@@ -1,0 +1,315 @@
+//! Clenshaw-recurrence DWT/iDWT dataflow — the faster DWT the paper's §5
+//! announces for "the next version of our software", built here as a
+//! first-class extension.
+//!
+//! Using the three-term recurrence `d_{l+1} = α_l(x)·d_l − β_l·d_{l−1}`
+//! (x = cosβ, coefficients from [`crate::so3::wigner::step_coeffs`]):
+//!
+//! * **iDWT** evaluates `S(x_j) = Σ_l c_l d_l(x_j)` by the classical
+//!   downward Clenshaw recursion — 3 fused ops per term, no Wigner rows
+//!   in memory at all.
+//! * **DWT** runs the transposed (adjoint) dataflow: per β-node an upward
+//!   scalar recurrence generates d_l(x_j) and scatters
+//!   `c_l += t_j · d_l(x_j)` — the adjoint Clenshaw algorithm.
+//!
+//! Both support the symmetry clusters: recurrence coefficients α, β are
+//! shared by all members; reflected members read/write through the
+//! mirrored node index; the l-alternating signs are folded into the
+//! member coefficients.
+
+use crate::dwt::cluster::Cluster;
+use crate::dwt::{v_scale, SMatrix};
+use crate::fft::Complex64;
+use crate::so3::coeffs;
+use crate::so3::wigner::{d_seed, step_coeffs};
+use crate::util::SyncUnsafeSlice;
+
+/// Precomputed per-degree recurrence coefficients for a base pair.
+#[derive(Debug, Clone)]
+pub struct ClenshawCoeffs {
+    /// l₀ of the base pair.
+    pub l0: usize,
+    /// (a1, a2, a3) for steps l = max(l0,1) … B−2 (step l → l+1), indexed
+    /// by l − l0; the l = 0 step (only for l0 = 0) is the special
+    /// `d₁ = x·d₀`.
+    pub steps: Vec<(f64, f64, f64)>,
+}
+
+impl ClenshawCoeffs {
+    /// Coefficients for base orders m ≥ m' ≥ 0 up to bandwidth b.
+    pub fn new(b: usize, m: i64, mp: i64) -> Self {
+        debug_assert!(m >= mp && mp >= 0);
+        let l0 = m.max(mp) as usize;
+        let mut steps = Vec::with_capacity(b.saturating_sub(l0));
+        for l in l0..b.saturating_sub(1) {
+            if l == 0 {
+                // d₁ = x·d₀ (m = m' = 0 only).
+                steps.push((1.0, 0.0, 0.0));
+            } else {
+                let s = step_coeffs(l, m, mp);
+                steps.push((s.a1, s.a2, s.a3));
+            }
+        }
+        Self { l0, steps }
+    }
+
+    /// α_l(x) = a1·x + a2 for step l (absolute degree).
+    #[inline]
+    fn alpha(&self, l: usize, x: f64) -> f64 {
+        let (a1, a2, _) = self.steps[l - self.l0];
+        a1 * x + a2
+    }
+
+    /// β_l for step l (absolute degree).
+    #[inline]
+    fn beta(&self, l: usize) -> f64 {
+        self.steps[l - self.l0].2
+    }
+}
+
+/// Inverse DWT for one cluster via downward Clenshaw.
+///
+/// Same I/O contract as [`crate::dwt::kernels::inverse_cluster`].
+#[allow(clippy::too_many_arguments)]
+pub fn inverse_cluster_clenshaw(
+    b: usize,
+    cluster: &Cluster,
+    betas: &[f64],
+    coeff_data: &[Complex64],
+    smat_out: &SyncUnsafeSlice<'_, Complex64>,
+    smat_layout: &SMatrix,
+    member_coeff_buf: &mut Vec<Complex64>,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    let nl = b - l0;
+    let cc = ClenshawCoeffs::new(b, cluster.m, cluster.mp);
+    for member in &cluster.members {
+        // Fold the member sign into its coefficient vector ĉ_l.
+        member_coeff_buf.clear();
+        member_coeff_buf.extend((l0..b).map(|l| {
+            coeff_data[coeffs::flat_index(l, member.m, member.mp)].scale(member.sign(l))
+        }));
+        let base = smat_layout.vec_index(member.m, member.mp);
+        for j in 0..n {
+            // Output node j of this member reads base node `src`.
+            let src = if member.reflected { n - 1 - j } else { j };
+            let x = betas[src].cos();
+            // Downward Clenshaw: y_l = ĉ_l + α_l(x)·y_{l+1} − β_{l+1}·y_{l+2}.
+            let mut y1 = Complex64::zero();
+            let mut y2 = Complex64::zero();
+            for li in (0..nl).rev() {
+                let l = l0 + li;
+                let mut y0 = member_coeff_buf[li];
+                if l + 1 < b {
+                    y0 += y1.scale(cc.alpha(l, x));
+                }
+                if l + 2 < b {
+                    y0 -= y2.scale(cc.beta(l + 1));
+                }
+                y2 = y1;
+                y1 = y0;
+            }
+            let value = y1.scale(d_seed(cluster.m.max(cluster.mp), cluster.m.min(cluster.mp), betas[src]));
+            // SAFETY: each (μ, μ') j-vector belongs to exactly one cluster.
+            unsafe { smat_out.write(base + j, value) };
+        }
+    }
+}
+
+/// Forward DWT for one cluster via the adjoint-Clenshaw (j-outer) dataflow.
+///
+/// Same I/O contract as [`crate::dwt::kernels::forward_cluster`]; `acc`
+/// is caller scratch of length ≥ (B−l₀)·members.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_cluster_clenshaw(
+    b: usize,
+    cluster: &Cluster,
+    betas: &[f64],
+    weights: &[f64],
+    smat: &SMatrix,
+    out: &SyncUnsafeSlice<'_, Complex64>,
+    acc: &mut Vec<Complex64>,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    let nl = b - l0;
+    let nm = cluster.members.len();
+    let cc = ClenshawCoeffs::new(b, cluster.m, cluster.mp);
+    acc.clear();
+    acc.resize(nl * nm, Complex64::zero());
+    // Member input vectors t (weighted, reversed for reflected members).
+    let member_vecs: Vec<&[Complex64]> = cluster
+        .members
+        .iter()
+        .map(|mem| smat.vec(mem.m, mem.mp))
+        .collect();
+    for j in 0..n {
+        let x = betas[j].cos();
+        // Upward scalar recurrence for the base pair at node j.
+        let mut d_prev = 0.0f64;
+        let mut d_cur = d_seed(cluster.m.max(cluster.mp), cluster.m.min(cluster.mp), betas[j]);
+        for li in 0..nl {
+            let l = l0 + li;
+            for (mi, member) in cluster.members.iter().enumerate() {
+                // Forward: c_member(l) = Σ_j d_l(x_j) · t_member[rev? j].
+                let src = if member.reflected { n - 1 - j } else { j };
+                let t = member_vecs[mi][src].scale(weights[src]);
+                acc[li * nm + mi] += t.scale(d_cur);
+            }
+            if li + 1 < nl {
+                let next = if l == 0 {
+                    x * d_cur
+                } else {
+                    cc.alpha(l, x) * d_cur - cc.beta(l) * d_prev
+                };
+                d_prev = d_cur;
+                d_cur = next;
+            }
+        }
+    }
+    // Apply V(l) and the member signs, write out.
+    for li in 0..nl {
+        let l = l0 + li;
+        let vs = v_scale(l, b);
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let value = acc[li * nm + mi].scale(vs * member.sign(l));
+            let idx = coeffs::flat_index(l, member.m, member.mp);
+            // SAFETY: (l, μ, μ') triples are cluster-exclusive.
+            unsafe { out.write(idx, value) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dwt::kernels::{forward_cluster, inverse_cluster, DwtScratch};
+    use crate::dwt::tables::OnTheFlySource;
+    use crate::prng::Xoshiro256;
+    use crate::so3::coeffs::So3Coeffs;
+    use crate::so3::quadrature;
+    use crate::so3::sampling::GridAngles;
+
+    fn random_smat(b: usize, seed: u64) -> SMatrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut smat = SMatrix::zeros(b).unwrap();
+        for v in smat.as_mut_slice().iter_mut() {
+            *v = Complex64::new(rng.next_signed(), rng.next_signed());
+        }
+        smat
+    }
+
+    #[test]
+    fn forward_clenshaw_matches_matvec() {
+        let b = 8usize;
+        let angles = GridAngles::new(b).unwrap();
+        let weights = quadrature::weights(b).unwrap();
+        let smat = random_smat(b, 13);
+        let nco = crate::so3::coeffs::coeff_count(b);
+        let mut out_mv = vec![Complex64::zero(); nco];
+        let mut out_cl = vec![Complex64::zero(); nco];
+        let mut scratch = DwtScratch::new(b);
+        let mut acc = Vec::new();
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                let cluster = Cluster::symmetric(m, mp);
+                {
+                    let shared = SyncUnsafeSlice::new(&mut out_mv);
+                    let mut src = OnTheFlySource::new(&angles.betas);
+                    forward_cluster(
+                        b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch,
+                    );
+                }
+                {
+                    let shared = SyncUnsafeSlice::new(&mut out_cl);
+                    forward_cluster_clenshaw(
+                        b, &cluster, &angles.betas, &weights, &smat, &shared, &mut acc,
+                    );
+                }
+            }
+        }
+        for (i, (a, c)) in out_mv.iter().zip(out_cl.iter()).enumerate() {
+            assert!((*a - *c).abs() < 1e-12, "coeff {i}: {a} vs {c}");
+        }
+    }
+
+    #[test]
+    fn inverse_clenshaw_matches_matvec() {
+        let b = 8usize;
+        let angles = GridAngles::new(b).unwrap();
+        let coeffs_in = So3Coeffs::random(b, 23);
+        let mut smat_mv = SMatrix::zeros(b).unwrap();
+        let mut smat_cl = SMatrix::zeros(b).unwrap();
+        let layout = SMatrix::zeros(b).unwrap();
+        let mut scratch = DwtScratch::new(b);
+        let mut buf = Vec::new();
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                let cluster = Cluster::symmetric(m, mp);
+                {
+                    let shared = SyncUnsafeSlice::new(smat_mv.as_mut_slice());
+                    let mut src = OnTheFlySource::new(&angles.betas);
+                    inverse_cluster(
+                        b,
+                        &cluster,
+                        &mut src,
+                        coeffs_in.as_slice(),
+                        &shared,
+                        &layout,
+                        &mut scratch,
+                    );
+                }
+                {
+                    let shared = SyncUnsafeSlice::new(smat_cl.as_mut_slice());
+                    inverse_cluster_clenshaw(
+                        b,
+                        &cluster,
+                        &angles.betas,
+                        coeffs_in.as_slice(),
+                        &shared,
+                        &layout,
+                        &mut buf,
+                    );
+                }
+            }
+        }
+        for (a, c) in smat_mv.as_slice().iter().zip(smat_cl.as_slice()) {
+            assert!((*a - *c).abs() < 1e-11, "{a} vs {c}");
+        }
+    }
+
+    #[test]
+    fn clenshaw_coeffs_reproduce_recurrence() {
+        // Stepping with (α, β) from ClenshawCoeffs must equal the stepper.
+        use crate::so3::wigner::WignerRowStepper;
+        let b = 10usize;
+        let angles = GridAngles::new(b).unwrap();
+        for (m, mp) in [(0i64, 0i64), (2, 1), (4, 4), (6, 0)] {
+            let cc = ClenshawCoeffs::new(b, m, mp);
+            let l0 = cc.l0;
+            for (j, &bj) in angles.betas.iter().enumerate().take(4) {
+                let x = bj.cos();
+                let mut d_prev = 0.0;
+                let mut d_cur = d_seed(m.max(mp), m.min(mp), bj);
+                let mut st: WignerRowStepper<f64> = WignerRowStepper::new(m, mp, &angles.betas);
+                for l in l0..b {
+                    assert!(
+                        (d_cur - st.row()[j]).abs() < 1e-12,
+                        "m={m} mp={mp} l={l} j={j}"
+                    );
+                    if l + 1 < b {
+                        let next = if l == 0 {
+                            x * d_cur
+                        } else {
+                            cc.alpha(l, x) * d_cur - cc.beta(l) * d_prev
+                        };
+                        d_prev = d_cur;
+                        d_cur = next;
+                        st.advance();
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Symmetry clusters of DWTs — the paper's *communication / agglomeration*
+//! design.
+//!
+//! The seven Wigner-d symmetries (paper Eq. 3) relate the eight order
+//! pairs {(±m, ±m'), (±m', ±m)} to a single base evaluation
+//! `D_l[j] = d(l, m, m'; β_j)` with m ≥ m' ≥ 0:
+//!
+//! * *direct* members read `D_l[j]` with an l-independent sign;
+//! * *reflected* members read `D_l[2B−1−j]` (because π − β_j = β_{2B−1−j}
+//!   on the K&R grid) with a sign that alternates with l.
+//!
+//! Derivation used here (validated by `member_signs_match_wigner`):
+//!
+//! | member        | source           | sign(l)            |
+//! |---------------|------------------|--------------------|
+//! | ( m,  m')     | D_l[j]           | +1                 |
+//! | ( m', m)      | D_l[j]           | (−1)^{m−m'}        |
+//! | (−m, −m')     | D_l[j]           | (−1)^{m−m'}        |
+//! | (−m', −m)     | D_l[j]           | +1                 |
+//! | (−m,  m')     | D_l[2B−1−j]      | (−1)^{l−m'}        |
+//! | (−m', m)      | D_l[2B−1−j]      | (−1)^{l−m'}        |
+//! | ( m, −m')     | D_l[2B−1−j]      | (−1)^{l+m}         |
+//! | ( m', −m)     | D_l[2B−1−j]      | (−1)^{l+m}         |
+//!
+//! For m = m', m' = 0, or m = 0 some of these coincide; the cluster
+//! builder deduplicates, which is exactly the paper's "smaller DWT
+//! groups" for the special cases.
+
+use crate::util::parity_sign;
+
+/// One order pair inside a cluster and how to obtain its Wigner-d values
+/// from the base rows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Member {
+    /// The order pair (μ, μ') this member computes.
+    pub m: i64,
+    pub mp: i64,
+    /// Read the base row reversed in j (the π−β reflection)?
+    pub reflected: bool,
+    /// Constant part of the sign.
+    pub s0: f64,
+    /// When true the sign also alternates with l: sign(l) = s0·(−1)^l.
+    pub alt: bool,
+}
+
+impl Member {
+    /// The sign applied at degree l.
+    #[inline]
+    pub fn sign(&self, l: usize) -> f64 {
+        if self.alt {
+            self.s0 * parity_sign(l as i64)
+        } else {
+            self.s0
+        }
+    }
+}
+
+/// A work package: one base order pair plus all members derivable from it
+/// through the Wigner-d symmetries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    /// Base orders, m ≥ m' ≥ 0.
+    pub m: i64,
+    pub mp: i64,
+    pub members: Vec<Member>,
+}
+
+impl Cluster {
+    /// Build the symmetry cluster for base pair m ≥ m' ≥ 0.
+    pub fn symmetric(m: i64, mp: i64) -> Cluster {
+        assert!(m >= mp && mp >= 0, "base pair must satisfy m >= m' >= 0");
+        let eps = parity_sign(m - mp);
+        let mut members: Vec<Member> = Vec::with_capacity(8);
+        let mut push = |mm: i64, mmp: i64, reflected: bool, s0: f64, alt: bool| {
+            if !members.iter().any(|x| x.m == mm && x.mp == mmp) {
+                members.push(Member {
+                    m: mm,
+                    mp: mmp,
+                    reflected,
+                    s0,
+                    alt,
+                });
+            }
+        };
+        // Direct group.
+        push(m, mp, false, 1.0, false);
+        push(mp, m, false, eps, false);
+        push(-m, -mp, false, eps, false);
+        push(-mp, -m, false, 1.0, false);
+        // Reflected group (skip when it would duplicate a direct member,
+        // i.e. when m = 0 — then -m = m and the β-reflection identities
+        // degenerate).
+        if m > 0 {
+            // (−1)^{l−m'} = parity(m')·(−1)^l ; (−1)^{l+m} = parity(m)·(−1)^l.
+            push(-m, mp, true, parity_sign(mp), true);
+            push(-mp, m, true, parity_sign(mp), true);
+            push(m, -mp, true, parity_sign(m), true);
+            push(mp, -m, true, parity_sign(m), true);
+        }
+        Cluster { m, mp, members }
+    }
+
+    /// A singleton cluster (no symmetry exploitation — the ablation
+    /// baseline): one member computing (m, m') directly from its own
+    /// Wigner evaluation at base orders (|reduced| handled by the
+    /// stepper itself).
+    pub fn singleton(m: i64, mp: i64) -> Cluster {
+        Cluster {
+            m,
+            mp,
+            members: vec![Member {
+                m,
+                mp,
+                reflected: false,
+                s0: 1.0,
+                alt: false,
+            }],
+        }
+    }
+
+    /// Lowest degree carrying this cluster: l₀ = max(|m|, |m'|) of the
+    /// base (all members share it since |±m|, |±m'| have the same max).
+    #[inline]
+    pub fn l_min(&self) -> usize {
+        self.m.abs().max(self.mp.abs()) as usize
+    }
+
+    /// Number of degrees l₀..B−1 each member computes.
+    #[inline]
+    pub fn degrees(&self, b: usize) -> usize {
+        b - self.l_min()
+    }
+
+    /// Operation count estimate for the cost model / simulator: each
+    /// member performs one length-2B dot (or axpy) per degree, plus the
+    /// base recurrence itself.
+    pub fn flops(&self, b: usize) -> usize {
+        let j = 2 * b;
+        let deg = self.degrees(b);
+        // 8 flops per complex-real MAC, 4 per recurrence point.
+        deg * j * (8 * self.members.len() + 4)
+    }
+}
+
+/// Expected member count for a base pair (paper §3 *Communication*):
+/// 8 in general, fewer for the m=0 / m'=0 / m=m' special cases.
+pub fn expected_member_count(m: i64, mp: i64) -> usize {
+    match (m, mp) {
+        (0, 0) => 1,
+        (m, 0) if m > 0 => 4,
+        (m, mp) if m == mp => 4,
+        _ => 8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::sampling::GridAngles;
+    use crate::so3::wigner::{d_single, WignerRowStepper};
+    use crate::testkit::Prop;
+
+    #[test]
+    fn member_counts_match_paper_special_cases() {
+        assert_eq!(Cluster::symmetric(0, 0).members.len(), 1);
+        for m in 1..6i64 {
+            assert_eq!(
+                Cluster::symmetric(m, 0).members.len(),
+                expected_member_count(m, 0),
+                "m={m}, mp=0"
+            );
+            assert_eq!(
+                Cluster::symmetric(m, m).members.len(),
+                expected_member_count(m, m),
+                "m=mp={m}"
+            );
+        }
+        for (m, mp) in [(2i64, 1i64), (5, 3), (7, 1)] {
+            assert_eq!(Cluster::symmetric(m, mp).members.len(), 8);
+        }
+    }
+
+    #[test]
+    fn members_are_distinct_pairs() {
+        Prop::new("cluster members distinct").cases(100).run(|g| {
+            let m = g.i64_in(0, 20);
+            let mp = g.i64_in(0, m.max(0));
+            let c = Cluster::symmetric(m, mp);
+            for (i, a) in c.members.iter().enumerate() {
+                for b in &c.members[i + 1..] {
+                    Prop::assert_true(
+                        (a.m, a.mp) != (b.m, b.mp),
+                        "duplicate member pair",
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The core correctness of the whole parallel design: every member's
+    /// sign/reflection rule reproduces the true Wigner-d values.
+    #[test]
+    fn member_signs_match_wigner() {
+        let b = 10usize;
+        let angles = GridAngles::new(b).unwrap();
+        let n = 2 * b;
+        for (m, mp) in [(0i64, 0i64), (1, 0), (3, 0), (2, 2), (5, 5), (3, 1), (7, 4), (9, 8)] {
+            let cluster = Cluster::symmetric(m, mp);
+            let mut stepper: WignerRowStepper<f64> =
+                WignerRowStepper::new(m, mp, &angles.betas);
+            for l in cluster.l_min()..b {
+                let row = stepper.row().to_vec();
+                for member in &cluster.members {
+                    let sign = member.sign(l);
+                    for j in 0..n {
+                        let src = if member.reflected { n - 1 - j } else { j };
+                        let expect = d_single(l, member.m, member.mp, angles.betas[j]);
+                        let got = sign * row[src];
+                        assert!(
+                            (expect - got).abs() < 1e-12,
+                            "base=({m},{mp}) member=({},{}) l={l} j={j}: {got} vs {expect}",
+                            member.m,
+                            member.mp
+                        );
+                    }
+                }
+                stepper.advance();
+            }
+        }
+    }
+
+    #[test]
+    fn union_of_clusters_covers_order_square_exactly_once() {
+        // Base pairs m >= mp >= 0 tile the full (2B−1)² order square.
+        let b = 7i64;
+        let mut seen = std::collections::HashSet::new();
+        for m in 0..b {
+            for mp in 0..=m {
+                for member in Cluster::symmetric(m, mp).members {
+                    assert!(
+                        seen.insert((member.m, member.mp)),
+                        "pair ({}, {}) covered twice",
+                        member.m,
+                        member.mp
+                    );
+                }
+            }
+        }
+        assert_eq!(seen.len(), ((2 * b - 1) * (2 * b - 1)) as usize);
+        for m in (1 - b)..b {
+            for mp in (1 - b)..b {
+                assert!(seen.contains(&(m, mp)), "pair ({m}, {mp}) missing");
+            }
+        }
+    }
+
+    #[test]
+    fn flops_monotone_in_members_and_degrees() {
+        let b = 16;
+        let big = Cluster::symmetric(3, 1);
+        let small = Cluster::symmetric(15, 1);
+        assert!(big.flops(b) > small.flops(b), "lower l0 ⇒ more work");
+        let single = Cluster::singleton(3, 1);
+        assert!(single.flops(b) < big.flops(b));
+    }
+
+    #[test]
+    fn singleton_covers_itself_only() {
+        let c = Cluster::singleton(-4, 2);
+        assert_eq!(c.members.len(), 1);
+        assert_eq!(c.members[0].m, -4);
+        assert_eq!(c.members[0].mp, 2);
+        assert!(!c.members[0].reflected);
+    }
+}

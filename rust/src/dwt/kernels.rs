@@ -1,0 +1,551 @@
+//! Cluster-at-a-time DWT/iDWT kernels (matvec dataflow).
+//!
+//! One call processes one symmetry cluster: the Wigner-d base rows are
+//! produced once — streamed from the three-term recurrence or read from a
+//! precomputed table — and applied to all ≤8 members. Reflected members
+//! are handled by pre-reversing their j-vectors (forward) or by writing
+//! through a reversed view (inverse), so the inner loops are always unit
+//! stride.
+//!
+//! All writes land in caller-provided buffers at cluster-exclusive
+//! locations; the parallel executor exploits this for lock-free output
+//! (see `coordinator::exec`).
+
+use crate::dwt::cluster::Cluster;
+use crate::dwt::tables::WignerSource;
+use crate::dwt::{v_scale, SMatrix};
+use crate::fft::Complex64;
+use crate::so3::coeffs;
+use crate::util::SyncUnsafeSlice;
+use crate::xprec::DdComplex;
+
+/// Per-worker scratch for the DWT kernels (allocated once, reused across
+/// clusters). Sized for the worst case: 8 members × 2B nodes.
+#[derive(Debug, Clone)]
+pub struct DwtScratch {
+    /// Weighted (forward) or accumulated (inverse) member j-vectors.
+    pub t: Vec<Complex64>,
+    /// Row buffer when reading from a table source.
+    pub row: Vec<f64>,
+    /// Extended-precision accumulators (lazily sized).
+    pub xacc: Vec<DdComplex>,
+}
+
+impl DwtScratch {
+    pub fn new(b: usize) -> Self {
+        Self {
+            t: vec![Complex64::zero(); 8 * 2 * b],
+            row: vec![0.0; 2 * b],
+            xacc: Vec::new(),
+        }
+    }
+}
+
+/// Forward DWT for one cluster.
+///
+/// Reads `S(μ, μ'; ·)` for every member from `smat`, applies quadrature
+/// weights, contracts against the base Wigner rows, and writes the
+/// coefficients `f°(l, μ, μ')` (flat (l,m,m') layout, see
+/// [`crate::so3::coeffs::flat_index`]) through `out`.
+///
+/// # Safety contract
+/// `out` writes are exclusive to this cluster: distinct clusters write
+/// distinct (l, μ, μ') triples (guaranteed by the cluster tiling property
+/// tested in `dwt::cluster`).
+pub fn forward_cluster(
+    b: usize,
+    cluster: &Cluster,
+    source: &mut dyn WignerSource,
+    weights: &[f64],
+    smat: &SMatrix,
+    out: &SyncUnsafeSlice<'_, Complex64>,
+    scratch: &mut DwtScratch,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    let nm = cluster.members.len();
+    debug_assert!(nm <= 8);
+    // Gather weighted member vectors; reflected members are reversed here
+    // so every inner dot is a forward unit-stride scan.
+    for (mi, member) in cluster.members.iter().enumerate() {
+        let s = smat.vec(member.m, member.mp);
+        let t = &mut scratch.t[mi * n..(mi + 1) * n];
+        if member.reflected {
+            for j in 0..n {
+                t[j] = s[n - 1 - j].scale(weights[n - 1 - j]);
+            }
+        } else {
+            for j in 0..n {
+                t[j] = s[j].scale(weights[j]);
+            }
+        }
+    }
+    // Contract row-by-row.
+    source.reset(cluster.m, cluster.mp);
+    for l in l0..b {
+        let row = source.row(l, &mut scratch.row);
+        let vs = v_scale(l, b);
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let t = &scratch.t[mi * n..(mi + 1) * n];
+            let mut acc = Complex64::zero();
+            for j in 0..n {
+                acc += t[j].scale(row[j]);
+            }
+            let value = acc.scale(vs * member.sign(l));
+            let idx = coeffs::flat_index(l, member.m, member.mp);
+            // SAFETY: (l, μ, μ') triples are cluster-exclusive.
+            unsafe { out.write(idx, value) };
+        }
+    }
+}
+
+/// Extended-precision forward DWT (double-double accumulation), used for
+/// the paper's accuracy-critical large bandwidths.
+pub fn forward_cluster_extended(
+    b: usize,
+    cluster: &Cluster,
+    source: &mut dyn WignerSource,
+    weights: &[f64],
+    smat: &SMatrix,
+    out: &SyncUnsafeSlice<'_, Complex64>,
+    scratch: &mut DwtScratch,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    for (mi, member) in cluster.members.iter().enumerate() {
+        let s = smat.vec(member.m, member.mp);
+        let t = &mut scratch.t[mi * n..(mi + 1) * n];
+        if member.reflected {
+            for j in 0..n {
+                t[j] = s[n - 1 - j].scale(weights[n - 1 - j]);
+            }
+        } else {
+            for j in 0..n {
+                t[j] = s[j].scale(weights[j]);
+            }
+        }
+    }
+    source.reset(cluster.m, cluster.mp);
+    for l in l0..b {
+        let row = source.row(l, &mut scratch.row);
+        let vs = v_scale(l, b);
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let t = &scratch.t[mi * n..(mi + 1) * n];
+            let mut acc = DdComplex::ZERO;
+            for j in 0..n {
+                acc.acc_scaled(t[j].re, t[j].im, row[j]);
+            }
+            let (re, im) = acc.to_f64();
+            let value = Complex64::new(re, im).scale(vs * member.sign(l));
+            let idx = coeffs::flat_index(l, member.m, member.mp);
+            // SAFETY: (l, μ, μ') triples are cluster-exclusive.
+            unsafe { out.write(idx, value) };
+        }
+    }
+}
+
+/// Inverse DWT for one cluster: `S(j; μ, μ') = Σ_l d(l,μ,μ';β_j) f°(l,μ,μ')`.
+///
+/// Reads coefficients from the flat (l,m,m') layout and writes the member
+/// j-vectors into the S-matrix through `smat_out` (cluster-exclusive
+/// vectors — each (μ, μ') belongs to exactly one cluster).
+pub fn inverse_cluster(
+    b: usize,
+    cluster: &Cluster,
+    source: &mut dyn WignerSource,
+    coeff_data: &[Complex64],
+    smat_out: &SyncUnsafeSlice<'_, Complex64>,
+    smat_layout: &SMatrix,
+    scratch: &mut DwtScratch,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    let nm = cluster.members.len();
+    // Accumulate into scratch (zeroed), then scatter once.
+    for v in scratch.t[..nm * n].iter_mut() {
+        *v = Complex64::zero();
+    }
+    source.reset(cluster.m, cluster.mp);
+    for l in l0..b {
+        let row = source.row(l, &mut scratch.row);
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let c = coeff_data[coeffs::flat_index(l, member.m, member.mp)]
+                .scale(member.sign(l));
+            let t = &mut scratch.t[mi * n..(mi + 1) * n];
+            // axpy: t[j] += c · row[j] — reflection applied at scatter.
+            for j in 0..n {
+                t[j] += c.scale(row[j]);
+            }
+        }
+    }
+    for (mi, member) in cluster.members.iter().enumerate() {
+        let t = &scratch.t[mi * n..(mi + 1) * n];
+        let base = smat_layout.vec_index(member.m, member.mp);
+        for j in 0..n {
+            let src = if member.reflected { n - 1 - j } else { j };
+            // SAFETY: each (μ, μ') j-vector belongs to exactly one cluster.
+            unsafe { smat_out.write(base + j, t[src]) };
+        }
+    }
+}
+
+/// Tables-path inverse DWT with two degrees fused per sweep.
+///
+/// The plain inverse axpy does one load+store of the member accumulator
+/// per (l, j) pair; with precomputed tables both row l and row l+1 are
+/// available, so fusing `t[j] += c_l·d_l[j] + c_{l+1}·d_{l+1}[j]` halves
+/// the store traffic — the inverse kernel is store-bound (EXPERIMENTS.md
+/// §Perf records the effect).
+pub fn inverse_cluster_tables_fused(
+    b: usize,
+    cluster: &Cluster,
+    tables: &crate::dwt::tables::WignerTables,
+    coeff_data: &[Complex64],
+    smat_out: &SyncUnsafeSlice<'_, Complex64>,
+    smat_layout: &SMatrix,
+    scratch: &mut DwtScratch,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    let nm = cluster.members.len();
+    for v in scratch.t[..nm * n].iter_mut() {
+        *v = Complex64::zero();
+    }
+    let mut l = l0;
+    while l < b {
+        if l + 1 < b {
+            let row0 = tables.row(cluster.m, cluster.mp, l);
+            let row1 = tables.row(cluster.m, cluster.mp, l + 1);
+            for (mi, member) in cluster.members.iter().enumerate() {
+                let c0 = coeff_data[coeffs::flat_index(l, member.m, member.mp)]
+                    .scale(member.sign(l));
+                let c1 = coeff_data[coeffs::flat_index(l + 1, member.m, member.mp)]
+                    .scale(member.sign(l + 1));
+                let t = &mut scratch.t[mi * n..(mi + 1) * n];
+                for j in 0..n {
+                    t[j] += c0.scale(row0[j]) + c1.scale(row1[j]);
+                }
+            }
+            l += 2;
+        } else {
+            let row0 = tables.row(cluster.m, cluster.mp, l);
+            for (mi, member) in cluster.members.iter().enumerate() {
+                let c0 = coeff_data[coeffs::flat_index(l, member.m, member.mp)]
+                    .scale(member.sign(l));
+                let t = &mut scratch.t[mi * n..(mi + 1) * n];
+                for j in 0..n {
+                    t[j] += c0.scale(row0[j]);
+                }
+            }
+            l += 1;
+        }
+    }
+    for (mi, member) in cluster.members.iter().enumerate() {
+        let t = &scratch.t[mi * n..(mi + 1) * n];
+        let base = smat_layout.vec_index(member.m, member.mp);
+        for j in 0..n {
+            let src = if member.reflected { n - 1 - j } else { j };
+            // SAFETY: each (μ, μ') j-vector belongs to exactly one cluster.
+            unsafe { smat_out.write(base + j, t[src]) };
+        }
+    }
+}
+
+/// Extended-precision inverse DWT: the l-accumulation per (member, j)
+/// runs in double-double, matching the paper's extended-precision
+/// iDWT at accuracy-critical bandwidths.
+pub fn inverse_cluster_extended(
+    b: usize,
+    cluster: &Cluster,
+    source: &mut dyn WignerSource,
+    coeff_data: &[Complex64],
+    smat_out: &SyncUnsafeSlice<'_, Complex64>,
+    smat_layout: &SMatrix,
+    scratch: &mut DwtScratch,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    let nm = cluster.members.len();
+    scratch.xacc.clear();
+    scratch.xacc.resize(nm * n, DdComplex::ZERO);
+    source.reset(cluster.m, cluster.mp);
+    for l in l0..b {
+        let row = source.row(l, &mut scratch.row);
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let c = coeff_data[coeffs::flat_index(l, member.m, member.mp)]
+                .scale(member.sign(l));
+            let acc = &mut scratch.xacc[mi * n..(mi + 1) * n];
+            for j in 0..n {
+                acc[j].acc_scaled(c.re, c.im, row[j]);
+            }
+        }
+    }
+    for (mi, member) in cluster.members.iter().enumerate() {
+        let acc = &scratch.xacc[mi * n..(mi + 1) * n];
+        let base = smat_layout.vec_index(member.m, member.mp);
+        for j in 0..n {
+            let src = if member.reflected { n - 1 - j } else { j };
+            let (re, im) = acc[src].to_f64();
+            // SAFETY: each (μ, μ') j-vector belongs to exactly one cluster.
+            unsafe { smat_out.write(base + j, Complex64::new(re, im)) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dwt::tables::{OnTheFlySource, WignerTables};
+    use crate::prng::Xoshiro256;
+    use crate::so3::coeffs::So3Coeffs;
+    use crate::so3::quadrature;
+    use crate::so3::sampling::GridAngles;
+    use crate::so3::wigner::d_single;
+
+    /// Scalar oracle: forward DWT for one order pair straight from the
+    /// definition (Eq. 5's β-sum).
+    fn dwt_pair_oracle(
+        b: usize,
+        m: i64,
+        mp: i64,
+        smat: &SMatrix,
+        weights: &[f64],
+        betas: &[f64],
+    ) -> Vec<Complex64> {
+        let l0 = m.unsigned_abs().max(mp.unsigned_abs()) as usize;
+        let s = smat.vec(m, mp);
+        (l0..b)
+            .map(|l| {
+                let mut acc = Complex64::zero();
+                for j in 0..2 * b {
+                    acc += s[j].scale(weights[j] * d_single(l, m, mp, betas[j]));
+                }
+                acc.scale(v_scale(l, b))
+            })
+            .collect()
+    }
+
+    fn random_smat(b: usize, seed: u64) -> SMatrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut smat = SMatrix::zeros(b).unwrap();
+        for v in smat.as_mut_slice().iter_mut() {
+            *v = Complex64::new(rng.next_signed(), rng.next_signed());
+        }
+        smat
+    }
+
+    #[test]
+    fn forward_cluster_matches_pair_oracle() {
+        let b = 8usize;
+        let angles = GridAngles::new(b).unwrap();
+        let weights = quadrature::weights(b).unwrap();
+        let smat = random_smat(b, 3);
+        let mut out = vec![Complex64::zero(); crate::so3::coeffs::coeff_count(b)];
+        let mut scratch = DwtScratch::new(b);
+        let mut source = OnTheFlySource::new(&angles.betas);
+        for (m, mp) in [(0i64, 0i64), (1, 0), (3, 3), (5, 2), (7, 6)] {
+            let cluster = Cluster::symmetric(m, mp);
+            {
+                let shared = SyncUnsafeSlice::new(&mut out);
+                forward_cluster(b, &cluster, &mut source, &weights, &smat, &shared, &mut scratch);
+            }
+            for member in &cluster.members {
+                let want = dwt_pair_oracle(b, member.m, member.mp, &smat, &weights, &angles.betas);
+                let l0 = cluster.l_min();
+                for (i, l) in (l0..b).enumerate() {
+                    let got = out[coeffs::flat_index(l, member.m, member.mp)];
+                    assert!(
+                        (got - want[i]).abs() < 1e-12,
+                        "base=({m},{mp}) member=({},{}) l={l}: {got} vs {}",
+                        member.m,
+                        member.mp,
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_matches_with_precomputed_tables() {
+        let b = 6usize;
+        let angles = GridAngles::new(b).unwrap();
+        let weights = quadrature::weights(b).unwrap();
+        let smat = random_smat(b, 9);
+        let tables = WignerTables::build(b, &angles.betas);
+        let mut out_fly = vec![Complex64::zero(); crate::so3::coeffs::coeff_count(b)];
+        let mut out_tab = vec![Complex64::zero(); crate::so3::coeffs::coeff_count(b)];
+        let mut scratch = DwtScratch::new(b);
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                let cluster = Cluster::symmetric(m, mp);
+                {
+                    let shared = SyncUnsafeSlice::new(&mut out_fly);
+                    let mut src = OnTheFlySource::new(&angles.betas);
+                    forward_cluster(b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch);
+                }
+                {
+                    let shared = SyncUnsafeSlice::new(&mut out_tab);
+                    let mut src = tables.source();
+                    forward_cluster(b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch);
+                }
+            }
+        }
+        for (a, c) in out_fly.iter().zip(out_tab.iter()) {
+            assert!((*a - *c).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn extended_precision_agrees_with_double() {
+        let b = 6usize;
+        let angles = GridAngles::new(b).unwrap();
+        let weights = quadrature::weights(b).unwrap();
+        let smat = random_smat(b, 17);
+        let mut out_d = vec![Complex64::zero(); crate::so3::coeffs::coeff_count(b)];
+        let mut out_x = vec![Complex64::zero(); crate::so3::coeffs::coeff_count(b)];
+        let mut scratch = DwtScratch::new(b);
+        let cluster = Cluster::symmetric(4, 2);
+        {
+            let shared = SyncUnsafeSlice::new(&mut out_d);
+            let mut src = OnTheFlySource::new(&angles.betas);
+            forward_cluster(b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch);
+        }
+        {
+            let shared = SyncUnsafeSlice::new(&mut out_x);
+            let mut src = OnTheFlySource::new(&angles.betas);
+            forward_cluster_extended(b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch);
+        }
+        for member in &cluster.members {
+            for l in cluster.l_min()..b {
+                let i = coeffs::flat_index(l, member.m, member.mp);
+                assert!((out_d[i] - out_x[i]).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_extended_agrees_with_double() {
+        let b = 6usize;
+        let angles = GridAngles::new(b).unwrap();
+        let coeffs_in = So3Coeffs::random(b, 31);
+        let layout = SMatrix::zeros(b).unwrap();
+        let mut scratch = DwtScratch::new(b);
+        let mut s_d = SMatrix::zeros(b).unwrap();
+        let mut s_x = SMatrix::zeros(b).unwrap();
+        let cluster = Cluster::symmetric(3, 1);
+        {
+            let shared = SyncUnsafeSlice::new(s_d.as_mut_slice());
+            let mut src = OnTheFlySource::new(&angles.betas);
+            inverse_cluster(
+                b, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout, &mut scratch,
+            );
+        }
+        {
+            let shared = SyncUnsafeSlice::new(s_x.as_mut_slice());
+            let mut src = OnTheFlySource::new(&angles.betas);
+            inverse_cluster_extended(
+                b, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout, &mut scratch,
+            );
+        }
+        for member in &cluster.members {
+            let a = s_d.vec(member.m, member.mp);
+            let c = s_x.vec(member.m, member.mp);
+            for (x, y) in a.iter().zip(c.iter()) {
+                assert!((*x - *y).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_cluster_matches_synthesis_oracle() {
+        let b = 8usize;
+        let angles = GridAngles::new(b).unwrap();
+        let coeffs_in = So3Coeffs::random(b, 5);
+        let mut smat = SMatrix::zeros(b).unwrap();
+        let layout = SMatrix::zeros(b).unwrap();
+        let mut scratch = DwtScratch::new(b);
+        let mut source = OnTheFlySource::new(&angles.betas);
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                let cluster = Cluster::symmetric(m, mp);
+                let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
+                inverse_cluster(
+                    b,
+                    &cluster,
+                    &mut source,
+                    coeffs_in.as_slice(),
+                    &shared,
+                    &layout,
+                    &mut scratch,
+                );
+            }
+        }
+        // Oracle: S(j; m, m') = Σ_l d(l,m,m';β_j)·f°(l,m,m').
+        for m in (1 - (b as i64))..b as i64 {
+            for mp in (1 - (b as i64))..b as i64 {
+                let l0 = m.unsigned_abs().max(mp.unsigned_abs()) as usize;
+                let got = smat.vec(m, mp);
+                for j in 0..2 * b {
+                    let mut want = Complex64::zero();
+                    for l in l0..b {
+                        want += coeffs_in
+                            .at(l, m, mp)
+                            .scale(d_single(l, m, mp, angles.betas[j]));
+                    }
+                    assert!(
+                        (got[j] - want).abs() < 1e-12,
+                        "({m},{mp}) j={j}: {} vs {want}",
+                        got[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_then_inverse_is_projection_identity() {
+        // By quadrature orthogonality, DWT ∘ iDWT on the coefficient side
+        // is the identity *up to the 1/(4B²) factor* that the FFT stage
+        // contributes in the full transform (the unnormalized 2-D FFT
+        // roundtrip supplies the missing (2B)² = 4B²).
+        let b = 8usize;
+        let angles = GridAngles::new(b).unwrap();
+        let weights = quadrature::weights(b).unwrap();
+        let coeffs_in = So3Coeffs::random(b, 7);
+        let mut smat = SMatrix::zeros(b).unwrap();
+        let layout = SMatrix::zeros(b).unwrap();
+        let mut back = vec![Complex64::zero(); crate::so3::coeffs::coeff_count(b)];
+        let mut scratch = DwtScratch::new(b);
+        let mut source = OnTheFlySource::new(&angles.betas);
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                let cluster = Cluster::symmetric(m, mp);
+                let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
+                inverse_cluster(
+                    b,
+                    &cluster,
+                    &mut source,
+                    coeffs_in.as_slice(),
+                    &shared,
+                    &layout,
+                    &mut scratch,
+                );
+            }
+        }
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                let cluster = Cluster::symmetric(m, mp);
+                let shared = SyncUnsafeSlice::new(&mut back);
+                forward_cluster(b, &cluster, &mut source, &weights, &smat, &shared, &mut scratch);
+            }
+        }
+        let scale = (4 * b * b) as f64;
+        for v in back.iter_mut() {
+            *v = v.scale(scale);
+        }
+        let back = So3Coeffs::from_vec(b, back).unwrap();
+        let err = coeffs_in.max_abs_error(&back);
+        assert!(err < 1e-12, "4B²·(DWT∘iDWT) identity error {err}");
+    }
+}

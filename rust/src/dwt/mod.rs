@@ -1,0 +1,245 @@
+//! The discrete Wigner transform (DWT) and its inverse — the FSOFT's
+//! compute hot spot (paper Section 2.4).
+//!
+//! For one order pair (m, m') the forward DWT maps the 2B intermediate
+//! values `S(m, m'; j)` to the B−l₀ coefficients
+//!
+//! `f°(l, m, m') = V(l) · Σ_j w_B(j) · d(l, m, m'; β_j) · S(m, m'; j)`,
+//!
+//! with `V(l) = (2l+1)/(8πB)`; the inverse DWT is the transpose (no
+//! weights, no V):  `S(j; m, m') = Σ_l d(l, m, m'; β_j) · f°(l, m, m')`.
+//!
+//! Submodules:
+//! * [`cluster`] — symmetry clusters: the ≤8 order pairs that share one
+//!   Wigner-d evaluation via paper Eq. 3 (the paper's *communication /
+//!   agglomeration* design), with the m=0 / m'=0 / m=m' special cases.
+//! * [`kernels`] — the cluster-at-a-time forward/inverse kernels (matvec
+//!   dataflow, f64 and double-double variants).
+//! * [`clenshaw`] — the Clenshaw-recurrence dataflow (the paper's §5
+//!   "next version" improvement, implemented here as an extension).
+//! * [`tables`] — precomputed Wigner-d tables with symmetry-shared
+//!   storage (what the paper's benchmark build used), or on-the-fly
+//!   generation for memory-critical bandwidths.
+
+pub mod clenshaw;
+pub mod cluster;
+pub mod kernels;
+pub mod tables;
+
+use crate::error::{Error, Result};
+use crate::fft::Complex64;
+
+/// Coefficient scale of the forward DWT: V(l) = (2l+1)/(8πB).
+#[inline]
+pub fn v_scale(l: usize, b: usize) -> f64 {
+    (2 * l + 1) as f64 / (8.0 * std::f64::consts::PI * b as f64)
+}
+
+/// Which dataflow evaluates the DWT/iDWT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DwtAlgorithm {
+    /// Row-wise matrix–vector products against Wigner-d rows (the paper's
+    /// benchmarked version; vectorizes over the ≤8 cluster members).
+    MatVec,
+    /// Clenshaw-recurrence dataflow (paper §5 outlook): no Wigner rows are
+    /// materialized; the iDWT runs the classical Clenshaw downward
+    /// recursion per β-node, the DWT its transposed (adjoint) form.
+    Clenshaw,
+}
+
+/// Numerical precision of the DWT accumulation (paper §4 uses 80-bit
+/// extended precision; we use double-double, see [`crate::xprec`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Double,
+    Extended,
+}
+
+/// The intermediate S-matrix: `S(m, m'; j)` for m, m' ∈ {1−B, …, B−1},
+/// stored `[m-index][m'-index][j]` with **contiguous j** — the layout the
+/// DWT stage reads/writes linearly. The FFT stage produces/consumes the
+/// per-slice layout, and an explicit transposition pass converts between
+/// the two (the paper discusses exactly this transposition cost in §5).
+#[derive(Debug, Clone)]
+pub struct SMatrix {
+    b: usize,
+    data: Vec<Complex64>,
+}
+
+impl SMatrix {
+    /// Number of distinct orders per axis: 2B−1.
+    #[inline]
+    pub fn orders(b: usize) -> usize {
+        2 * b - 1
+    }
+
+    pub fn zeros(b: usize) -> Result<Self> {
+        if b == 0 {
+            return Err(Error::InvalidBandwidth(b));
+        }
+        let o = Self::orders(b);
+        Ok(Self {
+            b,
+            data: vec![Complex64::zero(); o * o * 2 * b],
+        })
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.b
+    }
+
+    /// Flat offset of the j-vector for orders (m, m').
+    #[inline]
+    pub fn vec_index(&self, m: i64, mp: i64) -> usize {
+        let b = self.b as i64;
+        debug_assert!(m.abs() < b && mp.abs() < b);
+        let o = Self::orders(self.b) as i64;
+        let mi = m + b - 1;
+        let mpi = mp + b - 1;
+        ((mi * o + mpi) * 2 * b) as usize
+    }
+
+    /// The j-vector S(m, m'; ·).
+    #[inline]
+    pub fn vec(&self, m: i64, mp: i64) -> &[Complex64] {
+        let i = self.vec_index(m, mp);
+        &self.data[i..i + 2 * self.b]
+    }
+
+    #[inline]
+    pub fn vec_mut(&mut self, m: i64, mp: i64) -> &mut [Complex64] {
+        let i = self.vec_index(m, mp);
+        &mut self.data[i..i + 2 * self.b]
+    }
+
+    pub fn as_slice(&self) -> &[Complex64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [Complex64] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Gather from per-slice FFT output: `self[m][m'][j] = slice_j[u][v]`
+    /// with u = m mod 2B, v = m' mod 2B. `slices` is the β-major grid
+    /// buffer (each slice a 2B×2B row-major matrix).
+    pub fn gather_from_slices(&mut self, slices: &[Complex64]) {
+        let b = self.b as i64;
+        let n = 2 * self.b;
+        assert_eq!(slices.len(), n * n * n);
+        for m in (1 - b)..b {
+            let u = m.rem_euclid(n as i64) as usize;
+            for mp in (1 - b)..b {
+                let v = mp.rem_euclid(n as i64) as usize;
+                let base = self.vec_index(m, mp);
+                for j in 0..n {
+                    self.data[base + j] = slices[(j * n + u) * n + v];
+                }
+            }
+        }
+    }
+
+    /// Scatter into per-slice buffers for the inverse FFT stage, zeroing
+    /// the unused Nyquist row/column (|order| = B is not part of the
+    /// spectrum).
+    pub fn scatter_to_slices(&self, slices: &mut [Complex64]) {
+        let b = self.b as i64;
+        let n = 2 * self.b;
+        assert_eq!(slices.len(), n * n * n);
+        for v in slices.iter_mut() {
+            *v = Complex64::zero();
+        }
+        for m in (1 - b)..b {
+            let u = m.rem_euclid(n as i64) as usize;
+            for mp in (1 - b)..b {
+                let v = mp.rem_euclid(n as i64) as usize;
+                let base = self.vec_index(m, mp);
+                for j in 0..n {
+                    slices[(j * n + u) * n + v] = self.data[base + j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smatrix_indexing_disjoint_and_total() {
+        let b = 3;
+        let s = SMatrix::zeros(b).unwrap();
+        let o = SMatrix::orders(b);
+        assert_eq!(s.len(), o * o * 2 * b);
+        let mut seen = vec![false; s.len()];
+        for m in -2i64..=2 {
+            for mp in -2i64..=2 {
+                let i = s.vec_index(m, mp);
+                for j in 0..2 * b {
+                    assert!(!seen[i + j]);
+                    seen[i + j] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let b = 4;
+        let n = 2 * b;
+        let mut smat = SMatrix::zeros(b).unwrap();
+        // Fill S with distinct values, scatter to slices, gather back.
+        for (idx, v) in smat.as_mut_slice().iter_mut().enumerate() {
+            *v = Complex64::new(idx as f64, -(idx as f64));
+        }
+        let reference = smat.clone();
+        let mut slices = vec![Complex64::zero(); n * n * n];
+        smat.scatter_to_slices(&mut slices);
+        let mut back = SMatrix::zeros(b).unwrap();
+        back.gather_from_slices(&slices);
+        for (a, c) in reference.as_slice().iter().zip(back.as_slice()) {
+            assert_eq!(*a, *c);
+        }
+    }
+
+    #[test]
+    fn scatter_zeroes_nyquist_bins() {
+        let b = 2;
+        let n = 2 * b;
+        let mut smat = SMatrix::zeros(b).unwrap();
+        for v in smat.as_mut_slice().iter_mut() {
+            *v = Complex64::one();
+        }
+        let mut slices = vec![Complex64::new(9.0, 9.0); n * n * n];
+        smat.scatter_to_slices(&mut slices);
+        // Frequency u = B (here 2) is the unused Nyquist row: stays zero.
+        for j in 0..n {
+            for v in 0..n {
+                assert_eq!(slices[(j * n + b) * n + v], Complex64::zero());
+            }
+            for u in 0..n {
+                assert_eq!(slices[(j * n + u) * n + b], Complex64::zero());
+            }
+        }
+    }
+
+    #[test]
+    fn v_scale_formula() {
+        let b = 8;
+        assert!((v_scale(0, b) - 1.0 / (8.0 * std::f64::consts::PI * 8.0)).abs() < 1e-18);
+        assert!(
+            (v_scale(5, b) - 11.0 / (8.0 * std::f64::consts::PI * 8.0)).abs() < 1e-16
+        );
+    }
+}

@@ -1,0 +1,372 @@
+//! Wigner-d row sources: precomputed tables vs. on-the-fly recurrence.
+//!
+//! The paper's benchmark build precomputes the DWT matrices, exploiting
+//! all seven symmetries "in the precomputation of the matrices using the
+//! three-term recurrence relation". Symmetry-shared storage keeps only
+//! the base pairs m ≥ m' ≥ 0 (≈⅛ of the full table set) — exactly what
+//! the clusters need. At memory-critical bandwidths the same rows can be
+//! streamed from the recurrence instead ([`OnTheFlySource`]), trading
+//! ~2× arithmetic for O(B) instead of O(B⁴) memory.
+
+use crate::so3::wigner::WignerRowStepper;
+
+/// Abstract producer of base Wigner-d rows `d(l, m, m'; β_j)` for a fixed
+/// base pair, consumed degree-by-degree (l ascending from the cluster's
+/// l₀). `reset` rebinds the source to a new base pair.
+pub trait WignerSource {
+    fn reset(&mut self, m: i64, mp: i64);
+    /// The row at degree `l`; rows must be requested with l strictly
+    /// increasing between resets. `buf` (len 2B) may be used as backing
+    /// storage; the returned slice is valid until the next call.
+    fn row<'a>(&'a mut self, l: usize, buf: &'a mut [f64]) -> &'a [f64];
+}
+
+/// Streams rows from the three-term recurrence, never materializing a
+/// table. ~zero memory; each cluster pays the recurrence (4 flops per
+/// (l, j) point) once for all its members.
+pub struct OnTheFlySource<'b> {
+    betas: &'b [f64],
+    stepper: Option<WignerRowStepper<f64>>,
+    m: i64,
+    mp: i64,
+}
+
+impl<'b> OnTheFlySource<'b> {
+    pub fn new(betas: &'b [f64]) -> Self {
+        Self {
+            betas,
+            stepper: None,
+            m: 0,
+            mp: 0,
+        }
+    }
+}
+
+impl WignerSource for OnTheFlySource<'_> {
+    fn reset(&mut self, m: i64, mp: i64) {
+        self.m = m;
+        self.mp = mp;
+        self.stepper = Some(WignerRowStepper::new(m, mp, self.betas));
+    }
+
+    fn row<'a>(&'a mut self, l: usize, _buf: &'a mut [f64]) -> &'a [f64] {
+        let stepper = self.stepper.as_mut().expect("reset() before row()");
+        debug_assert!(l >= stepper.l_min(), "row below l0");
+        while stepper.current_l() < l {
+            stepper.advance();
+        }
+        stepper.row()
+    }
+}
+
+/// Precomputed symmetry-shared tables: rows for every base pair
+/// m ≥ m' ≥ 0, packed contiguously.
+#[derive(Debug, Clone)]
+pub struct WignerTables {
+    b: usize,
+    /// Packed rows: for base (m, m'), degrees l₀..B−1, each row 2B long.
+    data: Vec<f64>,
+    /// Offset of base pair (m, m') in `data`.
+    offsets: Vec<usize>,
+}
+
+/// Triangle index of a base pair m ≥ m' ≥ 0 (the paper's σ map, Eq. 7,
+/// restricted to the canonical triangle).
+#[inline]
+pub fn base_index(m: i64, mp: i64) -> usize {
+    debug_assert!(m >= mp && mp >= 0);
+    (m * (m + 1) / 2 + mp) as usize
+}
+
+impl WignerTables {
+    /// Total f64 slots needed for bandwidth `b` (diagnostics / memory
+    /// planning: ~B⁴/3 · 2 entries).
+    pub fn storage_len(b: usize) -> usize {
+        let mut total = 0;
+        for m in 0..b {
+            for mp in 0..=m {
+                let l0 = m.max(mp);
+                total += (b - l0) * 2 * b;
+            }
+        }
+        total
+    }
+
+    /// Build all base tables sequentially. (The parallel executor builds
+    /// them per-cluster on first touch instead; this constructor is for
+    /// the sequential transform and tests.)
+    pub fn build(b: usize, betas: &[f64]) -> Self {
+        assert_eq!(betas.len(), 2 * b);
+        let n_bases = b * (b + 1) / 2;
+        let mut offsets = vec![0usize; n_bases + 1];
+        let mut total = 0usize;
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                offsets[base_index(m, mp)] = total;
+                let l0 = m.max(mp) as usize;
+                total += (b - l0) * 2 * b;
+            }
+        }
+        offsets[n_bases] = total;
+        let mut data = vec![0.0f64; total];
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                let off = offsets[base_index(m, mp)];
+                let l0 = m.max(mp) as usize;
+                let mut stepper: WignerRowStepper<f64> = WignerRowStepper::new(m, mp, betas);
+                for (i, _l) in (l0..b).enumerate() {
+                    let row = stepper.row();
+                    data[off + i * 2 * b..off + (i + 1) * 2 * b].copy_from_slice(row);
+                    stepper.advance();
+                }
+            }
+        }
+        Self { b, data, offsets }
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.b
+    }
+
+    /// Approximate memory footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Row for base pair (m, m') at degree l.
+    #[inline]
+    pub fn row(&self, m: i64, mp: i64, l: usize) -> &[f64] {
+        let l0 = m.max(mp) as usize;
+        debug_assert!(l >= l0 && l < self.b);
+        let off = self.offsets[base_index(m, mp)] + (l - l0) * 2 * self.b;
+        &self.data[off..off + 2 * self.b]
+    }
+
+    /// A [`WignerSource`] view over these tables (shared, cheap).
+    pub fn source(&self) -> TableSource<'_> {
+        TableSource {
+            tables: self,
+            m: 0,
+            mp: 0,
+        }
+    }
+
+    /// Persist to disk so the precomputation (the dominant setup cost at
+    /// large B — the paper precomputes per run) is paid once per machine.
+    /// Format: `SO3W1` magic, LE u64 bandwidth, LE u64 count, raw LE f64s.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::error::Result<()> {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"SO3W1")?;
+        f.write_all(&(self.b as u64).to_le_bytes())?;
+        f.write_all(&(self.data.len() as u64).to_le_bytes())?;
+        for v in &self.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Load tables written by [`Self::save`]; validates magic, bandwidth
+    /// and length.
+    pub fn load(
+        path: impl AsRef<std::path::Path>,
+        expect_b: usize,
+    ) -> crate::error::Result<Self> {
+        use crate::error::Error;
+        use std::io::Read;
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 5];
+        f.read_exact(&mut magic)?;
+        if &magic != b"SO3W1" {
+            return Err(Error::Runtime("wigner table cache: bad magic".into()));
+        }
+        let mut u = [0u8; 8];
+        f.read_exact(&mut u)?;
+        let b = u64::from_le_bytes(u) as usize;
+        if b != expect_b {
+            return Err(Error::Runtime(format!(
+                "wigner table cache: bandwidth {b}, expected {expect_b}"
+            )));
+        }
+        f.read_exact(&mut u)?;
+        let len = u64::from_le_bytes(u) as usize;
+        if len != Self::storage_len(b) {
+            return Err(Error::Runtime("wigner table cache: bad length".into()));
+        }
+        let mut data = vec![0.0f64; len];
+        let mut buf = [0u8; 8];
+        for v in data.iter_mut() {
+            f.read_exact(&mut buf)?;
+            *v = f64::from_le_bytes(buf);
+        }
+        // Rebuild offsets (derived, not stored).
+        let n_bases = b * (b + 1) / 2;
+        let mut offsets = vec![0usize; n_bases + 1];
+        let mut total = 0usize;
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                offsets[base_index(m, mp)] = total;
+                let l0 = m.max(mp) as usize;
+                total += (b - l0) * 2 * b;
+            }
+        }
+        offsets[n_bases] = total;
+        Ok(Self { b, data, offsets })
+    }
+}
+
+/// Table-backed row source.
+pub struct TableSource<'t> {
+    tables: &'t WignerTables,
+    m: i64,
+    mp: i64,
+}
+
+impl WignerSource for TableSource<'_> {
+    fn reset(&mut self, m: i64, mp: i64) {
+        debug_assert!(m >= mp && mp >= 0, "tables store canonical bases only");
+        self.m = m;
+        self.mp = mp;
+    }
+
+    fn row<'a>(&'a mut self, l: usize, _buf: &'a mut [f64]) -> &'a [f64] {
+        self.tables.row(self.m, self.mp, l)
+    }
+}
+
+/// Storage strategy selector used by the transform configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WignerStorage {
+    /// Precompute symmetry-shared tables (paper's benchmarked setup).
+    Precomputed,
+    /// Stream rows from the recurrence (memory-critical bandwidths).
+    OnTheFly,
+}
+
+impl WignerStorage {
+    /// Pick a default: precompute while the tables stay under `budget`
+    /// bytes, stream otherwise (the B=512 regime of the paper).
+    pub fn auto(b: usize, budget: usize) -> Self {
+        if WignerTables::storage_len(b) * 8 <= budget {
+            WignerStorage::Precomputed
+        } else {
+            WignerStorage::OnTheFly
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::sampling::GridAngles;
+    use crate::so3::wigner::d_single;
+
+    #[test]
+    fn tables_match_direct_evaluation() {
+        let b = 8;
+        let angles = GridAngles::new(b).unwrap();
+        let tables = WignerTables::build(b, &angles.betas);
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                let l0 = m.max(mp) as usize;
+                for l in l0..b {
+                    let row = tables.row(m, mp, l);
+                    for (j, &bj) in angles.betas.iter().enumerate() {
+                        let want = d_single(l, m, mp, bj);
+                        assert!(
+                            (row[j] - want).abs() < 1e-12,
+                            "m={m} mp={mp} l={l} j={j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn storage_len_matches_build() {
+        for b in [1usize, 2, 5, 8] {
+            let angles = GridAngles::new(b).unwrap();
+            let tables = WignerTables::build(b, &angles.betas);
+            assert_eq!(tables.data.len(), WignerTables::storage_len(b));
+        }
+    }
+
+    #[test]
+    fn base_index_is_triangular() {
+        assert_eq!(base_index(0, 0), 0);
+        assert_eq!(base_index(1, 0), 1);
+        assert_eq!(base_index(1, 1), 2);
+        assert_eq!(base_index(2, 0), 3);
+        assert_eq!(base_index(3, 3), 9);
+        // Bijective over the triangle.
+        let mut seen = std::collections::HashSet::new();
+        for m in 0..20i64 {
+            for mp in 0..=m {
+                assert!(seen.insert(base_index(m, mp)));
+            }
+        }
+        assert_eq!(seen.len(), 20 * 21 / 2);
+    }
+
+    #[test]
+    fn on_the_fly_source_matches_tables() {
+        let b = 6;
+        let angles = GridAngles::new(b).unwrap();
+        let tables = WignerTables::build(b, &angles.betas);
+        let mut fly = OnTheFlySource::new(&angles.betas);
+        let mut buf = vec![0.0; 2 * b];
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                fly.reset(m, mp);
+                let l0 = m.max(mp) as usize;
+                for l in l0..b {
+                    let a = fly.row(l, &mut buf).to_vec();
+                    let t = tables.row(m, mp, l);
+                    for (x, y) in a.iter().zip(t.iter()) {
+                        assert!((x - y).abs() < 1e-14);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_storage_thresholds() {
+        // Tiny budget forces on-the-fly; huge budget allows precompute.
+        assert_eq!(WignerStorage::auto(64, 100), WignerStorage::OnTheFly);
+        assert_eq!(
+            WignerStorage::auto(8, 1 << 30),
+            WignerStorage::Precomputed
+        );
+    }
+
+    #[test]
+    fn disk_cache_roundtrips() {
+        let b = 6;
+        let angles = GridAngles::new(b).unwrap();
+        let tables = WignerTables::build(b, &angles.betas);
+        let path = std::env::temp_dir().join(format!("so3ft-wcache-{}.bin", std::process::id()));
+        tables.save(&path).unwrap();
+        let loaded = WignerTables::load(&path, b).unwrap();
+        assert_eq!(tables.data, loaded.data);
+        assert_eq!(tables.offsets, loaded.offsets);
+        // Wrong bandwidth and corrupt magic are clean errors.
+        assert!(WignerTables::load(&path, 7).is_err());
+        std::fs::write(&path, b"JUNKJUNKJUNK").unwrap();
+        assert!(WignerTables::load(&path, b).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn memory_scales_quartically() {
+        // Sanity-check the paper's memory-criticality claim: storage
+        // grows ~16× per bandwidth doubling.
+        let s32 = WignerTables::storage_len(32);
+        let s64 = WignerTables::storage_len(64);
+        let ratio = s64 as f64 / s32 as f64;
+        assert!((ratio - 16.0).abs() < 2.0, "ratio {ratio}");
+    }
+}

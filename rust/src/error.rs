@@ -1,0 +1,55 @@
+//! Crate-wide error type.
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors surfaced by the SO(3) transform stack.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Bandwidth outside the supported range (must be ≥ 1).
+    #[error("invalid bandwidth {0}: must be >= 1")]
+    InvalidBandwidth(usize),
+
+    /// A buffer had the wrong length for the requested bandwidth.
+    #[error("shape mismatch: expected {expected} elements, got {got} ({context})")]
+    ShapeMismatch {
+        expected: usize,
+        got: usize,
+        context: &'static str,
+    },
+
+    /// An (l, m, m') index outside the coefficient domain.
+    #[error("coefficient index out of range: l={l}, m={m}, m'={mp} (bandwidth {b})")]
+    IndexOutOfRange { l: i64, m: i64, mp: i64, b: usize },
+
+    /// Thread-count request the pool cannot satisfy.
+    #[error("invalid thread count {0}: must be >= 1")]
+    InvalidThreads(usize),
+
+    /// Configuration file / CLI parsing problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// PJRT / XLA runtime problems (artifact loading, compilation, execution).
+    #[error("xla runtime error: {0}")]
+    Runtime(String),
+
+    /// Requested AOT artifact is not present on disk.
+    #[error("missing artifact for bandwidth {b}: {path} (run `make artifacts`)")]
+    MissingArtifact { b: usize, path: String },
+
+    /// I/O errors (artifact files, config files, trace dumps).
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Helper for shape checks.
+    pub fn shape(expected: usize, got: usize, context: &'static str) -> Self {
+        Error::ShapeMismatch {
+            expected,
+            got,
+            context,
+        }
+    }
+}

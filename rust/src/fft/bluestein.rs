@@ -1,0 +1,163 @@
+//! Bluestein (chirp-z) FFT for arbitrary sizes.
+//!
+//! The FSOFT grid size is `2B`; for the paper's bandwidths this is a power
+//! of two, but the library accepts any `B ≥ 1`, so non-power-of-two sizes
+//! are routed here. The n-point DFT is re-expressed as a circular
+//! convolution of length `M = next_pow2(2n-1)` evaluated with the radix-2
+//! kernel.
+
+use super::radix2::Radix2Plan;
+use super::{Complex64, Sign};
+
+/// Precomputed state for an arbitrary-size Bluestein transform.
+#[derive(Debug, Clone)]
+pub struct BluesteinPlan {
+    n: usize,
+    m: usize,
+    inner: Radix2Plan,
+    /// Chirp a_j = e^{-iπ j² / n} (negative-sign convention).
+    chirp_neg: Vec<Complex64>,
+    /// FFT of the zero-padded conjugate chirp (negative-sign convention),
+    /// i.e. the convolution kernel spectrum.
+    kernel_neg: Vec<Complex64>,
+}
+
+impl BluesteinPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let m = (2 * n - 1).next_power_of_two();
+        let inner = Radix2Plan::new(m);
+        // j² mod 2n keeps the chirp angle bounded for accuracy.
+        let base = -std::f64::consts::PI / n as f64;
+        let chirp_neg: Vec<Complex64> = (0..n)
+            .map(|j| {
+                let sq = (j * j) % (2 * n);
+                Complex64::cis(base * sq as f64)
+            })
+            .collect();
+        // Kernel b_j = conj(chirp_j) laid out circularly: b[0..n] and the
+        // mirrored tail b[m-j] for j = 1..n.
+        let mut kernel = vec![Complex64::zero(); m];
+        for j in 0..n {
+            let v = chirp_neg[j].conj();
+            kernel[j] = v;
+            if j > 0 {
+                kernel[m - j] = v;
+            }
+        }
+        inner.process(&mut kernel, Sign::Negative);
+        Self {
+            n,
+            m,
+            inner,
+            chirp_neg,
+            kernel_neg: kernel,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Out-of-place-capable transform; `data` is transformed in place.
+    pub fn process(&self, data: &mut [Complex64], sign: Sign) {
+        assert_eq!(data.len(), self.n);
+        let n = self.n;
+        let m = self.m;
+        if n == 1 {
+            return;
+        }
+        // For the positive sign: DFT_+(x) = conj(DFT_-(conj(x))).
+        if matches!(sign, Sign::Positive) {
+            for v in data.iter_mut() {
+                *v = v.conj();
+            }
+            self.process(data, Sign::Negative);
+            for v in data.iter_mut() {
+                *v = v.conj();
+            }
+            return;
+        }
+        // y_j = x_j · a_j, zero-padded to m.
+        let mut work = vec![Complex64::zero(); m];
+        for j in 0..n {
+            work[j] = data[j] * self.chirp_neg[j];
+        }
+        self.inner.process(&mut work, Sign::Negative);
+        for (w, k) in work.iter_mut().zip(self.kernel_neg.iter()) {
+            *w = *w * *k;
+        }
+        self.inner.process(&mut work, Sign::Positive);
+        let scale = 1.0 / m as f64;
+        for k in 0..n {
+            data[k] = work[k].scale(scale) * self.chirp_neg[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+    use crate::prng::Xoshiro256;
+
+    fn random_signal(n: usize, seed: u64) -> Vec<Complex64> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|_| Complex64::new(rng.next_signed(), rng.next_signed()))
+            .collect()
+    }
+
+    #[test]
+    fn matches_oracle_awkward_sizes() {
+        for &n in &[1usize, 2, 3, 5, 6, 7, 9, 12, 15, 17, 31, 33, 50, 97, 120] {
+            let plan = BluesteinPlan::new(n);
+            for sign in [Sign::Negative, Sign::Positive] {
+                let x = random_signal(n, n as u64);
+                let want = dft(&x, sign);
+                let mut got = x.clone();
+                plan.process(&mut got, sign);
+                for (a, b) in want.iter().zip(got.iter()) {
+                    assert!(
+                        (*a - *b).abs() < 1e-8 * (1.0 + n as f64),
+                        "n={n} sign={sign:?}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_radix2_on_pow2() {
+        let n = 64;
+        let bs = BluesteinPlan::new(n);
+        let r2 = Radix2Plan::new(n);
+        let x = random_signal(n, 5);
+        let mut a = x.clone();
+        let mut b = x;
+        bs.process(&mut a, Sign::Negative);
+        r2.process(&mut b, Sign::Negative);
+        for (u, v) in a.iter().zip(b.iter()) {
+            assert!((*u - *v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn roundtrip_scales_by_n() {
+        let n = 45;
+        let plan = BluesteinPlan::new(n);
+        let x = random_signal(n, 9);
+        let mut y = x.clone();
+        plan.process(&mut y, Sign::Negative);
+        plan.process(&mut y, Sign::Positive);
+        for (a, b) in x.iter().zip(y.iter()) {
+            assert!((a.scale(n as f64) - *b).abs() < 1e-8 * n as f64);
+        }
+    }
+}

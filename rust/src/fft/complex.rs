@@ -1,0 +1,263 @@
+//! Minimal complex number type (no `num-complex` in the vendored registry).
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A double-precision complex number.
+///
+/// `#[repr(C)]` so a `&[Complex64]` can be reinterpreted as interleaved
+/// `&[f64]` of twice the length when crossing the PJRT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[repr(C)]
+pub struct Complex64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+pub const ZERO: Complex64 = Complex64 { re: 0.0, im: 0.0 };
+pub const ONE: Complex64 = Complex64 { re: 1.0, im: 0.0 };
+pub const I: Complex64 = Complex64 { re: 0.0, im: 1.0 };
+
+impl Complex64 {
+    #[inline]
+    pub const fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    #[inline]
+    pub const fn zero() -> Self {
+        ZERO
+    }
+
+    #[inline]
+    pub const fn one() -> Self {
+        ONE
+    }
+
+    /// `e^{iθ} = cos θ + i sin θ`.
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        let (s, c) = theta.sin_cos();
+        Self { re: c, im: s }
+    }
+
+    /// Complex conjugate.
+    #[inline]
+    pub fn conj(self) -> Self {
+        Self {
+            re: self.re,
+            im: -self.im,
+        }
+    }
+
+    /// Squared modulus |z|².
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Modulus |z|.
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+
+    /// Argument in (-π, π].
+    #[inline]
+    pub fn arg(self) -> f64 {
+        self.im.atan2(self.re)
+    }
+
+    /// Multiply by a real scalar.
+    #[inline]
+    pub fn scale(self, s: f64) -> Self {
+        Self {
+            re: self.re * s,
+            im: self.im * s,
+        }
+    }
+
+    /// Fused multiply-add: `self + a * b` (complex).
+    #[inline]
+    pub fn mul_add(self, a: Complex64, b: Complex64) -> Self {
+        Self {
+            re: self.re + a.re * b.re - a.im * b.im,
+            im: self.im + a.re * b.im + a.im * b.re,
+        }
+    }
+
+    /// Multiplication by ±i without a full complex multiply.
+    #[inline]
+    pub fn mul_i(self) -> Self {
+        Self {
+            re: -self.im,
+            im: self.re,
+        }
+    }
+
+    /// True when both parts are finite.
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+}
+
+impl Add for Complex64 {
+    type Output = Self;
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        Self::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for Complex64 {
+    type Output = Self;
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        Self::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for Complex64 {
+    type Output = Self;
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        Self::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Mul<f64> for Complex64 {
+    type Output = Self;
+    #[inline]
+    fn mul(self, s: f64) -> Self {
+        self.scale(s)
+    }
+}
+
+impl Div for Complex64 {
+    type Output = Self;
+    #[inline]
+    fn div(self, o: Self) -> Self {
+        let d = o.norm_sqr();
+        Self::new(
+            (self.re * o.re + self.im * o.im) / d,
+            (self.im * o.re - self.re * o.im) / d,
+        )
+    }
+}
+
+impl Div<f64> for Complex64 {
+    type Output = Self;
+    #[inline]
+    fn div(self, s: f64) -> Self {
+        Self::new(self.re / s, self.im / s)
+    }
+}
+
+impl Neg for Complex64 {
+    type Output = Self;
+    #[inline]
+    fn neg(self) -> Self {
+        Self::new(-self.re, -self.im)
+    }
+}
+
+impl AddAssign for Complex64 {
+    #[inline]
+    fn add_assign(&mut self, o: Self) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl SubAssign for Complex64 {
+    #[inline]
+    fn sub_assign(&mut self, o: Self) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl MulAssign for Complex64 {
+    #[inline]
+    fn mul_assign(&mut self, o: Self) {
+        *self = *self * o;
+    }
+}
+
+impl Sum for Complex64 {
+    fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+        iter.fold(ZERO, |a, b| a + b)
+    }
+}
+
+impl From<f64> for Complex64 {
+    #[inline]
+    fn from(re: f64) -> Self {
+        Self::new(re, 0.0)
+    }
+}
+
+impl fmt::Display for Complex64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.im >= 0.0 {
+            write!(f, "{}+{}i", self.re, self.im)
+        } else {
+            write!(f, "{}{}i", self.re, self.im)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: Complex64, b: Complex64) -> bool {
+        (a - b).abs() < 1e-12
+    }
+
+    #[test]
+    fn field_ops() {
+        let a = Complex64::new(1.0, 2.0);
+        let b = Complex64::new(-3.0, 0.5);
+        assert!(close(a + b, Complex64::new(-2.0, 2.5)));
+        assert!(close(a - b, Complex64::new(4.0, 1.5)));
+        assert!(close(a * b, Complex64::new(-3.0 - 1.0, 0.5 - 6.0)));
+        assert!(close((a / b) * b, a));
+        assert!(close(-a + a, ZERO));
+    }
+
+    #[test]
+    fn cis_and_conj() {
+        let z = Complex64::cis(0.3);
+        assert!((z.abs() - 1.0).abs() < 1e-15);
+        assert!(close(z * z.conj(), ONE));
+        assert!((z.arg() - 0.3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn mul_i_matches_full_multiply() {
+        let z = Complex64::new(0.7, -1.3);
+        assert!(close(z.mul_i(), z * I));
+    }
+
+    #[test]
+    fn mul_add_matches_separate_ops() {
+        let acc = Complex64::new(0.1, 0.2);
+        let a = Complex64::new(1.5, -0.5);
+        let b = Complex64::new(-2.0, 3.0);
+        assert!(close(acc.mul_add(a, b), acc + a * b));
+    }
+
+    #[test]
+    fn repr_c_interleave() {
+        let v = [Complex64::new(1.0, 2.0), Complex64::new(3.0, 4.0)];
+        let flat: &[f64] =
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const f64, 4) };
+        assert_eq!(flat, &[1.0, 2.0, 3.0, 4.0]);
+    }
+}

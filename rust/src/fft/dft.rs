@@ -1,0 +1,131 @@
+//! Direct O(n²) discrete Fourier transform — the correctness oracle.
+//!
+//! Every fast path in this module tree is tested against this function;
+//! it is intentionally the most literal possible transcription of the
+//! DFT definition.
+
+use super::{Complex64, Sign};
+
+/// Direct DFT: `out[k] = Σ_j in[j] · e^{sign·2πi jk/n}` (unnormalized).
+pub fn dft(input: &[Complex64], sign: Sign) -> Vec<Complex64> {
+    let n = input.len();
+    let mut out = vec![Complex64::zero(); n];
+    if n == 0 {
+        return out;
+    }
+    let base = sign.factor() * std::f64::consts::TAU / n as f64;
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = Complex64::zero();
+        for (j, &x) in input.iter().enumerate() {
+            // Reduce j*k mod n before the trig call to keep the angle small
+            // (accuracy at large n).
+            let jk = (j * k) % n;
+            acc = acc.mul_add(x, Complex64::cis(base * jk as f64));
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// Direct 2-D DFT on a row-major `rows × cols` matrix (oracle for fft2).
+pub fn dft2(input: &[Complex64], rows: usize, cols: usize, sign: Sign) -> Vec<Complex64> {
+    assert_eq!(input.len(), rows * cols);
+    let mut out = vec![Complex64::zero(); rows * cols];
+    let br = sign.factor() * std::f64::consts::TAU / rows as f64;
+    let bc = sign.factor() * std::f64::consts::TAU / cols as f64;
+    for u in 0..rows {
+        for v in 0..cols {
+            let mut acc = Complex64::zero();
+            for r in 0..rows {
+                for c in 0..cols {
+                    let phase = br * ((r * u) % rows) as f64 + bc * ((c * v) % cols) as f64;
+                    acc = acc.mul_add(input[r * cols + c], Complex64::cis(phase));
+                }
+            }
+            out[u * cols + v] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dft_of_impulse_is_flat() {
+        let mut x = vec![Complex64::zero(); 8];
+        x[0] = Complex64::one();
+        for y in dft(&x, Sign::Negative) {
+            assert!((y - Complex64::one()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dft_of_constant_is_impulse() {
+        let x = vec![Complex64::one(); 8];
+        let y = dft(&x, Sign::Negative);
+        assert!((y[0] - Complex64::new(8.0, 0.0)).abs() < 1e-12);
+        for v in &y[1..] {
+            assert!(v.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn forward_then_backward_scales_by_n() {
+        let x: Vec<Complex64> = (0..12)
+            .map(|i| Complex64::new(i as f64, (i * i) as f64 * 0.1))
+            .collect();
+        let y = dft(&x, Sign::Negative);
+        let z = dft(&y, Sign::Positive);
+        for (a, b) in x.iter().zip(z.iter()) {
+            assert!((a.scale(12.0) - *b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dft_single_tone() {
+        // x_j = e^{2πi·3j/16}  →  positive-sign DFT peaks at k = n-3,
+        // negative-sign DFT peaks at k = 3.
+        let n = 16;
+        let x: Vec<Complex64> = (0..n)
+            .map(|j| Complex64::cis(std::f64::consts::TAU * 3.0 * j as f64 / n as f64))
+            .collect();
+        let y = dft(&x, Sign::Negative);
+        for (k, v) in y.iter().enumerate() {
+            let expect = if k == 3 { n as f64 } else { 0.0 };
+            assert!(
+                (v.abs() - expect).abs() < 1e-9,
+                "bin {k}: {} vs {expect}",
+                v.abs()
+            );
+        }
+    }
+
+    #[test]
+    fn dft2_matches_row_col_composition() {
+        let rows = 4;
+        let cols = 6;
+        let x: Vec<Complex64> = (0..rows * cols)
+            .map(|i| Complex64::new((i % 5) as f64 - 2.0, (i % 3) as f64))
+            .collect();
+        // Row-column decomposition using the 1-D oracle.
+        let mut tmp = x.clone();
+        for r in 0..rows {
+            let row = dft(&tmp[r * cols..(r + 1) * cols], Sign::Negative);
+            tmp[r * cols..(r + 1) * cols].copy_from_slice(&row);
+        }
+        let mut cols_out = tmp.clone();
+        for c in 0..cols {
+            let col: Vec<Complex64> = (0..rows).map(|r| tmp[r * cols + c]).collect();
+            let colf = dft(&col, Sign::Negative);
+            for r in 0..rows {
+                cols_out[r * cols + c] = colf[r];
+            }
+        }
+        let direct = dft2(&x, rows, cols, Sign::Negative);
+        for (a, b) in cols_out.iter().zip(direct.iter()) {
+            assert!((*a - *b).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! From-scratch FFT substrate.
+//!
+//! The paper uses FFTW's sequential 1-D FFT, composed into a 2-D transform
+//! with OpenMP. There is no FFT crate in the vendored registry, so the
+//! substrate is built here:
+//!
+//! * [`complex`] — a minimal `Complex64` value type.
+//! * [`dft`] — the O(n²) direct DFT, used as the correctness oracle.
+//! * [`radix2`] — iterative in-place radix-2 Cooley–Tukey for power-of-two
+//!   sizes (the FSOFT grid size `2B` is a power of two for all paper
+//!   bandwidths).
+//! * [`bluestein`] — chirp-z fallback so arbitrary (non-power-of-two)
+//!   bandwidths work too.
+//! * [`plan`] — twiddle/bit-reversal caching and algorithm dispatch.
+//! * [`fft2`] — the 2-D transform over the (α, γ) axes of one β-slice.
+//!
+//! Sign convention: `Sign::Negative` is the classical *forward* DFT
+//! `X_k = Σ_j x_j e^{-2πi jk/n}`; `Sign::Positive` flips the exponent.
+//! Neither direction normalizes — callers own the 1/n factors, because
+//! the SO(3) quadrature absorbs all normalization into its own weights.
+
+pub mod bluestein;
+pub mod complex;
+pub mod dft;
+pub mod fft2;
+pub mod plan;
+pub mod radix2;
+
+pub use complex::Complex64;
+pub use plan::{FftPlan, FftPlanner};
+
+/// Exponent sign of the transform kernel `e^{sign · 2πi jk / n}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Sign {
+    /// `e^{-2πi jk/n}` — the classical forward DFT.
+    Negative,
+    /// `e^{+2πi jk/n}` — the (unnormalized) inverse kernel.
+    Positive,
+}
+
+impl Sign {
+    /// The sign as a float factor on the angle.
+    #[inline]
+    pub fn factor(self) -> f64 {
+        match self {
+            Sign::Negative => -1.0,
+            Sign::Positive => 1.0,
+        }
+    }
+
+    /// The opposite sign.
+    #[inline]
+    pub fn flip(self) -> Sign {
+        match self {
+            Sign::Negative => Sign::Positive,
+            Sign::Positive => Sign::Negative,
+        }
+    }
+}

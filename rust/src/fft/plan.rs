@@ -1,0 +1,116 @@
+//! Algorithm dispatch and plan caching.
+//!
+//! [`FftPlan`] picks radix-2 for power-of-two sizes (the common case:
+//! the SO(3) grid edge `2B` is a power of two for all paper bandwidths)
+//! and Bluestein otherwise. [`FftPlanner`] memoizes plans by size so the
+//! twiddle tables are built once and shared (`Arc`) across worker threads.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::bluestein::BluesteinPlan;
+use super::radix2::Radix2Plan;
+use super::{Complex64, Sign};
+
+/// A prepared 1-D transform of a fixed size.
+#[derive(Debug, Clone)]
+pub enum FftPlan {
+    Radix2(Radix2Plan),
+    Bluestein(BluesteinPlan),
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "FFT size must be >= 1");
+        if n.is_power_of_two() {
+            FftPlan::Radix2(Radix2Plan::new(n))
+        } else {
+            FftPlan::Bluestein(BluesteinPlan::new(n))
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            FftPlan::Radix2(p) => p.len(),
+            FftPlan::Bluestein(p) => p.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// In-place unnormalized transform.
+    #[inline]
+    pub fn process(&self, data: &mut [Complex64], sign: Sign) {
+        match self {
+            FftPlan::Radix2(p) => p.process(data, sign),
+            FftPlan::Bluestein(p) => p.process(data, sign),
+        }
+    }
+}
+
+/// Thread-safe plan cache.
+#[derive(Debug, Default)]
+pub struct FftPlanner {
+    cache: Mutex<HashMap<usize, Arc<FftPlan>>>,
+}
+
+impl FftPlanner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch (or build) the plan for size `n`.
+    pub fn plan(&self, n: usize) -> Arc<FftPlan> {
+        let mut cache = self.cache.lock().expect("planner poisoned");
+        cache
+            .entry(n)
+            .or_insert_with(|| Arc::new(FftPlan::new(n)))
+            .clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+    use crate::prng::Xoshiro256;
+
+    #[test]
+    fn dispatch_matches_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for &n in &[8usize, 16, 10, 21] {
+            let x: Vec<Complex64> = (0..n)
+                .map(|_| Complex64::new(rng.next_signed(), rng.next_signed()))
+                .collect();
+            let plan = FftPlan::new(n);
+            assert_eq!(plan.len(), n);
+            let mut got = x.clone();
+            plan.process(&mut got, Sign::Negative);
+            let want = dft(&x, Sign::Negative);
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!((*a - *b).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn planner_caches_and_shares() {
+        let planner = FftPlanner::new();
+        let a = planner.plan(64);
+        let b = planner.plan(64);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = planner.plan(128);
+        assert_eq!(c.len(), 128);
+    }
+
+    #[test]
+    fn planner_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<FftPlanner>();
+        assert_send_sync::<Arc<FftPlan>>();
+    }
+}

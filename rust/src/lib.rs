@@ -1,0 +1,60 @@
+//! # so3ft — parallel fast Fourier transforms on the rotation group SO(3)
+//!
+//! A production-grade reproduction of
+//! *Lux, Wülker & Chirikjian, “Parallelization of the FFT on SO(3)” (2018)*,
+//! which parallelizes Kostelec & Rockmore's fast SO(3) Fourier transform
+//! (FSOFT) and its inverse (iFSOFT).
+//!
+//! The crate is the L3 (coordination) layer of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: symmetry-clustered
+//!   partitioning of the discrete Wigner transforms (DWTs), the geometric
+//!   triangle→rectangle index mapping of the order domain, and dynamic
+//!   self-scheduling over a thread pool ([`coordinator`], [`pool`]); plus
+//!   every substrate the transforms need: an FFT library ([`fft`]),
+//!   Wigner-d functions, quadrature and sampling ([`so3`]), the DWT itself
+//!   ([`dwt`]), sequential reference transforms ([`transform`]), a
+//!   multicore execution simulator ([`simulator`]), and an application
+//!   layer ([`apps`]).
+//! * **L2/L1 (build time, `python/compile/`)** — the DWT contraction as a
+//!   JAX graph wrapping a Pallas kernel, AOT-lowered to HLO text per
+//!   bandwidth. The [`runtime`] module loads those artifacts through PJRT
+//!   and exposes them as an alternative DWT backend; Python is never on
+//!   the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use so3ft::transform::So3Fft;
+//! use so3ft::so3::coeffs::So3Coeffs;
+//!
+//! let b = 16; // bandwidth
+//! let fft = So3Fft::new(b).unwrap();
+//! let mut coeffs = So3Coeffs::random(b, 42);
+//! let grid = fft.inverse(&coeffs).unwrap();   // synthesis  (iFSOFT)
+//! let back = fft.forward(&grid).unwrap();     // analysis   (FSOFT)
+//! let err = coeffs.max_abs_error(&back);
+//! assert!(err < 1e-10);
+//! ```
+
+pub mod apps;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dwt;
+pub mod error;
+pub mod fft;
+pub mod pool;
+pub mod prng;
+pub mod runtime;
+pub mod simulator;
+pub mod so3;
+pub mod testkit;
+pub mod transform;
+pub mod util;
+pub mod xprec;
+
+pub use error::{Error, Result};
+pub use fft::complex::Complex64;

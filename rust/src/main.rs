@@ -1,0 +1,7 @@
+//! `so3ft` — the launcher binary. All logic lives in [`so3ft::cli`] so it
+//! is unit- and integration-testable.
+
+fn main() {
+    let code = so3ft::cli::run(std::env::args().collect());
+    std::process::exit(code);
+}

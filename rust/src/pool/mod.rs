@@ -1,0 +1,237 @@
+//! Fork-join worker pool with OpenMP-style loop scheduling.
+//!
+//! The paper parallelizes with OpenMP `#pragma omp parallel for
+//! schedule(dynamic)`; this module is the equivalent substrate:
+//! [`parallel_for`] runs an index range over scoped threads under a
+//! [`Schedule`] policy. `Dynamic` reproduces OpenMP's dynamic
+//! self-scheduling (a shared atomic cursor), `Static` the default static
+//! blocking, `Guided` the decreasing-chunk variant — all three are
+//! benchmarked against each other in `benches/ablation_schedule.rs`.
+//!
+//! Per-worker execution statistics (packages executed, busy time) feed
+//! the multicore simulator's calibration.
+
+pub mod schedule;
+pub mod stats;
+
+pub use schedule::Schedule;
+pub use stats::{RegionStats, WorkerStats};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Run `body(index)` for every index in `0..n` on `threads` workers under
+/// the given scheduling policy. Returns per-region execution statistics.
+///
+/// `body` must be safe to call concurrently for distinct indices (the
+/// SO(3) executor guarantees output disjointness per index — see
+/// `coordinator::plan`).
+pub fn parallel_for<F>(threads: usize, n: usize, schedule: Schedule, body: F) -> RegionStats
+where
+    F: Fn(usize) + Sync,
+{
+    assert!(threads >= 1, "thread count must be >= 1");
+    let started = Instant::now();
+    if threads == 1 || n <= 1 {
+        // Fast path: no spawn overhead — this is also the "sequential
+        // algorithm" the paper's speedups are measured against.
+        let t0 = Instant::now();
+        for i in 0..n {
+            body(i);
+        }
+        let stats = WorkerStats {
+            packages: n,
+            busy: t0.elapsed(),
+        };
+        return RegionStats {
+            workers: vec![stats],
+            wall: started.elapsed(),
+            items: n,
+        };
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let body = &body;
+    let mut workers: Vec<WorkerStats> = Vec::with_capacity(threads);
+    crossbeam_utils::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let cursor = &cursor;
+                scope.spawn(move |_| {
+                    let t0 = Instant::now();
+                    let mut packages = 0usize;
+                    match schedule {
+                        Schedule::Dynamic { chunk } => {
+                            let chunk = chunk.max(1);
+                            loop {
+                                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                                if start >= n {
+                                    break;
+                                }
+                                let end = (start + chunk).min(n);
+                                for i in start..end {
+                                    body(i);
+                                }
+                                packages += end - start;
+                            }
+                        }
+                        Schedule::Static => {
+                            // Contiguous block per worker (OpenMP default).
+                            let per = n.div_ceil(threads);
+                            let start = t * per;
+                            let end = ((t + 1) * per).min(n);
+                            for i in start..end {
+                                body(i);
+                            }
+                            packages += end.saturating_sub(start);
+                        }
+                        Schedule::StaticInterleaved => {
+                            // Round-robin (OpenMP schedule(static,1)).
+                            let mut i = t;
+                            while i < n {
+                                body(i);
+                                packages += 1;
+                                i += threads;
+                            }
+                        }
+                        Schedule::Guided { min_chunk } => {
+                            let min_chunk = min_chunk.max(1);
+                            loop {
+                                // Claim max(remaining/(2T), min) items.
+                                let start = {
+                                    let mut cur = cursor.load(Ordering::Relaxed);
+                                    loop {
+                                        if cur >= n {
+                                            break usize::MAX;
+                                        }
+                                        let remaining = n - cur;
+                                        let take =
+                                            (remaining / (2 * threads)).max(min_chunk);
+                                        match cursor.compare_exchange_weak(
+                                            cur,
+                                            cur + take,
+                                            Ordering::Relaxed,
+                                            Ordering::Relaxed,
+                                        ) {
+                                            Ok(_) => break cur,
+                                            Err(now) => cur = now,
+                                        }
+                                    }
+                                };
+                                if start == usize::MAX {
+                                    break;
+                                }
+                                let remaining = n - start;
+                                let take = (remaining / (2 * threads)).max(min_chunk);
+                                let end = (start + take).min(n);
+                                for i in start..end {
+                                    body(i);
+                                }
+                                packages += end - start;
+                            }
+                        }
+                    }
+                    WorkerStats {
+                        packages,
+                        busy: t0.elapsed(),
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            workers.push(h.join().expect("worker panicked"));
+        }
+    })
+    .expect("pool scope failed");
+
+    RegionStats {
+        workers,
+        wall: started.elapsed(),
+        items: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    fn run_and_check(threads: usize, n: usize, schedule: Schedule) {
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let stats = parallel_for(threads, n, schedule, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(
+                h.load(Ordering::Relaxed),
+                1,
+                "index {i} executed wrong number of times ({threads} threads, {schedule:?})"
+            );
+        }
+        assert_eq!(
+            stats.workers.iter().map(|w| w.packages).sum::<usize>(),
+            n,
+            "package accounting"
+        );
+    }
+
+    #[test]
+    fn every_index_exactly_once_all_schedules() {
+        for threads in [1usize, 2, 3, 8] {
+            for n in [0usize, 1, 7, 64, 1000] {
+                run_and_check(threads, n, Schedule::Dynamic { chunk: 1 });
+                run_and_check(threads, n, Schedule::Dynamic { chunk: 16 });
+                run_and_check(threads, n, Schedule::Static);
+                run_and_check(threads, n, Schedule::StaticInterleaved);
+                run_and_check(threads, n, Schedule::Guided { min_chunk: 1 });
+            }
+        }
+    }
+
+    #[test]
+    fn results_independent_of_schedule() {
+        // Sum of f(i) must not depend on scheduling.
+        let n = 500;
+        let collect = |threads, schedule| {
+            let total = AtomicU64::new(0);
+            parallel_for(threads, n, schedule, |i| {
+                total.fetch_add((i * i) as u64, Ordering::Relaxed);
+            });
+            total.into_inner()
+        };
+        let want: u64 = (0..n as u64).map(|i| i * i).sum();
+        for threads in [1, 2, 5] {
+            for schedule in [
+                Schedule::Dynamic { chunk: 3 },
+                Schedule::Static,
+                Schedule::StaticInterleaved,
+                Schedule::Guided { min_chunk: 2 },
+            ] {
+                assert_eq!(collect(threads, schedule), want);
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_takes_fast_path() {
+        let stats = parallel_for(1, 100, Schedule::Dynamic { chunk: 1 }, |_| {});
+        assert_eq!(stats.workers.len(), 1);
+        assert_eq!(stats.workers[0].packages, 100);
+    }
+
+    #[test]
+    fn stats_fields_populated() {
+        let stats = parallel_for(4, 256, Schedule::Dynamic { chunk: 4 }, |_| {
+            std::hint::black_box(());
+        });
+        assert_eq!(stats.items, 256);
+        assert_eq!(stats.workers.len(), 4);
+        assert!(stats.wall.as_nanos() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "thread count")]
+    fn zero_threads_rejected() {
+        parallel_for(0, 10, Schedule::Static, |_| {});
+    }
+}

@@ -1,0 +1,98 @@
+//! Loop scheduling policies (the OpenMP `schedule(...)` clause).
+
+/// How loop iterations are assigned to workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Self-scheduling from a shared atomic cursor, `chunk` iterations at
+    /// a time — OpenMP `schedule(dynamic, chunk)`. The paper's choice
+    /// (`schedule(dynamic)` = chunk 1).
+    Dynamic { chunk: usize },
+    /// One contiguous block per worker — OpenMP default `schedule(static)`.
+    Static,
+    /// Round-robin single iterations — OpenMP `schedule(static, 1)`.
+    StaticInterleaved,
+    /// Exponentially decreasing chunks with a floor — OpenMP
+    /// `schedule(guided, min_chunk)`.
+    Guided { min_chunk: usize },
+}
+
+impl Schedule {
+    /// The paper's configuration.
+    pub const PAPER: Schedule = Schedule::Dynamic { chunk: 1 };
+
+    /// Parse from a CLI/config string: `dynamic[:chunk]`, `static`,
+    /// `interleaved`, `guided[:min]`.
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "dynamic" => {
+                let chunk = match arg {
+                    Some(a) => a.parse().ok()?,
+                    None => 1,
+                };
+                Some(Schedule::Dynamic { chunk })
+            }
+            "static" => Some(Schedule::Static),
+            "interleaved" => Some(Schedule::StaticInterleaved),
+            "guided" => {
+                let min_chunk = match arg {
+                    Some(a) => a.parse().ok()?,
+                    None => 1,
+                };
+                Some(Schedule::Guided { min_chunk })
+            }
+            _ => None,
+        }
+    }
+
+    /// Canonical name (round-trips through `parse`).
+    pub fn name(&self) -> String {
+        match self {
+            Schedule::Dynamic { chunk } => format!("dynamic:{chunk}"),
+            Schedule::Static => "static".to_string(),
+            Schedule::StaticInterleaved => "interleaved".to_string(),
+            Schedule::Guided { min_chunk } => format!("guided:{min_chunk}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(Schedule::parse("dynamic"), Some(Schedule::Dynamic { chunk: 1 }));
+        assert_eq!(
+            Schedule::parse("dynamic:8"),
+            Some(Schedule::Dynamic { chunk: 8 })
+        );
+        assert_eq!(Schedule::parse("static"), Some(Schedule::Static));
+        assert_eq!(
+            Schedule::parse("interleaved"),
+            Some(Schedule::StaticInterleaved)
+        );
+        assert_eq!(
+            Schedule::parse("guided:4"),
+            Some(Schedule::Guided { min_chunk: 4 })
+        );
+        assert_eq!(Schedule::parse("bogus"), None);
+        assert_eq!(Schedule::parse("dynamic:x"), None);
+    }
+
+    #[test]
+    fn name_roundtrips() {
+        for s in [
+            Schedule::Dynamic { chunk: 1 },
+            Schedule::Dynamic { chunk: 32 },
+            Schedule::Static,
+            Schedule::StaticInterleaved,
+            Schedule::Guided { min_chunk: 2 },
+        ] {
+            assert_eq!(Schedule::parse(&s.name()), Some(s));
+        }
+    }
+}

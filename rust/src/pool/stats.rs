@@ -1,0 +1,101 @@
+//! Execution statistics for parallel regions — the measurement substrate
+//! for the efficiency figures and the simulator calibration.
+
+use std::time::Duration;
+
+/// Per-worker counters for one parallel region.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    /// Loop iterations this worker executed.
+    pub packages: usize,
+    /// Time from worker start to completion of its last package.
+    pub busy: Duration,
+}
+
+/// Aggregated statistics for one parallel region.
+#[derive(Debug, Clone)]
+pub struct RegionStats {
+    pub workers: Vec<WorkerStats>,
+    /// Wall-clock time of the whole region (including spawn/join).
+    pub wall: Duration,
+    /// Total iterations.
+    pub items: usize,
+}
+
+impl RegionStats {
+    /// Load imbalance: max worker busy time / mean busy time (1.0 = perfectly
+    /// balanced). The quantity the paper's §5 "workload imbalance" refers to.
+    pub fn imbalance(&self) -> f64 {
+        if self.workers.is_empty() {
+            return 1.0;
+        }
+        let times: Vec<f64> = self.workers.iter().map(|w| w.busy.as_secs_f64()).collect();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Fraction of wall time spent outside worker bodies (spawn/join and
+    /// scheduling overhead).
+    pub fn overhead_fraction(&self) -> f64 {
+        let wall = self.wall.as_secs_f64();
+        if wall == 0.0 || self.workers.is_empty() {
+            return 0.0;
+        }
+        let max_busy = self
+            .workers
+            .iter()
+            .map(|w| w.busy.as_secs_f64())
+            .fold(0.0, f64::max);
+        ((wall - max_busy) / wall).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(ms: u64, packages: usize) -> WorkerStats {
+        WorkerStats {
+            packages,
+            busy: Duration::from_millis(ms),
+        }
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let balanced = RegionStats {
+            workers: vec![w(10, 5), w(10, 5)],
+            wall: Duration::from_millis(11),
+            items: 10,
+        };
+        assert!((balanced.imbalance() - 1.0).abs() < 1e-9);
+        let skewed = RegionStats {
+            workers: vec![w(30, 9), w(10, 1)],
+            wall: Duration::from_millis(31),
+            items: 10,
+        };
+        assert!((skewed.imbalance() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overhead_fraction_bounds() {
+        let r = RegionStats {
+            workers: vec![w(8, 4)],
+            wall: Duration::from_millis(10),
+            items: 4,
+        };
+        let f = r.overhead_fraction();
+        assert!(f > 0.15 && f < 0.25, "{f}");
+        let empty = RegionStats {
+            workers: vec![],
+            wall: Duration::ZERO,
+            items: 0,
+        };
+        assert_eq!(empty.overhead_fraction(), 0.0);
+    }
+}

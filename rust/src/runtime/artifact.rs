@@ -1,0 +1,141 @@
+//! Artifact discovery: which bandwidths have AOT-compiled DWT graphs on
+//! disk, and where.
+//!
+//! Naming convention (see `python/compile/aot.py`):
+//! `artifacts/dwt_fwd_b{B}.hlo.txt` and `artifacts/dwt_inv_b{B}.hlo.txt`,
+//! plus a `manifest.json` (informational; discovery is convention-based
+//! so the registry works even without it).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_DIR: &str = "artifacts";
+
+/// Paths for one bandwidth's artifact pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactPair {
+    pub b: usize,
+    pub forward: PathBuf,
+    pub inverse: PathBuf,
+}
+
+/// Registry over an artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+}
+
+impl ArtifactRegistry {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    /// Registry over the default `artifacts/` directory (or the
+    /// `SO3FT_ARTIFACTS` environment override).
+    pub fn default_location() -> Self {
+        let dir = std::env::var("SO3FT_ARTIFACTS").unwrap_or_else(|_| DEFAULT_DIR.to_string());
+        Self::new(dir)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Expected paths for bandwidth `b` (no existence check).
+    pub fn pair_paths(&self, b: usize) -> ArtifactPair {
+        ArtifactPair {
+            b,
+            forward: self.dir.join(format!("dwt_fwd_b{b}.hlo.txt")),
+            inverse: self.dir.join(format!("dwt_inv_b{b}.hlo.txt")),
+        }
+    }
+
+    /// Paths for bandwidth `b`, verifying both files exist.
+    pub fn resolve(&self, b: usize) -> Result<ArtifactPair> {
+        let pair = self.pair_paths(b);
+        for p in [&pair.forward, &pair.inverse] {
+            if !p.exists() {
+                return Err(Error::MissingArtifact {
+                    b,
+                    path: p.display().to_string(),
+                });
+            }
+        }
+        Ok(pair)
+    }
+
+    /// Bandwidths with a complete artifact pair on disk, ascending.
+    pub fn available(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(_) => return out,
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(rest) = name
+                .strip_prefix("dwt_fwd_b")
+                .and_then(|r| r.strip_suffix(".hlo.txt"))
+            {
+                if let Ok(b) = rest.parse::<usize>() {
+                    if self.pair_paths(b).inverse.exists() {
+                        out.push(b);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("so3ft-artifacts-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn discovery_finds_complete_pairs_only() {
+        let d = tmpdir("disc");
+        std::fs::write(d.join("dwt_fwd_b4.hlo.txt"), "x").unwrap();
+        std::fs::write(d.join("dwt_inv_b4.hlo.txt"), "x").unwrap();
+        std::fs::write(d.join("dwt_fwd_b8.hlo.txt"), "x").unwrap(); // no inverse
+        std::fs::write(d.join("dwt_fwd_b16.hlo.txt"), "x").unwrap();
+        std::fs::write(d.join("dwt_inv_b16.hlo.txt"), "x").unwrap();
+        let reg = ArtifactRegistry::new(&d);
+        assert_eq!(reg.available(), vec![4, 16]);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn resolve_reports_missing() {
+        let d = tmpdir("miss");
+        let reg = ArtifactRegistry::new(&d);
+        let err = reg.resolve(4).unwrap_err();
+        assert!(matches!(err, Error::MissingArtifact { b: 4, .. }));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn empty_dir_yields_no_bandwidths() {
+        let reg = ArtifactRegistry::new("/nonexistent-so3ft-path");
+        assert!(reg.available().is_empty());
+    }
+
+    #[test]
+    fn naming_convention() {
+        let reg = ArtifactRegistry::new("a");
+        let p = reg.pair_paths(32);
+        assert_eq!(p.forward, PathBuf::from("a/dwt_fwd_b32.hlo.txt"));
+        assert_eq!(p.inverse, PathBuf::from("a/dwt_inv_b32.hlo.txt"));
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load the AOT-compiled DWT artifacts and expose them as a
+//! [`crate::coordinator::exec::DwtOffload`] backend.
+//!
+//! Build-time python (`python/compile/aot.py`) lowers the L2 JAX graphs
+//! (wrapping the L1 Pallas kernels) to **HLO text**; this module loads a
+//! per-bandwidth pair of artifacts, compiles them once on the PJRT CPU
+//! client, and serves cluster contractions from the rust hot path.
+//! Python is never on the request path.
+//!
+//! * [`artifact`] — artifact discovery and file naming conventions.
+//! * [`xla_dwt`] — the compiled-executable backend.
+
+pub mod artifact;
+pub mod xla_dwt;
+
+pub use artifact::ArtifactRegistry;
+pub use xla_dwt::XlaDwt;

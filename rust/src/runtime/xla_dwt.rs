@@ -1,0 +1,249 @@
+//! The XLA/PJRT DWT backend.
+//!
+//! Loads the per-bandwidth HLO-text artifact pair, compiles both on a
+//! PJRT CPU client, and implements [`DwtOffload`]: the coordinator hands
+//! over packed base Wigner rows and member vectors, this backend runs
+//! the compiled Pallas-kernel graph and returns the contraction.
+//!
+//! Threading: PJRT wrapper types hold raw pointers without `Send`/`Sync`
+//! markers, so the whole backend state lives behind one mutex — offload
+//! calls serialize. This is deliberate: the artifact executes the whole
+//! cluster contraction in one call, so the lock is held for package-sized
+//! work, and the native path remains the default for thread-scaling
+//! benchmarks (the offload path demonstrates the AOT architecture and is
+//! validated for bit-level agreement in `tests/xla_backend.rs`).
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::coordinator::exec::DwtOffload;
+use crate::error::{Error, Result};
+use crate::fft::Complex64;
+use crate::runtime::artifact::ArtifactRegistry;
+
+/// Padded member-axis size (must match `python/compile/model.py`).
+pub const MEMBER_PAD: usize = 8;
+
+struct Inner {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    forward: xla::PjRtLoadedExecutable,
+    inverse: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: `Inner` is only touched under the XlaDwt mutex; the PJRT CPU
+// client itself is thread-safe, the wrapper just lacks the marker.
+unsafe impl Send for Inner {}
+
+/// Compiled DWT artifacts for one bandwidth.
+pub struct XlaDwt {
+    b: usize,
+    inner: Mutex<Inner>,
+}
+
+fn xerr(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+impl XlaDwt {
+    /// Load and compile the artifact pair for bandwidth `b` from `dir`.
+    pub fn load(dir: impl AsRef<Path>, b: usize) -> Result<Self> {
+        let registry = ArtifactRegistry::new(dir.as_ref());
+        let pair = registry.resolve(b)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        let compile = |path: &Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )
+            .map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(xerr)
+        };
+        let forward = compile(&pair.forward)?;
+        let inverse = compile(&pair.inverse)?;
+        Ok(Self {
+            b,
+            inner: Mutex::new(Inner {
+                client,
+                forward,
+                inverse,
+            }),
+        })
+    }
+
+    /// Load from the default artifact location.
+    pub fn load_default(b: usize) -> Result<Self> {
+        let reg = ArtifactRegistry::default_location();
+        Self::load(reg.dir(), b)
+    }
+
+    pub fn bandwidth(&self) -> usize {
+        self.b
+    }
+
+    /// f64 literal of shape `dims` from a padded copy of `data`.
+    fn literal(data: &[f64], dims: &[usize]) -> Result<xla::Literal> {
+        let len: usize = dims.iter().product();
+        debug_assert_eq!(data.len(), len);
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, len * 8)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F64,
+            dims,
+            bytes,
+        )
+        .map_err(xerr)?)
+    }
+
+    /// Split interleaved complex members into padded re/im planes.
+    fn split_planes(
+        t: &[Complex64],
+        nm: usize,
+        width: usize,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut re = vec![0.0f64; MEMBER_PAD * width];
+        let mut im = vec![0.0f64; MEMBER_PAD * width];
+        for mi in 0..nm {
+            for k in 0..width {
+                let z = t[mi * width + k];
+                re[mi * width + k] = z.re;
+                im[mi * width + k] = z.im;
+            }
+        }
+        (re, im)
+    }
+
+    /// Run one compiled contraction; returns the two output planes.
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+        out_len: usize,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let result = exe.execute::<xla::Literal>(args).map_err(xerr)?;
+        let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+        let (re_lit, im_lit) = lit.to_tuple2().map_err(xerr)?;
+        let re = re_lit.to_vec::<f64>().map_err(xerr)?;
+        let im = im_lit.to_vec::<f64>().map_err(xerr)?;
+        if re.len() != out_len || im.len() != out_len {
+            return Err(Error::Runtime(format!(
+                "artifact output length {} (want {out_len})",
+                re.len()
+            )));
+        }
+        Ok((re, im))
+    }
+
+    fn check_dims(&self, b: usize, nl: usize, nm: usize) -> Result<()> {
+        if b != self.b {
+            return Err(Error::Runtime(format!(
+                "bandwidth mismatch: executor b={b}, artifact b={}",
+                self.b
+            )));
+        }
+        if nl > b || nm > MEMBER_PAD {
+            return Err(Error::Runtime(format!(
+                "cluster dims out of range: nl={nl} (<= {b}), nm={nm} (<= {MEMBER_PAD})"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Pad `nl` rows of length `2b` into the fixed [b, 2b] plane.
+    fn pad_rows(&self, rows: &[f64], nl: usize) -> Vec<f64> {
+        let n = 2 * self.b;
+        let mut d = vec![0.0f64; self.b * n];
+        d[..nl * n].copy_from_slice(&rows[..nl * n]);
+        d
+    }
+}
+
+impl DwtOffload for XlaDwt {
+    fn contract_forward(
+        &self,
+        b: usize,
+        nl: usize,
+        nm: usize,
+        rows: &[f64],
+        t: &[Complex64],
+    ) -> Result<Vec<Complex64>> {
+        self.check_dims(b, nl, nm)?;
+        let n = 2 * b;
+        let d = self.pad_rows(rows, nl);
+        let (t_re, t_im) = Self::split_planes(t, nm, n);
+        let inner = self.inner.lock().expect("xla backend poisoned");
+        let args = [
+            Self::literal(&d, &[b, n])?,
+            Self::literal(&t_re, &[MEMBER_PAD, n])?,
+            Self::literal(&t_im, &[MEMBER_PAD, n])?,
+        ];
+        let (re, im) = Self::run(&inner.forward, &args, MEMBER_PAD * b)?;
+        // Repack [MEMBER_PAD, b] → [nm, nl].
+        let mut out = vec![Complex64::zero(); nm * nl];
+        for mi in 0..nm {
+            for li in 0..nl {
+                out[mi * nl + li] = Complex64::new(re[mi * b + li], im[mi * b + li]);
+            }
+        }
+        Ok(out)
+    }
+
+    fn contract_inverse(
+        &self,
+        b: usize,
+        nl: usize,
+        nm: usize,
+        rows: &[f64],
+        chat: &[Complex64],
+    ) -> Result<Vec<Complex64>> {
+        self.check_dims(b, nl, nm)?;
+        let n = 2 * b;
+        let d = self.pad_rows(rows, nl);
+        // chat is [nm, nl]; pad to [MEMBER_PAD, b].
+        let mut c_re = vec![0.0f64; MEMBER_PAD * b];
+        let mut c_im = vec![0.0f64; MEMBER_PAD * b];
+        for mi in 0..nm {
+            for li in 0..nl {
+                let z = chat[mi * nl + li];
+                c_re[mi * b + li] = z.re;
+                c_im[mi * b + li] = z.im;
+            }
+        }
+        let inner = self.inner.lock().expect("xla backend poisoned");
+        let args = [
+            Self::literal(&d, &[b, n])?,
+            Self::literal(&c_re, &[MEMBER_PAD, b])?,
+            Self::literal(&c_im, &[MEMBER_PAD, b])?,
+        ];
+        let (re, im) = Self::run(&inner.inverse, &args, MEMBER_PAD * n)?;
+        // Repack [MEMBER_PAD, 2b] → [nm, 2b].
+        let mut out = vec![Complex64::zero(); nm * n];
+        for mi in 0..nm {
+            for j in 0..n {
+                out[mi * n + j] = Complex64::new(re[mi * n + j], im[mi * n + j]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn member_pad_matches_python_model() {
+        // python/compile/model.py: MEMBER_PAD = 8 (max symmetry cluster).
+        assert_eq!(MEMBER_PAD, 8);
+    }
+
+    #[test]
+    fn load_missing_artifacts_is_clean_error() {
+        match XlaDwt::load("/nonexistent-so3ft", 4) {
+            Err(Error::MissingArtifact { b: 4, .. }) => {}
+            Err(e) => panic!("wrong error: {e}"),
+            Ok(_) => panic!("load should fail without artifacts"),
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! The discrete-event machine model.
+
+use crate::pool::Schedule;
+
+/// One parallel region: a bag of packages with their sequential costs.
+#[derive(Debug, Clone)]
+pub struct RegionSpec {
+    /// Sequential cost (seconds on one core of the reference machine) of
+    /// each package, in schedule order.
+    pub costs: Vec<f64>,
+    /// Memory-boundedness μ ∈ [0, 1]: the fraction of each package's time
+    /// that scales with memory bandwidth rather than core count.
+    pub mem_fraction: f64,
+    /// Scheduling discipline for this region.
+    pub schedule: Schedule,
+}
+
+/// A full transform: regions executed back to back, plus any purely
+/// serial time between them.
+#[derive(Debug, Clone)]
+pub struct TransformSpec {
+    pub regions: Vec<RegionSpec>,
+    pub serial: f64,
+    /// Human label ("fsoft b=128" etc.) for reports.
+    pub label: String,
+}
+
+impl TransformSpec {
+    /// Sequential total (the simulator's p = 1 wall time, by construction).
+    pub fn sequential_seconds(&self) -> f64 {
+        self.serial
+            + self
+                .regions
+                .iter()
+                .map(|r| r.costs.iter().sum::<f64>())
+                .sum::<f64>()
+    }
+}
+
+/// Machine parameters for the simulated shared-memory node.
+#[derive(Debug, Clone)]
+pub struct MachineParams {
+    /// Cost of one dynamic-schedule claim (atomic RMW + cache transfer).
+    pub dispatch_overhead: f64,
+    /// Fork/join barrier cost per parallel region, per core involved.
+    pub region_barrier: f64,
+    /// Active cores that saturate the socket's memory bandwidth; beyond
+    /// this the memory-bound fraction of package time stops scaling.
+    pub bw_cores: f64,
+}
+
+impl MachineParams {
+    /// Calibrated against the paper's AMD Opteron 6272 results (64-core
+    /// speedups: FSOFT 29.57/36.86/34.36 and iFSOFT 24.57/26.69/24.25 for
+    /// B = 128/256/512 — see EXPERIMENTS.md for the calibration log).
+    pub fn opteron_like() -> Self {
+        Self {
+            dispatch_overhead: 0.3e-6,
+            region_barrier: 6.0e-6,
+            bw_cores: 18.0,
+        }
+    }
+
+    /// An ideal PRAM-like machine (no overheads) — for tests and the
+    /// work-optimality check.
+    pub fn ideal() -> Self {
+        Self {
+            dispatch_overhead: 0.0,
+            region_barrier: 0.0,
+            bw_cores: f64::INFINITY,
+        }
+    }
+}
+
+/// Contention-scaled cost of a package when `p` cores are active.
+#[inline]
+fn scaled_cost(cost: f64, mem_fraction: f64, p: usize, params: &MachineParams) -> f64 {
+    let congestion = (p as f64 / params.bw_cores).max(1.0);
+    cost * ((1.0 - mem_fraction) + mem_fraction * congestion)
+}
+
+/// Simulate one region on `p` cores; returns the region wall time.
+pub fn simulate_region(region: &RegionSpec, p: usize, params: &MachineParams) -> f64 {
+    assert!(p >= 1);
+    let n = region.costs.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if p == 1 {
+        // One core: no contention, no dispatch contention, no barrier —
+        // matches the measured sequential run by construction.
+        return region.costs.iter().sum();
+    }
+    let barrier = params.region_barrier * p as f64 / 64.0 + params.region_barrier;
+    match region.schedule {
+        Schedule::Dynamic { chunk } => {
+            let chunk = chunk.max(1);
+            // List scheduling: the next chunk goes to the earliest-free
+            // core (exactly what the atomic-cursor pool does, modulo
+            // claim-order nondeterminism that does not affect makespan
+            // materially for chunk-ordered claims).
+            let mut clocks = vec![0.0f64; p];
+            let mut i = 0usize;
+            while i < n {
+                // Earliest-free core (p ≤ 64: linear scan is fine).
+                let (core, _) = clocks
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                let end = (i + chunk).min(n);
+                let mut t = params.dispatch_overhead;
+                for c in &region.costs[i..end] {
+                    t += scaled_cost(*c, region.mem_fraction, p, params);
+                }
+                clocks[core] += t;
+                i = end;
+            }
+            clocks.iter().cloned().fold(0.0, f64::max) + barrier
+        }
+        Schedule::Static => {
+            // Contiguous blocks.
+            let per = n.div_ceil(p);
+            let mut makespan = 0.0f64;
+            for t in 0..p {
+                let lo = t * per;
+                let hi = ((t + 1) * per).min(n);
+                if lo >= hi {
+                    continue;
+                }
+                let sum: f64 = region.costs[lo..hi]
+                    .iter()
+                    .map(|c| scaled_cost(*c, region.mem_fraction, p, params))
+                    .sum();
+                makespan = makespan.max(sum);
+            }
+            makespan + barrier
+        }
+        Schedule::StaticInterleaved => {
+            let mut makespan = 0.0f64;
+            for t in 0..p {
+                let sum: f64 = region.costs[t..]
+                    .iter()
+                    .step_by(p)
+                    .map(|c| scaled_cost(*c, region.mem_fraction, p, params))
+                    .sum();
+                makespan = makespan.max(sum);
+            }
+            makespan + barrier
+        }
+        Schedule::Guided { min_chunk } => {
+            // Approximate guided as dynamic with the min chunk (guided's
+            // large head chunks only matter for very long regions).
+            let approx = RegionSpec {
+                costs: region.costs.clone(),
+                mem_fraction: region.mem_fraction,
+                schedule: Schedule::Dynamic {
+                    chunk: min_chunk.max(1),
+                },
+            };
+            simulate_region(&approx, p, params)
+        }
+    }
+}
+
+/// Simulate the whole transform on `p` cores.
+pub fn simulate_transform(spec: &TransformSpec, p: usize, params: &MachineParams) -> f64 {
+    spec.serial
+        + spec
+            .regions
+            .iter()
+            .map(|r| simulate_region(r, p, params))
+            .sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_region(n: usize, cost: f64, mu: f64) -> RegionSpec {
+        RegionSpec {
+            costs: vec![cost; n],
+            mem_fraction: mu,
+            schedule: Schedule::Dynamic { chunk: 1 },
+        }
+    }
+
+    #[test]
+    fn one_core_equals_sequential_sum() {
+        let r = uniform_region(100, 1e-3, 0.5);
+        let params = MachineParams::opteron_like();
+        let t = simulate_region(&r, 1, &params);
+        assert!((t - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ideal_machine_scales_linearly_on_uniform_load() {
+        let r = uniform_region(6400, 1e-4, 0.0);
+        let params = MachineParams::ideal();
+        let t1 = simulate_region(&r, 1, &params);
+        for p in [2usize, 4, 8, 16, 64] {
+            let tp = simulate_region(&r, p, &params);
+            let s = t1 / tp;
+            assert!(
+                (s - p as f64).abs() < 0.05 * p as f64,
+                "p={p}: speedup {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn contention_caps_speedup() {
+        let mut params = MachineParams::ideal();
+        params.bw_cores = 8.0;
+        let r = uniform_region(6400, 1e-4, 1.0); // fully memory-bound
+        let t1 = simulate_region(&r, 1, &params);
+        let t64 = simulate_region(&r, 64, &params);
+        let s = t1 / t64;
+        assert!(s < 8.5, "fully memory-bound speedup {s} must cap near bw_cores");
+    }
+
+    #[test]
+    fn imbalance_limits_makespan() {
+        // One giant package dominates: speedup ≤ total/max regardless of p.
+        let mut costs = vec![1e-4; 100];
+        costs[0] = 1e-2;
+        let r = RegionSpec {
+            costs,
+            mem_fraction: 0.0,
+            schedule: Schedule::Dynamic { chunk: 1 },
+        };
+        let params = MachineParams::ideal();
+        let t1 = simulate_region(&r, 1, &params);
+        let t64 = simulate_region(&r, 64, &params);
+        assert!(t64 >= 1e-2 - 1e-12, "critical path bound");
+        assert!(t1 / t64 <= 2.1, "speedup bounded by the giant package");
+    }
+
+    #[test]
+    fn dynamic_beats_static_on_skewed_load() {
+        // Decreasing costs + static blocks = first core overloaded.
+        let costs: Vec<f64> = (0..64).map(|i| 1e-3 / (1.0 + i as f64)).collect();
+        let params = MachineParams::ideal();
+        let dynamic = RegionSpec {
+            costs: costs.clone(),
+            mem_fraction: 0.0,
+            schedule: Schedule::Dynamic { chunk: 1 },
+        };
+        let stat = RegionSpec {
+            costs,
+            mem_fraction: 0.0,
+            schedule: Schedule::Static,
+        };
+        let td = simulate_region(&dynamic, 8, &params);
+        let ts = simulate_region(&stat, 8, &params);
+        assert!(td < ts, "dynamic {td} should beat static {ts} on skew");
+    }
+
+    #[test]
+    fn dispatch_overhead_hurts_tiny_packages() {
+        let mut params = MachineParams::ideal();
+        params.dispatch_overhead = 1e-5;
+        // Packages of 1µs each: overhead 10× the work.
+        let r = uniform_region(1000, 1e-6, 0.0);
+        let t1 = simulate_region(&r, 1, &params); // p=1 path has no overhead
+        let t8 = simulate_region(&r, 8, &params);
+        let s = t1 / t8;
+        assert!(s < 1.0, "dispatch-dominated region must not speed up: {s}");
+    }
+
+    #[test]
+    fn transform_composes_regions_and_serial() {
+        let spec = TransformSpec {
+            regions: vec![uniform_region(10, 1e-3, 0.0), uniform_region(20, 5e-4, 0.0)],
+            serial: 1e-3,
+            label: "test".into(),
+        };
+        let params = MachineParams::ideal();
+        let t1 = simulate_transform(&spec, 1, &params);
+        assert!((t1 - spec.sequential_seconds()).abs() < 1e-12);
+        let t2 = simulate_transform(&spec, 2, &params);
+        // Serial part doesn't scale.
+        assert!(t2 > spec.serial);
+        assert!(t2 < t1);
+    }
+}

@@ -1,0 +1,158 @@
+//! Speedup / runtime / efficiency curves — the series behind the paper's
+//! Figs. 2, 3 and 4.
+
+use crate::simulator::machine::{simulate_transform, MachineParams, TransformSpec};
+
+/// One point of a scaling curve.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalingPoint {
+    pub cores: usize,
+    pub seconds: f64,
+    pub speedup: f64,
+    pub efficiency: f64,
+}
+
+/// Simulate the spec across `cores_list`; speedup is measured against the
+/// simulated single-core run (which equals the measured sequential time
+/// by construction — the paper's methodology).
+pub fn scaling_curve(
+    spec: &TransformSpec,
+    cores_list: &[usize],
+    params: &MachineParams,
+) -> Vec<ScalingPoint> {
+    let t1 = simulate_transform(spec, 1, params);
+    cores_list
+        .iter()
+        .map(|&p| {
+            let tp = simulate_transform(spec, p, params);
+            ScalingPoint {
+                cores: p,
+                seconds: tp,
+                speedup: t1 / tp,
+                efficiency: t1 / tp / p as f64,
+            }
+        })
+        .collect()
+}
+
+/// The paper's core counts: 1, then 2..64.
+pub fn paper_core_counts() -> Vec<usize> {
+    let mut v = vec![1usize];
+    v.extend([2, 4, 8, 16, 24, 32, 40, 48, 56, 64]);
+    v
+}
+
+/// One bandwidth's scaling series for one transform direction.
+#[derive(Debug, Clone)]
+pub struct FigureSeries {
+    pub b: usize,
+    pub kind: crate::simulator::cost::TransformKind,
+    pub measured: bool,
+    pub points: Vec<ScalingPoint>,
+}
+
+/// Build the full data set behind Figs. 2–4: measured specs for the
+/// bandwidths this container can execute, analytic extrapolation (rates
+/// fitted at `fit_b`) for the large ones.
+pub fn figure_series(
+    measured_bs: &[usize],
+    analytic_bs: &[usize],
+    fit_b: usize,
+    cores: &[usize],
+    params: &MachineParams,
+) -> crate::error::Result<Vec<FigureSeries>> {
+    use crate::simulator::cost::{analytic_spec, measured_spec, FittedRates, TransformKind};
+    let mut out = Vec::new();
+    for kind in [TransformKind::Forward, TransformKind::Inverse] {
+        let rates = FittedRates::fit(fit_b, kind)?;
+        for &b in measured_bs {
+            let spec = measured_spec(b, kind)?;
+            out.push(FigureSeries {
+                b,
+                kind,
+                measured: true,
+                points: scaling_curve(&spec, cores, params),
+            });
+        }
+        for &b in analytic_bs {
+            let spec = analytic_spec(b, kind, &rates);
+            out.push(FigureSeries {
+                b,
+                kind,
+                measured: false,
+                points: scaling_curve(&spec, cores, params),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// The paper's published 64-core speedups (§4/§5) — the calibration and
+/// validation targets.
+pub fn paper_speedup_64(b: usize, kind: crate::simulator::cost::TransformKind) -> Option<f64> {
+    use crate::simulator::cost::TransformKind;
+    match (kind, b) {
+        (TransformKind::Forward, 128) => Some(29.57),
+        (TransformKind::Forward, 256) => Some(36.86),
+        (TransformKind::Forward, 512) => Some(34.36),
+        (TransformKind::Inverse, 128) => Some(24.57),
+        (TransformKind::Inverse, 256) => Some(26.69),
+        (TransformKind::Inverse, 512) => Some(24.25),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::Schedule;
+    use crate::simulator::machine::RegionSpec;
+
+    fn spec(n: usize, mu: f64) -> TransformSpec {
+        TransformSpec {
+            regions: vec![RegionSpec {
+                costs: vec![1e-4; n],
+                mem_fraction: mu,
+                schedule: Schedule::PAPER,
+            }],
+            serial: 0.0,
+            label: "t".into(),
+        }
+    }
+
+    #[test]
+    fn curve_shape_rises_then_plateaus() {
+        let params = MachineParams::opteron_like();
+        let curve = scaling_curve(&spec(4096, 0.35), &paper_core_counts(), &params);
+        // Monotone non-decreasing speedup.
+        for w in curve.windows(2) {
+            assert!(w[1].speedup >= w[0].speedup * 0.98);
+        }
+        // Near-linear early...
+        let s8 = curve.iter().find(|p| p.cores == 8).unwrap().speedup;
+        assert!(s8 > 6.5, "8-core speedup {s8}");
+        // ...sublinear late.
+        let s64 = curve.iter().find(|p| p.cores == 64).unwrap().speedup;
+        assert!(s64 < 50.0 && s64 > 15.0, "64-core speedup {s64}");
+        // Efficiency decreases.
+        let e2 = curve.iter().find(|p| p.cores == 2).unwrap().efficiency;
+        let e64 = curve.iter().find(|p| p.cores == 64).unwrap().efficiency;
+        assert!(e2 > e64);
+    }
+
+    #[test]
+    fn speedup_at_one_core_is_one() {
+        let params = MachineParams::opteron_like();
+        let curve = scaling_curve(&spec(100, 0.5), &[1], &params);
+        assert!((curve[0].speedup - 1.0).abs() < 1e-12);
+        assert!((curve[0].efficiency - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn higher_mu_lower_plateau() {
+        let params = MachineParams::opteron_like();
+        let lo = scaling_curve(&spec(4096, 0.2), &[64], &params)[0].speedup;
+        let hi = scaling_curve(&spec(4096, 0.7), &[64], &params)[0].speedup;
+        assert!(lo > hi, "mu=0.2 → {lo} must beat mu=0.7 → {hi}");
+    }
+}

@@ -1,0 +1,278 @@
+//! The SO(3) Fourier coefficient container.
+//!
+//! A bandwidth-B function has `B(4B²−1)/3` coefficients `f°(l, m, m')`
+//! with l < B and |m|, |m'| ≤ l. They are stored flat, l-major, each
+//! degree-l block a row-major (2l+1)×(2l+1) matrix over (m, m'):
+//!
+//! `index(l, m, m') = l(4l²−1)/3 + (m+l)(2l+1) + (m'+l)`.
+//!
+//! The degree-block offset `l(4l²−1)/3 = Σ_{j<l} (2j+1)²` is the closed
+//! form the paper quotes via "Gauss' well-known formula".
+
+use crate::error::{Error, Result};
+use crate::fft::Complex64;
+use crate::prng::Xoshiro256;
+
+/// Number of coefficients for bandwidth B: B(4B²−1)/3.
+#[inline]
+pub fn coeff_count(b: usize) -> usize {
+    b * (4 * b * b - 1) / 3
+}
+
+/// Flat offset of the degree-l block.
+#[inline]
+pub fn degree_offset(l: usize) -> usize {
+    // l(4l²−1)/3, written to avoid the l = 0 underflow of `4l²−1`.
+    l * (4 * l * l).saturating_sub(1) / 3
+}
+
+/// Flat index of (l, m, m'); caller guarantees |m|, |m'| ≤ l.
+#[inline]
+pub fn flat_index(l: usize, m: i64, mp: i64) -> usize {
+    let li = l as i64;
+    debug_assert!(m.abs() <= li && mp.abs() <= li);
+    degree_offset(l) + ((m + li) * (2 * li + 1) + (mp + li)) as usize
+}
+
+/// Coefficients of a bandlimited function on SO(3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct So3Coeffs {
+    b: usize,
+    data: Vec<Complex64>,
+}
+
+impl So3Coeffs {
+    /// All-zero coefficients.
+    pub fn zeros(b: usize) -> Self {
+        assert!(b >= 1, "bandwidth must be >= 1");
+        Self {
+            b,
+            data: vec![Complex64::zero(); coeff_count(b)],
+        }
+    }
+
+    /// The paper's benchmark workload: every coefficient's real and
+    /// imaginary part uniform on [-1, 1], deterministic in `seed`.
+    pub fn random(b: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut c = Self::zeros(b);
+        for v in c.data.iter_mut() {
+            *v = Complex64::new(rng.next_signed(), rng.next_signed());
+        }
+        c
+    }
+
+    /// Wrap an existing flat buffer (must be `coeff_count(b)` long).
+    pub fn from_vec(b: usize, data: Vec<Complex64>) -> Result<Self> {
+        if data.len() != coeff_count(b) {
+            return Err(Error::shape(
+                coeff_count(b),
+                data.len(),
+                "So3Coeffs::from_vec",
+            ));
+        }
+        Ok(Self { b, data })
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.b
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Checked access.
+    pub fn get(&self, l: usize, m: i64, mp: i64) -> Result<Complex64> {
+        self.check(l, m, mp)?;
+        Ok(self.data[flat_index(l, m, mp)])
+    }
+
+    /// Checked write.
+    pub fn set(&mut self, l: usize, m: i64, mp: i64, v: Complex64) -> Result<()> {
+        self.check(l, m, mp)?;
+        self.data[flat_index(l, m, mp)] = v;
+        Ok(())
+    }
+
+    /// Unchecked (debug-asserted) access for hot paths.
+    #[inline]
+    pub fn at(&self, l: usize, m: i64, mp: i64) -> Complex64 {
+        self.data[flat_index(l, m, mp)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, l: usize, m: i64, mp: i64) -> &mut Complex64 {
+        &mut self.data[flat_index(l, m, mp)]
+    }
+
+    fn check(&self, l: usize, m: i64, mp: i64) -> Result<()> {
+        let li = l as i64;
+        if l >= self.b || m.abs() > li || mp.abs() > li {
+            return Err(Error::IndexOutOfRange {
+                l: li,
+                m,
+                mp,
+                b: self.b,
+            });
+        }
+        Ok(())
+    }
+
+    pub fn as_slice(&self) -> &[Complex64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [Complex64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<Complex64> {
+        self.data
+    }
+
+    /// Iterate (l, m, m', value).
+    pub fn iter(&self) -> impl Iterator<Item = (usize, i64, i64, Complex64)> + '_ {
+        (0..self.b).flat_map(move |l| {
+            let li = l as i64;
+            (-li..=li).flat_map(move |m| {
+                (-li..=li).map(move |mp| (l, m, mp, self.data[flat_index(l, m, mp)]))
+            })
+        })
+    }
+
+    /// Max |difference| against another coefficient set.
+    pub fn max_abs_error(&self, other: &So3Coeffs) -> f64 {
+        assert_eq!(self.b, other.b, "bandwidth mismatch");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Max relative error |Δ|/|ref| over coefficients of `self` (the
+    /// paper's Table 1 second column; `self` is the reference f°).
+    pub fn max_rel_error(&self, other: &So3Coeffs) -> f64 {
+        assert_eq!(self.b, other.b, "bandwidth mismatch");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .filter(|(a, _)| a.abs() > 0.0)
+            .map(|(a, b)| (*a - *b).abs() / a.abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Squared L² norm of the function (by Parseval for our basis):
+    /// `‖f‖² = Σ 8π²/(2l+1) |f°(l,m,m')|²`.
+    pub fn norm_sqr(&self) -> f64 {
+        let mut acc = 0.0;
+        for (l, _, _, v) in self.iter() {
+            acc += 8.0 * std::f64::consts::PI.powi(2) / (2 * l + 1) as f64 * v.norm_sqr();
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+
+    #[test]
+    fn count_matches_closed_form() {
+        // Σ_{l<B} (2l+1)² computed directly.
+        for b in 1..=20usize {
+            let direct: usize = (0..b).map(|l| (2 * l + 1) * (2 * l + 1)).sum();
+            assert_eq!(coeff_count(b), direct, "b={b}");
+        }
+        assert_eq!(coeff_count(1), 1);
+        assert_eq!(coeff_count(2), 10);
+        // The paper's B=512 count.
+        assert_eq!(coeff_count(512), 512 * (4 * 512 * 512 - 1) / 3);
+    }
+
+    #[test]
+    fn flat_index_is_bijective() {
+        let b = 9;
+        let mut seen = vec![false; coeff_count(b)];
+        for l in 0..b {
+            let li = l as i64;
+            for m in -li..=li {
+                for mp in -li..=li {
+                    let idx = flat_index(l, m, mp);
+                    assert!(!seen[idx], "duplicate index {idx} at ({l},{m},{mp})");
+                    seen[idx] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "index map must be surjective");
+    }
+
+    #[test]
+    fn get_set_roundtrip_and_bounds() {
+        let mut c = So3Coeffs::zeros(4);
+        c.set(3, -2, 1, Complex64::new(1.5, -0.5)).unwrap();
+        assert_eq!(c.get(3, -2, 1).unwrap(), Complex64::new(1.5, -0.5));
+        assert!(c.get(4, 0, 0).is_err(), "l out of range");
+        assert!(c.get(2, 3, 0).is_err(), "m out of range");
+        assert!(c.set(2, 0, -3, Complex64::zero()).is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic_and_in_range() {
+        let a = So3Coeffs::random(6, 99);
+        let b = So3Coeffs::random(6, 99);
+        assert_eq!(a, b);
+        let c = So3Coeffs::random(6, 100);
+        assert_ne!(a, c);
+        for (_, _, _, v) in a.iter() {
+            assert!(v.re >= -1.0 && v.re < 1.0);
+            assert!(v.im >= -1.0 && v.im < 1.0);
+        }
+    }
+
+    #[test]
+    fn iter_visits_every_coefficient_once() {
+        let c = So3Coeffs::random(5, 1);
+        assert_eq!(c.iter().count(), coeff_count(5));
+        let mut seen = vec![false; coeff_count(5)];
+        for (l, m, mp, _) in c.iter() {
+            let idx = flat_index(l, m, mp);
+            assert!(!seen[idx]);
+            seen[idx] = true;
+        }
+    }
+
+    #[test]
+    fn error_metrics() {
+        let mut a = So3Coeffs::zeros(3);
+        let mut b = So3Coeffs::zeros(3);
+        a.set(2, 1, -1, Complex64::new(2.0, 0.0)).unwrap();
+        b.set(2, 1, -1, Complex64::new(2.5, 0.0)).unwrap();
+        assert!((a.max_abs_error(&b) - 0.5).abs() < 1e-15);
+        assert!((a.max_rel_error(&b) - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn index_property_random_probes() {
+        Prop::new("coeff index in range").cases(200).run(|g| {
+            let b = g.usize_in(1, 32);
+            let l = g.usize_in(0, b - 1);
+            let li = l as i64;
+            let m = g.i64_in(-li, li);
+            let mp = g.i64_in(-li, li);
+            let idx = flat_index(l, m, mp);
+            Prop::assert_true(idx < coeff_count(b), "index below count")?;
+            Prop::assert_true(idx >= degree_offset(l), "index in degree block")?;
+            Prop::assert_true(idx < degree_offset(l + 1), "index before next block")
+        });
+    }
+}

@@ -1,0 +1,26 @@
+//! Mathematics of the rotation group SO(3).
+//!
+//! * [`rotation`] — rotation matrices and the z-y-z Euler parameterization.
+//! * [`sampling`] — the Kostelec–Rockmore sampling grid (α_i, β_j, γ_k) and
+//!   the grid-value container used by the transforms.
+//! * [`quadrature`] — the quadrature weights w_B(j) of the SO(3) sampling
+//!   theorem (paper Eq. 6).
+//! * [`wigner`] — Wigner-d functions: log-domain seeds, the three-term
+//!   recurrence (paper Eq. 2), the seven symmetries (paper Eq. 3), and an
+//!   explicit-sum oracle for tests.
+//! * [`coeffs`] — the SO(3) Fourier coefficient container with (l, m, m')
+//!   indexing.
+//!
+//! Convention note (validated numerically in the test suite): the paper's
+//! seed + recurrence realizes `d_paper(l, m, m') = d_edmonds(l, m', m)`,
+//! where `d_edmonds` is the Wikipedia/Edmonds explicit sum. All seven
+//! symmetries of paper Eq. 3 hold exactly for this convention, and the
+//! quadrature orthogonality reads
+//! `Σ_j w_B(j) d(l,m,m';β_j) d(l',m,m';β_j) = 2π/(B(2l+1)) δ_{ll'}`.
+
+pub mod coeffs;
+pub mod quadrature;
+pub mod rotation;
+pub mod sampling;
+pub mod spectral;
+pub mod wigner;

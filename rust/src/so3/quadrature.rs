@@ -1,0 +1,110 @@
+//! Quadrature weights of the SO(3) sampling theorem (paper Eq. 6):
+//!
+//! `w_B(j) = (2π sin β_j / B²) · Σ_{i=0}^{B-1} sin((2i+1) β_j) / (2i+1)`.
+//!
+//! These make the β-sum in the FSOFT an exact quadrature for the Wigner-d
+//! products of bandlimited functions:
+//! `Σ_j w_B(j) d(l,·)d(l',·) = 2π/(B(2l+1)) δ_{ll'}` for l, l' < B.
+//!
+//! Cost is O(B²) — negligible next to the transform (the paper notes the
+//! same) — but the j-loop is embarrassingly parallel and the parallel
+//! executor runs it as a prologue region anyway.
+
+use crate::error::Result;
+use crate::so3::sampling::GridAngles;
+
+/// Compute all 2B weights sequentially.
+pub fn weights(b: usize) -> Result<Vec<f64>> {
+    let angles = GridAngles::new(b)?;
+    Ok((0..2 * b).map(|j| weight_at(b, angles.betas[j])).collect())
+}
+
+/// A single weight w_B(j) for node angle β_j.
+pub fn weight_at(b: usize, beta_j: f64) -> f64 {
+    let mut acc = 0.0;
+    // Descending order sums the smallest terms first (they decay like 1/i),
+    // which keeps the floating-point error of the partial Fourier series of
+    // |sin| at the 1-ulp level.
+    for i in (0..b).rev() {
+        let n = (2 * i + 1) as f64;
+        acc += (n * beta_j).sin() / n;
+    }
+    2.0 * std::f64::consts::PI * beta_j.sin() / (b * b) as f64 * acc
+}
+
+/// Diagnostic: Σ_j w_B(j) must equal 2π/B · ∫₀^π sin β dβ / 2 · 2 = 2π/B.
+/// (Used by tests and the CLI `info` command.)
+pub fn weight_sum_expected(b: usize) -> f64 {
+    2.0 * std::f64::consts::PI / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::wigner::{self, WignerRowBuf};
+
+    #[test]
+    fn weights_are_positive_and_symmetric() {
+        for b in [1usize, 2, 7, 16, 32] {
+            let w = weights(b).unwrap();
+            assert_eq!(w.len(), 2 * b);
+            for (j, &wj) in w.iter().enumerate() {
+                assert!(wj > 0.0, "b={b} j={j}: {wj}");
+                // β-reflection symmetry of the node set ⇒ w[j] = w[2B-1-j].
+                assert!((wj - w[2 * b - 1 - j]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn weight_sum_matches_closed_form() {
+        for b in [1usize, 4, 8, 32, 64] {
+            let total: f64 = weights(b).unwrap().iter().sum();
+            let want = weight_sum_expected(b);
+            assert!(
+                (total - want).abs() < 1e-12 * want,
+                "b={b}: {total} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn quadrature_is_exact_for_legendre_products() {
+        // Σ_j w(j) d(l,0,0;β_j) d(l',0,0;β_j) = 2π/(B(2l+1)) δ_{ll'}
+        // — d(l,0,0) are the Legendre polynomials, the simplest Wigner-d.
+        let b = 8;
+        let w = weights(b).unwrap();
+        let angles = GridAngles::new(b).unwrap();
+        let mut rows = vec![vec![0.0; 2 * b]; b];
+        let mut buf = WignerRowBuf::new(b);
+        for (j, &bj) in angles.betas.iter().enumerate() {
+            wigner::d_column(b, 0, 0, bj, &mut buf);
+            for l in 0..b {
+                rows[l][j] = buf.values[l];
+            }
+        }
+        for l1 in 0..b {
+            for l2 in 0..b {
+                let dot: f64 = (0..2 * b).map(|j| w[j] * rows[l1][j] * rows[l2][j]).sum();
+                let want = if l1 == l2 {
+                    2.0 * std::f64::consts::PI / (b as f64 * (2 * l1 + 1) as f64)
+                } else {
+                    0.0
+                };
+                assert!(
+                    (dot - want).abs() < 1e-13,
+                    "l1={l1} l2={l2}: {dot} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn large_bandwidth_weights_stay_sane() {
+        let b = 256;
+        let w = weights(b).unwrap();
+        let total: f64 = w.iter().sum();
+        assert!((total - weight_sum_expected(b)).abs() < 1e-10);
+        assert!(w.iter().all(|&x| x > 0.0 && x < 1.0));
+    }
+}

@@ -1,0 +1,260 @@
+//! Rotation matrices and the z-y-z Euler-angle parameterization.
+//!
+//! `R(α, β, γ) = R_z(γ) · R_y(β) · R_z(α)` — paper Section 2.1.
+
+use std::ops::Mul;
+
+/// A 3×3 rotation matrix (row-major).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rotation {
+    pub m: [[f64; 3]; 3],
+}
+
+/// z-y-z Euler angles: α, γ ∈ [0, 2π), β ∈ [0, π].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EulerZyz {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+}
+
+impl Rotation {
+    pub const IDENTITY: Rotation = Rotation {
+        m: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]],
+    };
+
+    /// Elementary rotation about the x axis.
+    pub fn about_x(a: f64) -> Rotation {
+        let (s, c) = a.sin_cos();
+        Rotation {
+            m: [[1.0, 0.0, 0.0], [0.0, c, -s], [0.0, s, c]],
+        }
+    }
+
+    /// Elementary rotation about the y axis.
+    pub fn about_y(a: f64) -> Rotation {
+        let (s, c) = a.sin_cos();
+        Rotation {
+            m: [[c, 0.0, s], [0.0, 1.0, 0.0], [-s, 0.0, c]],
+        }
+    }
+
+    /// Elementary rotation about the z axis.
+    pub fn about_z(a: f64) -> Rotation {
+        let (s, c) = a.sin_cos();
+        Rotation {
+            m: [[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]],
+        }
+    }
+
+    /// Compose from z-y-z Euler angles: `R_z(γ) R_y(β) R_z(α)`.
+    pub fn from_euler(e: EulerZyz) -> Rotation {
+        Rotation::about_z(e.gamma) * Rotation::about_y(e.beta) * Rotation::about_z(e.alpha)
+    }
+
+    /// Transpose (= inverse for rotations).
+    pub fn transpose(&self) -> Rotation {
+        let mut t = [[0.0; 3]; 3];
+        for (r, row) in self.m.iter().enumerate() {
+            for (c, &v) in row.iter().enumerate() {
+                t[c][r] = v;
+            }
+        }
+        Rotation { m: t }
+    }
+
+    /// Inverse rotation.
+    #[inline]
+    pub fn inverse(&self) -> Rotation {
+        self.transpose()
+    }
+
+    /// Apply to a vector.
+    pub fn apply(&self, v: [f64; 3]) -> [f64; 3] {
+        let mut out = [0.0; 3];
+        for (r, row) in self.m.iter().enumerate() {
+            out[r] = row[0] * v[0] + row[1] * v[1] + row[2] * v[2];
+        }
+        out
+    }
+
+    /// Determinant (≈ 1 for proper rotations).
+    pub fn det(&self) -> f64 {
+        let m = &self.m;
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    }
+
+    /// Frobenius distance to another rotation.
+    pub fn frobenius_distance(&self, other: &Rotation) -> f64 {
+        let mut acc = 0.0;
+        for r in 0..3 {
+            for c in 0..3 {
+                let d = self.m[r][c] - other.m[r][c];
+                acc += d * d;
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Geodesic (angular) distance in radians: arccos((tr(R₁ᵀR₂) − 1)/2).
+    pub fn angular_distance(&self, other: &Rotation) -> f64 {
+        let rel = self.transpose() * *other;
+        let tr = rel.m[0][0] + rel.m[1][1] + rel.m[2][2];
+        ((tr - 1.0) / 2.0).clamp(-1.0, 1.0).acos()
+    }
+
+    /// Recover z-y-z Euler angles. For β ≈ 0 or π (gimbal lock) the split
+    /// between α and γ is not unique; we set γ = 0 there.
+    pub fn to_euler(&self) -> EulerZyz {
+        let m = &self.m;
+        // R = Rz(γ)Ry(β)Rz(α) ⇒ m[2][2] = cos β,
+        // m[0][2] = sin β cos γ, m[1][2] = sin β sin γ,
+        // m[2][0] = -sin β cos α, m[2][1] = sin β sin α.
+        let beta = m[2][2].clamp(-1.0, 1.0).acos();
+        let tau = std::f64::consts::TAU;
+        if beta.sin().abs() < 1e-12 {
+            // Gimbal lock: only α ± γ is defined.
+            let angle = m[1][0].atan2(m[0][0]);
+            if m[2][2] > 0.0 {
+                // β = 0: R = Rz(α + γ).
+                EulerZyz {
+                    alpha: angle.rem_euclid(tau),
+                    beta: 0.0,
+                    gamma: 0.0,
+                }
+            } else {
+                // β = π: R = Rz(γ - α) · diag-ish flip.
+                EulerZyz {
+                    alpha: (-angle).rem_euclid(tau),
+                    beta: std::f64::consts::PI,
+                    gamma: 0.0,
+                }
+            }
+        } else {
+            let gamma = m[1][2].atan2(m[0][2]);
+            let alpha = m[2][1].atan2(-m[2][0]);
+            EulerZyz {
+                alpha: alpha.rem_euclid(tau),
+                beta,
+                gamma: gamma.rem_euclid(tau),
+            }
+        }
+    }
+}
+
+impl Mul for Rotation {
+    type Output = Rotation;
+    fn mul(self, o: Rotation) -> Rotation {
+        let mut out = [[0.0; 3]; 3];
+        for (r, orow) in out.iter_mut().enumerate() {
+            for (c, cell) in orow.iter_mut().enumerate() {
+                *cell = (0..3).map(|k| self.m[r][k] * o.m[k][c]).sum();
+            }
+        }
+        Rotation { m: out }
+    }
+}
+
+impl EulerZyz {
+    pub fn new(alpha: f64, beta: f64, gamma: f64) -> Self {
+        Self { alpha, beta, gamma }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{Gen, Prop};
+
+    fn random_euler(g: &mut Gen) -> EulerZyz {
+        EulerZyz::new(
+            g.f64_in(0.0, std::f64::consts::TAU),
+            g.f64_in(0.05, std::f64::consts::PI - 0.05),
+            g.f64_in(0.0, std::f64::consts::TAU),
+        )
+    }
+
+    #[test]
+    fn elementary_rotations_are_orthogonal() {
+        for r in [
+            Rotation::about_x(0.7),
+            Rotation::about_y(-1.2),
+            Rotation::about_z(2.9),
+        ] {
+            let should_be_id = r * r.transpose();
+            assert!(should_be_id.frobenius_distance(&Rotation::IDENTITY) < 1e-14);
+            assert!((r.det() - 1.0).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn euler_roundtrip_property() {
+        Prop::new("euler zyz roundtrip").cases(200).run(|g| {
+            let e = random_euler(g);
+            let r = Rotation::from_euler(e);
+            let e2 = r.to_euler();
+            let r2 = Rotation::from_euler(e2);
+            Prop::assert_close(r.frobenius_distance(&r2), 0.0, 1e-10, "R(e) vs R(to_euler)")
+        });
+    }
+
+    #[test]
+    fn composition_is_associative() {
+        Prop::new("rotation associativity").cases(100).run(|g| {
+            let a = Rotation::from_euler(random_euler(g));
+            let b = Rotation::from_euler(random_euler(g));
+            let c = Rotation::from_euler(random_euler(g));
+            let lhs = (a * b) * c;
+            let rhs = a * (b * c);
+            Prop::assert_close(lhs.frobenius_distance(&rhs), 0.0, 1e-12, "(ab)c vs a(bc)")
+        });
+    }
+
+    #[test]
+    fn inverse_undoes_rotation() {
+        Prop::new("inverse").cases(100).run(|g| {
+            let r = Rotation::from_euler(random_euler(g));
+            let v = [g.signed_unit(), g.signed_unit(), g.signed_unit()];
+            let w = r.inverse().apply(r.apply(v));
+            Prop::assert_close(
+                (0..3).map(|i| (v[i] - w[i]).powi(2)).sum::<f64>().sqrt(),
+                0.0,
+                1e-12,
+                "R⁻¹Rv vs v",
+            )
+        });
+    }
+
+    #[test]
+    fn gimbal_lock_recovery() {
+        // β = 0: rotation reduces to Rz(α + γ).
+        let e = EulerZyz::new(0.4, 0.0, 1.1);
+        let r = Rotation::from_euler(e);
+        let back = r.to_euler();
+        assert!((back.beta).abs() < 1e-12);
+        let r2 = Rotation::from_euler(back);
+        assert!(r.frobenius_distance(&r2) < 1e-12);
+    }
+
+    #[test]
+    fn angular_distance_of_known_pair() {
+        let a = Rotation::IDENTITY;
+        let b = Rotation::about_z(0.5);
+        assert!((a.angular_distance(&b) - 0.5).abs() < 1e-12);
+        assert!((a.angular_distance(&a)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn apply_preserves_norm() {
+        Prop::new("isometry").cases(100).run(|g| {
+            let r = Rotation::from_euler(random_euler(g));
+            let v = [g.signed_unit(), g.signed_unit(), g.signed_unit()];
+            let n1 = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            let w = r.apply(v);
+            let n2 = (w[0] * w[0] + w[1] * w[1] + w[2] * w[2]).sqrt();
+            Prop::assert_close(n1, n2, 1e-12, "|Rv| vs |v|")
+        });
+    }
+}

@@ -1,0 +1,221 @@
+//! The Kostelec–Rockmore sampling grid on SO(3) and the grid-value
+//! container used by the transforms.
+//!
+//! For bandwidth B the grid has (2B)³ nodes with angles
+//! `α_i = iπ/B`, `β_j = (2j+1)π/(4B)`, `γ_k = kπ/B` (paper Eq. 5).
+//!
+//! Layout: **β-major, row-major (j, i, k)** — one β-slice is a contiguous
+//! `2B × 2B` matrix over (α, γ), which is exactly what the 2-D FFT stage
+//! wants, and each slice can be handed to a different worker.
+
+use crate::error::{Error, Result};
+use crate::fft::Complex64;
+use crate::so3::rotation::EulerZyz;
+
+/// Grid angles for bandwidth B.
+#[derive(Debug, Clone)]
+pub struct GridAngles {
+    pub b: usize,
+    pub alphas: Vec<f64>,
+    pub betas: Vec<f64>,
+    pub gammas: Vec<f64>,
+}
+
+impl GridAngles {
+    pub fn new(b: usize) -> Result<Self> {
+        if b == 0 {
+            return Err(Error::InvalidBandwidth(b));
+        }
+        let n = 2 * b;
+        let pi = std::f64::consts::PI;
+        let alphas: Vec<f64> = (0..n).map(|i| i as f64 * pi / b as f64).collect();
+        let betas: Vec<f64> = (0..n)
+            .map(|j| (2 * j + 1) as f64 * pi / (4.0 * b as f64))
+            .collect();
+        let gammas = alphas.clone();
+        Ok(Self {
+            b,
+            alphas,
+            betas,
+            gammas,
+        })
+    }
+
+    /// Euler angles of node (i, j, k).
+    pub fn euler(&self, i: usize, j: usize, k: usize) -> EulerZyz {
+        EulerZyz::new(self.alphas[i], self.betas[j], self.gammas[k])
+    }
+}
+
+/// Sampled function values on the (2B)³ grid, layout `[j][i][k]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct So3Grid {
+    b: usize,
+    data: Vec<Complex64>,
+}
+
+impl So3Grid {
+    /// Zero-filled grid.
+    pub fn zeros(b: usize) -> Result<Self> {
+        if b == 0 {
+            return Err(Error::InvalidBandwidth(b));
+        }
+        let n = 2 * b;
+        Ok(Self {
+            b,
+            data: vec![Complex64::zero(); n * n * n],
+        })
+    }
+
+    /// Wrap existing values (must have length (2B)³, layout [j][i][k]).
+    pub fn from_vec(b: usize, data: Vec<Complex64>) -> Result<Self> {
+        let n = 2 * b;
+        if data.len() != n * n * n {
+            return Err(Error::shape(n * n * n, data.len(), "So3Grid::from_vec"));
+        }
+        Ok(Self { b, data })
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.b
+    }
+
+    /// Grid edge 2B.
+    #[inline]
+    pub fn edge(&self) -> usize {
+        2 * self.b
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn flat_index(&self, i: usize, j: usize, k: usize) -> usize {
+        let n = self.edge();
+        debug_assert!(i < n && j < n && k < n);
+        (j * n + i) * n + k
+    }
+
+    /// Value at node (α_i, β_j, γ_k).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize, k: usize) -> Complex64 {
+        self.data[self.flat_index(i, j, k)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, k: usize, v: Complex64) {
+        let idx = self.flat_index(i, j, k);
+        self.data[idx] = v;
+    }
+
+    /// The contiguous β-slice j as a 2B×2B row-major matrix over (i, k).
+    pub fn slice(&self, j: usize) -> &[Complex64] {
+        let n = self.edge();
+        &self.data[j * n * n..(j + 1) * n * n]
+    }
+
+    pub fn slice_mut(&mut self, j: usize) -> &mut [Complex64] {
+        let n = self.edge();
+        &mut self.data[j * n * n..(j + 1) * n * n]
+    }
+
+    pub fn as_slice(&self) -> &[Complex64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [Complex64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<Complex64> {
+        self.data
+    }
+
+    /// Max |difference| against another grid (same bandwidth required).
+    pub fn max_abs_error(&self, other: &So3Grid) -> f64 {
+        assert_eq!(self.b, other.b, "bandwidth mismatch");
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn angles_match_paper_formulas() {
+        let g = GridAngles::new(4).unwrap();
+        let pi = std::f64::consts::PI;
+        assert_eq!(g.alphas.len(), 8);
+        assert!((g.alphas[3] - 3.0 * pi / 4.0).abs() < 1e-15);
+        assert!((g.betas[0] - pi / 16.0).abs() < 1e-15);
+        assert!((g.betas[7] - 15.0 * pi / 16.0).abs() < 1e-15);
+        assert_eq!(g.alphas, g.gammas);
+        // β stays strictly inside (0, π): the log-domain Wigner seeds
+        // depend on it.
+        for &bj in &g.betas {
+            assert!(bj > 0.0 && bj < pi);
+        }
+    }
+
+    #[test]
+    fn beta_nodes_are_reflection_symmetric() {
+        // π - β_j = β_{2B-1-j}: the property the symmetry clustering uses.
+        for b in [1usize, 3, 8, 16] {
+            let g = GridAngles::new(b).unwrap();
+            let n = 2 * b;
+            for j in 0..n {
+                let refl = std::f64::consts::PI - g.betas[j];
+                assert!(
+                    (refl - g.betas[n - 1 - j]).abs() < 1e-14,
+                    "b={b} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_zero_bandwidth() {
+        assert!(GridAngles::new(0).is_err());
+        assert!(So3Grid::zeros(0).is_err());
+    }
+
+    #[test]
+    fn grid_indexing_layout() {
+        let mut g = So3Grid::zeros(2).unwrap();
+        let n = g.edge();
+        assert_eq!(n, 4);
+        g.set(1, 2, 3, Complex64::new(7.0, -1.0));
+        assert_eq!(g.get(1, 2, 3), Complex64::new(7.0, -1.0));
+        // slice(2) holds row i=1, col k=3 at offset 1*n + 3.
+        assert_eq!(g.slice(2)[n + 3], Complex64::new(7.0, -1.0));
+        assert_eq!(g.len(), 64);
+    }
+
+    #[test]
+    fn from_vec_validates_length() {
+        assert!(So3Grid::from_vec(2, vec![Complex64::zero(); 63]).is_err());
+        assert!(So3Grid::from_vec(2, vec![Complex64::zero(); 64]).is_ok());
+    }
+
+    #[test]
+    fn max_abs_error_reports_peak() {
+        let mut a = So3Grid::zeros(2).unwrap();
+        let b = So3Grid::zeros(2).unwrap();
+        a.set(0, 0, 0, Complex64::new(0.5, 0.0));
+        a.set(1, 1, 1, Complex64::new(0.0, -2.0));
+        assert!((a.max_abs_error(&b) - 2.0).abs() < 1e-15);
+    }
+}

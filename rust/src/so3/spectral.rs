@@ -1,0 +1,195 @@
+//! Spectral utilities on SO(3): power spectra, Parseval-consistent
+//! norms, and degree-wise filters (heat kernel / low-pass) — the
+//! post-transform toolbox a downstream user of the FSOFT needs.
+//!
+//! Norm conventions (our basis, see `so3::wigner`):
+//! `‖f‖² = ∫ |f|² dR = Σ_{l,m,m'} 8π²/(2l+1) |f°(l,m,m')|²`, and the
+//! same integral is computed exactly on the K&R grid as
+//! `(π/B) Σ_{i,j,k} w_B(j) |f(α_i, β_j, γ_k)|²` (the quadrature is
+//! exact for products of two bandwidth-B functions). The agreement of
+//! these two expressions — Parseval through the whole pipeline — is one
+//! of the library's strongest self-tests.
+
+use crate::error::Result;
+use crate::so3::coeffs::So3Coeffs;
+use crate::so3::quadrature;
+use crate::so3::sampling::So3Grid;
+
+/// Per-degree power: `P(l) = 8π²/(2l+1) Σ_{m,m'} |f°(l,m,m')|²`.
+pub fn power_spectrum(coeffs: &So3Coeffs) -> Vec<f64> {
+    let b = coeffs.bandwidth();
+    let mut p = vec![0.0; b];
+    for (l, _, _, v) in coeffs.iter() {
+        p[l] += 8.0 * std::f64::consts::PI.powi(2) / (2 * l + 1) as f64 * v.norm_sqr();
+    }
+    p
+}
+
+/// Squared L² norm from the spectrum (Parseval).
+pub fn norm_sqr_spectral(coeffs: &So3Coeffs) -> f64 {
+    power_spectrum(coeffs).iter().sum()
+}
+
+/// Squared L² norm from grid samples via the exact quadrature:
+/// `(π/B) Σ_{i,j,k} w_B(j) |f(i,j,k)|²`.
+pub fn norm_sqr_grid(grid: &So3Grid) -> Result<f64> {
+    let b = grid.bandwidth();
+    let n = 2 * b;
+    let w = quadrature::weights(b)?;
+    let mut acc = 0.0;
+    for j in 0..n {
+        let mut slice_sum = 0.0;
+        for v in grid.slice(j) {
+            slice_sum += v.norm_sqr();
+        }
+        acc += w[j] * slice_sum;
+    }
+    Ok(acc * std::f64::consts::PI / b as f64)
+}
+
+/// Apply a degree-dependent multiplier `h(l)` in place (the general
+/// spectral filter: smoothing, sharpening, band selection).
+pub fn apply_degree_filter(coeffs: &mut So3Coeffs, h: impl Fn(usize) -> f64) {
+    let b = coeffs.bandwidth();
+    for l in 0..b {
+        let li = l as i64;
+        let g = h(l);
+        for m in -li..=li {
+            for mp in -li..=li {
+                let v = coeffs.at(l, m, mp);
+                *coeffs.at_mut(l, m, mp) = v.scale(g);
+            }
+        }
+    }
+}
+
+/// Heat-kernel (Gaussian) smoothing: `f°(l) ← e^{-l(l+1)t} f°(l)` —
+/// the solution of the diffusion equation on SO(3) at time t.
+pub fn heat_kernel_smooth(coeffs: &mut So3Coeffs, t: f64) {
+    apply_degree_filter(coeffs, |l| (-((l * (l + 1)) as f64) * t).exp());
+}
+
+/// Hard low-pass: zero all degrees `l ≥ cutoff`.
+pub fn low_pass(coeffs: &mut So3Coeffs, cutoff: usize) {
+    apply_degree_filter(coeffs, |l| if l < cutoff { 1.0 } else { 0.0 });
+}
+
+/// Effective bandwidth: smallest `c` such that degrees ≥ c carry less
+/// than `epsilon` of the total energy.
+pub fn effective_bandwidth(coeffs: &So3Coeffs, epsilon: f64) -> usize {
+    let p = power_spectrum(coeffs);
+    let total: f64 = p.iter().sum();
+    if total == 0.0 {
+        return 0;
+    }
+    let mut tail = 0.0;
+    for l in (0..p.len()).rev() {
+        tail += p[l];
+        if tail > epsilon * total {
+            return l + 1;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Prop;
+    use crate::transform::So3Fft;
+
+    /// Parseval through the whole pipeline: spectral norm == grid norm.
+    #[test]
+    fn parseval_identity() {
+        for b in [2usize, 4, 8, 16] {
+            let coeffs = So3Coeffs::random(b, b as u64 + 1);
+            let fft = So3Fft::new(b).unwrap();
+            let grid = fft.inverse(&coeffs).unwrap();
+            let ns = norm_sqr_spectral(&coeffs);
+            let ng = norm_sqr_grid(&grid).unwrap();
+            assert!(
+                (ns - ng).abs() < 1e-10 * ns,
+                "b={b}: spectral {ns} vs grid {ng}"
+            );
+        }
+    }
+
+    #[test]
+    fn power_spectrum_isolates_degrees() {
+        let b = 6;
+        let mut coeffs = So3Coeffs::zeros(b);
+        coeffs
+            .set(3, 1, -2, crate::Complex64::new(2.0, 0.0))
+            .unwrap();
+        let p = power_spectrum(&coeffs);
+        for (l, &pl) in p.iter().enumerate() {
+            if l == 3 {
+                let want = 8.0 * std::f64::consts::PI.powi(2) / 7.0 * 4.0;
+                assert!((pl - want).abs() < 1e-12);
+            } else {
+                assert_eq!(pl, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn heat_kernel_contracts_and_preserves_l0() {
+        let b = 8;
+        let mut coeffs = So3Coeffs::random(b, 3);
+        let before = power_spectrum(&coeffs);
+        heat_kernel_smooth(&mut coeffs, 0.1);
+        let after = power_spectrum(&coeffs);
+        assert!((after[0] - before[0]).abs() < 1e-14, "l=0 is invariant");
+        for l in 1..b {
+            assert!(after[l] < before[l], "degree {l} must shrink");
+        }
+        // Decay follows e^{-2 l(l+1) t} in power.
+        let ratio = after[2] / before[2];
+        let want = (-2.0 * 6.0 * 0.1f64).exp();
+        assert!((ratio - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_pass_annihilates_tail() {
+        let b = 8;
+        let mut coeffs = So3Coeffs::random(b, 4);
+        low_pass(&mut coeffs, 3);
+        let p = power_spectrum(&coeffs);
+        assert!(p[..3].iter().all(|&x| x > 0.0));
+        assert!(p[3..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn effective_bandwidth_detects_cutoff() {
+        Prop::new("effective bandwidth").cases(30).run(|g| {
+            let b = g.usize_in(3, 12);
+            let cut = g.usize_in(1, b);
+            let mut coeffs = So3Coeffs::random(b, g.u64());
+            low_pass(&mut coeffs, cut);
+            let eff = effective_bandwidth(&coeffs, 1e-12);
+            Prop::assert_true(
+                eff <= cut,
+                &format!("eff {eff} must be <= planted cutoff {cut}"),
+            )
+        });
+    }
+
+    #[test]
+    fn filtering_commutes_with_transform() {
+        // iFSOFT(h·f°) == filtered synthesis: apply filter pre-synthesis
+        // vs analyze → filter → synthesize must agree.
+        let b = 6;
+        let fft = So3Fft::new(b).unwrap();
+        let coeffs = So3Coeffs::random(b, 5);
+        let mut pre = coeffs.clone();
+        heat_kernel_smooth(&mut pre, 0.05);
+        let grid_pre = fft.inverse(&pre).unwrap();
+
+        let grid = fft.inverse(&coeffs).unwrap();
+        let mut post = fft.forward(&grid).unwrap();
+        heat_kernel_smooth(&mut post, 0.05);
+        let grid_post = fft.inverse(&post).unwrap();
+
+        assert!(grid_pre.max_abs_error(&grid_post) < 1e-11);
+    }
+}

@@ -1,0 +1,511 @@
+//! Wigner-d functions `d(l, m, m'; β)` — the β-dependent core of the
+//! SO(3) basis functions (paper Section 2.2).
+//!
+//! Implementation notes:
+//!
+//! * **Seeds** (paper's initial cases) are evaluated in the log domain,
+//!   `exp(½(ln(2m)! − ln(m+m')! − ln(m−m')!) + (m+m')ln cos(β/2) +
+//!   (m−m')ln sin(β/2))`, so they neither overflow (factorial ratios reach
+//!   ~10^300 at B = 512) nor lose accuracy.
+//! * **Recurrence** is the paper's three-term relation (Eq. 2), run upward
+//!   in l (the numerically stable direction). At l = l₀ the coefficient of
+//!   the d(l−1) term vanishes, so the recurrence self-starts from
+//!   (0, seed).
+//! * **Order reduction**: arbitrary (m, m') is reduced to m ≥ |m'| ≥ 0 via
+//!   the symmetries `d(l,m,m') = d(l,−m',−m)` and
+//!   `d(l,m,m') = (−1)^{m−m'} d(l,−m,−m')`, which introduce at most a
+//!   single l-independent sign.
+//! * **Convention** (verified by tests): the paper's seed+recurrence equals
+//!   the Edmonds/Wikipedia explicit sum with the two orders swapped,
+//!   `d_paper(l, m, m') = d_edmonds(l, m', m)`; all seven symmetries of
+//!   paper Eq. 3 hold exactly.
+//!
+//! The row stepper is generic over the scalar so the same code runs in f64
+//! and in double-double ([`crate::xprec::Dd`]) for the extended-precision
+//! path the paper uses at bandwidth 512.
+
+use crate::util::{ln_factorial, parity_sign};
+use crate::xprec::Dd;
+
+/// Scalar abstraction so the recurrence can run in f64 or double-double.
+pub trait WScalar: Copy {
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+    fn mul_f64(self, s: f64) -> Self;
+}
+
+impl WScalar for f64 {
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        self * o
+    }
+    #[inline]
+    fn mul_f64(self, s: f64) -> Self {
+        self * s
+    }
+}
+
+impl WScalar for Dd {
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        Dd::from_f64(x)
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        Dd::to_f64(self)
+    }
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        self * o
+    }
+    #[inline]
+    fn mul_f64(self, s: f64) -> Self {
+        Dd::mul_f64(self, s)
+    }
+}
+
+/// Reduced order pair: m ≥ |m'| ≥ 0 plus the sign of the reduction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReducedOrders {
+    pub m: i64,
+    pub mp: i64,
+    /// +1 or −1; `d(l, m_orig, mp_orig) = sign · d(l, m, mp)` for all l.
+    pub sign: f64,
+}
+
+/// Reduce (m, m') to the canonical domain m ≥ |m'| ≥ 0.
+pub fn reduce_orders(mut m: i64, mut mp: i64) -> ReducedOrders {
+    let mut sign = 1.0;
+    if mp.abs() > m.abs() {
+        // d(l, m, m') = d(l, -m', -m) — paper Eq. 3 line 7, no sign.
+        let (nm, nmp) = (-mp, -m);
+        m = nm;
+        mp = nmp;
+    }
+    if m < 0 {
+        // d(l, m, m') = (-1)^{m-m'} d(l, -m, -m') — Eq. 3 line 1.
+        sign = parity_sign(m - mp);
+        m = -m;
+        mp = -mp;
+    }
+    debug_assert!(m >= mp.abs());
+    ReducedOrders { m, mp, sign }
+}
+
+/// Lowest degree carrying the order pair: l₀ = max(|m|, |m'|).
+#[inline]
+pub fn l_min(m: i64, mp: i64) -> usize {
+    m.abs().max(mp.abs()) as usize
+}
+
+/// Log-domain seed `d(m, m, m'; β)` for the reduced domain m ≥ |m'|.
+/// β must lie strictly inside (0, π) — true for every grid node.
+/// Public for the Clenshaw dataflow, which seeds per β-node.
+pub fn d_seed(m: i64, mp: i64, beta: f64) -> f64 {
+    debug_assert!(m >= mp.abs());
+    if m == 0 {
+        return 1.0;
+    }
+    let half = 0.5 * beta;
+    let (s, c) = half.sin_cos();
+    debug_assert!(s > 0.0 && c > 0.0, "β must be in (0, π)");
+    let ln_mag = 0.5
+        * (ln_factorial((2 * m) as u64)
+            - ln_factorial((m + mp) as u64)
+            - ln_factorial((m - mp) as u64))
+        + (m + mp) as f64 * c.ln()
+        + (m - mp) as f64 * s.ln();
+    ln_mag.exp()
+}
+
+/// Recurrence coefficients for the step l → l+1 at fixed (m, m'):
+/// `d_{l+1} = (a1·cosβ + a2)·d_l − a3·d_{l−1}`.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCoeffs {
+    pub a1: f64,
+    pub a2: f64,
+    pub a3: f64,
+}
+
+/// Coefficients of paper Eq. 2 (valid for l ≥ 1; l = 0 only occurs for
+/// m = m' = 0 where the step is simply d₁ = cosβ).
+pub fn step_coeffs(l: usize, m: i64, mp: i64) -> StepCoeffs {
+    debug_assert!(l >= 1);
+    let lf = l as f64;
+    let l1 = lf + 1.0;
+    let m2 = (m * m) as f64;
+    let mp2 = (mp * mp) as f64;
+    let norm = ((l1 * l1 - m2) * (l1 * l1 - mp2)).sqrt();
+    let a1 = (2.0 * lf + 1.0) * l1 / norm;
+    let a2 = -(2.0 * lf + 1.0) * (m * mp) as f64 / (lf * norm);
+    let a3 = l1 / lf * ((lf * lf - m2) * (lf * lf - mp2)).sqrt() / norm;
+    StepCoeffs { a1, a2, a3 }
+}
+
+/// Streaming generator of Wigner-d **rows over the β grid**: successive
+/// calls produce `d(l, m, m'; β_j)` for l = l₀, l₀+1, … and all j at once.
+/// This is the l-outer order the DWT wants, and it never materializes the
+/// full (B−l₀)×2B table.
+pub struct WignerRowStepper<R: WScalar = f64> {
+    m: i64,
+    mp: i64,
+    sign: f64,
+    l0: usize,
+    /// Degree of the row `cur` currently holds (the next row returned).
+    l: usize,
+    cos_betas: Vec<f64>,
+    prev: Vec<R>,
+    cur: Vec<R>,
+}
+
+impl<R: WScalar> WignerRowStepper<R> {
+    /// Prepare a stepper for (possibly unreduced) orders at the given
+    /// β nodes.
+    pub fn new(m: i64, mp: i64, betas: &[f64]) -> Self {
+        let red = reduce_orders(m, mp);
+        let l0 = l_min(red.m, red.mp);
+        let n = betas.len();
+        let mut cur = Vec::with_capacity(n);
+        for &b in betas {
+            cur.push(R::from_f64(red.sign * d_seed(red.m, red.mp, b)));
+        }
+        Self {
+            m: red.m,
+            mp: red.mp,
+            sign: red.sign,
+            l0,
+            l: l0,
+            cos_betas: betas.iter().map(|&b| b.cos()).collect(),
+            prev: vec![R::from_f64(0.0); n],
+            cur,
+        }
+    }
+
+    /// Lowest degree l₀ of this order pair.
+    #[inline]
+    pub fn l_min(&self) -> usize {
+        self.l0
+    }
+
+    /// Degree of the row the next `row()` call returns.
+    #[inline]
+    pub fn current_l(&self) -> usize {
+        self.l
+    }
+
+    /// Borrow the current row (degree `current_l()`), values over j.
+    #[inline]
+    pub fn row(&self) -> &[R] {
+        &self.cur
+    }
+
+    /// Advance to the next degree.
+    pub fn advance(&mut self) {
+        let l = self.l;
+        if l == 0 {
+            // Only reachable for m = m' = 0: d₁(β) = cosβ · d₀(β).
+            for (j, p) in self.prev.iter_mut().enumerate() {
+                let c = self.cur[j];
+                *p = c;
+                self.cur[j] = c.mul_f64(self.cos_betas[j]);
+            }
+        } else {
+            let StepCoeffs { a1, a2, a3 } = step_coeffs(l, self.m, self.mp);
+            for j in 0..self.cur.len() {
+                let c = self.cur[j];
+                let p = self.prev[j];
+                let factor = a1 * self.cos_betas[j] + a2;
+                let next = c.mul_f64(factor).sub(p.mul_f64(a3));
+                self.prev[j] = c;
+                self.cur[j] = next;
+            }
+        }
+        self.l += 1;
+    }
+
+    /// Reduction sign actually applied to the seed (diagnostics).
+    #[inline]
+    pub fn reduction_sign(&self) -> f64 {
+        self.sign
+    }
+}
+
+/// Scratch buffer for [`d_column`]: values indexed by l (0..B); entries
+/// below l₀ are zero.
+#[derive(Debug, Clone)]
+pub struct WignerRowBuf {
+    pub values: Vec<f64>,
+}
+
+impl WignerRowBuf {
+    pub fn new(b: usize) -> Self {
+        Self {
+            values: vec![0.0; b],
+        }
+    }
+}
+
+/// Fill `buf.values[l] = d(l, m, m'; β)` for l = l₀..B−1 (zeros below l₀).
+/// Column-wise access — used by oracles, apps, and tests; the transform
+/// hot path uses [`WignerRowStepper`] instead.
+pub fn d_column(b: usize, m: i64, mp: i64, beta: f64, buf: &mut WignerRowBuf) {
+    assert!(buf.values.len() >= b);
+    for v in buf.values[..b].iter_mut() {
+        *v = 0.0;
+    }
+    let mut stepper: WignerRowStepper<f64> = WignerRowStepper::new(m, mp, &[beta]);
+    let l0 = stepper.l_min();
+    for l in l0..b {
+        buf.values[l] = stepper.row()[0];
+        if l + 1 < b {
+            stepper.advance();
+        }
+    }
+}
+
+/// Single value d(l, m, m'; β) via the recurrence.
+pub fn d_single(l: usize, m: i64, mp: i64, beta: f64) -> f64 {
+    let l0 = l_min(m, mp);
+    if l < l0 {
+        return 0.0;
+    }
+    let mut stepper: WignerRowStepper<f64> = WignerRowStepper::new(m, mp, &[beta]);
+    for _ in l0..l {
+        stepper.advance();
+    }
+    stepper.row()[0]
+}
+
+/// Explicit-sum oracle in the paper's convention:
+/// `d_paper(l, m, m') = d_edmonds(l, m', m)` (see module docs).
+/// O(l) terms; used only in tests and small-scale reference paths.
+pub fn d_explicit(l: i64, m: i64, mp: i64, beta: f64) -> f64 {
+    // Evaluate the Edmonds sum with orders swapped: a = m', b = m.
+    let (a, b) = (mp, m);
+    if m.abs() > l || mp.abs() > l {
+        return 0.0;
+    }
+    let half = 0.5 * beta;
+    let (s, c) = half.sin_cos();
+    let k_lo = 0.max(b - a);
+    let k_hi = (l + b).min(l - a);
+    let mut total = 0.0;
+    let pref = 0.5
+        * (ln_factorial((l + a) as u64)
+            + ln_factorial((l - a) as u64)
+            + ln_factorial((l + b) as u64)
+            + ln_factorial((l - b) as u64));
+    for k in k_lo..=k_hi {
+        let den = ln_factorial((l + b - k) as u64)
+            + ln_factorial(k as u64)
+            + ln_factorial((a - b + k) as u64)
+            + ln_factorial((l - a - k) as u64);
+        let cpow = 2 * l + b - a - 2 * k;
+        let spow = a - b + 2 * k;
+        // Angles are interior, so ln c / ln s are finite; still guard the
+        // zero-exponent cases to avoid 0·(-inf).
+        let ln_cs = if cpow == 0 { 0.0 } else { cpow as f64 * c.ln() }
+            + if spow == 0 { 0.0 } else { spow as f64 * s.ln() };
+        total += parity_sign(a - b + k) * (pref - den + ln_cs).exp();
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::sampling::GridAngles;
+    use crate::testkit::Prop;
+
+    const PI: f64 = std::f64::consts::PI;
+
+    #[test]
+    fn seed_matches_paper_formula_small_cases() {
+        // d(1, 1, 0; β) = √2 cos(β/2) sin(β/2) = sinβ/√2.
+        for &beta in &[0.3, 1.1, 2.7] {
+            let got = d_single(1, 1, 0, beta);
+            let want = beta.sin() / 2.0_f64.sqrt();
+            assert!((got - want).abs() < 1e-14, "{got} vs {want}");
+        }
+        // d(1, 1, 1; β) = cos²(β/2) = (1+cosβ)/2.
+        for &beta in &[0.3, 1.1, 2.7] {
+            let got = d_single(1, 1, 1, beta);
+            let want = (1.0 + beta.cos()) / 2.0;
+            assert!((got - want).abs() < 1e-14);
+        }
+        // d(1, 1, -1; β) = sin²(β/2) = (1-cosβ)/2.
+        for &beta in &[0.3, 1.1, 2.7] {
+            let got = d_single(1, 1, -1, beta);
+            let want = (1.0 - beta.cos()) / 2.0;
+            assert!((got - want).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn legendre_special_case() {
+        // d(l, 0, 0; β) = P_l(cosβ).
+        for &beta in &[0.4f64, 1.3, 2.2] {
+            let x = beta.cos();
+            assert!((d_single(0, 0, 0, beta) - 1.0).abs() < 1e-15);
+            assert!((d_single(1, 0, 0, beta) - x).abs() < 1e-15);
+            assert!((d_single(2, 0, 0, beta) - (1.5 * x * x - 0.5)).abs() < 1e-14);
+            assert!(
+                (d_single(3, 0, 0, beta) - (2.5 * x * x * x - 1.5 * x)).abs() < 1e-14
+            );
+        }
+    }
+
+    #[test]
+    fn recurrence_matches_explicit_oracle() {
+        Prop::new("wigner recurrence vs explicit sum")
+            .cases(300)
+            .run(|g| {
+                let l = g.i64_in(0, 24);
+                let m = if l == 0 { 0 } else { g.i64_in(-l, l) };
+                let mp = if l == 0 { 0 } else { g.i64_in(-l, l) };
+                let beta = g.f64_in(0.02, PI - 0.02);
+                let fast = d_single(l as usize, m, mp, beta);
+                let slow = d_explicit(l, m, mp, beta);
+                // The explicit sum cancels heavily (alternating huge
+                // terms), so its own accuracy bounds the tolerance here;
+                // the machine-precision check is quadrature orthogonality.
+                Prop::assert_close(fast, slow, 1e-7, "d recur vs explicit")
+            });
+    }
+
+    #[test]
+    fn all_seven_symmetries_hold() {
+        Prop::new("paper Eq. 3 symmetries").cases(300).run(|g| {
+            let l = g.i64_in(1, 20);
+            let m = g.i64_in(-l, l);
+            let mp = g.i64_in(-l, l);
+            let beta = g.f64_in(0.02, PI - 0.02);
+            let d = d_single(l as usize, m, mp, beta);
+            let cases: [(f64, f64, &str); 7] = [
+                (parity_sign(m - mp), d_single(l as usize, -m, -mp, beta), "line1"),
+                (parity_sign(m - mp), d_single(l as usize, mp, m, beta), "line2"),
+                (parity_sign(l - mp), d_single(l as usize, -m, mp, PI - beta), "line3"),
+                (parity_sign(l + m), d_single(l as usize, m, -mp, PI - beta), "line4"),
+                (parity_sign(l - mp), d_single(l as usize, -mp, m, PI - beta), "line5"),
+                (parity_sign(l + m), d_single(l as usize, mp, -m, PI - beta), "line6"),
+                (1.0, d_single(l as usize, -mp, -m, beta), "line7"),
+            ];
+            for (sign, val, name) in cases {
+                Prop::assert_close(sign * val, d, 1e-10, name)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stepper_rows_match_columns() {
+        let b = 12;
+        let angles = GridAngles::new(b).unwrap();
+        for &(m, mp) in &[(0i64, 0i64), (3, 1), (-5, 2), (2, -7), (11, 11), (11, -11)] {
+            let mut stepper: WignerRowStepper<f64> =
+                WignerRowStepper::new(m, mp, &angles.betas);
+            let l0 = stepper.l_min();
+            let mut buf = WignerRowBuf::new(b);
+            for l in l0..b {
+                let row = stepper.row().to_vec();
+                for (j, &bj) in angles.betas.iter().enumerate() {
+                    d_column(b, m, mp, bj, &mut buf);
+                    assert!(
+                        (row[j] - buf.values[l]).abs() < 1e-12,
+                        "m={m} mp={mp} l={l} j={j}"
+                    );
+                }
+                if l + 1 < b {
+                    stepper.advance();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn values_bounded_by_one() {
+        // |d(l,m,m')| ≤ 1 always; check deep degrees for stability.
+        let betas: Vec<f64> = (0..32)
+            .map(|j| (2 * j + 1) as f64 * PI / 128.0)
+            .collect();
+        for &(m, mp) in &[(0i64, 0i64), (10, 5), (60, -30), (100, 100)] {
+            let mut st: WignerRowStepper<f64> = WignerRowStepper::new(m, mp, &betas);
+            for _ in st.l_min()..512 {
+                for &v in st.row() {
+                    assert!(v.abs() <= 1.0 + 1e-9, "m={m} mp={mp}: {v}");
+                    assert!(v.is_finite());
+                }
+                st.advance();
+            }
+        }
+    }
+
+    #[test]
+    fn dd_stepper_agrees_with_f64() {
+        let betas: Vec<f64> = (0..16).map(|j| (2 * j + 1) as f64 * PI / 64.0).collect();
+        let mut f: WignerRowStepper<f64> = WignerRowStepper::new(4, -2, &betas);
+        let mut x: WignerRowStepper<Dd> = WignerRowStepper::new(4, -2, &betas);
+        for _ in 0..40 {
+            for (a, b) in f.row().iter().zip(x.row().iter()) {
+                assert!((a - b.to_f64()).abs() < 1e-12);
+            }
+            f.advance();
+            x.advance();
+        }
+    }
+
+    #[test]
+    fn reduce_orders_covers_all_quadrants() {
+        Prop::new("order reduction").cases(200).run(|g| {
+            let m = g.i64_in(-30, 30);
+            let mp = g.i64_in(-30, 30);
+            let r = reduce_orders(m, mp);
+            Prop::assert_true(r.m >= r.mp.abs(), "canonical domain")?;
+            Prop::assert_true(r.sign == 1.0 || r.sign == -1.0, "sign is ±1")?;
+            // The reduction must preserve the function value.
+            let beta = g.f64_in(0.1, PI - 0.1);
+            let l = (r.m.abs().max(30)) as usize;
+            let direct = d_explicit(l as i64, m, mp, beta);
+            let reduced = r.sign * d_explicit(l as i64, r.m, r.mp, beta);
+            // Tolerance bounded by the explicit sum's cancellation error.
+            Prop::assert_close(direct, reduced, 1e-6, "reduction preserves d")
+        });
+    }
+
+    #[test]
+    fn seed_underflow_is_graceful() {
+        // Extreme order at a near-axial angle: the true value underflows;
+        // we must return 0.0, not NaN/inf.
+        let betas = [1e-3];
+        let st: WignerRowStepper<f64> = WignerRowStepper::new(500, 0, &betas);
+        let v = st.row()[0];
+        assert!(v == 0.0 || v.is_finite());
+    }
+}

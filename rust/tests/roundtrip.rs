@@ -1,0 +1,134 @@
+//! Integration: full-transform roundtrip accuracy across bandwidths and
+//! configurations (the paper's Table 1 protocol at test scale), plus the
+//! end-to-end agreement with the direct O(B⁶) definition.
+
+use so3ft::coordinator::PartitionStrategy;
+use so3ft::dwt::tables::WignerStorage;
+use so3ft::dwt::{DwtAlgorithm, Precision};
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::transform::{direct, So3Fft};
+
+#[test]
+fn roundtrip_error_scales_like_paper() {
+    // Table 1: error grows mildly with B; all well under 1e-12 at these
+    // scales in double precision.
+    let mut last = 0.0;
+    for b in [4usize, 8, 16] {
+        let fft = So3Fft::new(b).unwrap();
+        let mut worst: f64 = 0.0;
+        for run in 0..3 {
+            let coeffs = So3Coeffs::random(b, 100 + run);
+            let grid = fft.inverse(&coeffs).unwrap();
+            let back = fft.forward(&grid).unwrap();
+            worst = worst.max(coeffs.max_abs_error(&back));
+        }
+        assert!(worst < 1e-12, "b={b}: worst abs error {worst}");
+        assert!(
+            worst > last * 0.2,
+            "error should not shrink wildly with B (sanity)"
+        );
+        last = worst;
+    }
+}
+
+#[test]
+fn all_configurations_roundtrip_b12() {
+    let b = 12;
+    let coeffs = So3Coeffs::random(b, 5);
+    for strategy in [
+        PartitionStrategy::GeometricClustered,
+        PartitionStrategy::SigmaClustered,
+        PartitionStrategy::NoSymmetry,
+    ] {
+        for algorithm in [DwtAlgorithm::MatVec, DwtAlgorithm::Clenshaw] {
+            for storage in [WignerStorage::Precomputed, WignerStorage::OnTheFly] {
+                for precision in [Precision::Double, Precision::Extended] {
+                    // Skip invalid combinations (rejected by the builder).
+                    let builder = So3Fft::builder(b)
+                        .strategy(strategy)
+                        .algorithm(algorithm)
+                        .storage(storage)
+                        .precision(precision)
+                        .threads(2);
+                    let fft = match builder.build() {
+                        Ok(f) => f,
+                        Err(_) => continue,
+                    };
+                    let grid = fft.inverse(&coeffs).unwrap();
+                    let back = fft.forward(&grid).unwrap();
+                    let err = coeffs.max_abs_error(&back);
+                    assert!(
+                        err < 1e-11,
+                        "{strategy:?}/{algorithm:?}/{storage:?}/{precision:?}: {err}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn extended_precision_is_at_least_as_accurate() {
+    let b = 16;
+    let coeffs = So3Coeffs::random(b, 77);
+    let run = |precision| {
+        let fft = So3Fft::builder(b).precision(precision).build().unwrap();
+        let grid = fft.inverse(&coeffs).unwrap();
+        let back = fft.forward(&grid).unwrap();
+        coeffs.max_abs_error(&back)
+    };
+    let double = run(Precision::Double);
+    let extended = run(Precision::Extended);
+    assert!(
+        extended <= double * 1.5,
+        "extended ({extended}) should not be worse than double ({double})"
+    );
+}
+
+#[test]
+fn fast_transforms_match_direct_definition_b3() {
+    let coeffs = So3Coeffs::random(3, 9);
+    let fft = So3Fft::new(3).unwrap();
+    let fast_grid = fft.inverse(&coeffs).unwrap();
+    let slow_grid = direct::synthesis(&coeffs).unwrap();
+    assert!(fast_grid.max_abs_error(&slow_grid) < 1e-10);
+    let fast_coeffs = fft.forward(&fast_grid).unwrap();
+    let slow_coeffs = direct::analysis(&slow_grid).unwrap();
+    assert!(fast_coeffs.max_abs_error(&slow_coeffs) < 1e-10);
+}
+
+#[test]
+fn linearity_of_transform() {
+    // FSOFT is linear: T(a·x + y) = a·T(x) + T(y).
+    let b = 8;
+    let fft = So3Fft::new(b).unwrap();
+    let c1 = So3Coeffs::random(b, 1);
+    let c2 = So3Coeffs::random(b, 2);
+    let g1 = fft.inverse(&c1).unwrap();
+    let g2 = fft.inverse(&c2).unwrap();
+    // combined coefficients: 2*c1 + c2
+    let mut c3 = So3Coeffs::zeros(b);
+    for (i, v) in c3.as_mut_slice().iter_mut().enumerate() {
+        *v = c1.as_slice()[i].scale(2.0) + c2.as_slice()[i];
+    }
+    let g3 = fft.inverse(&c3).unwrap();
+    for i in 0..g3.as_slice().len() {
+        let want = g1.as_slice()[i].scale(2.0) + g2.as_slice()[i];
+        assert!((g3.as_slice()[i] - want).abs() < 1e-11);
+    }
+}
+
+#[test]
+fn bandwidth_one_degenerate_case() {
+    // B = 1: a single coefficient (l = m = m' = 0), constant functions.
+    let fft = So3Fft::new(1).unwrap();
+    let coeffs = So3Coeffs::random(1, 3);
+    let grid = fft.inverse(&coeffs).unwrap();
+    // Constant over the 8 grid nodes.
+    let v0 = grid.as_slice()[0];
+    for v in grid.as_slice() {
+        assert!((*v - v0).abs() < 1e-14);
+    }
+    let back = fft.forward(&grid).unwrap();
+    assert!(coeffs.max_abs_error(&back) < 1e-14);
+}

@@ -1,0 +1,94 @@
+//! Integration: the PJRT-offloaded DWT backend must agree with the native
+//! rust path to near machine precision, end to end through the full
+//! transforms.
+//!
+//! Requires `make artifacts`; tests skip (with a notice) when the
+//! artifact directory is absent so plain `cargo test` stays green in a
+//! fresh checkout.
+
+use std::sync::Arc;
+
+use so3ft::runtime::{ArtifactRegistry, XlaDwt};
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::transform::So3Fft;
+
+fn artifacts_for(b: usize) -> Option<Arc<XlaDwt>> {
+    let reg = ArtifactRegistry::default_location();
+    if !reg.available().contains(&b) {
+        eprintln!(
+            "skipping xla test: no artifacts for b={b} in {:?} (run `make artifacts`)",
+            reg.dir()
+        );
+        return None;
+    }
+    Some(Arc::new(XlaDwt::load(reg.dir(), b).expect("artifact load")))
+}
+
+#[test]
+fn xla_forward_matches_native() {
+    for b in [4usize, 8] {
+        let Some(xla) = artifacts_for(b) else { return };
+        let native = So3Fft::new(b).unwrap();
+        let offloaded = So3Fft::builder(b).offload(xla).build().unwrap();
+        let coeffs = So3Coeffs::random(b, 77);
+        let grid = native.inverse(&coeffs).unwrap();
+        let c_native = native.forward(&grid).unwrap();
+        let c_xla = offloaded.forward(&grid).unwrap();
+        let err = c_native.max_abs_error(&c_xla);
+        assert!(err < 1e-12, "b={b}: native vs xla forward differ by {err}");
+    }
+}
+
+#[test]
+fn xla_inverse_matches_native() {
+    for b in [4usize, 8] {
+        let Some(xla) = artifacts_for(b) else { return };
+        let native = So3Fft::new(b).unwrap();
+        let offloaded = So3Fft::builder(b).offload(xla).build().unwrap();
+        let coeffs = So3Coeffs::random(b, 78);
+        let g_native = native.inverse(&coeffs).unwrap();
+        let g_xla = offloaded.inverse(&coeffs).unwrap();
+        let err = g_native.max_abs_error(&g_xla);
+        assert!(err < 1e-12, "b={b}: native vs xla inverse differ by {err}");
+    }
+}
+
+#[test]
+fn xla_roundtrip_accuracy() {
+    let b = 8;
+    let Some(xla) = artifacts_for(b) else { return };
+    let fft = So3Fft::builder(b).offload(xla).build().unwrap();
+    let coeffs = So3Coeffs::random(b, 79);
+    let grid = fft.inverse(&coeffs).unwrap();
+    let back = fft.forward(&grid).unwrap();
+    let err = coeffs.max_abs_error(&back);
+    assert!(err < 1e-11, "xla roundtrip error {err}");
+}
+
+#[test]
+fn xla_backend_parallel_consistency() {
+    // The offload serializes internally; results must still match the
+    // sequential run bit-for-bit under a multi-threaded coordinator.
+    let b = 4;
+    let Some(xla) = artifacts_for(b) else { return };
+    let coeffs = So3Coeffs::random(b, 80);
+    let seq = So3Fft::builder(b).offload(xla.clone()).build().unwrap();
+    let par = So3Fft::builder(b).threads(3).offload(xla).build().unwrap();
+    let g_seq = seq.inverse(&coeffs).unwrap();
+    let g_par = par.inverse(&coeffs).unwrap();
+    assert_eq!(g_seq.as_slice(), g_par.as_slice());
+}
+
+#[test]
+fn registry_reports_built_bandwidths() {
+    let reg = ArtifactRegistry::default_location();
+    let avail = reg.available();
+    if avail.is_empty() {
+        eprintln!("skipping: no artifacts built");
+        return;
+    }
+    // Makefile default set.
+    for b in [4usize, 8, 16, 32] {
+        assert!(avail.contains(&b), "expected artifact for b={b}, have {avail:?}");
+    }
+}
