@@ -1,6 +1,6 @@
-//! Quickstart: synthesize a random band-limited function on SO(3), run
-//! the forward transform, verify the roundtrip, inspect the timing
-//! breakdown.
+//! Quickstart: build one `So3Plan`, synthesize a random band-limited
+//! function on SO(3), run the forward transform allocation-free, verify
+//! the roundtrip, inspect the timing breakdown.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -8,7 +8,8 @@
 
 use so3ft::pool::Schedule;
 use so3ft::so3::coeffs::{coeff_count, So3Coeffs};
-use so3ft::transform::So3Fft;
+use so3ft::so3::sampling::So3Grid;
+use so3ft::transform::So3Plan;
 
 const B: usize = 32;
 
@@ -19,20 +20,26 @@ fn main() -> so3ft::Result<()> {
         coeff_count(B)
     );
 
-    // Configure the transform like the paper's benchmark: dynamic
+    // Plan once, like the paper's benchmark configuration: dynamic
     // scheduling, symmetry-clustered geometric partitioning, precomputed
-    // Wigner tables.
-    let fft = So3Fft::builder(B)
+    // Wigner tables. The plan owns every precomputed table.
+    let plan = So3Plan::builder(B)
         .threads(4)
         .schedule(Schedule::Dynamic { chunk: 1 })
         .build()?;
+    println!("backend: {:?}", plan.backend());
 
     // The paper's workload: random coefficients, re/im uniform in [-1, 1].
     let coeffs = So3Coeffs::random(B, 2024);
 
-    // Synthesis (iFSOFT), then analysis (FSOFT).
-    let (grid, inv_stats) = fft.inverse_with_stats(&coeffs)?;
-    let (back, fwd_stats) = fft.forward_with_stats(&grid)?;
+    // Serving path: caller-owned buffers + one reusable workspace means
+    // zero grid/coefficient allocation per transform.
+    let mut ws = plan.make_workspace();
+    let mut grid = So3Grid::zeros(B)?;
+    let mut back = So3Coeffs::zeros(B);
+
+    let inv_stats = plan.inverse_into(&coeffs, &mut grid, &mut ws)?; // iFSOFT
+    let fwd_stats = plan.forward_into(&grid, &mut back, &mut ws)?; // FSOFT
 
     println!(
         "iFSOFT: {:?}  (dwt {:?} | transpose {:?} | fft {:?})",
@@ -52,6 +59,11 @@ fn main() -> so3ft::Result<()> {
     println!("roundtrip max abs error: {abs_err:.3e}");
     println!("roundtrip max rel error: {rel_err:.3e}");
     assert!(abs_err < 1e-11, "roundtrip accuracy regression");
+
+    // Batches pipeline through the same plan + workspace.
+    let batch: Vec<So3Coeffs> = (0..4).map(|i| So3Coeffs::random(B, i)).collect();
+    let grids = plan.inverse_batch(&batch)?;
+    println!("batched {} synthesis calls through one plan", grids.len());
     println!("OK");
     Ok(())
 }

@@ -15,7 +15,7 @@ use so3ft::apps::matching;
 use so3ft::apps::sphere::{analysis, sphere_angles, SphCoeffs, SphGrid};
 use so3ft::prng::Xoshiro256;
 use so3ft::so3::rotation::{EulerZyz, Rotation};
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 use so3ft::Complex64;
 
 const B: usize = 16;
@@ -76,7 +76,7 @@ fn main() -> so3ft::Result<()> {
     }
 
     println!("searching {} rotations with one iFSOFT (B = {B})...", (2 * B).pow(3));
-    let fft = So3Fft::builder(B).threads(4).build()?;
+    let fft = So3Plan::builder(B).threads(4).build()?;
     let t0 = std::time::Instant::now();
     let result = matching::match_rotation(&fft, &f, &g)?;
     let dt = t0.elapsed();

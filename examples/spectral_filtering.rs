@@ -15,14 +15,14 @@
 use so3ft::prng::Xoshiro256;
 use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::so3::sampling::So3Grid;
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 use so3ft::Complex64;
 
 const B: usize = 16;
 const CUT: usize = B / 2;
 
 fn main() -> so3ft::Result<()> {
-    let fft = So3Fft::builder(B).threads(2).build()?;
+    let fft = So3Plan::builder(B).threads(2).build()?;
 
     // Ground truth: smooth spectrum, energy only below the cutoff.
     let mut rng = Xoshiro256::seed_from_u64(31);

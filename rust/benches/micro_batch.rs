@@ -1,0 +1,118 @@
+//! Microbench: per-call allocation vs the planner/session serving path.
+//!
+//! Compares, at b ∈ {8, 16, 32} (override with `SO3FT_BENCH_BATCH_BS`):
+//!
+//! * `alloc`  — the legacy pattern: `So3Fft::forward`/`inverse`, fresh
+//!   output + workspace buffers on every call;
+//! * `into`   — `So3Plan::forward_into`/`inverse_into` with one reused
+//!   [`Workspace`] and caller-owned outputs (zero grid/coefficient
+//!   allocation per call);
+//! * `batch`  — `forward_batch_into`/`inverse_batch_into` pipelining
+//!   `SO3FT_BENCH_BATCH_N` (default 8) signals through one plan.
+//!
+//! Per-item medians are printed so the allocation overhead is directly
+//! readable; CSV rows land in `bench_results/micro_batch.csv` when
+//! `SO3FT_BENCH_CSV` is set.
+
+use so3ft::bench_util::{csv_sink, env_usize, env_usize_list, fmt_seconds, time_fn, Table};
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::so3::sampling::So3Grid;
+use so3ft::transform::{So3Fft, So3Plan};
+
+fn main() {
+    let reps = env_usize("SO3FT_BENCH_REPS", 10);
+    let batch_n = env_usize("SO3FT_BENCH_BATCH_N", 8);
+    let bandwidths = env_usize_list("SO3FT_BENCH_BATCH_BS", &[8, 16, 32]);
+    let mut csv = Vec::new();
+
+    println!("== micro: per-call allocation vs execute_into + workspace reuse ==");
+    println!("(batch size {batch_n}, {reps} reps; per-item medians)\n");
+    let mut table = Table::new(&[
+        "B",
+        "dir",
+        "alloc/item",
+        "into/item",
+        "batch/item",
+        "into speedup",
+    ]);
+
+    for &b in &bandwidths {
+        let legacy = So3Fft::new(b).expect("facade");
+        let plan = So3Plan::new(b).expect("plan");
+        let specs: Vec<So3Coeffs> = (0..batch_n)
+            .map(|i| So3Coeffs::random(b, 90 + i as u64))
+            .collect();
+        let grids: Vec<So3Grid> = plan.inverse_batch(&specs).expect("inputs");
+
+        let mut ws = plan.make_workspace();
+        let mut out_grid = So3Grid::zeros(b).expect("grid buffer");
+        let mut out_spec = So3Coeffs::zeros(b);
+        let mut batch_grids: Vec<So3Grid> =
+            (0..batch_n).map(|_| So3Grid::zeros(b).unwrap()).collect();
+        let mut batch_specs: Vec<So3Coeffs> =
+            (0..batch_n).map(|_| So3Coeffs::zeros(b)).collect();
+
+        for dir in ["fwd", "inv"] {
+            let alloc = time_fn(reps, || match dir {
+                "fwd" => {
+                    let c = legacy.forward(&grids[0]).unwrap();
+                    std::hint::black_box(&c);
+                }
+                _ => {
+                    let g = legacy.inverse(&specs[0]).unwrap();
+                    std::hint::black_box(&g);
+                }
+            })
+            .median();
+
+            let into = time_fn(reps, || match dir {
+                "fwd" => {
+                    plan.forward_into(&grids[0], &mut out_spec, &mut ws).unwrap();
+                    std::hint::black_box(&out_spec);
+                }
+                _ => {
+                    plan.inverse_into(&specs[0], &mut out_grid, &mut ws).unwrap();
+                    std::hint::black_box(&out_grid);
+                }
+            })
+            .median();
+
+            let batch = time_fn(reps, || match dir {
+                "fwd" => {
+                    plan.forward_batch_into(&grids, &mut batch_specs, &mut ws)
+                        .unwrap();
+                    std::hint::black_box(&batch_specs);
+                }
+                _ => {
+                    plan.inverse_batch_into(&specs, &mut batch_grids, &mut ws)
+                        .unwrap();
+                    std::hint::black_box(&batch_grids);
+                }
+            })
+            .median()
+                / batch_n as f64;
+
+            table.row(&[
+                b.to_string(),
+                dir.into(),
+                fmt_seconds(alloc),
+                fmt_seconds(into),
+                fmt_seconds(batch),
+                format!("{:.2}x", alloc / into),
+            ]);
+            csv.push(format!(
+                "{b},{dir},{batch_n},{alloc:.4e},{into:.4e},{batch:.4e}"
+            ));
+        }
+    }
+    table.print();
+    println!(
+        "\n`into` removes the per-call output+workspace allocations; `batch`\n\
+         additionally amortizes them across {batch_n} signals through one plan."
+    );
+    csv_sink(
+        "micro_batch",
+        "b,dir,batch_n,alloc_item_s,into_item_s,batch_item_s",
+        &csv,
+    );
+}

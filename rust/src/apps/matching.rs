@@ -17,11 +17,12 @@
 //! workload whose parallelization the paper targets.
 
 use crate::apps::sphere::SphCoeffs;
+use crate::coordinator::Workspace;
 use crate::error::Result;
 use crate::so3::coeffs::So3Coeffs;
 use crate::so3::rotation::EulerZyz;
 use crate::so3::sampling::{GridAngles, So3Grid};
-use crate::transform::So3Fft;
+use crate::transform::Transform;
 
 /// Correlation coefficients C°(l, a, b) for the pair (f, g).
 pub fn correlation_coeffs(f: &SphCoeffs, g: &SphCoeffs) -> So3Coeffs {
@@ -59,11 +60,31 @@ pub struct MatchResult {
 
 /// Find the rotation aligning f to g (so that `f.rotate(result.euler)`
 /// best matches g), by maximizing Re C(R) over the (2B)³ grid with one
-/// iFSOFT through the provided transform engine.
-pub fn match_rotation(fft: &So3Fft, f: &SphCoeffs, g: &SphCoeffs) -> Result<MatchResult> {
+/// iFSOFT through the provided transform engine (any [`Transform`]
+/// backend: an `So3Plan`, the `So3Fft` facade, or a raw executor).
+pub fn match_rotation<T: Transform + ?Sized>(
+    fft: &T,
+    f: &SphCoeffs,
+    g: &SphCoeffs,
+) -> Result<MatchResult> {
+    let mut ws = fft.make_workspace();
+    match_rotation_with(fft, f, g, &mut ws)
+}
+
+/// Serving-path variant of [`match_rotation`]: the caller owns the
+/// workspace, so repeated matches through one plan reuse all transform
+/// scratch (one correlation-grid allocation per call remains — it is
+/// returned in the result).
+pub fn match_rotation_with<T: Transform + ?Sized>(
+    fft: &T,
+    f: &SphCoeffs,
+    g: &SphCoeffs,
+    ws: &mut Workspace,
+) -> Result<MatchResult> {
     let b = f.bandwidth();
     let coeffs = correlation_coeffs(f, g);
-    let grid = fft.inverse(&coeffs)?;
+    let mut grid = So3Grid::zeros(b)?;
+    fft.inverse_into(&coeffs, &mut grid, ws)?;
     let n = 2 * b;
     let mut best = f64::NEG_INFINITY;
     let mut best_idx = (0usize, 0usize, 0usize);
@@ -113,6 +134,25 @@ pub fn correlation_direct(f: &SphCoeffs, g: &SphCoeffs, e: EulerZyz) -> f64 {
 mod tests {
     use super::*;
     use crate::so3::rotation::Rotation;
+    use crate::transform::{So3Fft, So3Plan};
+
+    /// The generic entry point accepts every backend handle type.
+    #[test]
+    fn match_rotation_accepts_plan_and_facade() {
+        let b = 4;
+        let f = SphCoeffs::random(b, 31);
+        let g = f.rotate(EulerZyz::new(0.3, 0.9, 1.2));
+        let facade = So3Fft::new(b).unwrap();
+        let plan = So3Plan::new(b).unwrap();
+        let via_facade = match_rotation(&facade, &f, &g).unwrap();
+        let via_plan = match_rotation(&plan, &f, &g).unwrap();
+        assert_eq!(via_facade.index, via_plan.index);
+        assert_eq!(via_facade.grid.as_slice(), via_plan.grid.as_slice());
+        // Workspace-reusing variant agrees bit for bit.
+        let mut ws = plan.make_workspace();
+        let with_ws = match_rotation_with(&plan, &f, &g, &mut ws).unwrap();
+        assert_eq!(with_ws.grid.as_slice(), via_plan.grid.as_slice());
+    }
 
     /// The fast correlation grid must equal the direct correlation at
     /// every probed node — validates the C°(l,a,b) formula end to end.

@@ -207,15 +207,23 @@ pub fn analysis(grid: &SphGrid) -> Result<SphCoeffs> {
             }
             phi_sums[j] = acc;
         }
+        // One Wigner column per θ node (not per (l, θ) pair — the column
+        // holds every degree at once), accumulated degree-wise in the
+        // same j order as the naive double loop, so results are
+        // bit-identical while the d_column work drops by a factor of B.
         let l0 = m.unsigned_abs() as usize;
-        for l in l0..b {
-            let mut acc = Complex64::zero();
-            for (j, &theta) in thetas.iter().enumerate() {
-                d_column(b, m, 0, theta, &mut buf);
-                acc += phi_sums[j].scale(weights[j] * buf.values[l]);
+        let mut acc = vec![Complex64::zero(); b];
+        for (j, &theta) in thetas.iter().enumerate() {
+            d_column(b, m, 0, theta, &mut buf);
+            let wj = weights[j];
+            let pj = phi_sums[j];
+            for (slot, &d) in acc[l0..b].iter_mut().zip(&buf.values[l0..b]) {
+                *slot += pj.scale(wj * d);
             }
+        }
+        for (l, &a) in acc.iter().enumerate().take(b).skip(l0) {
             let scale = (2 * l + 1) as f64 / (4.0 * std::f64::consts::PI);
-            *coeffs.at_mut(l, m) = acc.scale(scale);
+            *coeffs.at_mut(l, m) = a.scale(scale);
         }
     }
     Ok(coeffs)

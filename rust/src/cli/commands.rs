@@ -14,7 +14,7 @@ use crate::so3::coeffs::{coeff_count, So3Coeffs};
 use crate::so3::quadrature;
 use crate::so3::rotation::Rotation;
 use crate::so3::sampling::GridAngles;
-use crate::transform::So3Fft;
+use crate::transform::So3Plan;
 
 pub const HELP: &str = "\
 so3ft — parallel fast Fourier transforms on SO(3)
@@ -37,8 +37,12 @@ options: --config FILE, --bandwidth/-b B, --threads/-t N,
   --seed N, --xla, --artifacts DIR, --cores LIST, --kind fwd|inv
 ";
 
-fn build_fft(inv: &Invocation) -> Result<So3Fft> {
-    let mut builder = So3Fft::builder(inv.run.bandwidth).config(inv.run.exec.clone());
+fn build_plan(inv: &Invocation) -> Result<So3Plan> {
+    // The CLI keeps the historical lenient bandwidth behavior (Bluestein
+    // fallback for non-powers of two).
+    let mut builder = So3Plan::builder(inv.run.bandwidth)
+        .config(inv.run.exec.clone())
+        .allow_any_bandwidth();
     if inv.run.use_xla {
         let xla = XlaDwt::load(&inv.run.artifacts_dir, inv.run.bandwidth)?;
         builder = builder.offload(Arc::new(xla));
@@ -91,7 +95,7 @@ pub fn info(inv: &Invocation) -> Result<()> {
 }
 
 pub fn roundtrip(inv: &Invocation) -> Result<()> {
-    let fft = build_fft(inv)?;
+    let fft = build_plan(inv)?;
     let b = inv.run.bandwidth;
     let coeffs = So3Coeffs::random(b, inv.run.seed);
     let (grid, istats) = fft.inverse_with_stats(&coeffs)?;
@@ -121,7 +125,7 @@ pub fn roundtrip(inv: &Invocation) -> Result<()> {
 }
 
 pub fn forward(inv: &Invocation) -> Result<()> {
-    let fft = build_fft(inv)?;
+    let fft = build_plan(inv)?;
     let coeffs = So3Coeffs::random(inv.run.bandwidth, inv.run.seed);
     let grid = fft.inverse(&coeffs)?;
     let (_, stats) = fft.forward_with_stats(&grid)?;
@@ -139,7 +143,7 @@ pub fn forward(inv: &Invocation) -> Result<()> {
 }
 
 pub fn inverse(inv: &Invocation) -> Result<()> {
-    let fft = build_fft(inv)?;
+    let fft = build_plan(inv)?;
     let coeffs = So3Coeffs::random(inv.run.bandwidth, inv.run.seed);
     let (_, stats) = fft.inverse_with_stats(&coeffs)?;
     println!(
@@ -151,7 +155,7 @@ pub fn inverse(inv: &Invocation) -> Result<()> {
 
 pub fn match_demo(inv: &Invocation) -> Result<()> {
     let b = inv.run.bandwidth;
-    let fft = build_fft(inv)?;
+    let fft = build_plan(inv)?;
     let f = sphere::SphCoeffs::random(b, inv.run.seed);
     let angles = GridAngles::new(b)?;
     // Plant a grid-aligned rotation (reproducible from the seed).

@@ -146,11 +146,19 @@ pub struct Executor {
     offload: Option<Arc<dyn DwtOffload>>,
     /// FFT bin of each order index: `order_bins[mi] = (mi - (B-1)) mod 2B`.
     order_bins: Vec<usize>,
+    /// Storage-free layout oracle consulted by the iDWT kernels for
+    /// `vec_index` (holds no element data — see [`SMatrix::layout_only`]).
+    smat_layout: SMatrix,
 }
 
 thread_local! {
     /// Per-thread DWT scratch, recreated when the bandwidth changes.
     static SCRATCH: RefCell<Option<(usize, DwtScratch)>> = const { RefCell::new(None) };
+    /// Per-thread FFT column scratch, grown on demand. On the sequential
+    /// path the main thread reuses it across slices AND transforms; on
+    /// the parallel path each region's scoped workers allocate it once
+    /// per region (one allocation per worker instead of one per slice).
+    static FFT_SCRATCH: RefCell<Vec<Complex64>> = const { RefCell::new(Vec::new()) };
 }
 
 fn with_scratch<R>(b: usize, f: impl FnOnce(&mut DwtScratch) -> R) -> R {
@@ -166,6 +174,58 @@ fn with_scratch<R>(b: usize, f: impl FnOnce(&mut DwtScratch) -> R) -> R {
             }
         }
     })
+}
+
+fn with_fft_scratch<R>(len: usize, f: impl FnOnce(&mut [Complex64]) -> R) -> R {
+    FFT_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, Complex64::zero());
+        }
+        f(&mut buf[..len])
+    })
+}
+
+/// Caller-owned scratch buffers for the allocation-free transform entry
+/// points ([`Executor::forward_into`] / [`Executor::inverse_into`]).
+///
+/// A workspace is built once per bandwidth — typically via
+/// [`Executor::make_workspace`] — and reused across calls and across
+/// batches; the executor validates the bandwidth on every call, so
+/// passing a workspace of the wrong size is a typed [`Error`], never UB.
+#[derive(Debug, Clone)]
+pub struct Workspace {
+    b: usize,
+    /// β-major staging buffer, (2B)³ — the forward FFT stage's in-place
+    /// working copy of the input grid.
+    work: Vec<Complex64>,
+    /// The intermediate S-matrix shared by both directions.
+    smat: SMatrix,
+}
+
+impl Workspace {
+    pub fn new(b: usize) -> Result<Self> {
+        if b == 0 {
+            return Err(Error::InvalidBandwidth(b));
+        }
+        let n = 2 * b;
+        Ok(Self {
+            b,
+            work: vec![Complex64::zero(); n * n * n],
+            smat: SMatrix::zeros(b)?,
+        })
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.b
+    }
+
+    /// Stable address of the staging buffer (used by the reuse tests to
+    /// assert that `*_into` never reallocates workspace storage).
+    pub fn work_ptr(&self) -> *const Complex64 {
+        self.work.as_ptr()
+    }
 }
 
 impl Executor {
@@ -207,6 +267,7 @@ impl Executor {
         let order_bins = (0..SMatrix::orders(b))
             .map(|mi| (mi as i64 - (b as i64 - 1)).rem_euclid(n) as usize)
             .collect();
+        let smat_layout = SMatrix::layout_only(b)?;
         Ok(Self {
             b,
             config,
@@ -217,6 +278,7 @@ impl Executor {
             tables,
             offload: None,
             order_bins,
+            smat_layout,
         })
     }
 
@@ -262,14 +324,54 @@ impl Executor {
         self.forward_with_stats(grid).map(|(c, _)| c)
     }
 
+    /// Allocating convenience wrapper over [`Self::forward_into`].
     pub fn forward_with_stats(&self, grid: &So3Grid) -> Result<(So3Coeffs, TransformStats)> {
+        let mut out = So3Coeffs::zeros(self.b);
+        let mut ws = self.make_workspace();
+        let stats = self.forward_into(grid, &mut out, &mut ws)?;
+        Ok((out, stats))
+    }
+
+    /// A workspace sized for this executor's bandwidth.
+    pub fn make_workspace(&self) -> Workspace {
+        Workspace::new(self.b).expect("bandwidth validated at construction")
+    }
+
+    fn check_workspace(&self, ws: &Workspace) -> Result<()> {
+        if ws.bandwidth() != self.b {
+            return Err(Error::bandwidth(
+                self.b,
+                ws.bandwidth(),
+                "workspace bandwidth",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Analysis into caller-owned storage: no grid/coefficient allocation
+    /// after plan construction. `out` is fully overwritten (every
+    /// coefficient belongs to exactly one work package).
+    pub fn forward_into(
+        &self,
+        grid: &So3Grid,
+        out: &mut So3Coeffs,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
         if grid.bandwidth() != self.b {
-            return Err(Error::shape(
+            return Err(Error::bandwidth(
                 self.b,
                 grid.bandwidth(),
                 "forward: grid bandwidth",
             ));
         }
+        if out.bandwidth() != self.b {
+            return Err(Error::bandwidth(
+                self.b,
+                out.bandwidth(),
+                "forward: output coefficient bandwidth",
+            ));
+        }
+        self.check_workspace(ws)?;
         let t_total = Instant::now();
         let n = 2 * self.b;
         let mut stats = TransformStats::default();
@@ -277,16 +379,18 @@ impl Executor {
         // [FFT] per-slice 2-D FFT with the positive-sign kernel:
         // Ŝ_j[u][v] = Σ_{i,k} f e^{+i(uα_i + vγ_k)}.
         let t0 = Instant::now();
-        let mut work = grid.as_slice().to_vec();
+        let work = &mut ws.work;
+        work.copy_from_slice(grid.as_slice());
         {
-            let shared = SyncUnsafeSlice::new(&mut work);
+            let shared = SyncUnsafeSlice::new(work);
             parallel_for(self.config.threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
                 // SAFETY: slice j is exclusive to this package.
                 let slice = unsafe {
                     std::slice::from_raw_parts_mut(shared.ptr_at(j * n * n), n * n)
                 };
-                let mut scratch = vec![Complex64::zero(); 4 * n];
-                self.fft2.process(slice, &mut scratch, Sign::Positive);
+                with_fft_scratch(4 * n, |scratch| {
+                    self.fft2.process(slice, scratch, Sign::Positive)
+                });
             });
         }
         stats.fft = t0.elapsed();
@@ -297,11 +401,11 @@ impl Executor {
         // across the j tile (§Perf in EXPERIMENTS.md: ~3× over the naive
         // strided gather).
         let t0 = Instant::now();
-        let mut smat = SMatrix::zeros(self.b)?;
+        let smat = &mut ws.smat;
         let o = SMatrix::orders(self.b);
         {
             let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
-            let work_ref = &work;
+            let work_ref = &ws.work;
             let bins = &self.order_bins;
             parallel_for(
                 self.config.threads,
@@ -332,12 +436,13 @@ impl Executor {
         }
         stats.transpose = t0.elapsed();
 
-        // [DWT] the cluster loop — the paper's parallel region.
+        // [DWT] the cluster loop — the paper's parallel region. Every
+        // coefficient (l, μ, μ') belongs to exactly one cluster, so the
+        // caller's buffer is fully overwritten without pre-zeroing.
         let t0 = Instant::now();
-        let mut out = vec![Complex64::zero(); coeff_count(self.b)];
         {
-            let shared = SyncUnsafeSlice::new(&mut out);
-            let smat_ref = &smat;
+            let shared = SyncUnsafeSlice::new(out.as_mut_slice());
+            let smat_ref: &SMatrix = &ws.smat;
             let region = parallel_for(
                 self.config.threads,
                 self.plan.clusters.len(),
@@ -351,7 +456,7 @@ impl Executor {
         }
         stats.dwt = t0.elapsed();
         stats.total = t_total.elapsed();
-        Ok((So3Coeffs::from_vec(self.b, out)?, stats))
+        Ok(stats)
     }
 
     fn forward_cluster_dispatch(
@@ -497,7 +602,7 @@ impl Executor {
     /// each region, feeding the multicore simulator (DESIGN.md §3).
     pub fn profile_forward(&self, grid: &So3Grid) -> Result<(So3Coeffs, RegionProfiles)> {
         if grid.bandwidth() != self.b {
-            return Err(Error::shape(self.b, grid.bandwidth(), "profile_forward"));
+            return Err(Error::bandwidth(self.b, grid.bandwidth(), "profile_forward"));
         }
         let n = 2 * self.b;
         let mut profiles = RegionProfiles::default();
@@ -513,7 +618,7 @@ impl Executor {
 
         let mut smat = SMatrix::zeros(self.b)?;
         let o = SMatrix::orders(self.b);
-        let layout = smat.clone();
+        let layout = &self.smat_layout;
         {
             let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
             for p in 0..o * o {
@@ -546,18 +651,18 @@ impl Executor {
     /// Sequential instrumented inverse run.
     pub fn profile_inverse(&self, coeffs: &So3Coeffs) -> Result<(So3Grid, RegionProfiles)> {
         if coeffs.bandwidth() != self.b {
-            return Err(Error::shape(self.b, coeffs.bandwidth(), "profile_inverse"));
+            return Err(Error::bandwidth(self.b, coeffs.bandwidth(), "profile_inverse"));
         }
         let n = 2 * self.b;
         let mut profiles = RegionProfiles::default();
 
         let mut smat = SMatrix::zeros(self.b)?;
-        let layout = smat.clone();
+        let layout = &self.smat_layout;
         {
             let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
             for cluster in &self.plan.clusters {
                 let t0 = Instant::now();
-                self.inverse_cluster_dispatch(cluster, coeffs, &shared, &layout);
+                self.inverse_cluster_dispatch(cluster, coeffs, &shared, layout);
                 profiles.dwt.push(t0.elapsed().as_secs_f64());
             }
         }
@@ -601,25 +706,62 @@ impl Executor {
         self.inverse_with_stats(coeffs).map(|(g, _)| g)
     }
 
+    /// Allocating convenience wrapper over the iDWT core. Allocates only
+    /// the buffers the inverse direction actually uses (output grid +
+    /// S-matrix) — not a full [`Workspace`].
     pub fn inverse_with_stats(
         &self,
         coeffs: &So3Coeffs,
     ) -> Result<(So3Grid, TransformStats)> {
+        let mut out = So3Grid::zeros(self.b)?;
+        let mut smat = SMatrix::zeros(self.b)?;
+        let stats = self.inverse_core(coeffs, &mut out, &mut smat)?;
+        Ok((out, stats))
+    }
+
+    /// Synthesis into caller-owned storage: no grid/coefficient allocation
+    /// after plan construction. `out` is fully overwritten. (Only the
+    /// workspace's S-matrix is used; its forward staging buffer is not
+    /// touched.)
+    pub fn inverse_into(
+        &self,
+        coeffs: &So3Coeffs,
+        out: &mut So3Grid,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        self.check_workspace(ws)?;
+        self.inverse_core(coeffs, out, &mut ws.smat)
+    }
+
+    fn inverse_core(
+        &self,
+        coeffs: &So3Coeffs,
+        out: &mut So3Grid,
+        smat: &mut SMatrix,
+    ) -> Result<TransformStats> {
         if coeffs.bandwidth() != self.b {
-            return Err(Error::shape(
+            return Err(Error::bandwidth(
                 self.b,
                 coeffs.bandwidth(),
                 "inverse: coefficient bandwidth",
+            ));
+        }
+        if out.bandwidth() != self.b {
+            return Err(Error::bandwidth(
+                self.b,
+                out.bandwidth(),
+                "inverse: output grid bandwidth",
             ));
         }
         let t_total = Instant::now();
         let n = 2 * self.b;
         let mut stats = TransformStats::default();
 
-        // [DWT] iDWT cluster loop → S-matrix.
+        // [DWT] iDWT cluster loop → S-matrix. Every (μ, μ') j-vector
+        // belongs to exactly one cluster, so the S-matrix is fully
+        // overwritten without pre-zeroing.
         let t0 = Instant::now();
-        let mut smat = SMatrix::zeros(self.b)?;
-        let layout = smat.clone();
+        let layout = &self.smat_layout;
         {
             let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
             let region = parallel_for(
@@ -628,21 +770,23 @@ impl Executor {
                 self.config.schedule,
                 |ci| {
                     let cluster = &self.plan.clusters[ci];
-                    self.inverse_cluster_dispatch(cluster, coeffs, &shared, &layout);
+                    self.inverse_cluster_dispatch(cluster, coeffs, &shared, layout);
                 },
             );
             stats.dwt_region = Some(region);
         }
         stats.dwt = t0.elapsed();
 
-        // [TRN] scatter to per-slice layout (Nyquist bins stay zero),
-        // cache blocked like the forward gather: one target u-row per
-        // package, (m'-tile × j-tile) blocking inside.
+        // [TRN] scatter to per-slice layout (Nyquist bins stay zero: the
+        // output buffer is zeroed first, matching the fresh-allocation
+        // semantics bit for bit), cache blocked like the forward gather:
+        // one target u-row per package, (m'-tile × j-tile) blocking inside.
         let t0 = Instant::now();
-        let mut work = vec![Complex64::zero(); n * n * n];
+        let work = out.as_mut_slice();
+        work.fill(Complex64::zero());
         {
-            let shared = SyncUnsafeSlice::new(&mut work);
-            let smat_ref = &smat;
+            let shared = SyncUnsafeSlice::new(work);
+            let smat_ref: &SMatrix = smat;
             let o = SMatrix::orders(self.b);
             let bins = &self.order_bins;
             parallel_for(
@@ -683,19 +827,20 @@ impl Executor {
         // f = Σ_{m,m'} S e^{-i(mα + m'γ)}.
         let t0 = Instant::now();
         {
-            let shared = SyncUnsafeSlice::new(&mut work);
+            let shared = SyncUnsafeSlice::new(out.as_mut_slice());
             parallel_for(self.config.threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
                 // SAFETY: slice j is exclusive to this package.
                 let slice = unsafe {
                     std::slice::from_raw_parts_mut(shared.ptr_at(j * n * n), n * n)
                 };
-                let mut scratch = vec![Complex64::zero(); 4 * n];
-                self.fft2.process(slice, &mut scratch, Sign::Negative);
+                with_fft_scratch(4 * n, |scratch| {
+                    self.fft2.process(slice, scratch, Sign::Negative)
+                });
             });
         }
         stats.fft = t0.elapsed();
         stats.total = t_total.elapsed();
-        Ok((So3Grid::from_vec(self.b, work)?, stats))
+        Ok(stats)
     }
 
     fn inverse_cluster_dispatch(
@@ -980,6 +1125,32 @@ mod tests {
         assert!(exec.forward(&wrong_grid).is_err());
         let wrong_coeffs = So3Coeffs::random(3, 1);
         assert!(exec.inverse(&wrong_coeffs).is_err());
+    }
+
+    #[test]
+    fn into_variants_match_allocating_and_validate_workspace() {
+        let b = 6;
+        let exec = Executor::new(b, ExecutorConfig::default()).unwrap();
+        let coeffs = So3Coeffs::random(b, 9);
+        let (grid, _) = exec.inverse_with_stats(&coeffs).unwrap();
+        let mut ws = exec.make_workspace();
+        let mut out_c = So3Coeffs::zeros(b);
+        exec.forward_into(&grid, &mut out_c, &mut ws).unwrap();
+        let reference = exec.forward(&grid).unwrap();
+        assert_eq!(out_c.as_slice(), reference.as_slice());
+        let mut out_g = So3Grid::zeros(b).unwrap();
+        exec.inverse_into(&coeffs, &mut out_g, &mut ws).unwrap();
+        assert_eq!(out_g.as_slice(), grid.as_slice());
+        // Wrong-bandwidth workspace (or outputs) are typed errors, not UB.
+        let mut wrong_ws = Workspace::new(b + 1).unwrap();
+        assert!(exec.forward_into(&grid, &mut out_c, &mut wrong_ws).is_err());
+        assert!(exec.inverse_into(&coeffs, &mut out_g, &mut wrong_ws).is_err());
+        let mut wrong_out = So3Coeffs::zeros(b + 2);
+        assert!(exec.forward_into(&grid, &mut wrong_out, &mut ws).is_err());
+        let mut wrong_grid_out = So3Grid::zeros(b + 2).unwrap();
+        assert!(exec
+            .inverse_into(&coeffs, &mut wrong_grid_out, &mut ws)
+            .is_err());
     }
 
     #[test]

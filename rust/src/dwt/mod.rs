@@ -84,6 +84,18 @@ impl SMatrix {
         })
     }
 
+    /// An index-only S-matrix: `vec_index`/`orders` work, but it holds no
+    /// element storage (`len() == 0`), so `vec`/`vec_mut` on it would
+    /// panic. Crate-internal by design — used only as the layout oracle
+    /// the iDWT kernels consult, so plans don't pay for a second full
+    /// S-matrix.
+    pub(crate) fn layout_only(b: usize) -> Result<Self> {
+        if b == 0 {
+            return Err(Error::InvalidBandwidth(b));
+        }
+        Ok(Self { b, data: Vec::new() })
+    }
+
     #[inline]
     pub fn bandwidth(&self) -> usize {
         self.b
@@ -232,6 +244,21 @@ mod tests {
                 assert_eq!(slices[(j * n + u) * n + b], Complex64::zero());
             }
         }
+    }
+
+    #[test]
+    fn layout_only_indexes_without_storage() {
+        let b = 4usize;
+        let layout = SMatrix::layout_only(b).unwrap();
+        let full = SMatrix::zeros(b).unwrap();
+        assert_eq!(layout.len(), 0);
+        assert_eq!(layout.bandwidth(), b);
+        for m in (1 - b as i64)..b as i64 {
+            for mp in (1 - b as i64)..b as i64 {
+                assert_eq!(layout.vec_index(m, mp), full.vec_index(m, mp));
+            }
+        }
+        assert!(SMatrix::layout_only(0).is_err());
     }
 
     #[test]

@@ -1,46 +1,116 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — no
+//! derive crates are available offline).
+
+use std::fmt;
 
 /// Convenience alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors surfaced by the SO(3) transform stack.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Bandwidth outside the supported range (must be ≥ 1).
-    #[error("invalid bandwidth {0}: must be >= 1")]
     InvalidBandwidth(usize),
 
+    /// Bandwidth rejected by the strict planner builder: the serving path
+    /// requires a power of two (radix-2 FFT grid edge, table alignment).
+    NonPowerOfTwoBandwidth(usize),
+
     /// A buffer had the wrong length for the requested bandwidth.
-    #[error("shape mismatch: expected {expected} elements, got {got} ({context})")]
     ShapeMismatch {
         expected: usize,
         got: usize,
         context: &'static str,
     },
 
+    /// An input, output, or workspace was built for a different bandwidth
+    /// than the plan executing it (the values are bandwidths, not element
+    /// counts).
+    BandwidthMismatch {
+        expected: usize,
+        got: usize,
+        context: &'static str,
+    },
+
     /// An (l, m, m') index outside the coefficient domain.
-    #[error("coefficient index out of range: l={l}, m={m}, m'={mp} (bandwidth {b})")]
     IndexOutOfRange { l: i64, m: i64, mp: i64, b: usize },
 
     /// Thread-count request the pool cannot satisfy.
-    #[error("invalid thread count {0}: must be >= 1")]
     InvalidThreads(usize),
 
     /// Configuration file / CLI parsing problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// PJRT / XLA runtime problems (artifact loading, compilation, execution).
-    #[error("xla runtime error: {0}")]
     Runtime(String),
 
     /// Requested AOT artifact is not present on disk.
-    #[error("missing artifact for bandwidth {b}: {path} (run `make artifacts`)")]
     MissingArtifact { b: usize, path: String },
 
     /// I/O errors (artifact files, config files, trace dumps).
-    #[error("i/o error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidBandwidth(b) => {
+                write!(f, "invalid bandwidth {b}: must be >= 1")
+            }
+            Error::NonPowerOfTwoBandwidth(b) => {
+                write!(
+                    f,
+                    "invalid bandwidth {b}: So3Plan requires a power of two \
+                     (use So3PlanBuilder::allow_any_bandwidth for the Bluestein path)"
+                )
+            }
+            Error::ShapeMismatch {
+                expected,
+                got,
+                context,
+            } => write!(
+                f,
+                "shape mismatch: expected {expected} elements, got {got} ({context})"
+            ),
+            Error::BandwidthMismatch {
+                expected,
+                got,
+                context,
+            } => write!(
+                f,
+                "bandwidth mismatch: expected {expected}, got {got} ({context})"
+            ),
+            Error::IndexOutOfRange { l, m, mp, b } => write!(
+                f,
+                "coefficient index out of range: l={l}, m={m}, m'={mp} (bandwidth {b})"
+            ),
+            Error::InvalidThreads(t) => {
+                write!(f, "invalid thread count {t}: must be >= 1")
+            }
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Runtime(msg) => write!(f, "xla runtime error: {msg}"),
+            Error::MissingArtifact { b, path } => write!(
+                f,
+                "missing artifact for bandwidth {b}: {path} (run `make artifacts`)"
+            ),
+            Error::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -51,5 +121,33 @@ impl Error {
             got,
             context,
         }
+    }
+
+    /// Helper for bandwidth checks.
+    pub fn bandwidth(expected: usize, got: usize, context: &'static str) -> Self {
+        Error::BandwidthMismatch {
+            expected,
+            got,
+            context,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_descriptive() {
+        assert!(Error::InvalidBandwidth(0).to_string().contains("bandwidth 0"));
+        assert!(Error::NonPowerOfTwoBandwidth(12)
+            .to_string()
+            .contains("power of two"));
+        assert!(Error::InvalidThreads(0).to_string().contains("thread count 0"));
+        assert!(Error::shape(4, 5, "ctx").to_string().contains("ctx"));
+        let bw = Error::bandwidth(8, 16, "workspace bandwidth").to_string();
+        assert!(bw.contains("bandwidth mismatch") && bw.contains("workspace"));
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("gone"));
     }
 }

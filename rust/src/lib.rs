@@ -25,18 +25,41 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! use so3ft::transform::So3Fft;
-//! use so3ft::so3::coeffs::So3Coeffs;
+//! Plan once, execute many times (the FFTW model): [`transform::So3Plan`]
+//! owns the precomputed Wigner tables, partition plan, and FFT twiddles;
+//! execution goes through caller-owned buffers and a reusable
+//! [`transform::Workspace`], so the serving path performs **zero**
+//! grid/coefficient allocation per transform.
 //!
-//! let b = 16; // bandwidth
-//! let fft = So3Fft::new(b).unwrap();
-//! let mut coeffs = So3Coeffs::random(b, 42);
-//! let grid = fft.inverse(&coeffs).unwrap();   // synthesis  (iFSOFT)
-//! let back = fft.forward(&grid).unwrap();     // analysis   (FSOFT)
-//! let err = coeffs.max_abs_error(&back);
-//! assert!(err < 1e-10);
+//! ```no_run
+//! use so3ft::transform::So3Plan;
+//! use so3ft::so3::coeffs::So3Coeffs;
+//! use so3ft::so3::sampling::So3Grid;
+//!
+//! let b = 16; // bandwidth (power of two on the strict planner path)
+//! let plan = So3Plan::builder(b).threads(4).build().unwrap();
+//!
+//! // One-off (allocating) conveniences:
+//! let coeffs = So3Coeffs::random(b, 42);
+//! let grid = plan.inverse(&coeffs).unwrap();  // synthesis (iFSOFT)
+//! let back = plan.forward(&grid).unwrap();    // analysis  (FSOFT)
+//! assert!(coeffs.max_abs_error(&back) < 1e-10);
+//!
+//! // Serving path: caller-owned buffers, no allocation per call.
+//! let mut ws = plan.make_workspace();
+//! let mut grid_buf = So3Grid::zeros(b).unwrap();
+//! let mut coeff_buf = So3Coeffs::zeros(b);
+//! plan.inverse_into(&coeffs, &mut grid_buf, &mut ws).unwrap();
+//! plan.forward_into(&grid_buf, &mut coeff_buf, &mut ws).unwrap();
+//!
+//! // Batches amortize the workspace across many signals:
+//! let batch: Vec<So3Coeffs> = (0..8).map(|i| So3Coeffs::random(b, i)).collect();
+//! let grids = plan.inverse_batch(&batch).unwrap();
+//! assert_eq!(grids.len(), 8);
 //! ```
+//!
+//! The pre-planner handle `transform::So3Fft` remains as a soft-deprecated
+//! facade over `So3Plan`; see `docs/MIGRATION.md`.
 
 pub mod apps;
 pub mod bench_util;

@@ -53,11 +53,11 @@ where
     let cursor = AtomicUsize::new(0);
     let body = &body;
     let mut workers: Vec<WorkerStats> = Vec::with_capacity(threads);
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|t| {
                 let cursor = &cursor;
-                scope.spawn(move |_| {
+                scope.spawn(move || {
                     let t0 = Instant::now();
                     let mut packages = 0usize;
                     match schedule {
@@ -141,8 +141,7 @@ where
         for h in handles {
             workers.push(h.join().expect("worker panicked"));
         }
-    })
-    .expect("pool scope failed");
+    });
 
     RegionStats {
         workers,

@@ -1,8 +1,14 @@
-//! The user-facing transform handle.
+//! The legacy transform handle — a thin facade over [`So3Plan`].
 //!
-//! [`So3Fft`] wraps a prepared executor; [`So3FftBuilder`] is the fluent
-//! configuration surface (threads, schedule, DWT algorithm, storage,
-//! precision, partitioning — every design axis the paper discusses).
+//! [`So3Fft`] predates the planner/session API and is kept as a
+//! **soft-deprecated**, fully-working wrapper so existing callers migrate
+//! incrementally (see `docs/MIGRATION.md`). New code should use
+//! [`crate::transform::So3Plan`]: it exposes the same configuration axes
+//! plus the allocation-free `*_into` and batch entry points.
+//!
+//! Unlike the strict [`So3PlanBuilder`](crate::transform::So3PlanBuilder),
+//! this facade accepts non-power-of-two bandwidths (the historical
+//! behavior, served by the Bluestein FFT fallback).
 //!
 //! ```no_run
 //! use so3ft::transform::So3Fft;
@@ -18,18 +24,21 @@
 use std::sync::Arc;
 
 use crate::coordinator::exec::DwtOffload;
-use crate::coordinator::{Executor, ExecutorConfig, PartitionStrategy, TransformStats};
+use crate::coordinator::{
+    Executor, ExecutorConfig, PartitionStrategy, TransformStats, Workspace,
+};
 use crate::dwt::tables::WignerStorage;
 use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::Result;
 use crate::pool::Schedule;
 use crate::so3::coeffs::So3Coeffs;
 use crate::so3::sampling::So3Grid;
+use crate::transform::plan::{So3Plan, Transform};
 
 /// A prepared fast SO(3) Fourier transform (FSOFT + iFSOFT) for one
-/// bandwidth.
+/// bandwidth. Soft-deprecated facade over [`So3Plan`].
 pub struct So3Fft {
-    exec: Executor,
+    plan: So3Plan,
 }
 
 impl So3Fft {
@@ -49,17 +58,17 @@ impl So3Fft {
 
     /// Analysis (FSOFT): grid samples → Fourier coefficients.
     pub fn forward(&self, grid: &So3Grid) -> Result<So3Coeffs> {
-        self.exec.forward(grid)
+        self.plan.forward(grid)
     }
 
     /// Synthesis (iFSOFT): Fourier coefficients → grid samples.
     pub fn inverse(&self, coeffs: &So3Coeffs) -> Result<So3Grid> {
-        self.exec.inverse(coeffs)
+        self.plan.inverse(coeffs)
     }
 
     /// Analysis with a wall-clock phase breakdown.
     pub fn forward_with_stats(&self, grid: &So3Grid) -> Result<(So3Coeffs, TransformStats)> {
-        self.exec.forward_with_stats(grid)
+        self.plan.forward_with_stats(grid)
     }
 
     /// Synthesis with a wall-clock phase breakdown.
@@ -67,16 +76,50 @@ impl So3Fft {
         &self,
         coeffs: &So3Coeffs,
     ) -> Result<(So3Grid, TransformStats)> {
-        self.exec.inverse_with_stats(coeffs)
+        self.plan.inverse_with_stats(coeffs)
     }
 
     pub fn bandwidth(&self) -> usize {
-        self.exec.bandwidth()
+        self.plan.bandwidth()
+    }
+
+    /// The underlying plan (the API new code should hold directly).
+    pub fn plan(&self) -> &So3Plan {
+        &self.plan
+    }
+
+    /// Unwrap the facade into the plan it carries.
+    pub fn into_plan(self) -> So3Plan {
+        self.plan
     }
 
     /// The underlying executor (plans, weights, diagnostics).
     pub fn executor(&self) -> &Executor {
-        &self.exec
+        self.plan.executor()
+    }
+}
+
+impl Transform for So3Fft {
+    fn bandwidth(&self) -> usize {
+        So3Fft::bandwidth(self)
+    }
+
+    fn forward_into(
+        &self,
+        grid: &So3Grid,
+        out: &mut So3Coeffs,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        self.plan.forward_into(grid, out, ws)
+    }
+
+    fn inverse_into(
+        &self,
+        coeffs: &So3Coeffs,
+        out: &mut So3Grid,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        self.plan.inverse_into(coeffs, out, ws)
     }
 }
 
@@ -138,11 +181,17 @@ impl So3FftBuilder {
     }
 
     pub fn build(self) -> Result<So3Fft> {
-        let mut exec = Executor::new(self.b, self.config)?;
+        // Historical behavior: any bandwidth >= 1 is accepted here (the
+        // strict power-of-two validation lives on So3PlanBuilder).
+        let mut builder = So3Plan::builder(self.b)
+            .config(self.config)
+            .allow_any_bandwidth();
         if let Some(off) = self.offload {
-            exec = exec.with_offload(off);
+            builder = builder.offload(off);
         }
-        Ok(So3Fft { exec })
+        Ok(So3Fft {
+            plan: builder.build()?,
+        })
     }
 }
 
@@ -182,5 +231,26 @@ mod tests {
             .precision(Precision::Extended)
             .build();
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn facade_matches_plan_bit_for_bit() {
+        let b = 8;
+        let fft = So3Fft::builder(b).threads(2).build().unwrap();
+        let plan = So3Plan::builder(b).threads(2).build().unwrap();
+        let coeffs = So3Coeffs::random(b, 77);
+        let g_facade = fft.inverse(&coeffs).unwrap();
+        let g_plan = plan.inverse(&coeffs).unwrap();
+        assert_eq!(g_facade.as_slice(), g_plan.as_slice());
+        let c_facade = fft.forward(&g_facade).unwrap();
+        let c_plan = plan.forward(&g_plan).unwrap();
+        assert_eq!(c_facade.as_slice(), c_plan.as_slice());
+    }
+
+    #[test]
+    fn facade_accepts_non_power_of_two() {
+        // Historical lenient behavior preserved for migration.
+        let fft = So3Fft::new(6).unwrap();
+        assert_eq!(fft.bandwidth(), 6);
     }
 }

@@ -1,11 +1,19 @@
 //! Public transform API and reference implementations.
 //!
-//! * [`api`] — [`So3Fft`]: the user-facing handle combining a prepared
-//!   [`crate::coordinator::Executor`] with a validated configuration.
+//! * [`plan`] — [`So3Plan`]: the FFTW-style planner/session API. Build a
+//!   plan once per `(bandwidth, config)`, then execute allocation-free
+//!   (`forward_into`/`inverse_into` + [`Workspace`]) or in batches
+//!   (`forward_batch`/`inverse_batch`). All backends (CPU-sequential,
+//!   CPU-parallel, PJRT offload) sit behind the [`Transform`] trait.
+//! * [`api`] — [`So3Fft`]: the soft-deprecated facade over [`So3Plan`]
+//!   kept for incremental migration (see `docs/MIGRATION.md`).
 //! * [`direct`] — the O(B⁶) discrete SO(3) Fourier transform straight
 //!   from the definitions (Eq. 4/5), the end-to-end correctness oracle.
 
 pub mod api;
 pub mod direct;
+pub mod plan;
 
+pub use crate::coordinator::Workspace;
 pub use api::{So3Fft, So3FftBuilder};
+pub use plan::{BackendKind, So3Plan, So3PlanBuilder, Transform};

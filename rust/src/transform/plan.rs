@@ -1,0 +1,521 @@
+//! The planner/session API: [`So3Plan`].
+//!
+//! FFTW-style separation of *planning* from *execution*: an [`So3Plan`]
+//! is built once per `(bandwidth, config)` and owns everything expensive
+//! — the partition plan (symmetry clusters + index maps), precomputed
+//! Wigner tables, FFT twiddles, quadrature weights. Execution then runs
+//! through caller-owned buffers:
+//!
+//! * [`So3Plan::forward`] / [`So3Plan::inverse`] — allocating
+//!   conveniences for one-off transforms;
+//! * [`So3Plan::forward_into`] / [`So3Plan::inverse_into`] — the
+//!   allocation-free serving path (`&grid, &mut coeffs, &mut Workspace`);
+//! * [`So3Plan::forward_batch`] / [`So3Plan::inverse_batch`] — pipeline
+//!   many signals through one plan, reusing the workspace (and the
+//!   dynamic self-scheduled pool configuration) across items.
+//!
+//! All execution backends — CPU-sequential (`threads = 1`), CPU-parallel
+//! (the worker pool), and the PJRT/XLA DWT offload — sit behind the
+//! direction-agnostic [`Transform`] trait, so they are interchangeable
+//! as `&dyn Transform` / `Arc<dyn Transform>`; [`BackendKind`] reports
+//! which one a plan resolved to.
+//!
+//! ```no_run
+//! use so3ft::transform::So3Plan;
+//! use so3ft::so3::coeffs::So3Coeffs;
+//! use so3ft::so3::sampling::So3Grid;
+//!
+//! let b = 16;
+//! let plan = So3Plan::builder(b).threads(4).build().unwrap();
+//! let mut ws = plan.make_workspace();           // once per session
+//! let mut grid = So3Grid::zeros(b).unwrap();    // caller-owned buffers
+//! let mut back = So3Coeffs::zeros(b);
+//! let coeffs = So3Coeffs::random(b, 42);
+//! plan.inverse_into(&coeffs, &mut grid, &mut ws).unwrap();
+//! plan.forward_into(&grid, &mut back, &mut ws).unwrap();   // no allocation
+//! assert!(coeffs.max_abs_error(&back) < 1e-10);
+//! ```
+
+use std::sync::Arc;
+
+use crate::coordinator::exec::DwtOffload;
+use crate::coordinator::{
+    Executor, ExecutorConfig, PartitionStrategy, TransformStats, Workspace,
+};
+use crate::dwt::tables::WignerStorage;
+use crate::dwt::{DwtAlgorithm, Precision};
+use crate::error::{Error, Result};
+use crate::pool::Schedule;
+use crate::so3::coeffs::So3Coeffs;
+use crate::so3::sampling::So3Grid;
+
+/// Which execution backend a plan resolved to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Single-threaded: the paper's sequential baseline algorithm.
+    CpuSequential,
+    /// The fork-join worker pool with the configured loop schedule.
+    CpuParallel,
+    /// DWT contractions offloaded to a compiled PJRT/XLA artifact
+    /// (FFT + transposition stages still run on the CPU backend).
+    PjrtOffload,
+}
+
+/// Direction-agnostic transform backend: one vtable for the sequential,
+/// parallel, and offloaded engines (and for the [`super::So3Fft`] facade).
+///
+/// The `*_into` methods are the primary surface — allocation-free, with
+/// caller-owned outputs and workspace. The allocating `forward`/`inverse`
+/// conveniences are provided for one-off use.
+pub trait Transform: Send + Sync {
+    fn bandwidth(&self) -> usize;
+
+    /// Analysis (FSOFT) into caller-owned storage.
+    fn forward_into(
+        &self,
+        grid: &So3Grid,
+        out: &mut So3Coeffs,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats>;
+
+    /// Synthesis (iFSOFT) into caller-owned storage.
+    fn inverse_into(
+        &self,
+        coeffs: &So3Coeffs,
+        out: &mut So3Grid,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats>;
+
+    /// A workspace sized for this transform's bandwidth.
+    fn make_workspace(&self) -> Workspace {
+        Workspace::new(self.bandwidth()).expect("transform bandwidth is >= 1")
+    }
+
+    /// Allocating analysis convenience.
+    fn forward(&self, grid: &So3Grid) -> Result<So3Coeffs> {
+        let mut out = So3Coeffs::zeros(self.bandwidth());
+        let mut ws = self.make_workspace();
+        self.forward_into(grid, &mut out, &mut ws)?;
+        Ok(out)
+    }
+
+    /// Allocating synthesis convenience.
+    fn inverse(&self, coeffs: &So3Coeffs) -> Result<So3Grid> {
+        let mut out = So3Grid::zeros(self.bandwidth())?;
+        let mut ws = self.make_workspace();
+        self.inverse_into(coeffs, &mut out, &mut ws)?;
+        Ok(out)
+    }
+}
+
+impl Transform for Executor {
+    fn bandwidth(&self) -> usize {
+        Executor::bandwidth(self)
+    }
+
+    fn forward_into(
+        &self,
+        grid: &So3Grid,
+        out: &mut So3Coeffs,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        Executor::forward_into(self, grid, out, ws)
+    }
+
+    fn inverse_into(
+        &self,
+        coeffs: &So3Coeffs,
+        out: &mut So3Grid,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        Executor::inverse_into(self, coeffs, out, ws)
+    }
+}
+
+/// A prepared fast SO(3) Fourier transform plan (FSOFT + iFSOFT) for one
+/// bandwidth: Wigner tables, partition plan, FFT twiddles, quadrature —
+/// built once, executed many times.
+pub struct So3Plan {
+    exec: Executor,
+    backend: BackendKind,
+}
+
+impl So3Plan {
+    /// Default configuration (sequential, paper defaults). The bandwidth
+    /// must be a power of two; see [`So3PlanBuilder::allow_any_bandwidth`]
+    /// for the Bluestein escape hatch.
+    pub fn new(b: usize) -> Result<Self> {
+        Self::builder(b).build()
+    }
+
+    /// Start configuring a plan.
+    pub fn builder(b: usize) -> So3PlanBuilder {
+        So3PlanBuilder {
+            b,
+            config: ExecutorConfig::default(),
+            offload: None,
+            allow_any_bandwidth: false,
+        }
+    }
+
+    #[inline]
+    pub fn bandwidth(&self) -> usize {
+        self.exec.bandwidth()
+    }
+
+    /// Which backend this plan executes on.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// The plan as a backend-agnostic transform handle.
+    pub fn as_transform(&self) -> &dyn Transform {
+        self
+    }
+
+    /// The underlying executor (plans, weights, diagnostics).
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+
+    pub fn config(&self) -> &ExecutorConfig {
+        self.exec.config()
+    }
+
+    /// Memory held by precomputed Wigner tables (bytes).
+    pub fn table_bytes(&self) -> usize {
+        self.exec.table_bytes()
+    }
+
+    /// A workspace sized for this plan. Build one per session/thread and
+    /// reuse it across calls; the `*_into` entry points then perform no
+    /// grid/coefficient allocation at all.
+    pub fn make_workspace(&self) -> Workspace {
+        self.exec.make_workspace()
+    }
+
+    // ------------------------------------------------------------------
+    // Single-transform entry points
+    // ------------------------------------------------------------------
+
+    /// Analysis (FSOFT): grid samples → Fourier coefficients (allocating).
+    pub fn forward(&self, grid: &So3Grid) -> Result<So3Coeffs> {
+        self.exec.forward(grid)
+    }
+
+    /// Synthesis (iFSOFT): Fourier coefficients → grid samples (allocating).
+    pub fn inverse(&self, coeffs: &So3Coeffs) -> Result<So3Grid> {
+        self.exec.inverse(coeffs)
+    }
+
+    /// Analysis with a wall-clock phase breakdown.
+    pub fn forward_with_stats(&self, grid: &So3Grid) -> Result<(So3Coeffs, TransformStats)> {
+        self.exec.forward_with_stats(grid)
+    }
+
+    /// Synthesis with a wall-clock phase breakdown.
+    pub fn inverse_with_stats(
+        &self,
+        coeffs: &So3Coeffs,
+    ) -> Result<(So3Grid, TransformStats)> {
+        self.exec.inverse_with_stats(coeffs)
+    }
+
+    /// Allocation-free analysis: writes into `out` using `ws` scratch.
+    /// Both are validated against the plan bandwidth (typed [`Error`] on
+    /// mismatch — a workspace from another plan is never UB).
+    pub fn forward_into(
+        &self,
+        grid: &So3Grid,
+        out: &mut So3Coeffs,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        self.exec.forward_into(grid, out, ws)
+    }
+
+    /// Allocation-free synthesis: writes into `out` using `ws` scratch.
+    pub fn inverse_into(
+        &self,
+        coeffs: &So3Coeffs,
+        out: &mut So3Grid,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        self.exec.inverse_into(coeffs, out, ws)
+    }
+
+    // ------------------------------------------------------------------
+    // Batch entry points
+    // ------------------------------------------------------------------
+
+    /// Analyze a batch of grids through one plan. The workspace (and the
+    /// per-thread kernel scratch) is reused across items, so the plan's
+    /// amortized cost is paid once for the whole batch; results are
+    /// bit-identical to calling [`Self::forward`] per item.
+    pub fn forward_batch(&self, grids: &[So3Grid]) -> Result<Vec<So3Coeffs>> {
+        let mut ws = self.make_workspace();
+        let mut out = Vec::with_capacity(grids.len());
+        for grid in grids {
+            let mut coeffs = So3Coeffs::zeros(self.bandwidth());
+            self.exec.forward_into(grid, &mut coeffs, &mut ws)?;
+            out.push(coeffs);
+        }
+        Ok(out)
+    }
+
+    /// Synthesize a batch of coefficient sets through one plan.
+    pub fn inverse_batch(&self, coeffs: &[So3Coeffs]) -> Result<Vec<So3Grid>> {
+        let mut ws = self.make_workspace();
+        let mut out = Vec::with_capacity(coeffs.len());
+        for c in coeffs {
+            let mut grid = So3Grid::zeros(self.bandwidth())?;
+            self.exec.inverse_into(c, &mut grid, &mut ws)?;
+            out.push(grid);
+        }
+        Ok(out)
+    }
+
+    /// Fully allocation-free batch analysis into caller-owned outputs
+    /// (`outs.len()` must equal `grids.len()`).
+    pub fn forward_batch_into(
+        &self,
+        grids: &[So3Grid],
+        outs: &mut [So3Coeffs],
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        if grids.len() != outs.len() {
+            return Err(Error::shape(
+                grids.len(),
+                outs.len(),
+                "forward_batch_into: outputs per input",
+            ));
+        }
+        for (grid, out) in grids.iter().zip(outs.iter_mut()) {
+            self.exec.forward_into(grid, out, ws)?;
+        }
+        Ok(())
+    }
+
+    /// Fully allocation-free batch synthesis into caller-owned outputs.
+    pub fn inverse_batch_into(
+        &self,
+        coeffs: &[So3Coeffs],
+        outs: &mut [So3Grid],
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        if coeffs.len() != outs.len() {
+            return Err(Error::shape(
+                coeffs.len(),
+                outs.len(),
+                "inverse_batch_into: outputs per input",
+            ));
+        }
+        for (c, out) in coeffs.iter().zip(outs.iter_mut()) {
+            self.exec.inverse_into(c, out, ws)?;
+        }
+        Ok(())
+    }
+}
+
+impl Transform for So3Plan {
+    fn bandwidth(&self) -> usize {
+        So3Plan::bandwidth(self)
+    }
+
+    fn forward_into(
+        &self,
+        grid: &So3Grid,
+        out: &mut So3Coeffs,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        So3Plan::forward_into(self, grid, out, ws)
+    }
+
+    fn inverse_into(
+        &self,
+        coeffs: &So3Coeffs,
+        out: &mut So3Grid,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        So3Plan::inverse_into(self, coeffs, out, ws)
+    }
+}
+
+/// Fluent configuration for [`So3Plan`] — every design axis the paper
+/// discusses (threads, schedule, partitioning, DWT dataflow, storage,
+/// precision) plus the PJRT offload attachment.
+pub struct So3PlanBuilder {
+    b: usize,
+    config: ExecutorConfig,
+    offload: Option<Arc<dyn DwtOffload>>,
+    allow_any_bandwidth: bool,
+}
+
+impl So3PlanBuilder {
+    /// Worker thread count (1 = the sequential algorithm).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.config.threads = threads;
+        self
+    }
+
+    /// DWT-loop schedule (paper default: `dynamic`).
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.config.schedule = schedule;
+        self
+    }
+
+    /// Order-domain partitioning strategy.
+    pub fn strategy(mut self, strategy: PartitionStrategy) -> Self {
+        self.config.strategy = strategy;
+        self
+    }
+
+    /// DWT dataflow (matvec = paper's benchmarked version; clenshaw =
+    /// the paper's announced follow-up).
+    pub fn algorithm(mut self, algorithm: DwtAlgorithm) -> Self {
+        self.config.algorithm = algorithm;
+        self
+    }
+
+    /// Wigner row storage (precomputed tables vs on-the-fly recurrence).
+    pub fn storage(mut self, storage: WignerStorage) -> Self {
+        self.config.storage = storage;
+        self
+    }
+
+    /// DWT accumulation precision (extended ≈ the paper's 80-bit mode).
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.config.precision = precision;
+        self
+    }
+
+    /// Attach a DWT offload backend (the PJRT/XLA runtime).
+    pub fn offload(mut self, offload: Arc<dyn DwtOffload>) -> Self {
+        self.offload = Some(offload);
+        self
+    }
+
+    /// Full config override.
+    pub fn config(mut self, config: ExecutorConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Accept non-power-of-two bandwidths (served by the Bluestein FFT
+    /// fallback). The strict default rejects them with a typed error
+    /// because the serving path assumes the radix-2 grid edge.
+    pub fn allow_any_bandwidth(mut self) -> Self {
+        self.allow_any_bandwidth = true;
+        self
+    }
+
+    pub fn build(self) -> Result<So3Plan> {
+        if self.b == 0 {
+            return Err(Error::InvalidBandwidth(0));
+        }
+        if self.config.threads == 0 {
+            return Err(Error::InvalidThreads(0));
+        }
+        if !self.b.is_power_of_two() && !self.allow_any_bandwidth {
+            return Err(Error::NonPowerOfTwoBandwidth(self.b));
+        }
+        let mut exec = Executor::new(self.b, self.config)?;
+        let backend = if self.offload.is_some() {
+            BackendKind::PjrtOffload
+        } else if exec.config().threads == 1 {
+            BackendKind::CpuSequential
+        } else {
+            BackendKind::CpuParallel
+        };
+        if let Some(off) = self.offload {
+            exec = exec.with_offload(off);
+        }
+        Ok(So3Plan { exec, backend })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_roundtrip_default() {
+        let plan = So3Plan::new(8).unwrap();
+        assert_eq!(plan.backend(), BackendKind::CpuSequential);
+        let coeffs = So3Coeffs::random(8, 1);
+        let grid = plan.inverse(&coeffs).unwrap();
+        let back = plan.forward(&grid).unwrap();
+        assert!(coeffs.max_abs_error(&back) < 1e-10);
+    }
+
+    #[test]
+    fn builder_rejects_invalid_inputs_typed() {
+        assert!(matches!(
+            So3Plan::builder(0).build(),
+            Err(Error::InvalidBandwidth(0))
+        ));
+        assert!(matches!(
+            So3Plan::builder(8).threads(0).build(),
+            Err(Error::InvalidThreads(0))
+        ));
+        assert!(matches!(
+            So3Plan::builder(12).build(),
+            Err(Error::NonPowerOfTwoBandwidth(12))
+        ));
+        // The escape hatch routes through the Bluestein FFT.
+        let plan = So3Plan::builder(6).allow_any_bandwidth().build().unwrap();
+        let coeffs = So3Coeffs::random(6, 3);
+        let grid = plan.inverse(&coeffs).unwrap();
+        let back = plan.forward(&grid).unwrap();
+        assert!(coeffs.max_abs_error(&back) < 1e-10);
+    }
+
+    #[test]
+    fn backend_kind_tracks_threads() {
+        assert_eq!(
+            So3Plan::builder(4).threads(1).build().unwrap().backend(),
+            BackendKind::CpuSequential
+        );
+        assert_eq!(
+            So3Plan::builder(4).threads(3).build().unwrap().backend(),
+            BackendKind::CpuParallel
+        );
+    }
+
+    #[test]
+    fn dyn_transform_is_object_safe_and_works() {
+        let plan: Arc<dyn Transform> =
+            Arc::new(So3Plan::builder(4).threads(2).build().unwrap());
+        let coeffs = So3Coeffs::random(4, 5);
+        let grid = plan.inverse(&coeffs).unwrap();
+        let back = plan.forward(&grid).unwrap();
+        assert!(coeffs.max_abs_error(&back) < 1e-11);
+    }
+
+    #[test]
+    fn batch_matches_sequential_loop() {
+        let b = 8;
+        let plan = So3Plan::builder(b).threads(2).build().unwrap();
+        let inputs: Vec<So3Coeffs> = (0..4).map(|i| So3Coeffs::random(b, i)).collect();
+        let grids = plan.inverse_batch(&inputs).unwrap();
+        for (c, g) in inputs.iter().zip(&grids) {
+            let single = plan.inverse(c).unwrap();
+            assert_eq!(single.as_slice(), g.as_slice());
+        }
+        let specs = plan.forward_batch(&grids).unwrap();
+        for (g, s) in grids.iter().zip(&specs) {
+            let single = plan.forward(g).unwrap();
+            assert_eq!(single.as_slice(), s.as_slice());
+        }
+    }
+
+    #[test]
+    fn batch_into_length_mismatch_is_error() {
+        let plan = So3Plan::new(4).unwrap();
+        let grids = vec![So3Grid::zeros(4).unwrap(); 2];
+        let mut outs = vec![So3Coeffs::zeros(4); 3];
+        let mut ws = plan.make_workspace();
+        assert!(plan
+            .forward_batch_into(&grids, &mut outs, &mut ws)
+            .is_err());
+    }
+}

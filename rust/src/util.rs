@@ -113,7 +113,8 @@ pub fn ln_gamma(x: f64) -> f64 {
 pub fn ln_factorial(n: u64) -> f64 {
     // Factorials up to 20! fit exactly in u64/f64.
     const EXACT: usize = 21;
-    static TABLE: once_cell::sync::Lazy<[f64; EXACT]> = once_cell::sync::Lazy::new(|| {
+    static TABLE: std::sync::OnceLock<[f64; EXACT]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
         let mut t = [0.0f64; EXACT];
         let mut acc = 1.0f64;
         for (i, slot) in t.iter_mut().enumerate() {
@@ -125,7 +126,7 @@ pub fn ln_factorial(n: u64) -> f64 {
         t
     });
     if (n as usize) < EXACT {
-        TABLE[n as usize]
+        table[n as usize]
     } else {
         ln_gamma(n as f64 + 1.0)
     }

@@ -1,0 +1,212 @@
+//! Integration: the planner/session API — allocation-free `*_into`
+//! execution, batch pipelining, workspace validation, builder
+//! validation, and `So3Fft`-facade parity with `So3Plan`.
+
+use so3ft::coordinator::Workspace;
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::so3::sampling::So3Grid;
+use so3ft::transform::{BackendKind, So3Fft, So3Plan, Transform};
+use so3ft::Error;
+
+/// Acceptance: `forward_batch` over N = 8 signals matches N sequential
+/// `forward` calls bit for bit at b = 16 (and the same for the inverse).
+#[test]
+fn batch_matches_sequential_calls_bit_for_bit_b16() {
+    let b = 16;
+    let n_signals = 8;
+    let plan = So3Plan::builder(b).threads(2).build().unwrap();
+    let specs: Vec<So3Coeffs> = (0..n_signals)
+        .map(|i| So3Coeffs::random(b, 1000 + i as u64))
+        .collect();
+
+    let grids_batch = plan.inverse_batch(&specs).unwrap();
+    let grids_loop: Vec<So3Grid> = specs.iter().map(|c| plan.inverse(c).unwrap()).collect();
+    assert_eq!(grids_batch.len(), n_signals);
+    for (a, c) in grids_batch.iter().zip(&grids_loop) {
+        assert_eq!(a.as_slice(), c.as_slice(), "inverse batch vs loop");
+    }
+
+    let specs_batch = plan.forward_batch(&grids_batch).unwrap();
+    let specs_loop: Vec<So3Coeffs> =
+        grids_loop.iter().map(|g| plan.forward(g).unwrap()).collect();
+    for (a, c) in specs_batch.iter().zip(&specs_loop) {
+        assert_eq!(a.as_slice(), c.as_slice(), "forward batch vs loop");
+    }
+}
+
+#[test]
+fn into_variants_equal_allocating_variants() {
+    let b = 8;
+    for threads in [1usize, 3] {
+        let plan = So3Plan::builder(b).threads(threads).build().unwrap();
+        let coeffs = So3Coeffs::random(b, 7);
+        let mut ws = plan.make_workspace();
+
+        let grid_alloc = plan.inverse(&coeffs).unwrap();
+        let mut grid_into = So3Grid::zeros(b).unwrap();
+        plan.inverse_into(&coeffs, &mut grid_into, &mut ws).unwrap();
+        assert_eq!(grid_alloc.as_slice(), grid_into.as_slice());
+
+        let back_alloc = plan.forward(&grid_alloc).unwrap();
+        let mut back_into = So3Coeffs::zeros(b);
+        plan.forward_into(&grid_into, &mut back_into, &mut ws).unwrap();
+        assert_eq!(back_alloc.as_slice(), back_into.as_slice());
+    }
+}
+
+/// Acceptance: after plan construction, `*_into` performs zero heap
+/// (re)allocation of grid/coefficient storage — asserted through pointer
+/// stability of every caller-owned buffer across repeated reuse, and
+/// through outputs landing in place.
+#[test]
+fn execute_into_reuses_storage_without_reallocation() {
+    let b = 8;
+    let plan = So3Plan::builder(b).threads(2).build().unwrap();
+    let mut ws = plan.make_workspace();
+    let mut grid = So3Grid::zeros(b).unwrap();
+    let mut back = So3Coeffs::zeros(b);
+
+    let ws_ptr = ws.work_ptr();
+    let grid_ptr = grid.as_slice().as_ptr();
+    let back_ptr = back.as_slice().as_ptr();
+
+    for seed in 0..5u64 {
+        let coeffs = So3Coeffs::random(b, seed);
+        plan.inverse_into(&coeffs, &mut grid, &mut ws).unwrap();
+        plan.forward_into(&grid, &mut back, &mut ws).unwrap();
+        assert!(coeffs.max_abs_error(&back) < 1e-11, "seed {seed}");
+        // The buffers were written in place, never swapped or regrown.
+        assert_eq!(ws.work_ptr(), ws_ptr, "workspace reallocated");
+        assert_eq!(grid.as_slice().as_ptr(), grid_ptr, "grid reallocated");
+        assert_eq!(back.as_slice().as_ptr(), back_ptr, "coeffs reallocated");
+    }
+}
+
+/// Mixing workspaces (or outputs) across bandwidths is a typed error —
+/// never a panic, never silent corruption.
+#[test]
+fn mixed_bandwidth_workspace_is_typed_error() {
+    let plan8 = So3Plan::new(8).unwrap();
+    let plan16 = So3Plan::new(16).unwrap();
+    let coeffs8 = So3Coeffs::random(8, 1);
+    let grid8 = plan8.inverse(&coeffs8).unwrap();
+
+    let mut ws16 = plan16.make_workspace();
+    let mut out8 = So3Coeffs::zeros(8);
+    match plan8.forward_into(&grid8, &mut out8, &mut ws16) {
+        Err(Error::BandwidthMismatch {
+            expected: 8,
+            got: 16,
+            context,
+        }) => assert!(context.contains("workspace"), "context: {context}"),
+        other => panic!("expected BandwidthMismatch, got {:?}", other.map(|_| ())),
+    }
+    let mut grid_out8 = So3Grid::zeros(8).unwrap();
+    assert!(plan8
+        .inverse_into(&coeffs8, &mut grid_out8, &mut ws16)
+        .is_err());
+
+    // Workspace::new validates too.
+    assert!(Workspace::new(0).is_err());
+
+    // A correct workspace still works after the failed calls.
+    let mut ws8 = plan8.make_workspace();
+    plan8.forward_into(&grid8, &mut out8, &mut ws8).unwrap();
+    let reference = plan8.forward(&grid8).unwrap();
+    assert_eq!(out8.as_slice(), reference.as_slice());
+}
+
+/// The deprecated facade must stay bit-for-bit interchangeable with the
+/// plan it wraps, across directions and thread counts.
+#[test]
+fn facade_parity_with_plan() {
+    let b = 8;
+    for threads in [1usize, 4] {
+        let facade = So3Fft::builder(b).threads(threads).build().unwrap();
+        let plan = So3Plan::builder(b).threads(threads).build().unwrap();
+        let coeffs = So3Coeffs::random(b, 21);
+        let g_f = facade.inverse(&coeffs).unwrap();
+        let g_p = plan.inverse(&coeffs).unwrap();
+        assert_eq!(g_f.as_slice(), g_p.as_slice(), "{threads} threads inverse");
+        let c_f = facade.forward(&g_f).unwrap();
+        let c_p = plan.forward(&g_p).unwrap();
+        assert_eq!(c_f.as_slice(), c_p.as_slice(), "{threads} threads forward");
+    }
+    // The facade exposes the plan it wraps.
+    let facade = So3Fft::builder(b).threads(2).build().unwrap();
+    assert_eq!(facade.plan().bandwidth(), b);
+    assert_eq!(facade.plan().backend(), BackendKind::CpuParallel);
+}
+
+#[test]
+fn builder_validation_bug_sweep() {
+    // threads == 0: typed error from both builders, not a panic.
+    assert!(matches!(
+        So3Plan::builder(8).threads(0).build(),
+        Err(Error::InvalidThreads(0))
+    ));
+    assert!(matches!(
+        So3Fft::builder(8).threads(0).build(),
+        Err(Error::InvalidThreads(0))
+    ));
+    // Non-power-of-two bandwidth: typed rejection on the strict planner.
+    for b in [3usize, 6, 12, 100] {
+        assert!(matches!(
+            So3Plan::builder(b).build(),
+            Err(Error::NonPowerOfTwoBandwidth(_))
+        ));
+    }
+    // Zero bandwidth: typed error everywhere.
+    assert!(matches!(
+        So3Plan::builder(0).build(),
+        Err(Error::InvalidBandwidth(0))
+    ));
+    assert!(So3Fft::builder(0).build().is_err());
+    // The explicit escape hatch (and the compat facade) still serve
+    // non-powers of two through the Bluestein path.
+    assert!(So3Plan::builder(6).allow_any_bandwidth().build().is_ok());
+    assert!(So3Fft::builder(6).build().is_ok());
+}
+
+/// Backends are interchangeable behind `dyn Transform`.
+#[test]
+fn backends_interchangeable_behind_dyn_transform() {
+    let b = 4;
+    let coeffs = So3Coeffs::random(b, 3);
+    let seq = So3Plan::builder(b).threads(1).build().unwrap();
+    let par = So3Plan::builder(b).threads(3).build().unwrap();
+    assert_eq!(seq.backend(), BackendKind::CpuSequential);
+    assert_eq!(par.backend(), BackendKind::CpuParallel);
+
+    let backends: Vec<Box<dyn Transform>> = vec![
+        Box::new(seq),
+        Box::new(par),
+        Box::new(So3Fft::new(b).unwrap()),
+    ];
+    let reference = backends[0].inverse(&coeffs).unwrap();
+    for (i, t) in backends.iter().enumerate() {
+        assert_eq!(t.bandwidth(), b);
+        let mut ws = t.make_workspace();
+        let mut grid = So3Grid::zeros(b).unwrap();
+        t.inverse_into(&coeffs, &mut grid, &mut ws).unwrap();
+        assert_eq!(grid.as_slice(), reference.as_slice(), "backend {i}");
+    }
+}
+
+/// Allocation-free batch entry points validate output counts.
+#[test]
+fn batch_into_shape_validation() {
+    let b = 4;
+    let plan = So3Plan::new(b).unwrap();
+    let mut ws = plan.make_workspace();
+    let specs: Vec<So3Coeffs> = (0..3).map(|i| So3Coeffs::random(b, i)).collect();
+    let mut grids: Vec<So3Grid> = (0..3).map(|_| So3Grid::zeros(b).unwrap()).collect();
+    plan.inverse_batch_into(&specs, &mut grids, &mut ws).unwrap();
+    for (c, g) in specs.iter().zip(&grids) {
+        assert_eq!(plan.inverse(c).unwrap().as_slice(), g.as_slice());
+    }
+    let mut outs: Vec<So3Coeffs> = (0..2).map(|_| So3Coeffs::zeros(b)).collect();
+    assert!(plan
+        .forward_batch_into(&grids, &mut outs, &mut ws)
+        .is_err());
+}

@@ -13,6 +13,10 @@ use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::transform::So3Fft;
 
 fn artifacts_for(b: usize) -> Option<Arc<XlaDwt>> {
+    if cfg!(not(feature = "xla")) {
+        eprintln!("skipping xla test: built without the `xla` feature");
+        return None;
+    }
     let reg = ArtifactRegistry::default_location();
     if !reg.available().contains(&b) {
         eprintln!(
