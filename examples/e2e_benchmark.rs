@@ -11,16 +11,34 @@
 //!   5. per-package profile → simulated 64-core Opteron-like speedup
 //!      (paper Figs. 2-4 metric),
 //!   6. if AOT artifacts exist for the bandwidth, the same transform
-//!      through the PJRT/XLA DWT backend, validated against native.
+//!      through the PJRT/XLA DWT backend, validated against native,
+//!   7. an FFT-stage engine sweep (split-radix panel vs radix-2
+//!      gather/scatter baseline, single- and max-thread) at the large
+//!      bandwidths the DWT can't reach in-process.
+//!
+//! Every run also emits a machine-readable **`BENCH_fft.json`**
+//! (override the path with `SO3FT_BENCH_JSON`) carrying the per-stage
+//! `StageStats` timings, bandwidths, thread counts, and the FFT-engine
+//! comparison — the repo's tracked perf trajectory across PRs (see
+//! docs/PERF.md).
 //!
 //! ```sh
 //! cargo run --release --example e2e_benchmark
 //! SO3FT_E2E_BS="8 16 32" cargo run --release --example e2e_benchmark
 //! ```
 
+use std::cell::RefCell;
 use std::sync::Arc;
+use std::time::Instant;
 
-use so3ft::bench_util::{env_usize_list, fmt_seconds, Table};
+use so3ft::bench_util::{
+    env_usize, env_usize_list, fmt_seconds, write_json_report, Samples, Table,
+};
+use so3ft::coordinator::StageStats;
+use so3ft::fft::{ColumnPass, Complex64, Fft2, FftAlgo, FftPlan, Sign};
+use so3ft::pool::{parallel_for, Schedule};
+use so3ft::prng::Xoshiro256;
+use so3ft::util::SyncUnsafeSlice;
 use so3ft::runtime::{ArtifactRegistry, XlaDwt};
 use so3ft::simulator::cost::{measured_spec, TransformKind};
 use so3ft::simulator::machine::MachineParams;
@@ -28,10 +46,59 @@ use so3ft::simulator::scaling::scaling_curve;
 use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::transform::So3Plan;
 
+/// One JSON record with the full per-stage breakdown of a transform.
+fn stage_record(kind: &str, b: usize, threads: usize, engine: &str, s: &StageStats) -> String {
+    format!(
+        "{{\"kind\": \"{kind}\", \"b\": {b}, \"threads\": {threads}, \
+         \"engine\": \"{engine}\", \"fft_s\": {:.6e}, \"transpose_s\": {:.6e}, \
+         \"dwt_s\": {:.6e}, \"total_s\": {:.6e}, \"fft_fraction\": {:.4}}}",
+        s.fft.as_secs_f64(),
+        s.transpose.as_secs_f64(),
+        s.dwt.as_secs_f64(),
+        s.total.as_secs_f64(),
+        s.fft_fraction(),
+    )
+}
+
+thread_local! {
+    /// Per-worker gather/scatter scratch (empty in panel mode; cheap to
+    /// re-create per region — a zeroed 4n buffer, ≪ one slice FFT).
+    static SWEEP_SCRATCH: RefCell<Vec<Complex64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Wall time of one FFT-stage region: `n` β-slice 2-D FFTs of a shared
+/// `n³` slab over the worker pool — the exact shape (and SAFETY
+/// argument) of the executor's stage-1/stage-3 parallel region. The
+/// slab is allocated and initialized by the caller, outside the timed
+/// window; callers rescale it between sweeps (an unnormalized 2-D FFT
+/// grows the RMS magnitude ×n per call), also untimed.
+fn fft_stage_sweep(fft2: &Fft2, slab: &mut [Complex64], threads: usize, sign: Sign) -> f64 {
+    let n = fft2.len();
+    assert_eq!(slab.len(), n * n * n, "slab must be n^3");
+    let slen = fft2.scratch_len();
+    let shared = SyncUnsafeSlice::new(slab);
+    let t0 = Instant::now();
+    parallel_for(threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
+        // SAFETY: slice j is exclusive to this package (one package per
+        // β-slice, disjoint slab ranges).
+        let slice =
+            unsafe { std::slice::from_raw_parts_mut(shared.ptr_at(j * n * n), n * n) };
+        SWEEP_SCRATCH.with(|sc| {
+            let mut scratch = sc.borrow_mut();
+            if scratch.len() < slen {
+                scratch.resize(slen, Complex64::zero());
+            }
+            fft2.process(slice, &mut scratch[..slen], sign);
+        });
+    });
+    t0.elapsed().as_secs_f64()
+}
+
 fn main() -> so3ft::Result<()> {
     let bandwidths = env_usize_list("SO3FT_E2E_BS", &[8, 16, 32]);
     let params = MachineParams::opteron_like();
     let registry = ArtifactRegistry::default_location();
+    let mut records: Vec<String> = Vec::new();
 
     println!("=== so3ft end-to-end benchmark ===");
     println!("bandwidths: {bandwidths:?}\n");
@@ -60,6 +127,8 @@ fn main() -> so3ft::Result<()> {
             .build()?;
         let (grid, inv_stats) = seq.inverse_with_stats(&coeffs)?;
         let (back, fwd_stats) = seq.forward_with_stats(&grid)?;
+        records.push(stage_record("transform_inverse", b, 1, "split_radix", &inv_stats));
+        records.push(stage_record("transform_forward", b, 1, "split_radix", &fwd_stats));
         let abs_err = coeffs.max_abs_error(&back);
         let rel_err = coeffs.max_rel_error(&back);
         println!(
@@ -143,7 +212,103 @@ fn main() -> so3ft::Result<()> {
         println!();
     }
 
-    println!("=== summary ===");
+    // FFT-stage engine sweep: the per-β-slice 2-D FFT region (the shape
+    // of the executor's stage 1/3) at bandwidths whose DWT would not fit
+    // in this process, split-radix panel engine vs the radix-2
+    // gather/scatter baseline, single- and max-thread.
+    let fft_bs = env_usize_list("SO3FT_BENCH_FFT_BS", &[32, 64, 128]);
+    let reps = env_usize("SO3FT_BENCH_FFT_REPS", 5).max(1);
+    let max_threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let thread_counts: Vec<usize> = if max_threads > 1 {
+        vec![1, max_threads]
+    } else {
+        vec![1]
+    };
+
+    println!("\n=== FFT stage: split-radix panel vs radix-2 gather/scatter ===");
+    println!("({reps} reps, median; {max_threads} hardware threads)\n");
+    let mut fft_table = Table::new(&["B", "threads", "split-radix", "radix2 base", "speedup"]);
+    for &b in &fft_bs {
+        let n = 2 * b;
+        let split = Fft2::new(n, Arc::new(FftPlan::new(n)));
+        let baseline = Fft2::with_column_pass(
+            n,
+            Arc::new(FftPlan::with_algo(n, FftAlgo::Radix2)),
+            ColumnPass::GatherScatter,
+        );
+        // The full n³ grid slab (the executor's staging layout), built
+        // once per bandwidth outside the timed windows. 256 MiB at
+        // b = 128 — trim SO3FT_BENCH_FFT_BS on small machines.
+        let mut rng = Xoshiro256::seed_from_u64(0xF0F0 + b as u64);
+        let mut slab: Vec<Complex64> = (0..n * n * n)
+            .map(|_| Complex64::new(rng.next_signed(), rng.next_signed()))
+            .collect();
+        let inv_n = 1.0 / n as f64;
+        for &threads in &thread_counts {
+            let mut stage_s = [0.0f64; 2];
+            for (ei, fft2) in [&split, &baseline].into_iter().enumerate() {
+                // Warm-up sweep (faults the slab in, exercises the pool).
+                fft_stage_sweep(fft2, &mut slab, threads, Sign::Positive);
+                let samples: Vec<f64> = (0..reps)
+                    .map(|_| {
+                        // Untimed rescale keeps magnitudes bounded
+                        // (each sweep grows RMS by ×n).
+                        for v in slab.iter_mut() {
+                            *v = v.scale(inv_n);
+                        }
+                        fft_stage_sweep(fft2, &mut slab, threads, Sign::Positive)
+                    })
+                    .collect();
+                stage_s[ei] = Samples { seconds: samples }.median();
+                let engine = ["split_radix", "radix2_baseline"][ei];
+                records.push(format!(
+                    "{{\"kind\": \"fft_stage\", \"b\": {b}, \"n\": {n}, \
+                     \"threads\": {threads}, \"engine\": \"{engine}\", \
+                     \"stage_s\": {:.6e}, \"per_slice_s\": {:.6e}}}",
+                    stage_s[ei],
+                    stage_s[ei] / n as f64,
+                ));
+            }
+            let speedup = stage_s[1] / stage_s[0];
+            records.push(format!(
+                "{{\"kind\": \"fft_stage_speedup\", \"b\": {b}, \
+                 \"threads\": {threads}, \"speedup\": {speedup:.3}}}"
+            ));
+            fft_table.row(&[
+                b.to_string(),
+                threads.to_string(),
+                fmt_seconds(stage_s[0]),
+                fmt_seconds(stage_s[1]),
+                format!("{speedup:.2}x"),
+            ]);
+        }
+    }
+    fft_table.print();
+
+    let json_path =
+        std::env::var("SO3FT_BENCH_JSON").unwrap_or_else(|_| "BENCH_fft.json".to_string());
+    let meta = [
+        ("bench", "\"BENCH_fft\"".to_string()),
+        ("crate_version", format!("\"{}\"", env!("CARGO_PKG_VERSION"))),
+        ("threads_max", max_threads.to_string()),
+        ("reps", reps.to_string()),
+        (
+            "note",
+            "\"fft_stage records time the per-beta-slice 2-D FFT region \
+             (n slices of a shared n^3 slab, dynamic schedule; slab init \
+             and rescales are untimed); transform_* records are full \
+             sequential StageStats breakdowns\""
+                .to_string(),
+        ),
+    ];
+    match write_json_report(&json_path, &meta, &records) {
+        Ok(()) => println!("\nwrote {} ({} records)", json_path, records.len()),
+        Err(e) => eprintln!("\nWARNING: could not write {json_path}: {e}"),
+    }
+
+    println!("\n=== summary ===");
     summary.print();
     println!("\nall bandwidths passed roundtrip + backend validation");
     Ok(())

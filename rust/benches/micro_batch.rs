@@ -14,10 +14,13 @@
 //! readable; CSV rows land in `bench_results/micro_batch.csv` when
 //! `SO3FT_BENCH_CSV` is set.
 
-use so3ft::bench_util::{csv_sink, env_usize, env_usize_list, fmt_seconds, time_fn, Table};
+use so3ft::bench_util::{
+    csv_sink, env_usize, env_usize_list, fmt_seconds, time_fn, Samples, Table,
+};
+use so3ft::fft::Complex64;
 use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::so3::sampling::So3Grid;
-use so3ft::transform::{So3Fft, So3Plan};
+use so3ft::transform::{FftEngine, So3Fft, So3Plan};
 
 fn main() {
     let reps = env_usize("SO3FT_BENCH_REPS", 10);
@@ -114,5 +117,67 @@ fn main() {
         "micro_batch",
         "b,dir,batch_n,alloc_item_s,into_item_s,batch_item_s",
         &csv,
+    );
+
+    // ------------------------------------------------------------------
+    // FFT stage: split-radix panel engine vs radix-2 baseline vs the
+    // real-input path, measured through the executor's own StageStats
+    // (forward analysis, sequential).
+    // ------------------------------------------------------------------
+    let fft_bs = env_usize_list("SO3FT_BENCH_STAGE_BS", &[16, 32, 64]);
+    let mut fft_csv = Vec::new();
+    println!("\n== micro: forward FFT stage (per-transform medians) ==");
+    let mut fft_table = Table::new(&["B", "split-radix", "radix2 base", "real-input", "speedup"]);
+    for &b in &fft_bs {
+        let split = So3Plan::new(b).expect("split plan");
+        let baseline = So3Plan::builder(b)
+            .fft_engine(FftEngine::Radix2Baseline)
+            .build()
+            .expect("baseline plan");
+        let real = So3Plan::builder(b).real_input().build().expect("real plan");
+
+        let coeffs = So3Coeffs::random(b, 321);
+        let grid = split.inverse(&coeffs).expect("input grid");
+        let real_grid = So3Grid::from_vec(
+            b,
+            grid.as_slice()
+                .iter()
+                .map(|z| Complex64::new(z.re, 0.0))
+                .collect(),
+        )
+        .expect("real grid");
+
+        let mut ws = split.make_workspace();
+        let mut out = So3Coeffs::zeros(b);
+        let fft_median = |plan: &So3Plan, g: &So3Grid, ws: &mut _, out: &mut So3Coeffs| {
+            let mut seconds = Vec::with_capacity(reps);
+            plan.forward_into(g, out, ws).expect("warmup");
+            for _ in 0..reps {
+                let stats = plan.forward_into(g, out, ws).expect("forward");
+                seconds.push(stats.fft.as_secs_f64());
+            }
+            Samples { seconds }.median()
+        };
+        let s_split = fft_median(&split, &grid, &mut ws, &mut out);
+        let s_base = fft_median(&baseline, &grid, &mut ws, &mut out);
+        let s_real = fft_median(&real, &real_grid, &mut ws, &mut out);
+        fft_table.row(&[
+            b.to_string(),
+            fmt_seconds(s_split),
+            fmt_seconds(s_base),
+            fmt_seconds(s_real),
+            format!("{:.2}x", s_base / s_split),
+        ]);
+        fft_csv.push(format!("{b},{s_split:.4e},{s_base:.4e},{s_real:.4e}"));
+    }
+    fft_table.print();
+    println!(
+        "\nspeedup = radix-2 gather/scatter baseline over the split-radix\n\
+         panel engine; `real-input` additionally halves stage-1 butterflies."
+    );
+    csv_sink(
+        "micro_batch_fft_stage",
+        "b,split_radix_s,radix2_baseline_s,real_input_s",
+        &fft_csv,
     );
 }

@@ -1,9 +1,12 @@
-//! Microbench: the FFT substrate — 1-D radix-2/Bluestein and the 2-D
-//! slice transform at the sizes the FSOFT uses (2B for B = 16…512).
+//! Microbench: the FFT substrate — 1-D kernels (split-radix vs radix-2
+//! vs Bluestein), the 2-D slice transform's column-pass strategies
+//! (copy-free panels vs gather/scatter), and the real-input path, at the
+//! sizes the FSOFT uses (2B for B = 16…512).
 
 use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
-use so3ft::fft::fft2::Fft2;
-use so3ft::fft::{Complex64, FftPlan, Sign};
+use so3ft::fft::fft2::{ColumnPass, Fft2};
+use so3ft::fft::real::RealFft2;
+use so3ft::fft::{Complex64, FftAlgo, FftPlan, Sign};
 use so3ft::prng::Xoshiro256;
 
 fn signal(n: usize, seed: u64) -> Vec<Complex64> {
@@ -17,43 +20,123 @@ fn main() {
     let reps = env_usize("SO3FT_BENCH_REPS", 20);
     let mut csv = Vec::new();
 
-    println!("== micro: 1-D FFT ==");
+    println!("== micro: 1-D FFT kernels ==");
     let mut t1 = Table::new(&["n", "algo", "median", "ns/point"]);
     for &n in &[32usize, 64, 128, 256, 512, 1024, 96, 768] {
-        let plan = FftPlan::new(n);
-        let algo = if n.is_power_of_two() { "radix2" } else { "bluestein" };
-        let mut buf = signal(n, n as u64);
-        let s = time_fn(reps, || {
-            plan.process(&mut buf, Sign::Negative);
-            std::hint::black_box(&buf);
-        });
-        t1.row(&[
-            n.to_string(),
-            algo.into(),
-            fmt_seconds(s.median()),
-            format!("{:.1}", s.median() * 1e9 / n as f64),
-        ]);
-        csv.push(format!("fft1,{n},{algo},{:.4e}", s.median()));
+        let algos: &[FftAlgo] = if n.is_power_of_two() {
+            &[FftAlgo::SplitRadix, FftAlgo::Radix2]
+        } else {
+            &[FftAlgo::Bluestein]
+        };
+        for &algo in algos {
+            let plan = FftPlan::with_algo(n, algo);
+            let name = plan.algo_name();
+            let mut buf = signal(n, n as u64);
+            let s = time_fn(reps, || {
+                plan.process(&mut buf, Sign::Negative);
+                std::hint::black_box(&buf);
+            });
+            t1.row(&[
+                n.to_string(),
+                name.into(),
+                fmt_seconds(s.median()),
+                format!("{:.1}", s.median() * 1e9 / n as f64),
+            ]);
+            csv.push(format!("fft1,{n},{name},{:.4e}", s.median()));
+        }
     }
     t1.print();
 
     println!("\n== micro: 2-D slice FFT (the FSOFT's per-β work) ==");
-    let mut t2 = Table::new(&["2B", "median", "ns/point"]);
+    let mut t2 = Table::new(&["2B", "engine", "median", "ns/point"]);
     for &n in &[32usize, 64, 128, 256] {
-        let fft2 = Fft2::with_size(n);
-        let mut buf = signal(n * n, 7);
-        let mut scratch = vec![Complex64::zero(); 4 * n];
-        let s = time_fn(reps, || {
-            fft2.process(&mut buf, &mut scratch, Sign::Positive);
-            std::hint::black_box(&buf);
-        });
-        t2.row(&[
-            n.to_string(),
-            fmt_seconds(s.median()),
-            format!("{:.1}", s.median() * 1e9 / (n * n) as f64),
-        ]);
-        csv.push(format!("fft2,{n},,{:.4e}", s.median()));
+        let variants: [(&str, Fft2); 3] = [
+            (
+                "split+panel",
+                Fft2::new(n, std::sync::Arc::new(FftPlan::new(n))),
+            ),
+            (
+                "split+gather",
+                Fft2::with_column_pass(
+                    n,
+                    std::sync::Arc::new(FftPlan::new(n)),
+                    ColumnPass::GatherScatter,
+                ),
+            ),
+            (
+                "radix2+gather",
+                Fft2::with_column_pass(
+                    n,
+                    std::sync::Arc::new(FftPlan::with_algo(n, FftAlgo::Radix2)),
+                    ColumnPass::GatherScatter,
+                ),
+            ),
+        ];
+        for (name, fft2) in &variants {
+            let mut buf = signal(n * n, 7);
+            let mut scratch = vec![Complex64::zero(); fft2.scratch_len()];
+            let inv_n = 1.0 / n as f64;
+            let s = time_fn(reps, || {
+                fft2.process(&mut buf, &mut scratch, Sign::Positive);
+                // Keep magnitudes bounded across reps (identical cost for
+                // every variant).
+                for v in buf.iter_mut() {
+                    *v = v.scale(inv_n);
+                }
+                std::hint::black_box(&buf);
+            });
+            t2.row(&[
+                n.to_string(),
+                (*name).into(),
+                fmt_seconds(s.median()),
+                format!("{:.1}", s.median() * 1e9 / (n * n) as f64),
+            ]);
+            csv.push(format!("fft2,{n},{name},{:.4e}", s.median()));
+        }
     }
     t2.print();
+
+    println!("\n== micro: real-input 2-D slice FFT (conjugate-even stage 1) ==");
+    let mut t3 = Table::new(&["2B", "path", "median", "ns/point"]);
+    for &n in &[32usize, 64, 128, 256] {
+        let plan = std::sync::Arc::new(FftPlan::new(n));
+        let complex_fft2 = Fft2::new(n, plan.clone());
+        let real_fft2 = RealFft2::new(n, plan);
+        let base = signal(n * n, 11);
+        let real_base: Vec<Complex64> =
+            base.iter().map(|z| Complex64::new(z.re, 0.0)).collect();
+
+        let mut buf = base.clone();
+        let mut scratch = vec![Complex64::zero(); complex_fft2.scratch_len()];
+        let inv_n = 1.0 / n as f64;
+        let s_c = time_fn(reps, || {
+            complex_fft2.process(&mut buf, &mut scratch, Sign::Positive);
+            for v in buf.iter_mut() {
+                *v = v.scale(inv_n);
+            }
+            std::hint::black_box(&buf);
+        });
+
+        let mut rbuf = real_base.clone();
+        let mut rscratch = vec![Complex64::zero(); real_fft2.scratch_len()];
+        let s_r = time_fn(reps, || {
+            // The real kernel consumes real samples; restore them each
+            // rep (a copy, ~1/log n of the transform cost).
+            rbuf.copy_from_slice(&real_base);
+            real_fft2.forward(&mut rbuf, &mut rscratch, Sign::Positive);
+            std::hint::black_box(&rbuf);
+        });
+
+        for (name, s) in [("complex", &s_c), ("real", &s_r)] {
+            t3.row(&[
+                n.to_string(),
+                name.into(),
+                fmt_seconds(s.median()),
+                format!("{:.1}", s.median() * 1e9 / (n * n) as f64),
+            ]);
+            csv.push(format!("fft2_real,{n},{name},{:.4e}", s.median()));
+        }
+    }
+    t3.print();
     csv_sink("micro_fft", "bench,n,algo,seconds", &csv);
 }

@@ -158,6 +158,54 @@ pub fn csv_sink(name: &str, header: &str, rows: &[String]) {
     }
 }
 
+/// Escape a string for embedding in a JSON document.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write a machine-readable benchmark report
+/// `{"meta": {...}, "records": [...]}` to `path` (no serde offline, so
+/// `meta` values and `records` entries must already be valid JSON
+/// fragments — numbers, quoted strings, or objects). Used by
+/// `examples/e2e_benchmark.rs` to emit `BENCH_fft.json`, the repo's
+/// tracked perf trajectory.
+pub fn write_json_report(
+    path: &str,
+    meta: &[(&str, String)],
+    records: &[String],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut out = String::from("{\n  \"meta\": {");
+    for (i, (k, v)) in meta.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n    \"{}\": {v}", json_escape(k)));
+    }
+    out.push_str("\n  },\n  \"records\": [");
+    for (i, r) in records.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n    {r}"));
+    }
+    out.push_str("\n  ]\n}\n");
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())
+}
+
 /// Read an env-var override for bench scale (small by default so `cargo
 /// bench` completes quickly; CI/full runs can raise it).
 pub fn env_usize(name: &str, default: usize) -> usize {
@@ -208,6 +256,21 @@ mod tests {
         assert_eq!(fmt_seconds(0.0025), "2.50 ms");
         assert_eq!(fmt_seconds(2.5e-6), "2.50 µs");
         assert!(fmt_mean_std_sci(1.1e-14, 1.4e-15).starts_with("(1.10 ± 0.14)E-14"));
+    }
+
+    #[test]
+    fn json_report_roundtrips_textually() {
+        let dir = std::env::temp_dir().join("so3ft_json_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("report.json");
+        let meta = [("bench", "\"fft\"".to_string()), ("threads", "4".to_string())];
+        let records = ["{\"b\": 32, \"seconds\": 1.5e-3}".to_string()];
+        write_json_report(path.to_str().unwrap(), &meta, &records).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"fft\""));
+        assert!(text.contains("\"records\""));
+        assert!(text.contains("1.5e-3"));
+        assert_eq!(json_escape("a\"b\\c\n"), "a\\\"b\\\\c\\n");
     }
 
     #[test]

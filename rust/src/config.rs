@@ -13,6 +13,8 @@
 //! algorithm = "matvec"        # matvec | clenshaw
 //! storage = "precomputed"     # precomputed | onthefly | auto
 //! precision = "double"        # double | extended
+//! fft = "split-radix"         # split-radix | radix2-baseline
+//! real_input = false          # conjugate-even forward FFT stage
 //!
 //! [runtime]
 //! artifacts = "artifacts"
@@ -26,6 +28,7 @@ use crate::coordinator::{ExecutorConfig, PartitionStrategy};
 use crate::dwt::tables::{WignerStorage, WignerTables};
 use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::{Error, Result};
+use crate::fft::FftEngine;
 use crate::pool::Schedule;
 
 /// Raw parsed file: section → key → value (strings unquoted).
@@ -158,6 +161,17 @@ pub fn parse_precision(s: &str) -> Result<Precision> {
     }
 }
 
+/// Parse an FFT engine spec.
+pub fn parse_fft_engine(s: &str) -> Result<FftEngine> {
+    match s {
+        "split-radix" | "splitradix" => Ok(FftEngine::SplitRadix),
+        "radix2-baseline" | "radix2" => Ok(FftEngine::Radix2Baseline),
+        _ => Err(Error::Config(format!(
+            "fft: expected split-radix|radix2-baseline, got {s:?}"
+        ))),
+    }
+}
+
 impl RunConfig {
     /// Build from a parsed file, applying defaults for missing keys.
     pub fn from_parsed(p: &ParsedConfig) -> Result<Self> {
@@ -184,6 +198,12 @@ impl RunConfig {
         }
         if let Some(s) = p.get("transform", "precision") {
             cfg.exec.precision = parse_precision(s)?;
+        }
+        if let Some(s) = p.get("transform", "fft") {
+            cfg.exec.fft_engine = parse_fft_engine(s)?;
+        }
+        if let Some(v) = p.get_bool("transform", "real_input")? {
+            cfg.exec.real_input = v;
         }
         if let Some(s) = p.get("runtime", "artifacts") {
             cfg.artifacts_dir = s.to_string();
@@ -216,6 +236,8 @@ strategy = "sigma"
 algorithm = "clenshaw"
 storage = "onthefly"
 precision = "double"
+fft = "radix2-baseline"
+real_input = true
 
 [runtime]
 artifacts = "my-artifacts"
@@ -234,6 +256,8 @@ seed = 7
         assert_eq!(cfg.exec.strategy, PartitionStrategy::SigmaClustered);
         assert_eq!(cfg.exec.algorithm, DwtAlgorithm::Clenshaw);
         assert_eq!(cfg.exec.storage, WignerStorage::OnTheFly);
+        assert_eq!(cfg.exec.fft_engine, FftEngine::Radix2Baseline);
+        assert!(cfg.exec.real_input);
         assert_eq!(cfg.artifacts_dir, "my-artifacts");
         assert!(cfg.use_xla);
         assert_eq!(cfg.seed, 7);
@@ -264,6 +288,16 @@ seed = 7
             &ParsedConfig::parse("[transform]\nthreads = \"x\"").unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn fft_engine_parses() {
+        assert_eq!(parse_fft_engine("split-radix").unwrap(), FftEngine::SplitRadix);
+        assert_eq!(
+            parse_fft_engine("radix2-baseline").unwrap(),
+            FftEngine::Radix2Baseline
+        );
+        assert!(parse_fft_engine("fftw").is_err());
     }
 
     #[test]

@@ -25,9 +25,10 @@ use crate::dwt::kernels::{self, DwtScratch};
 use crate::dwt::tables::{OnTheFlySource, WignerSource, WignerStorage, WignerTables};
 use crate::dwt::{DwtAlgorithm, Precision, SMatrix};
 use crate::error::{Error, Result};
-use crate::fft::fft2::Fft2;
-use crate::fft::plan::FftPlan;
-use crate::fft::{Complex64, Sign};
+use crate::fft::fft2::{ColumnPass, Fft2};
+use crate::fft::plan::{FftAlgo, FftPlan};
+use crate::fft::real::RealFft2;
+use crate::fft::{Complex64, FftEngine, Sign};
 use crate::pool::{parallel_for, RegionStats, Schedule};
 use crate::so3::coeffs::{coeff_count, So3Coeffs};
 use crate::so3::quadrature;
@@ -75,6 +76,15 @@ pub struct ExecutorConfig {
     pub storage: WignerStorage,
     /// Accumulation precision.
     pub precision: Precision,
+    /// FFT-stage kernels: the split-radix panel engine (default) or the
+    /// pre-overhaul radix-2 gather/scatter baseline.
+    pub fft_engine: FftEngine,
+    /// Opt-in real-input analysis: the forward FFT stage runs the
+    /// conjugate-even path (~half the butterfly work). Grids with any
+    /// nonzero imaginary part are rejected with
+    /// [`Error::RealInputRequired`]. The inverse direction is unaffected
+    /// (synthesis output is complex in general).
+    pub real_input: bool,
 }
 
 impl Default for ExecutorConfig {
@@ -86,6 +96,8 @@ impl Default for ExecutorConfig {
             algorithm: DwtAlgorithm::MatVec,
             storage: WignerStorage::Precomputed,
             precision: Precision::Double,
+            fft_engine: FftEngine::SplitRadix,
+            real_input: false,
         }
     }
 }
@@ -122,6 +134,10 @@ pub struct TransformStats {
     pub dwt_region: Option<RegionStats>,
 }
 
+/// Per-stage alias for [`TransformStats`] — the name the perf tooling
+/// (benches, `BENCH_fft.json`, docs/PERF.md) uses for the breakdown.
+pub type StageStats = TransformStats;
+
 impl TransformStats {
     /// Fraction of total time in the FFT stage (the paper's §5 ~5–8%
     /// observation).
@@ -142,6 +158,8 @@ pub struct Executor {
     angles: GridAngles,
     weights: Vec<f64>,
     fft2: Fft2,
+    /// Conjugate-even stage-1 companion, built in `real_input` mode.
+    real_fft2: Option<RealFft2>,
     tables: Option<WignerTables>,
     offload: Option<Arc<dyn DwtOffload>>,
     /// FFT bin of each order index: `order_bins[mi] = (mi - (B-1)) mod 2B`.
@@ -262,7 +280,15 @@ impl Executor {
             }
             _ => None,
         };
-        let fft2 = Fft2::new(2 * b, Arc::new(FftPlan::new(2 * b)));
+        let fft2 = match config.fft_engine {
+            FftEngine::SplitRadix => Fft2::new(2 * b, Arc::new(FftPlan::new(2 * b))),
+            FftEngine::Radix2Baseline => Fft2::with_column_pass(
+                2 * b,
+                Arc::new(FftPlan::with_algo(2 * b, FftAlgo::Radix2)),
+                ColumnPass::GatherScatter,
+            ),
+        };
+        let real_fft2 = config.real_input.then(|| RealFft2::from_fft2(&fft2));
         let n = 2 * b as i64;
         let order_bins = (0..SMatrix::orders(b))
             .map(|mi| (mi as i64 - (b as i64 - 1)).rem_euclid(n) as usize)
@@ -275,6 +301,7 @@ impl Executor {
             angles,
             weights,
             fft2,
+            real_fft2,
             tables,
             offload: None,
             order_bins,
@@ -377,19 +404,39 @@ impl Executor {
         let mut stats = TransformStats::default();
 
         // [FFT] per-slice 2-D FFT with the positive-sign kernel:
-        // Ŝ_j[u][v] = Σ_{i,k} f e^{+i(uα_i + vγ_k)}.
+        // Ŝ_j[u][v] = Σ_{i,k} f e^{+i(uα_i + vγ_k)}. In `real_input`
+        // mode the conjugate-even kernel does ~half the butterfly work;
+        // its realness validation is fused into the staging copy (one
+        // pass, and its cost is visible in `stats.fft` rather than
+        // hidden outside the timers).
         let t0 = Instant::now();
         let work = &mut ws.work;
-        work.copy_from_slice(grid.as_slice());
+        if self.real_fft2.is_some() {
+            for (dst, &src) in work.iter_mut().zip(grid.as_slice()) {
+                if src.im != 0.0 {
+                    return Err(Error::RealInputRequired {
+                        context: "forward: grid samples",
+                    });
+                }
+                *dst = src;
+            }
+        } else {
+            work.copy_from_slice(grid.as_slice());
+        }
         {
             let shared = SyncUnsafeSlice::new(work);
+            let slen = self
+                .real_fft2
+                .as_ref()
+                .map_or_else(|| self.fft2.scratch_len(), |rf| rf.scratch_len());
             parallel_for(self.config.threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
                 // SAFETY: slice j is exclusive to this package.
                 let slice = unsafe {
                     std::slice::from_raw_parts_mut(shared.ptr_at(j * n * n), n * n)
                 };
-                with_fft_scratch(4 * n, |scratch| {
-                    self.fft2.process(slice, scratch, Sign::Positive)
+                with_fft_scratch(slen, |scratch| match &self.real_fft2 {
+                    Some(rf) => rf.forward(slice, scratch, Sign::Positive),
+                    None => self.fft2.process(slice, scratch, Sign::Positive),
                 });
             });
         }
@@ -600,19 +647,34 @@ impl Executor {
 
     /// Sequential instrumented forward run: per-package wall times for
     /// each region, feeding the multicore simulator (DESIGN.md §3).
+    /// Runs the same FFT kernel `forward` would (including the
+    /// real-input path and its validation), so the calibration measures
+    /// the engine that actually serves.
     pub fn profile_forward(&self, grid: &So3Grid) -> Result<(So3Coeffs, RegionProfiles)> {
         if grid.bandwidth() != self.b {
             return Err(Error::bandwidth(self.b, grid.bandwidth(), "profile_forward"));
+        }
+        if self.real_fft2.is_some() && grid.as_slice().iter().any(|z| z.im != 0.0) {
+            return Err(Error::RealInputRequired {
+                context: "profile_forward: grid samples",
+            });
         }
         let n = 2 * self.b;
         let mut profiles = RegionProfiles::default();
 
         let mut work = grid.as_slice().to_vec();
-        let mut scratch = vec![Complex64::zero(); 4 * n];
+        let slen = self
+            .real_fft2
+            .as_ref()
+            .map_or_else(|| self.fft2.scratch_len(), |rf| rf.scratch_len());
+        let mut scratch = vec![Complex64::zero(); slen];
         for j in 0..n {
             let t0 = Instant::now();
-            self.fft2
-                .process(&mut work[j * n * n..(j + 1) * n * n], &mut scratch, Sign::Positive);
+            let slice = &mut work[j * n * n..(j + 1) * n * n];
+            match &self.real_fft2 {
+                Some(rf) => rf.forward(slice, &mut scratch, Sign::Positive),
+                None => self.fft2.process(slice, &mut scratch, Sign::Positive),
+            }
             profiles.fft.push(t0.elapsed().as_secs_f64());
         }
 
@@ -687,7 +749,7 @@ impl Executor {
             }
         }
 
-        let mut scratch = vec![Complex64::zero(); 4 * n];
+        let mut scratch = vec![Complex64::zero(); self.fft2.scratch_len()];
         for j in 0..n {
             let t0 = Instant::now();
             self.fft2
@@ -828,12 +890,13 @@ impl Executor {
         let t0 = Instant::now();
         {
             let shared = SyncUnsafeSlice::new(out.as_mut_slice());
+            let slen = self.fft2.scratch_len();
             parallel_for(self.config.threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
                 // SAFETY: slice j is exclusive to this package.
                 let slice = unsafe {
                     std::slice::from_raw_parts_mut(shared.ptr_at(j * n * n), n * n)
                 };
-                with_fft_scratch(4 * n, |scratch| {
+                with_fft_scratch(slen, |scratch| {
                     self.fft2.process(slice, scratch, Sign::Negative)
                 });
             });
@@ -1151,6 +1214,61 @@ mod tests {
         assert!(exec
             .inverse_into(&coeffs, &mut wrong_grid_out, &mut ws)
             .is_err());
+    }
+
+    #[test]
+    fn radix2_baseline_engine_matches_default() {
+        let b = 8;
+        let coeffs = So3Coeffs::random(b, 5);
+        let new_engine = Executor::new(b, ExecutorConfig::default()).unwrap();
+        let baseline = Executor::new(
+            b,
+            ExecutorConfig {
+                fft_engine: FftEngine::Radix2Baseline,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let g_new = new_engine.inverse(&coeffs).unwrap();
+        let g_old = baseline.inverse(&coeffs).unwrap();
+        assert!(g_new.max_abs_error(&g_old) < 1e-12);
+        let c_new = new_engine.forward(&g_new).unwrap();
+        let c_old = baseline.forward(&g_old).unwrap();
+        assert!(c_new.max_abs_error(&c_old) < 1e-12);
+    }
+
+    #[test]
+    fn real_input_mode_parity_and_typed_error() {
+        let b = 4;
+        let coeffs = So3Coeffs::random(b, 6);
+        let complex_exec = Executor::new(b, ExecutorConfig::default()).unwrap();
+        let real_exec = Executor::new(
+            b,
+            ExecutorConfig {
+                real_input: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let g = complex_exec.inverse(&coeffs).unwrap();
+        // Complex samples are a typed error in real-input mode.
+        assert!(matches!(
+            real_exec.forward(&g),
+            Err(Error::RealInputRequired { .. })
+        ));
+        // The real part of a bandlimited function is bandlimited; the
+        // conjugate-even path must agree with the complex path on it.
+        let real_grid = So3Grid::from_vec(
+            b,
+            g.as_slice()
+                .iter()
+                .map(|z| Complex64::new(z.re, 0.0))
+                .collect(),
+        )
+        .unwrap();
+        let want = complex_exec.forward(&real_grid).unwrap();
+        let got = real_exec.forward(&real_grid).unwrap();
+        assert!(want.max_abs_error(&got) < 1e-12);
     }
 
     #[test]

@@ -15,5 +15,5 @@ pub mod exec;
 pub mod partition;
 pub mod plan;
 
-pub use exec::{Executor, ExecutorConfig, TransformStats, Workspace};
+pub use exec::{Executor, ExecutorConfig, StageStats, TransformStats, Workspace};
 pub use plan::{PartitionStrategy, TransformPlan};

@@ -35,6 +35,11 @@ pub enum Error {
     /// An (l, m, m') index outside the coefficient domain.
     IndexOutOfRange { l: i64, m: i64, mp: i64, b: usize },
 
+    /// A plan built in `real_input` mode received data with nonzero
+    /// imaginary parts (the conjugate-even FFT path is only valid for
+    /// real samples).
+    RealInputRequired { context: &'static str },
+
     /// Thread-count request the pool cannot satisfy.
     InvalidThreads(usize),
 
@@ -83,6 +88,11 @@ impl fmt::Display for Error {
             Error::IndexOutOfRange { l, m, mp, b } => write!(
                 f,
                 "coefficient index out of range: l={l}, m={m}, m'={mp} (bandwidth {b})"
+            ),
+            Error::RealInputRequired { context } => write!(
+                f,
+                "real-input plan received complex data ({context}); drop \
+                 `real_input()` from the builder or zero the imaginary parts"
             ),
             Error::InvalidThreads(t) => {
                 write!(f, "invalid thread count {t}: must be >= 1")
@@ -145,6 +155,9 @@ mod tests {
             .contains("power of two"));
         assert!(Error::InvalidThreads(0).to_string().contains("thread count 0"));
         assert!(Error::shape(4, 5, "ctx").to_string().contains("ctx"));
+        assert!(Error::RealInputRequired { context: "forward" }
+            .to_string()
+            .contains("real-input"));
         let bw = Error::bandwidth(8, 16, "workspace bandwidth").to_string();
         assert!(bw.contains("bandwidth mismatch") && bw.contains("workspace"));
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();

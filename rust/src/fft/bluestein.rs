@@ -3,10 +3,10 @@
 //! The FSOFT grid size is `2B`; for the paper's bandwidths this is a power
 //! of two, but the library accepts any `B ≥ 1`, so non-power-of-two sizes
 //! are routed here. The n-point DFT is re-expressed as a circular
-//! convolution of length `M = next_pow2(2n-1)` evaluated with the radix-2
-//! kernel.
+//! convolution of length `M = next_pow2(2n-1)` evaluated with the
+//! radix-4 (split-radix-family) kernel.
 
-use super::radix2::Radix2Plan;
+use super::split_radix::Radix4Plan;
 use super::{Complex64, Sign};
 
 /// Precomputed state for an arbitrary-size Bluestein transform.
@@ -14,7 +14,7 @@ use super::{Complex64, Sign};
 pub struct BluesteinPlan {
     n: usize,
     m: usize,
-    inner: Radix2Plan,
+    inner: Radix4Plan,
     /// Chirp a_j = e^{-iπ j² / n} (negative-sign convention).
     chirp_neg: Vec<Complex64>,
     /// FFT of the zero-padded conjugate chirp (negative-sign convention),
@@ -26,7 +26,7 @@ impl BluesteinPlan {
     pub fn new(n: usize) -> Self {
         assert!(n >= 1);
         let m = (2 * n - 1).next_power_of_two();
-        let inner = Radix2Plan::new(m);
+        let inner = Radix4Plan::new(m);
         // j² mod 2n keeps the chirp angle bounded for accuracy.
         let base = -std::f64::consts::PI / n as f64;
         let chirp_neg: Vec<Complex64> = (0..n)
@@ -135,6 +135,7 @@ mod tests {
 
     #[test]
     fn agrees_with_radix2_on_pow2() {
+        use crate::fft::radix2::Radix2Plan;
         let n = 64;
         let bs = BluesteinPlan::new(n);
         let r2 = Radix2Plan::new(n);

@@ -96,6 +96,15 @@ impl Complex64 {
         }
     }
 
+    /// Multiplication by −i without a full complex multiply.
+    #[inline]
+    pub fn mul_neg_i(self) -> Self {
+        Self {
+            re: self.im,
+            im: -self.re,
+        }
+    }
+
     /// True when both parts are finite.
     #[inline]
     pub fn is_finite(self) -> bool {
@@ -243,6 +252,7 @@ mod tests {
     fn mul_i_matches_full_multiply() {
         let z = Complex64::new(0.7, -1.3);
         assert!(close(z.mul_i(), z * I));
+        assert!(close(z.mul_neg_i(), z * -I));
     }
 
     #[test]

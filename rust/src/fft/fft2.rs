@@ -6,25 +6,67 @@
 //! frequencies m, m' ∈ {1-B, …, B-1} live in the DFT bins mod 2B).
 //! The iFSOFT's last stage is the negative-sign counterpart.
 //!
-//! Rows (α-axis) are transformed in place; the column (γ-axis... actually
-//! α) pass gathers a column into a stride-1 scratch buffer, transforms it,
-//! and scatters back — measurably faster than strided butterflies for the
-//! sizes involved (2B ≤ 1024).
+//! Rows (γ-axis, unit stride) are transformed in place. For the column
+//! (α-axis) pass there are two strategies:
+//!
+//! * [`ColumnPass::Panel`] (default for the split-radix kernel) — the
+//!   butterflies run *directly* over panels of four adjacent strided
+//!   columns via `process_panel`. Four 16-byte complex values are one
+//!   64-byte cache line, and an `n`-row panel (≤ 64 KiB for the paper's
+//!   sizes) stays cache-resident across all butterfly stages, so every
+//!   line of the slice is touched once per transform — no scratch, no
+//!   copies.
+//! * [`ColumnPass::GatherScatter`] (Bluestein fallback + the measurable
+//!   baseline) — gather four columns into stride-1 scratch, transform,
+//!   scatter back. Each line of the slice is touched three times per
+//!   sweep (gather read, scratch working set, scatter write).
 
 use super::plan::FftPlan;
 use super::{Complex64, Sign};
+
+/// Column-pass strategy of a [`Fft2`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnPass {
+    /// Copy-free strided panel butterflies (requires the split-radix
+    /// kernel).
+    Panel,
+    /// Gather → stride-1 FFT → scatter through scratch (any kernel).
+    GatherScatter,
+}
 
 /// 2-D transform workspace for an `n × n` slice (row-major `[i][k]`).
 #[derive(Debug, Clone)]
 pub struct Fft2 {
     n: usize,
     plan: std::sync::Arc<FftPlan>,
+    columns: ColumnPass,
 }
 
 impl Fft2 {
+    /// Build with the best column pass the plan supports (panel for
+    /// split-radix, gather/scatter otherwise).
     pub fn new(n: usize, plan: std::sync::Arc<FftPlan>) -> Self {
+        let columns = if plan.supports_panel() {
+            ColumnPass::Panel
+        } else {
+            ColumnPass::GatherScatter
+        };
+        Self::with_column_pass(n, plan, columns)
+    }
+
+    /// Build with an explicit column pass. Panics if `Panel` is requested
+    /// for a plan without strided butterflies (radix-2, Bluestein).
+    pub fn with_column_pass(
+        n: usize,
+        plan: std::sync::Arc<FftPlan>,
+        columns: ColumnPass,
+    ) -> Self {
         assert_eq!(plan.len(), n, "plan size must match slice edge");
-        Self { n, plan }
+        assert!(
+            columns == ColumnPass::GatherScatter || plan.supports_panel(),
+            "panel column pass requires a radix kernel"
+        );
+        Self { n, plan, columns }
     }
 
     /// Build with a private plan (tests / one-off use).
@@ -42,49 +84,107 @@ impl Fft2 {
         self.n == 0
     }
 
-    /// Scratch length required by [`Self::process`].
+    /// The shared 1-D plan (twiddle tables).
+    #[inline]
+    pub fn plan(&self) -> &std::sync::Arc<FftPlan> {
+        &self.plan
+    }
+
+    /// Which column-pass strategy this transform uses.
+    #[inline]
+    pub fn column_pass(&self) -> ColumnPass {
+        self.columns
+    }
+
+    /// Scratch length required by [`Self::process`]: zero for the
+    /// copy-free panel pass, `4n` gather buffers otherwise. Callers must
+    /// size scratch from here rather than hard-coding `4n` — the two
+    /// modes genuinely differ.
     #[inline]
     pub fn scratch_len(&self) -> usize {
-        4 * self.n
+        match self.columns {
+            ColumnPass::Panel => 0,
+            ColumnPass::GatherScatter => 4 * self.n,
+        }
     }
 
     /// In-place unnormalized 2-D transform of a row-major `n × n` slice.
-    /// `scratch` must have length `4n` (see [`Self::scratch_len`]).
+    /// `scratch` must have at least [`Self::scratch_len`] elements (it is
+    /// untouched — and may be empty — in panel mode).
     pub fn process(&self, slice: &mut [Complex64], scratch: &mut [Complex64], sign: Sign) {
         let n = self.n;
         assert_eq!(slice.len(), n * n, "slice must be n*n");
-        assert!(scratch.len() >= 4 * n, "scratch must be 4n");
+        assert!(
+            scratch.len() >= self.scratch_len(),
+            "scratch must be scratch_len()"
+        );
         // Row pass (unit stride).
         for row in slice.chunks_exact_mut(n) {
             self.plan.process(row, sign);
         }
-        // Column pass: gather FOUR adjacent columns per sweep — they share
-        // cache lines (4 × 16-byte complex = one 64-byte line), so each
-        // line of the slice is touched once per sweep instead of four
-        // times (§Perf in EXPERIMENTS.md).
-        let mut c = 0;
-        while c < n {
-            let cols = (n - c).min(4);
-            for r in 0..n {
-                let base = r * n + c;
-                for k in 0..cols {
-                    scratch[k * n + r] = slice[base + k];
+        self.column_pass_range(slice, n, scratch, sign);
+    }
+
+    /// Column pass over columns `0..ncols` of a row-major `n × n` slice
+    /// — the full complex transform uses `ncols = n`, the real-input
+    /// path ([`super::real::RealFft2`]) only `n/2 + 1` (the rest follow
+    /// from Hermitian symmetry).
+    pub(crate) fn column_pass_range(
+        &self,
+        slice: &mut [Complex64],
+        ncols: usize,
+        scratch: &mut [Complex64],
+        sign: Sign,
+    ) {
+        let n = self.n;
+        debug_assert!(ncols <= n);
+        match self.columns {
+            ColumnPass::Panel => {
+                // Butterflies straight over 4-column strided panels (one
+                // cache line per row), all stages while the panel is
+                // cache-resident.
+                let mut c = 0;
+                while c < ncols {
+                    let cols = (ncols - c).min(4);
+                    self.plan.process_panel(&mut slice[c..], n, cols, sign);
+                    c += cols;
                 }
             }
-            for k in 0..cols {
-                self.plan.process(&mut scratch[k * n..(k + 1) * n], sign);
-            }
-            for r in 0..n {
-                let base = r * n + c;
-                for k in 0..cols {
-                    slice[base + k] = scratch[k * n + r];
+            ColumnPass::GatherScatter => {
+                // Gather FOUR adjacent columns per sweep — they share
+                // cache lines (4 × 16-byte complex = one 64-byte line),
+                // so each line of the slice is touched once per sweep
+                // instead of four times (§Perf in EXPERIMENTS.md).
+                let mut c = 0;
+                while c < ncols {
+                    let cols = (ncols - c).min(4);
+                    for r in 0..n {
+                        let base = r * n + c;
+                        for k in 0..cols {
+                            scratch[k * n + r] = slice[base + k];
+                        }
+                    }
+                    for k in 0..cols {
+                        self.plan.process(&mut scratch[k * n..(k + 1) * n], sign);
+                    }
+                    for r in 0..n {
+                        let base = r * n + c;
+                        for k in 0..cols {
+                            slice[base + k] = scratch[k * n + r];
+                        }
+                    }
+                    c += cols;
                 }
             }
-            c += cols;
         }
     }
 
     /// Convenience wrapper that allocates its own scratch.
+    #[deprecated(
+        since = "0.3.0",
+        note = "allocates per call; use `process` with a reused \
+                `scratch_len()`-sized buffer (or the executor's workspace)"
+    )]
     pub fn process_alloc(&self, slice: &mut [Complex64], sign: Sign) {
         let mut scratch = vec![Complex64::zero(); self.scratch_len()];
         self.process(slice, &mut scratch, sign);
@@ -95,6 +195,7 @@ impl Fft2 {
 mod tests {
     use super::*;
     use crate::fft::dft::dft2;
+    use crate::fft::plan::FftAlgo;
     use crate::prng::Xoshiro256;
 
     fn random_slice(n: usize, seed: u64) -> Vec<Complex64> {
@@ -104,19 +205,70 @@ mod tests {
             .collect()
     }
 
+    fn process_fresh(fft2: &Fft2, slice: &mut [Complex64], sign: Sign) {
+        let mut scratch = vec![Complex64::zero(); fft2.scratch_len()];
+        fft2.process(slice, &mut scratch, sign);
+    }
+
     #[test]
     fn matches_2d_oracle() {
         for &n in &[2usize, 4, 8, 16, 6] {
             let fft2 = Fft2::with_size(n);
+            assert_eq!(
+                fft2.column_pass(),
+                if n.is_power_of_two() {
+                    ColumnPass::Panel
+                } else {
+                    ColumnPass::GatherScatter
+                }
+            );
             for sign in [Sign::Negative, Sign::Positive] {
                 let x = random_slice(n, 11 + n as u64);
                 let want = dft2(&x, n, n, sign);
                 let mut got = x.clone();
-                fft2.process_alloc(&mut got, sign);
+                process_fresh(&fft2, &mut got, sign);
                 for (a, b) in want.iter().zip(got.iter()) {
                     assert!((*a - *b).abs() < 1e-8 * n as f64, "n={n} sign={sign:?}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn panel_and_gather_agree() {
+        for &n in &[2usize, 4, 8, 32] {
+            let plan = std::sync::Arc::new(FftPlan::new(n));
+            let panel = Fft2::with_column_pass(n, plan.clone(), ColumnPass::Panel);
+            let gather = Fft2::with_column_pass(n, plan, ColumnPass::GatherScatter);
+            assert_eq!(panel.scratch_len(), 0);
+            assert_eq!(gather.scratch_len(), 4 * n);
+            for sign in [Sign::Negative, Sign::Positive] {
+                let x = random_slice(n, 31 + n as u64);
+                let mut a = x.clone();
+                let mut b = x;
+                process_fresh(&panel, &mut a, sign);
+                process_fresh(&gather, &mut b, sign);
+                for (u, v) in a.iter().zip(b.iter()) {
+                    assert!((*u - *v).abs() < 1e-12 * n as f64, "n={n} sign={sign:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radix2_baseline_engine_matches_oracle() {
+        let n = 8;
+        let fft2 = Fft2::with_column_pass(
+            n,
+            std::sync::Arc::new(FftPlan::with_algo(n, FftAlgo::Radix2)),
+            ColumnPass::GatherScatter,
+        );
+        let x = random_slice(n, 3);
+        let want = dft2(&x, n, n, Sign::Positive);
+        let mut got = x;
+        process_fresh(&fft2, &mut got, Sign::Positive);
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert!((*a - *b).abs() < 1e-8 * n as f64);
         }
     }
 
@@ -126,8 +278,8 @@ mod tests {
         let fft2 = Fft2::with_size(n);
         let x = random_slice(n, 21);
         let mut y = x.clone();
-        fft2.process_alloc(&mut y, Sign::Positive);
-        fft2.process_alloc(&mut y, Sign::Negative);
+        process_fresh(&fft2, &mut y, Sign::Positive);
+        process_fresh(&fft2, &mut y, Sign::Negative);
         let scale = (n * n) as f64;
         for (a, b) in x.iter().zip(y.iter()) {
             assert!((a.scale(scale) - *b).abs() < 1e-8 * scale);
@@ -148,7 +300,7 @@ mod tests {
                 x[i * n + k] = Complex64::cis(tau * (2 * i + 5 * k) as f64 / n as f64);
             }
         }
-        fft2.process_alloc(&mut x, Sign::Positive);
+        process_fresh(&fft2, &mut x, Sign::Positive);
         for u in 0..n {
             for v in 0..n {
                 let mag = x[u * n + v].abs();
@@ -158,6 +310,22 @@ mod tests {
                     assert!(mag < 1e-8, "leak at ({u},{v}): {mag}");
                 }
             }
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn process_alloc_still_works() {
+        let n = 8;
+        let fft2 = Fft2::with_size(n);
+        let x = random_slice(n, 77);
+        let mut a = x.clone();
+        let mut b = x;
+        fft2.process_alloc(&mut a, Sign::Negative);
+        process_fresh(&fft2, &mut b, Sign::Negative);
+        for (u, v) in a.iter().zip(b.iter()) {
+            assert_eq!(u.re, v.re);
+            assert_eq!(u.im, v.im);
         }
     }
 }

@@ -6,13 +6,19 @@
 //!
 //! * [`complex`] — a minimal `Complex64` value type.
 //! * [`dft`] — the O(n²) direct DFT, used as the correctness oracle.
-//! * [`radix2`] — iterative in-place radix-2 Cooley–Tukey for power-of-two
-//!   sizes (the FSOFT grid size `2B` is a power of two for all paper
-//!   bandwidths).
+//! * [`split_radix`] — the split-radix-family radix-4 kernel for
+//!   power-of-two sizes (the FSOFT grid size `2B` is a power of two for
+//!   all paper bandwidths): half the butterfly passes of radix-2, plus
+//!   the strided *panel* entry point the 2-D column pass runs on.
+//! * [`radix2`] — iterative in-place radix-2 Cooley–Tukey, kept as the
+//!   measurable baseline engine.
+//! * [`real`] — real-input (conjugate-even) 1-D and 2-D transforms:
+//!   ~half the work of the complex kernels on real SO(3) samples.
 //! * [`bluestein`] — chirp-z fallback so arbitrary (non-power-of-two)
 //!   bandwidths work too.
 //! * [`plan`] — twiddle/bit-reversal caching and algorithm dispatch.
-//! * [`fft2`] — the 2-D transform over the (α, γ) axes of one β-slice.
+//! * [`fft2`] — the 2-D transform over the (α, γ) axes of one β-slice,
+//!   with the copy-free panel column pass.
 //!
 //! Sign convention: `Sign::Negative` is the classical *forward* DFT
 //! `X_k = Σ_j x_j e^{-2πi jk/n}`; `Sign::Positive` flips the exponent.
@@ -25,9 +31,29 @@ pub mod dft;
 pub mod fft2;
 pub mod plan;
 pub mod radix2;
+pub mod real;
+pub mod split_radix;
 
 pub use complex::Complex64;
-pub use plan::{FftPlan, FftPlanner};
+pub use fft2::{ColumnPass, Fft2};
+pub use plan::{FftAlgo, FftPlan, FftPlanner};
+pub use real::{RealFft2, RealFftPlan};
+pub use split_radix::Radix4Plan;
+
+/// Executor-level FFT engine selection (see
+/// [`crate::coordinator::ExecutorConfig::fft_engine`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FftEngine {
+    /// The overhauled engine: radix-4 (split-radix-family) butterflies
+    /// with the copy-free panel column pass; Bluestein for
+    /// non-power-of-two sizes. The default.
+    #[default]
+    SplitRadix,
+    /// The pre-overhaul engine: radix-2 butterflies with the
+    /// gather→FFT→scatter column sweep. Kept constructible so the
+    /// speedup stays measurable (`benches/`, `BENCH_fft.json`).
+    Radix2Baseline,
+}
 
 /// Exponent sign of the transform kernel `e^{sign · 2πi jk / n}`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

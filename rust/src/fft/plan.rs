@@ -1,37 +1,79 @@
 //! Algorithm dispatch and plan caching.
 //!
-//! [`FftPlan`] picks radix-2 for power-of-two sizes (the common case:
-//! the SO(3) grid edge `2B` is a power of two for all paper bandwidths)
-//! and Bluestein otherwise. [`FftPlanner`] memoizes plans by size so the
-//! twiddle tables are built once and shared (`Arc`) across worker threads.
+//! [`FftPlan`] picks the split-radix-family radix-4 kernel for
+//! power-of-two sizes (the common case: the SO(3) grid edge `2B` is a
+//! power of two for all paper bandwidths) and Bluestein otherwise; the
+//! radix-2 kernel remains constructible via [`FftAlgo::Radix2`] as the
+//! measurable baseline and as a fallback. [`FftPlanner`] memoizes plans
+//! by size so the twiddle tables are built once and shared (`Arc`)
+//! across worker threads.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::bluestein::BluesteinPlan;
 use super::radix2::Radix2Plan;
+use super::split_radix::Radix4Plan;
 use super::{Complex64, Sign};
+
+/// Which 1-D kernel to build (see [`FftPlan::with_algo`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FftAlgo {
+    /// Split-radix-family radix-4 for powers of two, Bluestein otherwise
+    /// (the default dispatch).
+    Auto,
+    /// Force the radix-4 kernel (power-of-two sizes only).
+    SplitRadix,
+    /// The legacy dispatch: radix-2 for powers of two, Bluestein
+    /// otherwise. Kept as the performance baseline.
+    Radix2,
+    /// Force the chirp-z kernel (any size).
+    Bluestein,
+}
 
 /// A prepared 1-D transform of a fixed size.
 #[derive(Debug, Clone)]
 pub enum FftPlan {
+    SplitRadix(Radix4Plan),
     Radix2(Radix2Plan),
     Bluestein(BluesteinPlan),
 }
 
 impl FftPlan {
+    /// Default dispatch: radix-4 for powers of two, Bluestein otherwise.
     pub fn new(n: usize) -> Self {
+        Self::with_algo(n, FftAlgo::Auto)
+    }
+
+    /// Build a specific kernel. [`FftAlgo::SplitRadix`] panics on
+    /// non-power-of-two sizes; [`FftAlgo::Radix2`] mirrors the legacy
+    /// auto-dispatch (radix-2 / Bluestein).
+    pub fn with_algo(n: usize, algo: FftAlgo) -> Self {
         assert!(n >= 1, "FFT size must be >= 1");
-        if n.is_power_of_two() {
-            FftPlan::Radix2(Radix2Plan::new(n))
-        } else {
-            FftPlan::Bluestein(BluesteinPlan::new(n))
+        match algo {
+            FftAlgo::Auto => {
+                if n.is_power_of_two() {
+                    FftPlan::SplitRadix(Radix4Plan::new(n))
+                } else {
+                    FftPlan::Bluestein(BluesteinPlan::new(n))
+                }
+            }
+            FftAlgo::SplitRadix => FftPlan::SplitRadix(Radix4Plan::new(n)),
+            FftAlgo::Radix2 => {
+                if n.is_power_of_two() {
+                    FftPlan::Radix2(Radix2Plan::new(n))
+                } else {
+                    FftPlan::Bluestein(BluesteinPlan::new(n))
+                }
+            }
+            FftAlgo::Bluestein => FftPlan::Bluestein(BluesteinPlan::new(n)),
         }
     }
 
     #[inline]
     pub fn len(&self) -> usize {
         match self {
+            FftPlan::SplitRadix(p) => p.len(),
             FftPlan::Radix2(p) => p.len(),
             FftPlan::Bluestein(p) => p.len(),
         }
@@ -42,17 +84,58 @@ impl FftPlan {
         self.len() == 0
     }
 
+    /// The kernel this plan dispatches to (for diagnostics / bench labels).
+    pub fn algo_name(&self) -> &'static str {
+        match self {
+            FftPlan::SplitRadix(_) => "split-radix",
+            FftPlan::Radix2(_) => "radix2",
+            FftPlan::Bluestein(_) => "bluestein",
+        }
+    }
+
+    /// Whether [`Self::process_panel`] is available. Only the
+    /// split-radix kernel carries strided butterflies: Bluestein's
+    /// convolution cannot, and the radix-2 baseline deliberately keeps
+    /// the pre-overhaul gather/scatter column pass (so the baseline
+    /// measures the old engine, and no second panel kernel needs
+    /// maintaining).
+    #[inline]
+    pub fn supports_panel(&self) -> bool {
+        matches!(self, FftPlan::SplitRadix(_))
+    }
+
     /// In-place unnormalized transform.
     #[inline]
     pub fn process(&self, data: &mut [Complex64], sign: Sign) {
         match self {
+            FftPlan::SplitRadix(p) => p.process(data, sign),
             FftPlan::Radix2(p) => p.process(data, sign),
             FftPlan::Bluestein(p) => p.process(data, sign),
         }
     }
+
+    /// In-place unnormalized transform of `cols` adjacent columns at
+    /// `stride` (see [`Radix4Plan::process_panel`]). Panics for plans
+    /// without strided butterflies — check [`Self::supports_panel`]
+    /// first.
+    #[inline]
+    pub fn process_panel(
+        &self,
+        data: &mut [Complex64],
+        stride: usize,
+        cols: usize,
+        sign: Sign,
+    ) {
+        match self {
+            FftPlan::SplitRadix(p) => p.process_panel(data, stride, cols, sign),
+            FftPlan::Radix2(_) | FftPlan::Bluestein(_) => {
+                panic!("only split-radix plans have a strided panel kernel")
+            }
+        }
+    }
 }
 
-/// Thread-safe plan cache.
+/// Thread-safe plan cache (keyed by size; `Auto` dispatch).
 #[derive(Debug, Default)]
 pub struct FftPlanner {
     cache: Mutex<HashMap<usize, Arc<FftPlan>>>,
@@ -88,6 +171,14 @@ mod tests {
                 .collect();
             let plan = FftPlan::new(n);
             assert_eq!(plan.len(), n);
+            assert_eq!(
+                plan.algo_name(),
+                if n.is_power_of_two() {
+                    "split-radix"
+                } else {
+                    "bluestein"
+                }
+            );
             let mut got = x.clone();
             plan.process(&mut got, Sign::Negative);
             let want = dft(&x, Sign::Negative);
@@ -95,6 +186,42 @@ mod tests {
                 assert!((*a - *b).abs() < 1e-8);
             }
         }
+    }
+
+    #[test]
+    fn all_algos_agree() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let n = 64;
+        let x: Vec<Complex64> = (0..n)
+            .map(|_| Complex64::new(rng.next_signed(), rng.next_signed()))
+            .collect();
+        let want = dft(&x, Sign::Positive);
+        for algo in [
+            FftAlgo::Auto,
+            FftAlgo::SplitRadix,
+            FftAlgo::Radix2,
+            FftAlgo::Bluestein,
+        ] {
+            let plan = FftPlan::with_algo(n, algo);
+            let mut got = x.clone();
+            plan.process(&mut got, Sign::Positive);
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!((*a - *b).abs() < 1e-8, "{algo:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_algo_falls_back_to_bluestein() {
+        let plan = FftPlan::with_algo(12, FftAlgo::Radix2);
+        assert_eq!(plan.algo_name(), "bluestein");
+        assert!(!plan.supports_panel());
+        let plan = FftPlan::with_algo(16, FftAlgo::Radix2);
+        assert_eq!(plan.algo_name(), "radix2");
+        // The baseline keeps the gather/scatter column pass — only the
+        // split-radix kernel carries strided panel butterflies.
+        assert!(!plan.supports_panel());
+        assert!(FftPlan::with_algo(16, FftAlgo::SplitRadix).supports_panel());
     }
 
     #[test]

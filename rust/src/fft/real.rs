@@ -1,0 +1,356 @@
+//! Real-input (conjugate-even) fast transforms.
+//!
+//! Real SO(3) samples waste half of a complex FFT: the spectrum of a real
+//! signal is Hermitian (`X[n-k] = conj(X[k])`), so half the butterfly
+//! work and half the memory traffic recompute values already known. Two
+//! exploits live here:
+//!
+//! * [`RealFftPlan`] — a 1-D real-input transform of even size `n` built
+//!   on a half-size complex plan: pack even/odd samples as one complex
+//!   signal of length `n/2`, transform, and untangle. Forward
+//!   (`real → full complex spectrum`) and inverse (`conjugate-even
+//!   spectrum → real`) directions, both unnormalized like the rest of
+//!   the substrate.
+//! * [`RealFft2`] — the 2-D β-slice transform for real slices, used by
+//!   the executor's opt-in `real_input` analysis mode. The row pass packs
+//!   *pairs of adjacent real rows* into one complex FFT each (half the
+//!   row transforms); the column pass only transforms columns
+//!   `0..=n/2` (the rest follow from Hermitian symmetry of the real
+//!   slice: `S[v][n-u] = conj(S[(n-v) mod n][u])`) and is filled in by a
+//!   copy-only mirror sweep. Net: the FFT stage does ~half the butterfly
+//!   work of the complex path.
+//!
+//! Both untangling identities are sign-agnostic, so [`Sign`] keeps its
+//! usual meaning. Outputs agree with the complex kernels to rounding
+//! error (`tests/fft_parity.rs` pins this at ≤ 1e-12 for the paper's
+//! grid sizes).
+
+use std::sync::Arc;
+
+use super::fft2::{ColumnPass, Fft2};
+use super::plan::FftPlan;
+use super::{Complex64, Sign};
+
+/// A prepared 1-D real-input transform of fixed even size `n`.
+#[derive(Debug, Clone)]
+pub struct RealFftPlan {
+    n: usize,
+    /// Complex plan of size `n/2` for the packed even/odd signal.
+    half: Arc<FftPlan>,
+    /// `ω^k = e^{-2πi k/n}` for k = 0..n/2 (negative-sign convention;
+    /// conjugated on the fly for the positive sign).
+    twiddles_neg: Vec<Complex64>,
+}
+
+impl RealFftPlan {
+    /// Build a plan. `n` must be even and ≥ 2 (the SO(3) grid edge `2B`
+    /// always is); odd sizes have no half-length packing and callers
+    /// should use the complex [`FftPlan`] directly.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2 && n % 2 == 0, "real FFT requires even n >= 2");
+        let base = -std::f64::consts::TAU / n as f64;
+        Self {
+            n,
+            half: Arc::new(FftPlan::new(n / 2)),
+            twiddles_neg: (0..n / 2)
+                .map(|k| Complex64::cis(base * k as f64))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Scratch length required by [`Self::forward`] / [`Self::inverse`].
+    #[inline]
+    pub fn scratch_len(&self) -> usize {
+        self.n / 2
+    }
+
+    /// Unnormalized DFT of a real signal:
+    /// `out[k] = Σ_j input[j] e^{sign·2πi jk/n}` for k = 0..n.
+    /// The full (Hermitian) spectrum is materialized so downstream
+    /// consumers are layout-compatible with the complex path.
+    pub fn forward(
+        &self,
+        input: &[f64],
+        out: &mut [Complex64],
+        scratch: &mut [Complex64],
+        sign: Sign,
+    ) {
+        let n = self.n;
+        let half = n / 2;
+        assert_eq!(input.len(), n, "real forward: input length");
+        assert_eq!(out.len(), n, "real forward: output length");
+        assert!(scratch.len() >= half, "real forward: scratch length");
+        let z = &mut scratch[..half];
+        for (k, zk) in z.iter_mut().enumerate() {
+            *zk = Complex64::new(input[2 * k], input[2 * k + 1]);
+        }
+        self.half.process(z, sign);
+        // Untangle E (even-sample DFT) and O (odd-sample DFT) from the
+        // packed transform, then combine: X[k] = E[k] + ω^k O[k],
+        // X[k+n/2] = E[k] - ω^k O[k].
+        for k in 0..half {
+            let zk = z[k];
+            let zc = z[(half - k) % half].conj();
+            let e = (zk + zc).scale(0.5);
+            let o = (zk - zc).scale(0.5).mul_neg_i();
+            let w = if matches!(sign, Sign::Positive) {
+                self.twiddles_neg[k].conj()
+            } else {
+                self.twiddles_neg[k]
+            };
+            let t = w * o;
+            out[k] = e + t;
+            out[k + half] = e - t;
+        }
+    }
+
+    /// Unnormalized DFT of a conjugate-even spectrum back to real samples:
+    /// `out[j] = Re(Σ_k spec[k] e^{sign·2πi jk/n})`. When `spec` is
+    /// exactly conjugate-even this equals the complex transform; any
+    /// non-Hermitian component (necessarily imaginary in the output) is
+    /// discarded.
+    pub fn inverse(
+        &self,
+        spec: &[Complex64],
+        out: &mut [f64],
+        scratch: &mut [Complex64],
+        sign: Sign,
+    ) {
+        let n = self.n;
+        let half = n / 2;
+        assert_eq!(spec.len(), n, "real inverse: spectrum length");
+        assert_eq!(out.len(), n, "real inverse: output length");
+        assert!(scratch.len() >= half, "real inverse: scratch length");
+        // Fold the spectrum onto the even/odd interpolants:
+        // E'[k] = X[k] + X[k+n/2] (→ even samples),
+        // O'[k] = (X[k] - X[k+n/2]) ω^k (→ odd samples), ω = e^{sign·2πi/n},
+        // then one packed half-size transform recovers both at once.
+        let z = &mut scratch[..half];
+        for (k, zk) in z.iter_mut().enumerate() {
+            let a = spec[k];
+            let b = spec[k + half];
+            let w = if matches!(sign, Sign::Positive) {
+                self.twiddles_neg[k].conj()
+            } else {
+                self.twiddles_neg[k]
+            };
+            let e = a + b;
+            let o = (a - b) * w;
+            *zk = e + o.mul_i();
+        }
+        self.half.process(z, sign);
+        for k in 0..half {
+            out[2 * k] = z[k].re;
+            out[2 * k + 1] = z[k].im;
+        }
+    }
+}
+
+/// 2-D transform of one real β-slice (row-major `n × n`, stored as
+/// [`Complex64`] with zero imaginary parts — the executor's staging
+/// layout). Produces the identical full complex spectrum as
+/// [`Fft2::process`] at ~half the butterfly work. Wraps an [`Fft2`] so
+/// the plan (twiddles) and the column-pass machinery are shared, not
+/// duplicated.
+#[derive(Debug, Clone)]
+pub struct RealFft2 {
+    fft2: Fft2,
+}
+
+impl RealFft2 {
+    pub fn new(n: usize, plan: Arc<FftPlan>) -> Self {
+        Self::from_fft2(&Fft2::new(n, plan))
+    }
+
+    /// Build the real companion of an existing [`Fft2`], sharing its plan
+    /// (twiddle tables) and column-pass mode.
+    pub fn from_fft2(fft2: &Fft2) -> Self {
+        assert!(
+            fft2.len() >= 2 && fft2.len() % 2 == 0,
+            "real 2-D FFT requires even n >= 2"
+        );
+        Self { fft2: fft2.clone() }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.fft2.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.fft2.is_empty()
+    }
+
+    /// Which column-pass strategy this transform uses.
+    #[inline]
+    pub fn column_pass(&self) -> ColumnPass {
+        self.fft2.column_pass()
+    }
+
+    /// Scratch length required by [`Self::forward`]: `n` for the packed
+    /// row pass, plus the gather/scatter column buffers when the plan has
+    /// no strided panel kernel.
+    #[inline]
+    pub fn scratch_len(&self) -> usize {
+        self.fft2.scratch_len().max(self.fft2.len())
+    }
+
+    /// In-place unnormalized 2-D transform of a *real* row-major `n × n`
+    /// slice (imaginary parts are ignored and assumed zero — the executor
+    /// validates this before dispatch). The output is the full complex
+    /// spectrum, bit-compatible in layout with [`Fft2::process`].
+    pub fn forward(&self, slice: &mut [Complex64], scratch: &mut [Complex64], sign: Sign) {
+        let n = self.fft2.len();
+        let plan = self.fft2.plan();
+        assert_eq!(slice.len(), n * n, "slice must be n*n");
+        assert!(
+            scratch.len() >= self.scratch_len(),
+            "scratch must be scratch_len()"
+        );
+        // Row pass: two real rows per complex FFT. With z = a + ib,
+        // A[j] = (Z[j] + conj(Z[n-j]))/2 and B[j] = -i(Z[j] - conj(Z[n-j]))/2
+        // recover both row spectra from one transform (sign-agnostic).
+        // Only columns 0..=n/2 are untangled: the column pass reads
+        // nothing beyond them, and the mirror sweep rebuilds the rest of
+        // the final spectrum from Hermitian symmetry.
+        let pack = &mut scratch[..n];
+        for rows in slice.chunks_exact_mut(2 * n) {
+            let (row_a, row_b) = rows.split_at_mut(n);
+            for j in 0..n {
+                pack[j] = Complex64::new(row_a[j].re, row_b[j].re);
+            }
+            plan.process(pack, sign);
+            for j in 0..=n / 2 {
+                let zj = pack[j];
+                let zc = pack[(n - j) % n].conj();
+                row_a[j] = (zj + zc).scale(0.5);
+                row_b[j] = (zj - zc).scale(0.5).mul_neg_i();
+            }
+        }
+        // Column pass over u = 0..=n/2 only; the mirror sweep below fills
+        // the rest from Hermitian symmetry.
+        let last = n / 2; // inclusive
+        self.fft2.column_pass_range(slice, last + 1, scratch, sign);
+        // Mirror: S[v][n-u] = conj(S[(n-v) mod n][u]) — pure copies, no
+        // butterflies. The dst row and src row may alias (v = 0 or
+        // v = n/2) but reads come from columns <= n/2 and writes go to
+        // columns > n/2, so the index ranges are disjoint.
+        for v in 0..n {
+            let dst = v * n;
+            let src = ((n - v) % n) * n;
+            for u in last + 1..n {
+                let val = slice[src + (n - u)].conj();
+                slice[dst + u] = val;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::{dft, dft2};
+    use crate::prng::Xoshiro256;
+
+    fn random_real(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n).map(|_| rng.next_signed()).collect()
+    }
+
+    #[test]
+    fn forward_matches_oracle_even_sizes() {
+        for &n in &[2usize, 4, 6, 8, 10, 16, 32, 96, 256] {
+            let plan = RealFftPlan::new(n);
+            let x = random_real(n, 5 + n as u64);
+            let xc: Vec<Complex64> = x.iter().map(|&r| Complex64::new(r, 0.0)).collect();
+            for sign in [Sign::Negative, Sign::Positive] {
+                let want = dft(&xc, sign);
+                let mut got = vec![Complex64::zero(); n];
+                let mut scratch = vec![Complex64::zero(); plan.scratch_len()];
+                plan.forward(&x, &mut got, &mut scratch, sign);
+                for (a, b) in want.iter().zip(got.iter()) {
+                    assert!((*a - *b).abs() < 1e-9 * n as f64, "n={n} sign={sign:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip_scales_by_n() {
+        for &n in &[4usize, 12, 64, 128] {
+            let plan = RealFftPlan::new(n);
+            let x = random_real(n, 23);
+            let xc: Vec<Complex64> = x.iter().map(|&r| Complex64::new(r, 0.0)).collect();
+            let spec = dft(&xc, Sign::Negative);
+            let mut back = vec![0.0f64; n];
+            let mut scratch = vec![Complex64::zero(); plan.scratch_len()];
+            plan.inverse(&spec, &mut back, &mut scratch, Sign::Positive);
+            for (a, b) in x.iter().zip(back.iter()) {
+                assert!((a * n as f64 - b).abs() < 1e-9 * n as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn fft2_matches_complex_oracle_on_real_slices() {
+        for &n in &[2usize, 4, 8, 16] {
+            let rfft2 = RealFft2::new(n, Arc::new(FftPlan::new(n)));
+            let x = random_real(n * n, 7 + n as u64);
+            let xc: Vec<Complex64> = x.iter().map(|&r| Complex64::new(r, 0.0)).collect();
+            for sign in [Sign::Negative, Sign::Positive] {
+                let want = dft2(&xc, n, n, sign);
+                let mut got = xc.clone();
+                let mut scratch = vec![Complex64::zero(); rfft2.scratch_len()];
+                rfft2.forward(&mut got, &mut scratch, sign);
+                for (a, b) in want.iter().zip(got.iter()) {
+                    assert!(
+                        (*a - *b).abs() < 1e-8 * (n * n) as f64,
+                        "n={n} sign={sign:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fft2_gather_mode_matches_panel_mode() {
+        let n = 8;
+        let plan = Arc::new(FftPlan::new(n));
+        let panel = RealFft2::new(n, plan.clone());
+        assert_eq!(panel.column_pass(), ColumnPass::Panel);
+        let gather = RealFft2::from_fft2(&Fft2::with_column_pass(
+            n,
+            plan,
+            ColumnPass::GatherScatter,
+        ));
+        assert_eq!(gather.column_pass(), ColumnPass::GatherScatter);
+        let x = random_real(n * n, 99);
+        let xc: Vec<Complex64> = x.iter().map(|&r| Complex64::new(r, 0.0)).collect();
+        let mut a = xc.clone();
+        let mut b = xc;
+        let mut sa = vec![Complex64::zero(); panel.scratch_len()];
+        let mut sb = vec![Complex64::zero(); gather.scratch_len()];
+        panel.forward(&mut a, &mut sa, Sign::Positive);
+        gather.forward(&mut b, &mut sb, Sign::Positive);
+        for (u, v) in a.iter().zip(b.iter()) {
+            assert!((*u - *v).abs() < 1e-12 * n as f64);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn rejects_odd_sizes() {
+        let _ = RealFftPlan::new(9);
+    }
+}

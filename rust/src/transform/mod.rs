@@ -14,6 +14,7 @@ pub mod api;
 pub mod direct;
 pub mod plan;
 
-pub use crate::coordinator::Workspace;
+pub use crate::coordinator::{StageStats, Workspace};
+pub use crate::fft::FftEngine;
 pub use api::{So3Fft, So3FftBuilder};
 pub use plan::{BackendKind, So3Plan, So3PlanBuilder, Transform};

@@ -45,6 +45,7 @@ use crate::coordinator::{
 use crate::dwt::tables::WignerStorage;
 use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::{Error, Result};
+use crate::fft::FftEngine;
 use crate::pool::Schedule;
 use crate::so3::coeffs::So3Coeffs;
 use crate::so3::sampling::So3Grid;
@@ -388,6 +389,23 @@ impl So3PlanBuilder {
         self
     }
 
+    /// FFT-stage engine: the split-radix panel engine (default) or the
+    /// radix-2 gather/scatter baseline kept for benchmarking.
+    pub fn fft_engine(mut self, engine: FftEngine) -> Self {
+        self.config.fft_engine = engine;
+        self
+    }
+
+    /// Opt into the real-input analysis path: the forward FFT stage
+    /// exploits Hermitian symmetry of real samples (~half the butterfly
+    /// work and memory traffic). Grids with any nonzero imaginary part
+    /// are rejected with a typed [`Error::RealInputRequired`]; synthesis
+    /// (`inverse*`) is unaffected.
+    pub fn real_input(mut self) -> Self {
+        self.config.real_input = true;
+        self
+    }
+
     /// Attach a DWT offload backend (the PJRT/XLA runtime).
     pub fn offload(mut self, offload: Arc<dyn DwtOffload>) -> Self {
         self.offload = Some(offload);
@@ -489,6 +507,25 @@ mod tests {
         let grid = plan.inverse(&coeffs).unwrap();
         let back = plan.forward(&grid).unwrap();
         assert!(coeffs.max_abs_error(&back) < 1e-11);
+    }
+
+    #[test]
+    fn builder_fft_engine_and_real_input() {
+        let plan = So3Plan::builder(4)
+            .fft_engine(FftEngine::Radix2Baseline)
+            .build()
+            .unwrap();
+        assert_eq!(plan.config().fft_engine, FftEngine::Radix2Baseline);
+        let rplan = So3Plan::builder(4).real_input().build().unwrap();
+        assert!(rplan.config().real_input);
+        let coeffs = So3Coeffs::random(4, 2);
+        // Synthesis is unaffected by real-input mode; analysis of complex
+        // samples is a typed error.
+        let g = rplan.inverse(&coeffs).unwrap();
+        assert!(matches!(
+            rplan.forward(&g),
+            Err(Error::RealInputRequired { .. })
+        ));
     }
 
     #[test]

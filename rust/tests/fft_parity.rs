@@ -1,0 +1,319 @@
+//! Parity suite for the overhauled FFT engine (ISSUE 2).
+//!
+//! Pins four guarantees:
+//! 1. the split-radix (radix-4) and real-input kernels agree with the
+//!    naive `fft::dft` oracle for n ∈ {2 … 1024}, both signs;
+//! 2. the copy-free panel column pass agrees with the gather/scatter
+//!    sweep (same plan, same butterflies, different memory walk);
+//! 3. the split-radix engine and the radix-2 baseline engine agree to
+//!    ≤ 1e-12 on the full forward+inverse round-trip at b ∈ {8, 16, 32}
+//!    (b = 64 behind `--ignored`, see docs/PERF.md);
+//! 4. the real-input analysis path matches the complex path on real
+//!    bandlimited grids at b ∈ {8, 16, 32} and round-trips through
+//!    synthesis, with complex data rejected as a typed error.
+
+use so3ft::error::Error;
+use so3ft::fft::dft::{dft, dft2};
+use so3ft::fft::fft2::{ColumnPass, Fft2};
+use so3ft::fft::real::{RealFft2, RealFftPlan};
+use so3ft::fft::split_radix::Radix4Plan;
+use so3ft::fft::{Complex64, FftAlgo, FftEngine, FftPlan, Sign};
+use so3ft::prng::Xoshiro256;
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::so3::sampling::So3Grid;
+use so3ft::transform::So3Plan;
+use std::sync::Arc;
+
+fn random_signal(n: usize, seed: u64) -> Vec<Complex64> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| Complex64::new(rng.next_signed(), rng.next_signed()))
+        .collect()
+}
+
+fn random_real(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n).map(|_| rng.next_signed()).collect()
+}
+
+// ---------------------------------------------------------------------
+// 1. 1-D kernels vs the naive DFT oracle, n ∈ {2 … 1024}, both signs
+// ---------------------------------------------------------------------
+
+#[test]
+fn split_radix_matches_dft_oracle_2_to_1024() {
+    for log in 1..=10 {
+        let n = 1usize << log;
+        let plan = Radix4Plan::new(n);
+        for sign in [Sign::Negative, Sign::Positive] {
+            let x = random_signal(n, 1000 + log as u64);
+            let want = dft(&x, sign);
+            let mut got = x;
+            plan.process(&mut got, sign);
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!(
+                    (*a - *b).abs() < 1e-9 * n as f64,
+                    "split-radix n={n} sign={sign:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn split_radix_agrees_with_radix2_kernel() {
+    for log in 1..=10 {
+        let n = 1usize << log;
+        let r4 = FftPlan::with_algo(n, FftAlgo::SplitRadix);
+        let r2 = FftPlan::with_algo(n, FftAlgo::Radix2);
+        for sign in [Sign::Negative, Sign::Positive] {
+            let x = random_signal(n, 2000 + log as u64);
+            let mut a = x.clone();
+            let mut b = x;
+            r4.process(&mut a, sign);
+            r2.process(&mut b, sign);
+            for (u, v) in a.iter().zip(b.iter()) {
+                assert!((*u - *v).abs() < 1e-10 * n as f64, "n={n} sign={sign:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn real_input_matches_dft_oracle_2_to_1024() {
+    // Powers of two plus assorted even sizes (odd half-lengths exercise
+    // the Bluestein inner path of the packed transform).
+    for &n in &[2usize, 4, 6, 8, 10, 12, 16, 20, 32, 64, 96, 128, 256, 512, 1024] {
+        let plan = RealFftPlan::new(n);
+        let x = random_real(n, 3000 + n as u64);
+        let xc: Vec<Complex64> = x.iter().map(|&r| Complex64::new(r, 0.0)).collect();
+        let mut scratch = vec![Complex64::zero(); plan.scratch_len()];
+        for sign in [Sign::Negative, Sign::Positive] {
+            let want = dft(&xc, sign);
+            let mut got = vec![Complex64::zero(); n];
+            plan.forward(&x, &mut got, &mut scratch, sign);
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!(
+                    (*a - *b).abs() < 1e-9 * n as f64,
+                    "real n={n} sign={sign:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn real_input_forward_inverse_is_identity_times_n() {
+    for &n in &[4usize, 8, 30, 64, 1024] {
+        let plan = RealFftPlan::new(n);
+        let x = random_real(n, 71);
+        let mut spec = vec![Complex64::zero(); n];
+        let mut back = vec![0.0f64; n];
+        let mut scratch = vec![Complex64::zero(); plan.scratch_len()];
+        plan.forward(&x, &mut spec, &mut scratch, Sign::Negative);
+        plan.inverse(&spec, &mut back, &mut scratch, Sign::Positive);
+        for (a, b) in x.iter().zip(back.iter()) {
+            assert!((a * n as f64 - b).abs() < 1e-9 * n as f64, "n={n}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Panel pass vs gather/scatter pass
+// ---------------------------------------------------------------------
+
+#[test]
+fn fft2_panel_matches_gather_scatter() {
+    for &n in &[2usize, 4, 8, 16, 32, 64] {
+        let plan = Arc::new(FftPlan::with_algo(n, FftAlgo::SplitRadix));
+        let panel = Fft2::with_column_pass(n, plan.clone(), ColumnPass::Panel);
+        let gather = Fft2::with_column_pass(n, plan, ColumnPass::GatherScatter);
+        assert_eq!(panel.scratch_len(), 0);
+        for sign in [Sign::Negative, Sign::Positive] {
+            let x = random_signal(n * n, 4000 + n as u64);
+            let mut a = x.clone();
+            let mut b = x;
+            let mut sa = vec![];
+            let mut sb = vec![Complex64::zero(); gather.scratch_len()];
+            panel.process(&mut a, &mut sa, sign);
+            gather.process(&mut b, &mut sb, sign);
+            for (u, v) in a.iter().zip(b.iter()) {
+                assert!(
+                    (*u - *v).abs() < 1e-12 * (n * n) as f64,
+                    "n={n} sign={sign:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fft2_panel_matches_2d_oracle() {
+    for &n in &[4usize, 8, 16] {
+        let fft2 = Fft2::with_size(n);
+        assert_eq!(fft2.column_pass(), ColumnPass::Panel);
+        for sign in [Sign::Negative, Sign::Positive] {
+            let x = random_signal(n * n, 5000 + n as u64);
+            let want = dft2(&x, n, n, sign);
+            let mut got = x;
+            let mut scratch = vec![];
+            fft2.process(&mut got, &mut scratch, sign);
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!((*a - *b).abs() < 1e-8 * (n * n) as f64, "n={n} sign={sign:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn real_fft2_matches_complex_fft2_on_real_slices() {
+    for &n in &[2usize, 4, 8, 16, 32, 64] {
+        let plan = Arc::new(FftPlan::new(n));
+        let complex_fft2 = Fft2::new(n, plan.clone());
+        let real_fft2 = RealFft2::new(n, plan);
+        let x = random_real(n * n, 6000 + n as u64);
+        let xc: Vec<Complex64> = x.iter().map(|&r| Complex64::new(r, 0.0)).collect();
+        for sign in [Sign::Negative, Sign::Positive] {
+            let mut a = xc.clone();
+            let mut b = xc.clone();
+            let mut sa = vec![Complex64::zero(); complex_fft2.scratch_len()];
+            let mut sb = vec![Complex64::zero(); real_fft2.scratch_len()];
+            complex_fft2.process(&mut a, &mut sa, sign);
+            real_fft2.forward(&mut b, &mut sb, sign);
+            for (u, v) in a.iter().zip(b.iter()) {
+                assert!(
+                    (*u - *v).abs() < 1e-11 * (n * n) as f64,
+                    "n={n} sign={sign:?}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Engine agreement on the full forward+inverse round-trip
+// ---------------------------------------------------------------------
+
+fn engines_roundtrip(b: usize, storage_on_the_fly: bool) {
+    let build = |engine: FftEngine| {
+        let mut builder = So3Plan::builder(b).fft_engine(engine);
+        if storage_on_the_fly {
+            builder = builder.storage(so3ft::dwt::tables::WignerStorage::OnTheFly);
+        }
+        builder.build().unwrap()
+    };
+    let split = build(FftEngine::SplitRadix);
+    let baseline = build(FftEngine::Radix2Baseline);
+    let coeffs = So3Coeffs::random(b, 42 + b as u64);
+    let g_split = split.inverse(&coeffs).unwrap();
+    let g_base = baseline.inverse(&coeffs).unwrap();
+    assert!(
+        g_split.max_abs_error(&g_base) < 1e-12,
+        "b={b}: inverse grids diverge"
+    );
+    let c_split = split.forward(&g_split).unwrap();
+    let c_base = baseline.forward(&g_base).unwrap();
+    assert!(
+        c_split.max_abs_error(&c_base) < 1e-12,
+        "b={b}: roundtrip coefficients diverge"
+    );
+    // And both engines actually round-trip.
+    assert!(coeffs.max_abs_error(&c_split) < 1e-10, "b={b}: split engine");
+    assert!(coeffs.max_abs_error(&c_base) < 1e-10, "b={b}: baseline engine");
+}
+
+#[test]
+fn engines_agree_roundtrip_small() {
+    for b in [8usize, 16, 32] {
+        engines_roundtrip(b, false);
+    }
+}
+
+/// The b = 64 acceptance point — heavier, so opt-in:
+/// `cargo test --release -- --ignored engines_agree_roundtrip_large`.
+#[test]
+#[ignore = "b=64 roundtrip is slow in debug; run with --release -- --ignored"]
+fn engines_agree_roundtrip_large() {
+    engines_roundtrip(64, true);
+}
+
+// ---------------------------------------------------------------------
+// 4. Real-input plan mode
+// ---------------------------------------------------------------------
+
+/// The real part of a bandlimited function is bandlimited, so
+/// `inverse(random coeffs).re` is a real grid the sampling theorem holds
+/// for — the forward transform is exact on it and synthesis restores it.
+fn real_bandlimited_grid(plan: &So3Plan, b: usize, seed: u64) -> So3Grid {
+    let coeffs = So3Coeffs::random(b, seed);
+    let g = plan.inverse(&coeffs).unwrap();
+    So3Grid::from_vec(
+        b,
+        g.as_slice()
+            .iter()
+            .map(|z| Complex64::new(z.re, 0.0))
+            .collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn real_input_plan_matches_complex_plan() {
+    for b in [8usize, 16, 32] {
+        let complex_plan = So3Plan::new(b).unwrap();
+        let real_plan = So3Plan::builder(b).real_input().build().unwrap();
+        let grid = real_bandlimited_grid(&complex_plan, b, 7 + b as u64);
+        let want = complex_plan.forward(&grid).unwrap();
+        let got = real_plan.forward(&grid).unwrap();
+        assert!(
+            want.max_abs_error(&got) < 1e-12,
+            "b={b}: real-input analysis diverges from complex"
+        );
+    }
+}
+
+#[test]
+fn real_input_forward_inverse_roundtrip() {
+    for b in [8usize, 16, 32] {
+        let real_plan = So3Plan::builder(b).real_input().build().unwrap();
+        let grid = real_bandlimited_grid(&real_plan, b, 90 + b as u64);
+        let coeffs = real_plan.forward(&grid).unwrap();
+        let back = real_plan.inverse(&coeffs).unwrap();
+        let err = grid.max_abs_error(&back);
+        assert!(err < 1e-11, "b={b}: real roundtrip error {err}");
+    }
+}
+
+#[test]
+fn real_input_rejects_complex_data_typed() {
+    let b = 8;
+    let real_plan = So3Plan::builder(b).real_input().build().unwrap();
+    let coeffs = So3Coeffs::random(b, 3);
+    let complex_grid = real_plan.inverse(&coeffs).unwrap();
+    match real_plan.forward(&complex_grid) {
+        Err(Error::RealInputRequired { .. }) => {}
+        other => panic!("expected RealInputRequired, got {other:?}"),
+    }
+    // Workspaceful entry point takes the same validation path.
+    let mut ws = real_plan.make_workspace();
+    let mut out = So3Coeffs::zeros(b);
+    assert!(matches!(
+        real_plan.forward_into(&complex_grid, &mut out, &mut ws),
+        Err(Error::RealInputRequired { .. })
+    ));
+}
+
+#[test]
+fn real_input_works_with_baseline_engine_too() {
+    let b = 8;
+    let plan = So3Plan::builder(b)
+        .real_input()
+        .fft_engine(FftEngine::Radix2Baseline)
+        .build()
+        .unwrap();
+    let reference = So3Plan::new(b).unwrap();
+    let grid = real_bandlimited_grid(&reference, b, 55);
+    let want = reference.forward(&grid).unwrap();
+    let got = plan.forward(&grid).unwrap();
+    assert!(want.max_abs_error(&got) < 1e-12);
+}
