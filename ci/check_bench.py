@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""bench-smoke regression gate.
+
+Compares the per-stage wall times in a freshly generated BENCH_fft.json
+(written by `cargo run --release --example e2e_benchmark`) against the
+checked-in ci/bench_baseline.json. A stage regresses when its observed
+time exceeds `baseline * threshold` (threshold lives in the baseline's
+meta; deliberately generous — this is a smoke-level net against
+order-of-magnitude regressions, not a microbenchmark).
+
+Usage: check_bench.py BENCH_fft.json ci/bench_baseline.json
+Exit codes: 0 ok, 1 regression/missing data, 2 usage.
+"""
+
+import json
+import sys
+
+STAGES = ("fft_s", "transpose_s", "dwt_s", "total_s")
+
+
+def key(record):
+    return (
+        record.get("kind"),
+        record.get("b"),
+        record.get("threads"),
+        record.get("engine"),
+    )
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(argv[1]) as f:
+        bench = json.load(f)
+    with open(argv[2]) as f:
+        base = json.load(f)
+
+    threshold = float(base.get("meta", {}).get("threshold", 2.0))
+    observed_by_key = {key(r): r for r in bench.get("records", [])}
+    failures = []
+    checked = 0
+
+    for want in base.get("baseline", []):
+        k = key(want)
+        got = observed_by_key.get(k)
+        if got is None:
+            failures.append(f"{k}: record missing from {argv[1]}")
+            continue
+        for stage in STAGES:
+            if stage not in want:
+                continue
+            allowed = want[stage] * threshold
+            observed = got.get(stage)
+            if observed is None:
+                failures.append(f"{k}: stage {stage} missing from bench output")
+                continue
+            checked += 1
+            status = "ok" if observed <= allowed else "REGRESSION"
+            print(
+                f"{k[0]} b={k[1]} threads={k[2]} {stage}: "
+                f"observed {observed:.6f}s, allowed {allowed:.6f}s [{status}]"
+            )
+            if observed > allowed:
+                failures.append(
+                    f"{k} {stage}: {observed:.6f}s > {allowed:.6f}s "
+                    f"(baseline {want[stage]:.6f}s x {threshold})"
+                )
+
+    if checked == 0:
+        failures.append("no stage timings checked — baseline empty or keys mismatched")
+
+    if failures:
+        print("\nbench-smoke regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nbench-smoke gate passed: {checked} stage timings within {threshold}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

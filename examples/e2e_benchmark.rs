@@ -36,7 +36,7 @@ use so3ft::bench_util::{
 };
 use so3ft::coordinator::StageStats;
 use so3ft::fft::{ColumnPass, Complex64, Fft2, FftAlgo, FftPlan, Sign};
-use so3ft::pool::{parallel_for, Schedule};
+use so3ft::pool::{Schedule, WorkerPool};
 use so3ft::prng::Xoshiro256;
 use so3ft::util::SyncUnsafeSlice;
 use so3ft::runtime::{ArtifactRegistry, XlaDwt};
@@ -61,24 +61,33 @@ fn stage_record(kind: &str, b: usize, threads: usize, engine: &str, s: &StageSta
 }
 
 thread_local! {
-    /// Per-worker gather/scatter scratch (empty in panel mode; cheap to
-    /// re-create per region — a zeroed 4n buffer, ≪ one slice FFT).
+    /// Per-worker gather/scatter scratch (empty in panel mode). The
+    /// sweep runs on a persistent pool, so this is allocated once per
+    /// parked worker and reused across every sweep of the run.
     static SWEEP_SCRATCH: RefCell<Vec<Complex64>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Wall time of one FFT-stage region: `n` β-slice 2-D FFTs of a shared
-/// `n³` slab over the worker pool — the exact shape (and SAFETY
-/// argument) of the executor's stage-1/stage-3 parallel region. The
-/// slab is allocated and initialized by the caller, outside the timed
-/// window; callers rescale it between sweeps (an unnormalized 2-D FFT
-/// grows the RMS magnitude ×n per call), also untimed.
-fn fft_stage_sweep(fft2: &Fft2, slab: &mut [Complex64], threads: usize, sign: Sign) -> f64 {
+/// `n³` slab over the persistent worker pool — the exact shape (and
+/// SAFETY argument) of the executor's stage-1/stage-3 parallel region,
+/// on the same runtime the executor serves from (parked workers, no
+/// OS-thread spawn in the timed window). The slab is allocated and
+/// initialized by the caller, outside the timed window; callers rescale
+/// it between sweeps (an unnormalized 2-D FFT grows the RMS magnitude
+/// ×n per call), also untimed.
+fn fft_stage_sweep(
+    fft2: &Fft2,
+    slab: &mut [Complex64],
+    pool: &WorkerPool,
+    threads: usize,
+    sign: Sign,
+) -> f64 {
     let n = fft2.len();
     assert_eq!(slab.len(), n * n * n, "slab must be n^3");
     let slen = fft2.scratch_len();
     let shared = SyncUnsafeSlice::new(slab);
     let t0 = Instant::now();
-    parallel_for(threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
+    pool.run_with(threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
         // SAFETY: slice j is exclusive to this package (one package per
         // β-slice, disjoint slab ranges).
         let slice =
@@ -226,6 +235,9 @@ fn main() -> so3ft::Result<()> {
     } else {
         vec![1]
     };
+    // One persistent pool serves every sweep below (per-worker FFT
+    // scratch stays pinned to the parked workers across sweeps).
+    let sweep_pool = WorkerPool::new(max_threads).expect("sweep pool");
 
     println!("\n=== FFT stage: split-radix panel vs radix-2 gather/scatter ===");
     println!("({reps} reps, median; {max_threads} hardware threads)\n");
@@ -250,7 +262,7 @@ fn main() -> so3ft::Result<()> {
             let mut stage_s = [0.0f64; 2];
             for (ei, fft2) in [&split, &baseline].into_iter().enumerate() {
                 // Warm-up sweep (faults the slab in, exercises the pool).
-                fft_stage_sweep(fft2, &mut slab, threads, Sign::Positive);
+                fft_stage_sweep(fft2, &mut slab, &sweep_pool, threads, Sign::Positive);
                 let samples: Vec<f64> = (0..reps)
                     .map(|_| {
                         // Untimed rescale keeps magnitudes bounded
@@ -258,7 +270,7 @@ fn main() -> so3ft::Result<()> {
                         for v in slab.iter_mut() {
                             *v = v.scale(inv_n);
                         }
-                        fft_stage_sweep(fft2, &mut slab, threads, Sign::Positive)
+                        fft_stage_sweep(fft2, &mut slab, &sweep_pool, threads, Sign::Positive)
                     })
                     .collect();
                 stage_s[ei] = Samples { seconds: samples }.median();

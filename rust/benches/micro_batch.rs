@@ -13,11 +13,20 @@
 //! Per-item medians are printed so the allocation overhead is directly
 //! readable; CSV rows land in `bench_results/micro_batch.csv` when
 //! `SO3FT_BENCH_CSV` is set.
+//!
+//! A final section measures **region dispatch overhead**: the persistent
+//! [`WorkerPool`] (parked workers, condvar wakeup) against the legacy
+//! scoped-spawn `parallel_for` (fresh OS threads per region) at the
+//! executor's FFT-stage region shape, b ∈ {8, 16, 32} — the spawn
+//! overhead the pool runtime removes from every serving-path transform.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use so3ft::bench_util::{
     csv_sink, env_usize, env_usize_list, fmt_seconds, time_fn, Samples, Table,
 };
 use so3ft::fft::Complex64;
+use so3ft::pool::{parallel_for, Schedule, WorkerPool};
 use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::so3::sampling::So3Grid;
 use so3ft::transform::{FftEngine, So3Fft, So3Plan};
@@ -179,5 +188,69 @@ fn main() {
         "micro_batch_fft_stage",
         "b,split_radix_s,radix2_baseline_s,real_input_s",
         &fft_csv,
+    );
+
+    // ------------------------------------------------------------------
+    // Region dispatch: persistent parked workers vs legacy scoped spawn,
+    // at the executor's FFT-stage region shape (n = 2B packages). The
+    // per-package body is deliberately light so dispatch — OS thread
+    // spawn/join vs condvar wakeup — dominates: exactly the overhead
+    // that eats small/medium-B transforms, several regions per call.
+    // ------------------------------------------------------------------
+    let pool_threads = env_usize("SO3FT_BENCH_POOL_THREADS", 4);
+    let pool_bs = env_usize_list("SO3FT_BENCH_POOL_BS", &[8, 16, 32]);
+    let pool_reps = env_usize("SO3FT_BENCH_POOL_REPS", 30);
+    let pool = WorkerPool::new(pool_threads).expect("worker pool");
+    println!("\n== micro: region dispatch — persistent pool vs scoped spawn ==");
+    println!("({pool_threads} workers, {pool_reps} reps; per-region medians)\n");
+    let mut pool_table = Table::new(&[
+        "B",
+        "packages",
+        "scoped spawn",
+        "persistent",
+        "dispatch speedup",
+    ]);
+    let mut pool_csv = Vec::new();
+    for &b in &pool_bs {
+        let n = 2 * b;
+        let sink: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let sink = &sink;
+        let body = move |i: usize| {
+            // ~100 ns of register work per package: a stand-in for a
+            // small per-slice kernel at low bandwidth.
+            let mut acc = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            for _ in 0..32 {
+                acc = acc.rotate_left(7) ^ acc.wrapping_mul(0x2545_F491_4F6C_DD1D);
+            }
+            sink[i].store(acc, Ordering::Relaxed);
+        };
+        let scoped = time_fn(pool_reps, || {
+            parallel_for(pool_threads, n, Schedule::Dynamic { chunk: 1 }, body);
+        })
+        .median();
+        let persistent = time_fn(pool_reps, || {
+            pool.run_with(pool_threads, n, Schedule::Dynamic { chunk: 1 }, body);
+        })
+        .median();
+        pool_table.row(&[
+            b.to_string(),
+            n.to_string(),
+            fmt_seconds(scoped),
+            fmt_seconds(persistent),
+            format!("{:.2}x", scoped / persistent),
+        ]);
+        pool_csv.push(format!(
+            "{b},{n},{pool_threads},{scoped:.4e},{persistent:.4e}"
+        ));
+    }
+    pool_table.print();
+    println!(
+        "\nscoped spawn forks + joins {pool_threads} OS threads per region; the\n\
+         persistent pool wakes parked workers (condvar/epoch) instead."
+    );
+    csv_sink(
+        "micro_batch_pool",
+        "b,packages,threads,scoped_region_s,persistent_region_s",
+        &pool_csv,
     );
 }

@@ -34,7 +34,9 @@ options: --config FILE, --bandwidth/-b B, --threads/-t N,
   --schedule dynamic[:c]|static|interleaved|guided[:m],
   --strategy geometric|sigma|nosym, --algorithm matvec|clenshaw,
   --storage precomputed|onthefly|auto[:mb], --precision double|extended,
-  --seed N, --xla, --artifacts DIR, --cores LIST, --kind fwd|inv
+  --pool owned|global (pair global with --threads N; width is
+  min(threads, pool)), --seed N, --xla, --artifacts DIR, --cores LIST,
+  --kind fwd|inv
 ";
 
 fn build_plan(inv: &Invocation) -> Result<So3Plan> {

@@ -20,6 +20,7 @@
 //!   --algorithm <spec>        matvec | clenshaw
 //!   --storage <spec>          precomputed | onthefly | auto[:mb]
 //!   --precision <spec>        double | extended
+//!   --pool <spec>             owned | global (persistent worker pool)
 //!   --seed <N>                workload seed
 //!   --xla                     offload the DWT to the PJRT artifacts
 //!   --artifacts <dir>         artifact directory
@@ -32,7 +33,7 @@ pub mod commands;
 use crate::config::{parse_algorithm, parse_precision, parse_storage, RunConfig};
 use crate::coordinator::PartitionStrategy;
 use crate::error::{Error, Result};
-use crate::pool::Schedule;
+use crate::pool::{PoolSpec, Schedule};
 
 /// Parsed invocation.
 #[derive(Debug, Clone)]
@@ -121,6 +122,12 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
             }
             "--precision" => {
                 run.exec.precision = parse_precision(&need(args, i, a)?)?;
+                i += 1;
+            }
+            "--pool" => {
+                let v = need(args, i, a)?;
+                run.exec.pool = PoolSpec::parse(&v)
+                    .ok_or_else(|| Error::Config(format!("bad --pool {v:?} (owned|global)")))?;
                 i += 1;
             }
             "--seed" => {
@@ -219,6 +226,17 @@ mod tests {
         assert_eq!(inv.run.exec.strategy, PartitionStrategy::SigmaClustered);
         assert_eq!(inv.run.seed, 9);
         assert!(inv.run.use_xla);
+        assert!(matches!(inv.run.exec.pool, PoolSpec::Owned));
+    }
+
+    #[test]
+    fn pool_flag_parses_and_rejects_bad_values() {
+        let inv = parse_args(&argv("roundtrip -b 8 -t 2 --pool global")).unwrap();
+        assert!(matches!(inv.run.exec.pool, PoolSpec::Global));
+        let inv = parse_args(&argv("roundtrip --pool owned")).unwrap();
+        assert!(matches!(inv.run.exec.pool, PoolSpec::Owned));
+        assert!(parse_args(&argv("roundtrip --pool rented")).is_err());
+        assert!(parse_args(&argv("roundtrip --pool")).is_err());
     }
 
     #[test]

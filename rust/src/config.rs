@@ -15,6 +15,7 @@
 //! precision = "double"        # double | extended
 //! fft = "split-radix"         # split-radix | radix2-baseline
 //! real_input = false          # conjugate-even forward FFT stage
+//! pool = "owned"              # owned | global (persistent worker pool)
 //!
 //! [runtime]
 //! artifacts = "artifacts"
@@ -29,7 +30,7 @@ use crate::dwt::tables::{WignerStorage, WignerTables};
 use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::{Error, Result};
 use crate::fft::FftEngine;
-use crate::pool::Schedule;
+use crate::pool::{PoolSpec, Schedule};
 
 /// Raw parsed file: section → key → value (strings unquoted).
 #[derive(Debug, Clone, Default)]
@@ -205,6 +206,10 @@ impl RunConfig {
         if let Some(v) = p.get_bool("transform", "real_input")? {
             cfg.exec.real_input = v;
         }
+        if let Some(s) = p.get("transform", "pool") {
+            cfg.exec.pool = PoolSpec::parse(s)
+                .ok_or_else(|| Error::Config(format!("bad pool {s:?}")))?;
+        }
         if let Some(s) = p.get("runtime", "artifacts") {
             cfg.artifacts_dir = s.to_string();
         }
@@ -238,6 +243,7 @@ storage = "onthefly"
 precision = "double"
 fft = "radix2-baseline"
 real_input = true
+pool = "global"
 
 [runtime]
 artifacts = "my-artifacts"
@@ -258,6 +264,7 @@ seed = 7
         assert_eq!(cfg.exec.storage, WignerStorage::OnTheFly);
         assert_eq!(cfg.exec.fft_engine, FftEngine::Radix2Baseline);
         assert!(cfg.exec.real_input);
+        assert!(matches!(cfg.exec.pool, PoolSpec::Global));
         assert_eq!(cfg.artifacts_dir, "my-artifacts");
         assert!(cfg.use_xla);
         assert_eq!(cfg.seed, 7);
@@ -268,6 +275,15 @@ seed = 7
         let cfg = RunConfig::from_parsed(&ParsedConfig::parse("").unwrap()).unwrap();
         assert_eq!(cfg.bandwidth, 16);
         assert_eq!(cfg.exec.threads, 1);
+        assert!(matches!(cfg.exec.pool, PoolSpec::Owned));
+    }
+
+    #[test]
+    fn bad_pool_spec_is_an_error() {
+        assert!(RunConfig::from_parsed(
+            &ParsedConfig::parse("[transform]\npool = \"rented\"").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::fft::fft2::{ColumnPass, Fft2};
 use crate::fft::plan::{FftAlgo, FftPlan};
 use crate::fft::real::RealFft2;
 use crate::fft::{Complex64, FftEngine, Sign};
-use crate::pool::{parallel_for, RegionStats, Schedule};
+use crate::pool::{self, PoolSpec, RegionStats, Schedule, WorkerPool};
 use crate::so3::coeffs::{coeff_count, So3Coeffs};
 use crate::so3::quadrature;
 use crate::so3::sampling::{GridAngles, So3Grid};
@@ -85,6 +85,12 @@ pub struct ExecutorConfig {
     /// [`Error::RealInputRequired`]. The inverse direction is unaffected
     /// (synthesis output is complex in general).
     pub real_input: bool,
+    /// Where parallel regions execute: an owned pool of `threads`
+    /// persistent workers (default), the lazily-initialized
+    /// process-global pool, or an explicitly shared pool (see
+    /// [`PoolSpec`]). Ignored when `threads == 1` — the sequential path
+    /// runs regions inline and never touches a pool.
+    pub pool: PoolSpec,
 }
 
 impl Default for ExecutorConfig {
@@ -98,6 +104,7 @@ impl Default for ExecutorConfig {
             precision: Precision::Double,
             fft_engine: FftEngine::SplitRadix,
             real_input: false,
+            pool: PoolSpec::Owned,
         }
     }
 }
@@ -162,6 +169,11 @@ pub struct Executor {
     real_fft2: Option<RealFft2>,
     tables: Option<WignerTables>,
     offload: Option<Arc<dyn DwtOffload>>,
+    /// Persistent worker pool serving every parallel region of this
+    /// executor; `None` when `threads == 1` (regions run inline on the
+    /// caller). Possibly shared with other executors — see
+    /// [`ExecutorConfig::pool`].
+    pool: Option<Arc<WorkerPool>>,
     /// FFT bin of each order index: `order_bins[mi] = (mi - (B-1)) mod 2B`.
     order_bins: Vec<usize>,
     /// Storage-free layout oracle consulted by the iDWT kernels for
@@ -171,11 +183,17 @@ pub struct Executor {
 
 thread_local! {
     /// Per-thread DWT scratch, recreated when the bandwidth changes.
+    /// Parallel regions run on a persistent [`WorkerPool`], whose OS
+    /// threads are stable for the pool's lifetime — so this scratch is
+    /// pinned per worker and reused across regions, transforms, and
+    /// every plan sharing the pool (rebuilt only when a plan of a
+    /// different bandwidth executes on the same worker).
     static SCRATCH: RefCell<Option<(usize, DwtScratch)>> = const { RefCell::new(None) };
     /// Per-thread FFT column scratch, grown on demand. On the sequential
     /// path the main thread reuses it across slices AND transforms; on
-    /// the parallel path each region's scoped workers allocate it once
-    /// per region (one allocation per worker instead of one per slice).
+    /// the pooled path it is likewise pinned to the persistent workers
+    /// (grown once per worker, not once per region as under the legacy
+    /// scoped-spawn substrate).
     static FFT_SCRATCH: RefCell<Vec<Complex64>> = const { RefCell::new(Vec::new()) };
 }
 
@@ -289,6 +307,7 @@ impl Executor {
             ),
         };
         let real_fft2 = config.real_input.then(|| RealFft2::from_fft2(&fft2));
+        let pool = config.pool.resolve(config.threads)?;
         let n = 2 * b as i64;
         let order_bins = (0..SMatrix::orders(b))
             .map(|mi| (mi as i64 - (b as i64 - 1)).rem_euclid(n) as usize)
@@ -304,6 +323,7 @@ impl Executor {
             real_fft2,
             tables,
             offload: None,
+            pool,
             order_bins,
             smat_layout,
         })
@@ -340,6 +360,28 @@ impl Executor {
     /// Memory held by precomputed Wigner tables (bytes).
     pub fn table_bytes(&self) -> usize {
         self.tables.as_ref().map_or(0, |t| t.bytes())
+    }
+
+    /// The persistent worker pool serving this executor's parallel
+    /// regions (`None` on the sequential path). With
+    /// [`PoolSpec::Shared`] / [`PoolSpec::Global`] this is the shared
+    /// instance, so callers can verify sharing via `Arc::ptr_eq`.
+    pub fn pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.as_ref()
+    }
+
+    /// Run one parallel region: on the persistent pool when configured
+    /// with `threads > 1` (region width `min(threads, pool.threads())`),
+    /// inline on the caller otherwise. No OS thread is ever spawned
+    /// here — the pool's workers are created once at construction.
+    fn run_region<F>(&self, n: usize, schedule: Schedule, body: F) -> RegionStats
+    where
+        F: Fn(usize) + Sync,
+    {
+        match &self.pool {
+            Some(pool) => pool.run_with(self.config.threads, n, schedule, body),
+            None => pool::sequential_region(n, body),
+        }
     }
 
     // ------------------------------------------------------------------
@@ -429,7 +471,7 @@ impl Executor {
                 .real_fft2
                 .as_ref()
                 .map_or_else(|| self.fft2.scratch_len(), |rf| rf.scratch_len());
-            parallel_for(self.config.threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
+            self.run_region(n, Schedule::Dynamic { chunk: 1 }, |j| {
                 // SAFETY: slice j is exclusive to this package.
                 let slice = unsafe {
                     std::slice::from_raw_parts_mut(shared.ptr_at(j * n * n), n * n)
@@ -454,32 +496,27 @@ impl Executor {
             let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
             let work_ref = &ws.work;
             let bins = &self.order_bins;
-            parallel_for(
-                self.config.threads,
-                o,
-                Schedule::Dynamic { chunk: 1 },
-                |mi| {
-                    const TJ: usize = 4;
-                    const TP: usize = 32;
-                    let u = bins[mi];
-                    for mpi0 in (0..o).step_by(TP) {
-                        let mpi1 = (mpi0 + TP).min(o);
-                        for j0 in (0..n).step_by(TJ) {
-                            let j1 = (j0 + TJ).min(n);
-                            for j in j0..j1 {
-                                let src = &work_ref[(j * n + u) * n..(j * n + u) * n + n];
-                                for mpi in mpi0..mpi1 {
-                                    // SAFETY: the (m, m') j-vector is
-                                    // row-package-exclusive.
-                                    unsafe {
-                                        shared.write((mi * o + mpi) * n + j, src[bins[mpi]])
-                                    };
-                                }
+            self.run_region(o, Schedule::Dynamic { chunk: 1 }, |mi| {
+                const TJ: usize = 4;
+                const TP: usize = 32;
+                let u = bins[mi];
+                for mpi0 in (0..o).step_by(TP) {
+                    let mpi1 = (mpi0 + TP).min(o);
+                    for j0 in (0..n).step_by(TJ) {
+                        let j1 = (j0 + TJ).min(n);
+                        for j in j0..j1 {
+                            let src = &work_ref[(j * n + u) * n..(j * n + u) * n + n];
+                            for mpi in mpi0..mpi1 {
+                                // SAFETY: the (m, m') j-vector is
+                                // row-package-exclusive.
+                                unsafe {
+                                    shared.write((mi * o + mpi) * n + j, src[bins[mpi]])
+                                };
                             }
                         }
                     }
-                },
-            );
+                }
+            });
         }
         stats.transpose = t0.elapsed();
 
@@ -490,15 +527,11 @@ impl Executor {
         {
             let shared = SyncUnsafeSlice::new(out.as_mut_slice());
             let smat_ref: &SMatrix = &ws.smat;
-            let region = parallel_for(
-                self.config.threads,
-                self.plan.clusters.len(),
-                self.config.schedule,
-                |ci| {
-                    let cluster = &self.plan.clusters[ci];
-                    self.forward_cluster_dispatch(cluster, smat_ref, &shared);
-                },
-            );
+            let clusters = self.plan.clusters.len();
+            let region = self.run_region(clusters, self.config.schedule, |ci| {
+                let cluster = &self.plan.clusters[ci];
+                self.forward_cluster_dispatch(cluster, smat_ref, &shared);
+            });
             stats.dwt_region = Some(region);
         }
         stats.dwt = t0.elapsed();
@@ -826,15 +859,11 @@ impl Executor {
         let layout = &self.smat_layout;
         {
             let shared = SyncUnsafeSlice::new(smat.as_mut_slice());
-            let region = parallel_for(
-                self.config.threads,
-                self.plan.clusters.len(),
-                self.config.schedule,
-                |ci| {
-                    let cluster = &self.plan.clusters[ci];
-                    self.inverse_cluster_dispatch(cluster, coeffs, &shared, layout);
-                },
-            );
+            let clusters = self.plan.clusters.len();
+            let region = self.run_region(clusters, self.config.schedule, |ci| {
+                let cluster = &self.plan.clusters[ci];
+                self.inverse_cluster_dispatch(cluster, coeffs, &shared, layout);
+            });
             stats.dwt_region = Some(region);
         }
         stats.dwt = t0.elapsed();
@@ -851,37 +880,28 @@ impl Executor {
             let smat_ref: &SMatrix = smat;
             let o = SMatrix::orders(self.b);
             let bins = &self.order_bins;
-            parallel_for(
-                self.config.threads,
-                o,
-                Schedule::Dynamic { chunk: 1 },
-                |mi| {
-                    const TJ: usize = 4;
-                    const TP: usize = 32;
-                    let u = bins[mi];
-                    let smat_data = smat_ref.as_slice();
-                    for mpi0 in (0..o).step_by(TP) {
-                        let mpi1 = (mpi0 + TP).min(o);
-                        for j0 in (0..n).step_by(TJ) {
-                            let j1 = (j0 + TJ).min(n);
-                            for j in j0..j1 {
-                                let dst = (j * n + u) * n;
-                                for mpi in mpi0..mpi1 {
-                                    // SAFETY: bin (u, v) of slice j is
-                                    // written only by the row package
-                                    // owning u.
-                                    unsafe {
-                                        shared.write(
-                                            dst + bins[mpi],
-                                            smat_data[(mi * o + mpi) * n + j],
-                                        )
-                                    };
-                                }
+            self.run_region(o, Schedule::Dynamic { chunk: 1 }, |mi| {
+                const TJ: usize = 4;
+                const TP: usize = 32;
+                let u = bins[mi];
+                let smat_data = smat_ref.as_slice();
+                for mpi0 in (0..o).step_by(TP) {
+                    let mpi1 = (mpi0 + TP).min(o);
+                    for j0 in (0..n).step_by(TJ) {
+                        let j1 = (j0 + TJ).min(n);
+                        for j in j0..j1 {
+                            let dst = (j * n + u) * n;
+                            for mpi in mpi0..mpi1 {
+                                let val = smat_data[(mi * o + mpi) * n + j];
+                                // SAFETY: bin (u, v) of slice j is
+                                // written only by the row package
+                                // owning u.
+                                unsafe { shared.write(dst + bins[mpi], val) };
                             }
                         }
                     }
-                },
-            );
+                }
+            });
         }
         stats.transpose = t0.elapsed();
 
@@ -891,7 +911,7 @@ impl Executor {
         {
             let shared = SyncUnsafeSlice::new(out.as_mut_slice());
             let slen = self.fft2.scratch_len();
-            parallel_for(self.config.threads, n, Schedule::Dynamic { chunk: 1 }, |j| {
+            self.run_region(n, Schedule::Dynamic { chunk: 1 }, |j| {
                 // SAFETY: slice j is exclusive to this package.
                 let slice = unsafe {
                     std::slice::from_raw_parts_mut(shared.ptr_at(j * n * n), n * n)
@@ -1179,6 +1199,37 @@ mod tests {
             }
         )
         .is_err());
+    }
+
+    #[test]
+    fn pool_resolution_matches_thread_config() {
+        // Sequential executors run regions inline and own no pool.
+        let seq = Executor::new(4, ExecutorConfig::default()).unwrap();
+        assert!(seq.pool().is_none());
+        // Parallel executors own a persistent pool of exactly `threads`
+        // workers (PoolSpec::Owned default).
+        let par = Executor::new(
+            4,
+            ExecutorConfig {
+                threads: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let pool = par.pool().expect("parallel executor owns a pool");
+        assert_eq!(pool.threads(), 3);
+        // A shared pool is reused, not copied.
+        let shared = Arc::new(WorkerPool::new(2).unwrap());
+        let exec = Executor::new(
+            4,
+            ExecutorConfig {
+                threads: 2,
+                pool: PoolSpec::Shared(Arc::clone(&shared)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(Arc::ptr_eq(exec.pool().unwrap(), &shared));
     }
 
     #[test]

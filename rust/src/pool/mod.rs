@@ -1,27 +1,184 @@
-//! Fork-join worker pool with OpenMP-style loop scheduling.
+//! Worker-pool substrate with OpenMP-style loop scheduling.
 //!
 //! The paper parallelizes with OpenMP `#pragma omp parallel for
-//! schedule(dynamic)`; this module is the equivalent substrate:
-//! [`parallel_for`] runs an index range over scoped threads under a
-//! [`Schedule`] policy. `Dynamic` reproduces OpenMP's dynamic
-//! self-scheduling (a shared atomic cursor), `Static` the default static
-//! blocking, `Guided` the decreasing-chunk variant — all three are
-//! benchmarked against each other in `benches/ablation_schedule.rs`.
+//! schedule(dynamic)`; this module is the equivalent substrate. Two
+//! execution engines share the same scheduling policies and statistics:
 //!
-//! Per-worker execution statistics (packages executed, busy time) feed
-//! the multicore simulator's calibration.
+//! * [`WorkerPool`] (`runtime`) — the serving engine: workers are
+//!   spawned **once**, parked on a condvar, and woken per region by an
+//!   epoch bump. A pool is `Arc`-shareable across plans and concurrent
+//!   callers; per-worker thread-local scratch (DWT/FFT) stays pinned to
+//!   the same OS threads across regions *and* across transforms.
+//! * [`parallel_for`] — the legacy fork-join path that spawns scoped OS
+//!   threads for every region. It is kept as the measurable baseline for
+//!   the persistent runtime (see `benches/micro_batch.rs`); the executor
+//!   no longer uses it.
+//!
+//! Scheduling ([`Schedule`]): `Dynamic` reproduces OpenMP's dynamic
+//! self-scheduling (a shared atomic cursor), `Static` the default static
+//! blocking, `StaticInterleaved` round-robin, `Guided` the
+//! decreasing-chunk variant — benchmarked against each other in
+//! `benches/ablation_schedule.rs`.
+//!
+//! Per-worker execution statistics ([`RegionStats`], [`WorkerStats`] —
+//! packages executed, busy time) feed the multicore simulator's
+//! calibration; both engines and the sequential fast path record the
+//! same stats shape.
 
+pub mod runtime;
 pub mod schedule;
 pub mod stats;
 
+pub use runtime::{PoolSpec, WorkerPool};
 pub use schedule::Schedule;
 pub use stats::{RegionStats, WorkerStats};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
-/// Run `body(index)` for every index in `0..n` on `threads` workers under
-/// the given scheduling policy. Returns per-region execution statistics.
+/// Run one worker's share of a region under `schedule`. `t` is the
+/// worker's index among the `threads` participants; `cursor` is the
+/// shared claim cursor (dynamic/guided), reset to 0 before the region.
+///
+/// Shared by the scoped-spawn path ([`parallel_for`]) and the persistent
+/// runtime ([`WorkerPool`]) so the two engines are package-for-package
+/// identical under every policy.
+fn execute_worker<F>(
+    t: usize,
+    threads: usize,
+    n: usize,
+    schedule: Schedule,
+    cursor: &AtomicUsize,
+    body: &F,
+) -> WorkerStats
+where
+    F: Fn(usize) + Sync + ?Sized,
+{
+    let t0 = Instant::now();
+    let mut packages = 0usize;
+    match schedule {
+        Schedule::Dynamic { chunk } => {
+            let chunk = chunk.max(1);
+            loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    body(i);
+                }
+                packages += end - start;
+            }
+        }
+        Schedule::Static => {
+            // Contiguous block per worker (OpenMP default).
+            let per = n.div_ceil(threads);
+            let start = t * per;
+            let end = ((t + 1) * per).min(n);
+            for i in start..end {
+                body(i);
+            }
+            packages += end.saturating_sub(start);
+        }
+        Schedule::StaticInterleaved => {
+            // Round-robin (OpenMP schedule(static,1)).
+            let mut i = t;
+            while i < n {
+                body(i);
+                packages += 1;
+                i += threads;
+            }
+        }
+        Schedule::Guided { min_chunk } => {
+            let min_chunk = min_chunk.max(1);
+            loop {
+                // Claim max(remaining/(2T), min) items.
+                let start = {
+                    let mut cur = cursor.load(Ordering::Relaxed);
+                    loop {
+                        if cur >= n {
+                            break usize::MAX;
+                        }
+                        let remaining = n - cur;
+                        let take = (remaining / (2 * threads)).max(min_chunk);
+                        match cursor.compare_exchange_weak(
+                            cur,
+                            cur + take,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        ) {
+                            Ok(_) => break cur,
+                            Err(now) => cur = now,
+                        }
+                    }
+                };
+                if start == usize::MAX {
+                    break;
+                }
+                let remaining = n - start;
+                let take = (remaining / (2 * threads)).max(min_chunk);
+                let end = (start + take).min(n);
+                for i in start..end {
+                    body(i);
+                }
+                packages += end - start;
+            }
+        }
+    }
+    WorkerStats {
+        packages,
+        busy: t0.elapsed(),
+    }
+}
+
+/// Sequential region execution with `started` as the region start (so
+/// callers that decide on the fast path late still report a full wall).
+fn sequential_region_timed<F>(started: Instant, n: usize, mut body: F) -> RegionStats
+where
+    F: FnMut(usize),
+{
+    // The single-worker accounting must match the policy accounting of
+    // the parallel paths exactly: one worker entry, `packages == n`,
+    // `items == n` — under *every* [`Schedule`] (one worker executes all
+    // iterations regardless of policy), so the simulator calibration
+    // can consume sequential and parallel regions uniformly.
+    let t0 = Instant::now();
+    for i in 0..n {
+        body(i);
+    }
+    let stats = WorkerStats {
+        packages: n,
+        busy: t0.elapsed(),
+    };
+    RegionStats {
+        workers: vec![stats],
+        wall: started.elapsed(),
+        items: n,
+    }
+}
+
+/// Run a region inline on the calling thread — the "sequential
+/// algorithm" the paper's speedups are measured against.
+///
+/// Records the same [`RegionStats`] shape as a one-worker parallel
+/// region under every [`Schedule`]: exactly one [`WorkerStats`] entry
+/// with `packages == n`. Both [`parallel_for`] and
+/// [`WorkerPool::run_with`] delegate here when the region is effectively
+/// single-threaded (`threads == 1` or `n <= 1`).
+pub fn sequential_region<F: FnMut(usize)>(n: usize, body: F) -> RegionStats {
+    sequential_region_timed(Instant::now(), n, body)
+}
+
+/// Run `body(index)` for every index in `0..n` on `threads` freshly
+/// spawned scoped workers under the given scheduling policy. Returns
+/// per-region execution statistics.
+///
+/// This is the **legacy fork-join path**: it spawns and joins `threads`
+/// OS threads per call. Production code should execute on a persistent
+/// [`WorkerPool`] instead (the executor does); this entry point is kept
+/// as the spawn-overhead baseline benchmarked in
+/// `benches/micro_batch.rs`.
 ///
 /// `body` must be safe to call concurrently for distinct indices (the
 /// SO(3) executor guarantees output disjointness per index — see
@@ -33,21 +190,7 @@ where
     assert!(threads >= 1, "thread count must be >= 1");
     let started = Instant::now();
     if threads == 1 || n <= 1 {
-        // Fast path: no spawn overhead — this is also the "sequential
-        // algorithm" the paper's speedups are measured against.
-        let t0 = Instant::now();
-        for i in 0..n {
-            body(i);
-        }
-        let stats = WorkerStats {
-            packages: n,
-            busy: t0.elapsed(),
-        };
-        return RegionStats {
-            workers: vec![stats],
-            wall: started.elapsed(),
-            items: n,
-        };
+        return sequential_region_timed(started, n, body);
     }
 
     let cursor = AtomicUsize::new(0);
@@ -57,85 +200,7 @@ where
         let handles: Vec<_> = (0..threads)
             .map(|t| {
                 let cursor = &cursor;
-                scope.spawn(move || {
-                    let t0 = Instant::now();
-                    let mut packages = 0usize;
-                    match schedule {
-                        Schedule::Dynamic { chunk } => {
-                            let chunk = chunk.max(1);
-                            loop {
-                                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                                if start >= n {
-                                    break;
-                                }
-                                let end = (start + chunk).min(n);
-                                for i in start..end {
-                                    body(i);
-                                }
-                                packages += end - start;
-                            }
-                        }
-                        Schedule::Static => {
-                            // Contiguous block per worker (OpenMP default).
-                            let per = n.div_ceil(threads);
-                            let start = t * per;
-                            let end = ((t + 1) * per).min(n);
-                            for i in start..end {
-                                body(i);
-                            }
-                            packages += end.saturating_sub(start);
-                        }
-                        Schedule::StaticInterleaved => {
-                            // Round-robin (OpenMP schedule(static,1)).
-                            let mut i = t;
-                            while i < n {
-                                body(i);
-                                packages += 1;
-                                i += threads;
-                            }
-                        }
-                        Schedule::Guided { min_chunk } => {
-                            let min_chunk = min_chunk.max(1);
-                            loop {
-                                // Claim max(remaining/(2T), min) items.
-                                let start = {
-                                    let mut cur = cursor.load(Ordering::Relaxed);
-                                    loop {
-                                        if cur >= n {
-                                            break usize::MAX;
-                                        }
-                                        let remaining = n - cur;
-                                        let take =
-                                            (remaining / (2 * threads)).max(min_chunk);
-                                        match cursor.compare_exchange_weak(
-                                            cur,
-                                            cur + take,
-                                            Ordering::Relaxed,
-                                            Ordering::Relaxed,
-                                        ) {
-                                            Ok(_) => break cur,
-                                            Err(now) => cur = now,
-                                        }
-                                    }
-                                };
-                                if start == usize::MAX {
-                                    break;
-                                }
-                                let remaining = n - start;
-                                let take = (remaining / (2 * threads)).max(min_chunk);
-                                let end = (start + take).min(n);
-                                for i in start..end {
-                                    body(i);
-                                }
-                                packages += end - start;
-                            }
-                        }
-                    }
-                    WorkerStats {
-                        packages,
-                        busy: t0.elapsed(),
-                    }
-                })
+                scope.spawn(move || execute_worker(t, threads, n, schedule, cursor, body))
             })
             .collect();
         for h in handles {
@@ -216,6 +281,39 @@ mod tests {
         let stats = parallel_for(1, 100, Schedule::Dynamic { chunk: 1 }, |_| {});
         assert_eq!(stats.workers.len(), 1);
         assert_eq!(stats.workers[0].packages, 100);
+    }
+
+    #[test]
+    fn single_thread_stats_shape_identical_under_every_schedule() {
+        // Regression (ISSUE 3): the sequential fast path must record the
+        // same RegionStats shape the simulator calibration expects — one
+        // worker, packages == n, items == n — under *every* policy, for
+        // both entry points that take the fast path.
+        for schedule in [
+            Schedule::Dynamic { chunk: 1 },
+            Schedule::Dynamic { chunk: 16 },
+            Schedule::Static,
+            Schedule::StaticInterleaved,
+            Schedule::Guided { min_chunk: 2 },
+        ] {
+            for n in [0usize, 1, 5, 100] {
+                let from_for = parallel_for(1, n, schedule, |_| {});
+                let from_seq = sequential_region(n, |_| {});
+                for (label, s) in [("parallel_for", &from_for), ("sequential_region", &from_seq)]
+                {
+                    assert_eq!(
+                        s.workers.len(),
+                        1,
+                        "{label}: one worker entry ({schedule:?}, n={n})"
+                    );
+                    assert_eq!(
+                        s.workers[0].packages, n,
+                        "{label}: packages == n ({schedule:?}, n={n})"
+                    );
+                    assert_eq!(s.items, n, "{label}: items ({schedule:?}, n={n})");
+                }
+            }
+        }
     }
 
     #[test]

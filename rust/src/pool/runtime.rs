@@ -1,0 +1,592 @@
+//! Persistent worker-pool runtime: parked workers, woken per region.
+//!
+//! The legacy [`parallel_for`](super::parallel_for) spawns and joins
+//! fresh OS threads for *every* parallel region — several regions per
+//! transform, per request. [`WorkerPool`] replaces that with a serving
+//! substrate in the spirit of OpenMP's persistent thread team (and of
+//! the tuned execution layers in OpenFFT / P3DFFT):
+//!
+//! * workers are spawned **once** ([`WorkerPool::new`]) and park on a
+//!   condvar; a region submission bumps an epoch and wakes them;
+//! * a pool is `Arc`-shareable: many [`So3Plan`]s and concurrent caller
+//!   threads can execute on one pool (regions are serialized at region
+//!   granularity, and every caller blocks until its own region
+//!   completes — results are identical to exclusive use);
+//! * worker ids (and therefore OS threads) are **stable for the pool's
+//!   lifetime**, so per-worker thread-local scratch — the executor's
+//!   DWT/FFT buffers — is allocated once and reused across regions and
+//!   across transforms instead of once per region;
+//! * all four [`Schedule`] policies and the [`RegionStats`] /
+//!   [`WorkerStats`] accounting are identical to the scoped-spawn path
+//!   (both run the same per-worker scheduling loop).
+//!
+//! A region body must not submit another region to the same pool
+//! (nested submission would deadlock on the region lock); the SO(3)
+//! executor never nests regions.
+//!
+//! [`So3Plan`]: crate::transform::So3Plan
+
+use std::any::Any;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::{JoinHandle, ThreadId};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::pool::schedule::Schedule;
+use crate::pool::stats::{RegionStats, WorkerStats};
+
+/// Type-erased, lifetime-erased pointer to a region body.
+///
+/// Soundness contract: the submitting thread keeps the pointee alive —
+/// it blocks in [`WorkerPool::run_with`] until every participant has
+/// reported completion — so workers never dereference it after the
+/// borrow ends. The pointee is `Sync`, so shared `&`-calls from many
+/// workers are fine.
+#[derive(Clone, Copy)]
+struct JobBody(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: see the contract on the type — the pointer is only
+// dereferenced while the submitting thread keeps the (Sync) pointee
+// alive and borrowed.
+unsafe impl Send for JobBody {}
+
+/// One submitted region (copied out of the shared state by each worker).
+#[derive(Clone, Copy)]
+struct Job {
+    body: JobBody,
+    n: usize,
+    schedule: Schedule,
+    /// Workers 0..participants execute; higher-indexed workers skip the
+    /// epoch (a region may be narrower than the pool).
+    participants: usize,
+}
+
+struct PoolState {
+    /// Region generation; bumped once per submitted region.
+    epoch: u64,
+    /// The region being executed at the current epoch.
+    job: Option<Job>,
+    /// Participants that have completed the current region.
+    finished: usize,
+    /// Per-worker stats for the current region (`len == participants`).
+    stats: Vec<Option<WorkerStats>>,
+    /// First panic payload caught from a worker body this region
+    /// (resumed on the submitting thread, like scoped `join` would).
+    panic: Option<Box<dyn Any + Send + 'static>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Wakes parked workers on a new epoch (or shutdown).
+    work_cv: Condvar,
+    /// Wakes the submitting thread when the last participant finishes.
+    done_cv: Condvar,
+    /// Shared claim cursor for the dynamic/guided schedules. Only one
+    /// region runs at a time (the region lock), so one pool-wide cursor
+    /// is enough; it is reset before each region.
+    cursor: AtomicUsize,
+}
+
+fn lock(m: &Mutex<PoolState>) -> MutexGuard<'_, PoolState> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn wait<'a>(cv: &Condvar, guard: MutexGuard<'a, PoolState>) -> MutexGuard<'a, PoolState> {
+    cv.wait(guard).unwrap_or_else(|p| p.into_inner())
+}
+
+fn worker_loop(shared: Arc<PoolShared>, index: usize) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    break;
+                }
+                st = wait(&shared.work_cv, st);
+            }
+            last_epoch = st.epoch;
+            st.job
+        };
+        let Some(job) = job else { continue };
+        if index >= job.participants {
+            continue;
+        }
+        // SAFETY: the submitting thread keeps the body alive and
+        // borrowed until this worker (a participant) reports completion
+        // below — see [`JobBody`].
+        let body = unsafe { &*job.body.0 };
+        let Job { n, schedule, participants, .. } = job;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            super::execute_worker(index, participants, n, schedule, &shared.cursor, body)
+        }));
+        let mut st = lock(&shared.state);
+        match result {
+            Ok(stats) => st.stats[index] = Some(stats),
+            Err(payload) => {
+                if st.panic.is_none() {
+                    st.panic = Some(payload);
+                }
+            }
+        }
+        st.finished += 1;
+        if st.finished >= job.participants {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn shutdown_workers(shared: &PoolShared, handles: &mut Vec<JoinHandle<()>>) {
+    {
+        let mut st = lock(&shared.state);
+        st.shutdown = true;
+        shared.work_cv.notify_all();
+    }
+    for h in handles.drain(..) {
+        let _ = h.join();
+    }
+}
+
+/// A persistent pool of parked worker threads executing parallel
+/// regions (see the [module docs](self)).
+///
+/// Build one with [`WorkerPool::new`], or take the lazily-initialized
+/// process-global pool with [`WorkerPool::global`]. Dropping a pool
+/// signals shutdown and joins its workers; the global pool lives for
+/// the process.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    /// Serializes region submissions: one region executes at a time, so
+    /// concurrent callers interleave at region granularity.
+    region: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` parked workers (`threads >= 1`).
+    pub fn new(threads: usize) -> Result<Self> {
+        if threads == 0 {
+            return Err(Error::InvalidThreads(0));
+        }
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                finished: 0,
+                stats: Vec::new(),
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+        });
+        let mut handles = Vec::with_capacity(threads);
+        for index in 0..threads {
+            let worker_shared = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("so3ft-worker-{index}"))
+                .spawn(move || worker_loop(worker_shared, index));
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // Roll back the workers spawned so far before failing.
+                    shutdown_workers(&shared, &mut handles);
+                    return Err(Error::Io(e));
+                }
+            }
+        }
+        Ok(Self {
+            shared,
+            region: Mutex::new(()),
+            handles,
+        })
+    }
+
+    /// The lazily-initialized process-global pool, sized to the
+    /// machine's available parallelism. Shared by every plan configured
+    /// with [`PoolSpec::Global`]; lives for the process.
+    pub fn global() -> Arc<WorkerPool> {
+        static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+        Arc::clone(GLOBAL.get_or_init(|| {
+            let threads = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1);
+            Arc::new(WorkerPool::new(threads).expect("thread count >= 1"))
+        }))
+    }
+
+    /// Number of (persistent) worker threads.
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// The worker thread ids — stable for the pool's lifetime (the
+    /// stability contract the scratch pinning and the runtime tests
+    /// rely on).
+    pub fn thread_ids(&self) -> Vec<ThreadId> {
+        self.handles.iter().map(|h| h.thread().id()).collect()
+    }
+
+    /// Run `body(index)` for every index in `0..n` over all pool
+    /// workers under `schedule`. See [`Self::run_with`].
+    pub fn run<F>(&self, n: usize, schedule: Schedule, body: F) -> RegionStats
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.run_with(self.threads(), n, schedule, body)
+    }
+
+    /// Run a region `threads` wide (clamped to the pool size) under
+    /// `schedule`, blocking until it completes. Single-width or trivial
+    /// regions (`threads == 1` or `n <= 1`) execute inline on the
+    /// calling thread with identical [`RegionStats`] accounting.
+    ///
+    /// Submission wakes *all* parked workers (one condvar); workers
+    /// beyond the region width immediately re-park. On a pool much
+    /// wider than the regions it serves, prefer sizing the pool to the
+    /// widest expected region over one machine-sized pool.
+    ///
+    /// Safe to call from many threads concurrently (regions serialize);
+    /// must **not** be called from inside a region body on the same
+    /// pool. A panic in `body` is caught on the worker, the region is
+    /// drained, and the payload is resumed on the calling thread.
+    pub fn run_with<F>(&self, threads: usize, n: usize, schedule: Schedule, body: F) -> RegionStats
+    where
+        F: Fn(usize) + Sync,
+    {
+        assert!(threads >= 1, "thread count must be >= 1");
+        let started = Instant::now();
+        let participants = threads.min(self.threads());
+        if participants == 1 || n <= 1 {
+            return super::sequential_region_timed(started, n, &body);
+        }
+
+        let region = self.region.lock().unwrap_or_else(|p| p.into_inner());
+        self.shared.cursor.store(0, Ordering::Relaxed);
+        let body_ref: &(dyn Fn(usize) + Sync) = &body;
+        // SAFETY: lifetime erasure only. This function does not return
+        // (or unwind) before every participant has reported completion,
+        // so no worker can dereference the pointer after `body` dies.
+        let body_erased = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                body_ref,
+            )
+        };
+
+        let mut st = lock(&self.shared.state);
+        st.epoch = st.epoch.wrapping_add(1);
+        st.job = Some(Job {
+            body: JobBody(body_erased as *const (dyn Fn(usize) + Sync)),
+            n,
+            schedule,
+            participants,
+        });
+        st.finished = 0;
+        st.panic = None;
+        st.stats.clear();
+        st.stats.resize_with(participants, || None);
+        self.shared.work_cv.notify_all();
+        while st.finished < participants {
+            st = wait(&self.shared.done_cv, st);
+        }
+        st.job = None;
+        let panic = st.panic.take();
+        let workers: Vec<WorkerStats> = if panic.is_none() {
+            st.stats
+                .drain(..)
+                .map(|s| s.expect("every participant records stats"))
+                .collect()
+        } else {
+            st.stats.clear();
+            Vec::new()
+        };
+        drop(st);
+        drop(region);
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
+        }
+
+        RegionStats {
+            workers,
+            wall: started.elapsed(),
+            items: n,
+        }
+    }
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads())
+            .finish()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        shutdown_workers(&self.shared, &mut self.handles);
+    }
+}
+
+/// Where an executor's parallel regions run (`ExecutorConfig::pool`).
+///
+/// Config files accept `pool = "owned" | "global"` under `[transform]`;
+/// the CLI accepts `--pool owned|global`; an explicit shared pool is
+/// attached with `So3PlanBuilder::pool(...)`.
+#[derive(Clone, Debug, Default)]
+pub enum PoolSpec {
+    /// The executor creates and owns a pool of exactly `threads`
+    /// workers (the default — matches the legacy per-plan behavior,
+    /// minus the per-region spawning).
+    #[default]
+    Owned,
+    /// Execute on the process-global pool ([`WorkerPool::global`]).
+    /// Region width is `min(threads, pool.threads())`.
+    Global,
+    /// Execute on a caller-supplied shared pool. Region width is
+    /// `min(threads, pool.threads())`.
+    Shared(Arc<WorkerPool>),
+}
+
+impl PoolSpec {
+    /// Resolve to a concrete pool for an executor configured with
+    /// `threads` workers; `None` when `threads <= 1` (the sequential
+    /// path runs regions inline and needs no pool).
+    pub(crate) fn resolve(&self, threads: usize) -> Result<Option<Arc<WorkerPool>>> {
+        if threads <= 1 {
+            return Ok(None);
+        }
+        Ok(Some(match self {
+            PoolSpec::Owned => Arc::new(WorkerPool::new(threads)?),
+            PoolSpec::Global => WorkerPool::global(),
+            PoolSpec::Shared(pool) => Arc::clone(pool),
+        }))
+    }
+
+    /// Parse a config/CLI spec: `owned` or `global` (a shared pool has
+    /// no textual form — it is attached programmatically).
+    pub fn parse(s: &str) -> Option<PoolSpec> {
+        match s {
+            "owned" => Some(PoolSpec::Owned),
+            "global" => Some(PoolSpec::Global),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (`owned` / `global` / `shared`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolSpec::Owned => "owned",
+            PoolSpec::Global => "global",
+            PoolSpec::Shared(_) => "shared",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    const ALL_SCHEDULES: [Schedule; 5] = [
+        Schedule::Dynamic { chunk: 1 },
+        Schedule::Dynamic { chunk: 16 },
+        Schedule::Static,
+        Schedule::StaticInterleaved,
+        Schedule::Guided { min_chunk: 1 },
+    ];
+
+    #[test]
+    fn every_index_exactly_once_all_schedules_reusing_one_pool() {
+        for &threads in &[1usize, 2, 3, 8] {
+            let pool = WorkerPool::new(threads).unwrap();
+            // Many regions through the same pool: reuse is the point.
+            for &n in &[0usize, 1, 7, 64, 500] {
+                for &schedule in &ALL_SCHEDULES {
+                    let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                    let stats = pool.run(n, schedule, |i| {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    });
+                    for (i, h) in hits.iter().enumerate() {
+                        assert_eq!(
+                            h.load(Ordering::Relaxed),
+                            1,
+                            "index {i} ({threads} workers, {schedule:?}, n={n})"
+                        );
+                    }
+                    assert_eq!(
+                        stats.workers.iter().map(|w| w.packages).sum::<usize>(),
+                        n,
+                        "package accounting ({threads} workers, {schedule:?}, n={n})"
+                    );
+                    assert_eq!(stats.items, n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn results_match_scoped_spawn_path() {
+        let n = 400;
+        let want: u64 = (0..n as u64).map(|i| i * 3 + 1).sum();
+        let pool = WorkerPool::new(4).unwrap();
+        for &schedule in &ALL_SCHEDULES {
+            let total = AtomicU64::new(0);
+            pool.run(n, schedule, |i| {
+                total.fetch_add(i as u64 * 3 + 1, Ordering::Relaxed);
+            });
+            assert_eq!(total.into_inner(), want, "{schedule:?}");
+        }
+    }
+
+    #[test]
+    fn stats_shape_matches_region_width() {
+        let pool = WorkerPool::new(4).unwrap();
+        let stats = pool.run(256, Schedule::Dynamic { chunk: 4 }, |_| {
+            std::hint::black_box(());
+        });
+        assert_eq!(stats.items, 256);
+        assert_eq!(stats.workers.len(), 4);
+        assert!(stats.wall.as_nanos() > 0);
+        // Narrower region than the pool: stats report the region width.
+        let narrow = pool.run_with(2, 256, Schedule::Static, |_| {});
+        assert_eq!(narrow.workers.len(), 2);
+        // Wider request clamps to the pool size.
+        let clamped = pool.run_with(64, 256, Schedule::Static, |_| {});
+        assert_eq!(clamped.workers.len(), 4);
+    }
+
+    #[test]
+    fn single_worker_and_trivial_regions_take_sequential_fast_path() {
+        let pool = WorkerPool::new(1).unwrap();
+        for &schedule in &ALL_SCHEDULES {
+            for &n in &[0usize, 1, 33] {
+                let stats = pool.run(n, schedule, |_| {});
+                assert_eq!(stats.workers.len(), 1, "{schedule:?} n={n}");
+                assert_eq!(stats.workers[0].packages, n, "{schedule:?} n={n}");
+                assert_eq!(stats.items, n);
+            }
+        }
+        // n <= 1 on a wide pool also runs inline.
+        let pool = WorkerPool::new(4).unwrap();
+        let stats = pool.run(1, Schedule::Static, |_| {});
+        assert_eq!(stats.workers.len(), 1);
+        assert_eq!(stats.workers[0].packages, 1);
+    }
+
+    #[test]
+    fn worker_threads_are_stable_across_regions() {
+        let pool = WorkerPool::new(2).unwrap();
+        let ids: HashSet<_> = pool.thread_ids().into_iter().collect();
+        assert_eq!(ids.len(), 2);
+        let observe = || {
+            let seen = Mutex::new(HashSet::new());
+            // Static over n == workers: every worker executes exactly
+            // one package, deterministically.
+            pool.run(2, Schedule::Static, |_| {
+                seen.lock().unwrap().insert(std::thread::current().id());
+            });
+            seen.into_inner().unwrap()
+        };
+        let first = observe();
+        let second = observe();
+        assert_eq!(first, ids, "regions must run on the persistent workers");
+        assert_eq!(first, second, "worker threads must not be respawned");
+        assert!(
+            !first.contains(&std::thread::current().id()),
+            "the caller does not execute packages on the pooled path"
+        );
+    }
+
+    #[test]
+    fn concurrent_callers_interleave_safely() {
+        let pool = Arc::new(WorkerPool::new(3).unwrap());
+        std::thread::scope(|scope| {
+            for caller in 0..4usize {
+                let pool = Arc::clone(&pool);
+                scope.spawn(move || {
+                    for round in 0..20usize {
+                        let n = 16 + caller + round;
+                        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                        pool.run(n, Schedule::Dynamic { chunk: 1 }, |i| {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        });
+                        for (i, h) in hits.iter().enumerate() {
+                            assert_eq!(
+                                h.load(Ordering::Relaxed),
+                                1,
+                                "caller {caller} round {round} index {i}"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2).unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, Schedule::Static, |i| {
+                if i == 3 {
+                    panic!("injected body panic");
+                }
+            });
+        }));
+        let payload = caught.expect_err("panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("injected body panic"), "payload: {msg:?}");
+        // The pool keeps serving after a body panic.
+        let total = AtomicU64::new(0);
+        pool.run(10, Schedule::Dynamic { chunk: 1 }, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.into_inner(), 45);
+    }
+
+    #[test]
+    fn zero_threads_is_a_typed_error() {
+        assert!(matches!(WorkerPool::new(0), Err(Error::InvalidThreads(0))));
+    }
+
+    #[test]
+    fn global_pool_is_one_instance() {
+        let a = WorkerPool::global();
+        let b = WorkerPool::global();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.threads() >= 1);
+    }
+
+    #[test]
+    fn pool_spec_parse_and_resolve() {
+        assert!(matches!(PoolSpec::parse("owned"), Some(PoolSpec::Owned)));
+        assert!(matches!(PoolSpec::parse("global"), Some(PoolSpec::Global)));
+        assert!(PoolSpec::parse("bogus").is_none());
+        assert_eq!(PoolSpec::Owned.name(), "owned");
+        assert_eq!(PoolSpec::Global.name(), "global");
+        // threads == 1 resolves to no pool at all (sequential path).
+        assert!(PoolSpec::Owned.resolve(1).unwrap().is_none());
+        let owned = PoolSpec::Owned.resolve(3).unwrap().unwrap();
+        assert_eq!(owned.threads(), 3);
+        let shared = Arc::new(WorkerPool::new(2).unwrap());
+        let spec = PoolSpec::Shared(Arc::clone(&shared));
+        assert_eq!(spec.name(), "shared");
+        let resolved = spec.resolve(8).unwrap().unwrap();
+        assert!(Arc::ptr_eq(&resolved, &shared));
+    }
+}

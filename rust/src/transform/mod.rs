@@ -16,5 +16,6 @@ pub mod plan;
 
 pub use crate::coordinator::{StageStats, Workspace};
 pub use crate::fft::FftEngine;
+pub use crate::pool::{PoolSpec, WorkerPool};
 pub use api::{So3Fft, So3FftBuilder};
 pub use plan::{BackendKind, So3Plan, So3PlanBuilder, Transform};

@@ -46,7 +46,7 @@ use crate::dwt::tables::WignerStorage;
 use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::{Error, Result};
 use crate::fft::FftEngine;
-use crate::pool::Schedule;
+use crate::pool::{PoolSpec, Schedule, WorkerPool};
 use crate::so3::coeffs::So3Coeffs;
 use crate::so3::sampling::So3Grid;
 
@@ -55,7 +55,9 @@ use crate::so3::sampling::So3Grid;
 pub enum BackendKind {
     /// Single-threaded: the paper's sequential baseline algorithm.
     CpuSequential,
-    /// The fork-join worker pool with the configured loop schedule.
+    /// The persistent worker pool (parked workers, woken per region)
+    /// with the configured loop schedule — owned, process-global, or
+    /// shared across plans (see [`crate::pool::PoolSpec`]).
     CpuParallel,
     /// DWT contractions offloaded to a compiled PJRT/XLA artifact
     /// (FFT + transposition stages still run on the CPU backend).
@@ -186,6 +188,14 @@ impl So3Plan {
     /// Memory held by precomputed Wigner tables (bytes).
     pub fn table_bytes(&self) -> usize {
         self.exec.table_bytes()
+    }
+
+    /// The persistent worker pool this plan's parallel regions execute
+    /// on (`None` for the sequential backend). For plans built with
+    /// [`So3PlanBuilder::pool`] or [`PoolSpec::Global`] this is the
+    /// shared instance (`Arc::ptr_eq`-comparable).
+    pub fn pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.exec.pool()
     }
 
     /// A workspace sized for this plan. Build one per session/thread and
@@ -406,6 +416,27 @@ impl So3PlanBuilder {
         self
     }
 
+    /// Execute this plan's parallel regions on a caller-supplied
+    /// persistent [`WorkerPool`], shared with other plans and with
+    /// concurrent callers (regions interleave safely; results are
+    /// bit-identical to exclusive use). Also widens `threads` to the
+    /// pool size — call [`Self::threads`] *afterwards* to narrow the
+    /// region width (always clamped to the pool size at execution).
+    pub fn pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.config.threads = pool.threads();
+        self.config.pool = PoolSpec::Shared(pool);
+        self
+    }
+
+    /// Pool sourcing policy: [`PoolSpec::Owned`] (default — a private
+    /// pool of `threads` workers), [`PoolSpec::Global`] (the
+    /// lazily-initialized process-global pool), or [`PoolSpec::Shared`].
+    /// Unlike [`Self::pool`] this never touches `threads`.
+    pub fn pool_spec(mut self, spec: PoolSpec) -> Self {
+        self.config.pool = spec;
+        self
+    }
+
     /// Attach a DWT offload backend (the PJRT/XLA runtime).
     pub fn offload(mut self, offload: Arc<dyn DwtOffload>) -> Self {
         self.offload = Some(offload);
@@ -526,6 +557,49 @@ mod tests {
             rplan.forward(&g),
             Err(Error::RealInputRequired { .. })
         ));
+    }
+
+    #[test]
+    fn shared_pool_plans_match_owned_pool_plans() {
+        let pool = Arc::new(WorkerPool::new(2).unwrap());
+        let builder = So3Plan::builder(8).pool(Arc::clone(&pool));
+        let shared = builder.build().unwrap();
+        // `.pool(...)` widens threads to the pool size and reuses the
+        // shared instance instead of spawning a private pool.
+        assert_eq!(shared.config().threads, 2);
+        assert_eq!(shared.backend(), BackendKind::CpuParallel);
+        assert!(Arc::ptr_eq(shared.pool().unwrap(), &pool));
+        let owned = So3Plan::builder(8).threads(2).build().unwrap();
+        assert!(!Arc::ptr_eq(owned.pool().unwrap(), &pool));
+        let coeffs = So3Coeffs::random(8, 31);
+        let g_shared = shared.inverse(&coeffs).unwrap();
+        let g_owned = owned.inverse(&coeffs).unwrap();
+        assert_eq!(g_shared.as_slice(), g_owned.as_slice());
+        let c_shared = shared.forward(&g_shared).unwrap();
+        let c_owned = owned.forward(&g_owned).unwrap();
+        assert_eq!(c_shared.as_slice(), c_owned.as_slice());
+    }
+
+    #[test]
+    fn global_pool_spec_builds_and_roundtrips() {
+        let plan = So3Plan::builder(4)
+            .threads(2)
+            .pool_spec(PoolSpec::Global)
+            .build()
+            .unwrap();
+        // The global pool is one process-wide instance.
+        assert!(Arc::ptr_eq(plan.pool().unwrap(), &WorkerPool::global()));
+        let coeffs = So3Coeffs::random(4, 8);
+        let grid = plan.inverse(&coeffs).unwrap();
+        let back = plan.forward(&grid).unwrap();
+        assert!(coeffs.max_abs_error(&back) < 1e-11);
+        // Sequential plans never resolve a pool, whatever the spec.
+        let seq = So3Plan::builder(4)
+            .pool_spec(PoolSpec::Global)
+            .build()
+            .unwrap();
+        assert!(seq.pool().is_none());
+        assert_eq!(seq.backend(), BackendKind::CpuSequential);
     }
 
     #[test]

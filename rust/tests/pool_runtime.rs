@@ -1,0 +1,210 @@
+//! Integration: the persistent worker-pool runtime under concurrent
+//! callers — bit-identical results vs the sequential path, worker
+//! threads stable across transforms (no OS-thread spawning after pool
+//! construction), shared pools across plans and bandwidths, and the
+//! sequential fast path's RegionStats shape.
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+use so3ft::pool::{parallel_for, sequential_region, Schedule, WorkerPool};
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::so3::sampling::So3Grid;
+use so3ft::testkit::Prop;
+use so3ft::transform::So3Plan;
+
+const ALL_SCHEDULES: [Schedule; 5] = [
+    Schedule::Dynamic { chunk: 1 },
+    Schedule::Dynamic { chunk: 8 },
+    Schedule::Static,
+    Schedule::StaticInterleaved,
+    Schedule::Guided { min_chunk: 1 },
+];
+
+/// Many `forward_into`/`inverse_into` calls from multiple caller threads
+/// against one shared pool: every result must be bit-identical to the
+/// sequential path (disjoint writes, no reductions — so even floating
+/// point agrees exactly).
+#[test]
+fn concurrent_callers_on_one_shared_pool_are_bit_identical() {
+    let b = 8;
+    let pool = Arc::new(WorkerPool::new(3).unwrap());
+    let builder = So3Plan::builder(b).pool(Arc::clone(&pool));
+    let plan = Arc::new(builder.build().unwrap());
+    let seq = So3Plan::builder(b).build().unwrap();
+
+    let inputs: Vec<So3Coeffs> = (0..4).map(|i| So3Coeffs::random(b, 100 + i)).collect();
+    let ref_grids: Vec<So3Grid> = inputs.iter().map(|c| seq.inverse(c).unwrap()).collect();
+    let ref_specs: Vec<So3Coeffs> = ref_grids.iter().map(|g| seq.forward(g).unwrap()).collect();
+
+    std::thread::scope(|scope| {
+        for caller in 0..4usize {
+            let plan = Arc::clone(&plan);
+            let inputs = &inputs;
+            let ref_grids = &ref_grids;
+            let ref_specs = &ref_specs;
+            scope.spawn(move || {
+                let mut ws = plan.make_workspace();
+                let mut grid = So3Grid::zeros(b).unwrap();
+                let mut spec = So3Coeffs::zeros(b);
+                for round in 0..6usize {
+                    let k = (caller + round) % inputs.len();
+                    plan.inverse_into(&inputs[k], &mut grid, &mut ws).unwrap();
+                    assert_eq!(
+                        grid.as_slice(),
+                        ref_grids[k].as_slice(),
+                        "inverse: caller {caller} round {round}"
+                    );
+                    plan.forward_into(&grid, &mut spec, &mut ws).unwrap();
+                    assert_eq!(
+                        spec.as_slice(),
+                        ref_specs[k].as_slice(),
+                        "forward: caller {caller} round {round}"
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// No parallel region spawns OS threads after pool construction: the
+/// exact worker-thread-id set observed before two consecutive
+/// `forward_into` calls is observed again after them.
+#[test]
+fn worker_thread_ids_stable_across_consecutive_transform_calls() {
+    let b = 8;
+    let pool = Arc::new(WorkerPool::new(2).unwrap());
+    let builder = So3Plan::builder(b).pool(Arc::clone(&pool));
+    let plan = builder.build().unwrap();
+
+    // Static over n == pool size: every worker executes exactly one
+    // package, so the observed id set is deterministic and complete.
+    let observe = |pool: &WorkerPool| -> HashSet<std::thread::ThreadId> {
+        let seen = Mutex::new(HashSet::new());
+        pool.run(2, Schedule::Static, |_| {
+            seen.lock().unwrap().insert(std::thread::current().id());
+        });
+        seen.into_inner().unwrap()
+    };
+
+    let expected: HashSet<_> = pool.thread_ids().into_iter().collect();
+    assert_eq!(expected.len(), 2);
+    let before = observe(&pool);
+    assert_eq!(before, expected);
+
+    let coeffs = So3Coeffs::random(b, 5);
+    let mut ws = plan.make_workspace();
+    let mut grid = So3Grid::zeros(b).unwrap();
+    let mut spec = So3Coeffs::zeros(b);
+    plan.inverse_into(&coeffs, &mut grid, &mut ws).unwrap();
+    plan.forward_into(&grid, &mut spec, &mut ws).unwrap();
+    plan.forward_into(&grid, &mut spec, &mut ws).unwrap();
+
+    let after = observe(&pool);
+    assert_eq!(before, after, "transforms must reuse the persistent workers");
+    assert_eq!(
+        pool.thread_ids().into_iter().collect::<HashSet<_>>(),
+        expected,
+        "the pool never respawns its threads"
+    );
+    assert!(
+        !before.contains(&std::thread::current().id()),
+        "pooled regions do not execute packages on the caller"
+    );
+}
+
+/// Plans of different bandwidths interleaving on one pool: the
+/// per-worker thread-local scratch is rebuilt per bandwidth without
+/// corrupting either plan's results.
+#[test]
+fn mixed_bandwidth_plans_share_one_pool() {
+    let pool = Arc::new(WorkerPool::new(2).unwrap());
+    let builder4 = So3Plan::builder(4).pool(Arc::clone(&pool));
+    let plan4 = builder4.build().unwrap();
+    let builder8 = So3Plan::builder(8).pool(Arc::clone(&pool));
+    let plan8 = builder8.build().unwrap();
+    let seq4 = So3Plan::builder(4).build().unwrap();
+    let seq8 = So3Plan::builder(8).build().unwrap();
+    let c4 = So3Coeffs::random(4, 9);
+    let c8 = So3Coeffs::random(8, 10);
+    let want4 = seq4.inverse(&c4).unwrap();
+    let want8 = seq8.inverse(&c8).unwrap();
+    for round in 0..3 {
+        let g4 = plan4.inverse(&c4).unwrap();
+        assert_eq!(g4.as_slice(), want4.as_slice(), "b=4 round {round}");
+        let g8 = plan8.inverse(&c8).unwrap();
+        assert_eq!(g8.as_slice(), want8.as_slice(), "b=8 round {round}");
+    }
+}
+
+/// Randomized configs through a shared pool (testkit property harness):
+/// parallel == sequential, bit for bit, under every schedule.
+#[test]
+fn property_shared_pool_matches_sequential() {
+    let pool = Arc::new(WorkerPool::new(3).unwrap());
+    Prop::new("shared pool == sequential").cases(8).run(|g| {
+        let b = g.usize_in(2, 8);
+        let seed = g.u64();
+        let schedule = *g.choose(&ALL_SCHEDULES);
+        let coeffs = So3Coeffs::random(b, seed);
+        let par = So3Plan::builder(b)
+            .allow_any_bandwidth()
+            .pool(Arc::clone(&pool))
+            .schedule(schedule)
+            .build()
+            .unwrap();
+        let seq = So3Plan::builder(b).allow_any_bandwidth().build().unwrap();
+        let gp = par.inverse(&coeffs).unwrap();
+        let gs = seq.inverse(&coeffs).unwrap();
+        Prop::assert_true(gp.as_slice() == gs.as_slice(), "inverse mismatch")?;
+        let cp = par.forward(&gp).unwrap();
+        let cs = seq.forward(&gs).unwrap();
+        Prop::assert_true(cp.as_slice() == cs.as_slice(), "forward mismatch")
+    });
+}
+
+/// Regression (ISSUE 3 satellite): the single-thread fast path records
+/// the same RegionStats shape as the policy accounting — one worker,
+/// `packages == n` — under every `Schedule`, in all three entry points
+/// (legacy scoped spawn, persistent pool, explicit sequential helper).
+#[test]
+fn single_thread_fast_path_region_stats_shape() {
+    let pool = WorkerPool::new(1).unwrap();
+    for &schedule in &ALL_SCHEDULES {
+        for &n in &[0usize, 1, 5, 64] {
+            let from_for = parallel_for(1, n, schedule, |_| {});
+            let from_pool = pool.run(n, schedule, |_| {});
+            let from_seq = sequential_region(n, |_| {});
+            for (label, s) in [
+                ("parallel_for", &from_for),
+                ("WorkerPool::run", &from_pool),
+                ("sequential_region", &from_seq),
+            ] {
+                assert_eq!(s.workers.len(), 1, "{label} ({schedule:?}, n={n})");
+                assert_eq!(s.workers[0].packages, n, "{label} ({schedule:?}, n={n})");
+                assert_eq!(s.items, n, "{label} ({schedule:?}, n={n})");
+                assert_eq!(
+                    s.workers.iter().map(|w| w.packages).sum::<usize>(),
+                    n,
+                    "{label}: total package accounting ({schedule:?}, n={n})"
+                );
+            }
+        }
+    }
+}
+
+/// The DWT region's stats flow through unchanged on the pooled runtime:
+/// package totals still account for every cluster.
+#[test]
+fn region_stats_account_for_all_clusters_on_shared_pool() {
+    let b = 8;
+    let pool = Arc::new(WorkerPool::new(3).unwrap());
+    let plan = So3Plan::builder(b).pool(pool).build().unwrap();
+    let coeffs = So3Coeffs::random(b, 4);
+    let (_, stats) = plan.inverse_with_stats(&coeffs).unwrap();
+    let region = stats.dwt_region.expect("region stats");
+    let total: usize = region.workers.iter().map(|w| w.packages).sum();
+    assert_eq!(total, plan.executor().plan().clusters.len());
+    assert_eq!(region.items, total);
+    assert_eq!(region.workers.len(), 3);
+}
