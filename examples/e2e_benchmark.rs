@@ -12,7 +12,10 @@
 //!      (paper Figs. 2-4 metric),
 //!   6. if AOT artifacts exist for the bandwidth, the same transform
 //!      through the PJRT/XLA DWT backend, validated against native,
-//!   7. an FFT-stage engine sweep (split-radix panel vs radix-2
+//!   7. a DWT-stage engine sweep (matvec baseline vs the β-parity-folded
+//!      engine vs Clenshaw, over both Wigner sources) — the
+//!      `dwt_stage_*` records the bench-smoke gate pins,
+//!   8. an FFT-stage engine sweep (split-radix panel vs radix-2
 //!      gather/scatter baseline, single- and max-thread) at the large
 //!      bandwidths the DWT can't reach in-process.
 //!
@@ -221,6 +224,96 @@ fn main() -> so3ft::Result<()> {
         println!();
     }
 
+    // DWT-stage engine sweep (ISSUE 4): matvec baseline vs the
+    // β-parity-folded engine vs Clenshaw, over both Wigner sources, at
+    // the e2e bandwidths. Sequential, so the per-stage `dwt_s` is the
+    // kernel time the bench-smoke gate pins (dwt_stage_* records).
+    println!("\n=== DWT stage: matvec vs matvec-folded vs clenshaw × wigner source ===");
+    let mut dwt_table = Table::new(&["B", "engine", "fwd dwt", "inv dwt", "table MiB"]);
+    for &b in &bandwidths {
+        let coeffs = So3Coeffs::random(b, 4242);
+        let mut folded_fwd = [0.0f64; 2];
+        let mut folded_inv = [0.0f64; 2];
+        for (engine, algorithm, storage) in [
+            (
+                "matvec+tables",
+                so3ft::dwt::DwtAlgorithm::MatVec,
+                so3ft::dwt::tables::WignerStorage::Precomputed,
+            ),
+            (
+                "matvec-folded+tables",
+                so3ft::dwt::DwtAlgorithm::MatVecFolded,
+                so3ft::dwt::tables::WignerStorage::Precomputed,
+            ),
+            (
+                "matvec+onthefly",
+                so3ft::dwt::DwtAlgorithm::MatVec,
+                so3ft::dwt::tables::WignerStorage::OnTheFly,
+            ),
+            (
+                "matvec-folded+onthefly",
+                so3ft::dwt::DwtAlgorithm::MatVecFolded,
+                so3ft::dwt::tables::WignerStorage::OnTheFly,
+            ),
+            (
+                "clenshaw",
+                so3ft::dwt::DwtAlgorithm::Clenshaw,
+                so3ft::dwt::tables::WignerStorage::OnTheFly,
+            ),
+        ] {
+            let plan = So3Plan::builder(b)
+                .algorithm(algorithm)
+                .storage(storage)
+                .allow_any_bandwidth()
+                .build()?;
+            let (grid, istats) = plan.inverse_with_stats(&coeffs)?;
+            let (_, fstats) = plan.forward_with_stats(&grid)?;
+            let fwd = fstats.dwt.as_secs_f64();
+            let inv = istats.dwt.as_secs_f64();
+            match engine {
+                "matvec+tables" => {
+                    folded_fwd[0] = fwd;
+                    folded_inv[0] = inv;
+                }
+                "matvec-folded+tables" => {
+                    folded_fwd[1] = fwd;
+                    folded_inv[1] = inv;
+                }
+                _ => {}
+            }
+            for (kind, dwt_s, total_s) in [
+                ("dwt_stage_forward", fwd, fstats.total.as_secs_f64()),
+                ("dwt_stage_inverse", inv, istats.total.as_secs_f64()),
+            ] {
+                records.push(format!(
+                    "{{\"kind\": \"{kind}\", \"b\": {b}, \"threads\": 1, \
+                     \"engine\": \"{engine}\", \"dwt_s\": {dwt_s:.6e}, \
+                     \"total_s\": {total_s:.6e}}}"
+                ));
+            }
+            dwt_table.row(&[
+                b.to_string(),
+                engine.to_string(),
+                fmt_seconds(fwd),
+                fmt_seconds(inv),
+                if plan.table_bytes() == 0 {
+                    "-".into()
+                } else {
+                    format!("{:.2}", plan.table_bytes() as f64 / (1 << 20) as f64)
+                },
+            ]);
+        }
+        if folded_fwd[1] > 0.0 && folded_inv[1] > 0.0 {
+            records.push(format!(
+                "{{\"kind\": \"dwt_stage_speedup\", \"b\": {b}, \"threads\": 1, \
+                 \"fwd_speedup\": {:.3}, \"inv_speedup\": {:.3}}}",
+                folded_fwd[0] / folded_fwd[1],
+                folded_inv[0] / folded_inv[1],
+            ));
+        }
+    }
+    dwt_table.print();
+
     // FFT-stage engine sweep: the per-β-slice 2-D FFT region (the shape
     // of the executor's stage 1/3) at bandwidths whose DWT would not fit
     // in this process, split-radix panel engine vs the radix-2
@@ -311,7 +404,9 @@ fn main() -> so3ft::Result<()> {
             "\"fft_stage records time the per-beta-slice 2-D FFT region \
              (n slices of a shared n^3 slab, dynamic schedule; slab init \
              and rescales are untimed); transform_* records are full \
-             sequential StageStats breakdowns\""
+             sequential StageStats breakdowns; dwt_stage_* records carry \
+             the sequential DWT-stage wall time per engine x wigner \
+             source\""
                 .to_string(),
         ),
     ];

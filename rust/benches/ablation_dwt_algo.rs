@@ -23,8 +23,20 @@ fn main() {
             Precision::Double,
         ),
         (
+            "folded+tables (default)",
+            DwtAlgorithm::MatVecFolded,
+            WignerStorage::Precomputed,
+            Precision::Double,
+        ),
+        (
             "matvec+onthefly",
             DwtAlgorithm::MatVec,
+            WignerStorage::OnTheFly,
+            Precision::Double,
+        ),
+        (
+            "folded+onthefly",
+            DwtAlgorithm::MatVecFolded,
             WignerStorage::OnTheFly,
             Precision::Double,
         ),

@@ -1,9 +1,11 @@
 //! Microbench: single-cluster DWT kernels — the transform's hot spot —
-//! across cluster shapes and dataflows.
+//! across cluster shapes and dataflows, including the β-parity-folded
+//! engine vs the matvec baseline (ISSUE 4's headline comparison).
 
 use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
 use so3ft::dwt::cluster::Cluster;
 use so3ft::dwt::clenshaw;
+use so3ft::dwt::folded::{forward_cluster_folded_tables, inverse_cluster_folded_tables};
 use so3ft::dwt::kernels::{forward_cluster, inverse_cluster, DwtScratch};
 use so3ft::dwt::tables::{OnTheFlySource, WignerSource, WignerTables};
 use so3ft::dwt::SMatrix;
@@ -34,21 +36,25 @@ fn main() {
     let mut smat_out = SMatrix::zeros(b).unwrap();
 
     // Representative clusters: full 8-member low-l0 (big), diagonal,
-    // border, high-l0 (small).
+    // border (the parity fast path), high-l0 (small).
     let shapes = [
         ("8-member, l0=2", Cluster::symmetric(2, 1)),
         ("8-member, l0=B/2", Cluster::symmetric(b as i64 / 2, 1)),
         ("diagonal (4)", Cluster::symmetric(b as i64 / 2, b as i64 / 2)),
-        ("border (4)", Cluster::symmetric(b as i64 / 2, 0)),
+        ("border (4, parity)", Cluster::symmetric(b as i64 / 2, 0)),
         ("(0,0) single", Cluster::symmetric(0, 0)),
     ];
     let mut table = Table::new(&[
         "cluster",
         "fwd tables",
+        "fwd folded",
         "fwd onthefly",
         "fwd clenshaw",
         "inv tables",
+        "inv folded",
         "inv clenshaw",
+        "fwd fold spd",
+        "inv fold spd",
     ]);
     let mut csv = Vec::new();
     for (name, cluster) in &shapes {
@@ -56,6 +62,11 @@ fn main() {
         let f_tab = time_fn(reps, || {
             let mut src = tables.source();
             forward_cluster(b, cluster, &mut src, &weights, &smat, &shared, &mut scratch);
+        });
+        let f_fold = time_fn(reps, || {
+            forward_cluster_folded_tables(
+                b, cluster, &tables, &weights, &smat, &shared, &mut scratch,
+            );
         });
         let f_fly = time_fn(reps, || {
             let mut src = OnTheFlySource::new(&angles.betas);
@@ -81,6 +92,17 @@ fn main() {
                 &mut scratch,
             );
         });
+        let i_fold = time_fn(reps, || {
+            inverse_cluster_folded_tables(
+                b,
+                cluster,
+                &tables,
+                coeffs.as_slice(),
+                &shared_s,
+                &layout,
+                &mut scratch,
+            );
+        });
         let mut buf = Vec::new();
         let i_cl = time_fn(reps, || {
             clenshaw::inverse_cluster_clenshaw(
@@ -96,24 +118,30 @@ fn main() {
         table.row(&[
             name.to_string(),
             fmt_seconds(f_tab.median()),
+            fmt_seconds(f_fold.median()),
             fmt_seconds(f_fly.median()),
             fmt_seconds(f_cl.median()),
             fmt_seconds(i_tab.median()),
+            fmt_seconds(i_fold.median()),
             fmt_seconds(i_cl.median()),
+            format!("{:.2}x", f_tab.median() / f_fold.median()),
+            format!("{:.2}x", i_tab.median() / i_fold.median()),
         ]);
         csv.push(format!(
-            "{name},{b},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e}",
+            "{name},{b},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e}",
             f_tab.median(),
+            f_fold.median(),
             f_fly.median(),
             f_cl.median(),
             i_tab.median(),
+            i_fold.median(),
             i_cl.median()
         ));
     }
     table.print();
     csv_sink(
         "micro_dwt",
-        "cluster,b,fwd_tab,fwd_fly,fwd_clen,inv_tab,inv_clen",
+        "cluster,b,fwd_tab,fwd_folded,fwd_fly,fwd_clen,inv_tab,inv_folded,inv_clen",
         &csv,
     );
 }

@@ -32,7 +32,8 @@ commands:
 
 options: --config FILE, --bandwidth/-b B, --threads/-t N,
   --schedule dynamic[:c]|static|interleaved|guided[:m],
-  --strategy geometric|sigma|nosym, --algorithm matvec|clenshaw,
+  --strategy geometric|sigma|nosym,
+  --algorithm matvec-folded|matvec|clenshaw,
   --storage precomputed|onthefly|auto[:mb], --precision double|extended,
   --pool owned|global (pair global with --threads N; width is
   min(threads, pool)), --seed N, --xla, --artifacts DIR, --cores LIST,

@@ -17,7 +17,7 @@
 //!   --threads/-t <N>          worker threads
 //!   --schedule <spec>         dynamic[:c] | static | interleaved | guided[:m]
 //!   --strategy <spec>         geometric | sigma | nosym
-//!   --algorithm <spec>        matvec | clenshaw
+//!   --algorithm <spec>        matvec-folded | matvec | clenshaw
 //!   --storage <spec>          precomputed | onthefly | auto[:mb]
 //!   --precision <spec>        double | extended
 //!   --pool <spec>             owned | global (persistent worker pool)

@@ -10,7 +10,7 @@
 //! threads = 4
 //! schedule = "dynamic:1"
 //! strategy = "geometric"      # geometric | sigma | nosym
-//! algorithm = "matvec"        # matvec | clenshaw
+//! algorithm = "matvec-folded" # matvec-folded | matvec | clenshaw
 //! storage = "precomputed"     # precomputed | onthefly | auto
 //! precision = "double"        # double | extended
 //! fft = "split-radix"         # split-radix | radix2-baseline
@@ -143,10 +143,11 @@ pub fn parse_storage(s: &str, b: usize) -> Result<WignerStorage> {
 /// Parse an algorithm spec.
 pub fn parse_algorithm(s: &str) -> Result<DwtAlgorithm> {
     match s {
+        "matvec-folded" | "matvecfolded" | "folded" => Ok(DwtAlgorithm::MatVecFolded),
         "matvec" => Ok(DwtAlgorithm::MatVec),
         "clenshaw" => Ok(DwtAlgorithm::Clenshaw),
         _ => Err(Error::Config(format!(
-            "algorithm: expected matvec|clenshaw, got {s:?}"
+            "algorithm: expected matvec-folded|matvec|clenshaw, got {s:?}"
         ))),
     }
 }
@@ -304,6 +305,24 @@ seed = 7
             &ParsedConfig::parse("[transform]\nthreads = \"x\"").unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn algorithm_specs_parse() {
+        assert_eq!(
+            parse_algorithm("matvec-folded").unwrap(),
+            DwtAlgorithm::MatVecFolded
+        );
+        assert_eq!(parse_algorithm("folded").unwrap(), DwtAlgorithm::MatVecFolded);
+        assert_eq!(parse_algorithm("matvec").unwrap(), DwtAlgorithm::MatVec);
+        assert_eq!(parse_algorithm("clenshaw").unwrap(), DwtAlgorithm::Clenshaw);
+        assert!(parse_algorithm("fused").is_err());
+        // Defaults flow through `from_parsed`.
+        let cfg = RunConfig::from_parsed(
+            &ParsedConfig::parse("[transform]\nalgorithm = \"matvec-folded\"").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.exec.algorithm, DwtAlgorithm::MatVecFolded);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::plan::{PartitionStrategy, TransformPlan};
 use crate::dwt::cluster::Cluster;
 use crate::dwt::clenshaw;
+use crate::dwt::folded;
 use crate::dwt::kernels::{self, DwtScratch};
 use crate::dwt::tables::{OnTheFlySource, WignerSource, WignerStorage, WignerTables};
 use crate::dwt::{DwtAlgorithm, Precision, SMatrix};
@@ -70,7 +71,8 @@ pub struct ExecutorConfig {
     pub schedule: Schedule,
     /// Order-domain partitioning.
     pub strategy: PartitionStrategy,
-    /// DWT dataflow.
+    /// DWT dataflow: the β-parity-folded engine (default), the full-row
+    /// matvec baseline, or the Clenshaw recurrence.
     pub algorithm: DwtAlgorithm,
     /// Wigner row storage.
     pub storage: WignerStorage,
@@ -99,7 +101,7 @@ impl Default for ExecutorConfig {
             threads: 1,
             schedule: Schedule::PAPER,
             strategy: PartitionStrategy::GeometricClustered,
-            algorithm: DwtAlgorithm::MatVec,
+            algorithm: DwtAlgorithm::MatVecFolded,
             storage: WignerStorage::Precomputed,
             precision: Precision::Double,
             fft_engine: FftEngine::SplitRadix,
@@ -182,13 +184,15 @@ pub struct Executor {
 }
 
 thread_local! {
-    /// Per-thread DWT scratch, recreated when the bandwidth changes.
+    /// Per-thread DWT scratch, grown to the largest bandwidth seen.
     /// Parallel regions run on a persistent [`WorkerPool`], whose OS
     /// threads are stable for the pool's lifetime — so this scratch is
     /// pinned per worker and reused across regions, transforms, and
-    /// every plan sharing the pool (rebuilt only when a plan of a
-    /// different bandwidth executes on the same worker).
-    static SCRATCH: RefCell<Option<(usize, DwtScratch)>> = const { RefCell::new(None) };
+    /// every plan sharing the pool. Mixed-bandwidth plans sharing one
+    /// pool never reallocate on a bandwidth switch: the scratch grows
+    /// to the max and serves every smaller plan in place (kernels slice
+    /// by their own bandwidth).
+    static SCRATCH: RefCell<Option<DwtScratch>> = const { RefCell::new(None) };
     /// Per-thread FFT column scratch, grown on demand. On the sequential
     /// path the main thread reuses it across slices AND transforms; on
     /// the pooled path it is likewise pinned to the persistent workers
@@ -200,15 +204,9 @@ thread_local! {
 fn with_scratch<R>(b: usize, f: impl FnOnce(&mut DwtScratch) -> R) -> R {
     SCRATCH.with(|cell| {
         let mut slot = cell.borrow_mut();
-        match slot.as_mut() {
-            Some((sb, scratch)) if *sb == b => f(scratch),
-            _ => {
-                let mut scratch = DwtScratch::new(b);
-                let r = f(&mut scratch);
-                *slot = Some((b, scratch));
-                r
-            }
-        }
+        let scratch = slot.get_or_insert_with(Default::default);
+        scratch.ensure(b);
+        f(scratch)
     })
 }
 
@@ -290,10 +288,18 @@ impl Executor {
         let angles = GridAngles::new(b)?;
         let weights = quadrature::weights(b)?;
         let plan = TransformPlan::new(b, config.strategy);
+        // Folded + extended streams exact rows from the recurrence
+        // instead: the folded tables' reconstructed O halves carry an
+        // O(B·ε) term that would defeat double-double accumulation, and
+        // unfolding rows only to re-fold them in the kernel is pure
+        // waste — so no tables are built (table_bytes() reports 0).
+        let folded_extended = config.algorithm == DwtAlgorithm::MatVecFolded
+            && config.precision == Precision::Extended;
         let tables = match (config.storage, config.algorithm) {
-            (WignerStorage::Precomputed, DwtAlgorithm::MatVec)
-                if config.strategy != PartitionStrategy::NoSymmetry =>
-            {
+            (
+                WignerStorage::Precomputed,
+                DwtAlgorithm::MatVec | DwtAlgorithm::MatVecFolded,
+            ) if config.strategy != PartitionStrategy::NoSymmetry && !folded_extended => {
                 Some(WignerTables::build(b, &angles.betas))
             }
             _ => None,
@@ -559,11 +565,30 @@ impl Executor {
                     &mut acc,
                 );
             }),
-            (DwtAlgorithm::MatVec, precision) => with_scratch(b, |scratch| {
+            (algorithm, precision) => with_scratch(b, |scratch| {
                 if precision == Precision::Double {
                     if let Some(off) = &self.offload {
                         self.forward_cluster_offload(cluster, smat, out, scratch, off.as_ref());
                         return;
+                    }
+                }
+                let folded = algorithm == DwtAlgorithm::MatVecFolded;
+                // The folded table kernels consume the half-row storage
+                // directly (zero-copy E slices, reconstructed O block).
+                if folded && precision == Precision::Double {
+                    if let Some(t) = &self.tables {
+                        if cluster.m >= cluster.mp && cluster.mp >= 0 {
+                            folded::forward_cluster_folded_tables(
+                                b,
+                                cluster,
+                                t,
+                                &self.weights,
+                                smat,
+                                out,
+                                scratch,
+                            );
+                            return;
+                        }
                     }
                 }
                 let mut fly;
@@ -578,8 +603,8 @@ impl Executor {
                         &mut fly
                     }
                 };
-                match precision {
-                    Precision::Double => kernels::forward_cluster(
+                match (folded, precision) {
+                    (false, Precision::Double) => kernels::forward_cluster(
                         b,
                         cluster,
                         source,
@@ -588,7 +613,25 @@ impl Executor {
                         out,
                         scratch,
                     ),
-                    Precision::Extended => kernels::forward_cluster_extended(
+                    (false, Precision::Extended) => kernels::forward_cluster_extended(
+                        b,
+                        cluster,
+                        source,
+                        &self.weights,
+                        smat,
+                        out,
+                        scratch,
+                    ),
+                    (true, Precision::Double) => folded::forward_cluster_folded(
+                        b,
+                        cluster,
+                        source,
+                        &self.weights,
+                        smat,
+                        out,
+                        scratch,
+                    ),
+                    (true, Precision::Extended) => folded::forward_cluster_folded_extended(
                         b,
                         cluster,
                         source,
@@ -947,7 +990,7 @@ impl Executor {
                     &mut buf,
                 );
             }
-            DwtAlgorithm::MatVec => with_scratch(b, |scratch| {
+            algorithm => with_scratch(b, |scratch| {
                 if self.config.precision == Precision::Double {
                     if let Some(off) = &self.offload {
                         self.inverse_cluster_offload(
@@ -955,11 +998,15 @@ impl Executor {
                         );
                         return;
                     }
-                    // Fast path: fused two-degree sweep over precomputed
-                    // tables (halves accumulator store traffic).
+                }
+                let folded = algorithm == DwtAlgorithm::MatVecFolded;
+                // Fast path: register-blocked folded sweep over the
+                // half-row tables (half table stream; ≥4× fewer
+                // accumulator loads/stores than the per-degree axpy).
+                if folded && self.config.precision == Precision::Double {
                     if let Some(t) = &self.tables {
                         if cluster.m >= cluster.mp && cluster.mp >= 0 {
-                            kernels::inverse_cluster_tables_fused(
+                            folded::inverse_cluster_folded_tables(
                                 b,
                                 cluster,
                                 t,
@@ -984,8 +1031,8 @@ impl Executor {
                         &mut fly
                     }
                 };
-                match self.config.precision {
-                    Precision::Double => kernels::inverse_cluster(
+                match (folded, self.config.precision) {
+                    (false, Precision::Double) => kernels::inverse_cluster(
                         b,
                         cluster,
                         source,
@@ -994,7 +1041,25 @@ impl Executor {
                         layout,
                         scratch,
                     ),
-                    Precision::Extended => kernels::inverse_cluster_extended(
+                    (false, Precision::Extended) => kernels::inverse_cluster_extended(
+                        b,
+                        cluster,
+                        source,
+                        coeffs.as_slice(),
+                        smat_out,
+                        layout,
+                        scratch,
+                    ),
+                    (true, Precision::Double) => folded::inverse_cluster_folded(
+                        b,
+                        cluster,
+                        source,
+                        coeffs.as_slice(),
+                        smat_out,
+                        layout,
+                        scratch,
+                    ),
+                    (true, Precision::Extended) => folded::inverse_cluster_folded_extended(
                         b,
                         cluster,
                         source,
@@ -1077,7 +1142,11 @@ mod tests {
 
     #[test]
     fn roundtrip_all_algorithm_storage_combos() {
-        for algorithm in [DwtAlgorithm::MatVec, DwtAlgorithm::Clenshaw] {
+        for algorithm in [
+            DwtAlgorithm::MatVec,
+            DwtAlgorithm::MatVecFolded,
+            DwtAlgorithm::Clenshaw,
+        ] {
             for storage in [WignerStorage::Precomputed, WignerStorage::OnTheFly] {
                 let config = ExecutorConfig {
                     algorithm,
@@ -1091,6 +1160,31 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn folded_is_the_default_algorithm_and_matches_baseline() {
+        assert_eq!(
+            ExecutorConfig::default().algorithm,
+            DwtAlgorithm::MatVecFolded
+        );
+        let b = 8;
+        let coeffs = So3Coeffs::random(b, 19);
+        let folded = Executor::new(b, ExecutorConfig::default()).unwrap();
+        let baseline = Executor::new(
+            b,
+            ExecutorConfig {
+                algorithm: DwtAlgorithm::MatVec,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let g_f = folded.inverse(&coeffs).unwrap();
+        let g_b = baseline.inverse(&coeffs).unwrap();
+        assert!(g_f.max_abs_error(&g_b) < 1e-12);
+        let c_f = folded.forward(&g_f).unwrap();
+        let c_b = baseline.forward(&g_b).unwrap();
+        assert!(c_f.max_abs_error(&c_b) < 1e-12);
     }
 
     #[test]

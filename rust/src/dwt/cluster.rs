@@ -125,6 +125,27 @@ impl Cluster {
         self.m.abs().max(self.mp.abs()) as usize
     }
 
+    /// β-reflection parity of this cluster's base rows, when they have
+    /// one: `d(l, m, m'; π−β) = σ₀·(−1)^l · d(l, m, m'; β)` with the
+    /// returned σ₀. The π−β symmetries (paper Eq. 3 lines 3–6) map
+    /// (m, m') to a pair with exactly one order negated, so they reduce
+    /// to a *same-pair* identity only when m·m' = 0: for (m, 0) the
+    /// parity is (−1)^{l+m} (σ₀ = (−1)^m), for (0, m') it is
+    /// (−1)^{l−m'} (σ₀ = (−1)^{m'}). General bases return `None` — their
+    /// reflected half-row carries independent information (the folded
+    /// tables store the symmetric half and reconstruct the antisymmetric
+    /// one from the recurrence; see `dwt::tables`).
+    #[inline]
+    pub fn beta_parity(&self) -> Option<f64> {
+        if self.mp == 0 {
+            Some(parity_sign(self.m))
+        } else if self.m == 0 {
+            Some(parity_sign(self.mp))
+        } else {
+            None
+        }
+    }
+
     /// Number of degrees l₀..B−1 each member computes.
     #[inline]
     pub fn degrees(&self, b: usize) -> usize {
@@ -228,6 +249,46 @@ mod tests {
                 stepper.advance();
             }
         }
+    }
+
+    /// `beta_parity` must reproduce the true π−β behavior of the base
+    /// rows: exact alternating parity for m·m' = 0, none otherwise.
+    #[test]
+    fn beta_parity_matches_wigner_reflection() {
+        let b = 8usize;
+        let angles = GridAngles::new(b).unwrap();
+        let n = 2 * b;
+        for (m, mp) in [(0i64, 0i64), (1, 0), (4, 0), (7, 0)] {
+            let cluster = Cluster::symmetric(m, mp);
+            let sigma0 = cluster.beta_parity().expect("m'=0 bases have parity");
+            for l in cluster.l_min()..b {
+                let sig = sigma0 * crate::util::parity_sign(l as i64);
+                for j in 0..n {
+                    let a = d_single(l, m, mp, angles.betas[j]);
+                    let r = d_single(l, m, mp, angles.betas[n - 1 - j]);
+                    assert!(
+                        (r - sig * a).abs() < 1e-12,
+                        "(m={m}) l={l} j={j}: {r} vs {}",
+                        sig * a
+                    );
+                }
+            }
+        }
+        // General bases have no same-pair reflection parity: neither
+        // sign choice explains the reflected row.
+        for (m, mp) in [(2i64, 1i64), (5, 3), (3, 3)] {
+            assert!(Cluster::symmetric(m, mp).beta_parity().is_none());
+            let l = (m.max(mp) + 1) as usize;
+            let beta = angles.betas[1];
+            let a = d_single(l, m, mp, beta);
+            let r = d_single(l, m, mp, std::f64::consts::PI - beta);
+            assert!((r - a).abs() > 1e-6 && (r + a).abs() > 1e-6, "({m},{mp})");
+        }
+        // Singleton clusters from the no-symmetry ablation also report
+        // parity for m·m' = 0 order pairs (either sign of m).
+        assert_eq!(Cluster::singleton(-3, 0).beta_parity(), Some(-1.0));
+        assert_eq!(Cluster::singleton(0, 2).beta_parity(), Some(1.0));
+        assert_eq!(Cluster::singleton(-2, 5).beta_parity(), None);
     }
 
     #[test]

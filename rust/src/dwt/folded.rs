@@ -1,0 +1,830 @@
+//! β-parity-folded, register-blocked DWT/iDWT kernels
+//! (`DwtAlgorithm::MatVecFolded` — the default dataflow).
+//!
+//! The K&R β grid is reflection-symmetric (π − β_j = β_{2B−1−j}), so
+//! every contraction over 2B nodes folds into two half-contractions over
+//! j < B against the symmetric/antisymmetric row halves
+//! `E_l[j] = D_l[j] + D_l[2B−1−j]`, `O_l[j] = D_l[j] − D_l[2B−1−j]`:
+//!
+//! `Σ_j t[j]·D_l[j] = ½ Σ_{j<B} (t⁺[j]·E_l[j] + t⁻[j]·O_l[j])`
+//!
+//! with `t±[j] = t[j] ± t[2B−1−j]` folded **once per cluster** (the
+//! reflected-member j-reversal of the matvec kernels disappears into the
+//! fold — a reflected member only flips the sign of its O term). What
+//! the fold buys, per cluster shape:
+//!
+//! * **Parity clusters (base m' = 0, ≤4 members, all direct).** The rows
+//!   have exact β-parity σ(l) = σ₀·(−1)^l ([`Cluster::beta_parity`]), so
+//!   one half-contraction vanishes: each member contracts only t⁺ (even
+//!   σ) or t⁻ (odd σ) against the stored half row — **half the FLOPs and
+//!   half the table traffic**.
+//! * **General clusters.** Both halves carry information (the MAC count
+//!   is invariant — the fold is an orthogonal basis change), but the
+//!   folded tables store only E (O is reconstructed from the recurrence,
+//!   amortized over all ≤8 members), **halving the table stream**, and
+//!   the register-blocked micro-kernel contracts [`DEG_BLOCK`] degrees
+//!   per pass of t± — quartering the member-vector traffic the per-`l`
+//!   re-scan of the matvec kernels pays.
+//!
+//! The `matvec` kernels in [`super::kernels`] remain the measurable
+//! baseline (mirroring `FftEngine::Radix2Baseline`). Agreement ≤ 1e-12
+//! in both directions, both precisions, and both Wigner sources is
+//! pinned by `rust/tests/dwt_parity.rs` and the module tests below.
+
+use crate::dwt::cluster::Cluster;
+use crate::dwt::kernels::DwtScratch;
+use crate::dwt::tables::{WignerSource, WignerTables};
+use crate::dwt::{v_scale, SMatrix};
+use crate::fft::Complex64;
+use crate::so3::coeffs;
+use crate::util::{parity_sign, SyncUnsafeSlice};
+use crate::xprec::DdComplex;
+
+/// Degrees contracted per register-blocked pass of the table kernels.
+pub const DEG_BLOCK: usize = 4;
+
+/// Fold the weighted member vectors into (t⁺ | t⁻) half-pairs, overlaid
+/// on `scratch.t`: member `mi` owns `t[mi·2B .. mi·2B+B)` = t⁺ and
+/// `t[mi·2B+B .. (mi+1)·2B)` = t⁻. No member vector is ever reversed —
+/// reflection is a sign on the t⁻ contraction.
+fn fold_weighted_members(
+    b: usize,
+    cluster: &Cluster,
+    weights: &[f64],
+    smat: &SMatrix,
+    scratch: &mut DwtScratch,
+) {
+    let n = 2 * b;
+    for (mi, member) in cluster.members.iter().enumerate() {
+        let s = smat.vec(member.m, member.mp);
+        let t = &mut scratch.t[mi * n..(mi + 1) * n];
+        let (tp, tm) = t.split_at_mut(b);
+        for j in 0..b {
+            let lo = s[j].scale(weights[j]);
+            let hi = s[n - 1 - j].scale(weights[n - 1 - j]);
+            tp[j] = lo + hi;
+            tm[j] = lo - hi;
+        }
+    }
+}
+
+/// Fold a full 2B-node row into its symmetric/antisymmetric halves:
+/// `fold[j] = row[j] + row[2B−1−j]`, `fold[B+j] = row[j] − row[2B−1−j]`
+/// for j < B (`fold.len() == 2B`).
+#[inline]
+fn fold_row(b: usize, row: &[f64], fold: &mut [f64]) {
+    let n = 2 * b;
+    for j in 0..b {
+        fold[j] = row[j] + row[n - 1 - j];
+        fold[b + j] = row[j] - row[n - 1 - j];
+    }
+}
+
+/// Half-length complex·real dot: `Σ_{j<B} t[j]·r[j]` with f64 `mul_add`
+/// accumulators (stable-Rust autovectorizable).
+#[inline]
+fn dot_half(t: &[Complex64], r: &[f64]) -> Complex64 {
+    let mut re = 0.0f64;
+    let mut im = 0.0f64;
+    for (v, &x) in t.iter().zip(r.iter()) {
+        re = v.re.mul_add(x, re);
+        im = v.im.mul_add(x, im);
+    }
+    Complex64::new(re, im)
+}
+
+/// Forward DWT for one cluster, folded, fed by a generic [`WignerSource`]
+/// (the on-the-fly path, non-canonical singleton clusters, and the
+/// extended-precision variants' double sibling). Rows are produced in
+/// full and folded per degree; exactness does not depend on any row
+/// parity, so this kernel serves every cluster shape.
+///
+/// # Safety contract
+/// Same as [`super::kernels::forward_cluster`]: `out` writes are
+/// cluster-exclusive (l, μ, μ') triples.
+pub fn forward_cluster_folded(
+    b: usize,
+    cluster: &Cluster,
+    source: &mut dyn WignerSource,
+    weights: &[f64],
+    smat: &SMatrix,
+    out: &SyncUnsafeSlice<'_, Complex64>,
+    scratch: &mut DwtScratch,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    fold_weighted_members(b, cluster, weights, smat, scratch);
+    source.reset(cluster.m, cluster.mp);
+    for l in l0..b {
+        {
+            let row = source.row(l, &mut scratch.row);
+            fold_row(b, row, &mut scratch.fold[..n]);
+        }
+        let (e, o) = scratch.fold[..n].split_at(b);
+        let vs = v_scale(l, b);
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let t = &scratch.t[mi * n..(mi + 1) * n];
+            let acc_e = dot_half(&t[..b], e);
+            let acc_o = dot_half(&t[b..], o);
+            let acc = if member.reflected {
+                acc_e - acc_o
+            } else {
+                acc_e + acc_o
+            };
+            let value = acc.scale(0.5 * vs * member.sign(l));
+            let idx = coeffs::flat_index(l, member.m, member.mp);
+            // SAFETY: (l, μ, μ') triples are cluster-exclusive.
+            unsafe { out.write(idx, value) };
+        }
+    }
+}
+
+/// Forward DWT for one canonical cluster against the folded tables — the
+/// hot path. Parity clusters contract one σ-selected half per degree
+/// (half FLOPs); general clusters run the [`DEG_BLOCK`]-degree
+/// register-blocked micro-kernel over zero-copy E slices and a
+/// reconstructed O block.
+pub fn forward_cluster_folded_tables(
+    b: usize,
+    cluster: &Cluster,
+    tables: &WignerTables,
+    weights: &[f64],
+    smat: &SMatrix,
+    out: &SyncUnsafeSlice<'_, Complex64>,
+    scratch: &mut DwtScratch,
+) {
+    debug_assert!(cluster.m >= cluster.mp && cluster.mp >= 0);
+    debug_assert_eq!(tables.bandwidth(), b);
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    fold_weighted_members(b, cluster, weights, smat, scratch);
+
+    if let Some(sigma0) = cluster.beta_parity() {
+        // Parity fast path: half the FLOPs — one half-dot per member
+        // per degree, selected by σ(l) = σ₀·(−1)^l. No ½: the half row
+        // is the literal row, not a folded sum.
+        for l in l0..b {
+            let h = tables.half_row(cluster.m, l);
+            let even = sigma0 * parity_sign(l as i64) > 0.0;
+            let vs = v_scale(l, b);
+            for (mi, member) in cluster.members.iter().enumerate() {
+                debug_assert!(!member.reflected, "parity clusters are all-direct");
+                let t = &scratch.t[mi * n..(mi + 1) * n];
+                let acc = if even {
+                    dot_half(&t[..b], h)
+                } else {
+                    dot_half(&t[b..], h)
+                };
+                let value = acc.scale(vs * member.sign(l));
+                let idx = coeffs::flat_index(l, member.m, member.mp);
+                // SAFETY: (l, μ, μ') triples are cluster-exclusive.
+                unsafe { out.write(idx, value) };
+            }
+        }
+        return;
+    }
+
+    if scratch.oblock.len() < DEG_BLOCK * b {
+        scratch.oblock.resize(DEG_BLOCK * b, 0.0);
+    }
+    let mut l = l0;
+    while l < b {
+        let nb = DEG_BLOCK.min(b - l);
+        for k in 0..nb {
+            tables.recon_o_into(
+                cluster.m,
+                cluster.mp,
+                l + k,
+                &mut scratch.oblock[k * b..(k + 1) * b],
+            );
+        }
+        if nb == DEG_BLOCK {
+            let e = [
+                tables.e_row(cluster.m, cluster.mp, l),
+                tables.e_row(cluster.m, cluster.mp, l + 1),
+                tables.e_row(cluster.m, cluster.mp, l + 2),
+                tables.e_row(cluster.m, cluster.mp, l + 3),
+            ];
+            let o = &scratch.oblock;
+            for (mi, member) in cluster.members.iter().enumerate() {
+                let t = &scratch.t[mi * n..(mi + 1) * n];
+                let (tp, tm) = t.split_at(b);
+                // 4 degrees × (E, O) × (re, im) = 16 mul_add chains; t±
+                // is loaded once per four degrees instead of re-scanned
+                // per degree.
+                let mut er = [0.0f64; DEG_BLOCK];
+                let mut ei = [0.0f64; DEG_BLOCK];
+                let mut or = [0.0f64; DEG_BLOCK];
+                let mut oi = [0.0f64; DEG_BLOCK];
+                for j in 0..b {
+                    let pr = tp[j].re;
+                    let pi = tp[j].im;
+                    let qr = tm[j].re;
+                    let qi = tm[j].im;
+                    for k in 0..DEG_BLOCK {
+                        er[k] = pr.mul_add(e[k][j], er[k]);
+                        ei[k] = pi.mul_add(e[k][j], ei[k]);
+                        or[k] = qr.mul_add(o[k * b + j], or[k]);
+                        oi[k] = qi.mul_add(o[k * b + j], oi[k]);
+                    }
+                }
+                for k in 0..DEG_BLOCK {
+                    let lk = l + k;
+                    let acc = if member.reflected {
+                        Complex64::new(er[k] - or[k], ei[k] - oi[k])
+                    } else {
+                        Complex64::new(er[k] + or[k], ei[k] + oi[k])
+                    };
+                    let value = acc.scale(0.5 * v_scale(lk, b) * member.sign(lk));
+                    let idx = coeffs::flat_index(lk, member.m, member.mp);
+                    // SAFETY: (l, μ, μ') triples are cluster-exclusive.
+                    unsafe { out.write(idx, value) };
+                }
+            }
+        } else {
+            for k in 0..nb {
+                let lk = l + k;
+                let e = tables.e_row(cluster.m, cluster.mp, lk);
+                let o = &scratch.oblock[k * b..(k + 1) * b];
+                let vs = v_scale(lk, b);
+                for (mi, member) in cluster.members.iter().enumerate() {
+                    let t = &scratch.t[mi * n..(mi + 1) * n];
+                    let acc_e = dot_half(&t[..b], e);
+                    let acc_o = dot_half(&t[b..], o);
+                    let acc = if member.reflected {
+                        acc_e - acc_o
+                    } else {
+                        acc_e + acc_o
+                    };
+                    let value = acc.scale(0.5 * vs * member.sign(lk));
+                    let idx = coeffs::flat_index(lk, member.m, member.mp);
+                    // SAFETY: (l, μ, μ') triples are cluster-exclusive.
+                    unsafe { out.write(idx, value) };
+                }
+            }
+        }
+        l += nb;
+    }
+}
+
+/// Extended-precision folded forward (double-double accumulation over
+/// the folded halves). Source-fed; the executor always feeds it exact
+/// streamed rows (it builds no folded tables for the extended + folded
+/// combo — reconstructed O halves would defeat double-double
+/// accumulation; docs/PERF.md).
+pub fn forward_cluster_folded_extended(
+    b: usize,
+    cluster: &Cluster,
+    source: &mut dyn WignerSource,
+    weights: &[f64],
+    smat: &SMatrix,
+    out: &SyncUnsafeSlice<'_, Complex64>,
+    scratch: &mut DwtScratch,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    fold_weighted_members(b, cluster, weights, smat, scratch);
+    source.reset(cluster.m, cluster.mp);
+    for l in l0..b {
+        {
+            let row = source.row(l, &mut scratch.row);
+            fold_row(b, row, &mut scratch.fold[..n]);
+        }
+        let (e, o) = scratch.fold[..n].split_at(b);
+        let vs = v_scale(l, b);
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let t = &scratch.t[mi * n..(mi + 1) * n];
+            let mut acc_e = DdComplex::ZERO;
+            let mut acc_o = DdComplex::ZERO;
+            for j in 0..b {
+                acc_e.acc_scaled(t[j].re, t[j].im, e[j]);
+                acc_o.acc_scaled(t[b + j].re, t[b + j].im, o[j]);
+            }
+            let (re, im) = if member.reflected {
+                (
+                    (acc_e.re - acc_o.re).to_f64(),
+                    (acc_e.im - acc_o.im).to_f64(),
+                )
+            } else {
+                (
+                    (acc_e.re + acc_o.re).to_f64(),
+                    (acc_e.im + acc_o.im).to_f64(),
+                )
+            };
+            let value = Complex64::new(re, im).scale(0.5 * vs * member.sign(l));
+            let idx = coeffs::flat_index(l, member.m, member.mp);
+            // SAFETY: (l, μ, μ') triples are cluster-exclusive.
+            unsafe { out.write(idx, value) };
+        }
+    }
+}
+
+/// Scatter one member's folded accumulator pair (u | v) into the
+/// S-matrix, unfolding `t[j] = ½(u+v)`, `t[2B−1−j] = ½(u−v)`; a
+/// reflected member swaps the two targets (the unfold absorbs its
+/// j-reversal).
+#[inline]
+fn scatter_unfolded(
+    b: usize,
+    u: &[Complex64],
+    v: &[Complex64],
+    reflected: bool,
+    base: usize,
+    smat_out: &SyncUnsafeSlice<'_, Complex64>,
+) {
+    let n = 2 * b;
+    for j in 0..b {
+        let lo = (u[j] + v[j]).scale(0.5);
+        let hi = (u[j] - v[j]).scale(0.5);
+        let (a, z) = if reflected { (hi, lo) } else { (lo, hi) };
+        // SAFETY: each (μ, μ') j-vector belongs to exactly one cluster.
+        unsafe {
+            smat_out.write(base + j, a);
+            smat_out.write(base + n - 1 - j, z);
+        }
+    }
+}
+
+/// Inverse DWT for one cluster, folded, fed by a generic
+/// [`WignerSource`].
+pub fn inverse_cluster_folded(
+    b: usize,
+    cluster: &Cluster,
+    source: &mut dyn WignerSource,
+    coeff_data: &[Complex64],
+    smat_out: &SyncUnsafeSlice<'_, Complex64>,
+    smat_layout: &SMatrix,
+    scratch: &mut DwtScratch,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    let nm = cluster.members.len();
+    for t in scratch.t[..nm * n].iter_mut() {
+        *t = Complex64::zero();
+    }
+    source.reset(cluster.m, cluster.mp);
+    for l in l0..b {
+        {
+            let row = source.row(l, &mut scratch.row);
+            fold_row(b, row, &mut scratch.fold[..n]);
+        }
+        let (e, o) = scratch.fold[..n].split_at(b);
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let c = coeff_data[coeffs::flat_index(l, member.m, member.mp)]
+                .scale(member.sign(l));
+            let t = &mut scratch.t[mi * n..(mi + 1) * n];
+            let (u, v) = t.split_at_mut(b);
+            for j in 0..b {
+                u[j] += c.scale(e[j]);
+                v[j] += c.scale(o[j]);
+            }
+        }
+    }
+    for (mi, member) in cluster.members.iter().enumerate() {
+        let t = &scratch.t[mi * n..(mi + 1) * n];
+        let base = smat_layout.vec_index(member.m, member.mp);
+        scatter_unfolded(b, &t[..b], &t[b..], member.reflected, base, smat_out);
+    }
+}
+
+/// Inverse DWT for one canonical cluster against the folded tables,
+/// register-blocked over [`DEG_BLOCK`] degrees: the (u | v) accumulators
+/// are loaded and stored once per block instead of once per degree.
+pub fn inverse_cluster_folded_tables(
+    b: usize,
+    cluster: &Cluster,
+    tables: &WignerTables,
+    coeff_data: &[Complex64],
+    smat_out: &SyncUnsafeSlice<'_, Complex64>,
+    smat_layout: &SMatrix,
+    scratch: &mut DwtScratch,
+) {
+    debug_assert!(cluster.m >= cluster.mp && cluster.mp >= 0);
+    debug_assert_eq!(tables.bandwidth(), b);
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    let nm = cluster.members.len();
+    for t in scratch.t[..nm * n].iter_mut() {
+        *t = Complex64::zero();
+    }
+
+    if let Some(sigma0) = cluster.beta_parity() {
+        // Parity path: accumulate u (plain) and v (σ-signed) directly
+        // from the half rows — half the table stream, and the unfold is
+        // the identity (u, v are the literal halves of t).
+        for l in l0..b {
+            let h = tables.half_row(cluster.m, l);
+            let sig = sigma0 * parity_sign(l as i64);
+            for (mi, member) in cluster.members.iter().enumerate() {
+                debug_assert!(!member.reflected);
+                let c = coeff_data[coeffs::flat_index(l, member.m, member.mp)]
+                    .scale(member.sign(l));
+                let cs = c.scale(sig);
+                let t = &mut scratch.t[mi * n..(mi + 1) * n];
+                let (u, v) = t.split_at_mut(b);
+                for j in 0..b {
+                    u[j] += c.scale(h[j]);
+                    v[j] += cs.scale(h[j]);
+                }
+            }
+        }
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let t = &scratch.t[mi * n..(mi + 1) * n];
+            let base = smat_layout.vec_index(member.m, member.mp);
+            for j in 0..b {
+                // SAFETY: each (μ, μ') j-vector belongs to one cluster.
+                unsafe {
+                    smat_out.write(base + j, t[j]);
+                    smat_out.write(base + n - 1 - j, t[b + j]);
+                }
+            }
+        }
+        return;
+    }
+
+    if scratch.oblock.len() < DEG_BLOCK * b {
+        scratch.oblock.resize(DEG_BLOCK * b, 0.0);
+    }
+    let mut l = l0;
+    while l < b {
+        let nb = DEG_BLOCK.min(b - l);
+        for k in 0..nb {
+            tables.recon_o_into(
+                cluster.m,
+                cluster.mp,
+                l + k,
+                &mut scratch.oblock[k * b..(k + 1) * b],
+            );
+        }
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let mut c = [Complex64::zero(); DEG_BLOCK];
+            for (k, ck) in c.iter_mut().enumerate().take(nb) {
+                let lk = l + k;
+                *ck = coeff_data[coeffs::flat_index(lk, member.m, member.mp)]
+                    .scale(member.sign(lk));
+            }
+            let t = &mut scratch.t[mi * n..(mi + 1) * n];
+            let (u, v) = t.split_at_mut(b);
+            if nb == DEG_BLOCK {
+                let e = [
+                    tables.e_row(cluster.m, cluster.mp, l),
+                    tables.e_row(cluster.m, cluster.mp, l + 1),
+                    tables.e_row(cluster.m, cluster.mp, l + 2),
+                    tables.e_row(cluster.m, cluster.mp, l + 3),
+                ];
+                let o = &scratch.oblock;
+                for j in 0..b {
+                    let mut ur = u[j].re;
+                    let mut ui = u[j].im;
+                    let mut vr = v[j].re;
+                    let mut vi = v[j].im;
+                    for k in 0..DEG_BLOCK {
+                        ur = c[k].re.mul_add(e[k][j], ur);
+                        ui = c[k].im.mul_add(e[k][j], ui);
+                        vr = c[k].re.mul_add(o[k * b + j], vr);
+                        vi = c[k].im.mul_add(o[k * b + j], vi);
+                    }
+                    u[j] = Complex64::new(ur, ui);
+                    v[j] = Complex64::new(vr, vi);
+                }
+            } else {
+                for (k, &ck) in c.iter().enumerate().take(nb) {
+                    let e = tables.e_row(cluster.m, cluster.mp, l + k);
+                    let o = &scratch.oblock[k * b..(k + 1) * b];
+                    for j in 0..b {
+                        u[j] += ck.scale(e[j]);
+                        v[j] += ck.scale(o[j]);
+                    }
+                }
+            }
+        }
+        l += nb;
+    }
+    for (mi, member) in cluster.members.iter().enumerate() {
+        let t = &scratch.t[mi * n..(mi + 1) * n];
+        let base = smat_layout.vec_index(member.m, member.mp);
+        scatter_unfolded(b, &t[..b], &t[b..], member.reflected, base, smat_out);
+    }
+}
+
+/// Extended-precision folded inverse (double-double (u | v)
+/// accumulators).
+pub fn inverse_cluster_folded_extended(
+    b: usize,
+    cluster: &Cluster,
+    source: &mut dyn WignerSource,
+    coeff_data: &[Complex64],
+    smat_out: &SyncUnsafeSlice<'_, Complex64>,
+    smat_layout: &SMatrix,
+    scratch: &mut DwtScratch,
+) {
+    let n = 2 * b;
+    let l0 = cluster.l_min();
+    let nm = cluster.members.len();
+    scratch.xacc.clear();
+    scratch.xacc.resize(nm * n, DdComplex::ZERO);
+    source.reset(cluster.m, cluster.mp);
+    for l in l0..b {
+        {
+            let row = source.row(l, &mut scratch.row);
+            fold_row(b, row, &mut scratch.fold[..n]);
+        }
+        let (e, o) = scratch.fold[..n].split_at(b);
+        for (mi, member) in cluster.members.iter().enumerate() {
+            let c = coeff_data[coeffs::flat_index(l, member.m, member.mp)]
+                .scale(member.sign(l));
+            let acc = &mut scratch.xacc[mi * n..(mi + 1) * n];
+            let (u, v) = acc.split_at_mut(b);
+            for j in 0..b {
+                u[j].acc_scaled(c.re, c.im, e[j]);
+                v[j].acc_scaled(c.re, c.im, o[j]);
+            }
+        }
+    }
+    for (mi, member) in cluster.members.iter().enumerate() {
+        let acc = &scratch.xacc[mi * n..(mi + 1) * n];
+        let (u, v) = acc.split_at(b);
+        let base = smat_layout.vec_index(member.m, member.mp);
+        for j in 0..b {
+            let lo = Complex64::new(
+                (u[j].re + v[j].re).to_f64() * 0.5,
+                (u[j].im + v[j].im).to_f64() * 0.5,
+            );
+            let hi = Complex64::new(
+                (u[j].re - v[j].re).to_f64() * 0.5,
+                (u[j].im - v[j].im).to_f64() * 0.5,
+            );
+            let (a, z) = if member.reflected { (hi, lo) } else { (lo, hi) };
+            // SAFETY: each (μ, μ') j-vector belongs to exactly one cluster.
+            unsafe {
+                smat_out.write(base + j, a);
+                smat_out.write(base + n - 1 - j, z);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dwt::kernels::{
+        forward_cluster, forward_cluster_extended, inverse_cluster, inverse_cluster_extended,
+    };
+    use crate::dwt::tables::OnTheFlySource;
+    use crate::prng::Xoshiro256;
+    use crate::so3::coeffs::{coeff_count, So3Coeffs};
+    use crate::so3::quadrature;
+    use crate::so3::sampling::GridAngles;
+
+    fn random_smat(b: usize, seed: u64) -> SMatrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut smat = SMatrix::zeros(b).unwrap();
+        for v in smat.as_mut_slice().iter_mut() {
+            *v = Complex64::new(rng.next_signed(), rng.next_signed());
+        }
+        smat
+    }
+
+    fn cluster_shapes(b: usize) -> Vec<Cluster> {
+        let bi = b as i64;
+        let mut shapes = vec![
+            Cluster::symmetric(0, 0),
+            Cluster::symmetric(1, 0),
+            Cluster::symmetric(bi - 1, 0),
+            Cluster::symmetric(1, 1),
+            Cluster::symmetric(bi - 1, bi - 1),
+            Cluster::symmetric(2, 1),
+            Cluster::symmetric(bi - 1, 1),
+            Cluster::symmetric(bi / 2, bi / 4),
+        ];
+        // Non-canonical singletons (the no-symmetry ablation).
+        shapes.push(Cluster::singleton(-(bi / 2), 1));
+        shapes.push(Cluster::singleton(2, -(bi - 1)));
+        shapes
+    }
+
+    /// Every folded forward kernel matches the matvec baseline on every
+    /// cluster shape — including the degree-block tail (l₀ near B) and
+    /// the parity fast path.
+    #[test]
+    fn folded_forward_matches_baseline_all_shapes() {
+        for b in [4usize, 8, 13] {
+            let angles = GridAngles::new(b).unwrap();
+            let weights = quadrature::weights(b).unwrap();
+            let smat = random_smat(b, 40 + b as u64);
+            let tables = WignerTables::build(b, &angles.betas);
+            let mut scratch = DwtScratch::new(b);
+            let mut want = vec![Complex64::zero(); coeff_count(b)];
+            let mut got = vec![Complex64::zero(); coeff_count(b)];
+            for cluster in cluster_shapes(b) {
+                {
+                    let shared = SyncUnsafeSlice::new(&mut want);
+                    let mut src = OnTheFlySource::new(&angles.betas);
+                    forward_cluster(b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch);
+                }
+                let canonical = cluster.m >= cluster.mp && cluster.mp >= 0;
+                {
+                    let shared = SyncUnsafeSlice::new(&mut got);
+                    if canonical {
+                        forward_cluster_folded_tables(
+                            b, &cluster, &tables, &weights, &smat, &shared, &mut scratch,
+                        );
+                    } else {
+                        let mut src = OnTheFlySource::new(&angles.betas);
+                        forward_cluster_folded(
+                            b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch,
+                        );
+                    }
+                }
+                for member in &cluster.members {
+                    for l in cluster.l_min()..b {
+                        let i = coeffs::flat_index(l, member.m, member.mp);
+                        assert!(
+                            (want[i] - got[i]).abs() < 1e-13,
+                            "b={b} base=({},{}) member=({},{}) l={l}: {} vs {}",
+                            cluster.m,
+                            cluster.mp,
+                            member.m,
+                            member.mp,
+                            got[i],
+                            want[i]
+                        );
+                    }
+                }
+                // The source-fed folded kernel agrees too (all shapes).
+                {
+                    let shared = SyncUnsafeSlice::new(&mut got);
+                    let mut src = OnTheFlySource::new(&angles.betas);
+                    forward_cluster_folded(
+                        b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch,
+                    );
+                }
+                for member in &cluster.members {
+                    for l in cluster.l_min()..b {
+                        let i = coeffs::flat_index(l, member.m, member.mp);
+                        assert!((want[i] - got[i]).abs() < 1e-13);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn folded_inverse_matches_baseline_all_shapes() {
+        for b in [4usize, 8, 13] {
+            let angles = GridAngles::new(b).unwrap();
+            let coeffs_in = So3Coeffs::random(b, 50 + b as u64);
+            let tables = WignerTables::build(b, &angles.betas);
+            let layout = SMatrix::zeros(b).unwrap();
+            let mut scratch = DwtScratch::new(b);
+            let mut want = SMatrix::zeros(b).unwrap();
+            let mut got = SMatrix::zeros(b).unwrap();
+            for cluster in cluster_shapes(b) {
+                {
+                    let shared = SyncUnsafeSlice::new(want.as_mut_slice());
+                    let mut src = OnTheFlySource::new(&angles.betas);
+                    inverse_cluster(
+                        b, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout,
+                        &mut scratch,
+                    );
+                }
+                let canonical = cluster.m >= cluster.mp && cluster.mp >= 0;
+                {
+                    let shared = SyncUnsafeSlice::new(got.as_mut_slice());
+                    if canonical {
+                        inverse_cluster_folded_tables(
+                            b, &cluster, &tables, coeffs_in.as_slice(), &shared, &layout,
+                            &mut scratch,
+                        );
+                    } else {
+                        let mut src = OnTheFlySource::new(&angles.betas);
+                        inverse_cluster_folded(
+                            b, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout,
+                            &mut scratch,
+                        );
+                    }
+                }
+                for member in &cluster.members {
+                    let a = want.vec(member.m, member.mp);
+                    let c = got.vec(member.m, member.mp);
+                    for (j, (x, y)) in a.iter().zip(c.iter()).enumerate() {
+                        assert!(
+                            (*x - *y).abs() < 1e-12,
+                            "b={b} base=({},{}) member=({},{}) j={j}",
+                            cluster.m,
+                            cluster.mp,
+                            member.m,
+                            member.mp
+                        );
+                    }
+                }
+                // Source-fed folded inverse agrees as well.
+                {
+                    let shared = SyncUnsafeSlice::new(got.as_mut_slice());
+                    let mut src = OnTheFlySource::new(&angles.betas);
+                    inverse_cluster_folded(
+                        b, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout,
+                        &mut scratch,
+                    );
+                }
+                for member in &cluster.members {
+                    let a = want.vec(member.m, member.mp);
+                    let c = got.vec(member.m, member.mp);
+                    for (x, y) in a.iter().zip(c.iter()) {
+                        assert!((*x - *y).abs() < 1e-13);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn folded_extended_matches_baseline_extended() {
+        let b = 8usize;
+        let angles = GridAngles::new(b).unwrap();
+        let weights = quadrature::weights(b).unwrap();
+        let smat = random_smat(b, 60);
+        let coeffs_in = So3Coeffs::random(b, 61);
+        let layout = SMatrix::zeros(b).unwrap();
+        let mut scratch = DwtScratch::new(b);
+        for cluster in [
+            Cluster::symmetric(0, 0),
+            Cluster::symmetric(3, 0),
+            Cluster::symmetric(4, 2),
+            Cluster::symmetric(5, 5),
+        ] {
+            let mut want = vec![Complex64::zero(); coeff_count(b)];
+            let mut got = vec![Complex64::zero(); coeff_count(b)];
+            {
+                let shared = SyncUnsafeSlice::new(&mut want);
+                let mut src = OnTheFlySource::new(&angles.betas);
+                forward_cluster_extended(
+                    b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch,
+                );
+            }
+            {
+                let shared = SyncUnsafeSlice::new(&mut got);
+                let mut src = OnTheFlySource::new(&angles.betas);
+                forward_cluster_folded_extended(
+                    b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch,
+                );
+            }
+            for member in &cluster.members {
+                for l in cluster.l_min()..b {
+                    let i = coeffs::flat_index(l, member.m, member.mp);
+                    assert!((want[i] - got[i]).abs() < 1e-13);
+                }
+            }
+            let mut s_want = SMatrix::zeros(b).unwrap();
+            let mut s_got = SMatrix::zeros(b).unwrap();
+            {
+                let shared = SyncUnsafeSlice::new(s_want.as_mut_slice());
+                let mut src = OnTheFlySource::new(&angles.betas);
+                inverse_cluster_extended(
+                    b, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout, &mut scratch,
+                );
+            }
+            {
+                let shared = SyncUnsafeSlice::new(s_got.as_mut_slice());
+                let mut src = OnTheFlySource::new(&angles.betas);
+                inverse_cluster_folded_extended(
+                    b, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout, &mut scratch,
+                );
+            }
+            for member in &cluster.members {
+                let a = s_want.vec(member.m, member.mp);
+                let c = s_got.vec(member.m, member.mp);
+                for (x, y) in a.iter().zip(c.iter()) {
+                    assert!((*x - *y).abs() < 1e-13);
+                }
+            }
+        }
+    }
+
+    /// b = 1 exercises the degenerate single-node fold (the (0,0) parity
+    /// cluster with one β pair).
+    #[test]
+    fn folded_handles_bandwidth_one() {
+        let b = 1usize;
+        let angles = GridAngles::new(b).unwrap();
+        let weights = quadrature::weights(b).unwrap();
+        let smat = random_smat(b, 70);
+        let tables = WignerTables::build(b, &angles.betas);
+        let cluster = Cluster::symmetric(0, 0);
+        let mut scratch = DwtScratch::new(b);
+        let mut want = vec![Complex64::zero(); coeff_count(b)];
+        let mut got = vec![Complex64::zero(); coeff_count(b)];
+        {
+            let shared = SyncUnsafeSlice::new(&mut want);
+            let mut src = OnTheFlySource::new(&angles.betas);
+            forward_cluster(b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch);
+        }
+        {
+            let shared = SyncUnsafeSlice::new(&mut got);
+            forward_cluster_folded_tables(
+                b, &cluster, &tables, &weights, &smat, &shared, &mut scratch,
+            );
+        }
+        assert!((want[0] - got[0]).abs() < 1e-15);
+    }
+}

@@ -1,11 +1,12 @@
-//! Cluster-at-a-time DWT/iDWT kernels (matvec dataflow).
+//! Cluster-at-a-time DWT/iDWT kernels (matvec dataflow) — the measurable
+//! baseline for the β-parity-folded default engine in [`super::folded`].
 //!
 //! One call processes one symmetry cluster: the Wigner-d base rows are
-//! produced once — streamed from the three-term recurrence or read from a
-//! precomputed table — and applied to all ≤8 members. Reflected members
-//! are handled by pre-reversing their j-vectors (forward) or by writing
-//! through a reversed view (inverse), so the inner loops are always unit
-//! stride.
+//! produced once — streamed from the three-term recurrence or unfolded
+//! from the half-row tables — and applied to all ≤8 members. Reflected
+//! members are handled by pre-reversing their j-vectors (forward) or by
+//! writing through a reversed view (inverse), so the inner loops are
+//! always unit stride.
 //!
 //! All writes land in caller-provided buffers at cluster-exclusive
 //! locations; the parallel executor exploits this for lock-free output
@@ -21,23 +22,55 @@ use crate::xprec::DdComplex;
 
 /// Per-worker scratch for the DWT kernels (allocated once, reused across
 /// clusters). Sized for the worst case: 8 members × 2B nodes.
-#[derive(Debug, Clone)]
+///
+/// The buffers are capacities, not exact sizes: every kernel slices by
+/// its own bandwidth, so one scratch serves any plan with
+/// `b <= capacity` — [`Self::ensure`] grows (never shrinks) it, letting
+/// mixed-bandwidth plans share a worker's scratch without reallocating
+/// on each bandwidth switch.
+#[derive(Debug, Clone, Default)]
 pub struct DwtScratch {
     /// Weighted (forward) or accumulated (inverse) member j-vectors.
+    /// The folded kernels overlay the same storage as per-member
+    /// (t⁺ | t⁻) half-vector pairs.
     pub t: Vec<Complex64>,
     /// Row buffer when reading from a table source.
     pub row: Vec<f64>,
+    /// Folded row halves (E | O) for the source-fed folded kernels.
+    pub fold: Vec<f64>,
+    /// Reconstructed O-row block for the register-blocked table kernels
+    /// (lazily sized to `DEG_BLOCK · B`).
+    pub oblock: Vec<f64>,
     /// Extended-precision accumulators (lazily sized).
     pub xacc: Vec<DdComplex>,
 }
 
 impl DwtScratch {
     pub fn new(b: usize) -> Self {
-        Self {
-            t: vec![Complex64::zero(); 8 * 2 * b],
-            row: vec![0.0; 2 * b],
-            xacc: Vec::new(),
+        let mut s = Self::default();
+        s.ensure(b);
+        s
+    }
+
+    /// Grow the scratch to serve bandwidth `b` (no-op when it already
+    /// does). Growth is monotone: capacity is the max bandwidth seen.
+    pub fn ensure(&mut self, b: usize) {
+        let n = 2 * b;
+        if self.t.len() < 8 * n {
+            self.t.resize(8 * n, Complex64::zero());
         }
+        if self.row.len() < n {
+            self.row.resize(n, 0.0);
+        }
+        if self.fold.len() < n {
+            self.fold.resize(n, 0.0);
+        }
+        // `oblock`/`xacc` are sized lazily by the kernels that use them.
+    }
+
+    /// The largest bandwidth this scratch currently serves.
+    pub fn capacity(&self) -> usize {
+        self.t.len() / 16
     }
 }
 
@@ -176,68 +209,6 @@ pub fn inverse_cluster(
             for j in 0..n {
                 t[j] += c.scale(row[j]);
             }
-        }
-    }
-    for (mi, member) in cluster.members.iter().enumerate() {
-        let t = &scratch.t[mi * n..(mi + 1) * n];
-        let base = smat_layout.vec_index(member.m, member.mp);
-        for j in 0..n {
-            let src = if member.reflected { n - 1 - j } else { j };
-            // SAFETY: each (μ, μ') j-vector belongs to exactly one cluster.
-            unsafe { smat_out.write(base + j, t[src]) };
-        }
-    }
-}
-
-/// Tables-path inverse DWT with two degrees fused per sweep.
-///
-/// The plain inverse axpy does one load+store of the member accumulator
-/// per (l, j) pair; with precomputed tables both row l and row l+1 are
-/// available, so fusing `t[j] += c_l·d_l[j] + c_{l+1}·d_{l+1}[j]` halves
-/// the store traffic — the inverse kernel is store-bound (EXPERIMENTS.md
-/// §Perf records the effect).
-pub fn inverse_cluster_tables_fused(
-    b: usize,
-    cluster: &Cluster,
-    tables: &crate::dwt::tables::WignerTables,
-    coeff_data: &[Complex64],
-    smat_out: &SyncUnsafeSlice<'_, Complex64>,
-    smat_layout: &SMatrix,
-    scratch: &mut DwtScratch,
-) {
-    let n = 2 * b;
-    let l0 = cluster.l_min();
-    let nm = cluster.members.len();
-    for v in scratch.t[..nm * n].iter_mut() {
-        *v = Complex64::zero();
-    }
-    let mut l = l0;
-    while l < b {
-        if l + 1 < b {
-            let row0 = tables.row(cluster.m, cluster.mp, l);
-            let row1 = tables.row(cluster.m, cluster.mp, l + 1);
-            for (mi, member) in cluster.members.iter().enumerate() {
-                let c0 = coeff_data[coeffs::flat_index(l, member.m, member.mp)]
-                    .scale(member.sign(l));
-                let c1 = coeff_data[coeffs::flat_index(l + 1, member.m, member.mp)]
-                    .scale(member.sign(l + 1));
-                let t = &mut scratch.t[mi * n..(mi + 1) * n];
-                for j in 0..n {
-                    t[j] += c0.scale(row0[j]) + c1.scale(row1[j]);
-                }
-            }
-            l += 2;
-        } else {
-            let row0 = tables.row(cluster.m, cluster.mp, l);
-            for (mi, member) in cluster.members.iter().enumerate() {
-                let c0 = coeff_data[coeffs::flat_index(l, member.m, member.mp)]
-                    .scale(member.sign(l));
-                let t = &mut scratch.t[mi * n..(mi + 1) * n];
-                for j in 0..n {
-                    t[j] += c0.scale(row0[j]);
-                }
-            }
-            l += 1;
         }
     }
     for (mi, member) in cluster.members.iter().enumerate() {
@@ -499,6 +470,45 @@ mod tests {
                         got[j]
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_grows_to_max_and_serves_smaller_bandwidths() {
+        let mut s = DwtScratch::new(16);
+        let len16 = s.t.len();
+        let ptr16 = s.t.as_ptr();
+        // Serving a smaller bandwidth is a no-op (no shrink, no realloc).
+        s.ensure(8);
+        assert_eq!(s.t.len(), len16);
+        assert_eq!(s.t.as_ptr(), ptr16);
+        assert_eq!(s.capacity(), 16);
+        s.ensure(32);
+        assert_eq!(s.capacity(), 32);
+        // An oversized scratch computes identical results at a smaller b.
+        let b = 6usize;
+        let angles = GridAngles::new(b).unwrap();
+        let weights = quadrature::weights(b).unwrap();
+        let smat = random_smat(b, 21);
+        let cluster = Cluster::symmetric(3, 2);
+        let mut out_small = vec![Complex64::zero(); crate::so3::coeffs::coeff_count(b)];
+        let mut out_big = out_small.clone();
+        let mut small = DwtScratch::new(b);
+        {
+            let shared = SyncUnsafeSlice::new(&mut out_small);
+            let mut src = OnTheFlySource::new(&angles.betas);
+            forward_cluster(b, &cluster, &mut src, &weights, &smat, &shared, &mut small);
+        }
+        {
+            let shared = SyncUnsafeSlice::new(&mut out_big);
+            let mut src = OnTheFlySource::new(&angles.betas);
+            forward_cluster(b, &cluster, &mut src, &weights, &smat, &shared, &mut s);
+        }
+        for member in &cluster.members {
+            for l in cluster.l_min()..b {
+                let i = coeffs::flat_index(l, member.m, member.mp);
+                assert_eq!(out_small[i], out_big[i]);
             }
         }
     }

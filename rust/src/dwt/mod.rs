@@ -14,15 +14,20 @@
 //!   Wigner-d evaluation via paper Eq. 3 (the paper's *communication /
 //!   agglomeration* design), with the m=0 / m'=0 / m=m' special cases.
 //! * [`kernels`] — the cluster-at-a-time forward/inverse kernels (matvec
-//!   dataflow, f64 and double-double variants).
+//!   dataflow, f64 and double-double variants) — the measurable baseline.
+//! * [`folded`] — the β-parity-folded, register-blocked kernels (the
+//!   default dataflow): member vectors and Wigner rows fold over the
+//!   reflection-symmetric β grid, halving table bytes/traffic and (for
+//!   the m' = 0 parity clusters) FLOPs.
 //! * [`clenshaw`] — the Clenshaw-recurrence dataflow (the paper's §5
 //!   "next version" improvement, implemented here as an extension).
-//! * [`tables`] — precomputed Wigner-d tables with symmetry-shared
-//!   storage (what the paper's benchmark build used), or on-the-fly
-//!   generation for memory-critical bandwidths.
+//! * [`tables`] — precomputed Wigner-d tables with symmetry-shared,
+//!   β-parity-folded half-row storage (half the pre-fold bytes), or
+//!   on-the-fly generation for memory-critical bandwidths.
 
 pub mod clenshaw;
 pub mod cluster;
+pub mod folded;
 pub mod kernels;
 pub mod tables;
 
@@ -38,9 +43,17 @@ pub fn v_scale(l: usize, b: usize) -> f64 {
 /// Which dataflow evaluates the DWT/iDWT.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DwtAlgorithm {
-    /// Row-wise matrix–vector products against Wigner-d rows (the paper's
-    /// benchmarked version; vectorizes over the ≤8 cluster members).
+    /// Row-wise matrix–vector products against full Wigner-d rows (the
+    /// paper's benchmarked version; vectorizes over the ≤8 cluster
+    /// members). Kept as the measurable baseline for
+    /// [`Self::MatVecFolded`], mirroring `FftEngine::Radix2Baseline`.
     MatVec,
+    /// β-parity-folded, register-blocked matvec (the default): member
+    /// vectors and Wigner rows are folded over the reflection-symmetric
+    /// β grid (`dwt::folded`), halving the precomputed-table bytes and
+    /// stream and — for the m' = 0 parity clusters — the FLOPs, with a
+    /// 4-degree register-blocked micro-kernel on the table path.
+    MatVecFolded,
     /// Clenshaw-recurrence dataflow (paper §5 outlook): no Wigner rows are
     /// materialized; the iDWT runs the classical Clenshaw downward
     /// recursion per β-node, the DWT its transposed (adjoint) form.

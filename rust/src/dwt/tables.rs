@@ -1,14 +1,40 @@
-//! Wigner-d row sources: precomputed tables vs. on-the-fly recurrence.
+//! Wigner-d row sources: β-parity-folded precomputed tables vs.
+//! on-the-fly recurrence.
 //!
 //! The paper's benchmark build precomputes the DWT matrices, exploiting
 //! all seven symmetries "in the precomputation of the matrices using the
 //! three-term recurrence relation". Symmetry-shared storage keeps only
 //! the base pairs m ≥ m' ≥ 0 (≈⅛ of the full table set) — exactly what
-//! the clusters need. At memory-critical bandwidths the same rows can be
-//! streamed from the recurrence instead ([`OnTheFlySource`]), trading
-//! ~2× arithmetic for O(B) instead of O(B⁴) memory.
+//! the clusters need. This module folds one level deeper: the K&R β-grid
+//! is reflection-symmetric (π − β_j = β_{2B−1−j}), so [`WignerTables`]
+//! stores only **half-length rows over j < B** — half the bytes of the
+//! full-row layout, doubling what fits under a given
+//! [`WignerStorage::auto`] budget:
+//!
+//! * **Parity bases (m' = 0).** The row itself has β-reflection parity,
+//!   `d(l, m, 0; π−β) = (−1)^{l+m} d(l, m, 0; β)`, so the half row
+//!   `H_l[j] = d(l, m, 0; β_j)` (j < B) *is* the full row.
+//! * **General bases (m' > 0).** The π−β symmetries map (m, m') to a
+//!   different order pair, so no same-row parity exists. Stored instead
+//!   is the symmetric half `E_l[j] = D_l[j] + D_l[2B−1−j]` for
+//!   l₀ ≤ l ≤ B (one guard degree past the spectrum). The antisymmetric
+//!   half `O_l[j] = D_l[j] − D_l[2B−1−j]` follows *exactly* from the
+//!   three-term recurrence (paper Eq. 2): cos β is odd under the node
+//!   reflection, so taking even parts of
+//!   `d_{l+1} = (a₁cosβ + a₂)d_l − a₃d_{l−1}` gives
+//!   `E_{l+1} = a₁cosβ·O_l + a₂E_l − a₃E_{l−1}`, i.e.
+//!   `O_l[j] = (E_{l+1}[j] − a₂E_l[j] + a₃E_{l−1}[j]) / (a₁ cos β_j)`.
+//!   cos β_j never vanishes on the grid (β_j = (2j+1)π/4B with 2j+1 odd,
+//!   2B even), and 1/(a₁ cos β_{B−1}) ≈ 4B/π bounds the rounding
+//!   amplification at O(B·ε) — ~1e-13 absolute at B = 512, documented in
+//!   docs/PERF.md (`storage = "onthefly"` streams exact rows when that
+//!   matters, e.g. strict extended-precision runs).
+//!
+//! At memory-critical bandwidths the same rows can be streamed from the
+//! recurrence instead ([`OnTheFlySource`]), trading ~2× arithmetic for
+//! O(B) instead of O(B⁴) memory.
 
-use crate::so3::wigner::WignerRowStepper;
+use crate::so3::wigner::{step_coeffs, WignerRowStepper};
 
 /// Abstract producer of base Wigner-d rows `d(l, m, m'; β_j)` for a fixed
 /// base pair, consumed degree-by-degree (l ascending from the cluster's
@@ -16,7 +42,7 @@ use crate::so3::wigner::WignerRowStepper;
 pub trait WignerSource {
     fn reset(&mut self, m: i64, mp: i64);
     /// The row at degree `l`; rows must be requested with l strictly
-    /// increasing between resets. `buf` (len 2B) may be used as backing
+    /// increasing between resets. `buf` (len ≥ 2B) may be used as backing
     /// storage; the returned slice is valid until the next call.
     fn row<'a>(&'a mut self, l: usize, buf: &'a mut [f64]) -> &'a [f64];
 }
@@ -59,15 +85,19 @@ impl WignerSource for OnTheFlySource<'_> {
     }
 }
 
-/// Precomputed symmetry-shared tables: rows for every base pair
-/// m ≥ m' ≥ 0, packed contiguously.
+/// Precomputed symmetry-shared, β-parity-folded tables: half-length rows
+/// for every base pair m ≥ m' ≥ 0, packed contiguously (see module docs
+/// for the per-base layout).
 #[derive(Debug, Clone)]
 pub struct WignerTables {
     b: usize,
-    /// Packed rows: for base (m, m'), degrees l₀..B−1, each row 2B long.
+    /// Packed half-rows: for base (m, m'), degrees l₀.. (B−1 for parity
+    /// bases, B for general bases — the guard degree), each row B long.
     data: Vec<f64>,
     /// Offset of base pair (m, m') in `data`.
     offsets: Vec<usize>,
+    /// 1/cos(β_j) for j < B — the O-row reconstruction divisors.
+    inv_cos: Vec<f64>,
 }
 
 /// Triangle index of a base pair m ≥ m' ≥ 0 (the paper's σ map, Eq. 7,
@@ -78,33 +108,52 @@ pub fn base_index(m: i64, mp: i64) -> usize {
     (m * (m + 1) / 2 + mp) as usize
 }
 
+/// Half-rows stored for base (m, m') at bandwidth b: B − l₀ for parity
+/// bases (m' = 0), B − l₀ + 1 for general bases (the E_B guard row).
+#[inline]
+fn rows_per_base(b: usize, m: usize, mp: usize) -> usize {
+    let l0 = m.max(mp);
+    if mp == 0 {
+        b - l0
+    } else {
+        b - l0 + 1
+    }
+}
+
 impl WignerTables {
     /// Total f64 slots needed for bandwidth `b` (diagnostics / memory
-    /// planning: ~B⁴/3 · 2 entries).
+    /// planning) — ~half of the pre-fold full-row layout (~B⁴/6 entries
+    /// instead of ~B⁴/3).
     pub fn storage_len(b: usize) -> usize {
         let mut total = 0;
         for m in 0..b {
             for mp in 0..=m {
-                let l0 = m.max(mp);
-                total += (b - l0) * 2 * b;
+                total += rows_per_base(b, m, mp) * b;
             }
         }
         total
     }
 
-    /// Build all base tables sequentially. (The parallel executor builds
-    /// them per-cluster on first touch instead; this constructor is for
-    /// the sequential transform and tests.)
+    /// Build all base tables sequentially. (The sequential transform and
+    /// tests use this constructor; plans build it at construction.)
+    /// `betas` must be the reflection-symmetric K&R grid
+    /// (π − β_j = β_{2B−1−j}) — the folding identity depends on it.
     pub fn build(b: usize, betas: &[f64]) -> Self {
         assert_eq!(betas.len(), 2 * b);
+        for j in 0..b {
+            assert!(
+                (betas[j] + betas[2 * b - 1 - j] - std::f64::consts::PI).abs() < 1e-9,
+                "folded tables require the reflection-symmetric β grid"
+            );
+        }
+        let n = 2 * b;
         let n_bases = b * (b + 1) / 2;
         let mut offsets = vec![0usize; n_bases + 1];
         let mut total = 0usize;
-        for m in 0..b as i64 {
+        for m in 0..b {
             for mp in 0..=m {
-                offsets[base_index(m, mp)] = total;
-                let l0 = m.max(mp) as usize;
-                total += (b - l0) * 2 * b;
+                offsets[base_index(m as i64, mp as i64)] = total;
+                total += rows_per_base(b, m, mp) * b;
             }
         }
         offsets[n_bases] = total;
@@ -112,16 +161,31 @@ impl WignerTables {
         for m in 0..b as i64 {
             for mp in 0..=m {
                 let off = offsets[base_index(m, mp)];
-                let l0 = m.max(mp) as usize;
+                let rows = rows_per_base(b, m as usize, mp as usize);
                 let mut stepper: WignerRowStepper<f64> = WignerRowStepper::new(m, mp, betas);
-                for (i, _l) in (l0..b).enumerate() {
+                for r in 0..rows {
                     let row = stepper.row();
-                    data[off + i * 2 * b..off + (i + 1) * 2 * b].copy_from_slice(row);
+                    let dst = &mut data[off + r * b..off + (r + 1) * b];
+                    if mp == 0 {
+                        // Parity base: the half row is the full row.
+                        dst.copy_from_slice(&row[..b]);
+                    } else {
+                        // General base: symmetric half E_l.
+                        for (j, d) in dst.iter_mut().enumerate() {
+                            *d = row[j] + row[n - 1 - j];
+                        }
+                    }
                     stepper.advance();
                 }
             }
         }
-        Self { b, data, offsets }
+        let inv_cos = betas[..b].iter().map(|&beta| 1.0 / beta.cos()).collect();
+        Self {
+            b,
+            data,
+            offsets,
+            inv_cos,
+        }
     }
 
     #[inline]
@@ -129,21 +193,108 @@ impl WignerTables {
         self.b
     }
 
-    /// Approximate memory footprint in bytes.
+    /// Approximate memory footprint in bytes — ~half the pre-fold layout
+    /// for the same bandwidth.
     pub fn bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<f64>()
+        (self.data.len() + self.inv_cos.len()) * std::mem::size_of::<f64>()
     }
 
-    /// Row for base pair (m, m') at degree l.
     #[inline]
-    pub fn row(&self, m: i64, mp: i64, l: usize) -> &[f64] {
+    fn base_slice(&self, m: i64, mp: i64, l: usize) -> &[f64] {
         let l0 = m.max(mp) as usize;
-        debug_assert!(l >= l0 && l < self.b);
-        let off = self.offsets[base_index(m, mp)] + (l - l0) * 2 * self.b;
-        &self.data[off..off + 2 * self.b]
+        debug_assert!(l >= l0);
+        debug_assert!(if mp == 0 { l < self.b } else { l <= self.b });
+        let off = self.offsets[base_index(m, mp)] + (l - l0) * self.b;
+        &self.data[off..off + self.b]
     }
 
-    /// A [`WignerSource`] view over these tables (shared, cheap).
+    /// Half row `H_l[j] = d(l, m, 0; β_j)` (j < B) of a parity base; the
+    /// reflected half is `(−1)^{l+m} H_l[j]`.
+    #[inline]
+    pub fn half_row(&self, m: i64, l: usize) -> &[f64] {
+        self.base_slice(m, 0, l)
+    }
+
+    /// Symmetric half `E_l[j] = D_l[j] + D_l[2B−1−j]` (j < B) of a
+    /// general base; valid for l₀ ≤ l ≤ B (the guard degree included).
+    #[inline]
+    pub fn e_row(&self, m: i64, mp: i64, l: usize) -> &[f64] {
+        debug_assert!(mp > 0, "e_row is for general bases; use half_row");
+        self.base_slice(m, mp, l)
+    }
+
+    /// Reconstruct the antisymmetric half `O_l[j] = D_l[j] − D_l[2B−1−j]`
+    /// of a general base into `out[..B]` (exact up to O(B·ε) rounding;
+    /// see module docs).
+    pub fn recon_o_into(&self, m: i64, mp: i64, l: usize, out: &mut [f64]) {
+        let out = &mut out[..self.b];
+        self.recon_o_with(m, mp, l, |j, o| out[j] = o);
+    }
+
+    /// Reconstruct the full 2B-node row for base pair (m, m') at degree l
+    /// into `buf[..2B]` (unfolding the stored halves). This is the
+    /// compatibility surface for full-row consumers ([`TableSource`],
+    /// the offload packing, the `matvec` baseline); the folded kernels
+    /// consume the halves directly.
+    pub fn row_into<'a>(&self, m: i64, mp: i64, l: usize, buf: &'a mut [f64]) -> &'a [f64] {
+        let b = self.b;
+        let n = 2 * b;
+        assert!(buf.len() >= n, "row_into needs a 2B-length buffer");
+        let buf = &mut buf[..n];
+        if mp == 0 {
+            let h = self.half_row(m, l);
+            let sig = crate::util::parity_sign(l as i64 + m);
+            for j in 0..b {
+                buf[j] = h[j];
+                buf[n - 1 - j] = sig * h[j];
+            }
+        } else {
+            // D[j] = (E+O)/2, D[2B−1−j] = (E−O)/2. O goes through a
+            // stack-free two-phase write: E first, then fold O in.
+            let e = self.e_row(m, mp, l);
+            for j in 0..b {
+                buf[j] = 0.5 * e[j];
+                buf[n - 1 - j] = 0.5 * e[j];
+            }
+            let (lo, hi) = buf.split_at_mut(b);
+            self.recon_o_with(m, mp, l, |j, o| {
+                lo[j] += 0.5 * o;
+                hi[b - 1 - j] -= 0.5 * o;
+            });
+        }
+        buf
+    }
+
+    /// Streaming core of the O-half reconstruction: calls `f(j, O_l[j])`
+    /// for j < B. General bases have m ≥ m' ≥ 1 ⇒ l ≥ l₀ ≥ 1, so the
+    /// step coefficients are always defined; at l = l₀ the a₃ term
+    /// carries d_{l₀−1} ≡ 0 (and a₃ itself vanishes there).
+    fn recon_o_with(&self, m: i64, mp: i64, l: usize, mut f: impl FnMut(usize, f64)) {
+        debug_assert!(mp > 0);
+        let b = self.b;
+        let l0 = m.max(mp) as usize;
+        debug_assert!(l >= l0 && l < b);
+        let c = step_coeffs(l, m, mp);
+        let inv_a1 = 1.0 / c.a1;
+        let e0 = self.e_row(m, mp, l);
+        let e1 = self.e_row(m, mp, l + 1);
+        if l == l0 {
+            for j in 0..b {
+                f(j, (e1[j] - c.a2 * e0[j]) * inv_a1 * self.inv_cos[j]);
+            }
+        } else {
+            let em1 = self.e_row(m, mp, l - 1);
+            for j in 0..b {
+                f(
+                    j,
+                    (e1[j] - c.a2 * e0[j] + c.a3 * em1[j]) * inv_a1 * self.inv_cos[j],
+                );
+            }
+        }
+    }
+
+    /// A [`WignerSource`] view over these tables (shared, cheap). Rows
+    /// are unfolded into the caller's buffer on demand.
     pub fn source(&self) -> TableSource<'_> {
         TableSource {
             tables: self,
@@ -154,14 +305,17 @@ impl WignerTables {
 
     /// Persist to disk so the precomputation (the dominant setup cost at
     /// large B — the paper precomputes per run) is paid once per machine.
-    /// Format: `SO3W1` magic, LE u64 bandwidth, LE u64 count, raw LE f64s.
+    /// Format (v2, folded): `SO3W2` magic, LE u64 bandwidth, LE u64
+    /// count, B raw LE f64 reconstruction divisors (1/cos β_j), `count`
+    /// raw LE f64 half-row values. v1 (`SO3W1`, full rows) caches are
+    /// rejected — rebuild them (docs/MIGRATION.md).
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::error::Result<()> {
         use std::io::Write;
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"SO3W1")?;
+        f.write_all(b"SO3W2")?;
         f.write_all(&(self.b as u64).to_le_bytes())?;
         f.write_all(&(self.data.len() as u64).to_le_bytes())?;
-        for v in &self.data {
+        for v in self.inv_cos.iter().chain(self.data.iter()) {
             f.write_all(&v.to_le_bytes())?;
         }
         f.flush()?;
@@ -169,7 +323,8 @@ impl WignerTables {
     }
 
     /// Load tables written by [`Self::save`]; validates magic, bandwidth
-    /// and length.
+    /// and length. Pre-fold (`SO3W1`) caches fail with a clear rebuild
+    /// message.
     pub fn load(
         path: impl AsRef<std::path::Path>,
         expect_b: usize,
@@ -179,7 +334,14 @@ impl WignerTables {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 5];
         f.read_exact(&mut magic)?;
-        if &magic != b"SO3W1" {
+        if &magic == b"SO3W1" {
+            return Err(Error::Runtime(
+                "wigner table cache: pre-fold v1 format (SO3W1); delete and rebuild \
+                 the cache with this version"
+                    .into(),
+            ));
+        }
+        if &magic != b"SO3W2" {
             return Err(Error::Runtime("wigner table cache: bad magic".into()));
         }
         let mut u = [0u8; 8];
@@ -195,9 +357,10 @@ impl WignerTables {
         if len != Self::storage_len(b) {
             return Err(Error::Runtime("wigner table cache: bad length".into()));
         }
+        let mut inv_cos = vec![0.0f64; b];
         let mut data = vec![0.0f64; len];
         let mut buf = [0u8; 8];
-        for v in data.iter_mut() {
+        for v in inv_cos.iter_mut().chain(data.iter_mut()) {
             f.read_exact(&mut buf)?;
             *v = f64::from_le_bytes(buf);
         }
@@ -205,19 +368,23 @@ impl WignerTables {
         let n_bases = b * (b + 1) / 2;
         let mut offsets = vec![0usize; n_bases + 1];
         let mut total = 0usize;
-        for m in 0..b as i64 {
+        for m in 0..b {
             for mp in 0..=m {
-                offsets[base_index(m, mp)] = total;
-                let l0 = m.max(mp) as usize;
-                total += (b - l0) * 2 * b;
+                offsets[base_index(m as i64, mp as i64)] = total;
+                total += rows_per_base(b, m, mp) * b;
             }
         }
         offsets[n_bases] = total;
-        Ok(Self { b, data, offsets })
+        Ok(Self {
+            b,
+            data,
+            offsets,
+            inv_cos,
+        })
     }
 }
 
-/// Table-backed row source.
+/// Table-backed row source (unfolds half-rows into the caller's buffer).
 pub struct TableSource<'t> {
     tables: &'t WignerTables,
     m: i64,
@@ -231,23 +398,28 @@ impl WignerSource for TableSource<'_> {
         self.mp = mp;
     }
 
-    fn row<'a>(&'a mut self, l: usize, _buf: &'a mut [f64]) -> &'a [f64] {
-        self.tables.row(self.m, self.mp, l)
+    fn row<'a>(&'a mut self, l: usize, buf: &'a mut [f64]) -> &'a [f64] {
+        self.tables.row_into(self.m, self.mp, l, buf)
     }
 }
 
 /// Storage strategy selector used by the transform configs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WignerStorage {
-    /// Precompute symmetry-shared tables (paper's benchmarked setup).
+    /// Precompute symmetry-shared folded tables (paper's benchmarked
+    /// setup, at half the pre-fold footprint).
     Precomputed,
-    /// Stream rows from the recurrence (memory-critical bandwidths).
+    /// Stream rows from the recurrence (memory-critical bandwidths, or
+    /// strict extended-precision accuracy — exact rows, no O(B·ε)
+    /// reconstruction term).
     OnTheFly,
 }
 
 impl WignerStorage {
     /// Pick a default: precompute while the tables stay under `budget`
-    /// bytes, stream otherwise (the B=512 regime of the paper).
+    /// bytes, stream otherwise (the B=512 regime of the paper). The
+    /// folded layout fits ~2× the bandwidth range of the pre-fold one
+    /// under the same budget.
     pub fn auto(b: usize, budget: usize) -> Self {
         if WignerTables::storage_len(b) * 8 <= budget {
             WignerStorage::Precomputed
@@ -268,11 +440,12 @@ mod tests {
         let b = 8;
         let angles = GridAngles::new(b).unwrap();
         let tables = WignerTables::build(b, &angles.betas);
+        let mut buf = vec![0.0; 2 * b];
         for m in 0..b as i64 {
             for mp in 0..=m {
                 let l0 = m.max(mp) as usize;
                 for l in l0..b {
-                    let row = tables.row(m, mp, l);
+                    let row = tables.row_into(m, mp, l, &mut buf).to_vec();
                     for (j, &bj) in angles.betas.iter().enumerate() {
                         let want = d_single(l, m, mp, bj);
                         assert!(
@@ -286,11 +459,69 @@ mod tests {
     }
 
     #[test]
-    fn storage_len_matches_build() {
-        for b in [1usize, 2, 5, 8] {
+    fn folded_halves_match_direct_evaluation() {
+        let b = 8;
+        let n = 2 * b;
+        let angles = GridAngles::new(b).unwrap();
+        let tables = WignerTables::build(b, &angles.betas);
+        let mut obuf = vec![0.0; b];
+        for m in 1..b as i64 {
+            for mp in 1..=m {
+                let l0 = m as usize;
+                for l in l0..b {
+                    let e = tables.e_row(m, mp, l);
+                    tables.recon_o_into(m, mp, l, &mut obuf);
+                    for j in 0..b {
+                        let d = d_single(l, m, mp, angles.betas[j]);
+                        let dr = d_single(l, m, mp, angles.betas[n - 1 - j]);
+                        assert!((e[j] - (d + dr)).abs() < 1e-13, "E m={m} mp={mp} l={l} j={j}");
+                        assert!(
+                            (obuf[j] - (d - dr)).abs() < 1e-13,
+                            "O m={m} mp={mp} l={l} j={j}: {} vs {}",
+                            obuf[j],
+                            d - dr
+                        );
+                    }
+                }
+            }
+        }
+        // Parity bases: the half row is the literal row, the reflected
+        // half is sign-implied.
+        for m in 0..b as i64 {
+            for l in m as usize..b {
+                let h = tables.half_row(m, l);
+                let sig = crate::util::parity_sign(l as i64 + m);
+                for j in 0..b {
+                    let d = d_single(l, m, 0, angles.betas[j]);
+                    let dr = d_single(l, m, 0, angles.betas[n - 1 - j]);
+                    assert!((h[j] - d).abs() < 1e-13);
+                    assert!((dr - sig * d).abs() < 1e-12, "parity m={m} l={l} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn storage_len_matches_build_and_is_half_of_full_rows() {
+        for b in [1usize, 2, 5, 8, 16] {
             let angles = GridAngles::new(b).unwrap();
             let tables = WignerTables::build(b, &angles.betas);
             assert_eq!(tables.data.len(), WignerTables::storage_len(b));
+            // Pre-fold layout: (B − l0) full 2B rows per base.
+            let full: usize = (0..b)
+                .flat_map(|m| (0..=m).map(move |_| (b - m) * 2 * b))
+                .sum();
+            let folded = WignerTables::storage_len(b);
+            assert!(folded * 2 <= full + 2 * b * b * b, "b={b}: {folded} vs {full}");
+            if b >= 8 {
+                // The guard rows add O(B³) on top of the halved O(B⁴):
+                // 0.617 at b = 8, 0.574 at 16, → ½ asymptotically.
+                let ratio = folded as f64 / full as f64;
+                assert!(
+                    (0.45..=0.63).contains(&ratio),
+                    "b={b}: folded/full = {ratio}"
+                );
+            }
         }
     }
 
@@ -318,15 +549,20 @@ mod tests {
         let tables = WignerTables::build(b, &angles.betas);
         let mut fly = OnTheFlySource::new(&angles.betas);
         let mut buf = vec![0.0; 2 * b];
+        let mut tbuf = vec![0.0; 2 * b];
         for m in 0..b as i64 {
             for mp in 0..=m {
                 fly.reset(m, mp);
+                let mut tab = tables.source();
+                tab.reset(m, mp);
                 let l0 = m.max(mp) as usize;
                 for l in l0..b {
                     let a = fly.row(l, &mut buf).to_vec();
-                    let t = tables.row(m, mp, l);
+                    let t = tab.row(l, &mut tbuf);
                     for (x, y) in a.iter().zip(t.iter()) {
-                        assert!((x - y).abs() < 1e-14);
+                        // 1e-13, not 1e-14: the unfolded O half carries
+                        // the O(B·ε) reconstruction term (module docs).
+                        assert!((x - y).abs() < 1e-13);
                     }
                 }
             }
@@ -341,6 +577,17 @@ mod tests {
             WignerStorage::auto(8, 1 << 30),
             WignerStorage::Precomputed
         );
+        // The fold doubles what fits: a budget of ~0.7× the pre-fold
+        // footprint now selects Precomputed.
+        let b = 32;
+        let full_bytes: usize = (0..b)
+            .flat_map(|m| (0..=m).map(move |_| (b - m) * 2 * b * 8))
+            .sum();
+        assert_eq!(
+            WignerStorage::auto(b, full_bytes * 7 / 10),
+            WignerStorage::Precomputed
+        );
+        assert!(WignerTables::storage_len(b) * 8 > full_bytes * 4 / 10);
     }
 
     #[test]
@@ -353,20 +600,34 @@ mod tests {
         let loaded = WignerTables::load(&path, b).unwrap();
         assert_eq!(tables.data, loaded.data);
         assert_eq!(tables.offsets, loaded.offsets);
+        assert_eq!(tables.inv_cos, loaded.inv_cos);
         // Wrong bandwidth and corrupt magic are clean errors.
         assert!(WignerTables::load(&path, 7).is_err());
         std::fs::write(&path, b"JUNKJUNKJUNK").unwrap();
         assert!(WignerTables::load(&path, b).is_err());
+        // The pre-fold v1 format is rejected with a rebuild hint.
+        std::fs::write(&path, b"SO3W1old-format-payload").unwrap();
+        let err = WignerTables::load(&path, b).unwrap_err();
+        assert!(format!("{err}").contains("rebuild"), "{err}");
         let _ = std::fs::remove_file(&path);
     }
 
     #[test]
     fn memory_scales_quartically() {
         // Sanity-check the paper's memory-criticality claim: storage
-        // grows ~16× per bandwidth doubling.
+        // grows ~16× per bandwidth doubling (folding halves the constant,
+        // not the exponent).
         let s32 = WignerTables::storage_len(32);
         let s64 = WignerTables::storage_len(64);
         let ratio = s64 as f64 / s32 as f64;
         assert!((ratio - 16.0).abs() < 2.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn build_rejects_asymmetric_grid() {
+        let b = 4;
+        let betas: Vec<f64> = (0..2 * b).map(|j| 0.1 + 0.3 * j as f64).collect();
+        let r = std::panic::catch_unwind(|| WignerTables::build(b, &betas));
+        assert!(r.is_err());
     }
 }

@@ -380,8 +380,10 @@ impl So3PlanBuilder {
         self
     }
 
-    /// DWT dataflow (matvec = paper's benchmarked version; clenshaw =
-    /// the paper's announced follow-up).
+    /// DWT dataflow: `MatVecFolded` (default) is the β-parity-folded,
+    /// register-blocked engine; `MatVec` is the paper's benchmarked
+    /// full-row version, kept as the measurable baseline; `Clenshaw` is
+    /// the paper's announced follow-up.
     pub fn algorithm(mut self, algorithm: DwtAlgorithm) -> Self {
         self.config.algorithm = algorithm;
         self

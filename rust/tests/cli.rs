@@ -23,6 +23,10 @@ fn roundtrip_runs_clean() {
 fn forward_inverse_run_clean() {
     assert_eq!(run(argv("forward -b 4")), 0);
     assert_eq!(run(argv("inverse -b 4 --algorithm clenshaw")), 0);
+    // The folded engine (the default) and the matvec baseline are both
+    // selectable by name.
+    assert_eq!(run(argv("inverse -b 4 --algorithm matvec-folded")), 0);
+    assert_eq!(run(argv("forward -b 4 --algorithm matvec")), 0);
 }
 
 #[test]

@@ -1,0 +1,195 @@
+//! Folded-vs-baseline DWT parity suite (ISSUE 4 acceptance): the
+//! β-parity-folded engine must agree with the `matvec` baseline to
+//! ≤ 1e-12 in both directions, both precisions, and both Wigner sources
+//! at b ∈ {8, 16, 32}; plus the half-table disk format round-trip, the
+//! table-size halving, and a full-transform round-trip under
+//! `matvec-folded`.
+
+use so3ft::coordinator::PartitionStrategy;
+use so3ft::dwt::tables::{WignerStorage, WignerTables};
+use so3ft::dwt::{DwtAlgorithm, Precision};
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::so3::sampling::GridAngles;
+use so3ft::transform::So3Plan;
+
+fn plan(
+    b: usize,
+    algorithm: DwtAlgorithm,
+    storage: WignerStorage,
+    precision: Precision,
+) -> So3Plan {
+    So3Plan::builder(b)
+        .algorithm(algorithm)
+        .storage(storage)
+        .precision(precision)
+        .build()
+        .unwrap()
+}
+
+/// The headline acceptance matrix: forward + inverse × double/extended
+/// × tables/on-the-fly at b ∈ {8, 16, 32}.
+#[test]
+fn folded_matches_matvec_both_directions_precisions_and_sources() {
+    for b in [8usize, 16, 32] {
+        let coeffs = So3Coeffs::random(b, 0xD417 + b as u64);
+        for storage in [WignerStorage::Precomputed, WignerStorage::OnTheFly] {
+            for precision in [Precision::Double, Precision::Extended] {
+                let base = plan(b, DwtAlgorithm::MatVec, storage, precision);
+                let fold = plan(b, DwtAlgorithm::MatVecFolded, storage, precision);
+                let g_base = base.inverse(&coeffs).unwrap();
+                let g_fold = fold.inverse(&coeffs).unwrap();
+                let inv_err = g_base.max_abs_error(&g_fold);
+                assert!(
+                    inv_err < 1e-12,
+                    "inverse b={b} {storage:?} {precision:?}: {inv_err:.3e}"
+                );
+                let c_base = base.forward(&g_base).unwrap();
+                let c_fold = fold.forward(&g_fold).unwrap();
+                let fwd_err = c_base.max_abs_error(&c_fold);
+                assert!(
+                    fwd_err < 1e-12,
+                    "forward b={b} {storage:?} {precision:?}: {fwd_err:.3e}"
+                );
+            }
+        }
+    }
+}
+
+/// The folded engine is the default for canonical partitions; its full
+/// transform round-trips at baseline accuracy.
+#[test]
+fn matvec_folded_is_default_and_roundtrips() {
+    for b in [4usize, 8, 16] {
+        let p = So3Plan::new(b).unwrap();
+        assert_eq!(p.config().algorithm, DwtAlgorithm::MatVecFolded);
+        let coeffs = So3Coeffs::random(b, 31 + b as u64);
+        let grid = p.inverse(&coeffs).unwrap();
+        let back = p.forward(&grid).unwrap();
+        let err = coeffs.max_abs_error(&back);
+        assert!(err < 1e-11, "b={b}: roundtrip error {err:.3e}");
+    }
+}
+
+/// Folded also serves the no-symmetry ablation (singleton clusters with
+/// non-canonical order pairs go through the source-fed folded kernels).
+#[test]
+fn folded_agrees_under_no_symmetry_partitioning() {
+    let b = 8;
+    let coeffs = So3Coeffs::random(b, 99);
+    let mk = |algorithm| {
+        let p = So3Plan::builder(b)
+            .algorithm(algorithm)
+            .strategy(PartitionStrategy::NoSymmetry)
+            .storage(WignerStorage::OnTheFly)
+            .build()
+            .unwrap();
+        let g = p.inverse(&coeffs).unwrap();
+        let c = p.forward(&g).unwrap();
+        (g, c)
+    };
+    let (g_base, c_base) = mk(DwtAlgorithm::MatVec);
+    let (g_fold, c_fold) = mk(DwtAlgorithm::MatVecFolded);
+    assert!(g_base.max_abs_error(&g_fold) < 1e-12);
+    assert!(c_base.max_abs_error(&c_fold) < 1e-12);
+}
+
+/// Parallel folded execution is bit-identical to sequential folded
+/// execution (same kernels, cluster-exclusive writes).
+#[test]
+fn folded_parallel_matches_sequential_bitwise() {
+    let b = 8;
+    let coeffs = So3Coeffs::random(b, 7);
+    let seq = So3Plan::builder(b).build().unwrap();
+    let par = So3Plan::builder(b).threads(3).build().unwrap();
+    let g_seq = seq.inverse(&coeffs).unwrap();
+    let g_par = par.inverse(&coeffs).unwrap();
+    assert_eq!(g_seq.as_slice(), g_par.as_slice());
+    let c_seq = seq.forward(&g_seq).unwrap();
+    let c_par = par.forward(&g_par).unwrap();
+    assert_eq!(c_seq.as_slice(), c_par.as_slice());
+}
+
+/// The folded tables report ~half the bytes of the pre-fold full-row
+/// layout for the same bandwidth (the acceptance criterion), and the
+/// v2 disk format round-trips.
+#[test]
+fn half_tables_bytes_and_disk_roundtrip() {
+    for b in [8usize, 16, 32] {
+        let angles = GridAngles::new(b).unwrap();
+        let tables = WignerTables::build(b, &angles.betas);
+        // Pre-fold layout: (B − l0) rows × 2B f64 per base pair.
+        let full_bytes: usize = (0..b)
+            .flat_map(|m| (0..=m).map(move |_| (b - m) * 2 * b * 8))
+            .sum();
+        // Exact ratios (the guard rows add O(B³) on top of the halved
+        // O(B⁴)): 0.621 at b = 8, 0.574 at 16, 0.542 at 32 → ½
+        // asymptotically.
+        let ratio = tables.bytes() as f64 / full_bytes as f64;
+        assert!(
+            (0.45..=0.63).contains(&ratio),
+            "b={b}: folded/full bytes = {ratio:.3}"
+        );
+    }
+    let b = 16;
+    let angles = GridAngles::new(b).unwrap();
+    let tables = WignerTables::build(b, &angles.betas);
+    let path = std::env::temp_dir().join(format!(
+        "so3ft-dwt-parity-cache-{}.bin",
+        std::process::id()
+    ));
+    tables.save(&path).unwrap();
+    let loaded = WignerTables::load(&path, b).unwrap();
+    assert_eq!(loaded.bandwidth(), b);
+    assert_eq!(loaded.bytes(), tables.bytes());
+    // Loaded tables serve rows identical to the freshly built ones.
+    let mut a = vec![0.0; 2 * b];
+    let mut c = vec![0.0; 2 * b];
+    for (m, mp, l) in [(0i64, 0i64, 5usize), (7, 0, 9), (9, 4, 12), (15, 15, 15)] {
+        let x = tables.row_into(m, mp, l, &mut a).to_vec();
+        let y = loaded.row_into(m, mp, l, &mut c).to_vec();
+        assert_eq!(x, y);
+    }
+    assert!(WignerTables::load(&path, b + 1).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Extended precision under the folded engine stays at least as accurate
+/// as double precision on a full round-trip.
+#[test]
+fn folded_extended_no_worse_than_double() {
+    let b = 16;
+    let coeffs = So3Coeffs::random(b, 55);
+    let run = |precision| {
+        let p = plan(
+            b,
+            DwtAlgorithm::MatVecFolded,
+            WignerStorage::OnTheFly,
+            precision,
+        );
+        let grid = p.inverse(&coeffs).unwrap();
+        let back = p.forward(&grid).unwrap();
+        coeffs.max_abs_error(&back)
+    };
+    let double = run(Precision::Double);
+    let extended = run(Precision::Extended);
+    assert!(
+        extended <= double * 1.5,
+        "extended {extended:.3e} vs double {double:.3e}"
+    );
+    // Folded + extended never builds folded tables (reconstructed O
+    // halves would defeat double-double accumulation): even when
+    // Precomputed is requested, rows stream exactly from the recurrence.
+    let p = plan(
+        b,
+        DwtAlgorithm::MatVecFolded,
+        WignerStorage::Precomputed,
+        Precision::Extended,
+    );
+    assert_eq!(p.table_bytes(), 0);
+    let base = plan(b, DwtAlgorithm::MatVec, WignerStorage::Precomputed, Precision::Extended);
+    assert!(base.table_bytes() > 0);
+    let coeffs2 = So3Coeffs::random(b, 56);
+    let g = p.inverse(&coeffs2).unwrap();
+    let g_base = base.inverse(&coeffs2).unwrap();
+    assert!(g.max_abs_error(&g_base) < 1e-12);
+}

@@ -40,7 +40,11 @@ fn all_configurations_roundtrip_b12() {
         PartitionStrategy::SigmaClustered,
         PartitionStrategy::NoSymmetry,
     ] {
-        for algorithm in [DwtAlgorithm::MatVec, DwtAlgorithm::Clenshaw] {
+        for algorithm in [
+            DwtAlgorithm::MatVec,
+            DwtAlgorithm::MatVecFolded,
+            DwtAlgorithm::Clenshaw,
+        ] {
             for storage in [WignerStorage::Precomputed, WignerStorage::OnTheFly] {
                 for precision in [Precision::Double, Precision::Extended] {
                     // Skip invalid combinations (rejected by the builder).
