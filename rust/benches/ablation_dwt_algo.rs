@@ -7,7 +7,7 @@ use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
 use so3ft::dwt::tables::WignerStorage;
 use so3ft::dwt::{DwtAlgorithm, Precision};
 use so3ft::so3::coeffs::So3Coeffs;
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 
 fn main() {
     let b = env_usize("SO3FT_BENCH_B", 16);
@@ -56,7 +56,8 @@ fn main() {
     let mut table = Table::new(&["variant", "table mem", "forward", "inverse", "rt err"]);
     let mut csv = Vec::new();
     for &(name, algorithm, storage, precision) in variants {
-        let fft = So3Fft::builder(b)
+        let fft = So3Plan::builder(b)
+            .allow_any_bandwidth()
             .algorithm(algorithm)
             .storage(storage)
             .precision(precision)

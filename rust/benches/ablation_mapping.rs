@@ -6,7 +6,7 @@ use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
 use so3ft::coordinator::partition::{kappa_count, kappa_to_pair, sigma_count, sigma_to_pair};
 use so3ft::coordinator::PartitionStrategy;
 use so3ft::so3::coeffs::So3Coeffs;
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 
 fn main() {
     let b = env_usize("SO3FT_BENCH_B", 512);
@@ -66,7 +66,7 @@ fn main() {
         ("geometric", PartitionStrategy::GeometricClustered),
         ("sigma", PartitionStrategy::SigmaClustered),
     ] {
-        let fft = So3Fft::builder(be).strategy(strategy).build().unwrap();
+        let fft = So3Plan::builder(be).allow_any_bandwidth().strategy(strategy).build().unwrap();
         let grid = fft.inverse(&coeffs).unwrap();
         let s = time_fn(e2e_reps, || {
             std::hint::black_box(fft.forward(&grid).unwrap());

@@ -7,7 +7,7 @@ use so3ft::pool::Schedule;
 use so3ft::simulator::cost::{measured_spec, TransformKind};
 use so3ft::simulator::machine::{simulate_transform, MachineParams};
 use so3ft::so3::coeffs::So3Coeffs;
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 
 fn main() {
     let b = env_usize("SO3FT_BENCH_B", 32);
@@ -44,7 +44,8 @@ fn main() {
     let coeffs = So3Coeffs::random(b, 5);
     let mut t2 = Table::new(&["schedule", "forward median (s)"]);
     for (name, schedule) in schedules {
-        let fft = So3Fft::builder(b)
+        let fft = So3Plan::builder(b)
+            .allow_any_bandwidth()
             .threads(threads)
             .schedule(schedule)
             .build()

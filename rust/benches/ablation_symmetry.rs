@@ -6,7 +6,7 @@ use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
 use so3ft::coordinator::{PartitionStrategy, TransformPlan};
 use so3ft::dwt::tables::WignerStorage;
 use so3ft::so3::coeffs::So3Coeffs;
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 
 fn main() {
     let b = env_usize("SO3FT_BENCH_B", 16);
@@ -26,7 +26,8 @@ fn main() {
         ("clustered", PartitionStrategy::GeometricClustered),
         ("no-symmetry", PartitionStrategy::NoSymmetry),
     ] {
-        let fft = So3Fft::builder(b)
+        let fft = So3Plan::builder(b)
+            .allow_any_bandwidth()
             .strategy(strategy)
             // On-the-fly isolates the symmetry effect (precomputed tables
             // would amortize the recurrence differently).

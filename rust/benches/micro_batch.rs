@@ -2,8 +2,8 @@
 //!
 //! Compares, at b ∈ {8, 16, 32} (override with `SO3FT_BENCH_BATCH_BS`):
 //!
-//! * `alloc`  — the legacy pattern: `So3Fft::forward`/`inverse`, fresh
-//!   output + workspace buffers on every call;
+//! * `alloc`  — the legacy pattern: allocating `forward`/`inverse`
+//!   calls, fresh output + workspace buffers every time;
 //! * `into`   — `So3Plan::forward_into`/`inverse_into` with one reused
 //!   [`Workspace`] and caller-owned outputs (zero grid/coefficient
 //!   allocation per call);
@@ -29,7 +29,7 @@ use so3ft::fft::Complex64;
 use so3ft::pool::{parallel_for, Schedule, WorkerPool};
 use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::so3::sampling::So3Grid;
-use so3ft::transform::{FftEngine, So3Fft, So3Plan};
+use so3ft::transform::{FftEngine, So3Plan};
 
 fn main() {
     let reps = env_usize("SO3FT_BENCH_REPS", 10);
@@ -49,7 +49,10 @@ fn main() {
     ]);
 
     for &b in &bandwidths {
-        let legacy = So3Fft::new(b).expect("facade");
+        let legacy = So3Plan::builder(b)
+            .allow_any_bandwidth()
+            .build()
+            .expect("alloc-pattern plan");
         let plan = So3Plan::new(b).expect("plan");
         let specs: Vec<So3Coeffs> = (0..batch_n)
             .map(|i| So3Coeffs::random(b, 90 + i as u64))

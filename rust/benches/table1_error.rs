@@ -10,7 +10,7 @@
 use so3ft::bench_util::{csv_sink, env_usize, env_usize_list, fmt_mean_std_sci, Table};
 use so3ft::dwt::Precision;
 use so3ft::so3::coeffs::So3Coeffs;
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 
 fn mean_std(v: &[f64]) -> (f64, f64) {
     let m = v.iter().sum::<f64>() / v.len() as f64;
@@ -44,7 +44,11 @@ fn main() {
             &[Precision::Double]
         };
         for &precision in precisions {
-            let fft = So3Fft::builder(b).precision(precision).build().unwrap();
+            let fft = So3Plan::builder(b)
+                .allow_any_bandwidth()
+                .precision(precision)
+                .build()
+                .unwrap();
             let mut abs = Vec::with_capacity(runs);
             let mut rel = Vec::with_capacity(runs);
             for run in 0..runs {

@@ -61,7 +61,8 @@ pub struct MatchResult {
 /// Find the rotation aligning f to g (so that `f.rotate(result.euler)`
 /// best matches g), by maximizing Re C(R) over the (2B)³ grid with one
 /// iFSOFT through the provided transform engine (any [`Transform`]
-/// backend: an `So3Plan`, the `So3Fft` facade, or a raw executor).
+/// backend: an `So3Plan`, a raw executor, or the deprecated `So3Fft`
+/// facade).
 pub fn match_rotation<T: Transform + ?Sized>(
     fft: &T,
     f: &SphCoeffs,
@@ -134,24 +135,26 @@ pub fn correlation_direct(f: &SphCoeffs, g: &SphCoeffs, e: EulerZyz) -> f64 {
 mod tests {
     use super::*;
     use crate::so3::rotation::Rotation;
-    use crate::transform::{So3Fft, So3Plan};
+    use crate::transform::So3Plan;
 
-    /// The generic entry point accepts every backend handle type.
+    /// The generic entry point accepts every backend handle type
+    /// (sequential and pooled plans here; facade parity lives in
+    /// `rust/tests/plan_api.rs`).
     #[test]
-    fn match_rotation_accepts_plan_and_facade() {
+    fn match_rotation_accepts_any_transform_backend() {
         let b = 4;
         let f = SphCoeffs::random(b, 31);
         let g = f.rotate(EulerZyz::new(0.3, 0.9, 1.2));
-        let facade = So3Fft::new(b).unwrap();
-        let plan = So3Plan::new(b).unwrap();
-        let via_facade = match_rotation(&facade, &f, &g).unwrap();
-        let via_plan = match_rotation(&plan, &f, &g).unwrap();
-        assert_eq!(via_facade.index, via_plan.index);
-        assert_eq!(via_facade.grid.as_slice(), via_plan.grid.as_slice());
+        let seq = So3Plan::new(b).unwrap();
+        let par = So3Plan::builder(b).threads(2).build().unwrap();
+        let via_par = match_rotation(&par, &f, &g).unwrap();
+        let via_seq = match_rotation(&seq, &f, &g).unwrap();
+        assert_eq!(via_par.index, via_seq.index);
+        assert_eq!(via_par.grid.as_slice(), via_seq.grid.as_slice());
         // Workspace-reusing variant agrees bit for bit.
-        let mut ws = plan.make_workspace();
-        let with_ws = match_rotation_with(&plan, &f, &g, &mut ws).unwrap();
-        assert_eq!(with_ws.grid.as_slice(), via_plan.grid.as_slice());
+        let mut ws = seq.make_workspace();
+        let with_ws = match_rotation_with(&seq, &f, &g, &mut ws).unwrap();
+        assert_eq!(with_ws.grid.as_slice(), via_seq.grid.as_slice());
     }
 
     /// The fast correlation grid must equal the direct correlation at
@@ -161,7 +164,7 @@ mod tests {
         let b = 4;
         let f = SphCoeffs::random(b, 1);
         let g = SphCoeffs::random(b, 2);
-        let fft = So3Fft::new(b).unwrap();
+        let fft = So3Plan::new(b).unwrap();
         let coeffs = correlation_coeffs(&f, &g);
         let grid = fft.inverse(&coeffs).unwrap();
         let angles = GridAngles::new(b).unwrap();
@@ -190,7 +193,7 @@ mod tests {
         // can hit it. g = Λ_{R0} f so C(R) peaks at R = R0.
         let planted = angles.euler(3, 5, 9);
         let g = f.rotate(planted);
-        let fft = So3Fft::new(b).unwrap();
+        let fft = So3Plan::new(b).unwrap();
         let result = match_rotation(&fft, &f, &g).unwrap();
         let r_planted = Rotation::from_euler(planted);
         let r_found = Rotation::from_euler(result.euler);
@@ -211,7 +214,7 @@ mod tests {
     fn self_correlation_peaks_at_identity() {
         let b = 6;
         let f = SphCoeffs::random(b, 7);
-        let fft = So3Fft::new(b).unwrap();
+        let fft = So3Plan::builder(b).allow_any_bandwidth().build().unwrap();
         let result = match_rotation(&fft, &f, &f).unwrap();
         let r = Rotation::from_euler(result.euler);
         let dist = r.angular_distance(&Rotation::IDENTITY);

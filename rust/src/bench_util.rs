@@ -206,6 +206,42 @@ pub fn write_json_report(
     f.write_all(out.as_bytes())
 }
 
+/// Append records to an existing [`write_json_report`]-format file (the
+/// CLI's `serve-bench --json` merges its `service_*` records into the
+/// `BENCH_fft.json` the e2e benchmark wrote earlier in the same CI job).
+/// Creates a fresh report when the file is absent; a file that does not
+/// end with the report's closing `]\n}` is refused (typed `InvalidData`)
+/// rather than corrupted.
+pub fn append_json_records(path: &str, records: &[String]) -> std::io::Result<()> {
+    use std::io::Write;
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return write_json_report(path, &[("bench", "\"service\"".to_string())], records)
+        }
+        Err(e) => return Err(e),
+    };
+    const TAIL: &str = "\n  ]\n}\n";
+    let Some(pos) = text.rfind(TAIL) else {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("{path} is not a write_json_report file (missing closing `]}}`)"),
+        ));
+    };
+    let empty_array = text[..pos].trim_end().ends_with('[');
+    let mut insert = String::new();
+    for (i, r) in records.iter().enumerate() {
+        if i > 0 || !empty_array {
+            insert.push(',');
+        }
+        insert.push_str(&format!("\n    {r}"));
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(text[..pos].as_bytes())?;
+    f.write_all(insert.as_bytes())?;
+    f.write_all(TAIL.as_bytes())
+}
+
 /// Read an env-var override for bench scale (small by default so `cargo
 /// bench` completes quickly; CI/full runs can raise it).
 pub fn env_usize(name: &str, default: usize) -> usize {
@@ -271,6 +307,36 @@ mod tests {
         assert!(text.contains("\"records\""));
         assert!(text.contains("1.5e-3"));
         assert_eq!(json_escape("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+    }
+
+    #[test]
+    fn append_json_records_merges_and_creates() {
+        let dir = std::env::temp_dir().join(format!("so3ft_json_append_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("merge.json");
+        let path_s = path.to_str().unwrap();
+        let _ = std::fs::remove_file(&path);
+        // Absent file → fresh report.
+        append_json_records(path_s, &["{\"kind\": \"a\", \"v\": 1}".to_string()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"kind\": \"a\""));
+        // Existing report → records appended, earlier ones kept.
+        append_json_records(path_s, &["{\"kind\": \"b\", \"v\": 2}".to_string()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"kind\": \"a\"") && text.contains("\"kind\": \"b\""));
+        // Still a well-formed report: exactly one records array, with a
+        // comma between the two entries.
+        assert_eq!(text.matches("\"records\"").count(), 1);
+        assert!(text.contains("\"v\": 1},\n    {\"kind\": \"b\""));
+        // Appending into an empty records array needs no leading comma.
+        write_json_report(path_s, &[("bench", "\"x\"".to_string())], &[]).unwrap();
+        append_json_records(path_s, &["{\"kind\": \"c\"}".to_string()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("[\n    {\"kind\": \"c\"}\n  ]"));
+        // Garbage input is refused, not corrupted.
+        std::fs::write(&path, "not json").unwrap();
+        assert!(append_json_records(path_s, &["{}".to_string()]).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

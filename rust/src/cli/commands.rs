@@ -5,7 +5,7 @@ use std::sync::Arc;
 use crate::apps::{matching, sphere};
 use crate::cli::Invocation;
 use crate::coordinator::TransformPlan;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::runtime::{ArtifactRegistry, XlaDwt};
 use crate::simulator::cost::{measured_spec, TransformKind};
 use crate::simulator::machine::MachineParams;
@@ -28,6 +28,7 @@ commands:
   inverse     time the iFSOFT on random coefficients
   match       rotational-matching demo (plant + recover a rotation)
   simulate    multicore scaling curves (simulated Opteron-like node)
+  serve-bench So3Service under concurrent mixed-bandwidth job load
   help        this text
 
 options: --config FILE, --bandwidth/-b B, --threads/-t N,
@@ -38,6 +39,12 @@ options: --config FILE, --bandwidth/-b B, --threads/-t N,
   --pool owned|global (pair global with --threads N; width is
   min(threads, pool)), --seed N, --xla, --artifacts DIR, --cores LIST,
   --kind fwd|inv
+
+serve-bench options: --clients N, --jobs N (per client),
+  --bandwidths LIST (default 8,16), --window-us N (micro-batch window),
+  --rate JOBS_PER_S (open-loop arrival per client; 0 = burst),
+  --json PATH (merge service_* records into a BENCH_fft.json report);
+  the worker pool is sized by [service] threads, falling back to -t
 ";
 
 fn build_plan(inv: &Invocation) -> Result<So3Plan> {
@@ -187,6 +194,225 @@ pub fn match_demo(inv: &Invocation) -> Result<()> {
         dist,
         std::f64::consts::PI / b as f64
     );
+    Ok(())
+}
+
+/// Latency percentile over a sorted sample (nearest-rank).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// `serve-bench`: N client threads submit mixed-bandwidth jobs to one
+/// `So3Service` at an open-loop arrival rate; reports throughput and
+/// latency percentiles, verifies every result bit-for-bit against the
+/// registry plan, and (with `--json`) merges `service_throughput` /
+/// `service_p99` records into a BENCH_fft.json-format report for the CI
+/// gate.
+pub fn serve_bench(inv: &Invocation) -> Result<()> {
+    use crate::bench_util::{append_json_records, fmt_seconds, Table};
+    use crate::service::{Direction, JobHandle, JobSpec, PlanOptions};
+
+    let sb = &inv.serve;
+    let threads = if inv.run.service.threads > 0 {
+        inv.run.service.threads
+    } else {
+        inv.run.exec.threads
+    };
+    let options = PlanOptions::from_exec(&inv.run.exec);
+    let service = inv
+        .run
+        .service
+        .to_builder()
+        .threads(threads)
+        .default_options(options)
+        .allow_any_bandwidth()
+        .build()?;
+
+    // Prewarm: one plan + one input/reference pair per bandwidth, built
+    // through the service registry so the bench measures serving, not
+    // first-touch planning. References come from the same plans, so the
+    // parity check below demands bit-identical results.
+    struct Template {
+        b: usize,
+        coeffs: So3Coeffs,
+        grid: crate::so3::sampling::So3Grid,
+        fwd: So3Coeffs,
+    }
+    let mut templates = Vec::with_capacity(sb.bandwidths.len());
+    for &b in &sb.bandwidths {
+        let plan = service.plan(b, options)?;
+        let coeffs = So3Coeffs::random(b, inv.run.seed.wrapping_add(b as u64));
+        let grid = plan.inverse(&coeffs)?;
+        let fwd = plan.forward(&grid)?;
+        templates.push(Template {
+            b,
+            coeffs,
+            grid,
+            fwd,
+        });
+    }
+
+    let total_jobs = sb.clients * sb.jobs;
+    println!(
+        "serve-bench: {} clients x {} jobs, bandwidths {:?}, {} worker threads, \
+         window {} us, rate {}",
+        sb.clients,
+        sb.jobs,
+        sb.bandwidths,
+        threads,
+        inv.run.service.batch_window_us,
+        if sb.rate > 0.0 {
+            format!("{} jobs/s/client", sb.rate)
+        } else {
+            "burst".to_string()
+        }
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut per_client: Vec<Result<Vec<(usize, f64)>>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for client in 0..sb.clients {
+            let service = &service;
+            let templates = &templates;
+            handles.push(scope.spawn(move || -> Result<Vec<(usize, f64)>> {
+                let interval = (sb.rate > 0.0)
+                    .then(|| std::time::Duration::from_secs_f64(1.0 / sb.rate));
+                // Open-loop arrival: submit everything (paced by the
+                // interval when set), then collect — completions never
+                // gate submissions.
+                let mut pending: Vec<(usize, Direction, JobHandle)> = Vec::with_capacity(sb.jobs);
+                for i in 0..sb.jobs {
+                    let ti = (client + i) % templates.len();
+                    let t = &templates[ti];
+                    let direction = if (client + i) % 2 == 0 {
+                        Direction::Inverse
+                    } else {
+                        Direction::Forward
+                    };
+                    // Inputs come from the buffer pool (filled from the
+                    // template), so the client side allocates nothing
+                    // per job in the steady state either.
+                    let handle = match direction {
+                        Direction::Inverse => {
+                            let mut input = service.checkout_coeffs(t.b)?;
+                            input.as_mut_slice().copy_from_slice(t.coeffs.as_slice());
+                            service.submit(JobSpec::inverse(t.b).options(options), input)?
+                        }
+                        Direction::Forward => {
+                            let mut input = service.checkout_grid(t.b)?;
+                            input.as_mut_slice().copy_from_slice(t.grid.as_slice());
+                            service.submit(JobSpec::forward(t.b).options(options), input)?
+                        }
+                    };
+                    pending.push((ti, direction, handle));
+                    // Pace the NEXT arrival only — sleeping after the
+                    // final submission would pad the measured wall time.
+                    if let (Some(interval), true) = (interval, i + 1 < sb.jobs) {
+                        std::thread::sleep(interval);
+                    }
+                }
+                let mut latencies = Vec::with_capacity(pending.len());
+                for (ti, direction, handle) in pending {
+                    let t = &templates[ti];
+                    let (out, latency) = handle.wait_timed()?;
+                    let ok = match direction {
+                        Direction::Inverse => out
+                            .grid()
+                            .is_some_and(|g| g.as_slice() == t.grid.as_slice()),
+                        Direction::Forward => out
+                            .coeffs()
+                            .is_some_and(|c| c.as_slice() == t.fwd.as_slice()),
+                    };
+                    if !ok {
+                        return Err(Error::Service(format!(
+                            "parity mismatch: {direction:?} b={} diverged from the plan",
+                            t.b
+                        )));
+                    }
+                    service.recycle(out);
+                    latencies.push((t.b, latency.as_secs_f64()));
+                }
+                Ok(latencies)
+            }));
+        }
+        for h in handles {
+            per_client.push(h.join().expect("client thread panicked"));
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut all: Vec<(usize, f64)> = Vec::with_capacity(total_jobs);
+    for r in per_client {
+        all.extend(r?);
+    }
+    let throughput = total_jobs as f64 / wall;
+    let stats = service.stats();
+
+    let mut table = Table::new(&["B", "jobs", "p50", "p95", "p99", "max"]);
+    let mut records: Vec<String> = Vec::new();
+    for &b in &sb.bandwidths {
+        let mut lat: Vec<f64> = all
+            .iter()
+            .filter(|(lb, _)| *lb == b)
+            .map(|&(_, s)| s)
+            .collect();
+        lat.sort_by(|x, y| x.partial_cmp(y).expect("latencies are finite"));
+        let (p50, p95, p99) = (
+            percentile(&lat, 50.0),
+            percentile(&lat, 95.0),
+            percentile(&lat, 99.0),
+        );
+        let max = lat.last().copied().unwrap_or(0.0);
+        table.row(&[
+            b.to_string(),
+            lat.len().to_string(),
+            fmt_seconds(p50),
+            fmt_seconds(p95),
+            fmt_seconds(p99),
+            fmt_seconds(max),
+        ]);
+        records.push(format!(
+            "{{\"kind\": \"service_p99\", \"b\": {b}, \"threads\": {threads}, \
+             \"engine\": \"service\", \"jobs\": {}, \"p50_s\": {p50:.6e}, \
+             \"p95_s\": {p95:.6e}, \"p99_s\": {p99:.6e}, \"max_s\": {max:.6e}}}",
+            lat.len()
+        ));
+    }
+    table.print();
+    println!(
+        "throughput: {throughput:.1} jobs/s ({total_jobs} jobs in {}); \
+         batches {} (max size {}), registry {} plans ({} hits / {} misses / {} evictions), \
+         buffers created: {} workspaces, {} grids, {} coeffs",
+        fmt_seconds(wall),
+        stats.batches,
+        stats.max_batch_size,
+        stats.registry.plans,
+        stats.registry.hits,
+        stats.registry.misses,
+        stats.registry.evictions,
+        stats.buffers.workspaces_created,
+        stats.buffers.grids_created,
+        stats.buffers.coeffs_created,
+    );
+    println!("parity: all {total_jobs} results bit-identical to the registry plans");
+    // b = 0 marks the mixed-traffic aggregate (the per-bandwidth rows
+    // carry their own keys); per_job_s is gated in CI (lower = better,
+    // unlike raw throughput).
+    records.push(format!(
+        "{{\"kind\": \"service_throughput\", \"b\": 0, \"threads\": {threads}, \
+         \"engine\": \"service\", \"jobs\": {total_jobs}, \"wall_s\": {wall:.6e}, \
+         \"throughput_jobs_per_s\": {throughput:.3}, \"per_job_s\": {:.6e}}}",
+        wall / total_jobs as f64
+    ));
+    if let Some(path) = &sb.json {
+        append_json_records(path, &records)?;
+        println!("merged {} service records into {path}", records.len());
+    }
     Ok(())
 }
 

@@ -10,6 +10,7 @@
 //!   inverse     time the iFSOFT on random coefficients
 //!   match       rotational-matching demo (plant + recover a rotation)
 //!   simulate    multicore scaling curves (the Figs. 2-4 machinery)
+//!   serve-bench So3Service under concurrent mixed-bandwidth load
 //!
 //! common options:
 //!   --config <file.toml>      load defaults from a config file
@@ -26,6 +27,16 @@
 //!   --artifacts <dir>         artifact directory
 //!   --cores <list>            (simulate) core counts, e.g. "1,8,64"
 //!   --kind <fwd|inv>          (simulate) transform direction
+//!
+//! serve-bench options:
+//!   --clients <N>             client threads (default 4)
+//!   --jobs <N>                jobs per client (default 16)
+//!   --bandwidths <list>       mixed bandwidths, e.g. "8,16" (default)
+//!   --window-us <N>           micro-batch window override (µs)
+//!   --rate <jobs/s>           open-loop arrival rate per client
+//!                             (0 = burst, the default)
+//!   --json <path>             merge service_* records into a
+//!                             BENCH_fft.json-format report
 //! ```
 
 pub mod commands;
@@ -35,6 +46,34 @@ use crate::coordinator::PartitionStrategy;
 use crate::error::{Error, Result};
 use crate::pool::{PoolSpec, Schedule};
 
+/// `serve-bench` options: N client threads × mixed bandwidths ×
+/// open-loop arrival against one `So3Service`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeBenchOpts {
+    /// Concurrent client threads.
+    pub clients: usize,
+    /// Jobs submitted per client.
+    pub jobs: usize,
+    /// Bandwidth mix, round-robin per client.
+    pub bandwidths: Vec<usize>,
+    /// Open-loop arrival rate per client in jobs/s (0 = burst).
+    pub rate: f64,
+    /// Merge `service_*` records into this BENCH_fft.json-format file.
+    pub json: Option<String>,
+}
+
+impl Default for ServeBenchOpts {
+    fn default() -> Self {
+        Self {
+            clients: 4,
+            jobs: 16,
+            bandwidths: vec![8, 16],
+            rate: 0.0,
+            json: None,
+        }
+    }
+}
+
 /// Parsed invocation.
 #[derive(Debug, Clone)]
 pub struct Invocation {
@@ -42,6 +81,7 @@ pub struct Invocation {
     pub run: RunConfig,
     pub cores: Vec<usize>,
     pub kind: String,
+    pub serve: ServeBenchOpts,
 }
 
 /// Parse argv (excluding the program name).
@@ -57,6 +97,7 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
             run: RunConfig::default(),
             cores: vec![],
             kind: "fwd".into(),
+            serve: ServeBenchOpts::default(),
         });
     }
     let command = args[0].clone();
@@ -75,6 +116,7 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
     }
     let mut cores = vec![1, 2, 4, 8, 16, 32, 64];
     let mut kind = "fwd".to_string();
+    let mut serve = ServeBenchOpts::default();
     let mut i = 1;
     let need = |args: &[String], i: usize, flag: &str| -> Result<String> {
         args.get(i + 1)
@@ -157,6 +199,55 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
                 }
                 i += 1;
             }
+            "--clients" => {
+                serve.clients = need(args, i, a)?
+                    .parse()
+                    .ok()
+                    .filter(|&c: &usize| c >= 1)
+                    .ok_or_else(|| Error::Config("bad --clients (need >= 1)".into()))?;
+                i += 1;
+            }
+            "--jobs" => {
+                serve.jobs = need(args, i, a)?
+                    .parse()
+                    .ok()
+                    .filter(|&j: &usize| j >= 1)
+                    .ok_or_else(|| Error::Config("bad --jobs (need >= 1)".into()))?;
+                i += 1;
+            }
+            "--bandwidths" => {
+                let v = need(args, i, a)?;
+                serve.bandwidths = v
+                    .replace(',', " ")
+                    .split_whitespace()
+                    .map(|t| {
+                        t.parse()
+                            .map_err(|_| Error::Config("bad --bandwidths".into()))
+                    })
+                    .collect::<Result<Vec<usize>>>()?;
+                if serve.bandwidths.is_empty() {
+                    return Err(Error::Config("--bandwidths needs at least one value".into()));
+                }
+                i += 1;
+            }
+            "--window-us" => {
+                run.service.batch_window_us = need(args, i, a)?
+                    .parse()
+                    .map_err(|_| Error::Config("bad --window-us".into()))?;
+                i += 1;
+            }
+            "--rate" => {
+                serve.rate = need(args, i, a)?
+                    .parse()
+                    .ok()
+                    .filter(|r: &f64| r.is_finite() && *r >= 0.0)
+                    .ok_or_else(|| Error::Config("bad --rate (jobs/s, >= 0)".into()))?;
+                i += 1;
+            }
+            "--json" => {
+                serve.json = Some(need(args, i, a)?);
+                i += 1;
+            }
             _ => {
                 return Err(Error::Config(format!("unknown option {a:?}")));
             }
@@ -168,6 +259,7 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
         run,
         cores,
         kind,
+        serve,
     })
 }
 
@@ -192,6 +284,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "inverse" => commands::inverse(&inv),
         "match" => commands::match_demo(&inv),
         "simulate" => commands::simulate(&inv),
+        "serve-bench" => commands::serve_bench(&inv),
         other => Err(Error::Config(format!(
             "unknown command {other:?}; try `so3ft help`"
         ))),
@@ -237,6 +330,30 @@ mod tests {
         assert!(matches!(inv.run.exec.pool, PoolSpec::Owned));
         assert!(parse_args(&argv("roundtrip --pool rented")).is_err());
         assert!(parse_args(&argv("roundtrip --pool")).is_err());
+    }
+
+    #[test]
+    fn serve_bench_flags_parse() {
+        let inv = parse_args(&argv(
+            "serve-bench -t 2 --clients 3 --jobs 5 --bandwidths 4,8 --window-us 250 \
+             --rate 100 --json out.json",
+        ))
+        .unwrap();
+        assert_eq!(inv.command, "serve-bench");
+        assert_eq!(inv.serve.clients, 3);
+        assert_eq!(inv.serve.jobs, 5);
+        assert_eq!(inv.serve.bandwidths, vec![4, 8]);
+        assert_eq!(inv.run.service.batch_window_us, 250);
+        assert_eq!(inv.serve.rate, 100.0);
+        assert_eq!(inv.serve.json.as_deref(), Some("out.json"));
+        // Defaults.
+        let inv = parse_args(&argv("serve-bench")).unwrap();
+        assert_eq!(inv.serve, ServeBenchOpts::default());
+        // Validation.
+        assert!(parse_args(&argv("serve-bench --clients 0")).is_err());
+        assert!(parse_args(&argv("serve-bench --jobs zero")).is_err());
+        assert!(parse_args(&argv("serve-bench --bandwidths ,")).is_err());
+        assert!(parse_args(&argv("serve-bench --rate -3")).is_err());
     }
 
     #[test]

@@ -17,6 +17,12 @@
 //! real_input = false          # conjugate-even forward FFT stage
 //! pool = "owned"              # owned | global (persistent worker pool)
 //!
+//! [service]
+//! threads = 4                 # worker-pool size (0 = machine parallelism)
+//! batch_window_us = 200       # micro-batch window, microseconds (0 = off)
+//! registry_budget_mb = 2048   # LRU plan-cache budget (omit = unbounded)
+//! max_batch = 32              # jobs per micro-batch
+//!
 //! [runtime]
 //! artifacts = "artifacts"
 //! use_xla = false
@@ -97,11 +103,57 @@ impl ParsedConfig {
     }
 }
 
+/// `[service]` section: how a [`crate::service::So3Service`] built from
+/// this config is shaped (worker-pool size, plan-registry budget,
+/// micro-batch window).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServiceSettings {
+    /// Worker-pool size; 0 = the machine's available parallelism.
+    pub threads: usize,
+    /// Micro-batch window in microseconds (0 disables the wait; jobs
+    /// already queued under one key still coalesce).
+    pub batch_window_us: u64,
+    /// Plan-registry LRU budget over `table_bytes()`, in MiB
+    /// (`None` = unbounded).
+    pub registry_budget_mb: Option<usize>,
+    /// Upper bound on jobs per micro-batch.
+    pub max_batch: usize,
+}
+
+impl Default for ServiceSettings {
+    fn default() -> Self {
+        Self {
+            threads: 0,
+            batch_window_us: 0,
+            registry_budget_mb: None,
+            max_batch: 32,
+        }
+    }
+}
+
+impl ServiceSettings {
+    /// Start an [`crate::service::So3ServiceBuilder`] from these
+    /// settings (callers can chain further overrides before `build`).
+    pub fn to_builder(&self) -> crate::service::So3ServiceBuilder {
+        let mut builder = crate::service::So3Service::builder()
+            .batch_window(std::time::Duration::from_micros(self.batch_window_us))
+            .max_batch(self.max_batch);
+        if self.threads > 0 {
+            builder = builder.threads(self.threads);
+        }
+        if let Some(mb) = self.registry_budget_mb {
+            builder = builder.registry_budget_bytes(mb << 20);
+        }
+        builder
+    }
+}
+
 /// Fully-resolved run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub bandwidth: usize,
     pub exec: ExecutorConfig,
+    pub service: ServiceSettings,
     pub artifacts_dir: String,
     pub use_xla: bool,
     pub seed: u64,
@@ -112,6 +164,7 @@ impl Default for RunConfig {
         Self {
             bandwidth: 16,
             exec: ExecutorConfig::default(),
+            service: ServiceSettings::default(),
             artifacts_dir: "artifacts".into(),
             use_xla: false,
             seed: 42,
@@ -211,6 +264,21 @@ impl RunConfig {
             cfg.exec.pool = PoolSpec::parse(s)
                 .ok_or_else(|| Error::Config(format!("bad pool {s:?}")))?;
         }
+        if let Some(t) = p.get_usize("service", "threads")? {
+            cfg.service.threads = t;
+        }
+        if let Some(w) = p.get_usize("service", "batch_window_us")? {
+            cfg.service.batch_window_us = w as u64;
+        }
+        if let Some(mb) = p.get_usize("service", "registry_budget_mb")? {
+            cfg.service.registry_budget_mb = Some(mb);
+        }
+        if let Some(m) = p.get_usize("service", "max_batch")? {
+            if m == 0 {
+                return Err(Error::Config("[service] max_batch: must be >= 1".into()));
+            }
+            cfg.service.max_batch = m;
+        }
         if let Some(s) = p.get("runtime", "artifacts") {
             cfg.artifacts_dir = s.to_string();
         }
@@ -246,6 +314,12 @@ fft = "radix2-baseline"
 real_input = true
 pool = "global"
 
+[service]
+threads = 3
+batch_window_us = 250
+registry_budget_mb = 64
+max_batch = 8
+
 [runtime]
 artifacts = "my-artifacts"
 use_xla = true
@@ -266,9 +340,39 @@ seed = 7
         assert_eq!(cfg.exec.fft_engine, FftEngine::Radix2Baseline);
         assert!(cfg.exec.real_input);
         assert!(matches!(cfg.exec.pool, PoolSpec::Global));
+        assert_eq!(
+            cfg.service,
+            ServiceSettings {
+                threads: 3,
+                batch_window_us: 250,
+                registry_budget_mb: Some(64),
+                max_batch: 8,
+            }
+        );
         assert_eq!(cfg.artifacts_dir, "my-artifacts");
         assert!(cfg.use_xla);
         assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn service_defaults_and_validation() {
+        let cfg = RunConfig::from_parsed(&ParsedConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.service, ServiceSettings::default());
+        assert!(RunConfig::from_parsed(
+            &ParsedConfig::parse("[service]\nmax_batch = 0").unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_parsed(
+            &ParsedConfig::parse("[service]\nthreads = \"many\"").unwrap()
+        )
+        .is_err());
+        // Settings expand into a working service builder.
+        let cfg = RunConfig::from_parsed(
+            &ParsedConfig::parse("[service]\nthreads = 2\nbatch_window_us = 100").unwrap(),
+        )
+        .unwrap();
+        let service = cfg.service.to_builder().build().unwrap();
+        assert_eq!(service.threads(), 2);
     }
 
     #[test]

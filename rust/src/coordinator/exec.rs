@@ -262,6 +262,18 @@ impl Workspace {
     }
 }
 
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("bandwidth", &self.b)
+            .field("config", &self.config)
+            .field("table_bytes", &self.table_bytes())
+            .field("offload", &self.offload.is_some())
+            .field("pool", &self.pool)
+            .finish()
+    }
+}
+
 impl Executor {
     pub fn new(b: usize, config: ExecutorConfig) -> Result<Self> {
         if b == 0 {

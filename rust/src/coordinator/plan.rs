@@ -5,7 +5,7 @@ use crate::coordinator::partition;
 use crate::dwt::cluster::Cluster;
 
 /// How the order domain is partitioned into work packages.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PartitionStrategy {
     /// Geometric κ map with symmetry clusters, specials in a prologue —
     /// the paper's design.

@@ -41,7 +41,7 @@ pub fn v_scale(l: usize, b: usize) -> f64 {
 }
 
 /// Which dataflow evaluates the DWT/iDWT.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DwtAlgorithm {
     /// Row-wise matrix–vector products against full Wigner-d rows (the
     /// paper's benchmarked version; vectorizes over the ≤8 cluster
@@ -62,7 +62,7 @@ pub enum DwtAlgorithm {
 
 /// Numerical precision of the DWT accumulation (paper §4 uses 80-bit
 /// extended precision; we use double-double, see [`crate::xprec`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     Double,
     Extended,

@@ -404,7 +404,7 @@ impl WignerSource for TableSource<'_> {
 }
 
 /// Storage strategy selector used by the transform configs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum WignerStorage {
     /// Precompute symmetry-shared folded tables (paper's benchmarked
     /// setup, at half the pre-fold footprint).

@@ -43,6 +43,12 @@ pub enum Error {
     /// Thread-count request the pool cannot satisfy.
     InvalidThreads(usize),
 
+    /// Job-service problems: a payload that does not match the job
+    /// direction, a submission to a shut-down service, or a batch whose
+    /// plan could not be built (the build error is embedded in the
+    /// message, once per affected job).
+    Service(String),
+
     /// Configuration file / CLI parsing problems.
     Config(String),
 
@@ -97,6 +103,7 @@ impl fmt::Display for Error {
             Error::InvalidThreads(t) => {
                 write!(f, "invalid thread count {t}: must be >= 1")
             }
+            Error::Service(msg) => write!(f, "service error: {msg}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Runtime(msg) => write!(f, "xla runtime error: {msg}"),
             Error::MissingArtifact { b, path } => write!(
@@ -154,6 +161,9 @@ mod tests {
             .to_string()
             .contains("power of two"));
         assert!(Error::InvalidThreads(0).to_string().contains("thread count 0"));
+        assert!(Error::Service("queue closed".into())
+            .to_string()
+            .contains("queue closed"));
         assert!(Error::shape(4, 5, "ctx").to_string().contains("ctx"));
         assert!(Error::RealInputRequired { context: "forward" }
             .to_string()

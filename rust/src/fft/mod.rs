@@ -42,7 +42,7 @@ pub use split_radix::Radix4Plan;
 
 /// Executor-level FFT engine selection (see
 /// [`crate::coordinator::ExecutorConfig::fft_engine`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum FftEngine {
     /// The overhauled engine: radix-4 (split-radix-family) butterflies
     /// with the copy-free panel column pass; Bluestein for

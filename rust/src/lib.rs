@@ -23,13 +23,42 @@
 //!   and exposes them as an alternative DWT backend; Python is never on
 //!   the request path.
 //!
-//! ## Quickstart
+//! ## Quickstart — the serving front door
 //!
-//! Plan once, execute many times (the FFTW model): [`transform::So3Plan`]
-//! owns the precomputed Wigner tables, partition plan, and FFT twiddles;
-//! execution goes through caller-owned buffers and a reusable
-//! [`transform::Workspace`], so the serving path performs **zero**
-//! grid/coefficient allocation per transform.
+//! [`service::So3Service`] is the documented entry point: one object
+//! that owns a shared worker pool, a registry of lazily-built plans
+//! keyed by `(bandwidth, options)`, and a workspace/buffer pool — so
+//! many concurrent callers at mixed bandwidths share one substrate and
+//! the steady state allocates nothing per job. Same-key jobs arriving
+//! within the configured batch window are micro-batched (bit-identical
+//! to per-job execution).
+//!
+//! ```no_run
+//! use so3ft::service::{JobSpec, So3Service};
+//! use so3ft::so3::coeffs::So3Coeffs;
+//!
+//! let service = So3Service::builder().threads(4).build().unwrap();
+//!
+//! // Blocking conveniences (bandwidth comes from the payload):
+//! let coeffs = So3Coeffs::random(16, 42);
+//! let grid = service.inverse(coeffs).unwrap();       // synthesis (iFSOFT)
+//! let back = service.forward(grid).unwrap();         // analysis  (FSOFT)
+//!
+//! // The async job API — submit from any thread, wait on the handle:
+//! let grid = service.inverse(back).unwrap();
+//! let handle = service.submit(JobSpec::forward(16), grid).unwrap();
+//! let out = handle.wait().unwrap().into_coeffs().unwrap();
+//! service.recycle_coeffs(out); // return buffers for the zero-alloc steady state
+//! ```
+//!
+//! ## The power-user path
+//!
+//! [`transform::So3Plan`] stays the explicit planner/session API (the
+//! FFTW model): plan once per `(bandwidth, config)`, execute
+//! allocation-free through caller-owned buffers and a reusable
+//! [`transform::Workspace`] (`forward_into` / `inverse_into`, batch
+//! variants). `So3Service::plan` hands out the registry's shared
+//! `Arc<So3Plan>` when you want both worlds.
 //!
 //! ```no_run
 //! use so3ft::transform::So3Plan;
@@ -38,28 +67,17 @@
 //!
 //! let b = 16; // bandwidth (power of two on the strict planner path)
 //! let plan = So3Plan::builder(b).threads(4).build().unwrap();
-//!
-//! // One-off (allocating) conveniences:
-//! let coeffs = So3Coeffs::random(b, 42);
-//! let grid = plan.inverse(&coeffs).unwrap();  // synthesis (iFSOFT)
-//! let back = plan.forward(&grid).unwrap();    // analysis  (FSOFT)
-//! assert!(coeffs.max_abs_error(&back) < 1e-10);
-//!
-//! // Serving path: caller-owned buffers, no allocation per call.
 //! let mut ws = plan.make_workspace();
+//! let coeffs = So3Coeffs::random(b, 42);
 //! let mut grid_buf = So3Grid::zeros(b).unwrap();
 //! let mut coeff_buf = So3Coeffs::zeros(b);
 //! plan.inverse_into(&coeffs, &mut grid_buf, &mut ws).unwrap();
 //! plan.forward_into(&grid_buf, &mut coeff_buf, &mut ws).unwrap();
-//!
-//! // Batches amortize the workspace across many signals:
-//! let batch: Vec<So3Coeffs> = (0..8).map(|i| So3Coeffs::random(b, i)).collect();
-//! let grids = plan.inverse_batch(&batch).unwrap();
-//! assert_eq!(grids.len(), 8);
+//! assert!(coeffs.max_abs_error(&coeff_buf) < 1e-10);
 //! ```
 //!
-//! The pre-planner handle `transform::So3Fft` remains as a soft-deprecated
-//! facade over `So3Plan`; see `docs/MIGRATION.md`.
+//! The pre-planner handle `transform::So3Fft` is **deprecated** (a thin
+//! facade over `So3Plan`); see `docs/MIGRATION.md`.
 
 pub mod apps;
 pub mod bench_util;
@@ -72,6 +90,7 @@ pub mod fft;
 pub mod pool;
 pub mod prng;
 pub mod runtime;
+pub mod service;
 pub mod simulator;
 pub mod so3;
 pub mod testkit;
@@ -81,3 +100,4 @@ pub mod xprec;
 
 pub use error::{Error, Result};
 pub use fft::complex::Complex64;
+pub use service::So3Service;

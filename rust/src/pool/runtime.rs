@@ -91,7 +91,7 @@ struct PoolShared {
 }
 
 fn lock(m: &Mutex<PoolState>) -> MutexGuard<'_, PoolState> {
-    m.lock().unwrap_or_else(|p| p.into_inner())
+    crate::util::lock_unpoisoned(m)
 }
 
 fn wait<'a>(cv: &Condvar, guard: MutexGuard<'a, PoolState>) -> MutexGuard<'a, PoolState> {

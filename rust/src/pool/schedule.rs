@@ -1,7 +1,7 @@
 //! Loop scheduling policies (the OpenMP `schedule(...)` clause).
 
 /// How loop iterations are assigned to workers.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Schedule {
     /// Self-scheduling from a shared atomic cursor, `chunk` iterations at
     /// a time — OpenMP `schedule(dynamic, chunk)`. The paper's choice

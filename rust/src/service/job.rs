@@ -1,0 +1,380 @@
+//! The typed job surface of [`So3Service`](super::So3Service): specs,
+//! payloads, priorities, and completion handles.
+//!
+//! A job is one transform request: a [`JobSpec`] (direction, bandwidth,
+//! [`PlanOptions`], priority) plus a [`JobInput`] payload. Submission
+//! returns a [`JobHandle`]; the dispatcher fulfills it once the job's
+//! micro-batch executes, and [`JobHandle::wait`] yields the
+//! [`JobOutput`].
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::service::registry::{PlanKey, PlanOptions};
+use crate::so3::coeffs::So3Coeffs;
+use crate::so3::sampling::So3Grid;
+use crate::util::lock_unpoisoned as lock;
+
+/// Transform direction of a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    /// Analysis (FSOFT): grid samples → Fourier coefficients.
+    Forward,
+    /// Synthesis (iFSOFT): Fourier coefficients → grid samples.
+    Inverse,
+}
+
+/// Dispatch priority. Higher levels are dequeued first; within one
+/// level jobs run in submission (FIFO) order. Priority selects which
+/// batch *leads*; micro-batching still coalesces same-key jobs of any
+/// priority into the led batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum JobPriority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+/// What to run: direction, bandwidth, plan options, priority.
+///
+/// `(direction, bandwidth, options)` is the **batch key**: jobs sharing
+/// it that arrive within the service's batch window execute as one
+/// micro-batch through the plan's `*_batch_into` entry points
+/// (bit-identical to per-job execution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobSpec {
+    pub direction: Direction,
+    pub bandwidth: usize,
+    pub options: PlanOptions,
+    pub priority: JobPriority,
+}
+
+impl JobSpec {
+    /// An analysis (FSOFT) job with default options and priority.
+    pub fn forward(bandwidth: usize) -> Self {
+        Self {
+            direction: Direction::Forward,
+            bandwidth,
+            options: PlanOptions::default(),
+            priority: JobPriority::default(),
+        }
+    }
+
+    /// A synthesis (iFSOFT) job with default options and priority.
+    pub fn inverse(bandwidth: usize) -> Self {
+        Self {
+            direction: Direction::Inverse,
+            ..Self::forward(bandwidth)
+        }
+    }
+
+    /// Override the plan options (a new options value is a new plan
+    /// registry key — and a new batch key).
+    pub fn options(mut self, options: PlanOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Override the dispatch priority.
+    pub fn priority(mut self, priority: JobPriority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// The coalescing key: jobs batch together iff this matches.
+    pub(crate) fn batch_key(&self) -> BatchKey {
+        BatchKey {
+            direction: self.direction,
+            plan: PlanKey {
+                bandwidth: self.bandwidth,
+                options: self.options,
+            },
+        }
+    }
+}
+
+/// `(direction, plan-key)` — what micro-batching coalesces on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct BatchKey {
+    pub direction: Direction,
+    pub plan: PlanKey,
+}
+
+/// Job payload: a grid for forward jobs, coefficients for inverse jobs.
+/// The service takes ownership and **recycles the buffer into its pool**
+/// after execution — pair with
+/// [`So3Service::checkout_grid`](super::So3Service::checkout_grid) /
+/// [`checkout_coeffs`](super::So3Service::checkout_coeffs) for a
+/// steady-state loop that allocates nothing per job.
+#[derive(Debug, Clone)]
+pub enum JobInput {
+    Grid(So3Grid),
+    Coeffs(So3Coeffs),
+}
+
+impl JobInput {
+    pub fn bandwidth(&self) -> usize {
+        match self {
+            JobInput::Grid(g) => g.bandwidth(),
+            JobInput::Coeffs(c) => c.bandwidth(),
+        }
+    }
+
+    /// Human-readable payload kind (for error messages).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobInput::Grid(_) => "grid",
+            JobInput::Coeffs(_) => "coefficient",
+        }
+    }
+}
+
+impl From<So3Grid> for JobInput {
+    fn from(g: So3Grid) -> Self {
+        JobInput::Grid(g)
+    }
+}
+
+impl From<So3Coeffs> for JobInput {
+    fn from(c: So3Coeffs) -> Self {
+        JobInput::Coeffs(c)
+    }
+}
+
+/// Job result: coefficients for forward jobs, a grid for inverse jobs.
+/// Hand it back to the service with
+/// [`So3Service::recycle`](super::So3Service::recycle) once consumed to
+/// keep the steady-state path allocation-free.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobOutput {
+    Coeffs(So3Coeffs),
+    Grid(So3Grid),
+}
+
+impl JobOutput {
+    pub fn bandwidth(&self) -> usize {
+        match self {
+            JobOutput::Coeffs(c) => c.bandwidth(),
+            JobOutput::Grid(g) => g.bandwidth(),
+        }
+    }
+
+    /// The coefficients of a forward job (`None` for an inverse result).
+    pub fn into_coeffs(self) -> Option<So3Coeffs> {
+        match self {
+            JobOutput::Coeffs(c) => Some(c),
+            JobOutput::Grid(_) => None,
+        }
+    }
+
+    /// The grid of an inverse job (`None` for a forward result).
+    pub fn into_grid(self) -> Option<So3Grid> {
+        match self {
+            JobOutput::Grid(g) => Some(g),
+            JobOutput::Coeffs(_) => None,
+        }
+    }
+
+    pub fn coeffs(&self) -> Option<&So3Coeffs> {
+        match self {
+            JobOutput::Coeffs(c) => Some(c),
+            JobOutput::Grid(_) => None,
+        }
+    }
+
+    pub fn grid(&self) -> Option<&So3Grid> {
+        match self {
+            JobOutput::Grid(g) => Some(g),
+            JobOutput::Coeffs(_) => None,
+        }
+    }
+}
+
+/// Completion slot shared between a [`JobHandle`] and the dispatcher.
+pub(crate) struct JobState {
+    /// `Some((result, latency))` once fulfilled; taken by `wait`.
+    slot: Mutex<Option<(Result<JobOutput>, Duration)>>,
+    cv: Condvar,
+    submitted: Instant,
+}
+
+impl JobState {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(Self {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+            submitted: Instant::now(),
+        })
+    }
+
+    /// Publish the result (dispatcher side) and wake the waiter. The
+    /// recorded latency is submit-to-fulfillment wall time.
+    pub(crate) fn fulfill(&self, result: Result<JobOutput>) {
+        let latency = self.submitted.elapsed();
+        let mut slot = lock(&self.slot);
+        *slot = Some((result, latency));
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to a submitted job. Blocks on [`Self::wait`] until the
+/// dispatcher fulfills it. Dropping the handle abandons the result:
+/// the job still runs and its *input* buffer is recycled, but the
+/// unclaimed *output* buffer is dropped with the handle instead of
+/// returning to the pool — fire-and-forget traffic therefore allocates
+/// one output per job; `wait()` + `recycle()` to stay allocation-free.
+pub struct JobHandle {
+    pub(crate) state: Arc<JobState>,
+}
+
+impl JobHandle {
+    /// Block until the job completes and return its output.
+    pub fn wait(self) -> Result<JobOutput> {
+        self.wait_timed().map(|(out, _)| out)
+    }
+
+    /// Block until the job completes; also return the submit-to-complete
+    /// latency (what `serve-bench` aggregates into p50/p99).
+    pub fn wait_timed(self) -> Result<(JobOutput, Duration)> {
+        let mut slot = lock(&self.state.slot);
+        loop {
+            if let Some((result, latency)) = slot.take() {
+                return result.map(|out| (out, latency));
+            }
+            slot = self.state.cv.wait(slot).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Non-blocking completion check.
+    pub fn is_done(&self) -> bool {
+        lock(&self.state.slot).is_some()
+    }
+}
+
+impl fmt::Debug for JobHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("JobHandle")
+            .field("done", &self.is_done())
+            .finish()
+    }
+}
+
+/// One queued job (spec + payload + completion slot).
+pub(crate) struct QueuedJob {
+    pub spec: JobSpec,
+    pub input: JobInput,
+    pub state: Arc<JobState>,
+}
+
+/// Index of the job that leads the next batch: highest priority wins;
+/// within a priority level the earliest submission (the deque is kept
+/// in submission order) wins.
+pub(crate) fn pick_leader(jobs: &VecDeque<QueuedJob>) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, job) in jobs.iter().enumerate() {
+        match best {
+            None => best = Some(i),
+            Some(b) if job.spec.priority > jobs[b].spec.priority => best = Some(i),
+            Some(_) => {}
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queued(spec: JobSpec) -> QueuedJob {
+        QueuedJob {
+            spec,
+            input: JobInput::Coeffs(So3Coeffs::zeros(spec.bandwidth)),
+            state: JobState::new(),
+        }
+    }
+
+    #[test]
+    fn priority_orders_low_normal_high() {
+        assert!(JobPriority::Low < JobPriority::Normal);
+        assert!(JobPriority::Normal < JobPriority::High);
+        assert_eq!(JobPriority::default(), JobPriority::Normal);
+    }
+
+    #[test]
+    fn leader_is_highest_priority_then_fifo() {
+        let mut jobs = VecDeque::new();
+        jobs.push_back(queued(JobSpec::inverse(4).priority(JobPriority::Low)));
+        jobs.push_back(queued(JobSpec::inverse(4)));
+        jobs.push_back(queued(JobSpec::inverse(8).priority(JobPriority::High)));
+        jobs.push_back(queued(JobSpec::inverse(16).priority(JobPriority::High)));
+        // The first High job leads, not the later one.
+        assert_eq!(pick_leader(&jobs), Some(2));
+        jobs.remove(2);
+        jobs.remove(2);
+        // Then Normal beats Low regardless of arrival order.
+        assert_eq!(pick_leader(&jobs), Some(1));
+        jobs.clear();
+        assert_eq!(pick_leader(&jobs), None);
+    }
+
+    #[test]
+    fn batch_key_separates_direction_bandwidth_options() {
+        let a = JobSpec::forward(8);
+        let b = JobSpec::inverse(8);
+        let c = JobSpec::forward(16);
+        let opts = PlanOptions {
+            real_input: true,
+            ..PlanOptions::default()
+        };
+        let d = JobSpec::forward(8).options(opts);
+        assert_ne!(a.batch_key(), b.batch_key());
+        assert_ne!(a.batch_key(), c.batch_key());
+        assert_ne!(a.batch_key(), d.batch_key());
+        // Priority does NOT split batches.
+        assert_eq!(
+            a.batch_key(),
+            JobSpec::forward(8).priority(JobPriority::High).batch_key()
+        );
+    }
+
+    #[test]
+    fn output_accessors_are_typed() {
+        let out = JobOutput::Coeffs(So3Coeffs::zeros(4));
+        assert_eq!(out.bandwidth(), 4);
+        assert!(out.coeffs().is_some());
+        assert!(out.grid().is_none());
+        assert!(out.clone().into_grid().is_none());
+        assert!(out.into_coeffs().is_some());
+        let out = JobOutput::Grid(So3Grid::zeros(2).unwrap());
+        assert!(out.clone().into_grid().is_some());
+        assert!(out.into_coeffs().is_none());
+    }
+
+    #[test]
+    fn input_kind_and_bandwidth() {
+        let g: JobInput = So3Grid::zeros(2).unwrap().into();
+        assert_eq!(g.kind(), "grid");
+        assert_eq!(g.bandwidth(), 2);
+        let c: JobInput = So3Coeffs::zeros(4).into();
+        assert_eq!(c.kind(), "coefficient");
+        assert_eq!(c.bandwidth(), 4);
+    }
+
+    #[test]
+    fn handle_fulfill_wakes_waiter_with_latency() {
+        let state = JobState::new();
+        let handle = JobHandle {
+            state: Arc::clone(&state),
+        };
+        assert!(!handle.is_done());
+        let waiter = std::thread::spawn(move || handle.wait_timed().unwrap());
+        state.fulfill(Ok(JobOutput::Coeffs(So3Coeffs::zeros(2))));
+        let (out, latency) = waiter.join().unwrap();
+        assert_eq!(out.bandwidth(), 2);
+        assert!(latency.as_nanos() > 0);
+    }
+}

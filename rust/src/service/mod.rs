@@ -1,0 +1,886 @@
+//! [`So3Service`] — the multi-tenant serving front door.
+//!
+//! [`So3Plan`] is the power-user path: one caller, one plan, one
+//! workspace, explicit buffers. A serving process has the opposite
+//! shape — **many concurrent callers, mixed bandwidths, no caller-owned
+//! infrastructure** — and this module packages that as one object:
+//!
+//! * one shared [`WorkerPool`] executes every plan's parallel regions
+//!   (workers are spawned once, per-worker kernel scratch stays pinned);
+//! * a [`PlanRegistry`] lazily builds and caches [`So3Plan`]s keyed by
+//!   `(bandwidth, PlanOptions)` behind an `RwLock`, with an optional
+//!   LRU byte budget over `table_bytes()`;
+//! * a [`WorkspacePool`] recycles workspaces and grid/coefficient
+//!   buffers per bandwidth, so the steady state allocates **nothing**
+//!   per job;
+//! * a typed job API — [`JobSpec`] + [`So3Service::submit`] →
+//!   [`JobHandle::wait`] — runs on a small dispatcher thread that
+//!   **micro-batches same-key jobs** arriving within a configurable
+//!   window through the plan's `forward_batch_into` /
+//!   `inverse_batch_into` (bit-identical to per-job execution, proven
+//!   by `rust/tests/service_api.rs`).
+//!
+//! ```no_run
+//! use so3ft::service::{JobSpec, So3Service};
+//! use so3ft::so3::coeffs::So3Coeffs;
+//!
+//! let service = So3Service::builder().threads(4).build().unwrap();
+//! // Blocking conveniences…
+//! let grid = service.inverse(So3Coeffs::random(16, 1)).unwrap();
+//! let coeffs = service.forward(grid).unwrap();
+//! // …or the async job API:
+//! let grid = service.inverse(coeffs).unwrap();
+//! let handle = service.submit(JobSpec::forward(16), grid).unwrap();
+//! let out = handle.wait().unwrap().into_coeffs().unwrap();
+//! service.recycle_coeffs(out); // keep the steady state allocation-free
+//! ```
+
+pub mod job;
+pub mod registry;
+pub mod workspace_pool;
+
+pub use job::{Direction, JobHandle, JobInput, JobOutput, JobPriority, JobSpec};
+pub use registry::{PlanKey, PlanOptions, PlanRegistry, RegistryStats};
+pub use workspace_pool::{WorkspacePool, WorkspacePoolStats};
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{TransformStats, Workspace};
+use crate::error::{Error, Result};
+use crate::pool::WorkerPool;
+use crate::so3::coeffs::So3Coeffs;
+use crate::so3::sampling::So3Grid;
+use crate::transform::So3Plan;
+use crate::util::lock_unpoisoned as lock;
+use job::{pick_leader, JobState, QueuedJob};
+
+struct QueueState {
+    /// Pending jobs in submission order.
+    jobs: VecDeque<QueuedJob>,
+    shutdown: bool,
+}
+
+struct JobQueue {
+    state: Mutex<QueueState>,
+    /// Wakes the dispatcher on submission and on shutdown.
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    max_batch: AtomicUsize,
+}
+
+/// Aggregate serving counters (see [`So3Service::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServiceStats {
+    pub jobs_submitted: u64,
+    /// Jobs fulfilled (successfully or with an error).
+    pub jobs_completed: u64,
+    /// Micro-batches executed; `jobs_completed / batches` is the mean
+    /// coalescing factor.
+    pub batches: u64,
+    /// Largest micro-batch executed so far.
+    pub max_batch_size: usize,
+    pub registry: RegistryStats,
+    pub buffers: WorkspacePoolStats,
+}
+
+struct ServiceInner {
+    threads: usize,
+    pool: Option<Arc<WorkerPool>>,
+    registry: PlanRegistry,
+    buffers: WorkspacePool,
+    queue: JobQueue,
+    batch_window: Duration,
+    max_batch: usize,
+    allow_any_bandwidth: bool,
+    default_options: PlanOptions,
+    stats: Counters,
+}
+
+/// See the [module docs](self). Shareable across caller threads as
+/// `Arc<So3Service>` (all entry points take `&self`); dropping the last
+/// handle drains the queue and joins the dispatcher.
+pub struct So3Service {
+    inner: Arc<ServiceInner>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl So3Service {
+    /// Start configuring a service.
+    pub fn builder() -> So3ServiceBuilder {
+        So3ServiceBuilder::new()
+    }
+
+    /// Default configuration: worker pool sized to the machine, batching
+    /// of already-queued same-key jobs, unbounded registry.
+    pub fn new() -> Result<Self> {
+        Self::builder().build()
+    }
+
+    /// Worker-pool size (the region width every cached plan runs at).
+    pub fn threads(&self) -> usize {
+        self.inner.threads
+    }
+
+    /// The shared worker pool (`None` when `threads == 1`: plans run
+    /// regions inline on the dispatcher).
+    pub fn worker_pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.inner.pool.as_ref()
+    }
+
+    /// The plan registry (diagnostics; plans are fetched via
+    /// [`Self::plan`]).
+    pub fn registry(&self) -> &PlanRegistry {
+        &self.inner.registry
+    }
+
+    /// The cached plan for `(bandwidth, options)` — the power-user
+    /// escape hatch: callers that want explicit `*_into` execution can
+    /// take the `Arc<So3Plan>` and drive it directly (it shares the
+    /// service's worker pool).
+    pub fn plan(&self, bandwidth: usize, options: PlanOptions) -> Result<Arc<So3Plan>> {
+        self.inner.registry.get(PlanKey { bandwidth, options })
+    }
+
+    /// Submit a job. Validation (payload kind vs direction, bandwidth
+    /// match, power-of-two unless the builder allowed any) happens here,
+    /// synchronously — a returned handle always receives a transform
+    /// result unless the plan itself fails to build.
+    pub fn submit(&self, spec: JobSpec, input: impl Into<JobInput>) -> Result<JobHandle> {
+        let input = input.into();
+        self.validate(&spec, &input)?;
+        let state = JobState::new();
+        let handle = JobHandle {
+            state: Arc::clone(&state),
+        };
+        {
+            let mut st = lock(&self.inner.queue.state);
+            if st.shutdown {
+                return Err(Error::Service("service is shutting down".into()));
+            }
+            // Count before the dispatcher can possibly complete the job,
+            // so `submitted >= completed` holds for every observer.
+            self.inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
+            st.jobs.push_back(QueuedJob {
+                spec,
+                input,
+                state,
+            });
+        }
+        self.inner.queue.cv.notify_all();
+        Ok(handle)
+    }
+
+    fn validate(&self, spec: &JobSpec, input: &JobInput) -> Result<()> {
+        if spec.bandwidth == 0 {
+            return Err(Error::InvalidBandwidth(0));
+        }
+        if !spec.bandwidth.is_power_of_two() && !self.inner.allow_any_bandwidth {
+            return Err(Error::NonPowerOfTwoBandwidth(spec.bandwidth));
+        }
+        match (spec.direction, input) {
+            (Direction::Forward, JobInput::Grid(_)) => {}
+            (Direction::Inverse, JobInput::Coeffs(_)) => {}
+            (direction, input) => {
+                return Err(Error::Service(format!(
+                    "{direction:?} job cannot take a {} payload",
+                    input.kind()
+                )))
+            }
+        }
+        if input.bandwidth() != spec.bandwidth {
+            return Err(Error::bandwidth(
+                spec.bandwidth,
+                input.bandwidth(),
+                "submit: input bandwidth",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Blocking analysis with the service's default options: submit,
+    /// wait, unwrap. The input buffer is recycled into the pool.
+    pub fn forward(&self, grid: So3Grid) -> Result<So3Coeffs> {
+        let spec = JobSpec::forward(grid.bandwidth()).options(self.inner.default_options);
+        match self.submit(spec, grid)?.wait()? {
+            JobOutput::Coeffs(c) => Ok(c),
+            JobOutput::Grid(_) => unreachable!("forward jobs yield coefficients"),
+        }
+    }
+
+    /// Blocking synthesis with the service's default options.
+    pub fn inverse(&self, coeffs: So3Coeffs) -> Result<So3Grid> {
+        let spec = JobSpec::inverse(coeffs.bandwidth()).options(self.inner.default_options);
+        match self.submit(spec, coeffs)?.wait()? {
+            JobOutput::Grid(g) => Ok(g),
+            JobOutput::Coeffs(_) => unreachable!("inverse jobs yield a grid"),
+        }
+    }
+
+    /// A pooled grid buffer (contents unspecified — overwrite it). Fill
+    /// and submit it; the service recycles it after execution.
+    pub fn checkout_grid(&self, b: usize) -> Result<So3Grid> {
+        self.inner.buffers.checkout_grid(b)
+    }
+
+    /// A pooled coefficient buffer (contents unspecified).
+    pub fn checkout_coeffs(&self, b: usize) -> Result<So3Coeffs> {
+        self.inner.buffers.checkout_coeffs(b)
+    }
+
+    /// Return a consumed job output to the buffer pool.
+    pub fn recycle(&self, output: JobOutput) {
+        match output {
+            JobOutput::Grid(g) => self.inner.buffers.checkin_grid(g),
+            JobOutput::Coeffs(c) => self.inner.buffers.checkin_coeffs(c),
+        }
+    }
+
+    pub fn recycle_grid(&self, g: So3Grid) {
+        self.inner.buffers.checkin_grid(g);
+    }
+
+    pub fn recycle_coeffs(&self, c: So3Coeffs) {
+        self.inner.buffers.checkin_coeffs(c);
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            jobs_submitted: self.inner.stats.submitted.load(Ordering::Relaxed),
+            jobs_completed: self.inner.stats.completed.load(Ordering::Relaxed),
+            batches: self.inner.stats.batches.load(Ordering::Relaxed),
+            max_batch_size: self.inner.stats.max_batch.load(Ordering::Relaxed),
+            registry: self.inner.registry.stats(),
+            buffers: self.inner.buffers.stats(),
+        }
+    }
+}
+
+impl fmt::Debug for So3Service {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("So3Service")
+            .field("threads", &self.inner.threads)
+            .field("batch_window", &self.inner.batch_window)
+            .field("max_batch", &self.inner.max_batch)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl Drop for So3Service {
+    /// Signal shutdown and join the dispatcher. Jobs already queued are
+    /// drained (their handles resolve); new submissions are rejected.
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.inner.queue.state);
+            st.shutdown = true;
+        }
+        self.inner.queue.cv.notify_all();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fluent configuration for [`So3Service`].
+pub struct So3ServiceBuilder {
+    threads: Option<usize>,
+    shared_pool: Option<Arc<WorkerPool>>,
+    batch_window: Duration,
+    max_batch: usize,
+    registry_budget: Option<usize>,
+    default_options: PlanOptions,
+    allow_any_bandwidth: bool,
+}
+
+impl So3ServiceBuilder {
+    fn new() -> Self {
+        Self {
+            threads: None,
+            shared_pool: None,
+            batch_window: Duration::ZERO,
+            max_batch: 32,
+            registry_budget: None,
+            default_options: PlanOptions::default(),
+            allow_any_bandwidth: false,
+        }
+    }
+
+    /// Worker-pool size (default: the machine's available parallelism;
+    /// `1` = sequential plans, no pool).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Execute on a caller-supplied shared [`WorkerPool`] instead of
+    /// spawning one (also sets `threads` to the pool size).
+    pub fn pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.threads = Some(pool.threads());
+        self.shared_pool = Some(pool);
+        self
+    }
+
+    /// How long the dispatcher holds a batch open for same-key jobs
+    /// after picking its leader. `ZERO` (the default) still coalesces
+    /// jobs that are *already queued* — it only skips the wait.
+    pub fn batch_window(mut self, window: Duration) -> Self {
+        self.batch_window = window;
+        self
+    }
+
+    /// Upper bound on jobs per micro-batch (default 32, must be ≥ 1).
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// LRU-evict cached plans once their summed `table_bytes()` exceeds
+    /// this budget (default: unbounded).
+    pub fn registry_budget_bytes(mut self, bytes: usize) -> Self {
+        self.registry_budget = Some(bytes);
+        self
+    }
+
+    /// Options used by the [`So3Service::forward`] /
+    /// [`So3Service::inverse`] conveniences (explicit [`JobSpec`]s carry
+    /// their own).
+    pub fn default_options(mut self, options: PlanOptions) -> Self {
+        self.default_options = options;
+        self
+    }
+
+    /// Accept non-power-of-two bandwidths (Bluestein FFT fallback).
+    pub fn allow_any_bandwidth(mut self) -> Self {
+        self.allow_any_bandwidth = true;
+        self
+    }
+
+    pub fn build(self) -> Result<So3Service> {
+        let threads = match self.threads {
+            Some(0) => return Err(Error::InvalidThreads(0)),
+            Some(t) => t,
+            None => std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+        };
+        if self.max_batch == 0 {
+            return Err(Error::Service("max_batch must be >= 1".into()));
+        }
+        let pool = match self.shared_pool {
+            Some(p) => Some(p),
+            None if threads > 1 => Some(Arc::new(WorkerPool::new(threads)?)),
+            None => None,
+        };
+        let inner = Arc::new(ServiceInner {
+            threads,
+            registry: PlanRegistry::new(
+                threads,
+                pool.clone(),
+                self.registry_budget,
+                self.allow_any_bandwidth,
+            ),
+            pool,
+            buffers: WorkspacePool::new(),
+            queue: JobQueue {
+                state: Mutex::new(QueueState {
+                    jobs: VecDeque::new(),
+                    shutdown: false,
+                }),
+                cv: Condvar::new(),
+            },
+            batch_window: self.batch_window,
+            max_batch: self.max_batch,
+            allow_any_bandwidth: self.allow_any_bandwidth,
+            default_options: self.default_options,
+            stats: Counters::default(),
+        });
+        let dispatcher_inner = Arc::clone(&inner);
+        let dispatcher = std::thread::Builder::new()
+            .name("so3ft-service".into())
+            .spawn(move || dispatcher_loop(&dispatcher_inner))
+            .map_err(Error::Io)?;
+        Ok(So3Service {
+            inner,
+            dispatcher: Some(dispatcher),
+        })
+    }
+}
+
+// ----------------------------------------------------------------------
+// Dispatcher
+// ----------------------------------------------------------------------
+
+fn dispatcher_loop(inner: &ServiceInner) {
+    while let Some(batch) = next_batch(inner) {
+        execute_batch(inner, batch);
+    }
+}
+
+/// Block for work, pick the leading job (priority, then FIFO), hold the
+/// batch open for the window, and drain every queued job sharing the
+/// leader's `(direction, bandwidth, options)` key in submission order.
+/// `None` once the queue is drained after shutdown.
+fn next_batch(inner: &ServiceInner) -> Option<Vec<QueuedJob>> {
+    let queue = &inner.queue;
+    let mut st = lock(&queue.state);
+    loop {
+        if !st.jobs.is_empty() {
+            break;
+        }
+        if st.shutdown {
+            return None;
+        }
+        st = queue.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+    }
+    let lead = pick_leader(&st.jobs).expect("queue is non-empty");
+    let key = st.jobs[lead].spec.batch_key();
+    if !inner.batch_window.is_zero() && !st.shutdown {
+        // Micro-batch window: wait for more same-key arrivals (the cv
+        // releases the lock, so submitters get in). Cut short on
+        // shutdown or once the batch is full.
+        let deadline = Instant::now() + inner.batch_window;
+        loop {
+            let matching = st.jobs.iter().filter(|j| j.spec.batch_key() == key).count();
+            if matching >= inner.max_batch || st.shutdown {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = queue
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = guard;
+        }
+    }
+    // The leader joins its batch FIRST — under a hot key with more than
+    // `max_batch` earlier same-key jobs queued, a FIFO-only drain would
+    // leave the high-priority leader behind and void its priority.
+    // (`lead` is still valid: the window wait only `push_back`s.)
+    let mut batch = Vec::new();
+    if let Some(job) = st.jobs.remove(lead) {
+        batch.push(job);
+    }
+    let mut rest = VecDeque::with_capacity(st.jobs.len());
+    while let Some(job) = st.jobs.pop_front() {
+        if batch.len() < inner.max_batch && job.spec.batch_key() == key {
+            batch.push(job);
+        } else {
+            rest.push_back(job);
+        }
+    }
+    st.jobs = rest;
+    Some(batch)
+}
+
+fn execute_batch(inner: &ServiceInner, batch: Vec<QueuedJob>) {
+    let spec = batch[0].spec;
+    inner.stats.batches.fetch_add(1, Ordering::Relaxed);
+    inner
+        .stats
+        .max_batch
+        .fetch_max(batch.len(), Ordering::Relaxed);
+
+    let plan = match inner.plan_for(&spec) {
+        Ok(plan) => plan,
+        Err(e) => return fail_batch(inner, batch, format!("plan build failed: {e}")),
+    };
+    let ws = match inner.buffers.checkout_workspace(spec.bandwidth) {
+        Ok(ws) => ws,
+        Err(e) => return fail_batch(inner, batch, format!("workspace checkout failed: {e}")),
+    };
+    // Buffers go back to the pool (and the workspace is checked in)
+    // *before* the handles resolve, so a caller that waits and then
+    // checks a buffer out is guaranteed the pooled allocation —
+    // the pointer-stability contract the serving tests pin.
+    let (states, results) = run_batch(inner, &plan, ws, batch);
+    debug_assert_eq!(states.len(), results.len());
+    for (state, result) in states.iter().zip(results) {
+        // Count before waking the waiter: a caller whose `wait` just
+        // returned must observe its own job in `jobs_completed`.
+        inner.stats.completed.fetch_add(1, Ordering::Relaxed);
+        state.fulfill(result);
+    }
+}
+
+impl ServiceInner {
+    fn plan_for(&self, spec: &JobSpec) -> Result<Arc<So3Plan>> {
+        self.registry.get(PlanKey {
+            bandwidth: spec.bandwidth,
+            options: spec.options,
+        })
+    }
+}
+
+/// Per-job results paired with the completion slots to fulfill.
+type BatchOutcome = (Vec<Arc<JobState>>, Vec<Result<JobOutput>>);
+
+/// The direction-specific types and hooks of one micro-batch. Two
+/// zero-sized impls keep [`run_batch_dir`] generic instead of
+/// duplicating the unpack -> checkout -> execute -> recycle sequence
+/// once per payload type.
+trait BatchDir {
+    type In;
+    type Out;
+    fn unpack(input: JobInput) -> Self::In;
+    fn checkout(pool: &WorkspacePool, b: usize) -> Result<Self::Out>;
+    fn recycle_in(pool: &WorkspacePool, x: Self::In);
+    fn recycle_out(pool: &WorkspacePool, x: Self::Out);
+    fn wrap(out: Self::Out) -> JobOutput;
+    fn batch(
+        plan: &So3Plan,
+        ins: &[Self::In],
+        outs: &mut [Self::Out],
+        ws: &mut Workspace,
+    ) -> Result<()>;
+    fn single(
+        plan: &So3Plan,
+        input: &Self::In,
+        out: &mut Self::Out,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats>;
+}
+
+/// Analysis (FSOFT): grid payloads -> coefficient outputs.
+struct Fwd;
+
+impl BatchDir for Fwd {
+    type In = So3Grid;
+    type Out = So3Coeffs;
+
+    fn unpack(input: JobInput) -> So3Grid {
+        match input {
+            JobInput::Grid(g) => g,
+            JobInput::Coeffs(_) => unreachable!("payload kind validated at submit"),
+        }
+    }
+
+    fn checkout(pool: &WorkspacePool, b: usize) -> Result<So3Coeffs> {
+        pool.checkout_coeffs(b)
+    }
+
+    fn recycle_in(pool: &WorkspacePool, g: So3Grid) {
+        pool.checkin_grid(g);
+    }
+
+    fn recycle_out(pool: &WorkspacePool, c: So3Coeffs) {
+        pool.checkin_coeffs(c);
+    }
+
+    fn wrap(out: So3Coeffs) -> JobOutput {
+        JobOutput::Coeffs(out)
+    }
+
+    fn batch(
+        plan: &So3Plan,
+        ins: &[So3Grid],
+        outs: &mut [So3Coeffs],
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        plan.forward_batch_into(ins, outs, ws)
+    }
+
+    fn single(
+        plan: &So3Plan,
+        input: &So3Grid,
+        out: &mut So3Coeffs,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        plan.forward_into(input, out, ws)
+    }
+}
+
+/// Synthesis (iFSOFT): coefficient payloads -> grid outputs.
+struct Inv;
+
+impl BatchDir for Inv {
+    type In = So3Coeffs;
+    type Out = So3Grid;
+
+    fn unpack(input: JobInput) -> So3Coeffs {
+        match input {
+            JobInput::Coeffs(c) => c,
+            JobInput::Grid(_) => unreachable!("payload kind validated at submit"),
+        }
+    }
+
+    fn checkout(pool: &WorkspacePool, b: usize) -> Result<So3Grid> {
+        pool.checkout_grid(b)
+    }
+
+    fn recycle_in(pool: &WorkspacePool, c: So3Coeffs) {
+        pool.checkin_coeffs(c);
+    }
+
+    fn recycle_out(pool: &WorkspacePool, g: So3Grid) {
+        pool.checkin_grid(g);
+    }
+
+    fn wrap(out: So3Grid) -> JobOutput {
+        JobOutput::Grid(out)
+    }
+
+    fn batch(
+        plan: &So3Plan,
+        ins: &[So3Coeffs],
+        outs: &mut [So3Grid],
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        plan.inverse_batch_into(ins, outs, ws)
+    }
+
+    fn single(
+        plan: &So3Plan,
+        input: &So3Coeffs,
+        out: &mut So3Grid,
+        ws: &mut Workspace,
+    ) -> Result<TransformStats> {
+        plan.inverse_into(input, out, ws)
+    }
+}
+
+/// Execute one micro-batch on pooled buffers: the whole batch through
+/// the plan's `*_batch_into` fast path, falling back to per-job
+/// execution on failure so one bad payload (or a kernel panic it
+/// triggers — caught here, the dispatcher survives) cannot fail its
+/// batch neighbors. Inputs are recycled and the workspace returned in
+/// every path, before any handle resolves.
+fn run_batch(
+    inner: &ServiceInner,
+    plan: &So3Plan,
+    mut ws: Workspace,
+    batch: Vec<QueuedJob>,
+) -> BatchOutcome {
+    let outcome = match batch[0].spec.direction {
+        Direction::Forward => run_batch_dir::<Fwd>(inner, plan, &mut ws, batch),
+        Direction::Inverse => run_batch_dir::<Inv>(inner, plan, &mut ws, batch),
+    };
+    inner.buffers.checkin_workspace(ws);
+    outcome
+}
+
+fn run_batch_dir<D: BatchDir>(
+    inner: &ServiceInner,
+    plan: &So3Plan,
+    ws: &mut Workspace,
+    batch: Vec<QueuedJob>,
+) -> BatchOutcome {
+    let b = batch[0].spec.bandwidth;
+    let n = batch.len();
+    let mut states = Vec::with_capacity(n);
+    let mut ins = Vec::with_capacity(n);
+    for job in batch {
+        ins.push(D::unpack(job.input));
+        states.push(job.state);
+    }
+    // Pooled outputs. Checkout cannot fail for the b >= 1 validated at
+    // submit; the graceful branch keeps the dispatcher alive anyway.
+    let outs: Result<Vec<D::Out>> = (0..n).map(|_| D::checkout(&inner.buffers, b)).collect();
+    let mut outs = match outs {
+        Ok(outs) => outs,
+        Err(e) => {
+            for input in ins {
+                D::recycle_in(&inner.buffers, input);
+            }
+            let msg = format!("output buffer checkout failed: {e}");
+            let results = states
+                .iter()
+                .map(|_| Err(Error::Service(msg.clone())))
+                .collect();
+            return (states, results);
+        }
+    };
+    // Fast path: the whole batch through one `*_batch_into` call.
+    let batch_ok = matches!(
+        catch_unwind(AssertUnwindSafe(|| D::batch(plan, &ins, &mut outs, ws))),
+        Ok(Ok(()))
+    );
+    let results: Vec<Result<JobOutput>> = if batch_ok {
+        outs.into_iter().map(|out| Ok(D::wrap(out))).collect()
+    } else {
+        // Per-job isolation: rerun each job individually so every
+        // handle gets its own typed outcome. Outputs are fully
+        // overwritten per run, so any partial batch state is moot.
+        ins.iter()
+            .zip(outs)
+            .map(|(input, mut out)| {
+                let run =
+                    catch_unwind(AssertUnwindSafe(|| D::single(plan, input, &mut out, ws)));
+                match run {
+                    Ok(Ok(_stats)) => Ok(D::wrap(out)),
+                    Ok(Err(e)) => {
+                        D::recycle_out(&inner.buffers, out);
+                        Err(Error::Service(format!("job execution failed: {e}")))
+                    }
+                    Err(_) => {
+                        D::recycle_out(&inner.buffers, out);
+                        Err(Error::Service("job execution panicked".into()))
+                    }
+                }
+            })
+            .collect()
+    };
+    for input in ins {
+        D::recycle_in(&inner.buffers, input);
+    }
+    (states, results)
+}
+
+/// Fail every job of a batch with one (cloned) service error.
+fn fail_batch(inner: &ServiceInner, batch: Vec<QueuedJob>, msg: String) {
+    for job in batch {
+        // Recycle the payloads: the buffers are reusable even though
+        // the jobs failed.
+        match job.input {
+            JobInput::Grid(g) => inner.buffers.checkin_grid(g),
+            JobInput::Coeffs(c) => inner.buffers.checkin_coeffs(c),
+        }
+        inner.stats.completed.fetch_add(1, Ordering::Relaxed);
+        job.state.fulfill(Err(Error::Service(msg.clone())));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_validation() {
+        let service = So3Service::builder().threads(1).build().unwrap();
+        assert_eq!(service.threads(), 1);
+        assert!(service.worker_pool().is_none());
+        assert!(matches!(
+            So3Service::builder().threads(0).build(),
+            Err(Error::InvalidThreads(0))
+        ));
+        assert!(So3Service::builder()
+            .threads(1)
+            .max_batch(0)
+            .build()
+            .is_err());
+        let par = So3Service::builder().threads(2).build().unwrap();
+        assert_eq!(par.worker_pool().unwrap().threads(), 2);
+    }
+
+    #[test]
+    fn shared_pool_is_adopted() {
+        let pool = Arc::new(WorkerPool::new(2).unwrap());
+        let service = So3Service::builder()
+            .pool(Arc::clone(&pool))
+            .build()
+            .unwrap();
+        assert_eq!(service.threads(), 2);
+        assert!(Arc::ptr_eq(service.worker_pool().unwrap(), &pool));
+        // Cached plans run on the same pool instance.
+        let plan = service.plan(4, PlanOptions::default()).unwrap();
+        assert!(Arc::ptr_eq(plan.pool().unwrap(), &pool));
+    }
+
+    #[test]
+    fn blocking_conveniences_roundtrip() {
+        let service = So3Service::builder().threads(2).build().unwrap();
+        let coeffs = So3Coeffs::random(8, 11);
+        let grid = service.inverse(coeffs.clone()).unwrap();
+        let back = service.forward(grid).unwrap();
+        assert!(coeffs.max_abs_error(&back) < 1e-10);
+    }
+
+    #[test]
+    fn submit_validation_is_typed() {
+        let service = So3Service::builder().threads(1).build().unwrap();
+        // Payload kind mismatch.
+        assert!(matches!(
+            service.submit(JobSpec::forward(4), So3Coeffs::zeros(4)),
+            Err(Error::Service(_))
+        ));
+        assert!(matches!(
+            service.submit(JobSpec::inverse(4), So3Grid::zeros(4).unwrap()),
+            Err(Error::Service(_))
+        ));
+        // Bandwidth mismatch between spec and payload.
+        assert!(matches!(
+            service.submit(JobSpec::inverse(8), So3Coeffs::zeros(4)),
+            Err(Error::BandwidthMismatch { expected: 8, got: 4, .. })
+        ));
+        // Strict power-of-two validation (and the escape hatch).
+        assert!(matches!(
+            service.submit(JobSpec::inverse(6), So3Coeffs::zeros(6)),
+            Err(Error::NonPowerOfTwoBandwidth(6))
+        ));
+        assert!(matches!(
+            service.submit(JobSpec::inverse(0), So3Coeffs::zeros(4)),
+            Err(Error::InvalidBandwidth(0))
+        ));
+        let lenient = So3Service::builder()
+            .threads(1)
+            .allow_any_bandwidth()
+            .build()
+            .unwrap();
+        let g = lenient.inverse(So3Coeffs::random(6, 1)).unwrap();
+        assert_eq!(g.bandwidth(), 6);
+    }
+
+    #[test]
+    fn plan_build_failure_fails_the_job_not_the_service() {
+        use crate::dwt::{DwtAlgorithm, Precision};
+        let service = So3Service::builder().threads(1).build().unwrap();
+        // clenshaw + extended is rejected at Executor::new — the plan
+        // build fails inside the dispatcher, after submit validation.
+        let bad = PlanOptions {
+            algorithm: DwtAlgorithm::Clenshaw,
+            precision: Precision::Extended,
+            ..PlanOptions::default()
+        };
+        let handle = service
+            .submit(JobSpec::inverse(4).options(bad), So3Coeffs::zeros(4))
+            .unwrap();
+        assert!(matches!(handle.wait(), Err(Error::Service(_))));
+        // The dispatcher survives and keeps serving.
+        let grid = service.inverse(So3Coeffs::random(4, 2)).unwrap();
+        assert_eq!(grid.bandwidth(), 4);
+    }
+
+    #[test]
+    fn drop_drains_pending_jobs() {
+        let service = So3Service::builder().threads(1).build().unwrap();
+        let handles: Vec<JobHandle> = (0..4)
+            .map(|i| {
+                service
+                    .submit(JobSpec::inverse(4), So3Coeffs::random(4, i))
+                    .unwrap()
+            })
+            .collect();
+        drop(service);
+        for h in handles {
+            assert!(h.wait().is_ok(), "queued jobs must resolve across drop");
+        }
+    }
+
+    #[test]
+    fn stats_count_batches_and_jobs() {
+        let service = So3Service::builder().threads(1).build().unwrap();
+        for i in 0..3 {
+            let _ = service.inverse(So3Coeffs::random(4, i)).unwrap();
+        }
+        let s = service.stats();
+        assert_eq!(s.jobs_submitted, 3);
+        assert_eq!(s.jobs_completed, 3);
+        assert!(s.batches >= 1 && s.batches <= 3);
+        assert!(s.max_batch_size >= 1);
+        assert_eq!(s.registry.plans, 1);
+    }
+}

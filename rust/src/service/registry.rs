@@ -1,0 +1,443 @@
+//! The plan registry: a lazily-built, concurrently-shared cache of
+//! [`So3Plan`]s keyed by `(bandwidth, PlanOptions)`.
+//!
+//! Plans are the expensive part of serving (Wigner tables, partition
+//! plans, FFT twiddles); the registry builds each key **once**, hands
+//! out `Arc` clones to every caller, and — when configured with a byte
+//! budget — evicts least-recently-used plans using the same
+//! [`So3Plan::table_bytes`] accounting `WignerStorage::auto` uses.
+//! Eviction only drops the registry's reference: in-flight callers
+//! holding an `Arc` keep executing on the evicted plan, and a later
+//! request for the key simply rebuilds it.
+
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+use crate::coordinator::{ExecutorConfig, PartitionStrategy};
+use crate::dwt::tables::WignerStorage;
+use crate::dwt::{DwtAlgorithm, Precision};
+use crate::error::Result;
+use crate::fft::FftEngine;
+use crate::pool::{PoolSpec, Schedule, WorkerPool};
+use crate::transform::So3Plan;
+use crate::util::{lock_unpoisoned, read_unpoisoned as read, write_unpoisoned as write};
+
+/// The plan-shaping configuration axes — everything of
+/// [`ExecutorConfig`] except the execution substrate (`threads`,
+/// `pool`), which the owning [`So3Service`](super::So3Service) supplies.
+/// Hashable/comparable, so it forms registry and batch keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanOptions {
+    /// Loop schedule for the DWT region (paper default: `dynamic`).
+    pub schedule: Schedule,
+    /// Order-domain partitioning strategy.
+    pub strategy: PartitionStrategy,
+    /// DWT dataflow (default: the β-parity-folded engine).
+    pub algorithm: DwtAlgorithm,
+    /// Wigner row storage.
+    pub storage: WignerStorage,
+    /// DWT accumulation precision.
+    pub precision: Precision,
+    /// FFT-stage engine.
+    pub fft_engine: FftEngine,
+    /// Conjugate-even forward FFT stage (real samples only).
+    pub real_input: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        Self::from_exec(&ExecutorConfig::default())
+    }
+}
+
+impl PlanOptions {
+    /// The plan-shaping axes of an executor config (drops `threads` and
+    /// `pool`, which the service owns).
+    pub fn from_exec(config: &ExecutorConfig) -> Self {
+        Self {
+            schedule: config.schedule,
+            strategy: config.strategy,
+            algorithm: config.algorithm,
+            storage: config.storage,
+            precision: config.precision,
+            fft_engine: config.fft_engine,
+            real_input: config.real_input,
+        }
+    }
+
+    /// Expand back into a full executor config on the given substrate.
+    pub fn to_exec(self, threads: usize, pool: PoolSpec) -> ExecutorConfig {
+        ExecutorConfig {
+            threads,
+            schedule: self.schedule,
+            strategy: self.strategy,
+            algorithm: self.algorithm,
+            storage: self.storage,
+            precision: self.precision,
+            fft_engine: self.fft_engine,
+            real_input: self.real_input,
+            pool,
+        }
+    }
+}
+
+/// Registry key: one cached plan per `(bandwidth, options)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub bandwidth: usize,
+    pub options: PlanOptions,
+}
+
+struct Entry {
+    plan: Arc<So3Plan>,
+    /// `table_bytes()` at build time (plans are immutable).
+    bytes: usize,
+    /// LRU clock tick of the last `get` (atomic so hits only need the
+    /// read lock).
+    last_used: AtomicU64,
+}
+
+/// Counters of one registry (monotonic; read via
+/// [`PlanRegistry::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RegistryStats {
+    /// Plans currently cached.
+    pub plans: usize,
+    /// Sum of `table_bytes()` over the cached plans.
+    pub table_bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// See the [module docs](self).
+pub struct PlanRegistry {
+    /// Region width for every cached plan.
+    threads: usize,
+    /// The shared worker pool plans execute on (`None` ⇒ sequential).
+    pool: Option<Arc<WorkerPool>>,
+    /// Table-byte budget; `None` = unbounded.
+    budget: Option<usize>,
+    allow_any_bandwidth: bool,
+    plans: RwLock<HashMap<PlanKey, Entry>>,
+    /// Keys with a build in flight — single-flight deduplication so N
+    /// concurrent cold requests for one key run ONE table build, not N
+    /// (which would also spike memory N× past any budget).
+    building: Mutex<HashSet<PlanKey>>,
+    building_cv: Condvar,
+    clock: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanRegistry {
+    pub(crate) fn new(
+        threads: usize,
+        pool: Option<Arc<WorkerPool>>,
+        budget: Option<usize>,
+        allow_any_bandwidth: bool,
+    ) -> Self {
+        Self {
+            threads,
+            pool,
+            budget,
+            allow_any_bandwidth,
+            plans: RwLock::new(HashMap::new()),
+            building: Mutex::new(HashSet::new()),
+            building_cv: Condvar::new(),
+            clock: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The cached plan for `key`, built on first request. Every caller
+    /// of an equal key receives the **same** `Arc` (until eviction);
+    /// concurrent cold requests for one key share a single build.
+    pub fn get(&self, key: PlanKey) -> Result<Arc<So3Plan>> {
+        let tick = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        // Fast path: hits touch only the read lock.
+        if let Some(plan) = self.lookup(key, tick) {
+            return Ok(plan);
+        }
+        // Single-flight claim: leave the loop only as the builder of
+        // `key`. Everyone else parks on the condvar until the in-flight
+        // build resolves, then re-checks the cache. The re-check happens
+        // UNDER the building lock (lock order: building → plans-read,
+        // never reversed), closing the race where a finishing builder
+        // inserts between our miss and our claim — without it a late
+        // claimer would rebuild and replace the cached Arc.
+        loop {
+            let mut building = lock_unpoisoned(&self.building);
+            if let Some(plan) = self.lookup(key, tick) {
+                return Ok(plan);
+            }
+            if building.insert(key) {
+                break;
+            }
+            // A failed build leaves no cache entry: the woken waiter
+            // re-loops, claims the marker, and retries (surfacing the
+            // same typed error if it persists).
+            let _guard = self
+                .building_cv
+                .wait(building)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+        // Build outside every lock: table construction is the expensive
+        // part, and a slow build must not block hits on other keys. The
+        // marker comes off (and waiters wake) on EVERY exit, including a
+        // builder panic — a leaked marker would park waiters forever —
+        // and only AFTER a successful build is cached, so woken waiters
+        // hit instead of re-building.
+        let release_marker = || {
+            let mut building = lock_unpoisoned(&self.building);
+            building.remove(&key);
+            drop(building);
+            self.building_cv.notify_all();
+        };
+        let built = catch_unwind(AssertUnwindSafe(|| self.build(key)));
+        let outcome = match built {
+            Ok(Ok(plan)) => {
+                let plan = Arc::new(plan);
+                let mut map = write(&self.plans);
+                debug_assert!(
+                    !map.contains_key(&key),
+                    "single-flight guarantees one builder"
+                );
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                map.insert(
+                    key,
+                    Entry {
+                        plan: Arc::clone(&plan),
+                        bytes: plan.table_bytes(),
+                        last_used: AtomicU64::new(tick),
+                    },
+                );
+                if let Some(budget) = self.budget {
+                    Self::evict_lru(&mut map, budget, key, &self.evictions);
+                }
+                Ok(plan)
+            }
+            Ok(Err(e)) => Err(e),
+            Err(payload) => {
+                release_marker();
+                resume_unwind(payload)
+            }
+        };
+        release_marker();
+        outcome
+    }
+
+    /// Cache lookup, bumping the LRU tick and hit counter on success.
+    fn lookup(&self, key: PlanKey, tick: u64) -> Option<Arc<So3Plan>> {
+        let map = read(&self.plans);
+        let e = map.get(&key)?;
+        e.last_used.store(tick, Ordering::Relaxed);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::clone(&e.plan))
+    }
+
+    fn build(&self, key: PlanKey) -> Result<So3Plan> {
+        let pool_spec = match &self.pool {
+            Some(p) => PoolSpec::Shared(Arc::clone(p)),
+            None => PoolSpec::Owned,
+        };
+        let mut builder = So3Plan::builder(key.bandwidth)
+            .config(key.options.to_exec(self.threads, pool_spec));
+        if self.allow_any_bandwidth {
+            builder = builder.allow_any_bandwidth();
+        }
+        builder.build()
+    }
+
+    /// Drop least-recently-used entries (never `keep`, never the last
+    /// one) until the summed `table_bytes()` fits the budget.
+    fn evict_lru(
+        map: &mut HashMap<PlanKey, Entry>,
+        budget: usize,
+        keep: PlanKey,
+        evictions: &AtomicU64,
+    ) {
+        loop {
+            let total: usize = map.values().map(|e| e.bytes).sum();
+            if total <= budget || map.len() <= 1 {
+                return;
+            }
+            let victim = map
+                .iter()
+                .filter(|(k, _)| **k != keep)
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    map.remove(&k);
+                    evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => return,
+            }
+        }
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        read(&self.plans).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        let map = read(&self.plans);
+        RegistryStats {
+            plans: map.len(),
+            table_bytes: map.values().map(|e| e.bytes).sum(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl std::fmt::Debug for PlanRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanRegistry")
+            .field("threads", &self.threads)
+            .field("budget", &self.budget)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    fn key(b: usize) -> PlanKey {
+        PlanKey {
+            bandwidth: b,
+            options: PlanOptions::default(),
+        }
+    }
+
+    #[test]
+    fn equal_keys_share_one_arc_distinct_keys_do_not() {
+        let reg = PlanRegistry::new(1, None, None, false);
+        let a = reg.get(key(4)).unwrap();
+        let b = reg.get(key(4)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let opts = PlanOptions {
+            storage: WignerStorage::OnTheFly,
+            ..PlanOptions::default()
+        };
+        let c = reg
+            .get(PlanKey {
+                bandwidth: 4,
+                options: opts,
+            })
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        let s = reg.stats();
+        assert_eq!(s.plans, 2);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn options_roundtrip_executor_config() {
+        let exec = ExecutorConfig {
+            threads: 7,
+            real_input: true,
+            storage: WignerStorage::OnTheFly,
+            ..Default::default()
+        };
+        let opts = PlanOptions::from_exec(&exec);
+        assert!(opts.real_input);
+        let back = opts.to_exec(3, PoolSpec::Owned);
+        assert_eq!(back.threads, 3); // substrate comes from the service
+        assert_eq!(back.storage, WignerStorage::OnTheFly);
+        assert!(back.real_input);
+        // Default options mirror the default executor config.
+        assert_eq!(
+            PlanOptions::default(),
+            PlanOptions::from_exec(&ExecutorConfig::default())
+        );
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_and_rebuilds_on_demand() {
+        // Budget sized to exactly one b=4 plan's tables: inserting a
+        // second table-carrying plan must evict the older one.
+        let b4_bytes = So3Plan::new(4).unwrap().table_bytes();
+        assert!(b4_bytes > 0, "b=4 precomputed tables must be non-empty");
+        let reg = PlanRegistry::new(1, None, Some(b4_bytes), false);
+        let first = reg.get(key(4)).unwrap();
+        assert_eq!(reg.stats().evictions, 0);
+        let _second = reg.get(key(8)).unwrap();
+        let s = reg.stats();
+        assert_eq!(s.evictions, 1, "older key must be evicted");
+        assert_eq!(s.plans, 1, "only the newest plan stays cached");
+        // The evicted Arc stays usable by its holders.
+        assert_eq!(first.bandwidth(), 4);
+        // Re-requesting the evicted key rebuilds (a fresh Arc).
+        let rebuilt = reg.get(key(4)).unwrap();
+        assert!(!Arc::ptr_eq(&first, &rebuilt));
+        assert_eq!(reg.stats().misses, 3);
+    }
+
+    #[test]
+    fn budget_never_evicts_the_requested_key() {
+        // A budget below even one plan keeps the newest entry anyway
+        // (evicting the plan just handed out would thrash).
+        let reg = PlanRegistry::new(1, None, Some(0), false);
+        let a = reg.get(key(4)).unwrap();
+        assert_eq!(reg.len(), 1);
+        let b = reg.get(key(4)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn strict_bandwidth_validation_is_forwarded() {
+        let reg = PlanRegistry::new(1, None, None, false);
+        assert!(matches!(
+            reg.get(key(6)),
+            Err(Error::NonPowerOfTwoBandwidth(6))
+        ));
+        // Failed builds are not cached.
+        assert!(reg.is_empty());
+        let lenient = PlanRegistry::new(1, None, None, true);
+        assert_eq!(lenient.get(key(6)).unwrap().bandwidth(), 6);
+    }
+
+    #[test]
+    fn concurrent_cold_requests_share_one_build() {
+        let reg = PlanRegistry::new(1, None, None, false);
+        let plans: Vec<Arc<So3Plan>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| scope.spawn(|| reg.get(key(8)).unwrap()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for p in &plans[1..] {
+            assert!(Arc::ptr_eq(&plans[0], p));
+        }
+        let s = reg.stats();
+        assert_eq!(s.misses, 1, "single-flight: exactly one build");
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.plans, 1);
+    }
+
+    #[test]
+    fn shared_pool_is_reused_by_cached_plans() {
+        let pool = Arc::new(WorkerPool::new(2).unwrap());
+        let reg = PlanRegistry::new(2, Some(Arc::clone(&pool)), None, false);
+        let plan = reg.get(key(4)).unwrap();
+        assert!(Arc::ptr_eq(plan.pool().unwrap(), &pool));
+    }
+}

@@ -1,0 +1,237 @@
+//! Per-bandwidth free lists of [`Workspace`]s and transform I/O buffers.
+//!
+//! Steady-state serving must not allocate per job: the dispatcher checks
+//! a workspace out per micro-batch and returns it afterwards, input
+//! payloads are recycled into the pool once consumed, and outputs come
+//! from the pool too (callers hand them back with
+//! [`So3Service::recycle`](super::So3Service::recycle)). Free lists are
+//! LIFO, so a steady single-key load keeps hitting the same (cache-warm,
+//! pointer-stable) buffers — which is exactly what the no-allocation
+//! tests assert.
+//!
+//! Pooled buffers carry **unspecified contents** (whatever the previous
+//! job left); every transform entry point fully overwrites its output,
+//! and callers filling an input buffer overwrite it anyway.
+//!
+//! Free lists are **capped** per (bandwidth, kind): beyond
+//! [`MAX_FREE_PER_KEY`] a checked-in buffer is dropped instead of
+//! retained. Without the cap, traffic whose inputs are caller-allocated
+//! (every `So3Coeffs::random(..)` submitted by value) would grow the
+//! pool by one buffer per job forever — recycling must bound memory,
+//! not leak it.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::Workspace;
+use crate::error::{Error, Result};
+use crate::so3::coeffs::So3Coeffs;
+use crate::so3::sampling::So3Grid;
+use crate::util::lock_unpoisoned as lock;
+
+/// Largest free-list length kept per (bandwidth, kind); see the
+/// [module docs](self). Sized well above any realistic in-flight count
+/// (dispatcher batches cap at the service's `max_batch`, clients hold
+/// one buffer each), so steady reuse never hits it.
+pub const MAX_FREE_PER_KEY: usize = 64;
+
+/// Push unless the free list is at [`MAX_FREE_PER_KEY`] (drop instead).
+fn push_capped<T>(list: &mut Vec<T>, item: T) {
+    if list.len() < MAX_FREE_PER_KEY {
+        list.push(item);
+    }
+}
+
+#[derive(Default)]
+struct FreeLists {
+    workspaces: HashMap<usize, Vec<Workspace>>,
+    grids: HashMap<usize, Vec<So3Grid>>,
+    coeffs: HashMap<usize, Vec<So3Coeffs>>,
+}
+
+/// Allocation counters and free-list occupancy of a [`WorkspacePool`].
+/// The `*_created` counters are the pool's high-watermark: under steady
+/// load they stop growing once the pool warmed up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WorkspacePoolStats {
+    pub workspaces_created: usize,
+    pub grids_created: usize,
+    pub coeffs_created: usize,
+    pub free_workspaces: usize,
+    pub free_grids: usize,
+    pub free_coeffs: usize,
+}
+
+/// See the [module docs](self).
+#[derive(Default)]
+pub struct WorkspacePool {
+    free: Mutex<FreeLists>,
+    workspaces_created: AtomicUsize,
+    grids_created: AtomicUsize,
+    coeffs_created: AtomicUsize,
+}
+
+impl WorkspacePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A workspace for bandwidth `b`: pooled if one is free, freshly
+    /// allocated otherwise.
+    pub fn checkout_workspace(&self, b: usize) -> Result<Workspace> {
+        if let Some(ws) = lock(&self.free).workspaces.get_mut(&b).and_then(Vec::pop) {
+            return Ok(ws);
+        }
+        let ws = Workspace::new(b)?;
+        self.workspaces_created.fetch_add(1, Ordering::Relaxed);
+        Ok(ws)
+    }
+
+    /// Return a workspace to its bandwidth's free list.
+    pub fn checkin_workspace(&self, ws: Workspace) {
+        let mut free = lock(&self.free);
+        push_capped(free.workspaces.entry(ws.bandwidth()).or_default(), ws);
+    }
+
+    /// A grid buffer for bandwidth `b` (contents unspecified).
+    pub fn checkout_grid(&self, b: usize) -> Result<So3Grid> {
+        if let Some(g) = lock(&self.free).grids.get_mut(&b).and_then(Vec::pop) {
+            return Ok(g);
+        }
+        let g = So3Grid::zeros(b)?;
+        self.grids_created.fetch_add(1, Ordering::Relaxed);
+        Ok(g)
+    }
+
+    pub fn checkin_grid(&self, g: So3Grid) {
+        let mut free = lock(&self.free);
+        push_capped(free.grids.entry(g.bandwidth()).or_default(), g);
+    }
+
+    /// A coefficient buffer for bandwidth `b` (contents unspecified).
+    pub fn checkout_coeffs(&self, b: usize) -> Result<So3Coeffs> {
+        if b == 0 {
+            return Err(Error::InvalidBandwidth(0));
+        }
+        if let Some(c) = lock(&self.free).coeffs.get_mut(&b).and_then(Vec::pop) {
+            return Ok(c);
+        }
+        let c = So3Coeffs::zeros(b);
+        self.coeffs_created.fetch_add(1, Ordering::Relaxed);
+        Ok(c)
+    }
+
+    pub fn checkin_coeffs(&self, c: So3Coeffs) {
+        let mut free = lock(&self.free);
+        push_capped(free.coeffs.entry(c.bandwidth()).or_default(), c);
+    }
+
+    pub fn stats(&self) -> WorkspacePoolStats {
+        let free = lock(&self.free);
+        WorkspacePoolStats {
+            workspaces_created: self.workspaces_created.load(Ordering::Relaxed),
+            grids_created: self.grids_created.load(Ordering::Relaxed),
+            coeffs_created: self.coeffs_created.load(Ordering::Relaxed),
+            free_workspaces: free.workspaces.values().map(Vec::len).sum(),
+            free_grids: free.grids.values().map(Vec::len).sum(),
+            free_coeffs: free.coeffs.values().map(Vec::len).sum(),
+        }
+    }
+}
+
+impl fmt::Debug for WorkspacePool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkspacePool")
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_checkin_is_lifo_and_pointer_stable() {
+        let pool = WorkspacePool::new();
+        let ws = pool.checkout_workspace(4).unwrap();
+        let ptr = ws.work_ptr();
+        pool.checkin_workspace(ws);
+        // The same allocation comes back (LIFO pop).
+        let again = pool.checkout_workspace(4).unwrap();
+        assert_eq!(again.work_ptr(), ptr);
+        assert_eq!(pool.stats().workspaces_created, 1);
+        pool.checkin_workspace(again);
+
+        let g = pool.checkout_grid(4).unwrap();
+        let gptr = g.as_slice().as_ptr();
+        pool.checkin_grid(g);
+        assert_eq!(pool.checkout_grid(4).unwrap().as_slice().as_ptr(), gptr);
+        assert_eq!(pool.stats().grids_created, 1);
+
+        let c = pool.checkout_coeffs(4).unwrap();
+        let cptr = c.as_slice().as_ptr();
+        pool.checkin_coeffs(c);
+        assert_eq!(pool.checkout_coeffs(4).unwrap().as_slice().as_ptr(), cptr);
+        assert_eq!(pool.stats().coeffs_created, 1);
+    }
+
+    #[test]
+    fn bandwidths_are_isolated() {
+        let pool = WorkspacePool::new();
+        let w4 = pool.checkout_workspace(4).unwrap();
+        pool.checkin_workspace(w4);
+        // A b=8 request must not receive the pooled b=4 workspace.
+        let w8 = pool.checkout_workspace(8).unwrap();
+        assert_eq!(w8.bandwidth(), 8);
+        assert_eq!(pool.stats().workspaces_created, 2);
+        let s = pool.stats();
+        assert_eq!(s.free_workspaces, 1);
+        pool.checkin_workspace(w8);
+        assert_eq!(pool.stats().free_workspaces, 2);
+    }
+
+    #[test]
+    fn created_counts_stop_growing_under_reuse() {
+        let pool = WorkspacePool::new();
+        for _ in 0..10 {
+            let ws = pool.checkout_workspace(2).unwrap();
+            let g = pool.checkout_grid(2).unwrap();
+            let c = pool.checkout_coeffs(2).unwrap();
+            pool.checkin_coeffs(c);
+            pool.checkin_grid(g);
+            pool.checkin_workspace(ws);
+        }
+        let s = pool.stats();
+        assert_eq!(
+            (s.workspaces_created, s.grids_created, s.coeffs_created),
+            (1, 1, 1)
+        );
+    }
+
+    #[test]
+    fn free_lists_are_capped_not_unbounded() {
+        let pool = WorkspacePool::new();
+        // Caller-allocated buffers checked in beyond the cap are dropped.
+        for i in 0..(MAX_FREE_PER_KEY + 40) {
+            pool.checkin_coeffs(So3Coeffs::random(2, i as u64));
+            pool.checkin_grid(So3Grid::zeros(2).unwrap());
+        }
+        let s = pool.stats();
+        assert_eq!(s.free_coeffs, MAX_FREE_PER_KEY);
+        assert_eq!(s.free_grids, MAX_FREE_PER_KEY);
+        // The cap is per bandwidth: a second key gets its own list.
+        pool.checkin_grid(So3Grid::zeros(4).unwrap());
+        assert_eq!(pool.stats().free_grids, MAX_FREE_PER_KEY + 1);
+    }
+
+    #[test]
+    fn zero_bandwidth_is_typed_error() {
+        let pool = WorkspacePool::new();
+        assert!(pool.checkout_workspace(0).is_err());
+        assert!(pool.checkout_grid(0).is_err());
+        assert!(pool.checkout_coeffs(0).is_err());
+    }
+}

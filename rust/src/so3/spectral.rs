@@ -96,14 +96,14 @@ pub fn effective_bandwidth(coeffs: &So3Coeffs, epsilon: f64) -> usize {
 mod tests {
     use super::*;
     use crate::testkit::Prop;
-    use crate::transform::So3Fft;
+    use crate::transform::So3Plan;
 
     /// Parseval through the whole pipeline: spectral norm == grid norm.
     #[test]
     fn parseval_identity() {
         for b in [2usize, 4, 8, 16] {
             let coeffs = So3Coeffs::random(b, b as u64 + 1);
-            let fft = So3Fft::new(b).unwrap();
+            let fft = So3Plan::new(b).unwrap();
             let grid = fft.inverse(&coeffs).unwrap();
             let ns = norm_sqr_spectral(&coeffs);
             let ng = norm_sqr_grid(&grid).unwrap();
@@ -179,7 +179,7 @@ mod tests {
         // iFSOFT(h·f°) == filtered synthesis: apply filter pre-synthesis
         // vs analyze → filter → synthesize must agree.
         let b = 6;
-        let fft = So3Fft::new(b).unwrap();
+        let fft = So3Plan::builder(b).allow_any_bandwidth().build().unwrap();
         let coeffs = So3Coeffs::random(b, 5);
         let mut pre = coeffs.clone();
         heat_kernel_smooth(&mut pre, 0.05);

@@ -1,10 +1,13 @@
 //! The legacy transform handle — a thin facade over [`So3Plan`].
 //!
-//! [`So3Fft`] predates the planner/session API and is kept as a
-//! **soft-deprecated**, fully-working wrapper so existing callers migrate
-//! incrementally (see `docs/MIGRATION.md`). New code should use
-//! [`crate::transform::So3Plan`]: it exposes the same configuration axes
-//! plus the allocation-free `*_into` and batch entry points.
+//! [`So3Fft`] predates the planner/session API and is now **formally
+//! deprecated** (`#[deprecated]`, still fully working) so remaining
+//! callers migrate (see `docs/MIGRATION.md`). New code should use
+//! [`crate::transform::So3Plan`] (the power-user path: same
+//! configuration axes plus the allocation-free `*_into` and batch entry
+//! points) or [`crate::service::So3Service`] (the serving front door).
+//! Bit-for-bit facade/plan parity is pinned by
+//! `rust/tests/plan_api.rs::facade_parity_with_plan`.
 //!
 //! Unlike the strict [`So3PlanBuilder`](crate::transform::So3PlanBuilder),
 //! this facade accepts non-power-of-two bandwidths (the historical
@@ -36,11 +39,16 @@ use crate::so3::sampling::So3Grid;
 use crate::transform::plan::{So3Plan, Transform};
 
 /// A prepared fast SO(3) Fourier transform (FSOFT + iFSOFT) for one
-/// bandwidth. Soft-deprecated facade over [`So3Plan`].
+/// bandwidth. Deprecated facade over [`So3Plan`].
+#[deprecated(
+    since = "0.6.0",
+    note = "use So3Plan (explicit planning) or So3Service (serving front door)"
+)]
 pub struct So3Fft {
     plan: So3Plan,
 }
 
+#[allow(deprecated)]
 impl So3Fft {
     /// Default configuration (sequential, paper defaults).
     pub fn new(b: usize) -> Result<Self> {
@@ -99,6 +107,7 @@ impl So3Fft {
     }
 }
 
+#[allow(deprecated)]
 impl Transform for So3Fft {
     fn bandwidth(&self) -> usize {
         So3Fft::bandwidth(self)
@@ -124,12 +133,18 @@ impl Transform for So3Fft {
 }
 
 /// Fluent configuration for [`So3Fft`].
+#[deprecated(
+    since = "0.6.0",
+    note = "use So3PlanBuilder (explicit planning) or So3ServiceBuilder (serving front door)"
+)]
+#[allow(deprecated)]
 pub struct So3FftBuilder {
     b: usize,
     config: ExecutorConfig,
     offload: Option<Arc<dyn DwtOffload>>,
 }
 
+#[allow(deprecated)]
 impl So3FftBuilder {
     /// Worker thread count (1 = the sequential algorithm).
     pub fn threads(mut self, threads: usize) -> Self {
@@ -196,6 +211,7 @@ impl So3FftBuilder {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 
@@ -233,19 +249,8 @@ mod tests {
         assert!(r.is_err());
     }
 
-    #[test]
-    fn facade_matches_plan_bit_for_bit() {
-        let b = 8;
-        let fft = So3Fft::builder(b).threads(2).build().unwrap();
-        let plan = So3Plan::builder(b).threads(2).build().unwrap();
-        let coeffs = So3Coeffs::random(b, 77);
-        let g_facade = fft.inverse(&coeffs).unwrap();
-        let g_plan = plan.inverse(&coeffs).unwrap();
-        assert_eq!(g_facade.as_slice(), g_plan.as_slice());
-        let c_facade = fft.forward(&g_facade).unwrap();
-        let c_plan = plan.forward(&g_plan).unwrap();
-        assert_eq!(c_facade.as_slice(), c_plan.as_slice());
-    }
+    // Bit-for-bit facade/plan parity is pinned once, in
+    // `rust/tests/plan_api.rs::facade_parity_with_plan`.
 
     #[test]
     fn facade_accepts_non_power_of_two() {

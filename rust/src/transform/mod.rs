@@ -1,11 +1,16 @@
-//! Public transform API and reference implementations.
+//! The transform layer: explicit plans and reference implementations.
+//!
+//! The **documented front door for serving** is
+//! [`crate::service::So3Service`] (shared pool, plan registry,
+//! micro-batching job API); this module is the **power-user path** it is
+//! built on.
 //!
 //! * [`plan`] — [`So3Plan`]: the FFTW-style planner/session API. Build a
 //!   plan once per `(bandwidth, config)`, then execute allocation-free
 //!   (`forward_into`/`inverse_into` + [`Workspace`]) or in batches
 //!   (`forward_batch`/`inverse_batch`). All backends (CPU-sequential,
 //!   CPU-parallel, PJRT offload) sit behind the [`Transform`] trait.
-//! * [`api`] — [`So3Fft`]: the soft-deprecated facade over [`So3Plan`]
+//! * [`api`] — [`So3Fft`]: the **deprecated** facade over [`So3Plan`]
 //!   kept for incremental migration (see `docs/MIGRATION.md`).
 //! * [`direct`] — the O(B⁶) discrete SO(3) Fourier transform straight
 //!   from the definitions (Eq. 4/5), the end-to-end correctness oracle.
@@ -17,5 +22,6 @@ pub mod plan;
 pub use crate::coordinator::{StageStats, Workspace};
 pub use crate::fft::FftEngine;
 pub use crate::pool::{PoolSpec, WorkerPool};
+#[allow(deprecated)]
 pub use api::{So3Fft, So3FftBuilder};
 pub use plan::{BackendKind, So3Plan, So3PlanBuilder, Transform};

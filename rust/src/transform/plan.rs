@@ -327,6 +327,17 @@ impl So3Plan {
     }
 }
 
+impl std::fmt::Debug for So3Plan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("So3Plan")
+            .field("bandwidth", &self.bandwidth())
+            .field("backend", &self.backend)
+            .field("config", self.exec.config())
+            .field("table_bytes", &self.table_bytes())
+            .finish()
+    }
+}
+
 impl Transform for So3Plan {
     fn bandwidth(&self) -> usize {
         So3Plan::bandwidth(self)
@@ -359,6 +370,17 @@ pub struct So3PlanBuilder {
     config: ExecutorConfig,
     offload: Option<Arc<dyn DwtOffload>>,
     allow_any_bandwidth: bool,
+}
+
+impl std::fmt::Debug for So3PlanBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("So3PlanBuilder")
+            .field("bandwidth", &self.b)
+            .field("config", &self.config)
+            .field("offload", &self.offload.is_some())
+            .field("allow_any_bandwidth", &self.allow_any_bandwidth)
+            .finish()
+    }
 }
 
 impl So3PlanBuilder {

@@ -1,7 +1,28 @@
-//! Shared low-level utilities: disjoint-write shared slices and the few
-//! special functions the Wigner-d seeds need.
+//! Shared low-level utilities: disjoint-write shared slices,
+//! poison-recovering lock helpers, and the few special functions the
+//! Wigner-d seeds need.
 
 use std::cell::UnsafeCell;
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard from a poisoned lock — the
+/// crate's uniform poison policy: a panicked holder leaves data that is
+/// either fully overwritten by the next user or consistent by
+/// construction, so propagating the poison would only turn one panic
+/// into many.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// [`lock_unpoisoned`] for `RwLock` readers.
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|p| p.into_inner())
+}
+
+/// [`lock_unpoisoned`] for `RwLock` writers.
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|p| p.into_inner())
+}
 
 /// A shared slice that permits concurrent writes to *provably disjoint*
 /// index sets from multiple worker threads.

@@ -6,12 +6,12 @@ use so3ft::apps::sphere::{analysis, synthesis, SphCoeffs};
 use so3ft::so3::rotation::{EulerZyz, Rotation};
 use so3ft::so3::sampling::GridAngles;
 use so3ft::testkit::Prop;
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 
 #[test]
 fn matching_recovers_random_grid_rotations() {
     let b = 8;
-    let fft = So3Fft::builder(b).threads(2).build().unwrap();
+    let fft = So3Plan::builder(b).allow_any_bandwidth().threads(2).build().unwrap();
     let angles = GridAngles::new(b).unwrap();
     let f = SphCoeffs::random(b, 3);
     Prop::new("matching recovers planted grid rotations")
@@ -37,7 +37,7 @@ fn matching_recovers_random_grid_rotations() {
 #[test]
 fn matching_robust_to_moderate_noise() {
     let b = 8;
-    let fft = So3Fft::new(b).unwrap();
+    let fft = So3Plan::builder(b).allow_any_bandwidth().build().unwrap();
     let angles = GridAngles::new(b).unwrap();
     let f = SphCoeffs::random(b, 11);
     let planted = angles.euler(5, 7, 2);
@@ -62,7 +62,7 @@ fn matching_robust_to_moderate_noise() {
 #[test]
 fn correlation_peak_value_is_cauchy_schwarz_bounded() {
     let b = 6;
-    let fft = So3Fft::new(b).unwrap();
+    let fft = So3Plan::builder(b).allow_any_bandwidth().build().unwrap();
     let f = SphCoeffs::random(b, 1);
     let g = SphCoeffs::random(b, 2);
     let result = match_rotation(&fft, &f, &g).unwrap();

@@ -40,6 +40,28 @@ fn simulate_runs_clean() {
 }
 
 #[test]
+fn serve_bench_runs_clean_and_writes_json() {
+    let dir = std::env::temp_dir().join(format!("so3ft-servebench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let json = dir.join("BENCH_service.json");
+    assert_eq!(
+        run(argv(&format!(
+            "serve-bench -t 2 --clients 2 --jobs 4 --bandwidths 4,8 --window-us 100 \
+             --json {}",
+            json.display()
+        ))),
+        0
+    );
+    let text = std::fs::read_to_string(&json).unwrap();
+    assert!(text.contains("\"kind\": \"service_p99\""), "{text}");
+    assert!(text.contains("\"kind\": \"service_throughput\""), "{text}");
+    assert!(text.contains("\"per_job_s\""), "{text}");
+    // Records for both bandwidths of the mix.
+    assert!(text.contains("\"b\": 4") && text.contains("\"b\": 8"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn help_prints() {
     assert_eq!(run(argv("help")), 0);
     assert_eq!(run(argv("--help")), 0);

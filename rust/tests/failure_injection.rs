@@ -8,19 +8,19 @@ use so3ft::coordinator::PartitionStrategy;
 use so3ft::runtime::XlaDwt;
 use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::so3::sampling::So3Grid;
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 use so3ft::{Complex64, Error};
 
 #[test]
 fn bandwidth_zero_rejected_everywhere() {
-    assert!(So3Fft::new(0).is_err());
+    assert!(So3Plan::new(0).is_err());
     assert!(So3Grid::zeros(0).is_err());
     assert!(so3ft::so3::sampling::GridAngles::new(0).is_err());
 }
 
 #[test]
 fn mismatched_shapes_rejected() {
-    let fft = So3Fft::new(4).unwrap();
+    let fft = So3Plan::new(4).unwrap();
     assert!(fft.forward(&So3Grid::zeros(8).unwrap()).is_err());
     assert!(fft.inverse(&So3Coeffs::random(8, 1)).is_err());
     // from_vec with wrong length
@@ -28,24 +28,42 @@ fn mismatched_shapes_rejected() {
     assert!(So3Coeffs::from_vec(4, vec![Complex64::zero(); 3]).is_err());
 }
 
+/// Length-mismatch errors must say what was expected AND what arrived —
+/// "wrong length" alone is undebuggable from a service log.
+#[test]
+fn from_vec_errors_report_expected_vs_got() {
+    let err = So3Grid::from_vec(4, vec![Complex64::zero(); 3]).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("512") && msg.contains("3"),
+        "grid error must carry expected (8^3 = 512) and got (3): {msg}"
+    );
+    let err = So3Coeffs::from_vec(4, vec![Complex64::zero(); 7]).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("84") && msg.contains("7"),
+        "coeff error must carry expected (B(4B²−1)/3 = 84) and got (7): {msg}"
+    );
+}
+
 #[test]
 fn invalid_config_combinations_rejected() {
     assert!(matches!(
-        So3Fft::builder(4)
+        So3Plan::builder(4)
             .algorithm(DwtAlgorithm::Clenshaw)
             .precision(Precision::Extended)
             .build(),
         Err(Error::Config(_))
     ));
     assert!(matches!(
-        So3Fft::builder(4)
+        So3Plan::builder(4)
             .algorithm(DwtAlgorithm::Clenshaw)
             .strategy(PartitionStrategy::NoSymmetry)
             .build(),
         Err(Error::Config(_))
     ));
     assert!(matches!(
-        So3Fft::builder(4).threads(0).build(),
+        So3Plan::builder(4).threads(0).build(),
         Err(Error::InvalidThreads(0))
     ));
 }
@@ -87,7 +105,7 @@ fn nan_input_propagates_not_hangs() {
     // NaN samples must flow through to NaN coefficients (IEEE semantics),
     // not crash or hang the pool.
     let b = 4;
-    let fft = So3Fft::builder(b).threads(2).build().unwrap();
+    let fft = So3Plan::builder(b).threads(2).build().unwrap();
     let mut grid = So3Grid::zeros(b).unwrap();
     grid.set(0, 0, 0, Complex64::new(f64::NAN, 0.0));
     let coeffs = fft.forward(&grid).unwrap();

@@ -7,20 +7,20 @@ use so3ft::coordinator::PartitionStrategy;
 use so3ft::pool::Schedule;
 use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::testkit::Prop;
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 
 #[test]
 fn bit_identical_across_thread_counts() {
     let b = 10;
     let coeffs = So3Coeffs::random(b, 1);
     let reference = {
-        let fft = So3Fft::builder(b).threads(1).build().unwrap();
+        let fft = So3Plan::builder(b).allow_any_bandwidth().threads(1).build().unwrap();
         let g = fft.inverse(&coeffs).unwrap();
         let c = fft.forward(&g).unwrap();
         (g, c)
     };
     for threads in [2usize, 3, 5, 8, 16] {
-        let fft = So3Fft::builder(b).threads(threads).build().unwrap();
+        let fft = So3Plan::builder(b).allow_any_bandwidth().threads(threads).build().unwrap();
         let g = fft.inverse(&coeffs).unwrap();
         let c = fft.forward(&g).unwrap();
         assert_eq!(reference.0.as_slice(), g.as_slice(), "{threads} threads: grid");
@@ -36,7 +36,7 @@ fn bit_identical_across_schedules_and_strategies() {
     // so only the clustered strategies are bit-identical to each other;
     // still verify all produce near-identical values.
     let reference = {
-        let fft = So3Fft::builder(b).threads(3).build().unwrap();
+        let fft = So3Plan::builder(b).allow_any_bandwidth().threads(3).build().unwrap();
         fft.inverse(&coeffs).unwrap()
     };
     for schedule in [
@@ -50,7 +50,8 @@ fn bit_identical_across_schedules_and_strategies() {
             PartitionStrategy::GeometricClustered,
             PartitionStrategy::SigmaClustered,
         ] {
-            let fft = So3Fft::builder(b)
+            let fft = So3Plan::builder(b)
+                .allow_any_bandwidth()
                 .threads(4)
                 .schedule(schedule)
                 .strategy(strategy)
@@ -80,8 +81,9 @@ fn property_random_configs_agree() {
                 Schedule::Guided { min_chunk: 1 },
             ]);
             let coeffs = So3Coeffs::random(b, seed);
-            let seq = So3Fft::builder(b).threads(1).build().unwrap();
-            let par = So3Fft::builder(b)
+            let seq = So3Plan::builder(b).allow_any_bandwidth().threads(1).build().unwrap();
+            let par = So3Plan::builder(b)
+                .allow_any_bandwidth()
                 .threads(threads)
                 .schedule(schedule)
                 .build()
@@ -98,7 +100,7 @@ fn property_random_configs_agree() {
 #[test]
 fn worker_stats_account_for_all_packages() {
     let b = 12;
-    let fft = So3Fft::builder(b).threads(4).build().unwrap();
+    let fft = So3Plan::builder(b).allow_any_bandwidth().threads(4).build().unwrap();
     let coeffs = So3Coeffs::random(b, 4);
     let (_, stats) = fft.inverse_with_stats(&coeffs).unwrap();
     let region = stats.dwt_region.expect("region stats");

@@ -1,11 +1,13 @@
 //! Integration: the planner/session API — allocation-free `*_into`
 //! execution, batch pipelining, workspace validation, builder
-//! validation, and `So3Fft`-facade parity with `So3Plan`.
+//! validation, and (the one kept parity test) the deprecated
+//! `So3Fft` facade against `So3Plan`.
 
 use so3ft::coordinator::Workspace;
+use so3ft::pool::PoolSpec;
 use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::so3::sampling::So3Grid;
-use so3ft::transform::{BackendKind, So3Fft, So3Plan, Transform};
+use so3ft::transform::{BackendKind, So3Plan, Transform};
 use so3ft::Error;
 
 /// Acceptance: `forward_batch` over N = 8 signals matches N sequential
@@ -117,9 +119,12 @@ fn mixed_bandwidth_workspace_is_typed_error() {
 }
 
 /// The deprecated facade must stay bit-for-bit interchangeable with the
-/// plan it wraps, across directions and thread counts.
+/// plan it wraps, across directions and thread counts — the single
+/// facade parity test kept for the deprecation period.
 #[test]
+#[allow(deprecated)]
 fn facade_parity_with_plan() {
+    use so3ft::transform::So3Fft;
     let b = 8;
     for threads in [1usize, 4] {
         let facade = So3Fft::builder(b).threads(threads).build().unwrap();
@@ -140,13 +145,9 @@ fn facade_parity_with_plan() {
 
 #[test]
 fn builder_validation_bug_sweep() {
-    // threads == 0: typed error from both builders, not a panic.
+    // threads == 0: typed error, not a panic.
     assert!(matches!(
         So3Plan::builder(8).threads(0).build(),
-        Err(Error::InvalidThreads(0))
-    ));
-    assert!(matches!(
-        So3Fft::builder(8).threads(0).build(),
         Err(Error::InvalidThreads(0))
     ));
     // Non-power-of-two bandwidth: typed rejection on the strict planner.
@@ -161,11 +162,9 @@ fn builder_validation_bug_sweep() {
         So3Plan::builder(0).build(),
         Err(Error::InvalidBandwidth(0))
     ));
-    assert!(So3Fft::builder(0).build().is_err());
-    // The explicit escape hatch (and the compat facade) still serve
-    // non-powers of two through the Bluestein path.
+    // The explicit escape hatch still serves non-powers of two through
+    // the Bluestein path.
     assert!(So3Plan::builder(6).allow_any_bandwidth().build().is_ok());
-    assert!(So3Fft::builder(6).build().is_ok());
 }
 
 /// Backends are interchangeable behind `dyn Transform`.
@@ -181,7 +180,13 @@ fn backends_interchangeable_behind_dyn_transform() {
     let backends: Vec<Box<dyn Transform>> = vec![
         Box::new(seq),
         Box::new(par),
-        Box::new(So3Fft::new(b).unwrap()),
+        Box::new(
+            So3Plan::builder(b)
+                .threads(2)
+                .pool_spec(PoolSpec::Global)
+                .build()
+                .unwrap(),
+        ),
     ];
     let reference = backends[0].inverse(&coeffs).unwrap();
     for (i, t) in backends.iter().enumerate() {

@@ -6,7 +6,7 @@ use so3ft::coordinator::PartitionStrategy;
 use so3ft::dwt::tables::WignerStorage;
 use so3ft::dwt::{DwtAlgorithm, Precision};
 use so3ft::so3::coeffs::So3Coeffs;
-use so3ft::transform::{direct, So3Fft};
+use so3ft::transform::{direct, So3Plan};
 
 #[test]
 fn roundtrip_error_scales_like_paper() {
@@ -14,7 +14,7 @@ fn roundtrip_error_scales_like_paper() {
     // scales in double precision.
     let mut last = 0.0;
     for b in [4usize, 8, 16] {
-        let fft = So3Fft::new(b).unwrap();
+        let fft = So3Plan::builder(b).allow_any_bandwidth().build().unwrap();
         let mut worst: f64 = 0.0;
         for run in 0..3 {
             let coeffs = So3Coeffs::random(b, 100 + run);
@@ -48,7 +48,8 @@ fn all_configurations_roundtrip_b12() {
             for storage in [WignerStorage::Precomputed, WignerStorage::OnTheFly] {
                 for precision in [Precision::Double, Precision::Extended] {
                     // Skip invalid combinations (rejected by the builder).
-                    let builder = So3Fft::builder(b)
+                    let builder = So3Plan::builder(b)
+                        .allow_any_bandwidth()
                         .strategy(strategy)
                         .algorithm(algorithm)
                         .storage(storage)
@@ -76,7 +77,7 @@ fn extended_precision_is_at_least_as_accurate() {
     let b = 16;
     let coeffs = So3Coeffs::random(b, 77);
     let run = |precision| {
-        let fft = So3Fft::builder(b).precision(precision).build().unwrap();
+        let fft = So3Plan::builder(b).allow_any_bandwidth().precision(precision).build().unwrap();
         let grid = fft.inverse(&coeffs).unwrap();
         let back = fft.forward(&grid).unwrap();
         coeffs.max_abs_error(&back)
@@ -92,7 +93,7 @@ fn extended_precision_is_at_least_as_accurate() {
 #[test]
 fn fast_transforms_match_direct_definition_b3() {
     let coeffs = So3Coeffs::random(3, 9);
-    let fft = So3Fft::new(3).unwrap();
+    let fft = So3Plan::builder(3).allow_any_bandwidth().build().unwrap();
     let fast_grid = fft.inverse(&coeffs).unwrap();
     let slow_grid = direct::synthesis(&coeffs).unwrap();
     assert!(fast_grid.max_abs_error(&slow_grid) < 1e-10);
@@ -105,7 +106,7 @@ fn fast_transforms_match_direct_definition_b3() {
 fn linearity_of_transform() {
     // FSOFT is linear: T(a·x + y) = a·T(x) + T(y).
     let b = 8;
-    let fft = So3Fft::new(b).unwrap();
+    let fft = So3Plan::builder(b).allow_any_bandwidth().build().unwrap();
     let c1 = So3Coeffs::random(b, 1);
     let c2 = So3Coeffs::random(b, 2);
     let g1 = fft.inverse(&c1).unwrap();
@@ -125,7 +126,7 @@ fn linearity_of_transform() {
 #[test]
 fn bandwidth_one_degenerate_case() {
     // B = 1: a single coefficient (l = m = m' = 0), constant functions.
-    let fft = So3Fft::new(1).unwrap();
+    let fft = So3Plan::builder(1).allow_any_bandwidth().build().unwrap();
     let coeffs = So3Coeffs::random(1, 3);
     let grid = fft.inverse(&coeffs).unwrap();
     // Constant over the 8 grid nodes.

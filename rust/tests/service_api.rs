@@ -1,0 +1,391 @@
+//! Integration: the `So3Service` front door — concurrent mixed-bandwidth
+//! bit-parity against sequential `So3Plan` calls, plan-registry Arc
+//! identity, workspace-pool high-watermark stability, zero-allocation
+//! pointer stability of the steady-state serving loop, and micro-batch
+//! coalescing parity.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use so3ft::service::{JobOutput, JobPriority, JobSpec, PlanOptions, So3Service};
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::so3::sampling::So3Grid;
+use so3ft::transform::So3Plan;
+
+/// Acceptance: M = 4 client threads submitting mixed-bandwidth jobs
+/// (both directions, micro-batching enabled) produce results
+/// bit-identical to sequential `So3Plan::forward`/`inverse` calls.
+#[test]
+fn concurrent_mixed_bandwidth_jobs_match_sequential_plans_bit_for_bit() {
+    let bandwidths = [4usize, 8, 16];
+    let jobs_per_client = 9;
+    let clients = 4;
+
+    // Sequential single-threaded references (parallel execution is
+    // bit-identical to sequential by the pool runtime's contract, so
+    // this is the strictest possible oracle).
+    let mut reference: HashMap<usize, (Vec<So3Grid>, Vec<So3Coeffs>)> = HashMap::new();
+    for &b in &bandwidths {
+        let plan = So3Plan::builder(b).threads(1).build().unwrap();
+        let mut grids = Vec::new();
+        let mut coeffs = Vec::new();
+        for seed in 0..(clients * jobs_per_client) as u64 {
+            let c = So3Coeffs::random(b, seed);
+            let g = plan.inverse(&c).unwrap();
+            let f = plan.forward(&g).unwrap();
+            grids.push(g);
+            coeffs.push(f);
+        }
+        reference.insert(b, (grids, coeffs));
+    }
+
+    let service = So3Service::builder()
+        .threads(2)
+        .batch_window(Duration::from_micros(300))
+        .build()
+        .unwrap();
+
+    std::thread::scope(|scope| {
+        for client in 0..clients {
+            let service = &service;
+            let reference = &reference;
+            scope.spawn(move || {
+                for i in 0..jobs_per_client {
+                    let b = bandwidths[(client + i) % bandwidths.len()];
+                    let seed = (client * jobs_per_client + i) as u64;
+                    let (ref_grids, ref_coeffs) = &reference[&b];
+                    let input = So3Coeffs::random(b, seed);
+                    if (client + i) % 2 == 0 {
+                        // Inverse: must equal the sequential grid bit for bit.
+                        let h = service.submit(JobSpec::inverse(b), input).unwrap();
+                        let grid = h.wait().unwrap().into_grid().unwrap();
+                        assert_eq!(
+                            grid.as_slice(),
+                            ref_grids[seed as usize].as_slice(),
+                            "client {client} job {i} (inverse b={b})"
+                        );
+                        // Forward of that grid: must equal the sequential
+                        // coefficients bit for bit.
+                        let h = service.submit(JobSpec::forward(b), grid).unwrap();
+                        let back = h.wait().unwrap().into_coeffs().unwrap();
+                        assert_eq!(
+                            back.as_slice(),
+                            ref_coeffs[seed as usize].as_slice(),
+                            "client {client} job {i} (forward b={b})"
+                        );
+                        service.recycle_coeffs(back);
+                    } else {
+                        let grid = service.inverse(input).unwrap();
+                        assert_eq!(
+                            grid.as_slice(),
+                            ref_grids[seed as usize].as_slice(),
+                            "client {client} job {i} (blocking inverse b={b})"
+                        );
+                        service.recycle_grid(grid);
+                    }
+                }
+            });
+        }
+    });
+
+    let stats = service.stats();
+    assert_eq!(stats.jobs_completed, stats.jobs_submitted);
+    assert_eq!(stats.registry.plans, bandwidths.len());
+}
+
+/// The registry hands out the SAME `Arc<So3Plan>` for equal keys and a
+/// different one for different options.
+#[test]
+fn registry_returns_same_arc_for_equal_keys() {
+    let service = So3Service::builder().threads(2).build().unwrap();
+    let opts = PlanOptions::default();
+    let a = service.plan(8, opts).unwrap();
+    let b = service.plan(8, opts).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "equal keys must share one plan");
+    let mut other = opts;
+    other.real_input = true;
+    let c = service.plan(8, other).unwrap();
+    assert!(!Arc::ptr_eq(&a, &c), "distinct options are distinct keys");
+    let d = service.plan(4, opts).unwrap();
+    assert!(!Arc::ptr_eq(&a, &d), "distinct bandwidths are distinct keys");
+    // Jobs executed through the service hit the same cached plans.
+    let _ = service.inverse(So3Coeffs::random(8, 1)).unwrap();
+    assert!(Arc::ptr_eq(&a, &service.plan(8, opts).unwrap()));
+    // Every cached plan runs on the service's one shared worker pool.
+    let pool = service.worker_pool().unwrap();
+    for plan in [&a, &c, &d] {
+        assert!(Arc::ptr_eq(plan.pool().unwrap(), pool));
+    }
+}
+
+/// Acceptance: a steady-state serving loop performs zero per-job heap
+/// allocation of grid/coeff/scratch buffers — pointer-stability
+/// assertions on the pooled buffers across many jobs.
+#[test]
+fn steady_state_serving_is_pointer_stable_and_allocation_free() {
+    let b = 8;
+    let service = So3Service::builder().threads(1).build().unwrap();
+    let template = So3Coeffs::random(b, 99);
+
+    // Warm-up job creates the plan, one workspace, one input buffer and
+    // one output buffer; everything after must reuse those allocations.
+    let mut input = service.checkout_coeffs(b).unwrap();
+    input.as_mut_slice().copy_from_slice(template.as_slice());
+    let out = service
+        .submit(JobSpec::inverse(b), input)
+        .unwrap()
+        .wait()
+        .unwrap();
+    let out_ptr = out.grid().unwrap().as_slice().as_ptr();
+    service.recycle(out);
+    let warm = service.stats().buffers;
+
+    // After the warm-up, the (single-client) loop sees the exact same
+    // input and output allocations on every iteration: checkout pops
+    // the LIFO free list the previous iteration pushed.
+    let input_ptr = {
+        let input = service.checkout_coeffs(b).unwrap();
+        let p = input.as_slice().as_ptr();
+        service.recycle_coeffs(input);
+        p
+    };
+    for i in 0..10 {
+        let mut input = service.checkout_coeffs(b).unwrap();
+        assert_eq!(
+            input.as_slice().as_ptr(),
+            input_ptr,
+            "iteration {i}: input buffer must come from the pool"
+        );
+        input.as_mut_slice().copy_from_slice(template.as_slice());
+        let out = service
+            .submit(JobSpec::inverse(b), input)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(
+            out.grid().unwrap().as_slice().as_ptr(),
+            out_ptr,
+            "iteration {i}: output buffer must come from the pool"
+        );
+        service.recycle(out);
+    }
+
+    // No new workspace/grid/coeff allocation happened after warm-up.
+    let steady = service.stats().buffers;
+    assert_eq!(
+        (
+            steady.workspaces_created,
+            steady.grids_created,
+            steady.coeffs_created
+        ),
+        (
+            warm.workspaces_created,
+            warm.grids_created,
+            warm.coeffs_created
+        ),
+        "steady state must not allocate buffers per job"
+    );
+    assert_eq!(steady.workspaces_created, 1);
+}
+
+/// The workspace pool never grows past its warm high-watermark under
+/// steady concurrent load.
+#[test]
+fn workspace_pool_high_watermark_is_stable_under_load() {
+    let bandwidths = [4usize, 8];
+    let service = So3Service::builder().threads(2).build().unwrap();
+    let run_round = |round: u64| {
+        std::thread::scope(|scope| {
+            for client in 0..3u64 {
+                let service = &service;
+                scope.spawn(move || {
+                    for i in 0..6u64 {
+                        let b = bandwidths[((client + i) % 2) as usize];
+                        let grid = service
+                            .inverse(So3Coeffs::random(b, round * 1000 + client * 10 + i))
+                            .unwrap();
+                        service.recycle_grid(grid);
+                    }
+                });
+            }
+        });
+    };
+    run_round(0); // warm-up
+    let warm = service.stats().buffers;
+    for round in 1..6 {
+        run_round(round);
+    }
+    let steady = service.stats().buffers;
+    // The dispatcher holds exactly one workspace at a time and returns
+    // it before the next batch, so the watermark is one per bandwidth —
+    // reached in the warm round, never exceeded after.
+    assert_eq!(steady.workspaces_created, bandwidths.len());
+    assert_eq!(
+        steady.workspaces_created, warm.workspaces_created,
+        "workspace count grew past the warm high-watermark"
+    );
+    // Output buffers are bounded by the in-flight structural maximum
+    // (each blocking client holds/awaits at most one output per
+    // bandwidth list), independent of how many rounds ran.
+    assert!(
+        steady.grids_created <= 3 * bandwidths.len(),
+        "pooled grids exceeded the in-flight bound: {steady:?}"
+    );
+    // Inputs arrive caller-allocated here, so the pool never creates any.
+    assert_eq!(steady.coeffs_created, 0);
+}
+
+/// Micro-batching coalesces same-key jobs into few batches AND stays
+/// bit-identical to per-job execution.
+#[test]
+fn micro_batching_coalesces_and_is_bit_identical() {
+    let b = 8;
+    let n = 6;
+    let service = So3Service::builder()
+        .threads(2)
+        .batch_window(Duration::from_millis(150))
+        .build()
+        .unwrap();
+    let inputs: Vec<So3Coeffs> = (0..n).map(|i| So3Coeffs::random(b, 300 + i)).collect();
+
+    // Submit the burst up front, then wait: all jobs share one batch key
+    // and land within the window.
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|c| service.submit(JobSpec::inverse(b), c.clone()).unwrap())
+        .collect();
+    let outputs: Vec<JobOutput> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+
+    let plan = So3Plan::builder(b).threads(1).build().unwrap();
+    for (c, out) in inputs.iter().zip(&outputs) {
+        let want = plan.inverse(c).unwrap();
+        assert_eq!(
+            out.grid().unwrap().as_slice(),
+            want.as_slice(),
+            "micro-batched result must be bit-identical to a per-job plan call"
+        );
+    }
+    let stats = service.stats();
+    assert_eq!(stats.jobs_completed, n as u64);
+    assert!(
+        stats.batches < n as u64,
+        "jobs within the window must coalesce (got {} batches for {n} jobs)",
+        stats.batches
+    );
+    assert!(stats.max_batch_size >= 2);
+}
+
+/// Priorities select the next batch leader: a High job submitted behind
+/// a wall of Low jobs completes without waiting for all of them.
+#[test]
+fn priorities_are_honored_and_all_jobs_complete() {
+    let service = So3Service::builder().threads(1).build().unwrap();
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        handles.push(
+            service
+                .submit(
+                    JobSpec::inverse(8).priority(JobPriority::Low),
+                    So3Coeffs::random(8, i),
+                )
+                .unwrap(),
+        );
+    }
+    handles.push(
+        service
+            .submit(
+                JobSpec::inverse(4).priority(JobPriority::High),
+                So3Coeffs::random(4, 9),
+            )
+            .unwrap(),
+    );
+    for h in handles {
+        assert!(h.wait().unwrap().bandwidth() > 0);
+    }
+    let stats = service.stats();
+    assert_eq!(stats.jobs_completed, 5);
+}
+
+/// One data-dependent bad payload inside a micro-batch must not fail
+/// its batch neighbors: the dispatcher falls back to per-job execution
+/// and every handle gets its own typed outcome.
+#[test]
+fn bad_payload_in_batch_does_not_fail_neighbors() {
+    use so3ft::Complex64;
+    let b = 4;
+    let real_opts = PlanOptions {
+        real_input: true,
+        ..PlanOptions::default()
+    };
+    let service = So3Service::builder()
+        .threads(1)
+        .batch_window(Duration::from_millis(100))
+        .build()
+        .unwrap();
+
+    // Two valid real-sample grids and one with a nonzero imaginary part
+    // (rejected by the real-input forward path at execution time — this
+    // cannot be caught at submit).
+    let plan = service.plan(b, real_opts).unwrap();
+    let make_real = |seed: u64| {
+        let g = plan.inverse(&So3Coeffs::random(b, seed)).unwrap();
+        So3Grid::from_vec(
+            b,
+            g.as_slice()
+                .iter()
+                .map(|z| Complex64::new(z.re, 0.0))
+                .collect(),
+        )
+        .unwrap()
+    };
+    let g0 = make_real(1);
+    let mut g1 = make_real(2);
+    g1.set(0, 0, 0, Complex64::new(0.5, 0.25)); // poison one payload
+    let g2 = make_real(3);
+
+    let spec = JobSpec::forward(b).options(real_opts);
+    let h0 = service.submit(spec, g0.clone()).unwrap();
+    let h1 = service.submit(spec, g1).unwrap();
+    let h2 = service.submit(spec, g2.clone()).unwrap();
+
+    let r0 = h0.wait();
+    let r1 = h1.wait();
+    let r2 = h2.wait();
+    // The poisoned job fails alone, with its own typed error…
+    match r1 {
+        Err(so3ft::Error::Service(msg)) => {
+            assert!(msg.contains("real-input"), "unexpected message: {msg}")
+        }
+        other => panic!("poisoned job must fail, got {:?}", other.map(|_| ())),
+    }
+    // …while its neighbors succeed bit-for-bit.
+    let want0 = plan.forward(&g0).unwrap();
+    let want2 = plan.forward(&g2).unwrap();
+    assert_eq!(
+        r0.unwrap().into_coeffs().unwrap().as_slice(),
+        want0.as_slice()
+    );
+    assert_eq!(
+        r2.unwrap().into_coeffs().unwrap().as_slice(),
+        want2.as_slice()
+    );
+}
+
+/// The registry byte budget evicts cold plans; serving keeps working.
+#[test]
+fn registry_budget_evicts_but_serving_survives() {
+    let b4_bytes = So3Plan::new(4).unwrap().table_bytes();
+    let service = So3Service::builder()
+        .threads(1)
+        .registry_budget_bytes(b4_bytes)
+        .build()
+        .unwrap();
+    let _ = service.inverse(So3Coeffs::random(4, 1)).unwrap();
+    let _ = service.inverse(So3Coeffs::random(8, 2)).unwrap();
+    let stats = service.stats();
+    assert!(stats.registry.evictions >= 1, "budget must evict");
+    // The evicted bandwidth still serves (rebuilt on demand).
+    let grid = service.inverse(So3Coeffs::random(4, 3)).unwrap();
+    assert_eq!(grid.bandwidth(), 4);
+}

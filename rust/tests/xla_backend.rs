@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use so3ft::runtime::{ArtifactRegistry, XlaDwt};
 use so3ft::so3::coeffs::So3Coeffs;
-use so3ft::transform::So3Fft;
+use so3ft::transform::So3Plan;
 
 fn artifacts_for(b: usize) -> Option<Arc<XlaDwt>> {
     if cfg!(not(feature = "xla")) {
@@ -32,8 +32,8 @@ fn artifacts_for(b: usize) -> Option<Arc<XlaDwt>> {
 fn xla_forward_matches_native() {
     for b in [4usize, 8] {
         let Some(xla) = artifacts_for(b) else { return };
-        let native = So3Fft::new(b).unwrap();
-        let offloaded = So3Fft::builder(b).offload(xla).build().unwrap();
+        let native = So3Plan::new(b).unwrap();
+        let offloaded = So3Plan::builder(b).offload(xla).build().unwrap();
         let coeffs = So3Coeffs::random(b, 77);
         let grid = native.inverse(&coeffs).unwrap();
         let c_native = native.forward(&grid).unwrap();
@@ -47,8 +47,8 @@ fn xla_forward_matches_native() {
 fn xla_inverse_matches_native() {
     for b in [4usize, 8] {
         let Some(xla) = artifacts_for(b) else { return };
-        let native = So3Fft::new(b).unwrap();
-        let offloaded = So3Fft::builder(b).offload(xla).build().unwrap();
+        let native = So3Plan::new(b).unwrap();
+        let offloaded = So3Plan::builder(b).offload(xla).build().unwrap();
         let coeffs = So3Coeffs::random(b, 78);
         let g_native = native.inverse(&coeffs).unwrap();
         let g_xla = offloaded.inverse(&coeffs).unwrap();
@@ -61,7 +61,7 @@ fn xla_inverse_matches_native() {
 fn xla_roundtrip_accuracy() {
     let b = 8;
     let Some(xla) = artifacts_for(b) else { return };
-    let fft = So3Fft::builder(b).offload(xla).build().unwrap();
+    let fft = So3Plan::builder(b).offload(xla).build().unwrap();
     let coeffs = So3Coeffs::random(b, 79);
     let grid = fft.inverse(&coeffs).unwrap();
     let back = fft.forward(&grid).unwrap();
@@ -76,8 +76,8 @@ fn xla_backend_parallel_consistency() {
     let b = 4;
     let Some(xla) = artifacts_for(b) else { return };
     let coeffs = So3Coeffs::random(b, 80);
-    let seq = So3Fft::builder(b).offload(xla.clone()).build().unwrap();
-    let par = So3Fft::builder(b).threads(3).offload(xla).build().unwrap();
+    let seq = So3Plan::builder(b).offload(xla.clone()).build().unwrap();
+    let par = So3Plan::builder(b).threads(3).offload(xla).build().unwrap();
     let g_seq = seq.inverse(&coeffs).unwrap();
     let g_par = par.inverse(&coeffs).unwrap();
     assert_eq!(g_seq.as_slice(), g_par.as_slice());
