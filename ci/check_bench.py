@@ -38,8 +38,10 @@ import sys
 # stages from e2e_benchmark, plus the serve-bench service records
 # (p99_s = per-bandwidth job latency tail, per_job_s = mixed-traffic
 # wall seconds per job — the inverse of throughput, so a throughput
-# regression raises it past the ceiling).
-STAGES = ("fft_s", "transpose_s", "dwt_s", "total_s", "p99_s", "per_job_s")
+# regression raises it past the ceiling) and the plan_build wisdom
+# records (overhead_s = store-cached Measure build minus Estimate build
+# — a cache hit must stay within a small constant of Estimate).
+STAGES = ("fft_s", "transpose_s", "dwt_s", "total_s", "p99_s", "per_job_s", "overhead_s")
 
 
 def key(record):

@@ -48,6 +48,7 @@ use so3ft::simulator::machine::MachineParams;
 use so3ft::simulator::scaling::scaling_curve;
 use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::transform::So3Plan;
+use so3ft::wisdom::{PlanRigor, WisdomStore};
 
 /// One JSON record with the full per-stage breakdown of a transform.
 fn stage_record(kind: &str, b: usize, threads: usize, engine: &str, s: &StageStats) -> String {
@@ -392,6 +393,59 @@ fn main() -> so3ft::Result<()> {
     }
     fft_table.print();
 
+    // Wisdom planner sweep (ISSUE 6): Estimate build vs a cold Measure
+    // build (pays the search) vs a cached Measure build (store hit) at
+    // every e2e bandwidth, against a fresh in-memory store per bandwidth
+    // so cold/cached are well-defined regardless of prior runs. The
+    // `plan_build` records' `overhead_s` (cached Measure minus Estimate)
+    // is the number the CI gate pins: wisdom-on-hit must stay cheap.
+    let wisdom_budget = std::time::Duration::from_millis(
+        env_usize("SO3FT_BENCH_WISDOM_BUDGET_MS", 150) as u64,
+    );
+    println!("\n=== plan build: estimate vs measure (cold / cached wisdom) ===");
+    let mut wisdom_table = Table::new(&["B", "estimate", "measure cold", "measure cached"]);
+    for &b in &bandwidths {
+        let store = WisdomStore::in_memory();
+        let t0 = Instant::now();
+        let _ = So3Plan::builder(b).allow_any_bandwidth().build()?;
+        let estimate_s = t0.elapsed().as_secs_f64();
+        let mut measured = [0.0f64; 2];
+        for slot in measured.iter_mut() {
+            let t0 = Instant::now();
+            let plan = So3Plan::builder(b)
+                .rigor(PlanRigor::Measure)
+                .wisdom_store(std::sync::Arc::clone(&store))
+                .wisdom_time_budget_ms(wisdom_budget.as_millis() as u64)
+                .allow_any_bandwidth()
+                .build()?;
+            *slot = t0.elapsed().as_secs_f64();
+            assert!(
+                plan.wisdom().is_some_and(|w| w.choice.is_some()),
+                "Measure build fell back to Estimate defaults at b={b}"
+            );
+        }
+        let [cold_s, cached_s] = measured;
+        assert_eq!(
+            store.stats().measurements,
+            1,
+            "second Measure build must hit the store, not re-measure"
+        );
+        let overhead_s = (cached_s - estimate_s).max(0.0);
+        records.push(format!(
+            "{{\"kind\": \"plan_build\", \"b\": {b}, \"threads\": 1, \
+             \"engine\": \"wisdom\", \"estimate_s\": {estimate_s:.6e}, \
+             \"measure_cold_s\": {cold_s:.6e}, \"measure_cached_s\": {cached_s:.6e}, \
+             \"overhead_s\": {overhead_s:.6e}}}"
+        ));
+        wisdom_table.row(&[
+            b.to_string(),
+            fmt_seconds(estimate_s),
+            fmt_seconds(cold_s),
+            fmt_seconds(cached_s),
+        ]);
+    }
+    wisdom_table.print();
+
     let json_path =
         std::env::var("SO3FT_BENCH_JSON").unwrap_or_else(|_| "BENCH_fft.json".to_string());
     let meta = [
@@ -406,7 +460,9 @@ fn main() -> so3ft::Result<()> {
              and rescales are untimed); transform_* records are full \
              sequential StageStats breakdowns; dwt_stage_* records carry \
              the sequential DWT-stage wall time per engine x wigner \
-             source\""
+             source; plan_build records compare Estimate builds against \
+             cold and store-cached Measure builds (overhead_s = cached \
+             Measure minus Estimate, floored at 0)\""
                 .to_string(),
         ),
     ];

@@ -15,6 +15,7 @@ use crate::so3::quadrature;
 use crate::so3::rotation::Rotation;
 use crate::so3::sampling::GridAngles;
 use crate::transform::So3Plan;
+use crate::wisdom::{MachineFingerprint, PlanRigor, WisdomSource, WisdomStore};
 
 pub const HELP: &str = "\
 so3ft — parallel fast Fourier transforms on SO(3)
@@ -29,6 +30,7 @@ commands:
   match       rotational-matching demo (plant + recover a rotation)
   simulate    multicore scaling curves (simulated Opteron-like node)
   serve-bench So3Service under concurrent mixed-bandwidth job load
+  wisdom      plan auto-tuning cache: train | show | clear
   help        this text
 
 options: --config FILE, --bandwidth/-b B, --threads/-t N,
@@ -38,20 +40,38 @@ options: --config FILE, --bandwidth/-b B, --threads/-t N,
   --storage precomputed|onthefly|auto[:mb], --precision double|extended,
   --pool owned|global (pair global with --threads N; width is
   min(threads, pool)), --seed N, --xla, --artifacts DIR, --cores LIST,
-  --kind fwd|inv
+  --kind fwd|inv, --rigor estimate|measure (plan auto-tuning),
+  --time-budget-ms N (measurement budget), --wisdom-cache PATH
 
 serve-bench options: --clients N, --jobs N (per client),
   --bandwidths LIST (default 8,16), --window-us N (micro-batch window),
   --rate JOBS_PER_S (open-loop arrival per client; 0 = burst),
   --json PATH (merge service_* records into a BENCH_fft.json report);
   the worker pool is sized by [service] threads, falling back to -t
+
+wisdom usage: so3ft wisdom train [--bandwidths 8,16] [-t N]
+  [--time-budget-ms N] [--wisdom-cache PATH]; `show` lists the stored
+  entries for this machine, `clear` deletes the store
 ";
+
+/// The wisdom store this invocation addresses: an explicit
+/// `--wisdom-cache` / `[wisdom] cache_path` file, or the process-global
+/// store in the shared cache dir.
+fn wisdom_store(inv: &Invocation) -> Arc<WisdomStore> {
+    match &inv.run.wisdom.cache_path {
+        Some(path) => WisdomStore::open(path.as_str()),
+        None => WisdomStore::global(),
+    }
+}
 
 fn build_plan(inv: &Invocation) -> Result<So3Plan> {
     // The CLI keeps the historical lenient bandwidth behavior (Bluestein
     // fallback for non-powers of two).
     let mut builder = So3Plan::builder(inv.run.bandwidth)
         .config(inv.run.exec.clone())
+        .rigor(inv.run.wisdom.rigor)
+        .wisdom_store(wisdom_store(inv))
+        .wisdom_time_budget_ms(inv.run.wisdom.time_budget_ms)
         .allow_any_bandwidth();
     if inv.run.use_xla {
         let xla = XlaDwt::load(&inv.run.artifacts_dir, inv.run.bandwidth)?;
@@ -412,6 +432,101 @@ pub fn serve_bench(inv: &Invocation) -> Result<()> {
     if let Some(path) = &sb.json {
         append_json_records(path, &records)?;
         println!("merged {} service records into {path}", records.len());
+    }
+    Ok(())
+}
+
+/// `wisdom train|show|clear`: manage the measured-planning cache.
+///
+/// `train` runs `PlanRigor::Measure` builds for each `--bandwidths`
+/// entry (default 8,16) so later `--rigor measure` runs — and service
+/// registries pointed at the same store — start from cache hits. The
+/// per-bandwidth "cache hit" / "measured" lines are stable output the
+/// CI smoke test greps.
+pub fn wisdom(inv: &Invocation) -> Result<()> {
+    use crate::wisdom::store::{algorithm_name, fft_engine_name};
+
+    let store = wisdom_store(inv);
+    let location = store
+        .path()
+        .map(|p| p.display().to_string())
+        .unwrap_or_else(|| "(in-memory)".into());
+    let fp = MachineFingerprint::current();
+    match inv.wisdom_action.as_str() {
+        "train" => {
+            println!(
+                "wisdom train: store {location}, machine {fp} (digest {:016x})",
+                fp.digest()
+            );
+            for &b in &inv.serve.bandwidths {
+                let plan = So3Plan::builder(b)
+                    .config(inv.run.exec.clone())
+                    .rigor(PlanRigor::Measure)
+                    .wisdom_store(Arc::clone(&store))
+                    .wisdom_time_budget_ms(inv.run.wisdom.time_budget_ms)
+                    .allow_any_bandwidth()
+                    .build()?;
+                let out = plan
+                    .wisdom()
+                    .expect("a Measure build always reports a wisdom outcome");
+                let knobs = out.choice.as_ref().map(|c| {
+                    format!(
+                        "schedule={} strategy={} algorithm={} fft={}",
+                        c.schedule.name(),
+                        c.strategy.name(),
+                        algorithm_name(c.algorithm),
+                        fft_engine_name(c.fft_engine)
+                    )
+                });
+                match (&out.source, knobs) {
+                    (WisdomSource::CacheHit, Some(k)) => println!(
+                        "  b={b}: cache hit ({k}) in {:.1} ms",
+                        1e3 * out.search_seconds
+                    ),
+                    (WisdomSource::Measured, Some(k)) => println!(
+                        "  b={b}: measured ({k}) in {:.1} ms",
+                        1e3 * out.search_seconds
+                    ),
+                    (WisdomSource::Fallback(w), _) => println!("  b={b}: fallback ({w})"),
+                    // CacheHit/Measured always carry a choice.
+                    (_, None) => unreachable!("tuned outcome without a choice"),
+                }
+            }
+            let stats = store.stats();
+            println!(
+                "  totals: {} hits, {} misses, {} measurement passes",
+                stats.hits, stats.misses, stats.measurements
+            );
+        }
+        "show" => {
+            println!(
+                "wisdom store: {location}, machine {fp} (digest {:016x})",
+                fp.digest()
+            );
+            let entries = store.entries();
+            if entries.is_empty() {
+                println!("  no entries for this machine (run `so3ft wisdom train`)");
+            }
+            for (key, entry) in entries {
+                println!(
+                    "  b={} dir={} threads={}: {}",
+                    key.bandwidth,
+                    key.direction.name(),
+                    key.threads,
+                    entry.describe()
+                );
+            }
+        }
+        "clear" => {
+            store.clear();
+            println!("wisdom store cleared: {location}");
+        }
+        other => {
+            // parse_args validates; belt and braces for library callers.
+            return Err(Error::Config(format!(
+                "wisdom: unknown action {other:?} (train | show | clear)"
+            )));
+        }
     }
     Ok(())
 }

@@ -11,6 +11,7 @@
 //!   match       rotational-matching demo (plant + recover a rotation)
 //!   simulate    multicore scaling curves (the Figs. 2-4 machinery)
 //!   serve-bench So3Service under concurrent mixed-bandwidth load
+//!   wisdom      plan auto-tuning cache: train | show | clear
 //!
 //! common options:
 //!   --config <file.toml>      load defaults from a config file
@@ -23,6 +24,9 @@
 //!   --precision <spec>        double | extended
 //!   --pool <spec>             owned | global (persistent worker pool)
 //!   --seed <N>                workload seed
+//!   --rigor <spec>            estimate | measure (plan auto-tuning)
+//!   --time-budget-ms <N>      per-plan measurement budget (measure)
+//!   --wisdom-cache <path>     wisdom-store file override
 //!   --xla                     offload the DWT to the PJRT artifacts
 //!   --artifacts <dir>         artifact directory
 //!   --cores <list>            (simulate) core counts, e.g. "1,8,64"
@@ -37,11 +41,16 @@
 //!                             (0 = burst, the default)
 //!   --json <path>             merge service_* records into a
 //!                             BENCH_fft.json-format report
+//!
+//! wisdom usage:
+//!   so3ft wisdom train [--bandwidths 8,16] [-t N] [--time-budget-ms N]
+//!   so3ft wisdom show
+//!   so3ft wisdom clear
 //! ```
 
 pub mod commands;
 
-use crate::config::{parse_algorithm, parse_precision, parse_storage, RunConfig};
+use crate::config::{parse_algorithm, parse_precision, parse_rigor, parse_storage, RunConfig};
 use crate::coordinator::PartitionStrategy;
 use crate::error::{Error, Result};
 use crate::pool::{PoolSpec, Schedule};
@@ -82,6 +91,9 @@ pub struct Invocation {
     pub cores: Vec<usize>,
     pub kind: String,
     pub serve: ServeBenchOpts,
+    /// `wisdom` subcommand action (`train` | `show` | `clear`); empty
+    /// for every other command.
+    pub wisdom_action: String,
 }
 
 /// Parse argv (excluding the program name).
@@ -98,12 +110,26 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
             cores: vec![],
             kind: "fwd".into(),
             serve: ServeBenchOpts::default(),
+            wisdom_action: String::new(),
         });
     }
     let command = args[0].clone();
+    // `wisdom` takes a positional action before the flags.
+    let mut wisdom_action = String::new();
+    let mut flag_start = 1;
+    if command == "wisdom" {
+        let action = args.get(1).map(|s| s.as_str()).unwrap_or("");
+        if !matches!(action, "train" | "show" | "clear") {
+            return Err(Error::Config(format!(
+                "wisdom needs an action: train | show | clear (got {action:?})"
+            )));
+        }
+        wisdom_action = action.to_string();
+        flag_start = 2;
+    }
     // First pass: --config loads defaults, then flags override.
     let mut run = RunConfig::default();
-    let mut i = 1;
+    let mut i = flag_start;
     while i < args.len() {
         if args[i] == "--config" {
             let path = args
@@ -117,7 +143,7 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
     let mut cores = vec![1, 2, 4, 8, 16, 32, 64];
     let mut kind = "fwd".to_string();
     let mut serve = ServeBenchOpts::default();
-    let mut i = 1;
+    let mut i = flag_start;
     let need = |args: &[String], i: usize, flag: &str| -> Result<String> {
         args.get(i + 1)
             .cloned()
@@ -176,6 +202,20 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
                 run.seed = need(args, i, a)?
                     .parse()
                     .map_err(|_| Error::Config("bad --seed".into()))?;
+                i += 1;
+            }
+            "--rigor" => {
+                run.wisdom.rigor = parse_rigor(&need(args, i, a)?)?;
+                i += 1;
+            }
+            "--time-budget-ms" => {
+                run.wisdom.time_budget_ms = need(args, i, a)?
+                    .parse()
+                    .map_err(|_| Error::Config("bad --time-budget-ms".into()))?;
+                i += 1;
+            }
+            "--wisdom-cache" => {
+                run.wisdom.cache_path = Some(need(args, i, a)?);
                 i += 1;
             }
             "--xla" => run.use_xla = true,
@@ -260,6 +300,7 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
         cores,
         kind,
         serve,
+        wisdom_action,
     })
 }
 
@@ -285,6 +326,7 @@ pub fn run(argv: Vec<String>) -> i32 {
         "match" => commands::match_demo(&inv),
         "simulate" => commands::simulate(&inv),
         "serve-bench" => commands::serve_bench(&inv),
+        "wisdom" => commands::wisdom(&inv),
         other => Err(Error::Config(format!(
             "unknown command {other:?}; try `so3ft help`"
         ))),
@@ -354,6 +396,31 @@ mod tests {
         assert!(parse_args(&argv("serve-bench --jobs zero")).is_err());
         assert!(parse_args(&argv("serve-bench --bandwidths ,")).is_err());
         assert!(parse_args(&argv("serve-bench --rate -3")).is_err());
+    }
+
+    #[test]
+    fn wisdom_command_parses() {
+        let inv = parse_args(&argv(
+            "wisdom train --bandwidths 8,16 -t 2 --time-budget-ms 100 --wisdom-cache /tmp/w",
+        ))
+        .unwrap();
+        assert_eq!(inv.command, "wisdom");
+        assert_eq!(inv.wisdom_action, "train");
+        assert_eq!(inv.serve.bandwidths, vec![8, 16]);
+        assert_eq!(inv.run.exec.threads, 2);
+        assert_eq!(inv.run.wisdom.time_budget_ms, 100);
+        assert_eq!(inv.run.wisdom.cache_path.as_deref(), Some("/tmp/w"));
+        assert_eq!(parse_args(&argv("wisdom show")).unwrap().wisdom_action, "show");
+        assert_eq!(parse_args(&argv("wisdom clear")).unwrap().wisdom_action, "clear");
+        // Missing/unknown action, bad values.
+        assert!(parse_args(&argv("wisdom")).is_err());
+        assert!(parse_args(&argv("wisdom retrain")).is_err());
+        assert!(parse_args(&argv("wisdom train --time-budget-ms soon")).is_err());
+        // Non-wisdom commands carry no action but accept the rigor flags.
+        let inv = parse_args(&argv("inverse -b 8 --rigor measure")).unwrap();
+        assert_eq!(inv.wisdom_action, "");
+        assert_eq!(inv.run.wisdom.rigor, crate::wisdom::PlanRigor::Measure);
+        assert!(parse_args(&argv("inverse --rigor exhaustive")).is_err());
     }
 
     #[test]

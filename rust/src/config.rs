@@ -26,7 +26,15 @@
 //! [runtime]
 //! artifacts = "artifacts"
 //! use_xla = false
+//!
+//! [wisdom]
+//! rigor = "estimate"          # estimate | measure (plan auto-tuning)
+//! time_budget_ms = 250        # per-plan measurement budget
+//! cache_path = "wisdom.so3wis" # omit = the shared cache dir (util::cache_file)
 //! ```
+//!
+//! Unknown sections and unknown keys are **typed errors**, not silently
+//! ignored — a typo'd knob must never quietly fall back to a default.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -37,6 +45,7 @@ use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::{Error, Result};
 use crate::fft::FftEngine;
 use crate::pool::{PoolSpec, Schedule};
+use crate::wisdom::PlanRigor;
 
 /// Raw parsed file: section → key → value (strings unquoted).
 #[derive(Debug, Clone, Default)]
@@ -148,12 +157,36 @@ impl ServiceSettings {
     }
 }
 
+/// `[wisdom]` section: planner rigor and wisdom-store placement (see
+/// [`crate::wisdom`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WisdomSettings {
+    /// Plan-building rigor (default: zero-cost `estimate`).
+    pub rigor: PlanRigor,
+    /// Explicit wisdom-file path (`None` = the shared cache dir,
+    /// [`crate::util::cache_file`]`("wisdom.so3wis")`).
+    pub cache_path: Option<String>,
+    /// Per-plan measurement budget in milliseconds.
+    pub time_budget_ms: u64,
+}
+
+impl Default for WisdomSettings {
+    fn default() -> Self {
+        Self {
+            rigor: PlanRigor::Estimate,
+            cache_path: None,
+            time_budget_ms: 250,
+        }
+    }
+}
+
 /// Fully-resolved run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub bandwidth: usize,
     pub exec: ExecutorConfig,
     pub service: ServiceSettings,
+    pub wisdom: WisdomSettings,
     pub artifacts_dir: String,
     pub use_xla: bool,
     pub seed: u64,
@@ -165,6 +198,7 @@ impl Default for RunConfig {
             bandwidth: 16,
             exec: ExecutorConfig::default(),
             service: ServiceSettings::default(),
+            wisdom: WisdomSettings::default(),
             artifacts_dir: "artifacts".into(),
             use_xla: false,
             seed: 42,
@@ -227,9 +261,62 @@ pub fn parse_fft_engine(s: &str) -> Result<FftEngine> {
     }
 }
 
+/// Parse a planner rigor spec.
+pub fn parse_rigor(s: &str) -> Result<PlanRigor> {
+    PlanRigor::parse(s)
+        .ok_or_else(|| Error::Config(format!("rigor: expected estimate|measure, got {s:?}")))
+}
+
+/// Every section/key `from_parsed` understands; anything else is a typed
+/// config error.
+const KNOWN_KEYS: &[(&str, &[&str])] = &[
+    (
+        "transform",
+        &[
+            "bandwidth",
+            "threads",
+            "schedule",
+            "strategy",
+            "algorithm",
+            "storage",
+            "precision",
+            "fft",
+            "real_input",
+            "pool",
+        ],
+    ),
+    (
+        "service",
+        &["threads", "batch_window_us", "registry_budget_mb", "max_batch"],
+    ),
+    ("runtime", &["artifacts", "use_xla"]),
+    ("run", &["seed"]),
+    ("wisdom", &["rigor", "cache_path", "time_budget_ms"]),
+];
+
 impl RunConfig {
-    /// Build from a parsed file, applying defaults for missing keys.
+    /// Build from a parsed file, applying defaults for missing keys and
+    /// rejecting unknown sections/keys with a typed error.
     pub fn from_parsed(p: &ParsedConfig) -> Result<Self> {
+        for (section, keys) in &p.sections {
+            let known = KNOWN_KEYS
+                .iter()
+                .find(|(name, _)| name == section)
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown section [{section}] (known: transform, service, \
+                         runtime, run, wisdom)"
+                    ))
+                })?;
+            for key in keys.keys() {
+                if !known.1.contains(&key.as_str()) {
+                    return Err(Error::Config(format!(
+                        "[{section}] unknown key {key:?} (known: {})",
+                        known.1.join(", ")
+                    )));
+                }
+            }
+        }
         let mut cfg = RunConfig::default();
         if let Some(b) = p.get_usize("transform", "bandwidth")? {
             cfg.bandwidth = b;
@@ -288,11 +375,86 @@ impl RunConfig {
         if let Some(s) = p.get_usize("run", "seed")? {
             cfg.seed = s as u64;
         }
+        if let Some(s) = p.get("wisdom", "rigor") {
+            cfg.wisdom.rigor = parse_rigor(s)?;
+        }
+        if let Some(s) = p.get("wisdom", "cache_path") {
+            cfg.wisdom.cache_path = Some(s.to_string());
+        }
+        if let Some(ms) = p.get_usize("wisdom", "time_budget_ms")? {
+            cfg.wisdom.time_budget_ms = ms as u64;
+        }
         Ok(cfg)
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         Self::from_parsed(&ParsedConfig::load(path)?)
+    }
+
+    /// Serialize back to the TOML subset [`ParsedConfig`] reads — every
+    /// key `from_parsed` understands appears, so
+    /// `from_parsed(parse(to_toml))` round-trips the full configuration.
+    /// (A `PoolSpec::Shared` handle is process-local and serializes as
+    /// `"owned"`.)
+    pub fn to_toml(&self) -> String {
+        use crate::wisdom::store::{algorithm_name, fft_engine_name};
+        let storage = match self.exec.storage {
+            WignerStorage::Precomputed => "precomputed",
+            WignerStorage::OnTheFly => "onthefly",
+        };
+        let precision = match self.exec.precision {
+            Precision::Double => "double",
+            Precision::Extended => "extended",
+        };
+        let pool = match self.exec.pool {
+            PoolSpec::Global => "global",
+            // Owned is the default; a Shared handle cannot outlive the
+            // process, so it degrades to the default.
+            PoolSpec::Owned | PoolSpec::Shared(_) => "owned",
+        };
+        let mut out = String::new();
+        out.push_str("[transform]\n");
+        out.push_str(&format!("bandwidth = {}\n", self.bandwidth));
+        out.push_str(&format!("threads = {}\n", self.exec.threads));
+        out.push_str(&format!("schedule = \"{}\"\n", self.exec.schedule.name()));
+        out.push_str(&format!("strategy = \"{}\"\n", self.exec.strategy.name()));
+        out.push_str(&format!(
+            "algorithm = \"{}\"\n",
+            algorithm_name(self.exec.algorithm)
+        ));
+        out.push_str(&format!("storage = \"{storage}\"\n"));
+        out.push_str(&format!("precision = \"{precision}\"\n"));
+        out.push_str(&format!(
+            "fft = \"{}\"\n",
+            fft_engine_name(self.exec.fft_engine)
+        ));
+        out.push_str(&format!("real_input = {}\n", self.exec.real_input));
+        out.push_str(&format!("pool = \"{pool}\"\n"));
+        out.push_str("\n[service]\n");
+        out.push_str(&format!("threads = {}\n", self.service.threads));
+        out.push_str(&format!(
+            "batch_window_us = {}\n",
+            self.service.batch_window_us
+        ));
+        if let Some(mb) = self.service.registry_budget_mb {
+            out.push_str(&format!("registry_budget_mb = {mb}\n"));
+        }
+        out.push_str(&format!("max_batch = {}\n", self.service.max_batch));
+        out.push_str("\n[runtime]\n");
+        out.push_str(&format!("artifacts = \"{}\"\n", self.artifacts_dir));
+        out.push_str(&format!("use_xla = {}\n", self.use_xla));
+        out.push_str("\n[run]\n");
+        out.push_str(&format!("seed = {}\n", self.seed));
+        out.push_str("\n[wisdom]\n");
+        out.push_str(&format!("rigor = \"{}\"\n", self.wisdom.rigor.name()));
+        if let Some(path) = &self.wisdom.cache_path {
+            out.push_str(&format!("cache_path = \"{path}\"\n"));
+        }
+        out.push_str(&format!(
+            "time_budget_ms = {}\n",
+            self.wisdom.time_budget_ms
+        ));
+        out
     }
 }
 
@@ -326,6 +488,11 @@ use_xla = true
 
 [run]
 seed = 7
+
+[wisdom]
+rigor = "measure"
+cache_path = "/tmp/w.so3wis"
+time_budget_ms = 125
 "#;
 
     #[test]
@@ -352,6 +519,83 @@ seed = 7
         assert_eq!(cfg.artifacts_dir, "my-artifacts");
         assert!(cfg.use_xla);
         assert_eq!(cfg.seed, 7);
+        assert_eq!(
+            cfg.wisdom,
+            WisdomSettings {
+                rigor: PlanRigor::Measure,
+                cache_path: Some("/tmp/w.so3wis".into()),
+                time_budget_ms: 125,
+            }
+        );
+    }
+
+    /// `ExecutorConfig` has no `PartialEq`; compare the exec fields one
+    /// by one.
+    fn assert_same(a: &RunConfig, b: &RunConfig) {
+        assert_eq!(a.bandwidth, b.bandwidth);
+        assert_eq!(a.exec.threads, b.exec.threads);
+        assert_eq!(a.exec.schedule, b.exec.schedule);
+        assert_eq!(a.exec.strategy, b.exec.strategy);
+        assert_eq!(a.exec.algorithm, b.exec.algorithm);
+        assert_eq!(a.exec.storage, b.exec.storage);
+        assert_eq!(a.exec.precision, b.exec.precision);
+        assert_eq!(a.exec.fft_engine, b.exec.fft_engine);
+        assert_eq!(a.exec.real_input, b.exec.real_input);
+        assert_eq!(a.exec.pool.name(), b.exec.pool.name());
+        assert_eq!(a.service, b.service);
+        assert_eq!(a.wisdom, b.wisdom);
+        assert_eq!(a.artifacts_dir, b.artifacts_dir);
+        assert_eq!(a.use_xla, b.use_xla);
+        assert_eq!(a.seed, b.seed);
+    }
+
+    #[test]
+    fn full_roundtrip_parse_serialize_parse() {
+        // Non-default value for every key the parser understands.
+        let first = RunConfig::from_parsed(&ParsedConfig::parse(SAMPLE).unwrap()).unwrap();
+        let second =
+            RunConfig::from_parsed(&ParsedConfig::parse(&first.to_toml()).unwrap()).unwrap();
+        assert_same(&first, &second);
+        // Defaults round-trip too (registry_budget_mb/cache_path omitted).
+        let dflt = RunConfig::default();
+        let back = RunConfig::from_parsed(&ParsedConfig::parse(&dflt.to_toml()).unwrap()).unwrap();
+        assert_same(&dflt, &back);
+        assert!(back.service.registry_budget_mb.is_none());
+        assert!(back.wisdom.cache_path.is_none());
+    }
+
+    #[test]
+    fn unknown_sections_and_keys_are_typed_errors() {
+        let err = RunConfig::from_parsed(
+            &ParsedConfig::parse("[transfrom]\nbandwidth = 8").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown section"), "{err}");
+        let err = RunConfig::from_parsed(
+            &ParsedConfig::parse("[transform]\nbandwith = 8").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown key"), "{err}");
+        let err = RunConfig::from_parsed(
+            &ParsedConfig::parse("[wisdom]\nbudget = 10").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("time_budget_ms"), "{err}");
+    }
+
+    #[test]
+    fn wisdom_section_validation() {
+        let cfg = RunConfig::from_parsed(&ParsedConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.wisdom, WisdomSettings::default());
+        assert_eq!(cfg.wisdom.rigor, PlanRigor::Estimate);
+        assert!(RunConfig::from_parsed(
+            &ParsedConfig::parse("[wisdom]\nrigor = \"exhaustive\"").unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_parsed(
+            &ParsedConfig::parse("[wisdom]\ntime_budget_ms = \"fast\"").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

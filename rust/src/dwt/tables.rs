@@ -382,6 +382,44 @@ impl WignerTables {
             inv_cos,
         })
     }
+
+    /// Canonical file name for bandwidth-`b` tables inside `dir`
+    /// (`wigner-b{b}.so3w2`). Callers should not invent their own
+    /// layouts; this and [`crate::util::cache_dir`] are the single
+    /// source of truth for where cached artifacts live.
+    pub fn cache_path_in(dir: impl AsRef<std::path::Path>, b: usize) -> std::path::PathBuf {
+        dir.as_ref().join(format!("wigner-b{b}.so3w2"))
+    }
+
+    /// [`Self::cache_path_in`] under the crate cache directory
+    /// ([`crate::util::cache_dir`]), where the wisdom store also lives.
+    pub fn cache_path(b: usize) -> std::path::PathBuf {
+        Self::cache_path_in(crate::util::cache_dir(), b)
+    }
+
+    /// Persist at the canonical name inside `dir` (created if missing).
+    pub fn save_cached_in(&self, dir: impl AsRef<std::path::Path>) -> crate::error::Result<()> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        self.save(Self::cache_path_in(dir.as_ref(), self.b))
+    }
+
+    /// Persist at [`Self::cache_path`] in the crate cache directory.
+    pub fn save_cached(&self) -> crate::error::Result<()> {
+        self.save_cached_in(crate::util::cache_dir())
+    }
+
+    /// Load bandwidth-`b` tables from `dir`'s canonical path.
+    pub fn load_cached_in(
+        dir: impl AsRef<std::path::Path>,
+        b: usize,
+    ) -> crate::error::Result<Self> {
+        Self::load(Self::cache_path_in(dir, b), b)
+    }
+
+    /// Load bandwidth-`b` tables from the crate cache directory.
+    pub fn load_cached(b: usize) -> crate::error::Result<Self> {
+        Self::load(Self::cache_path(b), b)
+    }
 }
 
 /// Table-backed row source (unfolds half-rows into the caller's buffer).

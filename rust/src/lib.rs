@@ -96,6 +96,7 @@ pub mod so3;
 pub mod testkit;
 pub mod transform;
 pub mod util;
+pub mod wisdom;
 pub mod xprec;
 
 pub use error::{Error, Result};

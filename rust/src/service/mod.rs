@@ -58,6 +58,7 @@ use crate::so3::coeffs::So3Coeffs;
 use crate::so3::sampling::So3Grid;
 use crate::transform::So3Plan;
 use crate::util::lock_unpoisoned as lock;
+use crate::wisdom::{PlanRigor, WisdomStore};
 use job::{pick_leader, JobState, QueuedJob};
 
 struct QueueState {
@@ -302,6 +303,8 @@ pub struct So3ServiceBuilder {
     registry_budget: Option<usize>,
     default_options: PlanOptions,
     allow_any_bandwidth: bool,
+    plan_rigor: PlanRigor,
+    wisdom_store: Option<Arc<WisdomStore>>,
 }
 
 impl So3ServiceBuilder {
@@ -314,6 +317,8 @@ impl So3ServiceBuilder {
             registry_budget: None,
             default_options: PlanOptions::default(),
             allow_any_bandwidth: false,
+            plan_rigor: PlanRigor::Estimate,
+            wisdom_store: None,
         }
     }
 
@@ -367,6 +372,23 @@ impl So3ServiceBuilder {
         self
     }
 
+    /// Planning rigor for every registry build (default
+    /// [`PlanRigor::Estimate`]). With [`PlanRigor::Measure`] every
+    /// tenant gets measured-tuned plans; the registry's single-flight
+    /// lock guarantees one measurement pass per key even under
+    /// concurrent cold misses.
+    pub fn plan_rigor(mut self, rigor: PlanRigor) -> Self {
+        self.plan_rigor = rigor;
+        self
+    }
+
+    /// The wisdom store `Measure` builds consult (default: the
+    /// process-global store).
+    pub fn wisdom_store(mut self, store: Arc<WisdomStore>) -> Self {
+        self.wisdom_store = Some(store);
+        self
+    }
+
     pub fn build(self) -> Result<So3Service> {
         let threads = match self.threads {
             Some(0) => return Err(Error::InvalidThreads(0)),
@@ -390,6 +412,8 @@ impl So3ServiceBuilder {
                 pool.clone(),
                 self.registry_budget,
                 self.allow_any_bandwidth,
+                self.plan_rigor,
+                self.wisdom_store,
             ),
             pool,
             buffers: WorkspacePool::new(),

@@ -23,6 +23,7 @@ use crate::fft::FftEngine;
 use crate::pool::{PoolSpec, Schedule, WorkerPool};
 use crate::transform::So3Plan;
 use crate::util::{lock_unpoisoned, read_unpoisoned as read, write_unpoisoned as write};
+use crate::wisdom::{PlanRigor, WisdomStore};
 
 /// The plan-shaping configuration axes — everything of
 /// [`ExecutorConfig`] except the execution substrate (`threads`,
@@ -121,6 +122,12 @@ pub struct PlanRegistry {
     /// Table-byte budget; `None` = unbounded.
     budget: Option<usize>,
     allow_any_bandwidth: bool,
+    /// Planning rigor for every build. Under `Measure`, the existing
+    /// single-flight machinery doubles as measurement deduplication: N
+    /// concurrent cold misses on one key run ONE search pass.
+    rigor: PlanRigor,
+    /// Wisdom store for `Measure` builds (`None` = the global store).
+    wisdom: Option<Arc<WisdomStore>>,
     plans: RwLock<HashMap<PlanKey, Entry>>,
     /// Keys with a build in flight — single-flight deduplication so N
     /// concurrent cold requests for one key run ONE table build, not N
@@ -139,12 +146,16 @@ impl PlanRegistry {
         pool: Option<Arc<WorkerPool>>,
         budget: Option<usize>,
         allow_any_bandwidth: bool,
+        rigor: PlanRigor,
+        wisdom: Option<Arc<WisdomStore>>,
     ) -> Self {
         Self {
             threads,
             pool,
             budget,
             allow_any_bandwidth,
+            rigor,
+            wisdom,
             plans: RwLock::new(HashMap::new()),
             building: Mutex::new(HashSet::new()),
             building_cv: Condvar::new(),
@@ -247,7 +258,11 @@ impl PlanRegistry {
             None => PoolSpec::Owned,
         };
         let mut builder = So3Plan::builder(key.bandwidth)
-            .config(key.options.to_exec(self.threads, pool_spec));
+            .config(key.options.to_exec(self.threads, pool_spec))
+            .rigor(self.rigor);
+        if let Some(store) = &self.wisdom {
+            builder = builder.wisdom_store(Arc::clone(store));
+        }
         if self.allow_any_bandwidth {
             builder = builder.allow_any_bandwidth();
         }
@@ -327,7 +342,7 @@ mod tests {
 
     #[test]
     fn equal_keys_share_one_arc_distinct_keys_do_not() {
-        let reg = PlanRegistry::new(1, None, None, false);
+        let reg = PlanRegistry::new(1, None, None, false, PlanRigor::Estimate, None);
         let a = reg.get(key(4)).unwrap();
         let b = reg.get(key(4)).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
@@ -376,7 +391,7 @@ mod tests {
         // second table-carrying plan must evict the older one.
         let b4_bytes = So3Plan::new(4).unwrap().table_bytes();
         assert!(b4_bytes > 0, "b=4 precomputed tables must be non-empty");
-        let reg = PlanRegistry::new(1, None, Some(b4_bytes), false);
+        let reg = PlanRegistry::new(1, None, Some(b4_bytes), false, PlanRigor::Estimate, None);
         let first = reg.get(key(4)).unwrap();
         assert_eq!(reg.stats().evictions, 0);
         let _second = reg.get(key(8)).unwrap();
@@ -395,7 +410,7 @@ mod tests {
     fn budget_never_evicts_the_requested_key() {
         // A budget below even one plan keeps the newest entry anyway
         // (evicting the plan just handed out would thrash).
-        let reg = PlanRegistry::new(1, None, Some(0), false);
+        let reg = PlanRegistry::new(1, None, Some(0), false, PlanRigor::Estimate, None);
         let a = reg.get(key(4)).unwrap();
         assert_eq!(reg.len(), 1);
         let b = reg.get(key(4)).unwrap();
@@ -404,20 +419,20 @@ mod tests {
 
     #[test]
     fn strict_bandwidth_validation_is_forwarded() {
-        let reg = PlanRegistry::new(1, None, None, false);
+        let reg = PlanRegistry::new(1, None, None, false, PlanRigor::Estimate, None);
         assert!(matches!(
             reg.get(key(6)),
             Err(Error::NonPowerOfTwoBandwidth(6))
         ));
         // Failed builds are not cached.
         assert!(reg.is_empty());
-        let lenient = PlanRegistry::new(1, None, None, true);
+        let lenient = PlanRegistry::new(1, None, None, true, PlanRigor::Estimate, None);
         assert_eq!(lenient.get(key(6)).unwrap().bandwidth(), 6);
     }
 
     #[test]
     fn concurrent_cold_requests_share_one_build() {
-        let reg = PlanRegistry::new(1, None, None, false);
+        let reg = PlanRegistry::new(1, None, None, false, PlanRigor::Estimate, None);
         let plans: Vec<Arc<So3Plan>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..4)
                 .map(|_| scope.spawn(|| reg.get(key(8)).unwrap()))
@@ -436,7 +451,7 @@ mod tests {
     #[test]
     fn shared_pool_is_reused_by_cached_plans() {
         let pool = Arc::new(WorkerPool::new(2).unwrap());
-        let reg = PlanRegistry::new(2, Some(Arc::clone(&pool)), None, false);
+        let reg = PlanRegistry::new(2, Some(Arc::clone(&pool)), None, false, PlanRigor::Estimate, None);
         let plan = reg.get(key(4)).unwrap();
         assert!(Arc::ptr_eq(plan.pool().unwrap(), &pool));
     }

@@ -49,6 +49,7 @@ use crate::fft::FftEngine;
 use crate::pool::{PoolSpec, Schedule, WorkerPool};
 use crate::so3::coeffs::So3Coeffs;
 use crate::so3::sampling::So3Grid;
+use crate::wisdom::{self, PlanRigor, WisdomOutcome, WisdomSource, WisdomStore, WisdomWarning};
 
 /// Which execution backend a plan resolved to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -141,6 +142,9 @@ impl Transform for Executor {
 pub struct So3Plan {
     exec: Executor,
     backend: BackendKind,
+    /// What `PlanRigor::Measure` did during the build (`None` under
+    /// Estimate).
+    wisdom: Option<WisdomOutcome>,
 }
 
 impl So3Plan {
@@ -158,6 +162,9 @@ impl So3Plan {
             config: ExecutorConfig::default(),
             offload: None,
             allow_any_bandwidth: false,
+            rigor: PlanRigor::Estimate,
+            wisdom: None,
+            time_budget: std::time::Duration::from_millis(250),
         }
     }
 
@@ -169,6 +176,14 @@ impl So3Plan {
     /// Which backend this plan executes on.
     pub fn backend(&self) -> BackendKind {
         self.backend
+    }
+
+    /// What the wisdom machinery did while building this plan: `None`
+    /// for Estimate-built plans, otherwise the source (cache hit,
+    /// fresh measurement, or a typed fallback warning), the applied
+    /// knobs, and the wall time spent searching.
+    pub fn wisdom(&self) -> Option<&WisdomOutcome> {
+        self.wisdom.as_ref()
     }
 
     /// The plan as a backend-agnostic transform handle.
@@ -370,6 +385,9 @@ pub struct So3PlanBuilder {
     config: ExecutorConfig,
     offload: Option<Arc<dyn DwtOffload>>,
     allow_any_bandwidth: bool,
+    rigor: PlanRigor,
+    wisdom: Option<Arc<WisdomStore>>,
+    time_budget: std::time::Duration,
 }
 
 impl std::fmt::Debug for So3PlanBuilder {
@@ -379,6 +397,8 @@ impl std::fmt::Debug for So3PlanBuilder {
             .field("config", &self.config)
             .field("offload", &self.offload.is_some())
             .field("allow_any_bandwidth", &self.allow_any_bandwidth)
+            .field("rigor", &self.rigor)
+            .field("time_budget", &self.time_budget)
             .finish()
     }
 }
@@ -481,6 +501,32 @@ impl So3PlanBuilder {
         self
     }
 
+    /// Planning rigor (FFTW-style): [`PlanRigor::Estimate`] (default)
+    /// keeps the builder's static configuration untouched;
+    /// [`PlanRigor::Measure`] searches the knob space at build time,
+    /// reusing persisted wisdom when available (see [`crate::wisdom`]).
+    pub fn rigor(mut self, rigor: PlanRigor) -> Self {
+        self.rigor = rigor;
+        self
+    }
+
+    /// The wisdom store `Measure` builds consult and record into
+    /// (default: [`WisdomStore::global`], backed by
+    /// `util::cache_dir()/wisdom.so3wis`).
+    pub fn wisdom_store(mut self, store: Arc<WisdomStore>) -> Self {
+        self.wisdom = Some(store);
+        self
+    }
+
+    /// Wall-time budget for one `Measure` search (default 250 ms). The
+    /// budget is split across the timed candidates; each still gets at
+    /// least one repetition, so a tiny budget degrades accuracy, not
+    /// correctness.
+    pub fn wisdom_time_budget_ms(mut self, ms: u64) -> Self {
+        self.time_budget = std::time::Duration::from_millis(ms);
+        self
+    }
+
     pub fn build(self) -> Result<So3Plan> {
         if self.b == 0 {
             return Err(Error::InvalidBandwidth(0));
@@ -491,7 +537,25 @@ impl So3PlanBuilder {
         if !self.b.is_power_of_two() && !self.allow_any_bandwidth {
             return Err(Error::NonPowerOfTwoBandwidth(self.b));
         }
-        let mut exec = Executor::new(self.b, self.config)?;
+        let mut config = self.config;
+        let wisdom = match self.rigor {
+            PlanRigor::Estimate => None,
+            PlanRigor::Measure if self.offload.is_some() => {
+                // The search times the CPU engines; tuning an offloaded
+                // plan from those timings would be wrong. Typed
+                // fallback, not an error.
+                Some(WisdomOutcome {
+                    source: WisdomSource::Fallback(WisdomWarning::OffloadAttached),
+                    choice: None,
+                    search_seconds: 0.0,
+                })
+            }
+            PlanRigor::Measure => {
+                let store = self.wisdom.unwrap_or_else(WisdomStore::global);
+                Some(wisdom::tune(&store, self.b, &mut config, self.time_budget))
+            }
+        };
+        let mut exec = Executor::new(self.b, config)?;
         let backend = if self.offload.is_some() {
             BackendKind::PjrtOffload
         } else if exec.config().threads == 1 {
@@ -502,7 +566,11 @@ impl So3PlanBuilder {
         if let Some(off) = self.offload {
             exec = exec.with_offload(off);
         }
-        Ok(So3Plan { exec, backend })
+        Ok(So3Plan {
+            exec,
+            backend,
+            wisdom,
+        })
     }
 }
 
@@ -641,6 +709,31 @@ mod tests {
             let single = plan.forward(g).unwrap();
             assert_eq!(single.as_slice(), s.as_slice());
         }
+    }
+
+    #[test]
+    fn measure_rigor_tunes_and_estimate_is_untouched() {
+        let store = WisdomStore::in_memory();
+        let measured = So3Plan::builder(4)
+            .rigor(PlanRigor::Measure)
+            .wisdom_store(Arc::clone(&store))
+            .wisdom_time_budget_ms(30)
+            .build()
+            .unwrap();
+        let outcome = measured.wisdom().expect("Measure records an outcome");
+        assert_eq!(outcome.source, WisdomSource::Measured);
+        assert!(outcome.choice.is_some());
+        assert_eq!(store.stats().measurements, 1);
+        // A second Measure build is served from the in-process memo.
+        let again = So3Plan::builder(4)
+            .rigor(PlanRigor::Measure)
+            .wisdom_store(Arc::clone(&store))
+            .build()
+            .unwrap();
+        assert_eq!(again.wisdom().unwrap().source, WisdomSource::CacheHit);
+        assert_eq!(store.stats().measurements, 1);
+        // Estimate plans carry no outcome at all.
+        assert!(So3Plan::new(4).unwrap().wisdom().is_none());
     }
 
     #[test]

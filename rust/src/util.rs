@@ -1,8 +1,9 @@
 //! Shared low-level utilities: disjoint-write shared slices,
-//! poison-recovering lock helpers, and the few special functions the
-//! Wigner-d seeds need.
+//! poison-recovering lock helpers, on-disk cache path resolution, and
+//! the few special functions the Wigner-d seeds need.
 
 use std::cell::UnsafeCell;
+use std::path::PathBuf;
 use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 /// Lock a mutex, recovering the guard from a poisoned lock — the
@@ -170,6 +171,36 @@ pub fn round_up(x: usize, m: usize) -> usize {
     x.div_ceil(m) * m
 }
 
+/// The crate's on-disk cache directory — the single resolution point
+/// for every persistent artifact (the Wigner `SO3W2` tables and the
+/// wisdom `SO3WIS1` store live side by side here):
+///
+/// 1. `$SO3FT_CACHE_DIR` (explicit override; CI uses a workspace-local
+///    directory so runs stay hermetic),
+/// 2. `$XDG_CACHE_HOME/so3ft`,
+/// 3. `$HOME/.cache/so3ft`,
+/// 4. `<temp_dir>/so3ft-cache` (last resort; always writable-ish).
+///
+/// Resolution only — nothing is created until a writer calls
+/// `create_dir_all`.
+pub fn cache_dir() -> PathBuf {
+    if let Some(dir) = std::env::var_os("SO3FT_CACHE_DIR").filter(|v| !v.is_empty()) {
+        return PathBuf::from(dir);
+    }
+    if let Some(xdg) = std::env::var_os("XDG_CACHE_HOME").filter(|v| !v.is_empty()) {
+        return PathBuf::from(xdg).join("so3ft");
+    }
+    if let Some(home) = std::env::var_os("HOME").filter(|v| !v.is_empty()) {
+        return PathBuf::from(home).join(".cache").join("so3ft");
+    }
+    std::env::temp_dir().join("so3ft-cache")
+}
+
+/// `cache_dir()/name` — the canonical path of one cached artifact.
+pub fn cache_file(name: &str) -> PathBuf {
+    cache_dir().join(name)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,6 +258,37 @@ mod tests {
         assert_eq!(round_up(1, 8), 8);
         assert_eq!(round_up(8, 8), 8);
         assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn cache_dir_resolution_precedence() {
+        // Self-contained: this is the only test touching these env vars
+        // (parallel tests never race on them).
+        let saved: Vec<(&str, Option<std::ffi::OsString>)> =
+            ["SO3FT_CACHE_DIR", "XDG_CACHE_HOME", "HOME"]
+                .iter()
+                .map(|k| (*k, std::env::var_os(k)))
+                .collect();
+        std::env::set_var("SO3FT_CACHE_DIR", "/explicit/cache");
+        assert_eq!(cache_dir(), PathBuf::from("/explicit/cache"));
+        assert_eq!(
+            cache_file("wisdom.so3wis"),
+            PathBuf::from("/explicit/cache/wisdom.so3wis")
+        );
+        std::env::remove_var("SO3FT_CACHE_DIR");
+        std::env::set_var("XDG_CACHE_HOME", "/xdg");
+        assert_eq!(cache_dir(), PathBuf::from("/xdg/so3ft"));
+        std::env::remove_var("XDG_CACHE_HOME");
+        std::env::set_var("HOME", "/home/user");
+        assert_eq!(cache_dir(), PathBuf::from("/home/user/.cache/so3ft"));
+        std::env::remove_var("HOME");
+        assert_eq!(cache_dir(), std::env::temp_dir().join("so3ft-cache"));
+        for (k, v) in saved {
+            match v {
+                Some(v) => std::env::set_var(k, v),
+                None => std::env::remove_var(k),
+            }
+        }
     }
 
     #[test]

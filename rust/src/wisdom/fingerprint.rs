@@ -1,0 +1,104 @@
+//! Machine fingerprint for wisdom entries.
+//!
+//! Measured timings are only meaningful on the machine that produced
+//! them, so every wisdom file is stamped with a digest of the facts
+//! that shape the measurement: core count, cache-line size, target
+//! arch/OS, and the crate version (kernels change between releases).
+//! A digest mismatch on load silently invalidates the stored entries —
+//! the planner re-measures rather than trusting stale timings.
+
+use std::fmt;
+
+/// The machine facts a wisdom measurement depends on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MachineFingerprint {
+    /// Available hardware parallelism.
+    pub cores: usize,
+    /// Assumed cache-line size in bytes (per-arch constant; `std` has no
+    /// portable query).
+    pub cache_line: usize,
+    /// `std::env::consts::ARCH`.
+    pub arch: &'static str,
+    /// `std::env::consts::OS`.
+    pub os: &'static str,
+    /// `CARGO_PKG_VERSION` at build time.
+    pub crate_version: &'static str,
+}
+
+impl MachineFingerprint {
+    /// The fingerprint of the running process.
+    pub fn current() -> Self {
+        Self {
+            cores: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+            cache_line: if cfg!(target_arch = "aarch64") { 128 } else { 64 },
+            arch: std::env::consts::ARCH,
+            os: std::env::consts::OS,
+            crate_version: env!("CARGO_PKG_VERSION"),
+        }
+    }
+
+    /// FNV-1a hash of the canonical display form — the value stored in
+    /// the wisdom file header.
+    pub fn digest(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        for byte in self.to_string().bytes() {
+            h ^= u64::from(byte);
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+}
+
+impl fmt::Display for MachineFingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "cores={} cache_line={} arch={} os={} crate={}",
+            self.cores, self.cache_line, self.arch, self.os, self.crate_version
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn current_is_stable_within_a_process() {
+        let a = MachineFingerprint::current();
+        let b = MachineFingerprint::current();
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        assert!(a.cores >= 1);
+    }
+
+    #[test]
+    fn digest_tracks_every_field() {
+        let base = MachineFingerprint::current();
+        let mut other = base.clone();
+        other.cores = base.cores + 1;
+        assert_ne!(base.digest(), other.digest());
+        let mut other = base.clone();
+        other.cache_line = base.cache_line * 2;
+        assert_ne!(base.digest(), other.digest());
+    }
+
+    #[test]
+    fn display_is_the_documented_form() {
+        let fp = MachineFingerprint {
+            cores: 4,
+            cache_line: 64,
+            arch: "x86_64",
+            os: "linux",
+            crate_version: "0.7.0",
+        };
+        assert_eq!(
+            fp.to_string(),
+            "cores=4 cache_line=64 arch=x86_64 os=linux crate=0.7.0"
+        );
+    }
+}

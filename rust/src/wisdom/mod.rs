@@ -1,0 +1,308 @@
+//! Measured auto-tuning (the FFTW "wisdom" idiom) for
+//! [`crate::transform::So3Plan`] building.
+//!
+//! [`crate::transform::So3PlanBuilder::rigor`] selects between:
+//!
+//! * [`PlanRigor::Estimate`] (default) — today's static defaults,
+//!   bit-identical and zero-cost; and
+//! * [`PlanRigor::Measure`] — a build-time search over the tunable knob
+//!   space (DWT algorithm × FFT engine × schedule × partition
+//!   strategy), pruned by the `simulator/` cost model and wall-clocked
+//!   on the plan's own worker pool ([`search`]), with the winner
+//!   persisted in a machine-fingerprinted [`store::WisdomStore`] so
+//!   the measurement runs once per `(bandwidth, direction, threads,
+//!   machine)` — ever.
+//!
+//! Wisdom only ever *selects among* the crate's parity-tested engines;
+//! it never changes what any engine computes. A Measure-built plan is
+//! bit-identical to an Estimate plan configured with the same winning
+//! knobs (pinned by `rust/tests/wisdom.rs`).
+//!
+//! Every degraded path is a typed [`WisdomWarning`] and a fallback to
+//! Estimate behavior — a corrupt wisdom file can slow a build down, but
+//! it can never fail one.
+
+pub mod fingerprint;
+pub mod search;
+pub mod store;
+
+pub use fingerprint::MachineFingerprint;
+pub use search::{candidate_space, Candidate};
+pub use store::{
+    TuneDirection, WisdomEntry, WisdomKey, WisdomLookup, WisdomStats, WisdomStore,
+};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::ExecutorConfig;
+use crate::pool::PoolSpec;
+
+/// How much effort `So3PlanBuilder::build` spends choosing a plan
+/// configuration (names follow FFTW's planner rigor levels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanRigor {
+    /// Keep the builder's static configuration untouched (the default;
+    /// zero build-time cost).
+    #[default]
+    Estimate,
+    /// Search the knob space at build time, reusing persisted wisdom
+    /// when available. Explicit builder settings for the searched axes
+    /// are treated as a starting point and may be overridden by the
+    /// measured winner.
+    Measure,
+}
+
+impl PlanRigor {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "estimate" => Some(PlanRigor::Estimate),
+            "measure" => Some(PlanRigor::Measure),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanRigor::Estimate => "estimate",
+            PlanRigor::Measure => "measure",
+        }
+    }
+}
+
+/// Why a `Measure` build kept the Estimate defaults. Warnings, not
+/// errors: plan building succeeds regardless.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WisdomWarning {
+    /// The wisdom file exists but is not parseable.
+    CorruptStore { path: PathBuf, detail: String },
+    /// The wisdom file carries a different `SO3WIS*` format version.
+    VersionMismatch { path: PathBuf, found: String },
+    /// The wisdom file could not be read (permissions, I/O).
+    Io { path: PathBuf, detail: String },
+    /// Measure was requested on a plan with a DWT offload attached —
+    /// the search times the CPU engines, which would mis-tune the
+    /// offloaded plan.
+    OffloadAttached,
+    /// The measurement pass itself failed (e.g. pool spawn failure).
+    SearchFailed { detail: String },
+}
+
+impl std::fmt::Display for WisdomWarning {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WisdomWarning::CorruptStore { path, detail } => {
+                write!(f, "corrupt wisdom store {path:?}: {detail}")
+            }
+            WisdomWarning::VersionMismatch { path, found } => write!(
+                f,
+                "wisdom store {path:?} has format {found:?} (this build reads SO3WIS1)"
+            ),
+            WisdomWarning::Io { path, detail } => {
+                write!(f, "cannot read wisdom store {path:?}: {detail}")
+            }
+            WisdomWarning::OffloadAttached => write!(
+                f,
+                "PlanRigor::Measure ignored: a DWT offload is attached and the \
+                 search times the CPU engines"
+            ),
+            WisdomWarning::SearchFailed { detail } => {
+                write!(f, "wisdom search failed: {detail}")
+            }
+        }
+    }
+}
+
+/// Where a `Measure` build's configuration came from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WisdomSource {
+    /// Served from the store (file or in-process memoization).
+    CacheHit,
+    /// Measured in this build and recorded.
+    Measured,
+    /// Estimate defaults kept; the warning says why.
+    Fallback(WisdomWarning),
+}
+
+/// The knobs a `Measure` build settled on, with their measured times.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedChoice {
+    pub schedule: crate::pool::Schedule,
+    pub strategy: crate::coordinator::PartitionStrategy,
+    pub algorithm: crate::dwt::DwtAlgorithm,
+    pub fft_engine: crate::fft::FftEngine,
+    pub fwd_seconds: f64,
+    pub inv_seconds: f64,
+}
+
+/// What `PlanRigor::Measure` did during a build (see
+/// [`crate::transform::So3Plan::wisdom`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WisdomOutcome {
+    pub source: WisdomSource,
+    /// The applied knobs; `None` on fallback.
+    pub choice: Option<TunedChoice>,
+    /// Wall time this build spent in wisdom (lookup + search).
+    pub search_seconds: f64,
+}
+
+fn apply(config: &mut ExecutorConfig, choice: &TunedChoice) {
+    config.schedule = choice.schedule;
+    config.strategy = choice.strategy;
+    config.algorithm = choice.algorithm;
+    config.fft_engine = choice.fft_engine;
+}
+
+/// Run the `Measure` path for one build: look `config`'s shape up in
+/// `store`, measuring (and recording, both directions) on a miss, and
+/// mutate `config` to the winning knobs. Degraded stores or failed
+/// searches leave `config` untouched and report a
+/// [`WisdomSource::Fallback`].
+pub(crate) fn tune(
+    store: &Arc<WisdomStore>,
+    b: usize,
+    config: &mut ExecutorConfig,
+    budget: Duration,
+) -> WisdomOutcome {
+    let started = Instant::now();
+    let key = WisdomKey {
+        bandwidth: b,
+        direction: TuneDirection::Inverse,
+        threads: config.threads,
+    };
+    match store.lookup(key) {
+        WisdomLookup::Hit(entry) => {
+            let choice = TunedChoice {
+                schedule: entry.schedule,
+                strategy: entry.strategy,
+                algorithm: entry.algorithm,
+                fft_engine: entry.fft_engine,
+                // Stored "seconds" is the per-direction best at record
+                // time; the forward slot shares the file.
+                inv_seconds: entry.seconds,
+                fwd_seconds: match store.lookup(WisdomKey {
+                    direction: TuneDirection::Forward,
+                    ..key
+                }) {
+                    WisdomLookup::Hit(fwd) => fwd.seconds,
+                    _ => entry.seconds,
+                },
+            };
+            apply(config, &choice);
+            WisdomOutcome {
+                source: WisdomSource::CacheHit,
+                choice: Some(choice),
+                search_seconds: started.elapsed().as_secs_f64(),
+            }
+        }
+        WisdomLookup::Fallback(warning) => {
+            store.warn_once(&warning);
+            WisdomOutcome {
+                source: WisdomSource::Fallback(warning),
+                choice: None,
+                search_seconds: started.elapsed().as_secs_f64(),
+            }
+        }
+        WisdomLookup::Miss => match search::search(b, config, budget) {
+            Ok(out) => {
+                store.note_measurement();
+                let base_entry = WisdomEntry {
+                    schedule: out.winner.schedule,
+                    strategy: out.winner.strategy,
+                    algorithm: out.winner.algorithm,
+                    fft_engine: out.winner.fft_engine,
+                    seconds: out.inv_seconds,
+                };
+                store.record(key, base_entry.clone());
+                store.record(
+                    WisdomKey {
+                        direction: TuneDirection::Forward,
+                        ..key
+                    },
+                    WisdomEntry {
+                        seconds: out.fwd_seconds,
+                        ..base_entry
+                    },
+                );
+                let choice = TunedChoice {
+                    schedule: out.winner.schedule,
+                    strategy: out.winner.strategy,
+                    algorithm: out.winner.algorithm,
+                    fft_engine: out.winner.fft_engine,
+                    fwd_seconds: out.fwd_seconds,
+                    inv_seconds: out.inv_seconds,
+                };
+                apply(config, &choice);
+                // The search already spun up the measurement pool for
+                // owned-pool configs; the plan reuses it instead of
+                // spawning a second one.
+                if let Some(pool) = out.shared_pool {
+                    if matches!(config.pool, PoolSpec::Owned) {
+                        config.pool = PoolSpec::Shared(pool);
+                    }
+                }
+                WisdomOutcome {
+                    source: WisdomSource::Measured,
+                    choice: Some(choice),
+                    search_seconds: started.elapsed().as_secs_f64(),
+                }
+            }
+            Err(e) => {
+                let warning = WisdomWarning::SearchFailed {
+                    detail: e.to_string(),
+                };
+                store.warn_once(&warning);
+                WisdomOutcome {
+                    source: WisdomSource::Fallback(warning),
+                    choice: None,
+                    search_seconds: started.elapsed().as_secs_f64(),
+                }
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rigor_parses_and_names_roundtrip() {
+        assert_eq!(PlanRigor::parse("estimate"), Some(PlanRigor::Estimate));
+        assert_eq!(PlanRigor::parse("measure"), Some(PlanRigor::Measure));
+        assert_eq!(PlanRigor::parse("exhaustive"), None);
+        for r in [PlanRigor::Estimate, PlanRigor::Measure] {
+            assert_eq!(PlanRigor::parse(r.name()), Some(r));
+        }
+        assert_eq!(PlanRigor::default(), PlanRigor::Estimate);
+    }
+
+    #[test]
+    fn tune_measures_once_then_hits_memoization() {
+        let store = WisdomStore::in_memory();
+        let mut config = ExecutorConfig::default();
+        let out = tune(&store, 4, &mut config, Duration::from_millis(30));
+        assert_eq!(out.source, WisdomSource::Measured);
+        assert!(out.choice.is_some());
+        let mut config2 = ExecutorConfig::default();
+        let out2 = tune(&store, 4, &mut config2, Duration::from_millis(30));
+        assert_eq!(out2.source, WisdomSource::CacheHit);
+        assert_eq!(store.stats().measurements, 1);
+        // Both builds settle on the same knobs.
+        assert_eq!(config.schedule, config2.schedule);
+        assert_eq!(config.algorithm, config2.algorithm);
+        assert_eq!(config.fft_engine, config2.fft_engine);
+        assert_eq!(config.strategy, config2.strategy);
+    }
+
+    #[test]
+    fn warning_display_is_informative() {
+        let w = WisdomWarning::VersionMismatch {
+            path: PathBuf::from("/tmp/w.so3wis"),
+            found: "SO3WIS9".into(),
+        };
+        let s = w.to_string();
+        assert!(s.contains("SO3WIS9") && s.contains("SO3WIS1"), "{s}");
+    }
+}

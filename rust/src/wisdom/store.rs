@@ -1,0 +1,570 @@
+//! The persistent wisdom store: measured planner choices keyed by
+//! `(bandwidth, direction, threads)` and stamped with a
+//! [`MachineFingerprint`](super::fingerprint::MachineFingerprint).
+//!
+//! On-disk format (`SO3WIS1`, line-oriented text — diffable, and the
+//! parser is a dozen lines):
+//!
+//! ```text
+//! SO3WIS1
+//! fingerprint 9a3c0f21e77b4d55
+//! entry b=16 dir=inv threads=4 schedule=dynamic:1 strategy=geometric \
+//!       algorithm=matvec-folded fft=split-radix seconds=1.234000e-3
+//! ```
+//!
+//! Failure policy (the FFTW wisdom contract): a corrupt or
+//! wrong-version file is a [`WisdomWarning`], never an error — lookups
+//! report [`WisdomLookup::Fallback`] and the planner keeps its static
+//! defaults. A fingerprint mismatch is *not* a warning: the file is
+//! fine, it just belongs to another machine, so its entries are ignored
+//! and the planner re-measures (the next `record` rewrites the file
+//! under the current fingerprint).
+//!
+//! The in-memory entry map doubles as the in-process memoization layer:
+//! the file is read at most once per store, and repeated `Measure`
+//! builds of a known key never touch the disk or the timer again.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::config::{parse_algorithm, parse_fft_engine};
+use crate::coordinator::PartitionStrategy;
+use crate::dwt::DwtAlgorithm;
+use crate::fft::FftEngine;
+use crate::pool::Schedule;
+use crate::util::{cache_file, lock_unpoisoned};
+
+use super::fingerprint::MachineFingerprint;
+use super::WisdomWarning;
+
+/// Transform direction a measurement applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TuneDirection {
+    Forward,
+    Inverse,
+}
+
+impl TuneDirection {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuneDirection::Forward => "fwd",
+            TuneDirection::Inverse => "inv",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fwd" => Some(TuneDirection::Forward),
+            "inv" => Some(TuneDirection::Inverse),
+            _ => None,
+        }
+    }
+}
+
+/// One wisdom slot: the measured-best knobs for a transform shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WisdomKey {
+    pub bandwidth: usize,
+    pub direction: TuneDirection,
+    pub threads: usize,
+}
+
+/// The winning knob setting for a [`WisdomKey`], with its measured time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WisdomEntry {
+    pub schedule: Schedule,
+    pub strategy: PartitionStrategy,
+    pub algorithm: DwtAlgorithm,
+    pub fft_engine: FftEngine,
+    /// Best measured wall time (seconds) for this key.
+    pub seconds: f64,
+}
+
+/// Canonical config-file name of a DWT algorithm.
+pub fn algorithm_name(a: DwtAlgorithm) -> &'static str {
+    match a {
+        DwtAlgorithm::MatVecFolded => "matvec-folded",
+        DwtAlgorithm::MatVec => "matvec",
+        DwtAlgorithm::Clenshaw => "clenshaw",
+    }
+}
+
+/// Canonical config-file name of an FFT engine.
+pub fn fft_engine_name(e: FftEngine) -> &'static str {
+    match e {
+        FftEngine::SplitRadix => "split-radix",
+        FftEngine::Radix2Baseline => "radix2-baseline",
+    }
+}
+
+impl WisdomEntry {
+    /// One-line human description ("schedule=dynamic:1 strategy=… …").
+    pub fn describe(&self) -> String {
+        format!(
+            "schedule={} strategy={} algorithm={} fft={} seconds={:.3e}",
+            self.schedule.name(),
+            self.strategy.name(),
+            algorithm_name(self.algorithm),
+            fft_engine_name(self.fft_engine),
+            self.seconds
+        )
+    }
+}
+
+/// Result of a store lookup.
+#[derive(Debug, Clone)]
+pub enum WisdomLookup {
+    /// A tuned entry for this key on this machine.
+    Hit(WisdomEntry),
+    /// Nothing stored — the caller should measure and [`WisdomStore::record`].
+    Miss,
+    /// The backing file is unusable; keep the Estimate defaults.
+    Fallback(WisdomWarning),
+}
+
+/// Monotonic counters of one store (see [`WisdomStore::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WisdomStats {
+    /// Lookups answered from a stored entry.
+    pub hits: u64,
+    /// Lookups that found nothing (and triggered a measurement).
+    pub misses: u64,
+    /// Full measurement passes run against this store.
+    pub measurements: u64,
+}
+
+struct StoreState {
+    /// Whether the backing file has been read (at most once per store).
+    loaded: bool,
+    entries: HashMap<WisdomKey, WisdomEntry>,
+    /// Set when the backing file is unusable — every lookup then falls
+    /// back until the process restarts (we never overwrite a file we
+    /// could not parse: it may be the user's data from a newer version).
+    warning: Option<WisdomWarning>,
+}
+
+/// See the [module docs](self). Shareable (`Arc`) across builders,
+/// services, and caller threads.
+pub struct WisdomStore {
+    /// Backing file; `None` = purely in-memory (tests, benches).
+    path: Option<PathBuf>,
+    state: Mutex<StoreState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    measurements: AtomicU64,
+    /// One warning line per store, not one per build.
+    warned: AtomicBool,
+}
+
+impl WisdomStore {
+    /// A store backed by `path` (read lazily, written on `record`).
+    pub fn open(path: impl Into<PathBuf>) -> Arc<Self> {
+        Arc::new(Self::new(Some(path.into())))
+    }
+
+    /// A store with no backing file — entries live for the process only.
+    pub fn in_memory() -> Arc<Self> {
+        Arc::new(Self::new(None))
+    }
+
+    /// The process-wide default store, backed by
+    /// `util::cache_dir()/wisdom.so3wis`.
+    pub fn global() -> Arc<Self> {
+        static GLOBAL: OnceLock<Arc<WisdomStore>> = OnceLock::new();
+        Arc::clone(GLOBAL.get_or_init(|| WisdomStore::open(cache_file("wisdom.so3wis"))))
+    }
+
+    fn new(path: Option<PathBuf>) -> Self {
+        Self {
+            path,
+            state: Mutex::new(StoreState {
+                loaded: false,
+                entries: HashMap::new(),
+                warning: None,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            measurements: AtomicU64::new(0),
+            warned: AtomicBool::new(false),
+        }
+    }
+
+    /// The backing file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Look up the tuned entry for `key`, loading the backing file on
+    /// first use. Bumps the hit/miss counters.
+    pub fn lookup(&self, key: WisdomKey) -> WisdomLookup {
+        let mut state = lock_unpoisoned(&self.state);
+        self.ensure_loaded(&mut state);
+        if let Some(w) = &state.warning {
+            return WisdomLookup::Fallback(w.clone());
+        }
+        match state.entries.get(&key) {
+            Some(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                WisdomLookup::Hit(e.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                WisdomLookup::Miss
+            }
+        }
+    }
+
+    /// Store a measured entry (keeping the better of two measurements
+    /// for the same key) and persist best-effort. A failed write keeps
+    /// the in-memory entry — persistence is an optimization, never a
+    /// correctness requirement.
+    pub fn record(&self, key: WisdomKey, entry: WisdomEntry) {
+        let mut state = lock_unpoisoned(&self.state);
+        self.ensure_loaded(&mut state);
+        if state.warning.is_some() {
+            // Never rewrite a file we could not parse.
+            return;
+        }
+        state.entries.insert(key, entry);
+        if let Err(e) = self.persist(&state) {
+            if !self.warned.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "so3ft wisdom: could not persist {:?}: {e} (entries stay in-memory)",
+                    self.path
+                );
+            }
+        }
+    }
+
+    /// Count one full measurement pass (for tests and `wisdom train`).
+    pub fn note_measurement(&self) {
+        self.measurements.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> WisdomStats {
+        WisdomStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            measurements: self.measurements.load(Ordering::Relaxed),
+        }
+    }
+
+    /// All stored entries, sorted by key (for `wisdom show`).
+    pub fn entries(&self) -> Vec<(WisdomKey, WisdomEntry)> {
+        let mut state = lock_unpoisoned(&self.state);
+        self.ensure_loaded(&mut state);
+        let mut v: Vec<_> = state
+            .entries
+            .iter()
+            .map(|(k, e)| (*k, e.clone()))
+            .collect();
+        v.sort_by_key(|(k, _)| (k.bandwidth, k.direction.name(), k.threads));
+        v
+    }
+
+    /// Drop every entry and delete the backing file (for `wisdom clear`).
+    /// Also clears a fallback warning: the unusable file is gone.
+    pub fn clear(&self) {
+        let mut state = lock_unpoisoned(&self.state);
+        state.entries.clear();
+        state.warning = None;
+        state.loaded = true;
+        if let Some(p) = &self.path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    /// Emit `warning` to stderr once per store lifetime.
+    pub(crate) fn warn_once(&self, warning: &WisdomWarning) {
+        if !self.warned.swap(true, Ordering::Relaxed) {
+            eprintln!("so3ft wisdom: {warning}; falling back to Estimate defaults");
+        }
+    }
+
+    fn ensure_loaded(&self, state: &mut StoreState) {
+        if state.loaded {
+            return;
+        }
+        state.loaded = true;
+        let Some(path) = &self.path else { return };
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return,
+            Err(e) => {
+                state.warning = Some(WisdomWarning::Io {
+                    path: path.clone(),
+                    detail: e.to_string(),
+                });
+                return;
+            }
+        };
+        match parse_file(&text, path) {
+            Ok(Some(entries)) => state.entries = entries,
+            // Valid file, foreign fingerprint: ignore entries, re-measure.
+            Ok(None) => {}
+            Err(w) => state.warning = Some(w),
+        }
+    }
+
+    fn persist(&self, state: &StoreState) -> std::io::Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut keys: Vec<_> = state.entries.keys().copied().collect();
+        keys.sort_by_key(|k| (k.bandwidth, k.direction.name(), k.threads));
+        let mut out = Vec::with_capacity(keys.len() + 2);
+        out.push("SO3WIS1".to_string());
+        out.push(format!(
+            "fingerprint {:016x}",
+            MachineFingerprint::current().digest()
+        ));
+        for k in keys {
+            let e = &state.entries[&k];
+            out.push(format!(
+                "entry b={} dir={} threads={} schedule={} strategy={} algorithm={} \
+                 fft={} seconds={:.6e}",
+                k.bandwidth,
+                k.direction.name(),
+                k.threads,
+                e.schedule.name(),
+                e.strategy.name(),
+                algorithm_name(e.algorithm),
+                fft_engine_name(e.fft_engine),
+                e.seconds
+            ));
+        }
+        // Write-then-rename so a crash mid-write never corrupts the store.
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            for line in &out {
+                writeln!(f, "{line}")?;
+            }
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)
+    }
+}
+
+impl fmt::Debug for WisdomStore {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WisdomStore")
+            .field("path", &self.path)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+/// Parse an `SO3WIS1` file. `Ok(None)` = foreign fingerprint (valid
+/// file, ignore entries); `Err` = version mismatch or corruption.
+fn parse_file(
+    text: &str,
+    path: &Path,
+) -> std::result::Result<Option<HashMap<WisdomKey, WisdomEntry>>, WisdomWarning> {
+    let corrupt = |detail: String| WisdomWarning::CorruptStore {
+        path: path.to_path_buf(),
+        detail,
+    };
+    let mut lines = text.lines().filter(|l| {
+        let t = l.trim();
+        !t.is_empty() && !t.starts_with('#')
+    });
+    match lines.next() {
+        Some("SO3WIS1") => {}
+        Some(v) if v.starts_with("SO3WIS") => {
+            return Err(WisdomWarning::VersionMismatch {
+                path: path.to_path_buf(),
+                found: v.to_string(),
+            })
+        }
+        other => {
+            return Err(corrupt(format!(
+                "expected SO3WIS1 header, got {other:?}"
+            )))
+        }
+    }
+    let fp_line = lines
+        .next()
+        .ok_or_else(|| corrupt("missing fingerprint line".into()))?;
+    let digest = fp_line
+        .strip_prefix("fingerprint ")
+        .and_then(|h| u64::from_str_radix(h.trim(), 16).ok())
+        .ok_or_else(|| corrupt(format!("bad fingerprint line {fp_line:?}")))?;
+    let foreign = digest != MachineFingerprint::current().digest();
+    let mut entries = HashMap::new();
+    for line in lines {
+        let body = line
+            .trim()
+            .strip_prefix("entry ")
+            .ok_or_else(|| corrupt(format!("unexpected line {line:?}")))?;
+        let mut fields: HashMap<&str, &str> = HashMap::new();
+        for tok in body.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| corrupt(format!("bad field {tok:?}")))?;
+            fields.insert(k, v);
+        }
+        let get = |name: &str| {
+            fields
+                .get(name)
+                .copied()
+                .ok_or_else(|| corrupt(format!("entry missing {name:?}: {line:?}")))
+        };
+        let bad = |name: &str, v: &str| corrupt(format!("bad {name} {v:?} in {line:?}"));
+        let b_s = get("b")?;
+        let dir_s = get("dir")?;
+        let threads_s = get("threads")?;
+        let sched_s = get("schedule")?;
+        let strat_s = get("strategy")?;
+        let algo_s = get("algorithm")?;
+        let fft_s = get("fft")?;
+        let secs_s = get("seconds")?;
+        let key = WisdomKey {
+            bandwidth: b_s.parse().map_err(|_| bad("b", b_s))?,
+            direction: TuneDirection::parse(dir_s).ok_or_else(|| bad("dir", dir_s))?,
+            threads: threads_s.parse().map_err(|_| bad("threads", threads_s))?,
+        };
+        let entry = WisdomEntry {
+            schedule: Schedule::parse(sched_s).ok_or_else(|| bad("schedule", sched_s))?,
+            strategy: PartitionStrategy::parse(strat_s)
+                .ok_or_else(|| bad("strategy", strat_s))?,
+            algorithm: parse_algorithm(algo_s).map_err(|_| bad("algorithm", algo_s))?,
+            fft_engine: parse_fft_engine(fft_s).map_err(|_| bad("fft", fft_s))?,
+            seconds: secs_s
+                .parse::<f64>()
+                .ok()
+                .filter(|s| s.is_finite() && *s >= 0.0)
+                .ok_or_else(|| bad("seconds", secs_s))?,
+        };
+        entries.insert(key, entry);
+    }
+    Ok(if foreign { None } else { Some(entries) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(b: usize) -> WisdomKey {
+        WisdomKey {
+            bandwidth: b,
+            direction: TuneDirection::Inverse,
+            threads: 1,
+        }
+    }
+
+    fn entry(seconds: f64) -> WisdomEntry {
+        WisdomEntry {
+            schedule: Schedule::Dynamic { chunk: 4 },
+            strategy: PartitionStrategy::SigmaClustered,
+            algorithm: DwtAlgorithm::MatVec,
+            fft_engine: FftEngine::Radix2Baseline,
+            seconds,
+        }
+    }
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "so3ft-wisdom-store-{tag}-{}.so3wis",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn in_memory_miss_then_hit() {
+        let store = WisdomStore::in_memory();
+        assert!(matches!(store.lookup(key(8)), WisdomLookup::Miss));
+        store.record(key(8), entry(1e-3));
+        match store.lookup(key(8)) {
+            WisdomLookup::Hit(e) => assert_eq!(e, entry(1e-3)),
+            other => panic!("expected hit, got {other:?}"),
+        }
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn disk_roundtrip_and_reopen() {
+        let path = temp_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let store = WisdomStore::open(&path);
+        store.record(key(8), entry(2e-3));
+        store.record(key(16), entry(5e-3));
+        drop(store);
+        let reopened = WisdomStore::open(&path);
+        match reopened.lookup(key(16)) {
+            WisdomLookup::Hit(e) => assert_eq!(e, entry(5e-3)),
+            other => panic!("expected hit after reopen, got {other:?}"),
+        }
+        assert_eq!(reopened.entries().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wrong_version_and_garbage_fall_back() {
+        let path = temp_path("badversion");
+        std::fs::write(&path, "SO3WIS9\nfingerprint 0\n").unwrap();
+        let store = WisdomStore::open(&path);
+        assert!(matches!(
+            store.lookup(key(8)),
+            WisdomLookup::Fallback(WisdomWarning::VersionMismatch { .. })
+        ));
+        // A fallback store refuses to overwrite the file.
+        store.record(key(8), entry(1e-3));
+        assert!(std::fs::read_to_string(&path).unwrap().starts_with("SO3WIS9"));
+        let _ = std::fs::remove_file(&path);
+
+        let path = temp_path("garbage");
+        std::fs::write(&path, "not a wisdom file at all\n").unwrap();
+        let store = WisdomStore::open(&path);
+        assert!(matches!(
+            store.lookup(key(8)),
+            WisdomLookup::Fallback(WisdomWarning::CorruptStore { .. })
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn foreign_fingerprint_ignores_entries_without_warning() {
+        let path = temp_path("foreign");
+        let _ = std::fs::remove_file(&path);
+        let store = WisdomStore::open(&path);
+        store.record(key(8), entry(1e-3));
+        drop(store);
+        // Rewrite the header with a zeroed fingerprint.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let patched: Vec<String> = text
+            .lines()
+            .map(|l| {
+                if l.starts_with("fingerprint ") {
+                    "fingerprint 0000000000000000".to_string()
+                } else {
+                    l.to_string()
+                }
+            })
+            .collect();
+        std::fs::write(&path, patched.join("\n")).unwrap();
+        let reopened = WisdomStore::open(&path);
+        // Not a fallback — a clean miss, prompting re-measurement.
+        assert!(matches!(reopened.lookup(key(8)), WisdomLookup::Miss));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn clear_removes_file_and_entries() {
+        let path = temp_path("clear");
+        let store = WisdomStore::open(&path);
+        store.record(key(8), entry(1e-3));
+        assert!(path.exists());
+        store.clear();
+        assert!(!path.exists());
+        assert!(matches!(store.lookup(key(8)), WisdomLookup::Miss));
+    }
+}

@@ -133,12 +133,15 @@ fn half_tables_bytes_and_disk_roundtrip() {
     let b = 16;
     let angles = GridAngles::new(b).unwrap();
     let tables = WignerTables::build(b, &angles.betas);
-    let path = std::env::temp_dir().join(format!(
-        "so3ft-dwt-parity-cache-{}.bin",
+    // Round-trip through the canonical cache layout (an explicit dir —
+    // never the process-global cache, which other tests may share).
+    let dir = std::env::temp_dir().join(format!(
+        "so3ft-dwt-parity-cache-{}",
         std::process::id()
     ));
-    tables.save(&path).unwrap();
-    let loaded = WignerTables::load(&path, b).unwrap();
+    tables.save_cached_in(&dir).unwrap();
+    assert!(WignerTables::cache_path_in(&dir, b).is_file());
+    let loaded = WignerTables::load_cached_in(&dir, b).unwrap();
     assert_eq!(loaded.bandwidth(), b);
     assert_eq!(loaded.bytes(), tables.bytes());
     // Loaded tables serve rows identical to the freshly built ones.
@@ -149,8 +152,13 @@ fn half_tables_bytes_and_disk_roundtrip() {
         let y = loaded.row_into(m, mp, l, &mut c).to_vec();
         assert_eq!(x, y);
     }
-    assert!(WignerTables::load(&path, b + 1).is_err());
-    let _ = std::fs::remove_file(&path);
+    // Wrong bandwidth at the same path is a typed error, and a missing
+    // cache entry is an error, not a silent rebuild.
+    assert!(
+        WignerTables::load(WignerTables::cache_path_in(&dir, b), b + 1).is_err()
+    );
+    assert!(WignerTables::load_cached_in(&dir, 2 * b).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Extended precision under the folded engine stays at least as accurate

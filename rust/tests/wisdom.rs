@@ -1,0 +1,239 @@
+//! Integration: the `wisdom/` measured auto-tuning planner.
+//!
+//! Pins the subsystem's acceptance contract end to end:
+//!
+//! * a `Measure` build is **bit-identical** to an `Estimate` build
+//!   configured with the same winning knobs (wisdom selects among
+//!   parity-tested engines; it never changes what they compute);
+//! * wisdom round-trips through the on-disk `SO3WIS1` store across
+//!   store reopens (measure once — ever);
+//! * a wrong-version or corrupt store file degrades to Estimate
+//!   behavior with a typed warning, never an error;
+//! * a store written on a *different machine* (foreign fingerprint) is
+//!   re-measured, not served as a stale hit;
+//! * `So3Service`'s single-flight plan registry runs ONE measurement
+//!   pass under concurrent cold misses on one key.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use so3ft::service::{PlanOptions, So3Service};
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::transform::So3Plan;
+use so3ft::wisdom::{PlanRigor, WisdomSource, WisdomStore, WisdomWarning};
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "so3ft-wisdom-it-{tag}-{}.so3wis",
+        std::process::id()
+    ))
+}
+
+/// Acceptance: wisdom only *selects* a configuration — a Measure-built
+/// plan and an Estimate plan hand-configured with the measured winner
+/// produce bit-identical transforms in both directions.
+#[test]
+fn measure_is_bit_identical_to_estimate_with_winning_knobs() {
+    let b = 8;
+    let store = WisdomStore::in_memory();
+    let measured = So3Plan::builder(b)
+        .threads(1)
+        .rigor(PlanRigor::Measure)
+        .wisdom_store(Arc::clone(&store))
+        .wisdom_time_budget_ms(60)
+        .build()
+        .unwrap();
+    let outcome = measured.wisdom().expect("Measure build reports wisdom");
+    assert_eq!(outcome.source, WisdomSource::Measured);
+    let choice = outcome.choice.clone().expect("measured build has a choice");
+    assert_eq!(store.stats().measurements, 1);
+
+    let estimate = So3Plan::builder(b)
+        .threads(1)
+        .schedule(choice.schedule)
+        .strategy(choice.strategy)
+        .algorithm(choice.algorithm)
+        .fft_engine(choice.fft_engine)
+        .build()
+        .unwrap();
+    // Estimate never attaches a wisdom outcome.
+    assert!(estimate.wisdom().is_none());
+
+    for seed in [3u64, 17] {
+        let coeffs = So3Coeffs::random(b, seed);
+        let g_m = measured.inverse(&coeffs).unwrap();
+        let g_e = estimate.inverse(&coeffs).unwrap();
+        assert_eq!(g_m.as_slice(), g_e.as_slice(), "inverse, seed {seed}");
+        let c_m = measured.forward(&g_m).unwrap();
+        let c_e = estimate.forward(&g_e).unwrap();
+        assert_eq!(c_m.as_slice(), c_e.as_slice(), "forward, seed {seed}");
+    }
+}
+
+/// Acceptance: the winner persists across store reopens — the second
+/// process-lifetime (simulated by reopening the file) serves a cache
+/// hit with the same knobs and runs zero measurement passes.
+#[test]
+fn on_disk_wisdom_round_trips_across_plan_builds() {
+    let b = 8;
+    let path = temp_path("roundtrip");
+    let _ = std::fs::remove_file(&path);
+
+    let store = WisdomStore::open(&path);
+    let first = So3Plan::builder(b)
+        .threads(1)
+        .rigor(PlanRigor::Measure)
+        .wisdom_store(Arc::clone(&store))
+        .wisdom_time_budget_ms(60)
+        .build()
+        .unwrap();
+    let first_choice = first.wisdom().unwrap().choice.clone().unwrap();
+    assert_eq!(first.wisdom().unwrap().source, WisdomSource::Measured);
+    assert!(path.is_file(), "measurement persisted to {path:?}");
+    drop(store);
+
+    let reopened = WisdomStore::open(&path);
+    let second = So3Plan::builder(b)
+        .threads(1)
+        .rigor(PlanRigor::Measure)
+        .wisdom_store(Arc::clone(&reopened))
+        .wisdom_time_budget_ms(60)
+        .build()
+        .unwrap();
+    let outcome = second.wisdom().unwrap();
+    assert_eq!(outcome.source, WisdomSource::CacheHit);
+    assert_eq!(reopened.stats().measurements, 0, "no re-measurement");
+    let hit = outcome.choice.clone().unwrap();
+    // Same knobs (seconds go through {:.6e} text, so compare choices
+    // only on the axes wisdom applies).
+    assert_eq!(hit.schedule, first_choice.schedule);
+    assert_eq!(hit.strategy, first_choice.strategy);
+    assert_eq!(hit.algorithm, first_choice.algorithm);
+    assert_eq!(hit.fft_engine, first_choice.fft_engine);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Acceptance: degraded stores are warnings, not errors. A
+/// wrong-version file reports `VersionMismatch`, a garbage file
+/// `CorruptStore`; both keep the Estimate defaults, run no measurement,
+/// and still build a working (bit-identical-to-Estimate) plan.
+#[test]
+fn degraded_store_falls_back_to_estimate() {
+    let b = 8;
+    let cases: [(&str, &str); 2] = [
+        ("version", "SO3WIS9\nfingerprint 0000000000000000\n"),
+        ("corrupt", "not a wisdom file at all\x00\n"),
+    ];
+    let baseline = So3Plan::builder(b).threads(1).build().unwrap();
+    let coeffs = So3Coeffs::random(b, 5);
+    let g_base = baseline.inverse(&coeffs).unwrap();
+
+    for (tag, contents) in cases {
+        let path = temp_path(tag);
+        std::fs::write(&path, contents).unwrap();
+        let store = WisdomStore::open(&path);
+        let plan = So3Plan::builder(b)
+            .threads(1)
+            .rigor(PlanRigor::Measure)
+            .wisdom_store(Arc::clone(&store))
+            .wisdom_time_budget_ms(60)
+            .build()
+            .unwrap();
+        let outcome = plan.wisdom().unwrap();
+        match (tag, &outcome.source) {
+            ("version", WisdomSource::Fallback(WisdomWarning::VersionMismatch { found, .. })) => {
+                assert_eq!(found, "SO3WIS9")
+            }
+            ("corrupt", WisdomSource::Fallback(WisdomWarning::CorruptStore { .. })) => {}
+            other => panic!("{tag}: unexpected wisdom source {other:?}"),
+        }
+        assert!(outcome.choice.is_none(), "{tag}: fallback applies no knobs");
+        assert_eq!(store.stats().measurements, 0, "{tag}: no search on fallback");
+        // Estimate defaults kept — the plan computes exactly what an
+        // Estimate plan computes.
+        assert_eq!(plan.config().schedule, baseline.config().schedule);
+        assert_eq!(plan.config().algorithm, baseline.config().algorithm);
+        assert_eq!(plan.config().fft_engine, baseline.config().fft_engine);
+        assert_eq!(plan.config().strategy, baseline.config().strategy);
+        let g = plan.inverse(&coeffs).unwrap();
+        assert_eq!(g.as_slice(), g_base.as_slice(), "{tag}: bit-identical");
+        // The degraded file is left untouched for diagnosis, never
+        // rewritten.
+        assert_eq!(std::fs::read(&path).unwrap(), contents.as_bytes(), "{tag}");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// Acceptance: entries recorded on a *different machine* must not be
+/// served — a valid SO3WIS1 file with a foreign fingerprint is a clean
+/// miss (re-measure), not a stale hit and not a warning.
+#[test]
+fn foreign_fingerprint_re_measures_instead_of_stale_hit() {
+    let b = 8;
+    let path = temp_path("foreign");
+    // A well-formed store written by fingerprint 0 (never the real
+    // digest) carrying deliberately non-default knobs for our exact key.
+    let contents = "SO3WIS1\n\
+                    fingerprint 0000000000000000\n\
+                    entry b=8 dir=inv threads=1 schedule=static strategy=sigma \
+                    algorithm=matvec fft=radix2-baseline seconds=1.000000e-3\n\
+                    entry b=8 dir=fwd threads=1 schedule=static strategy=sigma \
+                    algorithm=matvec fft=radix2-baseline seconds=1.000000e-3\n";
+    std::fs::write(&path, contents).unwrap();
+
+    let store = WisdomStore::open(&path);
+    let plan = So3Plan::builder(b)
+        .threads(1)
+        .rigor(PlanRigor::Measure)
+        .wisdom_store(Arc::clone(&store))
+        .wisdom_time_budget_ms(60)
+        .build()
+        .unwrap();
+    let outcome = plan.wisdom().unwrap();
+    assert_eq!(
+        outcome.source,
+        WisdomSource::Measured,
+        "foreign entries must trigger a fresh measurement"
+    );
+    let stats = store.stats();
+    assert_eq!(stats.measurements, 1);
+    assert_eq!(stats.hits, 0, "never a stale hit off a foreign file");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Acceptance: `So3Service`'s single-flight registry doubles as
+/// measurement deduplication — four concurrent cold misses on one plan
+/// key run exactly ONE measurement pass and share one plan `Arc`.
+#[test]
+fn service_single_flight_runs_one_measurement_pass() {
+    let b = 8;
+    let store = WisdomStore::in_memory();
+    let service = So3Service::builder()
+        .threads(2)
+        .plan_rigor(PlanRigor::Measure)
+        .wisdom_store(Arc::clone(&store))
+        .build()
+        .unwrap();
+    let service = Arc::new(service);
+
+    let plans: Vec<Arc<So3Plan>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let service = Arc::clone(&service);
+                scope.spawn(move || service.plan(b, PlanOptions::default()).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for plan in &plans[1..] {
+        assert!(Arc::ptr_eq(&plans[0], plan), "one shared plan per key");
+    }
+    assert_eq!(
+        store.stats().measurements,
+        1,
+        "single-flight must deduplicate the measurement pass"
+    );
+    assert_eq!(plans[0].wisdom().unwrap().source, WisdomSource::Measured);
+}
