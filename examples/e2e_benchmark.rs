@@ -17,7 +17,11 @@
 //!      `dwt_stage_*` records the bench-smoke gate pins,
 //!   8. an FFT-stage engine sweep (split-radix panel vs radix-2
 //!      gather/scatter baseline, single- and max-thread) at the large
-//!      bandwidths the DWT can't reach in-process.
+//!      bandwidths the DWT can't reach in-process,
+//!   9. a SIMD dispatch sweep (`simd = scalar` vs `simd = auto`) over
+//!      the folded DWT and split-radix FFT stages — the `simd_*`
+//!      records the bench-smoke gate pins, plus a `simd_detected`
+//!      record naming the ISA runtime dispatch chose.
 //!
 //! Every run also emits a machine-readable **`BENCH_fft.json`**
 //! (override the path with `SO3FT_BENCH_JSON`) carrying the per-stage
@@ -41,6 +45,7 @@ use so3ft::coordinator::StageStats;
 use so3ft::fft::{ColumnPass, Complex64, Fft2, FftAlgo, FftPlan, Sign};
 use so3ft::pool::{Schedule, WorkerPool};
 use so3ft::prng::Xoshiro256;
+use so3ft::simd::{detected_isa, SimdIsa, SimdPolicy};
 use so3ft::util::SyncUnsafeSlice;
 use so3ft::runtime::{ArtifactRegistry, XlaDwt};
 use so3ft::simulator::cost::{measured_spec, TransformKind};
@@ -393,6 +398,103 @@ fn main() -> so3ft::Result<()> {
     }
     fft_table.print();
 
+    // SIMD dispatch sweep (PR 7): the DWT and FFT stage regions under
+    // `simd = scalar` vs `simd = auto`, single-threaded so the stage
+    // times isolate the kernel difference rather than the schedule. The
+    // bench-smoke gate pins these rows at the CI bandwidth
+    // (SO3FT_BENCH_FFT_BS=16); `simd_detected` records which ISA runtime
+    // dispatch chose, so a flat scalar-vs-auto delta on a scalar-only
+    // host reads as expected rather than as a regression.
+    let isa = detected_isa();
+    records.push(format!(
+        "{{\"kind\": \"simd_detected\", \"isa\": \"{}\"}}",
+        isa.name()
+    ));
+    println!("\n=== SIMD dispatch: scalar baseline vs auto (detected: {}) ===", isa.name());
+    let mut simd_table = Table::new(&["B", "policy", "fwd dwt", "inv dwt", "fft stage"]);
+    for &b in &fft_bs {
+        let n = 2 * b;
+        // Precomputed half-tables outgrow the container above b = 32
+        // (O(B^3) doubles); the on-the-fly source keeps the sweep's
+        // footprint at the grid slabs only.
+        let storage = if b <= 32 {
+            so3ft::dwt::tables::WignerStorage::Precomputed
+        } else {
+            so3ft::dwt::tables::WignerStorage::OnTheFly
+        };
+        let coeffs = So3Coeffs::random(b, 0x51AD + b as u64);
+        let mut rng = Xoshiro256::seed_from_u64(0x0D15 + b as u64);
+        let mut slab: Vec<Complex64> = (0..n * n * n)
+            .map(|_| Complex64::new(rng.next_signed(), rng.next_signed()))
+            .collect();
+        let inv_n = 1.0 / n as f64;
+        for (engine, policy) in [("scalar", SimdPolicy::Scalar), ("auto", SimdPolicy::Auto)] {
+            // DWT stage: a full sequential transform pair on the folded
+            // engine; the plan and its grids drop before the FFT timing
+            // below so the slab is the only live n^3 buffer.
+            let (fwd_dwt_s, inv_dwt_s) = {
+                let plan = So3Plan::builder(b)
+                    .simd(policy)
+                    .threads(1)
+                    .algorithm(so3ft::dwt::DwtAlgorithm::MatVecFolded)
+                    .storage(storage)
+                    .allow_any_bandwidth()
+                    .build()?;
+                let (grid, istats) = plan.inverse_with_stats(&coeffs)?;
+                let (_, fstats) = plan.forward_with_stats(&grid)?;
+                for (kind, stats) in [
+                    ("simd_dwt_stage_forward", &fstats),
+                    ("simd_dwt_stage_inverse", &istats),
+                ] {
+                    records.push(format!(
+                        "{{\"kind\": \"{kind}\", \"b\": {b}, \"threads\": 1, \
+                         \"engine\": \"{engine}\", \"dwt_s\": {:.6e}, \
+                         \"total_s\": {:.6e}}}",
+                        stats.dwt.as_secs_f64(),
+                        stats.total.as_secs_f64(),
+                    ));
+                }
+                (fstats.dwt.as_secs_f64(), istats.dwt.as_secs_f64())
+            };
+
+            // FFT stage: same region shape as the engine sweep above,
+            // with the split-radix plan pinned to this policy's ISA.
+            let fft_isa = match policy {
+                SimdPolicy::Scalar => SimdIsa::Scalar,
+                _ => isa,
+            };
+            let fft2 = Fft2::new(
+                n,
+                Arc::new(FftPlan::with_algo_isa(n, FftAlgo::SplitRadix, fft_isa)),
+            );
+            fft_stage_sweep(&fft2, &mut slab, &sweep_pool, 1, Sign::Positive);
+            let samples: Vec<f64> = (0..reps)
+                .map(|_| {
+                    for v in slab.iter_mut() {
+                        *v = v.scale(inv_n);
+                    }
+                    fft_stage_sweep(&fft2, &mut slab, &sweep_pool, 1, Sign::Positive)
+                })
+                .collect();
+            let stage_s = Samples { seconds: samples }.median();
+            records.push(format!(
+                "{{\"kind\": \"simd_fft_stage\", \"b\": {b}, \"n\": {n}, \
+                 \"threads\": 1, \"engine\": \"{engine}\", \"fft_s\": {:.6e}, \
+                 \"per_slice_s\": {:.6e}}}",
+                stage_s,
+                stage_s / n as f64,
+            ));
+            simd_table.row(&[
+                b.to_string(),
+                engine.to_string(),
+                fmt_seconds(fwd_dwt_s),
+                fmt_seconds(inv_dwt_s),
+                fmt_seconds(stage_s),
+            ]);
+        }
+    }
+    simd_table.print();
+
     // Wisdom planner sweep (ISSUE 6): Estimate build vs a cold Measure
     // build (pays the search) vs a cached Measure build (store hit) at
     // every e2e bandwidth, against a fresh in-memory store per bandwidth
@@ -462,7 +564,10 @@ fn main() -> so3ft::Result<()> {
              the sequential DWT-stage wall time per engine x wigner \
              source; plan_build records compare Estimate builds against \
              cold and store-cached Measure builds (overhead_s = cached \
-             Measure minus Estimate, floored at 0)\""
+             Measure minus Estimate, floored at 0); simd_* records \
+             compare the scalar kernel baseline against auto SIMD \
+             dispatch on the folded DWT and split-radix FFT stages \
+             (simd_detected carries the ISA dispatch chose)\""
                 .to_string(),
         ),
     ];

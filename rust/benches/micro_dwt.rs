@@ -1,8 +1,10 @@
 //! Microbench: single-cluster DWT kernels — the transform's hot spot —
 //! across cluster shapes and dataflows, including the β-parity-folded
-//! engine vs the matvec baseline (ISSUE 4's headline comparison).
+//! engine vs the matvec baseline (ISSUE 4's headline comparison) and
+//! the folded engine's SIMD backend vs its scalar baseline.
 
 use so3ft::bench_util::{csv_sink, env_usize, fmt_seconds, time_fn, Table};
+use so3ft::simd::{detected_isa, SimdIsa};
 use so3ft::dwt::cluster::Cluster;
 use so3ft::dwt::clenshaw;
 use so3ft::dwt::folded::{forward_cluster_folded_tables, inverse_cluster_folded_tables};
@@ -19,7 +21,11 @@ use so3ft::util::SyncUnsafeSlice;
 fn main() {
     let b = env_usize("SO3FT_BENCH_B", 64);
     let reps = env_usize("SO3FT_BENCH_REPS", 30);
-    println!("== micro: per-cluster DWT kernels at B={b} ==");
+    let isa = detected_isa();
+    println!(
+        "== micro: per-cluster DWT kernels at B={b} (simd={}) ==",
+        isa.name()
+    );
 
     let angles = GridAngles::new(b).unwrap();
     let weights = quadrature::weights(b).unwrap();
@@ -48,13 +54,17 @@ fn main() {
         "cluster",
         "fwd tables",
         "fwd folded",
+        "fwd fold-sc",
         "fwd onthefly",
         "fwd clenshaw",
         "inv tables",
         "inv folded",
+        "inv fold-sc",
         "inv clenshaw",
         "fwd fold spd",
         "inv fold spd",
+        "fwd simd spd",
+        "inv simd spd",
     ]);
     let mut csv = Vec::new();
     for (name, cluster) in &shapes {
@@ -65,7 +75,19 @@ fn main() {
         });
         let f_fold = time_fn(reps, || {
             forward_cluster_folded_tables(
-                b, cluster, &tables, &weights, &smat, &shared, &mut scratch,
+                b, isa, cluster, &tables, &weights, &smat, &shared, &mut scratch,
+            );
+        });
+        let f_fold_sc = time_fn(reps, || {
+            forward_cluster_folded_tables(
+                b,
+                SimdIsa::Scalar,
+                cluster,
+                &tables,
+                &weights,
+                &smat,
+                &shared,
+                &mut scratch,
             );
         });
         let f_fly = time_fn(reps, || {
@@ -95,6 +117,19 @@ fn main() {
         let i_fold = time_fn(reps, || {
             inverse_cluster_folded_tables(
                 b,
+                isa,
+                cluster,
+                &tables,
+                coeffs.as_slice(),
+                &shared_s,
+                &layout,
+                &mut scratch,
+            );
+        });
+        let i_fold_sc = time_fn(reps, || {
+            inverse_cluster_folded_tables(
+                b,
+                SimdIsa::Scalar,
                 cluster,
                 &tables,
                 coeffs.as_slice(),
@@ -119,29 +154,36 @@ fn main() {
             name.to_string(),
             fmt_seconds(f_tab.median()),
             fmt_seconds(f_fold.median()),
+            fmt_seconds(f_fold_sc.median()),
             fmt_seconds(f_fly.median()),
             fmt_seconds(f_cl.median()),
             fmt_seconds(i_tab.median()),
             fmt_seconds(i_fold.median()),
+            fmt_seconds(i_fold_sc.median()),
             fmt_seconds(i_cl.median()),
             format!("{:.2}x", f_tab.median() / f_fold.median()),
             format!("{:.2}x", i_tab.median() / i_fold.median()),
+            format!("{:.2}x", f_fold_sc.median() / f_fold.median()),
+            format!("{:.2}x", i_fold_sc.median() / i_fold.median()),
         ]);
         csv.push(format!(
-            "{name},{b},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e}",
+            "{name},{b},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e},{:.4e}",
             f_tab.median(),
             f_fold.median(),
+            f_fold_sc.median(),
             f_fly.median(),
             f_cl.median(),
             i_tab.median(),
             i_fold.median(),
+            i_fold_sc.median(),
             i_cl.median()
         ));
     }
     table.print();
     csv_sink(
         "micro_dwt",
-        "cluster,b,fwd_tab,fwd_folded,fwd_fly,fwd_clen,inv_tab,inv_folded,inv_clen",
+        "cluster,b,fwd_tab,fwd_folded,fwd_folded_scalar,fwd_fly,fwd_clen,\
+         inv_tab,inv_folded,inv_folded_scalar,inv_clen",
         &csv,
     );
 }

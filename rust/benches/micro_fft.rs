@@ -1,5 +1,6 @@
 //! Microbench: the FFT substrate — 1-D kernels (split-radix vs radix-2
-//! vs Bluestein), the 2-D slice transform's column-pass strategies
+//! vs Bluestein, with the split-radix SIMD backend vs its scalar
+//! baseline), the 2-D slice transform's column-pass strategies
 //! (copy-free panels vs gather/scatter), and the real-input path, at the
 //! sizes the FSOFT uses (2B for B = 16…512).
 
@@ -8,6 +9,7 @@ use so3ft::fft::fft2::{ColumnPass, Fft2};
 use so3ft::fft::real::RealFft2;
 use so3ft::fft::{Complex64, FftAlgo, FftPlan, Sign};
 use so3ft::prng::Xoshiro256;
+use so3ft::simd::{detected_isa, SimdIsa};
 
 fn signal(n: usize, seed: u64) -> Vec<Complex64> {
     let mut rng = Xoshiro256::seed_from_u64(seed);
@@ -20,17 +22,27 @@ fn main() {
     let reps = env_usize("SO3FT_BENCH_REPS", 20);
     let mut csv = Vec::new();
 
-    println!("== micro: 1-D FFT kernels ==");
+    println!("== micro: 1-D FFT kernels (simd={}) ==", detected_isa().name());
     let mut t1 = Table::new(&["n", "algo", "median", "ns/point"]);
     for &n in &[32usize, 64, 128, 256, 512, 1024, 96, 768] {
-        let algos: &[FftAlgo] = if n.is_power_of_two() {
-            &[FftAlgo::SplitRadix, FftAlgo::Radix2]
+        // (plan, label): split-radix runs twice — with the detected ISA
+        // and pinned scalar — so the SIMD speedup is one column diff.
+        let variants: Vec<(FftPlan, String)> = if n.is_power_of_two() {
+            vec![
+                (
+                    FftPlan::with_algo(n, FftAlgo::SplitRadix),
+                    "split-radix".into(),
+                ),
+                (
+                    FftPlan::with_algo_isa(n, FftAlgo::SplitRadix, SimdIsa::Scalar),
+                    "split-radix-sc".into(),
+                ),
+                (FftPlan::with_algo(n, FftAlgo::Radix2), "radix2".into()),
+            ]
         } else {
-            &[FftAlgo::Bluestein]
+            vec![(FftPlan::with_algo(n, FftAlgo::Bluestein), "bluestein".into())]
         };
-        for &algo in algos {
-            let plan = FftPlan::with_algo(n, algo);
-            let name = plan.algo_name();
+        for (plan, name) in &variants {
             let mut buf = signal(n, n as u64);
             let s = time_fn(reps, || {
                 plan.process(&mut buf, Sign::Negative);
@@ -38,7 +50,7 @@ fn main() {
             });
             t1.row(&[
                 n.to_string(),
-                name.into(),
+                name.clone(),
                 fmt_seconds(s.median()),
                 format!("{:.1}", s.median() * 1e9 / n as f64),
             ]);
@@ -50,10 +62,21 @@ fn main() {
     println!("\n== micro: 2-D slice FFT (the FSOFT's per-β work) ==");
     let mut t2 = Table::new(&["2B", "engine", "median", "ns/point"]);
     for &n in &[32usize, 64, 128, 256] {
-        let variants: [(&str, Fft2); 3] = [
+        let variants: [(&str, Fft2); 4] = [
             (
                 "split+panel",
                 Fft2::new(n, std::sync::Arc::new(FftPlan::new(n))),
+            ),
+            (
+                "split+panel-sc",
+                Fft2::new(
+                    n,
+                    std::sync::Arc::new(FftPlan::with_algo_isa(
+                        n,
+                        FftAlgo::SplitRadix,
+                        SimdIsa::Scalar,
+                    )),
+                ),
             ),
             (
                 "split+gather",

@@ -38,6 +38,7 @@ options: --config FILE, --bandwidth/-b B, --threads/-t N,
   --strategy geometric|sigma|nosym,
   --algorithm matvec-folded|matvec|clenshaw,
   --storage precomputed|onthefly|auto[:mb], --precision double|extended,
+  --simd auto|scalar|force-avx2|force-neon (kernel ISA dispatch),
   --pool owned|global (pair global with --threads N; width is
   min(threads, pool)), --seed N, --xla, --artifacts DIR, --cores LIST,
   --kind fwd|inv, --rigor estimate|measure (plan auto-tuning),
@@ -471,11 +472,12 @@ pub fn wisdom(inv: &Invocation) -> Result<()> {
                     .expect("a Measure build always reports a wisdom outcome");
                 let knobs = out.choice.as_ref().map(|c| {
                     format!(
-                        "schedule={} strategy={} algorithm={} fft={}",
+                        "schedule={} strategy={} algorithm={} fft={} simd={}",
                         c.schedule.name(),
                         c.strategy.name(),
                         algorithm_name(c.algorithm),
-                        fft_engine_name(c.fft_engine)
+                        fft_engine_name(c.fft_engine),
+                        c.simd.name()
                     )
                 });
                 match (&out.source, knobs) {

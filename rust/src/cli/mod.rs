@@ -22,6 +22,7 @@
 //!   --algorithm <spec>        matvec-folded | matvec | clenshaw
 //!   --storage <spec>          precomputed | onthefly | auto[:mb]
 //!   --precision <spec>        double | extended
+//!   --simd <spec>             auto | scalar | force-avx2 | force-neon
 //!   --pool <spec>             owned | global (persistent worker pool)
 //!   --seed <N>                workload seed
 //!   --rigor <spec>            estimate | measure (plan auto-tuning)
@@ -54,6 +55,7 @@ use crate::config::{parse_algorithm, parse_precision, parse_rigor, parse_storage
 use crate::coordinator::PartitionStrategy;
 use crate::error::{Error, Result};
 use crate::pool::{PoolSpec, Schedule};
+use crate::simd::SimdPolicy;
 
 /// `serve-bench` options: N client threads × mixed bandwidths ×
 /// open-loop arrival against one `So3Service`.
@@ -190,6 +192,10 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
             }
             "--precision" => {
                 run.exec.precision = parse_precision(&need(args, i, a)?)?;
+                i += 1;
+            }
+            "--simd" => {
+                run.exec.simd = SimdPolicy::parse(&need(args, i, a)?)?;
                 i += 1;
             }
             "--pool" => {
@@ -372,6 +378,19 @@ mod tests {
         assert!(matches!(inv.run.exec.pool, PoolSpec::Owned));
         assert!(parse_args(&argv("roundtrip --pool rented")).is_err());
         assert!(parse_args(&argv("roundtrip --pool")).is_err());
+    }
+
+    #[test]
+    fn simd_flag_parses_and_rejects_bad_values() {
+        let inv = parse_args(&argv("roundtrip -b 8 --simd scalar")).unwrap();
+        assert_eq!(inv.run.exec.simd, SimdPolicy::Scalar);
+        let inv = parse_args(&argv("forward --simd force-avx2")).unwrap();
+        assert_eq!(inv.run.exec.simd, SimdPolicy::ForceAvx2);
+        // Default is auto.
+        let inv = parse_args(&argv("roundtrip")).unwrap();
+        assert_eq!(inv.run.exec.simd, SimdPolicy::Auto);
+        assert!(parse_args(&argv("roundtrip --simd avx512")).is_err());
+        assert!(parse_args(&argv("roundtrip --simd")).is_err());
     }
 
     #[test]

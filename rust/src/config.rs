@@ -14,6 +14,7 @@
 //! storage = "precomputed"     # precomputed | onthefly | auto
 //! precision = "double"        # double | extended
 //! fft = "split-radix"         # split-radix | radix2-baseline
+//! simd = "auto"               # auto | scalar | force-avx2 | force-neon
 //! real_input = false          # conjugate-even forward FFT stage
 //! pool = "owned"              # owned | global (persistent worker pool)
 //!
@@ -45,6 +46,7 @@ use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::{Error, Result};
 use crate::fft::FftEngine;
 use crate::pool::{PoolSpec, Schedule};
+use crate::simd::SimdPolicy;
 use crate::wisdom::PlanRigor;
 
 /// Raw parsed file: section → key → value (strings unquoted).
@@ -281,6 +283,7 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
             "storage",
             "precision",
             "fft",
+            "simd",
             "real_input",
             "pool",
         ],
@@ -343,6 +346,9 @@ impl RunConfig {
         }
         if let Some(s) = p.get("transform", "fft") {
             cfg.exec.fft_engine = parse_fft_engine(s)?;
+        }
+        if let Some(s) = p.get("transform", "simd") {
+            cfg.exec.simd = SimdPolicy::parse(s)?;
         }
         if let Some(v) = p.get_bool("transform", "real_input")? {
             cfg.exec.real_input = v;
@@ -428,6 +434,7 @@ impl RunConfig {
             "fft = \"{}\"\n",
             fft_engine_name(self.exec.fft_engine)
         ));
+        out.push_str(&format!("simd = \"{}\"\n", self.exec.simd.name()));
         out.push_str(&format!("real_input = {}\n", self.exec.real_input));
         out.push_str(&format!("pool = \"{pool}\"\n"));
         out.push_str("\n[service]\n");
@@ -473,6 +480,7 @@ algorithm = "clenshaw"
 storage = "onthefly"
 precision = "double"
 fft = "radix2-baseline"
+simd = "scalar"
 real_input = true
 pool = "global"
 
@@ -505,6 +513,7 @@ time_budget_ms = 125
         assert_eq!(cfg.exec.algorithm, DwtAlgorithm::Clenshaw);
         assert_eq!(cfg.exec.storage, WignerStorage::OnTheFly);
         assert_eq!(cfg.exec.fft_engine, FftEngine::Radix2Baseline);
+        assert_eq!(cfg.exec.simd, SimdPolicy::Scalar);
         assert!(cfg.exec.real_input);
         assert!(matches!(cfg.exec.pool, PoolSpec::Global));
         assert_eq!(
@@ -540,6 +549,7 @@ time_budget_ms = 125
         assert_eq!(a.exec.storage, b.exec.storage);
         assert_eq!(a.exec.precision, b.exec.precision);
         assert_eq!(a.exec.fft_engine, b.exec.fft_engine);
+        assert_eq!(a.exec.simd, b.exec.simd);
         assert_eq!(a.exec.real_input, b.exec.real_input);
         assert_eq!(a.exec.pool.name(), b.exec.pool.name());
         assert_eq!(a.service, b.service);
@@ -671,6 +681,28 @@ time_budget_ms = 125
         )
         .unwrap();
         assert_eq!(cfg.exec.algorithm, DwtAlgorithm::MatVecFolded);
+    }
+
+    #[test]
+    fn simd_key_parses_and_defaults() {
+        let cfg = RunConfig::from_parsed(&ParsedConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.exec.simd, SimdPolicy::Auto);
+        let cfg = RunConfig::from_parsed(
+            &ParsedConfig::parse("[transform]\nsimd = \"scalar\"").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.exec.simd, SimdPolicy::Scalar);
+        // Force* variants parse at the config layer (host support is
+        // checked at plan build, not parse time).
+        let cfg = RunConfig::from_parsed(
+            &ParsedConfig::parse("[transform]\nsimd = \"force-avx2\"").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.exec.simd, SimdPolicy::ForceAvx2);
+        assert!(RunConfig::from_parsed(
+            &ParsedConfig::parse("[transform]\nsimd = \"sse9\"").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -31,10 +31,11 @@ use crate::fft::plan::{FftAlgo, FftPlan};
 use crate::fft::real::RealFft2;
 use crate::fft::{Complex64, FftEngine, Sign};
 use crate::pool::{self, PoolSpec, RegionStats, Schedule, WorkerPool};
+use crate::simd::{SimdIsa, SimdPolicy};
 use crate::so3::coeffs::{coeff_count, So3Coeffs};
 use crate::so3::quadrature;
 use crate::so3::sampling::{GridAngles, So3Grid};
-use crate::util::SyncUnsafeSlice;
+use crate::util::{AlignedVec, SyncUnsafeSlice};
 
 /// Offload interface for the DWT contraction (implemented by the PJRT
 /// runtime in `runtime::xla_dwt`). The executor hands over the packed
@@ -93,6 +94,14 @@ pub struct ExecutorConfig {
     /// [`PoolSpec`]). Ignored when `threads == 1` — the sequential path
     /// runs regions inline and never touches a pool.
     pub pool: PoolSpec,
+    /// Butterfly/contraction instruction set for the DWT and FFT hot
+    /// loops: [`SimdPolicy::Auto`] (default) picks the widest ISA the
+    /// host supports (AVX2+FMA on x86_64, NEON on aarch64) and falls
+    /// back to scalar elsewhere; [`SimdPolicy::Scalar`] pins the
+    /// measurable scalar baseline; the `Force*` variants are typed
+    /// config errors on hosts without that ISA. Resolved once at plan
+    /// construction — never re-detected per call.
+    pub simd: SimdPolicy,
 }
 
 impl Default for ExecutorConfig {
@@ -107,6 +116,7 @@ impl Default for ExecutorConfig {
             fft_engine: FftEngine::SplitRadix,
             real_input: false,
             pool: PoolSpec::Owned,
+            simd: SimdPolicy::Auto,
         }
     }
 }
@@ -176,6 +186,10 @@ pub struct Executor {
     /// caller). Possibly shared with other executors — see
     /// [`ExecutorConfig::pool`].
     pool: Option<Arc<WorkerPool>>,
+    /// The ISA the hot kernels run with — `config.simd` resolved once at
+    /// construction (so dispatch is branch-free and thread-count
+    /// independent).
+    isa: SimdIsa,
     /// FFT bin of each order index: `order_bins[mi] = (mi - (B-1)) mod 2B`.
     order_bins: Vec<usize>,
     /// Storage-free layout oracle consulted by the iDWT kernels for
@@ -197,8 +211,9 @@ thread_local! {
     /// path the main thread reuses it across slices AND transforms; on
     /// the pooled path it is likewise pinned to the persistent workers
     /// (grown once per worker, not once per region as under the legacy
-    /// scoped-spawn substrate).
-    static FFT_SCRATCH: RefCell<Vec<Complex64>> = const { RefCell::new(Vec::new()) };
+    /// scoped-spawn substrate). 64-byte aligned so the SIMD column
+    /// kernels in `fft::simd` run on cache-line-aligned panels.
+    static FFT_SCRATCH: RefCell<AlignedVec<Complex64>> = const { RefCell::new(AlignedVec::new()) };
 }
 
 fn with_scratch<R>(b: usize, f: impl FnOnce(&mut DwtScratch) -> R) -> R {
@@ -316,8 +331,19 @@ impl Executor {
             }
             _ => None,
         };
+        // Resolve the SIMD policy once: Force* on an unsupported host is
+        // a typed config error (not a silent scalar fallback), and the
+        // resolved ISA is pinned so every region of every transform of
+        // this executor dispatches identically.
+        let isa = config.simd.resolve()?;
         let fft2 = match config.fft_engine {
-            FftEngine::SplitRadix => Fft2::new(2 * b, Arc::new(FftPlan::new(2 * b))),
+            FftEngine::SplitRadix => Fft2::new(
+                2 * b,
+                Arc::new(FftPlan::with_algo_isa(2 * b, FftAlgo::Auto, isa)),
+            ),
+            // The baseline engine stays scalar by construction (radix-2 /
+            // Bluestein carry no vector stages), so it keeps measuring
+            // the pre-overhaul kernels regardless of policy.
             FftEngine::Radix2Baseline => Fft2::with_column_pass(
                 2 * b,
                 Arc::new(FftPlan::with_algo(2 * b, FftAlgo::Radix2)),
@@ -342,6 +368,7 @@ impl Executor {
             tables,
             offload: None,
             pool,
+            isa,
             order_bins,
             smat_layout,
         })
@@ -378,6 +405,14 @@ impl Executor {
     /// Memory held by precomputed Wigner tables (bytes).
     pub fn table_bytes(&self) -> usize {
         self.tables.as_ref().map_or(0, |t| t.bytes())
+    }
+
+    /// The instruction set the DWT/FFT hot kernels actually run with —
+    /// [`ExecutorConfig::simd`] resolved against the host at
+    /// construction.
+    #[inline]
+    pub fn simd_isa(&self) -> SimdIsa {
+        self.isa
     }
 
     /// The persistent worker pool serving this executor's parallel
@@ -592,6 +627,7 @@ impl Executor {
                         if cluster.m >= cluster.mp && cluster.mp >= 0 {
                             folded::forward_cluster_folded_tables(
                                 b,
+                                self.isa,
                                 cluster,
                                 t,
                                 &self.weights,
@@ -636,6 +672,7 @@ impl Executor {
                     ),
                     (true, Precision::Double) => folded::forward_cluster_folded(
                         b,
+                        self.isa,
                         cluster,
                         source,
                         &self.weights,
@@ -1020,6 +1057,7 @@ impl Executor {
                         if cluster.m >= cluster.mp && cluster.mp >= 0 {
                             folded::inverse_cluster_folded_tables(
                                 b,
+                                self.isa,
                                 cluster,
                                 t,
                                 coeffs.as_slice(),
@@ -1064,6 +1102,7 @@ impl Executor {
                     ),
                     (true, Precision::Double) => folded::inverse_cluster_folded(
                         b,
+                        self.isa,
                         cluster,
                         source,
                         coeffs.as_slice(),
@@ -1305,6 +1344,54 @@ mod tests {
             }
         )
         .is_err());
+        // Forcing an ISA the host cannot run is a typed config error,
+        // not a silent scalar fallback. At most one vector ISA exists
+        // per architecture, so the *other* one must always be rejected.
+        let impossible = if cfg!(target_arch = "x86_64") {
+            SimdPolicy::ForceNeon
+        } else {
+            SimdPolicy::ForceAvx2
+        };
+        assert!(matches!(
+            Executor::new(
+                4,
+                ExecutorConfig {
+                    simd: impossible,
+                    ..Default::default()
+                }
+            ),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn scalar_simd_policy_matches_default_exactly() {
+        // The scalar dispatch arms are the pre-SIMD loops verbatim, and
+        // Auto must agree with them to full parity tolerance (bitwise
+        // when Auto resolves to Scalar).
+        let b = 8;
+        let coeffs = So3Coeffs::random(b, 23);
+        let auto = Executor::new(b, ExecutorConfig::default()).unwrap();
+        let scalar = Executor::new(
+            b,
+            ExecutorConfig {
+                simd: SimdPolicy::Scalar,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(scalar.simd_isa(), crate::simd::SimdIsa::Scalar);
+        assert_eq!(auto.simd_isa(), crate::simd::detected_isa());
+        let g_a = auto.inverse(&coeffs).unwrap();
+        let g_s = scalar.inverse(&coeffs).unwrap();
+        assert!(g_a.max_abs_error(&g_s) < 1e-12);
+        let c_a = auto.forward(&g_a).unwrap();
+        let c_s = scalar.forward(&g_s).unwrap();
+        assert!(c_a.max_abs_error(&c_s) < 1e-12);
+        if auto.simd_isa() == crate::simd::SimdIsa::Scalar {
+            assert_eq!(g_a.as_slice(), g_s.as_slice());
+            assert_eq!(c_a.as_slice(), c_s.as_slice());
+        }
     }
 
     #[test]

@@ -33,9 +33,11 @@
 
 use crate::dwt::cluster::Cluster;
 use crate::dwt::kernels::DwtScratch;
+use crate::dwt::simd as dsimd;
 use crate::dwt::tables::{WignerSource, WignerTables};
 use crate::dwt::{v_scale, SMatrix};
 use crate::fft::Complex64;
+use crate::simd::SimdIsa;
 use crate::so3::coeffs;
 use crate::util::{parity_sign, SyncUnsafeSlice};
 use crate::xprec::DdComplex;
@@ -80,19 +82,6 @@ fn fold_row(b: usize, row: &[f64], fold: &mut [f64]) {
     }
 }
 
-/// Half-length complex·real dot: `Σ_{j<B} t[j]·r[j]` with f64 `mul_add`
-/// accumulators (stable-Rust autovectorizable).
-#[inline]
-fn dot_half(t: &[Complex64], r: &[f64]) -> Complex64 {
-    let mut re = 0.0f64;
-    let mut im = 0.0f64;
-    for (v, &x) in t.iter().zip(r.iter()) {
-        re = v.re.mul_add(x, re);
-        im = v.im.mul_add(x, im);
-    }
-    Complex64::new(re, im)
-}
-
 /// Forward DWT for one cluster, folded, fed by a generic [`WignerSource`]
 /// (the on-the-fly path, non-canonical singleton clusters, and the
 /// extended-precision variants' double sibling). Rows are produced in
@@ -102,8 +91,10 @@ fn dot_half(t: &[Complex64], r: &[f64]) -> Complex64 {
 /// # Safety contract
 /// Same as [`super::kernels::forward_cluster`]: `out` writes are
 /// cluster-exclusive (l, μ, μ') triples.
+#[allow(clippy::too_many_arguments)]
 pub fn forward_cluster_folded(
     b: usize,
+    isa: SimdIsa,
     cluster: &Cluster,
     source: &mut dyn WignerSource,
     weights: &[f64],
@@ -124,8 +115,8 @@ pub fn forward_cluster_folded(
         let vs = v_scale(l, b);
         for (mi, member) in cluster.members.iter().enumerate() {
             let t = &scratch.t[mi * n..(mi + 1) * n];
-            let acc_e = dot_half(&t[..b], e);
-            let acc_o = dot_half(&t[b..], o);
+            let acc_e = dsimd::dot_half(isa, &t[..b], e);
+            let acc_o = dsimd::dot_half(isa, &t[b..], o);
             let acc = if member.reflected {
                 acc_e - acc_o
             } else {
@@ -144,8 +135,10 @@ pub fn forward_cluster_folded(
 /// (half FLOPs); general clusters run the [`DEG_BLOCK`]-degree
 /// register-blocked micro-kernel over zero-copy E slices and a
 /// reconstructed O block.
+#[allow(clippy::too_many_arguments)]
 pub fn forward_cluster_folded_tables(
     b: usize,
+    isa: SimdIsa,
     cluster: &Cluster,
     tables: &WignerTables,
     weights: &[f64],
@@ -171,9 +164,9 @@ pub fn forward_cluster_folded_tables(
                 debug_assert!(!member.reflected, "parity clusters are all-direct");
                 let t = &scratch.t[mi * n..(mi + 1) * n];
                 let acc = if even {
-                    dot_half(&t[..b], h)
+                    dsimd::dot_half(isa, &t[..b], h)
                 } else {
-                    dot_half(&t[b..], h)
+                    dsimd::dot_half(isa, &t[b..], h)
                 };
                 let value = acc.scale(vs * member.sign(l));
                 let idx = coeffs::flat_index(l, member.m, member.mp);
@@ -209,31 +202,17 @@ pub fn forward_cluster_folded_tables(
             for (mi, member) in cluster.members.iter().enumerate() {
                 let t = &scratch.t[mi * n..(mi + 1) * n];
                 let (tp, tm) = t.split_at(b);
-                // 4 degrees × (E, O) × (re, im) = 16 mul_add chains; t±
-                // is loaded once per four degrees instead of re-scanned
-                // per degree.
-                let mut er = [0.0f64; DEG_BLOCK];
-                let mut ei = [0.0f64; DEG_BLOCK];
-                let mut or = [0.0f64; DEG_BLOCK];
-                let mut oi = [0.0f64; DEG_BLOCK];
-                for j in 0..b {
-                    let pr = tp[j].re;
-                    let pi = tp[j].im;
-                    let qr = tm[j].re;
-                    let qi = tm[j].im;
-                    for k in 0..DEG_BLOCK {
-                        er[k] = pr.mul_add(e[k][j], er[k]);
-                        ei[k] = pi.mul_add(e[k][j], ei[k]);
-                        or[k] = qr.mul_add(o[k * b + j], or[k]);
-                        oi[k] = qi.mul_add(o[k * b + j], oi[k]);
-                    }
-                }
+                // 4 degrees × (E, O) × (re, im) = 16 FMA chains; t± is
+                // loaded once per four degrees instead of re-scanned
+                // per degree. The chains live in `dwt::simd` behind the
+                // ISA dispatch.
+                let acc4 = dsimd::forward_block(isa, tp, tm, &e, o);
                 for k in 0..DEG_BLOCK {
                     let lk = l + k;
                     let acc = if member.reflected {
-                        Complex64::new(er[k] - or[k], ei[k] - oi[k])
+                        Complex64::new(acc4.er[k] - acc4.or[k], acc4.ei[k] - acc4.oi[k])
                     } else {
-                        Complex64::new(er[k] + or[k], ei[k] + oi[k])
+                        Complex64::new(acc4.er[k] + acc4.or[k], acc4.ei[k] + acc4.oi[k])
                     };
                     let value = acc.scale(0.5 * v_scale(lk, b) * member.sign(lk));
                     let idx = coeffs::flat_index(lk, member.m, member.mp);
@@ -249,8 +228,8 @@ pub fn forward_cluster_folded_tables(
                 let vs = v_scale(lk, b);
                 for (mi, member) in cluster.members.iter().enumerate() {
                     let t = &scratch.t[mi * n..(mi + 1) * n];
-                    let acc_e = dot_half(&t[..b], e);
-                    let acc_o = dot_half(&t[b..], o);
+                    let acc_e = dsimd::dot_half(isa, &t[..b], e);
+                    let acc_o = dsimd::dot_half(isa, &t[b..], o);
                     let acc = if member.reflected {
                         acc_e - acc_o
                     } else {
@@ -347,8 +326,10 @@ fn scatter_unfolded(
 
 /// Inverse DWT for one cluster, folded, fed by a generic
 /// [`WignerSource`].
+#[allow(clippy::too_many_arguments)]
 pub fn inverse_cluster_folded(
     b: usize,
+    isa: SimdIsa,
     cluster: &Cluster,
     source: &mut dyn WignerSource,
     coeff_data: &[Complex64],
@@ -374,10 +355,7 @@ pub fn inverse_cluster_folded(
                 .scale(member.sign(l));
             let t = &mut scratch.t[mi * n..(mi + 1) * n];
             let (u, v) = t.split_at_mut(b);
-            for j in 0..b {
-                u[j] += c.scale(e[j]);
-                v[j] += c.scale(o[j]);
-            }
+            dsimd::axpy_pair_rows(isa, u, v, c, e, o);
         }
     }
     for (mi, member) in cluster.members.iter().enumerate() {
@@ -390,8 +368,10 @@ pub fn inverse_cluster_folded(
 /// Inverse DWT for one canonical cluster against the folded tables,
 /// register-blocked over [`DEG_BLOCK`] degrees: the (u | v) accumulators
 /// are loaded and stored once per block instead of once per degree.
+#[allow(clippy::too_many_arguments)]
 pub fn inverse_cluster_folded_tables(
     b: usize,
+    isa: SimdIsa,
     cluster: &Cluster,
     tables: &WignerTables,
     coeff_data: &[Complex64],
@@ -422,10 +402,7 @@ pub fn inverse_cluster_folded_tables(
                 let cs = c.scale(sig);
                 let t = &mut scratch.t[mi * n..(mi + 1) * n];
                 let (u, v) = t.split_at_mut(b);
-                for j in 0..b {
-                    u[j] += c.scale(h[j]);
-                    v[j] += cs.scale(h[j]);
-                }
+                dsimd::axpy_pair_coeffs(isa, u, v, c, cs, h);
             }
         }
         for (mi, member) in cluster.members.iter().enumerate() {
@@ -473,28 +450,12 @@ pub fn inverse_cluster_folded_tables(
                     tables.e_row(cluster.m, cluster.mp, l + 3),
                 ];
                 let o = &scratch.oblock;
-                for j in 0..b {
-                    let mut ur = u[j].re;
-                    let mut ui = u[j].im;
-                    let mut vr = v[j].re;
-                    let mut vi = v[j].im;
-                    for k in 0..DEG_BLOCK {
-                        ur = c[k].re.mul_add(e[k][j], ur);
-                        ui = c[k].im.mul_add(e[k][j], ui);
-                        vr = c[k].re.mul_add(o[k * b + j], vr);
-                        vi = c[k].im.mul_add(o[k * b + j], vi);
-                    }
-                    u[j] = Complex64::new(ur, ui);
-                    v[j] = Complex64::new(vr, vi);
-                }
+                dsimd::inverse_block(isa, u, v, &c, &e, o);
             } else {
                 for (k, &ck) in c.iter().enumerate().take(nb) {
                     let e = tables.e_row(cluster.m, cluster.mp, l + k);
                     let o = &scratch.oblock[k * b..(k + 1) * b];
-                    for j in 0..b {
-                        u[j] += ck.scale(e[j]);
-                        v[j] += ck.scale(o[j]);
-                    }
+                    dsimd::axpy_pair_rows(isa, u, v, ck, e, o);
                 }
             }
         }
@@ -608,6 +569,7 @@ mod tests {
     /// the parity fast path.
     #[test]
     fn folded_forward_matches_baseline_all_shapes() {
+        let isa = crate::simd::detected_isa();
         for b in [4usize, 8, 13] {
             let angles = GridAngles::new(b).unwrap();
             let weights = quadrature::weights(b).unwrap();
@@ -627,12 +589,12 @@ mod tests {
                     let shared = SyncUnsafeSlice::new(&mut got);
                     if canonical {
                         forward_cluster_folded_tables(
-                            b, &cluster, &tables, &weights, &smat, &shared, &mut scratch,
+                            b, isa, &cluster, &tables, &weights, &smat, &shared, &mut scratch,
                         );
                     } else {
                         let mut src = OnTheFlySource::new(&angles.betas);
                         forward_cluster_folded(
-                            b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch,
+                            b, isa, &cluster, &mut src, &weights, &smat, &shared, &mut scratch,
                         );
                     }
                 }
@@ -656,7 +618,7 @@ mod tests {
                     let shared = SyncUnsafeSlice::new(&mut got);
                     let mut src = OnTheFlySource::new(&angles.betas);
                     forward_cluster_folded(
-                        b, &cluster, &mut src, &weights, &smat, &shared, &mut scratch,
+                        b, isa, &cluster, &mut src, &weights, &smat, &shared, &mut scratch,
                     );
                 }
                 for member in &cluster.members {
@@ -671,6 +633,7 @@ mod tests {
 
     #[test]
     fn folded_inverse_matches_baseline_all_shapes() {
+        let isa = crate::simd::detected_isa();
         for b in [4usize, 8, 13] {
             let angles = GridAngles::new(b).unwrap();
             let coeffs_in = So3Coeffs::random(b, 50 + b as u64);
@@ -693,13 +656,13 @@ mod tests {
                     let shared = SyncUnsafeSlice::new(got.as_mut_slice());
                     if canonical {
                         inverse_cluster_folded_tables(
-                            b, &cluster, &tables, coeffs_in.as_slice(), &shared, &layout,
+                            b, isa, &cluster, &tables, coeffs_in.as_slice(), &shared, &layout,
                             &mut scratch,
                         );
                     } else {
                         let mut src = OnTheFlySource::new(&angles.betas);
                         inverse_cluster_folded(
-                            b, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout,
+                            b, isa, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout,
                             &mut scratch,
                         );
                     }
@@ -723,7 +686,7 @@ mod tests {
                     let shared = SyncUnsafeSlice::new(got.as_mut_slice());
                     let mut src = OnTheFlySource::new(&angles.betas);
                     inverse_cluster_folded(
-                        b, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout,
+                        b, isa, &cluster, &mut src, coeffs_in.as_slice(), &shared, &layout,
                         &mut scratch,
                     );
                 }
@@ -822,7 +785,14 @@ mod tests {
         {
             let shared = SyncUnsafeSlice::new(&mut got);
             forward_cluster_folded_tables(
-                b, &cluster, &tables, &weights, &smat, &shared, &mut scratch,
+                b,
+                crate::simd::detected_isa(),
+                &cluster,
+                &tables,
+                &weights,
+                &smat,
+                &shared,
+                &mut scratch,
             );
         }
         assert!((want[0] - got[0]).abs() < 1e-15);

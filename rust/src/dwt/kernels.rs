@@ -17,7 +17,7 @@ use crate::dwt::tables::WignerSource;
 use crate::dwt::{v_scale, SMatrix};
 use crate::fft::Complex64;
 use crate::so3::coeffs;
-use crate::util::SyncUnsafeSlice;
+use crate::util::{AlignedVec, SyncUnsafeSlice};
 use crate::xprec::DdComplex;
 
 /// Per-worker scratch for the DWT kernels (allocated once, reused across
@@ -28,21 +28,24 @@ use crate::xprec::DdComplex;
 /// `b <= capacity` — [`Self::ensure`] grows (never shrinks) it, letting
 /// mixed-bandwidth plans share a worker's scratch without reallocating
 /// on each bandwidth switch.
+///
+/// Every buffer is an [`AlignedVec`] (64-byte aligned) so the SIMD
+/// micro-kernels in `dwt::simd` operate on cache-line-aligned data.
 #[derive(Debug, Clone, Default)]
 pub struct DwtScratch {
     /// Weighted (forward) or accumulated (inverse) member j-vectors.
     /// The folded kernels overlay the same storage as per-member
     /// (t⁺ | t⁻) half-vector pairs.
-    pub t: Vec<Complex64>,
+    pub t: AlignedVec<Complex64>,
     /// Row buffer when reading from a table source.
-    pub row: Vec<f64>,
+    pub row: AlignedVec<f64>,
     /// Folded row halves (E | O) for the source-fed folded kernels.
-    pub fold: Vec<f64>,
+    pub fold: AlignedVec<f64>,
     /// Reconstructed O-row block for the register-blocked table kernels
     /// (lazily sized to `DEG_BLOCK · B`).
-    pub oblock: Vec<f64>,
+    pub oblock: AlignedVec<f64>,
     /// Extended-precision accumulators (lazily sized).
-    pub xacc: Vec<DdComplex>,
+    pub xacc: AlignedVec<DdComplex>,
 }
 
 impl DwtScratch {

@@ -29,6 +29,7 @@ pub mod clenshaw;
 pub mod cluster;
 pub mod folded;
 pub mod kernels;
+pub(crate) mod simd;
 pub mod tables;
 
 use crate::error::{Error, Result};

@@ -1,0 +1,712 @@
+//! Arch-specific micro-kernels for the folded DWT hot loops.
+//!
+//! Each helper here is the vector twin of one inner loop in
+//! [`super::folded`]: the half-length complex·real dot, the
+//! [`DEG_BLOCK`]-degree forward accumulator block, the blocked inverse
+//! (u | v) update, and the two axpy shapes of the inverse parity /
+//! source-fed paths. Dispatch is a plain match on a pre-resolved
+//! [`SimdIsa`] — the scalar arms reproduce the `folded.rs` loops
+//! *exactly* (same `mul_add` chains, same order), so `SimdPolicy::Scalar`
+//! stays bit-identical to the pre-SIMD kernels.
+//!
+//! Lane layout: `Complex64` is `#[repr(C)] { re, im }` (pinned by the
+//! `repr_c_interleave` test), so a 256-bit AVX2 register holds two
+//! complexes `[re0, im0, re1, im1]` and a 128-bit NEON register holds
+//! one. Real Wigner-row factors are duplicated across the (re, im)
+//! sub-lanes; one FMA then advances both parts of the complex
+//! accumulator. All loads are unaligned (`loadu`) — the 64-byte scratch
+//! alignment from `util::AlignedVec` is a throughput bonus, never a
+//! correctness requirement.
+//!
+//! The AVX2 dots split the sum into per-lane partial sums (reduced once
+//! at the end), so they are not bit-identical to scalar — parity suites
+//! pin agreement at ≤ 1e-12. The blocked inverse kernels preserve the
+//! scalar FMA order per element and *are* bit-identical.
+
+use crate::dwt::folded::DEG_BLOCK;
+use crate::fft::Complex64;
+use crate::simd::SimdIsa;
+
+/// Per-degree accumulator block produced by [`forward_block`]:
+/// the (E, O) half-contraction sums, real and imaginary parts, for
+/// [`DEG_BLOCK`] consecutive degrees.
+pub struct BlockAcc {
+    pub er: [f64; DEG_BLOCK],
+    pub ei: [f64; DEG_BLOCK],
+    pub or: [f64; DEG_BLOCK],
+    pub oi: [f64; DEG_BLOCK],
+}
+
+/// Half-length complex·real dot `Σ_j t[j]·r[j]`, dispatched on `isa`.
+#[inline]
+pub fn dot_half(isa: SimdIsa, t: &[Complex64], r: &[f64]) -> Complex64 {
+    debug_assert_eq!(t.len(), r.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `isa == Avx2` only when AVX2+FMA was detected (or
+        // asserted by a Force resolve), per `SimdPolicy::resolve`.
+        SimdIsa::Avx2 => unsafe { avx2::dot_half(t, r) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdIsa::Neon => unsafe { neon::dot_half(t, r) },
+        _ => dot_half_scalar(t, r),
+    }
+}
+
+/// Forward [`DEG_BLOCK`]-degree register-blocked half-contractions:
+/// for each degree `k`, accumulate `Σ_j tp[j]·e[k][j]` into
+/// `(er[k], ei[k])` and `Σ_j tm[j]·o[k·b + j]` into `(or[k], oi[k])`,
+/// where `b = tp.len()` and `o` is the packed O block.
+#[inline]
+pub fn forward_block(
+    isa: SimdIsa,
+    tp: &[Complex64],
+    tm: &[Complex64],
+    e: &[&[f64]; DEG_BLOCK],
+    o: &[f64],
+) -> BlockAcc {
+    debug_assert_eq!(tp.len(), tm.len());
+    debug_assert!(o.len() >= DEG_BLOCK * tp.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `dot_half`.
+        SimdIsa::Avx2 => unsafe { avx2::forward_block(tp, tm, e, o) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdIsa::Neon => unsafe { neon::forward_block(tp, tm, e, o) },
+        _ => forward_block_scalar(tp, tm, e, o),
+    }
+}
+
+/// Inverse [`DEG_BLOCK`]-degree register-blocked (u | v) update:
+/// `u[j] += Σ_k c[k]·e[k][j]`, `v[j] += Σ_k c[k]·o[k·b + j]` with
+/// `b = u.len()`, preserving the scalar per-element FMA order (the
+/// vector path is bit-identical to scalar).
+#[inline]
+pub fn inverse_block(
+    isa: SimdIsa,
+    u: &mut [Complex64],
+    v: &mut [Complex64],
+    c: &[Complex64; DEG_BLOCK],
+    e: &[&[f64]; DEG_BLOCK],
+    o: &[f64],
+) {
+    debug_assert_eq!(u.len(), v.len());
+    debug_assert!(o.len() >= DEG_BLOCK * u.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `dot_half`.
+        SimdIsa::Avx2 => unsafe { avx2::inverse_block(u, v, c, e, o) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdIsa::Neon => unsafe { neon::inverse_block(u, v, c, e, o) },
+        _ => inverse_block_scalar(u, v, c, e, o),
+    }
+}
+
+/// Paired axpy against one real row with two coefficients (the inverse
+/// parity path): `u[j] += c·h[j]`, `v[j] += cs·h[j]`.
+#[inline]
+pub fn axpy_pair_coeffs(
+    isa: SimdIsa,
+    u: &mut [Complex64],
+    v: &mut [Complex64],
+    c: Complex64,
+    cs: Complex64,
+    h: &[f64],
+) {
+    debug_assert_eq!(u.len(), h.len());
+    debug_assert_eq!(v.len(), h.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `dot_half`.
+        SimdIsa::Avx2 => unsafe { avx2::axpy_pair_coeffs(u, v, c, cs, h) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdIsa::Neon => unsafe { neon::axpy_pair_coeffs(u, v, c, cs, h) },
+        _ => {
+            for j in 0..h.len() {
+                u[j] += c.scale(h[j]);
+                v[j] += cs.scale(h[j]);
+            }
+        }
+    }
+}
+
+/// Paired axpy against two real rows with one coefficient (the inverse
+/// source-fed / degree-tail path): `u[j] += c·e[j]`, `v[j] += c·o[j]`.
+#[inline]
+pub fn axpy_pair_rows(
+    isa: SimdIsa,
+    u: &mut [Complex64],
+    v: &mut [Complex64],
+    c: Complex64,
+    e: &[f64],
+    o: &[f64],
+) {
+    debug_assert_eq!(u.len(), e.len());
+    debug_assert_eq!(v.len(), o.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `dot_half`.
+        SimdIsa::Avx2 => unsafe { avx2::axpy_pair_rows(u, v, c, e, o) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        SimdIsa::Neon => unsafe { neon::axpy_pair_rows(u, v, c, e, o) },
+        _ => {
+            for j in 0..e.len() {
+                u[j] += c.scale(e[j]);
+                v[j] += c.scale(o[j]);
+            }
+        }
+    }
+}
+
+/// Scalar dot — byte-for-byte the loop `folded.rs` shipped before the
+/// SIMD dispatch existed.
+fn dot_half_scalar(t: &[Complex64], r: &[f64]) -> Complex64 {
+    let mut re = 0.0f64;
+    let mut im = 0.0f64;
+    for (v, &x) in t.iter().zip(r.iter()) {
+        re = v.re.mul_add(x, re);
+        im = v.im.mul_add(x, im);
+    }
+    Complex64::new(re, im)
+}
+
+/// Scalar forward block — the original 16-chain register-blocked loop.
+fn forward_block_scalar(
+    tp: &[Complex64],
+    tm: &[Complex64],
+    e: &[&[f64]; DEG_BLOCK],
+    o: &[f64],
+) -> BlockAcc {
+    let b = tp.len();
+    let mut er = [0.0f64; DEG_BLOCK];
+    let mut ei = [0.0f64; DEG_BLOCK];
+    let mut or = [0.0f64; DEG_BLOCK];
+    let mut oi = [0.0f64; DEG_BLOCK];
+    for j in 0..b {
+        let pr = tp[j].re;
+        let pi = tp[j].im;
+        let qr = tm[j].re;
+        let qi = tm[j].im;
+        for k in 0..DEG_BLOCK {
+            er[k] = pr.mul_add(e[k][j], er[k]);
+            ei[k] = pi.mul_add(e[k][j], ei[k]);
+            or[k] = qr.mul_add(o[k * b + j], or[k]);
+            oi[k] = qi.mul_add(o[k * b + j], oi[k]);
+        }
+    }
+    BlockAcc { er, ei, or, oi }
+}
+
+/// Scalar inverse block — the original blocked (u | v) update.
+fn inverse_block_scalar(
+    u: &mut [Complex64],
+    v: &mut [Complex64],
+    c: &[Complex64; DEG_BLOCK],
+    e: &[&[f64]; DEG_BLOCK],
+    o: &[f64],
+) {
+    let b = u.len();
+    for j in 0..b {
+        let mut ur = u[j].re;
+        let mut ui = u[j].im;
+        let mut vr = v[j].re;
+        let mut vi = v[j].im;
+        for k in 0..DEG_BLOCK {
+            ur = c[k].re.mul_add(e[k][j], ur);
+            ui = c[k].im.mul_add(e[k][j], ui);
+            vr = c[k].re.mul_add(o[k * b + j], vr);
+            vi = c[k].im.mul_add(o[k * b + j], vi);
+        }
+        u[j] = Complex64::new(ur, ui);
+        v[j] = Complex64::new(vr, vi);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2+FMA kernels: 4-wide f64 = two interleaved complexes per
+    //! register. Callers guarantee AVX2+FMA support (dispatch only
+    //! selects these behind a successful `SimdPolicy` resolve).
+
+    use super::{BlockAcc, Complex64, DEG_BLOCK};
+    use std::arch::x86_64::*;
+
+    /// Duplicate two consecutive reals `[r0, r1]` across complex
+    /// sub-lanes: `[r0, r0, r1, r1]`.
+    ///
+    /// # Safety
+    /// Requires AVX2; `p` must be readable for two f64.
+    #[inline(always)]
+    unsafe fn dup2(p: *const f64) -> __m256d {
+        let lo = _mm256_castpd128_pd256(_mm_loadu_pd(p));
+        _mm256_permute4x64_pd(lo, 0x50)
+    }
+
+    /// Horizontal reduce of an interleaved accumulator to one complex.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline(always)]
+    unsafe fn reduce(acc: __m256d) -> Complex64 {
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        Complex64::new(lanes[0] + lanes[2], lanes[1] + lanes[3])
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA and `t.len() == r.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot_half(t: &[Complex64], r: &[f64]) -> Complex64 {
+        let n = t.len();
+        let tp = t.as_ptr() as *const f64;
+        let rp = r.as_ptr();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let t0 = _mm256_loadu_pd(tp.add(2 * j));
+            let t1 = _mm256_loadu_pd(tp.add(2 * j + 4));
+            acc0 = _mm256_fmadd_pd(t0, dup2(rp.add(j)), acc0);
+            acc1 = _mm256_fmadd_pd(t1, dup2(rp.add(j + 2)), acc1);
+            j += 4;
+        }
+        if j + 2 <= n {
+            let t0 = _mm256_loadu_pd(tp.add(2 * j));
+            acc0 = _mm256_fmadd_pd(t0, dup2(rp.add(j)), acc0);
+            j += 2;
+        }
+        let mut acc = reduce(_mm256_add_pd(acc0, acc1));
+        if j < n {
+            acc.re = t[j].re.mul_add(r[j], acc.re);
+            acc.im = t[j].im.mul_add(r[j], acc.im);
+        }
+        acc
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA; `tp.len() == tm.len()`, each `e[k]` at least
+    /// `tp.len()` long, `o.len() >= DEG_BLOCK * tp.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn forward_block(
+        tp: &[Complex64],
+        tm: &[Complex64],
+        e: &[&[f64]; DEG_BLOCK],
+        o: &[f64],
+    ) -> BlockAcc {
+        let b = tp.len();
+        let tpp = tp.as_ptr() as *const f64;
+        let tmp = tm.as_ptr() as *const f64;
+        let op = o.as_ptr();
+        let mut acc_e = [_mm256_setzero_pd(); DEG_BLOCK];
+        let mut acc_o = [_mm256_setzero_pd(); DEG_BLOCK];
+        let mut j = 0usize;
+        while j + 2 <= b {
+            let tpv = _mm256_loadu_pd(tpp.add(2 * j));
+            let tmv = _mm256_loadu_pd(tmp.add(2 * j));
+            for k in 0..DEG_BLOCK {
+                acc_e[k] = _mm256_fmadd_pd(tpv, dup2(e[k].as_ptr().add(j)), acc_e[k]);
+                acc_o[k] = _mm256_fmadd_pd(tmv, dup2(op.add(k * b + j)), acc_o[k]);
+            }
+            j += 2;
+        }
+        let mut out = BlockAcc {
+            er: [0.0; DEG_BLOCK],
+            ei: [0.0; DEG_BLOCK],
+            or: [0.0; DEG_BLOCK],
+            oi: [0.0; DEG_BLOCK],
+        };
+        for k in 0..DEG_BLOCK {
+            let ce = reduce(acc_e[k]);
+            out.er[k] = ce.re;
+            out.ei[k] = ce.im;
+            let co = reduce(acc_o[k]);
+            out.or[k] = co.re;
+            out.oi[k] = co.im;
+        }
+        if j < b {
+            let pr = tp[j].re;
+            let pi = tp[j].im;
+            let qr = tm[j].re;
+            let qi = tm[j].im;
+            for k in 0..DEG_BLOCK {
+                out.er[k] = pr.mul_add(e[k][j], out.er[k]);
+                out.ei[k] = pi.mul_add(e[k][j], out.ei[k]);
+                out.or[k] = qr.mul_add(o[k * b + j], out.or[k]);
+                out.oi[k] = qi.mul_add(o[k * b + j], out.oi[k]);
+            }
+        }
+        out
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA; `u.len() == v.len()`, each `e[k]` at least
+    /// `u.len()` long, `o.len() >= DEG_BLOCK * u.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn inverse_block(
+        u: &mut [Complex64],
+        v: &mut [Complex64],
+        c: &[Complex64; DEG_BLOCK],
+        e: &[&[f64]; DEG_BLOCK],
+        o: &[f64],
+    ) {
+        let b = u.len();
+        let up = u.as_mut_ptr() as *mut f64;
+        let vp = v.as_mut_ptr() as *mut f64;
+        let op = o.as_ptr();
+        let mut cv = [_mm256_setzero_pd(); DEG_BLOCK];
+        for k in 0..DEG_BLOCK {
+            cv[k] = _mm256_setr_pd(c[k].re, c[k].im, c[k].re, c[k].im);
+        }
+        let mut j = 0usize;
+        while j + 2 <= b {
+            let mut uv = _mm256_loadu_pd(up.add(2 * j));
+            let mut vv = _mm256_loadu_pd(vp.add(2 * j));
+            for k in 0..DEG_BLOCK {
+                uv = _mm256_fmadd_pd(cv[k], dup2(e[k].as_ptr().add(j)), uv);
+                vv = _mm256_fmadd_pd(cv[k], dup2(op.add(k * b + j)), vv);
+            }
+            _mm256_storeu_pd(up.add(2 * j), uv);
+            _mm256_storeu_pd(vp.add(2 * j), vv);
+            j += 2;
+        }
+        if j < b {
+            let mut ur = u[j].re;
+            let mut ui = u[j].im;
+            let mut vr = v[j].re;
+            let mut vi = v[j].im;
+            for k in 0..DEG_BLOCK {
+                ur = c[k].re.mul_add(e[k][j], ur);
+                ui = c[k].im.mul_add(e[k][j], ui);
+                vr = c[k].re.mul_add(o[k * b + j], vr);
+                vi = c[k].im.mul_add(o[k * b + j], vi);
+            }
+            u[j] = Complex64::new(ur, ui);
+            v[j] = Complex64::new(vr, vi);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA and `u.len() == v.len() == h.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn axpy_pair_coeffs(
+        u: &mut [Complex64],
+        v: &mut [Complex64],
+        c: Complex64,
+        cs: Complex64,
+        h: &[f64],
+    ) {
+        let b = h.len();
+        let up = u.as_mut_ptr() as *mut f64;
+        let vp = v.as_mut_ptr() as *mut f64;
+        let cv = _mm256_setr_pd(c.re, c.im, c.re, c.im);
+        let csv = _mm256_setr_pd(cs.re, cs.im, cs.re, cs.im);
+        let mut j = 0usize;
+        while j + 2 <= b {
+            let hd = dup2(h.as_ptr().add(j));
+            let uv = _mm256_fmadd_pd(cv, hd, _mm256_loadu_pd(up.add(2 * j)));
+            _mm256_storeu_pd(up.add(2 * j), uv);
+            let vv = _mm256_fmadd_pd(csv, hd, _mm256_loadu_pd(vp.add(2 * j)));
+            _mm256_storeu_pd(vp.add(2 * j), vv);
+            j += 2;
+        }
+        if j < b {
+            u[j] += c.scale(h[j]);
+            v[j] += cs.scale(h[j]);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA and `u.len() == e.len()`, `v.len() == o.len()`,
+    /// `e.len() == o.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn axpy_pair_rows(
+        u: &mut [Complex64],
+        v: &mut [Complex64],
+        c: Complex64,
+        e: &[f64],
+        o: &[f64],
+    ) {
+        let b = e.len();
+        let up = u.as_mut_ptr() as *mut f64;
+        let vp = v.as_mut_ptr() as *mut f64;
+        let cv = _mm256_setr_pd(c.re, c.im, c.re, c.im);
+        let mut j = 0usize;
+        while j + 2 <= b {
+            let uv = _mm256_fmadd_pd(cv, dup2(e.as_ptr().add(j)), _mm256_loadu_pd(up.add(2 * j)));
+            _mm256_storeu_pd(up.add(2 * j), uv);
+            let vv = _mm256_fmadd_pd(cv, dup2(o.as_ptr().add(j)), _mm256_loadu_pd(vp.add(2 * j)));
+            _mm256_storeu_pd(vp.add(2 * j), vv);
+            j += 2;
+        }
+        if j < b {
+            u[j] += c.scale(e[j]);
+            v[j] += c.scale(o[j]);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON kernels: 2-wide f64 = one interleaved complex per register.
+    //! NEON is baseline on aarch64, so these are unconditionally sound
+    //! there; they keep the scalar accumulation order per element.
+
+    use super::{BlockAcc, Complex64, DEG_BLOCK};
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Requires `t.len() == r.len()` (NEON is baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_half(t: &[Complex64], r: &[f64]) -> Complex64 {
+        let n = t.len();
+        let tp = t.as_ptr() as *const f64;
+        let mut acc0 = vdupq_n_f64(0.0);
+        let mut acc1 = vdupq_n_f64(0.0);
+        let mut j = 0usize;
+        while j + 2 <= n {
+            acc0 = vfmaq_n_f64(acc0, vld1q_f64(tp.add(2 * j)), r[j]);
+            acc1 = vfmaq_n_f64(acc1, vld1q_f64(tp.add(2 * j + 2)), r[j + 1]);
+            j += 2;
+        }
+        let acc = vaddq_f64(acc0, acc1);
+        let mut re = vgetq_lane_f64::<0>(acc);
+        let mut im = vgetq_lane_f64::<1>(acc);
+        if j < n {
+            re = t[j].re.mul_add(r[j], re);
+            im = t[j].im.mul_add(r[j], im);
+        }
+        Complex64::new(re, im)
+    }
+
+    /// # Safety
+    /// Same bounds contract as the dispatching `forward_block`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn forward_block(
+        tp: &[Complex64],
+        tm: &[Complex64],
+        e: &[&[f64]; DEG_BLOCK],
+        o: &[f64],
+    ) -> BlockAcc {
+        let b = tp.len();
+        let tpp = tp.as_ptr() as *const f64;
+        let tmp = tm.as_ptr() as *const f64;
+        let mut acc_e = [vdupq_n_f64(0.0); DEG_BLOCK];
+        let mut acc_o = [vdupq_n_f64(0.0); DEG_BLOCK];
+        for j in 0..b {
+            let tpv = vld1q_f64(tpp.add(2 * j));
+            let tmv = vld1q_f64(tmp.add(2 * j));
+            for k in 0..DEG_BLOCK {
+                acc_e[k] = vfmaq_n_f64(acc_e[k], tpv, e[k][j]);
+                acc_o[k] = vfmaq_n_f64(acc_o[k], tmv, o[k * b + j]);
+            }
+        }
+        let mut out = BlockAcc {
+            er: [0.0; DEG_BLOCK],
+            ei: [0.0; DEG_BLOCK],
+            or: [0.0; DEG_BLOCK],
+            oi: [0.0; DEG_BLOCK],
+        };
+        for k in 0..DEG_BLOCK {
+            out.er[k] = vgetq_lane_f64::<0>(acc_e[k]);
+            out.ei[k] = vgetq_lane_f64::<1>(acc_e[k]);
+            out.or[k] = vgetq_lane_f64::<0>(acc_o[k]);
+            out.oi[k] = vgetq_lane_f64::<1>(acc_o[k]);
+        }
+        out
+    }
+
+    /// # Safety
+    /// Same bounds contract as the dispatching `inverse_block`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn inverse_block(
+        u: &mut [Complex64],
+        v: &mut [Complex64],
+        c: &[Complex64; DEG_BLOCK],
+        e: &[&[f64]; DEG_BLOCK],
+        o: &[f64],
+    ) {
+        let b = u.len();
+        let up = u.as_mut_ptr() as *mut f64;
+        let vp = v.as_mut_ptr() as *mut f64;
+        let mut cv = [vdupq_n_f64(0.0); DEG_BLOCK];
+        for k in 0..DEG_BLOCK {
+            cv[k] = vld1q_f64(&c[k] as *const Complex64 as *const f64);
+        }
+        for j in 0..b {
+            let mut uv = vld1q_f64(up.add(2 * j));
+            let mut vv = vld1q_f64(vp.add(2 * j));
+            for k in 0..DEG_BLOCK {
+                uv = vfmaq_n_f64(uv, cv[k], e[k][j]);
+                vv = vfmaq_n_f64(vv, cv[k], o[k * b + j]);
+            }
+            vst1q_f64(up.add(2 * j), uv);
+            vst1q_f64(vp.add(2 * j), vv);
+        }
+    }
+
+    /// # Safety
+    /// Same bounds contract as the dispatching `axpy_pair_coeffs`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_pair_coeffs(
+        u: &mut [Complex64],
+        v: &mut [Complex64],
+        c: Complex64,
+        cs: Complex64,
+        h: &[f64],
+    ) {
+        let b = h.len();
+        let up = u.as_mut_ptr() as *mut f64;
+        let vp = v.as_mut_ptr() as *mut f64;
+        let cv = vld1q_f64(&c as *const Complex64 as *const f64);
+        let csv = vld1q_f64(&cs as *const Complex64 as *const f64);
+        for j in 0..b {
+            vst1q_f64(up.add(2 * j), vfmaq_n_f64(vld1q_f64(up.add(2 * j)), cv, h[j]));
+            vst1q_f64(vp.add(2 * j), vfmaq_n_f64(vld1q_f64(vp.add(2 * j)), csv, h[j]));
+        }
+    }
+
+    /// # Safety
+    /// Same bounds contract as the dispatching `axpy_pair_rows`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_pair_rows(
+        u: &mut [Complex64],
+        v: &mut [Complex64],
+        c: Complex64,
+        e: &[f64],
+        o: &[f64],
+    ) {
+        let b = e.len();
+        let up = u.as_mut_ptr() as *mut f64;
+        let vp = v.as_mut_ptr() as *mut f64;
+        let cv = vld1q_f64(&c as *const Complex64 as *const f64);
+        for j in 0..b {
+            vst1q_f64(up.add(2 * j), vfmaq_n_f64(vld1q_f64(up.add(2 * j)), cv, e[j]));
+            vst1q_f64(vp.add(2 * j), vfmaq_n_f64(vld1q_f64(vp.add(2 * j)), cv, o[j]));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xoshiro256;
+    use crate::simd::detected_isa;
+
+    fn random_complex(n: usize, seed: u64) -> Vec<Complex64> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|_| Complex64::new(rng.next_signed(), rng.next_signed()))
+            .collect()
+    }
+
+    fn random_real(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n).map(|_| rng.next_signed()).collect()
+    }
+
+    // Odd lengths exercise every tail path; 1 and 2 the degenerate ones.
+    const LENS: [usize; 6] = [1, 2, 3, 8, 13, 32];
+
+    #[test]
+    fn scalar_dispatch_is_the_scalar_kernel() {
+        let t = random_complex(13, 1);
+        let r = random_real(13, 2);
+        let via_dispatch = dot_half(SimdIsa::Scalar, &t, &r);
+        let direct = dot_half_scalar(&t, &r);
+        assert_eq!(via_dispatch.re.to_bits(), direct.re.to_bits());
+        assert_eq!(via_dispatch.im.to_bits(), direct.im.to_bits());
+    }
+
+    #[test]
+    fn dot_half_matches_scalar() {
+        let isa = detected_isa();
+        for &n in &LENS {
+            let t = random_complex(n, 10 + n as u64);
+            let r = random_real(n, 20 + n as u64);
+            let want = dot_half_scalar(&t, &r);
+            let got = dot_half(isa, &t, &r);
+            assert!((want - got).abs() < 1e-12, "n={n} {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn forward_block_matches_scalar() {
+        let isa = detected_isa();
+        for &b in &LENS {
+            let tp = random_complex(b, 30 + b as u64);
+            let tm = random_complex(b, 40 + b as u64);
+            let rows: Vec<Vec<f64>> = (0..DEG_BLOCK)
+                .map(|k| random_real(b, 50 + b as u64 + k as u64))
+                .collect();
+            let e = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+            let o = random_real(DEG_BLOCK * b, 60 + b as u64);
+            let want = forward_block_scalar(&tp, &tm, &e, &o);
+            let got = forward_block(isa, &tp, &tm, &e, &o);
+            for k in 0..DEG_BLOCK {
+                assert!((want.er[k] - got.er[k]).abs() < 1e-12, "b={b} k={k}");
+                assert!((want.ei[k] - got.ei[k]).abs() < 1e-12, "b={b} k={k}");
+                assert!((want.or[k] - got.or[k]).abs() < 1e-12, "b={b} k={k}");
+                assert!((want.oi[k] - got.oi[k]).abs() < 1e-12, "b={b} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_block_matches_scalar() {
+        let isa = detected_isa();
+        for &b in &LENS {
+            let mut u = random_complex(b, 70 + b as u64);
+            let mut v = random_complex(b, 80 + b as u64);
+            let mut u2 = u.clone();
+            let mut v2 = v.clone();
+            let cvec = random_complex(DEG_BLOCK, 90 + b as u64);
+            let c = [cvec[0], cvec[1], cvec[2], cvec[3]];
+            let rows: Vec<Vec<f64>> = (0..DEG_BLOCK)
+                .map(|k| random_real(b, 100 + b as u64 + k as u64))
+                .collect();
+            let e = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+            let o = random_real(DEG_BLOCK * b, 110 + b as u64);
+            inverse_block_scalar(&mut u, &mut v, &c, &e, &o);
+            inverse_block(isa, &mut u2, &mut v2, &c, &e, &o);
+            for j in 0..b {
+                assert!((u[j] - u2[j]).abs() < 1e-12, "b={b} j={j}");
+                assert!((v[j] - v2[j]).abs() < 1e-12, "b={b} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_pairs_match_scalar() {
+        let isa = detected_isa();
+        for &b in &LENS {
+            let c = Complex64::new(0.3, -0.7);
+            let cs = Complex64::new(-1.1, 0.2);
+            let h = random_real(b, 120 + b as u64);
+            let o = random_real(b, 130 + b as u64);
+            let u0 = random_complex(b, 140 + b as u64);
+            let v0 = random_complex(b, 150 + b as u64);
+
+            let (mut u, mut v) = (u0.clone(), v0.clone());
+            let (mut u2, mut v2) = (u0.clone(), v0.clone());
+            axpy_pair_coeffs(SimdIsa::Scalar, &mut u, &mut v, c, cs, &h);
+            axpy_pair_coeffs(isa, &mut u2, &mut v2, c, cs, &h);
+            for j in 0..b {
+                assert!((u[j] - u2[j]).abs() < 1e-12, "coeffs b={b} j={j}");
+                assert!((v[j] - v2[j]).abs() < 1e-12, "coeffs b={b} j={j}");
+            }
+
+            let (mut u, mut v) = (u0.clone(), v0.clone());
+            let (mut u2, mut v2) = (u0, v0);
+            axpy_pair_rows(SimdIsa::Scalar, &mut u, &mut v, c, &h, &o);
+            axpy_pair_rows(isa, &mut u2, &mut v2, c, &h, &o);
+            for j in 0..b {
+                assert!((u[j] - u2[j]).abs() < 1e-12, "rows b={b} j={j}");
+                assert!((v[j] - v2[j]).abs() < 1e-12, "rows b={b} j={j}");
+            }
+        }
+    }
+}

@@ -15,6 +15,9 @@ pub struct Complex64 {
     pub im: f64,
 }
 
+// SAFETY: two f64s, `repr(C)`, no drop glue, any bit pattern valid.
+unsafe impl crate::util::Pod for Complex64 {}
+
 pub const ZERO: Complex64 = Complex64 { re: 0.0, im: 0.0 };
 pub const ONE: Complex64 = Complex64 { re: 1.0, im: 0.0 };
 pub const I: Complex64 = Complex64 { re: 0.0, im: 1.0 };

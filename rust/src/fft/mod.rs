@@ -32,6 +32,7 @@ pub mod fft2;
 pub mod plan;
 pub mod radix2;
 pub mod real;
+pub(crate) mod simd;
 pub mod split_radix;
 
 pub use complex::Complex64;

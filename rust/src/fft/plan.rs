@@ -15,6 +15,7 @@ use super::bluestein::BluesteinPlan;
 use super::radix2::Radix2Plan;
 use super::split_radix::Radix4Plan;
 use super::{Complex64, Sign};
+use crate::simd::SimdIsa;
 
 /// Which 1-D kernel to build (see [`FftPlan::with_algo`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -45,20 +46,30 @@ impl FftPlan {
         Self::with_algo(n, FftAlgo::Auto)
     }
 
-    /// Build a specific kernel. [`FftAlgo::SplitRadix`] panics on
-    /// non-power-of-two sizes; [`FftAlgo::Radix2`] mirrors the legacy
-    /// auto-dispatch (radix-2 / Bluestein).
+    /// Build a specific kernel with the process-detected butterfly ISA.
+    /// [`FftAlgo::SplitRadix`] panics on non-power-of-two sizes;
+    /// [`FftAlgo::Radix2`] mirrors the legacy auto-dispatch (radix-2 /
+    /// Bluestein).
     pub fn with_algo(n: usize, algo: FftAlgo) -> Self {
+        Self::with_algo_isa(n, algo, crate::simd::detected_isa())
+    }
+
+    /// Build a specific kernel pinned to a butterfly ISA — the executor
+    /// passes its plan-resolved `SimdPolicy` here so the FFT stage obeys
+    /// the same dispatch axis as the DWT. Only the split-radix kernel
+    /// carries vector stages; radix-2 and Bluestein stay scalar (they
+    /// are baselines / fallbacks, not hot paths).
+    pub fn with_algo_isa(n: usize, algo: FftAlgo, isa: SimdIsa) -> Self {
         assert!(n >= 1, "FFT size must be >= 1");
         match algo {
             FftAlgo::Auto => {
                 if n.is_power_of_two() {
-                    FftPlan::SplitRadix(Radix4Plan::new(n))
+                    FftPlan::SplitRadix(Radix4Plan::with_isa(n, isa))
                 } else {
                     FftPlan::Bluestein(BluesteinPlan::new(n))
                 }
             }
-            FftAlgo::SplitRadix => FftPlan::SplitRadix(Radix4Plan::new(n)),
+            FftAlgo::SplitRadix => FftPlan::SplitRadix(Radix4Plan::with_isa(n, isa)),
             FftAlgo::Radix2 => {
                 if n.is_power_of_two() {
                     FftPlan::Radix2(Radix2Plan::new(n))

@@ -1,0 +1,401 @@
+//! Arch-specific butterfly stages for the radix-4 FFT.
+//!
+//! These are whole-stage twins of [`super::split_radix::Radix4Plan`]'s
+//! scalar `stages` / `stages_panel` (same decomposition: optional
+//! radix-2 head, then radix-4 DIT passes over `[E0, E2, E1, E3]`
+//! sub-blocks). They are separate top-level `#[target_feature]`
+//! functions — not per-butterfly helpers — so the feature boundary is
+//! crossed once per transform, not once per butterfly.
+//!
+//! Sign handling: twiddles are stored for the negative transform; the
+//! positive (conjugate) transform is obtained by flipping the sign of
+//! the twiddle imaginary parts and of the ±i rotation. On AVX2 both
+//! flips are a single XOR mask computed once per call (`conj` is a
+//! plain runtime bool — the branches it guards are loop-invariant).
+//!
+//! Accuracy: the AVX2 path fuses the complex multiplies with
+//! `fmaddsub` (the scalar path rounds the products first), so results
+//! differ from scalar by ≤ a few ulp per butterfly — well inside the
+//! 1e-12 parity budget pinned by `tests/simd_parity.rs`.
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use crate::fft::complex::Complex64;
+    use std::arch::x86_64::*;
+
+    /// Complex multiply of the two packed complexes in `z` by the
+    /// twiddle whose real parts are duplicated in `wr` and (pre-signed)
+    /// imaginary parts in `wi`: even lane `wr·re − wi·im`, odd lane
+    /// `wr·im + wi·re`. Conjugation is folded into the sign of `wi`.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA.
+    #[inline(always)]
+    unsafe fn cmul(z: __m256d, wr: __m256d, wi: __m256d) -> __m256d {
+        let swap = _mm256_permute_pd(z, 0b0101);
+        _mm256_fmaddsub_pd(wr, z, _mm256_mul_pd(wi, swap))
+    }
+
+    /// Load the twiddle pair `(tw[i], tw[i + 3])` (the packed table is
+    /// stride-3 triples) into `(re-dup, im-dup ⊕ conj_mask)` form.
+    ///
+    /// # Safety
+    /// Requires AVX2; `tw` must be readable at `i` and `i + 3`.
+    #[inline(always)]
+    unsafe fn twiddle_pair(tw: &[Complex64], i: usize, conj_mask: __m256d) -> (__m256d, __m256d) {
+        let lo = _mm_loadu_pd(tw.as_ptr().add(i) as *const f64);
+        let hi = _mm_loadu_pd(tw.as_ptr().add(i + 3) as *const f64);
+        let w = _mm256_set_m128d(hi, lo);
+        let wr = _mm256_movedup_pd(w);
+        let wi = _mm256_xor_pd(_mm256_permute_pd(w, 0b1111), conj_mask);
+        (wr, wi)
+    }
+
+    #[inline(always)]
+    unsafe fn masks(conj: bool) -> (__m256d, __m256d) {
+        // conj_mask flips the twiddle imaginary sign; rot_mask turns
+        // the pair-swapped odd difference into ·(−i) (negative sign)
+        // or ·(+i) (conjugate/positive sign).
+        if conj {
+            (_mm256_set1_pd(-0.0), _mm256_setr_pd(-0.0, 0.0, -0.0, 0.0))
+        } else {
+            (_mm256_setzero_pd(), _mm256_setr_pd(0.0, -0.0, 0.0, -0.0))
+        }
+    }
+
+    /// Radix-4 butterfly stages over a contiguous, already
+    /// bit-reversed signal — the vector twin of `Radix4Plan::stages`.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support and that `twiddles_neg`
+    /// is the packed stage table built by `Radix4Plan::new` for
+    /// `n = data.len()` (a power of two).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn stages(data: &mut [Complex64], twiddles_neg: &[Complex64], conj: bool) {
+        let n = data.len();
+        let ptr = data.as_mut_ptr() as *mut f64;
+        let (conj_mask, rot_mask) = masks(conj);
+        let mut h = 1usize;
+        if n.trailing_zeros() % 2 == 1 {
+            // Radix-2 head (twiddle-free): one 2-complex vector per pair.
+            let mut g = 0;
+            while g < n {
+                let v = _mm256_loadu_pd(ptr.add(2 * g)); // [a, b]
+                let sw = _mm256_permute2f128_pd(v, v, 0x01); // [b, a]
+                let sum = _mm256_add_pd(v, sw); // [a+b, b+a]
+                let diff = _mm256_sub_pd(v, sw); // [a−b, b−a]
+                _mm256_storeu_pd(ptr.add(2 * g), _mm256_blend_pd(sum, diff, 0b1100));
+                g += 2;
+            }
+            h = 2;
+        }
+        let mut toff = 0usize;
+        while h < n {
+            let step = 4 * h;
+            let tw = &twiddles_neg[toff..toff + 3 * h];
+            if h == 1 {
+                // Quarter-size 1: unit twiddles, blocks of 4 complexes
+                // [E0, E2, E1, E3]. Two vectors per block.
+                let mut g = 0;
+                while g < n {
+                    let v0 = _mm256_loadu_pd(ptr.add(2 * g)); // [a, c]
+                    let v1 = _mm256_loadu_pd(ptr.add(2 * g + 4)); // [b, d]
+                    let sw0 = _mm256_permute2f128_pd(v0, v0, 0x01);
+                    let sw1 = _mm256_permute2f128_pd(v1, v1, 0x01);
+                    let t01 = _mm256_blend_pd(
+                        _mm256_add_pd(v0, sw0),
+                        _mm256_sub_pd(v0, sw0),
+                        0b1100,
+                    ); // [t0, t1]
+                    let t23 = _mm256_blend_pd(
+                        _mm256_add_pd(v1, sw1),
+                        _mm256_sub_pd(v1, sw1),
+                        0b1100,
+                    ); // [t2, t3]
+                    let rot = _mm256_xor_pd(_mm256_permute_pd(t23, 0b0101), rot_mask);
+                    let mixed = _mm256_blend_pd(t23, rot, 0b1100); // [t2, rot]
+                    _mm256_storeu_pd(ptr.add(2 * g), _mm256_add_pd(t01, mixed));
+                    _mm256_storeu_pd(ptr.add(2 * g + 4), _mm256_sub_pd(t01, mixed));
+                    g += 4;
+                }
+            } else {
+                // h is even from here on: two butterflies per vector.
+                let mut g = 0;
+                while g < n {
+                    let off0 = 2 * g;
+                    let off2 = off0 + 2 * h;
+                    let off1 = off0 + 4 * h;
+                    let off3 = off0 + 6 * h;
+                    let mut k = 0;
+                    while k < h {
+                        let (w1r, w1i) = twiddle_pair(tw, 3 * k, conj_mask);
+                        let (w2r, w2i) = twiddle_pair(tw, 3 * k + 1, conj_mask);
+                        let (w3r, w3i) = twiddle_pair(tw, 3 * k + 2, conj_mask);
+                        let a = _mm256_loadu_pd(ptr.add(off0 + 2 * k));
+                        let c = cmul(_mm256_loadu_pd(ptr.add(off2 + 2 * k)), w2r, w2i);
+                        let b = cmul(_mm256_loadu_pd(ptr.add(off1 + 2 * k)), w1r, w1i);
+                        let d = cmul(_mm256_loadu_pd(ptr.add(off3 + 2 * k)), w3r, w3i);
+                        let t0 = _mm256_add_pd(a, c);
+                        let t1 = _mm256_sub_pd(a, c);
+                        let t2 = _mm256_add_pd(b, d);
+                        let t3 = _mm256_sub_pd(b, d);
+                        let rot = _mm256_xor_pd(_mm256_permute_pd(t3, 0b0101), rot_mask);
+                        _mm256_storeu_pd(ptr.add(off0 + 2 * k), _mm256_add_pd(t0, t2));
+                        _mm256_storeu_pd(ptr.add(off2 + 2 * k), _mm256_add_pd(t1, rot));
+                        _mm256_storeu_pd(ptr.add(off1 + 2 * k), _mm256_sub_pd(t0, t2));
+                        _mm256_storeu_pd(ptr.add(off3 + 2 * k), _mm256_sub_pd(t1, rot));
+                        k += 2;
+                    }
+                    g += step;
+                }
+            }
+            toff += 3 * h;
+            h = step;
+        }
+    }
+
+    /// Four-column panel butterfly stages — the vector twin of
+    /// `Radix4Plan::stages_panel` for `cols == 4`: each strided row of
+    /// the panel is 4 consecutive complexes = two 2-complex vectors,
+    /// and the twiddle is broadcast across the row.
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2+FMA support, `cols == 4` panel layout
+    /// (`data[r * stride + c]`, `data.len() >= (n−1)·stride + 4`), and
+    /// that `twiddles_neg` is the packed table for size `n`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn stages_panel4(
+        data: &mut [Complex64],
+        n: usize,
+        stride: usize,
+        twiddles_neg: &[Complex64],
+        conj: bool,
+    ) {
+        let ptr = data.as_mut_ptr() as *mut f64;
+        let (conj_mask, rot_mask) = masks(conj);
+        let mut h = 1usize;
+        if n.trailing_zeros() % 2 == 1 {
+            let mut g = 0;
+            while g < n {
+                let r0 = 2 * g * stride;
+                let r1 = r0 + 2 * stride;
+                for half in 0..2 {
+                    let o = 4 * half;
+                    let a = _mm256_loadu_pd(ptr.add(r0 + o));
+                    let b = _mm256_loadu_pd(ptr.add(r1 + o));
+                    _mm256_storeu_pd(ptr.add(r0 + o), _mm256_add_pd(a, b));
+                    _mm256_storeu_pd(ptr.add(r1 + o), _mm256_sub_pd(a, b));
+                }
+                g += 2;
+            }
+            h = 2;
+        }
+        let mut toff = 0usize;
+        while h < n {
+            let step = 4 * h;
+            let tw = &twiddles_neg[toff..toff + 3 * h];
+            let mut g = 0;
+            while g < n {
+                for k in 0..h {
+                    let w1 = tw[3 * k];
+                    let w2 = tw[3 * k + 1];
+                    let w3 = tw[3 * k + 2];
+                    let w1r = _mm256_set1_pd(w1.re);
+                    let w1i = _mm256_xor_pd(_mm256_set1_pd(w1.im), conj_mask);
+                    let w2r = _mm256_set1_pd(w2.re);
+                    let w2i = _mm256_xor_pd(_mm256_set1_pd(w2.im), conj_mask);
+                    let w3r = _mm256_set1_pd(w3.re);
+                    let w3i = _mm256_xor_pd(_mm256_set1_pd(w3.im), conj_mask);
+                    let i0 = 2 * (g + k) * stride;
+                    let i2 = 2 * (g + h + k) * stride;
+                    let i1 = 2 * (g + 2 * h + k) * stride;
+                    let i3 = 2 * (g + 3 * h + k) * stride;
+                    for half in 0..2 {
+                        let o = 4 * half;
+                        let a = _mm256_loadu_pd(ptr.add(i0 + o));
+                        let c = cmul(_mm256_loadu_pd(ptr.add(i2 + o)), w2r, w2i);
+                        let b = cmul(_mm256_loadu_pd(ptr.add(i1 + o)), w1r, w1i);
+                        let d = cmul(_mm256_loadu_pd(ptr.add(i3 + o)), w3r, w3i);
+                        let t0 = _mm256_add_pd(a, c);
+                        let t1 = _mm256_sub_pd(a, c);
+                        let t2 = _mm256_add_pd(b, d);
+                        let t3 = _mm256_sub_pd(b, d);
+                        let rot = _mm256_xor_pd(_mm256_permute_pd(t3, 0b0101), rot_mask);
+                        _mm256_storeu_pd(ptr.add(i0 + o), _mm256_add_pd(t0, t2));
+                        _mm256_storeu_pd(ptr.add(i2 + o), _mm256_add_pd(t1, rot));
+                        _mm256_storeu_pd(ptr.add(i1 + o), _mm256_sub_pd(t0, t2));
+                        _mm256_storeu_pd(ptr.add(i3 + o), _mm256_sub_pd(t1, rot));
+                    }
+                }
+                g += step;
+            }
+            toff += 3 * h;
+            h = step;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use crate::fft::complex::Complex64;
+    use std::arch::aarch64::*;
+
+    /// Complex multiply by a twiddle whose real part is duplicated in
+    /// `wr` and whose (pre-signed) imaginary parts are `wi = [−im, im]`
+    /// (negative sign) or `[im, −im]` (conjugate).
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    #[inline(always)]
+    unsafe fn cmul(z: float64x2_t, wr: float64x2_t, wi: float64x2_t) -> float64x2_t {
+        let swap = vextq_f64::<1>(z, z);
+        vfmaq_f64(vmulq_f64(wr, z), wi, swap)
+    }
+
+    #[inline(always)]
+    unsafe fn twiddle(w: Complex64, conj: bool) -> (float64x2_t, float64x2_t) {
+        let s = if conj { 1.0 } else { -1.0 };
+        let wi = [s * w.im, -s * w.im];
+        (vdupq_n_f64(w.re), vld1q_f64(wi.as_ptr()))
+    }
+
+    #[inline(always)]
+    unsafe fn rotate(t3: float64x2_t, conj: bool) -> float64x2_t {
+        if conj {
+            // ·(+i): [−im, re]
+            vextq_f64::<1>(vnegq_f64(t3), t3)
+        } else {
+            // ·(−i): [im, −re]
+            vextq_f64::<1>(t3, vnegq_f64(t3))
+        }
+    }
+
+    /// Radix-4 butterfly stages over a contiguous, already
+    /// bit-reversed signal — NEON twin of `Radix4Plan::stages`.
+    ///
+    /// # Safety
+    /// `twiddles_neg` must be the packed stage table for
+    /// `n = data.len()` (a power of two).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn stages(data: &mut [Complex64], twiddles_neg: &[Complex64], conj: bool) {
+        let n = data.len();
+        let ptr = data.as_mut_ptr() as *mut f64;
+        let mut h = 1usize;
+        if n.trailing_zeros() % 2 == 1 {
+            let mut g = 0;
+            while g < n {
+                let a = vld1q_f64(ptr.add(2 * g));
+                let b = vld1q_f64(ptr.add(2 * g + 2));
+                vst1q_f64(ptr.add(2 * g), vaddq_f64(a, b));
+                vst1q_f64(ptr.add(2 * g + 2), vsubq_f64(a, b));
+                g += 2;
+            }
+            h = 2;
+        }
+        let mut toff = 0usize;
+        while h < n {
+            let step = 4 * h;
+            let tw = &twiddles_neg[toff..toff + 3 * h];
+            let mut g = 0;
+            while g < n {
+                let base = 2 * g;
+                for k in 0..h {
+                    let (w1r, w1i) = twiddle(tw[3 * k], conj);
+                    let (w2r, w2i) = twiddle(tw[3 * k + 1], conj);
+                    let (w3r, w3i) = twiddle(tw[3 * k + 2], conj);
+                    let i0 = base + 2 * k;
+                    let i2 = base + 2 * (h + k);
+                    let i1 = base + 2 * (2 * h + k);
+                    let i3 = base + 2 * (3 * h + k);
+                    let a = vld1q_f64(ptr.add(i0));
+                    let c = cmul(vld1q_f64(ptr.add(i2)), w2r, w2i);
+                    let b = cmul(vld1q_f64(ptr.add(i1)), w1r, w1i);
+                    let d = cmul(vld1q_f64(ptr.add(i3)), w3r, w3i);
+                    let t0 = vaddq_f64(a, c);
+                    let t1 = vsubq_f64(a, c);
+                    let t2 = vaddq_f64(b, d);
+                    let t3 = vsubq_f64(b, d);
+                    let rot = rotate(t3, conj);
+                    vst1q_f64(ptr.add(i0), vaddq_f64(t0, t2));
+                    vst1q_f64(ptr.add(i2), vaddq_f64(t1, rot));
+                    vst1q_f64(ptr.add(i1), vsubq_f64(t0, t2));
+                    vst1q_f64(ptr.add(i3), vsubq_f64(t1, rot));
+                }
+                g += step;
+            }
+            toff += 3 * h;
+            h = step;
+        }
+    }
+
+    /// Strided-panel butterfly stages — NEON twin of
+    /// `Radix4Plan::stages_panel` for any `cols`.
+    ///
+    /// # Safety
+    /// Panel layout contract of `Radix4Plan::process_panel`
+    /// (`data.len() >= (n−1)·stride + cols`, `1 <= cols <= stride`);
+    /// `twiddles_neg` must be the packed table for size `n`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn stages_panel(
+        data: &mut [Complex64],
+        n: usize,
+        stride: usize,
+        cols: usize,
+        twiddles_neg: &[Complex64],
+        conj: bool,
+    ) {
+        let ptr = data.as_mut_ptr() as *mut f64;
+        let mut h = 1usize;
+        if n.trailing_zeros() % 2 == 1 {
+            let mut g = 0;
+            while g < n {
+                let r0 = 2 * g * stride;
+                let r1 = r0 + 2 * stride;
+                for c in 0..cols {
+                    let a = vld1q_f64(ptr.add(r0 + 2 * c));
+                    let b = vld1q_f64(ptr.add(r1 + 2 * c));
+                    vst1q_f64(ptr.add(r0 + 2 * c), vaddq_f64(a, b));
+                    vst1q_f64(ptr.add(r1 + 2 * c), vsubq_f64(a, b));
+                }
+                g += 2;
+            }
+            h = 2;
+        }
+        let mut toff = 0usize;
+        while h < n {
+            let step = 4 * h;
+            let tw = &twiddles_neg[toff..toff + 3 * h];
+            let mut g = 0;
+            while g < n {
+                for k in 0..h {
+                    let (w1r, w1i) = twiddle(tw[3 * k], conj);
+                    let (w2r, w2i) = twiddle(tw[3 * k + 1], conj);
+                    let (w3r, w3i) = twiddle(tw[3 * k + 2], conj);
+                    let i0 = 2 * (g + k) * stride;
+                    let i2 = 2 * (g + h + k) * stride;
+                    let i1 = 2 * (g + 2 * h + k) * stride;
+                    let i3 = 2 * (g + 3 * h + k) * stride;
+                    for c in 0..cols {
+                        let o = 2 * c;
+                        let a = vld1q_f64(ptr.add(i0 + o));
+                        let cc = cmul(vld1q_f64(ptr.add(i2 + o)), w2r, w2i);
+                        let b = cmul(vld1q_f64(ptr.add(i1 + o)), w1r, w1i);
+                        let d = cmul(vld1q_f64(ptr.add(i3 + o)), w3r, w3i);
+                        let t0 = vaddq_f64(a, cc);
+                        let t1 = vsubq_f64(a, cc);
+                        let t2 = vaddq_f64(b, d);
+                        let t3 = vsubq_f64(b, d);
+                        let rot = rotate(t3, conj);
+                        vst1q_f64(ptr.add(i0 + o), vaddq_f64(t0, t2));
+                        vst1q_f64(ptr.add(i2 + o), vaddq_f64(t1, rot));
+                        vst1q_f64(ptr.add(i1 + o), vsubq_f64(t0, t2));
+                        vst1q_f64(ptr.add(i3 + o), vsubq_f64(t1, rot));
+                    }
+                }
+                g += step;
+            }
+            toff += 3 * h;
+            h = step;
+        }
+    }
+}

@@ -26,6 +26,7 @@
 //! of three times per gather→FFT→scatter sweep.
 
 use super::{Complex64, Sign};
+use crate::simd::SimdIsa;
 
 /// Precomputed tables for a radix-4 transform of size `n` (power of two).
 #[derive(Debug, Clone)]
@@ -37,13 +38,35 @@ pub struct Radix4Plan {
     /// the stage with quarter-size `h` contributes `h` triples
     /// `(ω^k, ω^{2k}, ω^{3k})` with `ω = e^{-2πi/(4h)}`, k = 0..h.
     twiddles_neg: Vec<Complex64>,
+    /// Resolved instruction set the butterfly stages run with; decided
+    /// at plan build (never probed per transform).
+    isa: SimdIsa,
 }
 
 impl Radix4Plan {
-    /// Build a plan; panics if `n` is not a power of two (callers dispatch
-    /// through [`super::plan::FftPlan`] which guards this).
+    /// Build a plan with the process-detected ISA; panics if `n` is not
+    /// a power of two (callers dispatch through [`super::plan::FftPlan`]
+    /// which guards this).
     pub fn new(n: usize) -> Self {
+        Self::with_isa(n, crate::simd::detected_isa())
+    }
+
+    /// Build a plan pinned to a specific butterfly ISA (the executor
+    /// passes the plan-resolved policy; `new` uses auto-detection).
+    /// Panics if `n` is not a power of two, or if `isa` names a vector
+    /// extension the host does not support — the latter keeps the
+    /// `unsafe` kernel calls sound by construction.
+    pub fn with_isa(n: usize, isa: SimdIsa) -> Self {
         assert!(n.is_power_of_two(), "radix-4 plan requires power-of-two n");
+        assert!(
+            match isa {
+                SimdIsa::Scalar => true,
+                SimdIsa::Avx2 => crate::simd::avx2_supported(),
+                SimdIsa::Neon => crate::simd::neon_supported(),
+            },
+            "radix-4 plan: ISA {} not supported on this host",
+            isa.name()
+        );
         let bits = n.trailing_zeros();
         let bitrev = (0..n as u32)
             .map(|i| {
@@ -70,12 +93,19 @@ impl Radix4Plan {
             n,
             bitrev,
             twiddles_neg,
+            isa,
         }
     }
 
     #[inline]
     pub fn len(&self) -> usize {
         self.n
+    }
+
+    /// The butterfly ISA this plan was built with.
+    #[inline]
+    pub fn isa(&self) -> SimdIsa {
+        self.isa
     }
 
     #[inline]
@@ -96,9 +126,19 @@ impl Radix4Plan {
                 data.swap(i, j);
             }
         }
-        match sign {
-            Sign::Negative => self.stages::<false>(data),
-            Sign::Positive => self.stages::<true>(data),
+        match (sign, self.isa) {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `with_isa` asserted AVX2+FMA support for this ISA.
+            (_, SimdIsa::Avx2) => unsafe {
+                super::simd::avx2::stages(data, &self.twiddles_neg, matches!(sign, Sign::Positive))
+            },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64.
+            (_, SimdIsa::Neon) => unsafe {
+                super::simd::neon::stages(data, &self.twiddles_neg, matches!(sign, Sign::Positive))
+            },
+            (Sign::Negative, _) => self.stages::<false>(data),
+            (Sign::Positive, _) => self.stages::<true>(data),
         }
     }
 
@@ -133,9 +173,35 @@ impl Radix4Plan {
                 }
             }
         }
-        match sign {
-            Sign::Negative => self.stages_panel::<false>(data, stride, cols),
-            Sign::Positive => self.stages_panel::<true>(data, stride, cols),
+        match (sign, self.isa) {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `with_isa` asserted AVX2+FMA support; `cols == 4`
+            // matches the kernel's fixed panel width. Narrower panels
+            // fall through to the scalar stages (which also preserves
+            // the untouched-column bit-identity contract).
+            (_, SimdIsa::Avx2) if cols == 4 => unsafe {
+                super::simd::avx2::stages_panel4(
+                    data,
+                    n,
+                    stride,
+                    &self.twiddles_neg,
+                    matches!(sign, Sign::Positive),
+                )
+            },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64.
+            (_, SimdIsa::Neon) => unsafe {
+                super::simd::neon::stages_panel(
+                    data,
+                    n,
+                    stride,
+                    cols,
+                    &self.twiddles_neg,
+                    matches!(sign, Sign::Positive),
+                )
+            },
+            (Sign::Negative, _) => self.stages_panel::<false>(data, stride, cols),
+            (Sign::Positive, _) => self.stages_panel::<true>(data, stride, cols),
         }
     }
 

@@ -91,6 +91,7 @@ pub mod pool;
 pub mod prng;
 pub mod runtime;
 pub mod service;
+pub mod simd;
 pub mod simulator;
 pub mod so3;
 pub mod testkit;

@@ -21,6 +21,7 @@ use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::Result;
 use crate::fft::FftEngine;
 use crate::pool::{PoolSpec, Schedule, WorkerPool};
+use crate::simd::SimdPolicy;
 use crate::transform::So3Plan;
 use crate::util::{lock_unpoisoned, read_unpoisoned as read, write_unpoisoned as write};
 use crate::wisdom::{PlanRigor, WisdomStore};
@@ -45,6 +46,8 @@ pub struct PlanOptions {
     pub fft_engine: FftEngine,
     /// Conjugate-even forward FFT stage (real samples only).
     pub real_input: bool,
+    /// SIMD kernel dispatch policy (resolved per plan at build time).
+    pub simd: SimdPolicy,
 }
 
 impl Default for PlanOptions {
@@ -65,6 +68,7 @@ impl PlanOptions {
             precision: config.precision,
             fft_engine: config.fft_engine,
             real_input: config.real_input,
+            simd: config.simd,
         }
     }
 
@@ -79,6 +83,7 @@ impl PlanOptions {
             precision: self.precision,
             fft_engine: self.fft_engine,
             real_input: self.real_input,
+            simd: self.simd,
             pool,
         }
     }
@@ -378,6 +383,7 @@ mod tests {
         assert_eq!(back.threads, 3); // substrate comes from the service
         assert_eq!(back.storage, WignerStorage::OnTheFly);
         assert!(back.real_input);
+        assert_eq!(back.simd, SimdPolicy::Auto);
         // Default options mirror the default executor config.
         assert_eq!(
             PlanOptions::default(),

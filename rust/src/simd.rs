@@ -1,0 +1,241 @@
+//! Runtime SIMD dispatch: policy, detection, and the resolved ISA.
+//!
+//! The DWT and FFT hot loops have explicit arch-specific micro-kernels
+//! (AVX2+FMA on x86_64, NEON on aarch64) living in `dwt::simd` and
+//! `fft::simd`. This module owns the *selection* machinery, following
+//! the crate's engine-selection pattern (`DwtAlgorithm` / `FftEngine`):
+//!
+//! * [`SimdPolicy`] is the user-facing knob (config key `simd`, CLI
+//!   `--simd`, builder method [`crate::transform::So3PlanBuilder::simd`]).
+//!   `Auto` (the default) uses whatever the host supports; `Scalar`
+//!   keeps the portable kernels as the measurable baseline; the
+//!   `Force*` variants fail loudly on unsupported hardware instead of
+//!   silently degrading.
+//! * [`SimdIsa`] is the *resolved* instruction set a plan actually runs
+//!   with. It is decided once at plan-build time (and memoized once per
+//!   process for `Auto`), so dispatch is a plain enum match on a
+//!   pre-resolved value — never a feature probe in a hot loop.
+//! * `SO3FT_FORCE_SCALAR=1` is the environment escape hatch: it pins
+//!   auto-detection to scalar for the whole process (CI runs the test
+//!   matrix once under it so both dispatch paths stay green).
+//!
+//! All `unsafe` lives in the kernel modules; everything here is safe.
+
+use crate::error::{Error, Result};
+use std::sync::OnceLock;
+
+/// User-facing SIMD dispatch policy (the `simd` config/CLI knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SimdPolicy {
+    /// Use the best instruction set the host supports (the default).
+    #[default]
+    Auto,
+    /// Portable scalar kernels — the measurable baseline.
+    Scalar,
+    /// Require AVX2+FMA; plan construction fails if unsupported.
+    ForceAvx2,
+    /// Require NEON; plan construction fails if unsupported.
+    ForceNeon,
+}
+
+impl SimdPolicy {
+    /// Canonical lowercase name, as accepted by [`SimdPolicy::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdPolicy::Auto => "auto",
+            SimdPolicy::Scalar => "scalar",
+            SimdPolicy::ForceAvx2 => "force-avx2",
+            SimdPolicy::ForceNeon => "force-neon",
+        }
+    }
+
+    /// Parse a policy name (config / CLI / wisdom store).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(SimdPolicy::Auto),
+            "scalar" => Ok(SimdPolicy::Scalar),
+            "force-avx2" => Ok(SimdPolicy::ForceAvx2),
+            "force-neon" => Ok(SimdPolicy::ForceNeon),
+            other => Err(Error::Config(format!(
+                "unknown simd policy '{other}' (expected auto|scalar|force-avx2|force-neon)"
+            ))),
+        }
+    }
+
+    /// Resolve the policy against the host, yielding the ISA the plan
+    /// will run with. `Force*` variants return a typed config error on
+    /// unsupported hardware rather than silently falling back.
+    pub fn resolve(&self) -> Result<SimdIsa> {
+        match self {
+            SimdPolicy::Auto => Ok(detected_isa()),
+            SimdPolicy::Scalar => Ok(SimdIsa::Scalar),
+            SimdPolicy::ForceAvx2 => {
+                if avx2_supported() {
+                    Ok(SimdIsa::Avx2)
+                } else {
+                    Err(Error::Config(
+                        "simd=force-avx2 but this host does not support AVX2+FMA".into(),
+                    ))
+                }
+            }
+            SimdPolicy::ForceNeon => {
+                if neon_supported() {
+                    Ok(SimdIsa::Neon)
+                } else {
+                    Err(Error::Config(
+                        "simd=force-neon but this host does not support NEON".into(),
+                    ))
+                }
+            }
+        }
+    }
+}
+
+/// The instruction set a plan actually executes with — the *resolved*
+/// form of [`SimdPolicy`]. Hot loops match on this pre-resolved value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// Portable scalar kernels.
+    Scalar,
+    /// x86_64 AVX2 + FMA (4-wide f64).
+    Avx2,
+    /// aarch64 NEON (2-wide f64).
+    Neon,
+}
+
+impl SimdIsa {
+    /// Canonical lowercase name (bench records, fingerprint, logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdIsa::Scalar => "scalar",
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Neon => "neon",
+        }
+    }
+}
+
+/// Does this host support the AVX2+FMA kernels?
+pub fn avx2_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    let ok = std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma");
+    #[cfg(not(target_arch = "x86_64"))]
+    let ok = false;
+    ok
+}
+
+/// Does this host support the NEON kernels? (NEON is baseline on
+/// aarch64, so this is a compile-time fact.)
+pub fn neon_supported() -> bool {
+    cfg!(target_arch = "aarch64")
+}
+
+/// Pure detection logic: the ISA `Auto` resolves to, given whether the
+/// scalar escape hatch is engaged. Exposed (rather than only the
+/// memoized [`detected_isa`]) so tests can exercise the hatch without
+/// racing on process-global environment state.
+pub fn detect(force_scalar: bool) -> SimdIsa {
+    if force_scalar {
+        return SimdIsa::Scalar;
+    }
+    if avx2_supported() {
+        SimdIsa::Avx2
+    } else if neon_supported() {
+        SimdIsa::Neon
+    } else {
+        SimdIsa::Scalar
+    }
+}
+
+/// The host's best supported ISA, honouring `SO3FT_FORCE_SCALAR=1`.
+/// Memoized once per process: feature probes and the env read happen at
+/// most once, never in a hot loop.
+pub fn detected_isa() -> SimdIsa {
+    static DETECTED: OnceLock<SimdIsa> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        let force = std::env::var("SO3FT_FORCE_SCALAR").as_deref() == Ok("1");
+        detect(force)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [
+            SimdPolicy::Auto,
+            SimdPolicy::Scalar,
+            SimdPolicy::ForceAvx2,
+            SimdPolicy::ForceNeon,
+        ] {
+            assert_eq!(SimdPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(SimdPolicy::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn default_policy_is_auto() {
+        assert_eq!(SimdPolicy::default(), SimdPolicy::Auto);
+    }
+
+    #[test]
+    fn scalar_policy_always_resolves_scalar() {
+        assert_eq!(SimdPolicy::Scalar.resolve().unwrap(), SimdIsa::Scalar);
+    }
+
+    #[test]
+    fn auto_resolves_to_detected() {
+        assert_eq!(SimdPolicy::Auto.resolve().unwrap(), detected_isa());
+    }
+
+    #[test]
+    fn force_scalar_hatch_wins_over_features() {
+        assert_eq!(detect(true), SimdIsa::Scalar);
+    }
+
+    #[test]
+    fn detect_matches_host_features() {
+        let isa = detect(false);
+        if avx2_supported() {
+            assert_eq!(isa, SimdIsa::Avx2);
+        } else if neon_supported() {
+            assert_eq!(isa, SimdIsa::Neon);
+        } else {
+            assert_eq!(isa, SimdIsa::Scalar);
+        }
+    }
+
+    #[test]
+    fn force_variants_error_on_unsupported_hosts() {
+        if !avx2_supported() {
+            assert!(matches!(
+                SimdPolicy::ForceAvx2.resolve(),
+                Err(Error::Config(_))
+            ));
+        }
+        if !neon_supported() {
+            assert!(matches!(
+                SimdPolicy::ForceNeon.resolve(),
+                Err(Error::Config(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn at_most_one_vector_isa_per_host() {
+        // AVX2 and NEON are mutually exclusive arches; both being
+        // reported would mean the cfg gates are wrong.
+        assert!(!(avx2_supported() && neon_supported()));
+    }
+
+    #[test]
+    fn isa_names_are_stable() {
+        // These strings appear in bench records and the wisdom
+        // fingerprint; renaming them is a store-invalidating change.
+        assert_eq!(SimdIsa::Scalar.name(), "scalar");
+        assert_eq!(SimdIsa::Avx2.name(), "avx2");
+        assert_eq!(SimdIsa::Neon.name(), "neon");
+    }
+}

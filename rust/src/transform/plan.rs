@@ -47,6 +47,7 @@ use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::{Error, Result};
 use crate::fft::FftEngine;
 use crate::pool::{PoolSpec, Schedule, WorkerPool};
+use crate::simd::{SimdIsa, SimdPolicy};
 use crate::so3::coeffs::So3Coeffs;
 use crate::so3::sampling::So3Grid;
 use crate::wisdom::{self, PlanRigor, WisdomOutcome, WisdomSource, WisdomStore, WisdomWarning};
@@ -203,6 +204,12 @@ impl So3Plan {
     /// Memory held by precomputed Wigner tables (bytes).
     pub fn table_bytes(&self) -> usize {
         self.exec.table_bytes()
+    }
+
+    /// The instruction set the DWT/FFT hot kernels run with — the
+    /// builder's [`SimdPolicy`] resolved against the host at build time.
+    pub fn simd_isa(&self) -> SimdIsa {
+        self.exec.simd_isa()
     }
 
     /// The persistent worker pool this plan's parallel regions execute
@@ -450,6 +457,16 @@ impl So3PlanBuilder {
         self
     }
 
+    /// SIMD dispatch policy for the DWT/FFT hot kernels:
+    /// [`SimdPolicy::Auto`] (default) uses the widest ISA the host
+    /// supports, [`SimdPolicy::Scalar`] pins the measurable scalar
+    /// baseline, and the `Force*` variants fail the build with a typed
+    /// [`Error::Config`] on hosts without that ISA.
+    pub fn simd(mut self, policy: SimdPolicy) -> Self {
+        self.config.simd = policy;
+        self
+    }
+
     /// Opt into the real-input analysis path: the forward FFT stage
     /// exploits Hermitian symmetry of real samples (~half the butterfly
     /// work and memory traffic). Grids with any nonzero imaginary part
@@ -648,6 +665,29 @@ mod tests {
         assert!(matches!(
             rplan.forward(&g),
             Err(Error::RealInputRequired { .. })
+        ));
+    }
+
+    #[test]
+    fn builder_simd_policy_resolves_and_matches_auto() {
+        let scalar = So3Plan::builder(8).simd(SimdPolicy::Scalar).build().unwrap();
+        assert_eq!(scalar.simd_isa(), SimdIsa::Scalar);
+        assert_eq!(scalar.config().simd, SimdPolicy::Scalar);
+        let auto = So3Plan::new(8).unwrap();
+        assert_eq!(auto.simd_isa(), crate::simd::detected_isa());
+        let coeffs = So3Coeffs::random(8, 17);
+        let g_a = auto.inverse(&coeffs).unwrap();
+        let g_s = scalar.inverse(&coeffs).unwrap();
+        assert!(g_a.max_abs_error(&g_s) < 1e-12);
+        // Forcing an ISA the host lacks is a typed build error.
+        let impossible = if cfg!(target_arch = "x86_64") {
+            SimdPolicy::ForceNeon
+        } else {
+            SimdPolicy::ForceAvx2
+        };
+        assert!(matches!(
+            So3Plan::builder(8).simd(impossible).build(),
+            Err(Error::Config(_))
         ));
     }
 

@@ -1,10 +1,146 @@
 //! Shared low-level utilities: disjoint-write shared slices,
-//! poison-recovering lock helpers, on-disk cache path resolution, and
-//! the few special functions the Wigner-d seeds need.
+//! cache-line-aligned scratch buffers, poison-recovering lock helpers,
+//! on-disk cache path resolution, and the few special functions the
+//! Wigner-d seeds need.
 
 use std::cell::UnsafeCell;
+use std::marker::PhantomData;
+use std::ops::{Deref, DerefMut};
 use std::path::PathBuf;
 use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Marker for element types that may live in an [`AlignedVec`].
+///
+/// # Safety
+/// Implementors must be plain old data: `Copy`, no drop glue, valid for
+/// every bit pattern (the backing storage is zero-initialized bytes),
+/// and alignment ≤ 64 bytes.
+pub unsafe trait Pod: Copy {}
+
+// SAFETY: primitive floats satisfy every Pod requirement.
+unsafe impl Pod for f64 {}
+
+/// One cache line of backing storage; the `align(64)` is what gives
+/// [`AlignedVec`] its guarantee.
+#[derive(Clone, Copy)]
+#[repr(C, align(64))]
+struct Chunk64([u8; 64]);
+
+/// A growable buffer whose data pointer is always 64-byte aligned — the
+/// allocation helper behind the thread-local DWT and FFT scratch.
+///
+/// Alignment matters to the SIMD micro-kernels (`dwt::simd`,
+/// `fft::simd`): 64 bytes covers a full cache line, so a hot scratch
+/// vector never straddles lines at its head and every 32-byte AVX2 (or
+/// 16-byte NEON) access inside it stays naturally aligned. `Vec<f64>`
+/// only guarantees 8.
+///
+/// The API is the `Vec` subset the kernels use — `resize`, `clear`, and
+/// slice access through `Deref` — with `Vec::resize` fill semantics:
+/// `resize` writes `value` into slots past the previous length only.
+/// Shrinking is O(1) (capacity is retained, like `Vec`).
+pub struct AlignedVec<T: Pod> {
+    chunks: Vec<Chunk64>,
+    len: usize,
+    _elem: PhantomData<T>,
+}
+
+impl<T: Pod> AlignedVec<T> {
+    /// An empty buffer. `const`, so it can seed
+    /// `const { RefCell::new(...) }` thread-local slots.
+    pub const fn new() -> Self {
+        Self {
+            chunks: Vec::new(),
+            len: 0,
+            _elem: PhantomData,
+        }
+    }
+
+    /// Resize to `new_len` elements, filling any slots past the previous
+    /// length with `value` (exactly `Vec::resize`).
+    pub fn resize(&mut self, new_len: usize, value: T) {
+        let bytes = new_len
+            .checked_mul(std::mem::size_of::<T>())
+            .expect("AlignedVec byte length overflow");
+        let chunks = bytes.div_ceil(64);
+        if chunks > self.chunks.len() {
+            self.chunks.resize(chunks, Chunk64([0u8; 64]));
+        }
+        let old = self.len;
+        self.len = new_len;
+        if new_len > old {
+            for slot in &mut self.as_mut_slice()[old..] {
+                *slot = value;
+            }
+        }
+    }
+
+    /// Drop every element (capacity is retained).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        debug_assert!(std::mem::align_of::<T>() <= 64);
+        let ptr = self.chunks.as_ptr() as *const T;
+        debug_assert_eq!(
+            ptr as usize % 64,
+            0,
+            "AlignedVec backing lost 64-byte alignment"
+        );
+        // SAFETY: the chunk storage holds at least `len` elements (see
+        // `resize`), every byte of it is initialized, and `T: Pod`
+        // accepts any bit pattern.
+        unsafe { std::slice::from_raw_parts(ptr, self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        debug_assert!(std::mem::align_of::<T>() <= 64);
+        let ptr = self.chunks.as_mut_ptr() as *mut T;
+        debug_assert_eq!(
+            ptr as usize % 64,
+            0,
+            "AlignedVec backing lost 64-byte alignment"
+        );
+        // SAFETY: as in `as_slice`, plus `&mut self` gives exclusivity.
+        unsafe { std::slice::from_raw_parts_mut(ptr, self.len) }
+    }
+}
+
+impl<T: Pod> Deref for AlignedVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> DerefMut for AlignedVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+impl<T: Pod> Default for AlignedVec<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Pod> Clone for AlignedVec<T> {
+    fn clone(&self) -> Self {
+        Self {
+            chunks: self.chunks.clone(),
+            len: self.len,
+            _elem: PhantomData,
+        }
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for AlignedVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice().iter()).finish()
+    }
+}
 
 /// Lock a mutex, recovering the guard from a poisoned lock — the
 /// crate's uniform poison policy: a panicked holder leaves data that is
@@ -289,6 +425,54 @@ mod tests {
                 None => std::env::remove_var(k),
             }
         }
+    }
+
+    #[test]
+    fn aligned_vec_is_64_byte_aligned_and_grows() {
+        let mut v: AlignedVec<f64> = AlignedVec::new();
+        assert!(v.is_empty());
+        for len in [1usize, 7, 8, 9, 63, 64, 65, 1000] {
+            v.resize(len, 0.0);
+            assert_eq!(v.len(), len);
+            assert_eq!(v.as_slice().as_ptr() as usize % 64, 0, "len={len}");
+        }
+    }
+
+    #[test]
+    fn aligned_vec_matches_vec_resize_semantics() {
+        let mut a: AlignedVec<f64> = AlignedVec::new();
+        let mut v: Vec<f64> = Vec::new();
+        a.resize(4, 1.0);
+        v.resize(4, 1.0);
+        a[2] = 9.0;
+        v[2] = 9.0;
+        // Shrink keeps the prefix; regrow fills only the new tail.
+        a.resize(3, 7.0);
+        v.resize(3, 7.0);
+        a.resize(6, 5.0);
+        v.resize(6, 5.0);
+        assert_eq!(a.as_slice(), v.as_slice());
+        a.clear();
+        v.clear();
+        a.resize(2, 3.0);
+        v.resize(2, 3.0);
+        assert_eq!(a.as_slice(), v.as_slice());
+    }
+
+    #[test]
+    fn aligned_vec_clone_and_iter() {
+        let mut v: AlignedVec<f64> = AlignedVec::new();
+        v.resize(5, 2.0);
+        v[0] = -1.0;
+        let c = v.clone();
+        assert_eq!(c.as_slice(), v.as_slice());
+        assert_eq!(v.iter().sum::<f64>(), -1.0 + 4.0 * 2.0);
+        // Mutation through DerefMut.
+        for x in v.iter_mut() {
+            *x *= 2.0;
+        }
+        assert_eq!(v[1], 4.0);
+        assert_eq!(c[1], 2.0, "clone is independent storage");
     }
 
     #[test]

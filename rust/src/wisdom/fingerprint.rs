@@ -3,9 +3,11 @@
 //! Measured timings are only meaningful on the machine that produced
 //! them, so every wisdom file is stamped with a digest of the facts
 //! that shape the measurement: core count, cache-line size, target
-//! arch/OS, and the crate version (kernels change between releases).
-//! A digest mismatch on load silently invalidates the stored entries —
-//! the planner re-measures rather than trusting stale timings.
+//! arch/OS, the detected SIMD ISA (the vector kernels change which
+//! engine wins), and the crate version (kernels change between
+//! releases). A digest mismatch on load silently invalidates the stored
+//! entries — the planner re-measures rather than trusting stale
+//! timings.
 
 use std::fmt;
 
@@ -21,6 +23,10 @@ pub struct MachineFingerprint {
     pub arch: &'static str,
     /// `std::env::consts::OS`.
     pub os: &'static str,
+    /// The process-detected SIMD ISA ([`crate::simd::detected_isa`]) —
+    /// timings measured with AVX2 kernels don't transfer to a
+    /// scalar-only host (or to a `SO3FT_FORCE_SCALAR=1` run).
+    pub simd: &'static str,
     /// `CARGO_PKG_VERSION` at build time.
     pub crate_version: &'static str,
 }
@@ -35,6 +41,7 @@ impl MachineFingerprint {
             cache_line: if cfg!(target_arch = "aarch64") { 128 } else { 64 },
             arch: std::env::consts::ARCH,
             os: std::env::consts::OS,
+            simd: crate::simd::detected_isa().name(),
             crate_version: env!("CARGO_PKG_VERSION"),
         }
     }
@@ -57,8 +64,8 @@ impl fmt::Display for MachineFingerprint {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "cores={} cache_line={} arch={} os={} crate={}",
-            self.cores, self.cache_line, self.arch, self.os, self.crate_version
+            "cores={} cache_line={} arch={} os={} simd={} crate={}",
+            self.cores, self.cache_line, self.arch, self.os, self.simd, self.crate_version
         )
     }
 }
@@ -85,6 +92,9 @@ mod tests {
         let mut other = base.clone();
         other.cache_line = base.cache_line * 2;
         assert_ne!(base.digest(), other.digest());
+        let mut other = base.clone();
+        other.simd = if base.simd == "scalar" { "avx2" } else { "scalar" };
+        assert_ne!(base.digest(), other.digest());
     }
 
     #[test]
@@ -94,11 +104,12 @@ mod tests {
             cache_line: 64,
             arch: "x86_64",
             os: "linux",
-            crate_version: "0.7.0",
+            simd: "avx2",
+            crate_version: "0.8.0",
         };
         assert_eq!(
             fp.to_string(),
-            "cores=4 cache_line=64 arch=x86_64 os=linux crate=0.7.0"
+            "cores=4 cache_line=64 arch=x86_64 os=linux simd=avx2 crate=0.8.0"
         );
     }
 }

@@ -7,7 +7,7 @@
 //!   bit-identical and zero-cost; and
 //! * [`PlanRigor::Measure`] — a build-time search over the tunable knob
 //!   space (DWT algorithm × FFT engine × schedule × partition
-//!   strategy), pruned by the `simulator/` cost model and wall-clocked
+//!   strategy × SIMD policy), pruned by the `simulator/` cost model and wall-clocked
 //!   on the plan's own worker pool ([`search`]), with the winner
 //!   persisted in a machine-fingerprinted [`store::WisdomStore`] so
 //!   the measurement runs once per `(bandwidth, direction, threads,
@@ -132,6 +132,7 @@ pub struct TunedChoice {
     pub strategy: crate::coordinator::PartitionStrategy,
     pub algorithm: crate::dwt::DwtAlgorithm,
     pub fft_engine: crate::fft::FftEngine,
+    pub simd: crate::simd::SimdPolicy,
     pub fwd_seconds: f64,
     pub inv_seconds: f64,
 }
@@ -152,6 +153,7 @@ fn apply(config: &mut ExecutorConfig, choice: &TunedChoice) {
     config.strategy = choice.strategy;
     config.algorithm = choice.algorithm;
     config.fft_engine = choice.fft_engine;
+    config.simd = choice.simd;
 }
 
 /// Run the `Measure` path for one build: look `config`'s shape up in
@@ -178,6 +180,7 @@ pub(crate) fn tune(
                 strategy: entry.strategy,
                 algorithm: entry.algorithm,
                 fft_engine: entry.fft_engine,
+                simd: entry.simd,
                 // Stored "seconds" is the per-direction best at record
                 // time; the forward slot shares the file.
                 inv_seconds: entry.seconds,
@@ -212,6 +215,7 @@ pub(crate) fn tune(
                     strategy: out.winner.strategy,
                     algorithm: out.winner.algorithm,
                     fft_engine: out.winner.fft_engine,
+                    simd: out.winner.simd,
                     seconds: out.inv_seconds,
                 };
                 store.record(key, base_entry.clone());
@@ -230,6 +234,7 @@ pub(crate) fn tune(
                     strategy: out.winner.strategy,
                     algorithm: out.winner.algorithm,
                     fft_engine: out.winner.fft_engine,
+                    simd: out.winner.simd,
                     fwd_seconds: out.fwd_seconds,
                     inv_seconds: out.inv_seconds,
                 };
@@ -294,6 +299,7 @@ mod tests {
         assert_eq!(config.algorithm, config2.algorithm);
         assert_eq!(config.fft_engine, config2.fft_engine);
         assert_eq!(config.strategy, config2.strategy);
+        assert_eq!(config.simd, config2.simd);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //!
 //! The candidate space is the cross product of the crate's tunable
 //! axes — DWT algorithm × FFT engine × loop schedule (including the
-//! partition chunk) × partition strategy — 60 combinations. Timing all
+//! partition chunk) × partition strategy × SIMD policy — 120
+//! combinations. Timing all
 //! of them would make `PlanRigor::Measure` cost seconds per build, so
 //! the discrete-event machine model ranks them first (per-package DWT
 //! flop counts from the real `TransformPlan`, coarse static rates per
@@ -21,6 +22,7 @@ use crate::dwt::DwtAlgorithm;
 use crate::error::Result;
 use crate::fft::FftEngine;
 use crate::pool::{PoolSpec, Schedule, WorkerPool};
+use crate::simd::{SimdIsa, SimdPolicy};
 use crate::simulator::machine::{simulate_transform, MachineParams, RegionSpec, TransformSpec};
 use crate::so3::coeffs::So3Coeffs;
 use crate::so3::sampling::So3Grid;
@@ -32,6 +34,7 @@ pub struct Candidate {
     pub strategy: PartitionStrategy,
     pub algorithm: DwtAlgorithm,
     pub fft_engine: FftEngine,
+    pub simd: SimdPolicy,
 }
 
 /// What the search measured: the winning candidate with its best
@@ -76,7 +79,18 @@ fn fft_multiplier(e: FftEngine) -> f64 {
     }
 }
 
-/// The full candidate space (60 combinations).
+/// Ranking discount for the vector kernels. Only `Auto` on a host where
+/// detection actually found an ISA is faster than scalar; everywhere
+/// else the two policies run the same code and must tie (a fake
+/// discount would waste a `TOP_K` measurement slot on a duplicate).
+fn simd_multiplier(p: SimdPolicy) -> f64 {
+    match p {
+        SimdPolicy::Auto if crate::simd::detected_isa() != SimdIsa::Scalar => 0.65,
+        _ => 1.0,
+    }
+}
+
+/// The full candidate space (120 combinations).
 pub fn candidate_space() -> Vec<Candidate> {
     let schedules = [
         Schedule::Dynamic { chunk: 1 },
@@ -95,17 +109,21 @@ pub fn candidate_space() -> Vec<Candidate> {
         DwtAlgorithm::Clenshaw,
     ];
     let engines = [FftEngine::SplitRadix, FftEngine::Radix2Baseline];
-    let mut out = Vec::with_capacity(60);
+    let simd_policies = [SimdPolicy::Scalar, SimdPolicy::Auto];
+    let mut out = Vec::with_capacity(120);
     for &algorithm in &algorithms {
         for &fft_engine in &engines {
-            for &schedule in &schedules {
-                for &strategy in &strategies {
-                    out.push(Candidate {
-                        schedule,
-                        strategy,
-                        algorithm,
-                        fft_engine,
-                    });
+            for &simd in &simd_policies {
+                for &schedule in &schedules {
+                    for &strategy in &strategies {
+                        out.push(Candidate {
+                            schedule,
+                            strategy,
+                            algorithm,
+                            fft_engine,
+                            simd,
+                        });
+                    }
                 }
             }
         }
@@ -116,7 +134,7 @@ pub fn candidate_space() -> Vec<Candidate> {
 /// Simulated wall time of one candidate at `threads` virtual cores.
 fn simulated_seconds(b: usize, cand: &Candidate, threads: usize) -> f64 {
     let plan = TransformPlan::new(b, cand.strategy);
-    let mult = algorithm_multiplier(cand.algorithm) * DWT_RATE;
+    let mult = algorithm_multiplier(cand.algorithm) * simd_multiplier(cand.simd) * DWT_RATE;
     let dwt = RegionSpec {
         costs: plan
             .package_flops()
@@ -130,7 +148,9 @@ fn simulated_seconds(b: usize, cand: &Candidate, threads: usize) -> f64 {
     // split into 2B equal row-block packages.
     let n = 2 * b;
     let fft_flops = 2.0 * (n * n) as f64 * 5.0 * n as f64 * (n as f64).log2();
-    let fft_cost = fft_flops * FFT_RATE * fft_multiplier(cand.fft_engine) / n as f64;
+    let fft_cost = fft_flops * FFT_RATE * fft_multiplier(cand.fft_engine)
+        * simd_multiplier(cand.simd)
+        / n as f64;
     let fft = RegionSpec {
         costs: vec![fft_cost; n],
         mem_fraction: 0.30,
@@ -148,7 +168,7 @@ fn simulated_seconds(b: usize, cand: &Candidate, threads: usize) -> f64 {
 ///
 /// The base config's `storage`, `precision`, `real_input`, and
 /// `threads` are held fixed (they are correctness/accuracy choices, not
-/// speed knobs); only the four candidate axes vary.
+/// speed knobs); only the five candidate axes vary.
 pub(crate) fn search(
     b: usize,
     base: &ExecutorConfig,
@@ -190,6 +210,7 @@ pub(crate) fn search(
             precision: base.precision,
             fft_engine: cand.fft_engine,
             real_input: base.real_input,
+            simd: cand.simd,
             pool: pool_spec.clone(),
         };
         let exec = Executor::new(b, config)?;
@@ -242,7 +263,7 @@ mod tests {
     #[test]
     fn space_is_the_documented_cross_product() {
         let space = candidate_space();
-        assert_eq!(space.len(), 60);
+        assert_eq!(space.len(), 120);
         // Every axis value appears.
         assert!(space.iter().any(|c| c.algorithm == DwtAlgorithm::Clenshaw));
         assert!(space
@@ -254,6 +275,14 @@ mod tests {
         assert!(space
             .iter()
             .any(|c| c.strategy == PartitionStrategy::SigmaClustered));
+        assert!(space.iter().any(|c| c.simd == SimdPolicy::Scalar));
+        assert!(space.iter().any(|c| c.simd == SimdPolicy::Auto));
+        // The Force* policies never enter the space: they can fail to
+        // resolve on the running host, and Auto already covers the
+        // best available ISA.
+        assert!(space
+            .iter()
+            .all(|c| matches!(c.simd, SimdPolicy::Scalar | SimdPolicy::Auto)));
     }
 
     #[test]
@@ -265,6 +294,7 @@ mod tests {
             strategy: PartitionStrategy::GeometricClustered,
             algorithm: DwtAlgorithm::MatVecFolded,
             fft_engine: FftEngine::SplitRadix,
+            simd: SimdPolicy::Auto,
         };
         let slow = Candidate {
             fft_engine: FftEngine::Radix2Baseline,

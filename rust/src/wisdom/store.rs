@@ -9,8 +9,12 @@
 //! SO3WIS1
 //! fingerprint 9a3c0f21e77b4d55
 //! entry b=16 dir=inv threads=4 schedule=dynamic:1 strategy=geometric \
-//!       algorithm=matvec-folded fft=split-radix seconds=1.234000e-3
+//!       algorithm=matvec-folded fft=split-radix seconds=1.234000e-3 simd=auto
 //! ```
+//!
+//! The `simd` field is optional on read (files written before the SIMD
+//! dispatch axis existed default to `auto`), so old SO3WIS1 stores stay
+//! readable.
 //!
 //! Failure policy (the FFTW wisdom contract): a corrupt or
 //! wrong-version file is a [`WisdomWarning`], never an error — lookups
@@ -36,6 +40,7 @@ use crate::coordinator::PartitionStrategy;
 use crate::dwt::DwtAlgorithm;
 use crate::fft::FftEngine;
 use crate::pool::Schedule;
+use crate::simd::SimdPolicy;
 use crate::util::{cache_file, lock_unpoisoned};
 
 use super::fingerprint::MachineFingerprint;
@@ -80,6 +85,8 @@ pub struct WisdomEntry {
     pub strategy: PartitionStrategy,
     pub algorithm: DwtAlgorithm,
     pub fft_engine: FftEngine,
+    /// SIMD dispatch policy the winning time was measured with.
+    pub simd: SimdPolicy,
     /// Best measured wall time (seconds) for this key.
     pub seconds: f64,
 }
@@ -105,11 +112,12 @@ impl WisdomEntry {
     /// One-line human description ("schedule=dynamic:1 strategy=… …").
     pub fn describe(&self) -> String {
         format!(
-            "schedule={} strategy={} algorithm={} fft={} seconds={:.3e}",
+            "schedule={} strategy={} algorithm={} fft={} simd={} seconds={:.3e}",
             self.schedule.name(),
             self.strategy.name(),
             algorithm_name(self.algorithm),
             fft_engine_name(self.fft_engine),
+            self.simd.name(),
             self.seconds
         )
     }
@@ -329,7 +337,7 @@ impl WisdomStore {
             let e = &state.entries[&k];
             out.push(format!(
                 "entry b={} dir={} threads={} schedule={} strategy={} algorithm={} \
-                 fft={} seconds={:.6e}",
+                 fft={} seconds={:.6e} simd={}",
                 k.bandwidth,
                 k.direction.name(),
                 k.threads,
@@ -337,7 +345,8 @@ impl WisdomStore {
                 e.strategy.name(),
                 algorithm_name(e.algorithm),
                 fft_engine_name(e.fft_engine),
-                e.seconds
+                e.seconds,
+                e.simd.name()
             ));
         }
         // Write-then-rename so a crash mid-write never corrupts the store.
@@ -426,6 +435,11 @@ fn parse_file(
         let algo_s = get("algorithm")?;
         let fft_s = get("fft")?;
         let secs_s = get("seconds")?;
+        // Optional: absent in stores written before the SIMD axis.
+        let simd = match fields.get("simd") {
+            Some(s) => SimdPolicy::parse(s).map_err(|_| bad("simd", s))?,
+            None => SimdPolicy::Auto,
+        };
         let key = WisdomKey {
             bandwidth: b_s.parse().map_err(|_| bad("b", b_s))?,
             direction: TuneDirection::parse(dir_s).ok_or_else(|| bad("dir", dir_s))?,
@@ -437,6 +451,7 @@ fn parse_file(
                 .ok_or_else(|| bad("strategy", strat_s))?,
             algorithm: parse_algorithm(algo_s).map_err(|_| bad("algorithm", algo_s))?,
             fft_engine: parse_fft_engine(fft_s).map_err(|_| bad("fft", fft_s))?,
+            simd,
             seconds: secs_s
                 .parse::<f64>()
                 .ok()
@@ -466,6 +481,7 @@ mod tests {
             strategy: PartitionStrategy::SigmaClustered,
             algorithm: DwtAlgorithm::MatVec,
             fft_engine: FftEngine::Radix2Baseline,
+            simd: SimdPolicy::Scalar,
             seconds,
         }
     }
@@ -554,6 +570,34 @@ mod tests {
         let reopened = WisdomStore::open(&path);
         // Not a fallback — a clean miss, prompting re-measurement.
         assert!(matches!(reopened.lookup(key(8)), WisdomLookup::Miss));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pre_simd_entries_parse_with_auto_default() {
+        let path = temp_path("presimd");
+        let _ = std::fs::remove_file(&path);
+        // Write a store under the current fingerprint, then strip the
+        // simd= fields to imitate a file from a pre-SIMD release.
+        let store = WisdomStore::open(&path);
+        store.record(key(8), entry(1e-3));
+        drop(store);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let patched: Vec<String> = text
+            .lines()
+            .map(|l| {
+                l.split_whitespace()
+                    .filter(|tok| !tok.starts_with("simd="))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            })
+            .collect();
+        std::fs::write(&path, patched.join("\n")).unwrap();
+        let reopened = WisdomStore::open(&path);
+        match reopened.lookup(key(8)) {
+            WisdomLookup::Hit(e) => assert_eq!(e.simd, SimdPolicy::Auto),
+            other => panic!("expected hit on pre-simd file, got {other:?}"),
+        }
         let _ = std::fs::remove_file(&path);
     }
 

@@ -164,6 +164,9 @@ pub struct DdComplex {
     pub im: Dd,
 }
 
+// SAFETY: four f64s, no drop glue, any bit pattern valid.
+unsafe impl crate::util::Pod for DdComplex {}
+
 impl DdComplex {
     pub const ZERO: DdComplex = DdComplex {
         re: Dd::ZERO,

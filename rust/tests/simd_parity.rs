@@ -1,0 +1,120 @@
+//! SIMD-vs-scalar parity suite (PR 7 acceptance): every ISA backend the
+//! host supports must agree with the scalar baseline to ≤ 1e-12 across
+//! bandwidths (including a non-power-of-two), both directions, both DWT
+//! dataflows, and both Wigner sources; plus dispatch regressions — the
+//! `Scalar` policy resolves to scalar kernels everywhere, `Force*`
+//! policies fail typed on unsupported hosts, and `detect(force_scalar)`
+//! honors the `SO3FT_FORCE_SCALAR` escape hatch.
+
+use so3ft::dwt::tables::WignerStorage;
+use so3ft::dwt::DwtAlgorithm;
+use so3ft::error::Error;
+use so3ft::simd::{avx2_supported, detect, neon_supported, SimdIsa, SimdPolicy};
+use so3ft::so3::coeffs::So3Coeffs;
+use so3ft::transform::So3Plan;
+
+fn plan(
+    b: usize,
+    policy: SimdPolicy,
+    algorithm: DwtAlgorithm,
+    storage: WignerStorage,
+) -> So3Plan {
+    So3Plan::builder(b)
+        .simd(policy)
+        .algorithm(algorithm)
+        .storage(storage)
+        .allow_any_bandwidth()
+        .build()
+        .unwrap()
+}
+
+/// Every non-scalar policy the host can actually run.
+fn host_vector_policies() -> Vec<SimdPolicy> {
+    let mut v = vec![SimdPolicy::Auto];
+    if avx2_supported() {
+        v.push(SimdPolicy::ForceAvx2);
+    }
+    if neon_supported() {
+        v.push(SimdPolicy::ForceNeon);
+    }
+    v
+}
+
+/// The headline acceptance matrix: every supported backend vs scalar at
+/// b ∈ {1, 8, 13, 16, 32} (13 exercises the non-power-of-two tail
+/// lanes) × both directions × both DWT dataflows × both Wigner sources.
+#[test]
+fn every_backend_matches_scalar_across_the_matrix() {
+    for b in [1usize, 8, 13, 16, 32] {
+        let coeffs = So3Coeffs::random(b, 0x51D0 + b as u64);
+        for algorithm in [DwtAlgorithm::MatVecFolded, DwtAlgorithm::MatVec] {
+            for storage in [WignerStorage::Precomputed, WignerStorage::OnTheFly] {
+                let scalar = plan(b, SimdPolicy::Scalar, algorithm, storage);
+                let g_scalar = scalar.inverse(&coeffs).unwrap();
+                let c_scalar = scalar.forward(&g_scalar).unwrap();
+                for policy in host_vector_policies() {
+                    let vector = plan(b, policy, algorithm, storage);
+                    let g_vec = vector.inverse(&coeffs).unwrap();
+                    let inv_err = g_scalar.max_abs_error(&g_vec);
+                    assert!(
+                        inv_err < 1e-12,
+                        "inverse b={b} {policy:?} {algorithm:?} {storage:?}: {inv_err:.3e}"
+                    );
+                    let c_vec = vector.forward(&g_scalar).unwrap();
+                    let fwd_err = c_scalar.max_abs_error(&c_vec);
+                    assert!(
+                        fwd_err < 1e-12,
+                        "forward b={b} {policy:?} {algorithm:?} {storage:?}: {fwd_err:.3e}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `simd = scalar` must resolve to scalar kernels on every host — the
+/// measurable-baseline contract the benches and `SO3FT_FORCE_SCALAR`
+/// depend on.
+#[test]
+fn scalar_policy_always_resolves_scalar() {
+    let p = So3Plan::builder(8).simd(SimdPolicy::Scalar).build().unwrap();
+    assert_eq!(p.simd_isa(), SimdIsa::Scalar);
+    assert_eq!(p.config().simd, SimdPolicy::Scalar);
+    // And Auto resolves to whatever detection found, consistently.
+    let auto = So3Plan::builder(8).simd(SimdPolicy::Auto).build().unwrap();
+    assert_eq!(auto.simd_isa(), so3ft::simd::detected_isa());
+}
+
+/// The `force_scalar` leg of detection (what `SO3FT_FORCE_SCALAR=1`
+/// feeds) pins the ISA to scalar regardless of the host; without it,
+/// detection reports a host-supported ISA.
+#[test]
+fn forced_scalar_detection_overrides_the_host() {
+    assert_eq!(detect(true), SimdIsa::Scalar);
+    let free = detect(false);
+    match free {
+        SimdIsa::Scalar => {}
+        SimdIsa::Avx2 => assert!(avx2_supported()),
+        SimdIsa::Neon => assert!(neon_supported()),
+    }
+}
+
+/// A `Force*` policy for an ISA the host lacks is a typed config error
+/// at plan build, never a silent fallback.
+#[test]
+fn impossible_force_policy_is_a_typed_build_error() {
+    let impossible = if cfg!(target_arch = "x86_64") {
+        SimdPolicy::ForceNeon
+    } else {
+        SimdPolicy::ForceAvx2
+    };
+    let err = So3Plan::builder(8)
+        .simd(impossible)
+        .build()
+        .map(|_| ())
+        .expect_err("force policy for a missing ISA must fail the build");
+    match err {
+        Error::Config(msg) => assert!(msg.contains("simd"), "{msg}"),
+        other => panic!("expected Error::Config, got {other:?}"),
+    }
+}
