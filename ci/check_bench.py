@@ -6,7 +6,10 @@ Compares the per-stage wall times in a freshly generated BENCH_fft.json
 checked-in ci/bench_baseline.json. A stage regresses when its observed
 time exceeds `baseline * threshold` (threshold lives in the baseline's
 meta; deliberately generous — this is a smoke-level net against
-order-of-magnitude regressions, not a microbenchmark).
+order-of-magnitude regressions, not a microbenchmark). Byte-counting
+stages (`*_bytes`, e.g. the large-B sweep's ledger peak) instead use a
+fixed tight BYTES_HEADROOM: memory footprints are deterministic, so the
+gate pins them closely.
 
 Usage:
   check_bench.py BENCH_fft.json ci/bench_baseline.json [options]
@@ -34,14 +37,42 @@ Exit codes: 0 ok, 1 regression/missing data, 2 usage.
 import json
 import sys
 
-# Gated stage keys. All are "lower is better" wall times: transform
-# stages from e2e_benchmark, plus the serve-bench service records
-# (p99_s = per-bandwidth job latency tail, per_job_s = mixed-traffic
-# wall seconds per job — the inverse of throughput, so a throughput
-# regression raises it past the ceiling) and the plan_build wisdom
-# records (overhead_s = store-cached Measure build minus Estimate build
-# — a cache hit must stay within a small constant of Estimate).
-STAGES = ("fft_s", "transpose_s", "dwt_s", "total_s", "p99_s", "per_job_s", "overhead_s")
+# Gated stage keys. All are "lower is better": transform wall times
+# from e2e_benchmark, the serve-bench service records (p99_s =
+# per-bandwidth job latency tail, per_job_s = mixed-traffic wall seconds
+# per job — the inverse of throughput, so a throughput regression raises
+# it past the ceiling), the plan_build wisdom records (overhead_s =
+# store-cached Measure build minus Estimate build — a cache hit must
+# stay within a small constant of Estimate), and the large-B sweep's
+# ledger peak memory (peak_bytes — streamed execution must stay below
+# the full-materialization footprint, see large_b_peak_bytes).
+STAGES = (
+    "fft_s",
+    "transpose_s",
+    "dwt_s",
+    "total_s",
+    "p99_s",
+    "per_job_s",
+    "overhead_s",
+    "peak_bytes",
+)
+
+# Byte-counting stages bypass the baseline meta's wall-time threshold:
+# ledger footprints are deterministic (no shared-runner jitter), so a
+# tight fixed 10% covers allocator/layout drift without letting a 2x
+# memory blow-up pass the gate.
+BYTES_HEADROOM = 1.1
+
+
+def is_bytes(stage):
+    return stage.endswith("_bytes")
+
+
+def fmt_val(stage, v):
+    """One stage value for the delta tables (MiB for byte stages)."""
+    if is_bytes(stage):
+        return f"{v / (1 << 20):8.1f}Mi"
+    return f"{v:9.6f}s"
 
 
 def key(record):
@@ -73,7 +104,14 @@ def update_baseline(bench, base, base_path, headroom):
             continue
         for stage in STAGES:
             if stage in want and stage in got:
-                want[stage] = round(max(float(got[stage]) * headroom, UPDATE_FLOOR_S), 6)
+                if is_bytes(stage):
+                    # Deterministic footprints: fixed tight headroom, no
+                    # sub-ms jitter floor.
+                    want[stage] = int(float(got[stage]) * BYTES_HEADROOM)
+                else:
+                    want[stage] = round(
+                        max(float(got[stage]) * headroom, UPDATE_FLOOR_S), 6
+                    )
                 updated += 1
     with open(base_path, "w") as f:
         json.dump(base, f, indent=2)
@@ -150,7 +188,8 @@ def main(argv):
         for stage in STAGES:
             if stage not in want:
                 continue
-            allowed = want[stage] * threshold
+            stage_threshold = BYTES_HEADROOM if is_bytes(stage) else threshold
+            allowed = want[stage] * stage_threshold
             observed = got.get(stage)
             if observed is None:
                 failures.append(f"{fmt_key(k)}: stage {stage} missing from bench output")
@@ -161,8 +200,9 @@ def main(argv):
             rows.append((k, stage, want[stage], observed, ratio, status))
             if observed > allowed:
                 failures.append(
-                    f"{fmt_key(k)} {stage}: {observed:.6f}s > {allowed:.6f}s "
-                    f"(baseline {want[stage]:.6f}s x {threshold})"
+                    f"{fmt_key(k)} {stage}: {fmt_val(stage, observed).strip()} > "
+                    f"{fmt_val(stage, allowed).strip()} (baseline "
+                    f"{fmt_val(stage, want[stage]).strip()} x {stage_threshold})"
                 )
 
     # Per-stage delta table (vs baseline, not vs the threshold ceiling).
@@ -171,8 +211,8 @@ def main(argv):
     print("-" * len(header))
     for k, stage, want_v, got_v, ratio, status in rows:
         print(
-            f"{fmt_key(k):44s} {stage:12s} {want_v:9.6f}s {got_v:9.6f}s "
-            f"{ratio:7.2f}x {status}"
+            f"{fmt_key(k):44s} {stage:12s} {fmt_val(stage, want_v)} "
+            f"{fmt_val(stage, got_v)} {ratio:7.2f}x {status}"
         )
 
     if checked == 0:
@@ -183,13 +223,17 @@ def main(argv):
         try:
             with open(summary_path, "a") as f:
                 f.write("## bench-smoke gate: " + ("passed" if verdict_ok else "FAILED") + "\n\n")
-                f.write(f"threshold: observed ≤ baseline × {threshold}\n\n")
+                f.write(
+                    f"threshold: observed ≤ baseline × {threshold} "
+                    f"(byte stages × {BYTES_HEADROOM})\n\n"
+                )
                 f.write("| record | stage | baseline | observed | delta | status |\n")
                 f.write("|---|---|---:|---:|---:|---|\n")
                 for k, stage, want_v, got_v, ratio, status in rows:
                     mark = "✅" if status == "ok" else "❌"
                     f.write(
-                        f"| `{fmt_key(k)}` | {stage} | {want_v:.6f}s | {got_v:.6f}s "
+                        f"| `{fmt_key(k)}` | {stage} | {fmt_val(stage, want_v).strip()} "
+                        f"| {fmt_val(stage, got_v).strip()} "
                         f"| {ratio:.2f}x | {mark} {status} |\n"
                     )
                 if failures:

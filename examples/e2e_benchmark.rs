@@ -29,9 +29,22 @@
 //! comparison — the repo's tracked perf trajectory across PRs (see
 //! docs/PERF.md).
 //!
+//! With `--large-b` the driver instead runs ONLY the large-bandwidth
+//! sweep toward the paper's headline B=512: forward + inverse at
+//! `SO3FT_LARGE_BS` (default `128 256 512`), single- vs
+//! `SO3FT_LARGE_THREADS` threads, under the `SO3FT_LARGE_BUDGET_MB`
+//! memory budget (`auto` | `unlimited` | MiB; tight budgets stream
+//! Wigner degrees instead of materializing full tables). It emits
+//! `large_b_forward` / `large_b_inverse` / `large_b_speedup` /
+//! `large_b_peak_bytes` records — the peak-bytes record is gated in CI
+//! against the full-materialization footprint, the speedup record is
+//! informational.
+//!
 //! ```sh
 //! cargo run --release --example e2e_benchmark
 //! SO3FT_E2E_BS="8 16 32" cargo run --release --example e2e_benchmark
+//! SO3FT_LARGE_BS=128 SO3FT_LARGE_BUDGET_MB=640 \
+//!   cargo run --release --example e2e_benchmark -- --large-b
 //! ```
 
 use std::cell::RefCell;
@@ -112,7 +125,175 @@ fn fft_stage_sweep(
     t0.elapsed().as_secs_f64()
 }
 
+/// The `--large-b` sweep: full transforms at the paper's headline
+/// bandwidths under a [`so3ft::MemoryBudget`], reporting wall time,
+/// thread speedup/efficiency, and ledger/RSS peak memory. Runs instead
+/// of the regular driver (the regular sweeps would not fit alongside
+/// the large-B workspaces in one process).
+fn run_large_b() -> so3ft::Result<()> {
+    use so3ft::bench_util::append_json_records;
+    use so3ft::coordinator::{workspace_bytes, MemoryBudget};
+    use so3ft::dwt::tables::{WignerStorage, WignerTables};
+    use so3ft::so3::sampling::So3Grid;
+    use so3ft::util::ledger;
+
+    let bandwidths = env_usize_list("SO3FT_LARGE_BS", &[128, 256, 512]);
+    let threads_hi = env_usize(
+        "SO3FT_LARGE_THREADS",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+    )
+    .max(1);
+    let reps = env_usize("SO3FT_LARGE_REPS", 1).max(1);
+    let budget = match std::env::var("SO3FT_LARGE_BUDGET_MB") {
+        Ok(s) => MemoryBudget::parse(&s).ok_or_else(|| {
+            so3ft::Error::Config(format!(
+                "bad SO3FT_LARGE_BUDGET_MB {s:?} (auto|unlimited|bytes:N|MiB)"
+            ))
+        })?,
+        Err(_) => MemoryBudget::Auto,
+    };
+    let mib = |x: usize| x as f64 / (1 << 20) as f64;
+
+    println!("=== so3ft large-B sweep (paper headline B=512) ===");
+    println!(
+        "bandwidths: {bandwidths:?}  threads: 1 vs {threads_hi}  reps: {reps}  \
+         budget: {budget}\n"
+    );
+
+    let mut records: Vec<String> = Vec::new();
+    let mut table = Table::new(&[
+        "B", "threads", "engine", "iFSOFT", "FSOFT", "speedup", "eff", "peak MiB", "rel err",
+    ]);
+    let thread_counts: Vec<usize> = if threads_hi > 1 { vec![1, threads_hi] } else { vec![1] };
+
+    for &b in &bandwidths {
+        let full_bytes = WignerTables::full_bytes(b) + workspace_bytes(b);
+        // t1/tN inverse+forward totals for the speedup record.
+        let mut totals = [f64::NAN; 2];
+        let mut sweep_peak = 0usize;
+        let mut engine = "precomputed";
+        for (ti, &threads) in thread_counts.iter().enumerate() {
+            let plan = So3Plan::builder(b)
+                .threads(threads)
+                .storage(WignerStorage::Precomputed)
+                .memory_budget(budget)
+                .allow_any_bandwidth()
+                .build()?;
+            let report = plan.memory_report();
+            engine = if report.streamed { "streamed" } else { "precomputed" };
+            if ti == 0 {
+                println!(
+                    "--- bandwidth {b}: tables {:.1} MiB (full {:.1} MiB), \
+                     workspace {:.1} MiB, {engine} ---",
+                    mib(report.table_bytes),
+                    mib(report.table_bytes_full),
+                    mib(report.workspace_bytes),
+                );
+            }
+            let coeffs = So3Coeffs::random(b, 0xB16 + b as u64);
+            let mut grid = So3Grid::zeros(b)?;
+            let mut back = So3Coeffs::zeros(b);
+            let mut ws = plan.make_workspace();
+            let mut best_inv = f64::INFINITY;
+            let mut best_fwd = f64::INFINITY;
+            let mut peak = 0usize;
+            for _ in 0..reps {
+                let istats = plan.inverse_into(&coeffs, &mut grid, &mut ws)?;
+                let fstats = plan.forward_into(&grid, &mut back, &mut ws)?;
+                best_inv = best_inv.min(istats.total.as_secs_f64());
+                best_fwd = best_fwd.min(fstats.total.as_secs_f64());
+                peak = peak.max(istats.peak_bytes).max(fstats.peak_bytes);
+            }
+            let rel_err = coeffs.max_rel_error(&back);
+            totals[ti] = best_inv + best_fwd;
+            sweep_peak = sweep_peak.max(peak);
+            for (kind, total_s) in
+                [("large_b_inverse", best_inv), ("large_b_forward", best_fwd)]
+            {
+                records.push(format!(
+                    "{{\"kind\": \"{kind}\", \"b\": {b}, \"threads\": {threads}, \
+                     \"engine\": \"{engine}\", \"total_s\": {total_s:.6e}, \
+                     \"peak_bytes\": {peak}}}"
+                ));
+            }
+            let speedup = totals[0] / totals[ti];
+            table.row(&[
+                b.to_string(),
+                threads.to_string(),
+                engine.to_string(),
+                fmt_seconds(best_inv),
+                fmt_seconds(best_fwd),
+                format!("{speedup:.2}x"),
+                format!("{:.2}", speedup / threads as f64),
+                format!("{:.1}", mib(peak)),
+                // Printed, not asserted: large-B roundtrip accuracy is
+                // tracked here and pinned by the tier-1 suite at small B.
+                format!("{rel_err:.1e}"),
+            ]);
+            // Plan (and its tables) drop here so the ledger drains
+            // between thread counts and bandwidths.
+        }
+        if thread_counts.len() > 1 {
+            let speedup = totals[0] / totals[1];
+            records.push(format!(
+                "{{\"kind\": \"large_b_speedup\", \"b\": {b}, \"threads\": {threads_hi}, \
+                 \"engine\": \"{engine}\", \"speedup\": {speedup:.3}, \
+                 \"efficiency\": {:.3}}}",
+                speedup / threads_hi as f64
+            ));
+        }
+        let ratio = sweep_peak as f64 / full_bytes as f64;
+        let rss = ledger::peak_rss_bytes()
+            .map(|r| format!(", \"peak_rss_bytes\": {r}"))
+            .unwrap_or_default();
+        records.push(format!(
+            "{{\"kind\": \"large_b_peak_bytes\", \"b\": {b}, \"threads\": {threads_hi}, \
+             \"engine\": \"{engine}\", \"peak_bytes\": {sweep_peak}, \
+             \"full_materialization_bytes\": {full_bytes}, \"ratio\": {ratio:.3}{rss}}}"
+        ));
+        println!(
+            "  peak {:.1} MiB vs full materialization {:.1} MiB (ratio {ratio:.2})\n",
+            mib(sweep_peak),
+            mib(full_bytes),
+        );
+    }
+
+    println!("=== summary ===");
+    table.print();
+
+    let json_path =
+        std::env::var("SO3FT_BENCH_JSON").unwrap_or_else(|_| "BENCH_fft.json".to_string());
+    let result = if std::path::Path::new(&json_path).exists() {
+        append_json_records(&json_path, &records)
+    } else {
+        let meta = [
+            ("bench", "\"BENCH_fft_large_b\"".to_string()),
+            ("crate_version", format!("\"{}\"", env!("CARGO_PKG_VERSION"))),
+            ("threads_max", threads_hi.to_string()),
+            ("memory_budget", format!("\"{budget}\"")),
+            (
+                "note",
+                "\"large_b_* records come from the --large-b sweep: full \
+                 inverse+forward transforms under a MemoryBudget, best-of-reps \
+                 wall time and ledger peak_bytes; large_b_peak_bytes compares \
+                 the measured peak against the full-materialization footprint \
+                 (Wigner tables + workspace)\""
+                    .to_string(),
+            ),
+        ];
+        write_json_report(&json_path, &meta, &records)
+    };
+    match result {
+        Ok(()) => println!("\nwrote {} ({} records)", json_path, records.len()),
+        Err(e) => eprintln!("\nWARNING: could not write {json_path}: {e}"),
+    }
+    Ok(())
+}
+
 fn main() -> so3ft::Result<()> {
+    if std::env::args().any(|a| a == "--large-b") {
+        return run_large_b();
+    }
     let bandwidths = env_usize_list("SO3FT_E2E_BS", &[8, 16, 32]);
     let params = MachineParams::opteron_like();
     let registry = ArtifactRegistry::default_location();

@@ -38,6 +38,8 @@ options: --config FILE, --bandwidth/-b B, --threads/-t N,
   --strategy geometric|sigma|nosym,
   --algorithm matvec-folded|matvec|clenshaw,
   --storage precomputed|onthefly|auto[:mb], --precision double|extended,
+  --memory-budget auto|unlimited|bytes:N|MiB (plan memory cap; tight
+  caps stream Wigner degrees instead of materializing full tables),
   --simd auto|scalar|force-avx2|force-neon (kernel ISA dispatch),
   --pool owned|global (pair global with --threads N; width is
   min(threads, pool)), --seed N, --xla, --artifacts DIR, --cores LIST,
@@ -100,6 +102,22 @@ pub fn info(inv: &Invocation) -> Result<()> {
         "  wigner tables:   {:.1} MiB when precomputed",
         (crate::dwt::tables::WignerTables::storage_len(b) * 8) as f64 / (1 << 20) as f64
     );
+    let mib = |x: usize| x as f64 / (1 << 20) as f64;
+    let ws_bytes = crate::coordinator::workspace_bytes(b);
+    println!("  workspace:       {:.1} MiB (FFT cube + S-matrix)", mib(ws_bytes));
+    let budget = inv.run.exec.memory;
+    let full = crate::dwt::tables::WignerTables::full_bytes(b);
+    match budget.table_budget_bytes(b) {
+        Ok(table_budget) => println!(
+            "  memory budget:   {budget} -> {}",
+            if table_budget.is_some_and(|t| full > t) {
+                "streamed Wigner tables (per-degree on-the-fly fallback)"
+            } else {
+                "fully materialized Wigner tables"
+            }
+        ),
+        Err(e) => println!("  memory budget:   {budget} -> infeasible ({e})"),
+    }
     println!(
         "  weight checksum: {:.6e} (expect {:.6e})",
         weights.iter().sum::<f64>(),

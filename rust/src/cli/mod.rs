@@ -21,6 +21,7 @@
 //!   --strategy <spec>         geometric | sigma | nosym
 //!   --algorithm <spec>        matvec-folded | matvec | clenshaw
 //!   --storage <spec>          precomputed | onthefly | auto[:mb]
+//!   --memory-budget <spec>    auto | unlimited | bytes:N | <MiB>
 //!   --precision <spec>        double | extended
 //!   --simd <spec>             auto | scalar | force-avx2 | force-neon
 //!   --pool <spec>             owned | global (persistent worker pool)
@@ -52,7 +53,7 @@
 pub mod commands;
 
 use crate::config::{parse_algorithm, parse_precision, parse_rigor, parse_storage, RunConfig};
-use crate::coordinator::PartitionStrategy;
+use crate::coordinator::{MemoryBudget, PartitionStrategy};
 use crate::error::{Error, Result};
 use crate::pool::{PoolSpec, Schedule};
 use crate::simd::SimdPolicy;
@@ -188,6 +189,15 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
             "--storage" => {
                 let v = need(args, i, a)?;
                 run.exec.storage = parse_storage(&v, run.bandwidth)?;
+                i += 1;
+            }
+            "--memory-budget" => {
+                let v = need(args, i, a)?;
+                run.exec.memory = MemoryBudget::parse(&v).ok_or_else(|| {
+                    Error::Config(format!(
+                        "bad --memory-budget {v:?} (auto|unlimited|bytes:N|MiB)"
+                    ))
+                })?;
                 i += 1;
             }
             "--precision" => {
@@ -391,6 +401,22 @@ mod tests {
         assert_eq!(inv.run.exec.simd, SimdPolicy::Auto);
         assert!(parse_args(&argv("roundtrip --simd avx512")).is_err());
         assert!(parse_args(&argv("roundtrip --simd")).is_err());
+    }
+
+    #[test]
+    fn memory_budget_flag_parses_and_rejects_bad_values() {
+        let inv = parse_args(&argv("roundtrip -b 8 --memory-budget unlimited")).unwrap();
+        assert_eq!(inv.run.exec.memory, MemoryBudget::Unlimited);
+        // A bare integer is MiB.
+        let inv = parse_args(&argv("forward --memory-budget 512")).unwrap();
+        assert_eq!(inv.run.exec.memory, MemoryBudget::Bytes(512 << 20));
+        let inv = parse_args(&argv("forward --memory-budget bytes:4096")).unwrap();
+        assert_eq!(inv.run.exec.memory, MemoryBudget::Bytes(4096));
+        // Default is auto.
+        let inv = parse_args(&argv("roundtrip")).unwrap();
+        assert_eq!(inv.run.exec.memory, MemoryBudget::Auto);
+        assert!(parse_args(&argv("roundtrip --memory-budget lots")).is_err());
+        assert!(parse_args(&argv("roundtrip --memory-budget")).is_err());
     }
 
     #[test]

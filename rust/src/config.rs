@@ -18,6 +18,9 @@
 //! real_input = false          # conjugate-even forward FFT stage
 //! pool = "owned"              # owned | global (persistent worker pool)
 //!
+//! [memory]
+//! budget = "auto"             # auto | unlimited | bytes:N | <MiB>
+//!
 //! [service]
 //! threads = 4                 # worker-pool size (0 = machine parallelism)
 //! batch_window_us = 200       # micro-batch window, microseconds (0 = off)
@@ -40,7 +43,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use crate::coordinator::{ExecutorConfig, PartitionStrategy};
+use crate::coordinator::{ExecutorConfig, MemoryBudget, PartitionStrategy};
 use crate::dwt::tables::{WignerStorage, WignerTables};
 use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::{Error, Result};
@@ -288,6 +291,7 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
             "pool",
         ],
     ),
+    ("memory", &["budget"]),
     (
         "service",
         &["threads", "batch_window_us", "registry_budget_mb", "max_batch"],
@@ -307,8 +311,8 @@ impl RunConfig {
                 .find(|(name, _)| name == section)
                 .ok_or_else(|| {
                     Error::Config(format!(
-                        "unknown section [{section}] (known: transform, service, \
-                         runtime, run, wisdom)"
+                        "unknown section [{section}] (known: transform, memory, \
+                         service, runtime, run, wisdom)"
                     ))
                 })?;
             for key in keys.keys() {
@@ -356,6 +360,13 @@ impl RunConfig {
         if let Some(s) = p.get("transform", "pool") {
             cfg.exec.pool = PoolSpec::parse(s)
                 .ok_or_else(|| Error::Config(format!("bad pool {s:?}")))?;
+        }
+        if let Some(s) = p.get("memory", "budget") {
+            cfg.exec.memory = MemoryBudget::parse(s).ok_or_else(|| {
+                Error::Config(format!(
+                    "[memory] budget: expected auto|unlimited|bytes:N|MiB, got {s:?}"
+                ))
+            })?;
         }
         if let Some(t) = p.get_usize("service", "threads")? {
             cfg.service.threads = t;
@@ -437,6 +448,8 @@ impl RunConfig {
         out.push_str(&format!("simd = \"{}\"\n", self.exec.simd.name()));
         out.push_str(&format!("real_input = {}\n", self.exec.real_input));
         out.push_str(&format!("pool = \"{pool}\"\n"));
+        out.push_str("\n[memory]\n");
+        out.push_str(&format!("budget = \"{}\"\n", self.exec.memory.name()));
         out.push_str("\n[service]\n");
         out.push_str(&format!("threads = {}\n", self.service.threads));
         out.push_str(&format!(
@@ -484,6 +497,9 @@ simd = "scalar"
 real_input = true
 pool = "global"
 
+[memory]
+budget = "bytes:123456789"
+
 [service]
 threads = 3
 batch_window_us = 250
@@ -516,6 +532,7 @@ time_budget_ms = 125
         assert_eq!(cfg.exec.simd, SimdPolicy::Scalar);
         assert!(cfg.exec.real_input);
         assert!(matches!(cfg.exec.pool, PoolSpec::Global));
+        assert_eq!(cfg.exec.memory, MemoryBudget::Bytes(123456789));
         assert_eq!(
             cfg.service,
             ServiceSettings {
@@ -552,6 +569,7 @@ time_budget_ms = 125
         assert_eq!(a.exec.simd, b.exec.simd);
         assert_eq!(a.exec.real_input, b.exec.real_input);
         assert_eq!(a.exec.pool.name(), b.exec.pool.name());
+        assert_eq!(a.exec.memory, b.exec.memory);
         assert_eq!(a.service, b.service);
         assert_eq!(a.wisdom, b.wisdom);
         assert_eq!(a.artifacts_dir, b.artifacts_dir);
@@ -713,6 +731,31 @@ time_budget_ms = 125
             FftEngine::Radix2Baseline
         );
         assert!(parse_fft_engine("fftw").is_err());
+    }
+
+    #[test]
+    fn memory_budget_key_parses_and_defaults() {
+        let cfg = RunConfig::from_parsed(&ParsedConfig::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.exec.memory, MemoryBudget::Auto);
+        let cfg = RunConfig::from_parsed(
+            &ParsedConfig::parse("[memory]\nbudget = \"unlimited\"").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.exec.memory, MemoryBudget::Unlimited);
+        // A bare integer is MiB, matching the CLI flag.
+        let cfg = RunConfig::from_parsed(
+            &ParsedConfig::parse("[memory]\nbudget = \"64\"").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.exec.memory, MemoryBudget::Bytes(64 << 20));
+        assert!(RunConfig::from_parsed(
+            &ParsedConfig::parse("[memory]\nbudget = \"lots\"").unwrap()
+        )
+        .is_err());
+        assert!(RunConfig::from_parsed(
+            &ParsedConfig::parse("[memory]\ncap = 1").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -102,6 +102,9 @@ pub struct ExecutorConfig {
     /// config errors on hosts without that ISA. Resolved once at plan
     /// construction — never re-detected per call.
     pub simd: SimdPolicy,
+    /// Memory budget, resolved once at plan build into table
+    /// materialization / streaming choices (see [`MemoryBudget`]).
+    pub memory: MemoryBudget,
 }
 
 impl Default for ExecutorConfig {
@@ -117,7 +120,136 @@ impl Default for ExecutorConfig {
             real_input: false,
             pool: PoolSpec::Owned,
             simd: SimdPolicy::Auto,
+            memory: MemoryBudget::Auto,
         }
+    }
+}
+
+/// Soft table cap applied by [`MemoryBudget::Auto`]: 2 GiB, matching the
+/// historical `storage = "auto"` default of 2048 MiB.
+const AUTO_TABLE_CAP: usize = 2048 << 20;
+
+/// Typed memory budget for one plan — the single knob that replaces the
+/// scattered `WignerStorage::auto` byte heuristics (ISSUE 8).
+///
+/// Resolution happens once at plan build ([`Executor::new`]):
+///
+/// * [`MemoryBudget::Auto`] (default) — tables are materialized up to a
+///   soft 2 GiB cap and streamed beyond it; never errors. The transform
+///   workspace is *not* counted (it is irreducible, and Auto preserves
+///   the pre-0.9 behaviour at every bandwidth).
+/// * [`MemoryBudget::Unlimited`] — full tables regardless of size (the
+///   paper's benchmarked setup).
+/// * [`MemoryBudget::Bytes`] — a hard cap over workspace *plus* tables:
+///   tables are partially materialized to fit
+///   ([`crate::dwt::tables::WignerTables::build_partial`]), and a cap the
+///   workspace alone exceeds is a typed [`Error::BudgetExceeded`], not a
+///   silent fallback.
+///
+/// The outcome is inspectable via [`Executor::memory_report`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum MemoryBudget {
+    /// Table-only soft cap of 2 GiB; streams beyond it, never errors.
+    #[default]
+    Auto,
+    /// No cap: full tables at any bandwidth.
+    Unlimited,
+    /// Hard cap in bytes over workspace + tables.
+    Bytes(usize),
+}
+
+impl MemoryBudget {
+    /// Parse the config/CLI surface: `auto`, `unlimited`, `bytes:<n>`
+    /// (exact bytes), or a bare integer meaning MiB.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        match s {
+            "auto" => Some(MemoryBudget::Auto),
+            "unlimited" => Some(MemoryBudget::Unlimited),
+            _ => {
+                if let Some(n) = s.strip_prefix("bytes:") {
+                    n.parse::<usize>().ok().map(MemoryBudget::Bytes)
+                } else {
+                    s.parse::<usize>()
+                        .ok()
+                        .map(|mib| MemoryBudget::Bytes(mib << 20))
+                }
+            }
+        }
+    }
+
+    /// Canonical text form — round-trips through [`Self::parse`]; used by
+    /// the config serializer and the wisdom store's `mem=` token.
+    pub fn name(&self) -> String {
+        match self {
+            MemoryBudget::Auto => "auto".into(),
+            MemoryBudget::Unlimited => "unlimited".into(),
+            MemoryBudget::Bytes(n) => format!("bytes:{n}"),
+        }
+    }
+
+    /// Resolve to a table byte budget for bandwidth `b`: `None` means
+    /// "no cap" (build full tables); `Some(t)` caps the table set at `t`
+    /// bytes. [`MemoryBudget::Bytes`] charges the irreducible workspace
+    /// first and errors if the cap cannot even hold that.
+    pub fn table_budget_bytes(&self, b: usize) -> Result<Option<usize>> {
+        match *self {
+            MemoryBudget::Unlimited => Ok(None),
+            MemoryBudget::Auto => Ok(Some(AUTO_TABLE_CAP)),
+            MemoryBudget::Bytes(cap) => {
+                let ws = workspace_bytes(b);
+                if ws > cap {
+                    Err(Error::BudgetExceeded {
+                        required: ws,
+                        budget: cap,
+                        context: "irreducible transform workspace",
+                    })
+                } else {
+                    Ok(Some(cap - ws))
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for MemoryBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+/// Bytes of the irreducible per-transform workspace at bandwidth `b`:
+/// the (2B)³ staging slab plus the (2B−1)²×2B S-matrix, both complex.
+pub fn workspace_bytes(b: usize) -> usize {
+    let n = 2 * b;
+    let o = 2 * b - 1;
+    (n * n * n + o * o * n) * std::mem::size_of::<Complex64>()
+}
+
+/// How a plan's [`MemoryBudget`] resolved — predicted footprint versus
+/// budget, surfaced by [`Executor::memory_report`] /
+/// `So3Plan::memory_report`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryReport {
+    /// The budget the plan was built under.
+    pub budget: MemoryBudget,
+    /// Bytes of Wigner table actually materialized (0 when fully
+    /// streamed).
+    pub table_bytes: usize,
+    /// Bytes a *complete* table set would take at this bandwidth.
+    pub table_bytes_full: usize,
+    /// Irreducible per-workspace scratch ([`workspace_bytes`]).
+    pub workspace_bytes: usize,
+    /// Whether any base pair is streamed from the recurrence instead of
+    /// read from tables.
+    pub streamed: bool,
+}
+
+impl MemoryReport {
+    /// Predicted steady-state bytes: materialized tables plus one
+    /// workspace.
+    pub fn total_bytes(&self) -> usize {
+        self.table_bytes + self.workspace_bytes
     }
 }
 
@@ -151,6 +283,13 @@ pub struct TransformStats {
     pub total: Duration,
     /// Region stats of the DWT loop (imbalance diagnostics).
     pub dwt_region: Option<RegionStats>,
+    /// Peak ledgered bytes during this transform (`util::ledger`):
+    /// live tables + workspaces at the high-water mark, rebased at
+    /// transform start so it reflects this run's steady state.
+    /// Best-effort under concurrency — the ledger is process-wide, so
+    /// transforms running simultaneously on other threads inflate each
+    /// other's peaks.
+    pub peak_bytes: usize,
 }
 
 /// Per-stage alias for [`TransformStats`] — the name the perf tooling
@@ -250,6 +389,9 @@ pub struct Workspace {
     work: Vec<Complex64>,
     /// The intermediate S-matrix shared by both directions.
     smat: SMatrix,
+    /// Charges this workspace's footprint against the process allocation
+    /// ledger (`util::ledger`) for its lifetime.
+    ledger: crate::util::ledger::LedgerSlot,
 }
 
 impl Workspace {
@@ -258,10 +400,16 @@ impl Workspace {
             return Err(Error::InvalidBandwidth(b));
         }
         let n = 2 * b;
+        let work = vec![Complex64::zero(); n * n * n];
+        let smat = SMatrix::zeros(b)?;
+        let ledger = crate::util::ledger::LedgerSlot::new(
+            (work.len() + smat.len()) * std::mem::size_of::<Complex64>(),
+        );
         Ok(Self {
             b,
-            work: vec![Complex64::zero(); n * n * n],
-            smat: SMatrix::zeros(b)?,
+            work,
+            smat,
+            ledger,
         })
     }
 
@@ -322,12 +470,22 @@ impl Executor {
         // waste — so no tables are built (table_bytes() reports 0).
         let folded_extended = config.algorithm == DwtAlgorithm::MatVecFolded
             && config.precision == Precision::Extended;
+        // Resolve the memory budget once: a Bytes cap the workspace alone
+        // exceeds is a typed error here, before any table is built.
+        let table_budget = config.memory.table_budget_bytes(b)?;
         let tables = match (config.storage, config.algorithm) {
             (
                 WignerStorage::Precomputed,
                 DwtAlgorithm::MatVec | DwtAlgorithm::MatVecFolded,
             ) if config.strategy != PartitionStrategy::NoSymmetry && !folded_extended => {
-                Some(WignerTables::build(b, &angles.betas))
+                Some(match table_budget {
+                    // Streamed large-B mode: materialize what fits, the
+                    // executor streams the rest per base pair.
+                    Some(budget) if WignerTables::full_bytes(b) > budget => {
+                        WignerTables::build_partial(b, &angles.betas, budget)
+                    }
+                    _ => WignerTables::build(b, &angles.betas),
+                })
             }
             _ => None,
         };
@@ -405,6 +563,23 @@ impl Executor {
     /// Memory held by precomputed Wigner tables (bytes).
     pub fn table_bytes(&self) -> usize {
         self.tables.as_ref().map_or(0, |t| t.bytes())
+    }
+
+    /// How this plan's [`MemoryBudget`] resolved: materialized table
+    /// bytes versus a full set, the irreducible workspace size, and
+    /// whether any base pair streams from the recurrence.
+    pub fn memory_report(&self) -> MemoryReport {
+        let (table_bytes, complete) = match &self.tables {
+            Some(t) => (t.bytes(), t.is_complete()),
+            None => (0, false),
+        };
+        MemoryReport {
+            budget: self.config.memory,
+            table_bytes,
+            table_bytes_full: WignerTables::full_bytes(self.b),
+            workspace_bytes: workspace_bytes(self.b),
+            streamed: !complete,
+        }
     }
 
     /// The instruction set the DWT/FFT hot kernels actually run with —
@@ -495,6 +670,10 @@ impl Executor {
         }
         self.check_workspace(ws)?;
         let t_total = Instant::now();
+        // Rebase the allocation ledger so the reported peak covers this
+        // run's steady state (live tables + workspaces), not process
+        // history.
+        crate::util::ledger::rebase_peak();
         let n = 2 * self.b;
         let mut stats = TransformStats::default();
 
@@ -537,11 +716,12 @@ impl Executor {
         }
         stats.fft = t0.elapsed();
 
-        // [TRN] gather into the S-matrix layout (contiguous j), cache
-        // blocked: one u-row per package; inside, (m'-tile × j-tile)
-        // blocking keeps reads sequential in v and write lines resident
-        // across the j tile (§Perf in EXPERIMENTS.md: ~3× over the naive
-        // strided gather).
+        // [TRN] gather into the S-matrix layout (contiguous j) via the
+        // cache-oblivious tiler: one u-row per package, each writing its
+        // o×n destination block through `transpose::gather_permuted`
+        // (recursive square-block split, unit-stride stores in the base
+        // case). Pure copies — bit-identical to any traversal order,
+        // pinned by tests/transpose_parity.rs.
         let t0 = Instant::now();
         let smat = &mut ws.smat;
         let o = SMatrix::orders(self.b);
@@ -550,25 +730,21 @@ impl Executor {
             let work_ref = &ws.work;
             let bins = &self.order_bins;
             self.run_region(o, Schedule::Dynamic { chunk: 1 }, |mi| {
-                const TJ: usize = 4;
-                const TP: usize = 32;
                 let u = bins[mi];
-                for mpi0 in (0..o).step_by(TP) {
-                    let mpi1 = (mpi0 + TP).min(o);
-                    for j0 in (0..n).step_by(TJ) {
-                        let j1 = (j0 + TJ).min(n);
-                        for j in j0..j1 {
-                            let src = &work_ref[(j * n + u) * n..(j * n + u) * n + n];
-                            for mpi in mpi0..mpi1 {
-                                // SAFETY: the (m, m') j-vector is
-                                // row-package-exclusive.
-                                unsafe {
-                                    shared.write((mi * o + mpi) * n + j, src[bins[mpi]])
-                                };
-                            }
-                        }
-                    }
-                }
+                // SAFETY: the o×n destination block of order mi is
+                // package-exclusive and contiguous in the S-matrix.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(shared.ptr_at(mi * o * n), o * n)
+                };
+                crate::transpose::gather_permuted(
+                    dst,
+                    n,
+                    &work_ref[u * n..],
+                    n * n,
+                    bins,
+                    o,
+                    n,
+                );
             });
         }
         stats.transpose = t0.elapsed();
@@ -588,6 +764,7 @@ impl Executor {
             stats.dwt_region = Some(region);
         }
         stats.dwt = t0.elapsed();
+        stats.peak_bytes = crate::util::ledger::peak_bytes();
         stats.total = t_total.elapsed();
         Ok(stats)
     }
@@ -624,7 +801,7 @@ impl Executor {
                 // directly (zero-copy E slices, reconstructed O block).
                 if folded && precision == Precision::Double {
                     if let Some(t) = &self.tables {
-                        if cluster.m >= cluster.mp && cluster.mp >= 0 {
+                        if t.has(cluster.m, cluster.mp) {
                             folded::forward_cluster_folded_tables(
                                 b,
                                 self.isa,
@@ -642,7 +819,7 @@ impl Executor {
                 let mut fly;
                 let mut tab;
                 let source: &mut dyn WignerSource = match &self.tables {
-                    Some(t) if cluster.m >= cluster.mp && cluster.mp >= 0 => {
+                    Some(t) if t.has(cluster.m, cluster.mp) => {
                         tab = t.source();
                         &mut tab
                     }
@@ -748,7 +925,7 @@ impl Executor {
         let mut fly;
         let mut tab;
         let source: &mut dyn WignerSource = match &self.tables {
-            Some(t) if cluster.m >= cluster.mp && cluster.mp >= 0 => {
+            Some(t) if t.has(cluster.m, cluster.mp) => {
                 tab = t.source();
                 &mut tab
             }
@@ -941,6 +1118,8 @@ impl Executor {
             ));
         }
         let t_total = Instant::now();
+        // Same steady-state peak semantics as the forward direction.
+        crate::util::ledger::rebase_peak();
         let n = 2 * self.b;
         let mut stats = TransformStats::default();
 
@@ -962,8 +1141,11 @@ impl Executor {
 
         // [TRN] scatter to per-slice layout (Nyquist bins stay zero: the
         // output buffer is zeroed first, matching the fresh-allocation
-        // semantics bit for bit), cache blocked like the forward gather:
-        // one target u-row per package, (m'-tile × j-tile) blocking inside.
+        // semantics bit for bit) via the cache-oblivious tiler: one
+        // target u-row per package, `transpose::tile_recurse` blocking
+        // its o×n source block. Destination indices are disjoint across
+        // packages (distinct u) but the byte ranges interleave, so writes
+        // stay on `SyncUnsafeSlice` rather than `&mut` sub-slices.
         let t0 = Instant::now();
         let work = out.as_mut_slice();
         work.fill(Complex64::zero());
@@ -972,27 +1154,29 @@ impl Executor {
             let smat_ref: &SMatrix = smat;
             let o = SMatrix::orders(self.b);
             let bins = &self.order_bins;
+            let smat_data = smat_ref.as_slice();
             self.run_region(o, Schedule::Dynamic { chunk: 1 }, |mi| {
-                const TJ: usize = 4;
-                const TP: usize = 32;
                 let u = bins[mi];
-                let smat_data = smat_ref.as_slice();
-                for mpi0 in (0..o).step_by(TP) {
-                    let mpi1 = (mpi0 + TP).min(o);
-                    for j0 in (0..n).step_by(TJ) {
-                        let j1 = (j0 + TJ).min(n);
-                        for j in j0..j1 {
-                            let dst = (j * n + u) * n;
-                            for mpi in mpi0..mpi1 {
-                                let val = smat_data[(mi * o + mpi) * n + j];
+                let src = &smat_data[mi * o * n..(mi + 1) * o * n];
+                crate::transpose::tile_recurse(
+                    0,
+                    o,
+                    0,
+                    n,
+                    crate::transpose::BLOCK,
+                    &mut |r0, r1, c0, c1| {
+                        for mpi in r0..r1 {
+                            let row = &src[mpi * n..(mpi + 1) * n];
+                            let v = bins[mpi];
+                            for j in c0..c1 {
                                 // SAFETY: bin (u, v) of slice j is
                                 // written only by the row package
                                 // owning u.
-                                unsafe { shared.write(dst + bins[mpi], val) };
+                                unsafe { shared.write((j * n + u) * n + v, row[j]) };
                             }
                         }
-                    }
-                }
+                    },
+                );
             });
         }
         stats.transpose = t0.elapsed();
@@ -1014,6 +1198,7 @@ impl Executor {
             });
         }
         stats.fft = t0.elapsed();
+        stats.peak_bytes = crate::util::ledger::peak_bytes();
         stats.total = t_total.elapsed();
         Ok(stats)
     }
@@ -1054,7 +1239,7 @@ impl Executor {
                 // accumulator loads/stores than the per-degree axpy).
                 if folded && self.config.precision == Precision::Double {
                     if let Some(t) = &self.tables {
-                        if cluster.m >= cluster.mp && cluster.mp >= 0 {
+                        if t.has(cluster.m, cluster.mp) {
                             folded::inverse_cluster_folded_tables(
                                 b,
                                 self.isa,
@@ -1072,7 +1257,7 @@ impl Executor {
                 let mut fly;
                 let mut tab;
                 let source: &mut dyn WignerSource = match &self.tables {
-                    Some(t) if cluster.m >= cluster.mp && cluster.mp >= 0 => {
+                    Some(t) if t.has(cluster.m, cluster.mp) => {
                         tab = t.source();
                         &mut tab
                     }
@@ -1527,7 +1712,91 @@ mod tests {
             assert!(s.dwt_region.is_some());
             let frac = s.fft_fraction();
             assert!((0.0..=1.0).contains(&frac));
+            // The executor's tables are ledgered and live across the
+            // call, so the steady-state peak is always nonzero.
+            assert!(s.peak_bytes > 0);
         }
+    }
+
+    #[test]
+    fn memory_budget_streaming_and_typed_error() {
+        let b = 8;
+        let ws = workspace_bytes(b);
+        // Auto at tiny b: full tables, nothing streamed.
+        let auto = Executor::new(b, ExecutorConfig::default()).unwrap();
+        let report = auto.memory_report();
+        assert_eq!(report.budget, MemoryBudget::Auto);
+        assert!(!report.streamed);
+        assert_eq!(report.table_bytes, report.table_bytes_full);
+        assert_eq!(report.workspace_bytes, ws);
+        assert_eq!(report.total_bytes(), report.table_bytes + ws);
+
+        // A cap holding the workspace plus ~half the tables: the plan
+        // builds, partially materialized, and stays under the cap.
+        let cap = ws + WignerTables::full_bytes(b) / 2;
+        let tight = Executor::new(
+            b,
+            ExecutorConfig {
+                memory: MemoryBudget::Bytes(cap),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let r = tight.memory_report();
+        assert!(r.streamed);
+        assert!(r.table_bytes < r.table_bytes_full);
+        assert!(r.total_bytes() <= cap, "{} > {cap}", r.total_bytes());
+        // The streamed plan still transforms correctly...
+        let coeffs = So3Coeffs::random(b, 31);
+        let grid = tight.inverse(&coeffs).unwrap();
+        let back = tight.forward(&grid).unwrap();
+        assert!(coeffs.max_abs_error(&back) < 1e-11);
+        // ...and agrees with the unlimited plan (streamed bases use
+        // exact recurrence rows; table rows carry an O(B·ε)
+        // reconstruction term, so parity is tolerance, not bitwise).
+        let unl = Executor::new(
+            b,
+            ExecutorConfig {
+                memory: MemoryBudget::Unlimited,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(!unl.memory_report().streamed);
+        let g2 = unl.inverse(&coeffs).unwrap();
+        assert!(grid.max_abs_error(&g2) < 1e-11);
+
+        // A cap below the irreducible workspace is a typed error, not a
+        // silent fallback.
+        assert!(matches!(
+            Executor::new(
+                b,
+                ExecutorConfig {
+                    memory: MemoryBudget::Bytes(1024),
+                    ..Default::default()
+                }
+            ),
+            Err(Error::BudgetExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn memory_budget_parse_roundtrip() {
+        for mb in [
+            MemoryBudget::Auto,
+            MemoryBudget::Unlimited,
+            MemoryBudget::Bytes(123_456),
+        ] {
+            assert_eq!(MemoryBudget::parse(&mb.name()), Some(mb), "{mb}");
+        }
+        // Bare integers are MiB.
+        assert_eq!(
+            MemoryBudget::parse("64"),
+            Some(MemoryBudget::Bytes(64 << 20))
+        );
+        assert_eq!(MemoryBudget::parse("bogus"), None);
+        assert_eq!(MemoryBudget::parse("bytes:"), None);
+        assert_eq!(MemoryBudget::default(), MemoryBudget::Auto);
     }
 
     /// The analysis operator applied to a single basis function must

@@ -15,5 +15,8 @@ pub mod exec;
 pub mod partition;
 pub mod plan;
 
-pub use exec::{Executor, ExecutorConfig, StageStats, TransformStats, Workspace};
+pub use exec::{
+    workspace_bytes, Executor, ExecutorConfig, MemoryBudget, MemoryReport, StageStats,
+    TransformStats, Workspace,
+};
 pub use plan::{PartitionStrategy, TransformPlan};

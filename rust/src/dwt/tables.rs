@@ -93,11 +93,20 @@ pub struct WignerTables {
     b: usize,
     /// Packed half-rows: for base (m, m'), degrees l₀.. (B−1 for parity
     /// bases, B for general bases — the guard degree), each row B long.
+    /// Under [`Self::build_partial`] only the `present` bases are packed.
     data: Vec<f64>,
-    /// Offset of base pair (m, m') in `data`.
+    /// Offset of base pair (m, m') in `data` (absent bases carry the
+    /// running offset and contribute zero rows).
     offsets: Vec<usize>,
     /// 1/cos(β_j) for j < B — the O-row reconstruction divisors.
     inv_cos: Vec<f64>,
+    /// Which base pairs are materialized (all `true` for [`Self::build`]
+    /// and [`Self::load`]); the executor streams the rest from the
+    /// recurrence per base pair ([`Self::has`]).
+    present: Vec<bool>,
+    /// Charges this table set's footprint against the process allocation
+    /// ledger for the lifetime of the struct (`util::ledger`).
+    ledger: crate::util::ledger::LedgerSlot,
 }
 
 /// Triangle index of a base pair m ≥ m' ≥ 0 (the paper's σ map, Eq. 7,
@@ -139,6 +148,21 @@ impl WignerTables {
     /// `betas` must be the reflection-symmetric K&R grid
     /// (π − β_j = β_{2B−1−j}) — the folding identity depends on it.
     pub fn build(b: usize, betas: &[f64]) -> Self {
+        Self::build_with_budget(b, betas, None)
+    }
+
+    /// Build only as many base tables as fit under `budget_bytes`
+    /// (streamed large-B mode, ISSUE 8): the divisor vector is reserved
+    /// first, then bases are admitted greedily in canonical (m asc,
+    /// m' asc) order while their half-row block fits the remainder.
+    /// Absent bases are streamed from the recurrence at transform time —
+    /// the executor checks [`Self::has`] per base pair, so the
+    /// precompute/stream decision is per-degree-pair, not global.
+    pub fn build_partial(b: usize, betas: &[f64], budget_bytes: usize) -> Self {
+        Self::build_with_budget(b, betas, Some(budget_bytes))
+    }
+
+    fn build_with_budget(b: usize, betas: &[f64], budget_bytes: Option<usize>) -> Self {
         assert_eq!(betas.len(), 2 * b);
         for j in 0..b {
             assert!(
@@ -148,19 +172,42 @@ impl WignerTables {
         }
         let n = 2 * b;
         let n_bases = b * (b + 1) / 2;
+        let mut present = vec![true; n_bases];
+        if let Some(budget) = budget_bytes {
+            // inv_cos is unconditional (needed by every present base).
+            let mut remaining = budget.saturating_sub(b * 8);
+            for m in 0..b {
+                for mp in 0..=m {
+                    let bi = base_index(m as i64, mp as i64);
+                    let bytes = rows_per_base(b, m, mp) * b * 8;
+                    if bytes <= remaining {
+                        remaining -= bytes;
+                    } else {
+                        present[bi] = false;
+                    }
+                }
+            }
+        }
         let mut offsets = vec![0usize; n_bases + 1];
         let mut total = 0usize;
         for m in 0..b {
             for mp in 0..=m {
-                offsets[base_index(m as i64, mp as i64)] = total;
-                total += rows_per_base(b, m, mp) * b;
+                let bi = base_index(m as i64, mp as i64);
+                offsets[bi] = total;
+                if present[bi] {
+                    total += rows_per_base(b, m, mp) * b;
+                }
             }
         }
         offsets[n_bases] = total;
         let mut data = vec![0.0f64; total];
         for m in 0..b as i64 {
             for mp in 0..=m {
-                let off = offsets[base_index(m, mp)];
+                let bi = base_index(m, mp);
+                if !present[bi] {
+                    continue;
+                }
+                let off = offsets[bi];
                 let rows = rows_per_base(b, m as usize, mp as usize);
                 let mut stepper: WignerRowStepper<f64> = WignerRowStepper::new(m, mp, betas);
                 for r in 0..rows {
@@ -179,12 +226,17 @@ impl WignerTables {
                 }
             }
         }
-        let inv_cos = betas[..b].iter().map(|&beta| 1.0 / beta.cos()).collect();
+        let inv_cos: Vec<f64> = betas[..b].iter().map(|&beta| 1.0 / beta.cos()).collect();
+        let ledger = crate::util::ledger::LedgerSlot::new(
+            (data.len() + inv_cos.len()) * std::mem::size_of::<f64>(),
+        );
         Self {
             b,
             data,
             offsets,
             inv_cos,
+            present,
+            ledger,
         }
     }
 
@@ -194,9 +246,31 @@ impl WignerTables {
     }
 
     /// Approximate memory footprint in bytes — ~half the pre-fold layout
-    /// for the same bandwidth.
+    /// for the same bandwidth (less when partially materialized).
     pub fn bytes(&self) -> usize {
         (self.data.len() + self.inv_cos.len()) * std::mem::size_of::<f64>()
+    }
+
+    /// Bytes of a *fully* materialized table set at bandwidth `b`
+    /// (half-rows plus the divisor vector) — the budget planner's
+    /// predicted-table-size input.
+    pub fn full_bytes(b: usize) -> usize {
+        (Self::storage_len(b) + b) * std::mem::size_of::<f64>()
+    }
+
+    /// Whether the base pair (m, m') is materialized in this table set.
+    /// Non-canonical pairs (m < m' or m' < 0) are never stored; partial
+    /// sets ([`Self::build_partial`]) may omit canonical ones too — the
+    /// executor streams those from the recurrence.
+    #[inline]
+    pub fn has(&self, m: i64, mp: i64) -> bool {
+        m >= mp && mp >= 0 && self.present[base_index(m, mp)]
+    }
+
+    /// `true` iff every canonical base pair is materialized (i.e. this is
+    /// not a [`Self::build_partial`] set with streamed gaps).
+    pub fn is_complete(&self) -> bool {
+        self.present.iter().all(|&p| p)
     }
 
     #[inline]
@@ -204,6 +278,10 @@ impl WignerTables {
         let l0 = m.max(mp) as usize;
         debug_assert!(l >= l0);
         debug_assert!(if mp == 0 { l < self.b } else { l <= self.b });
+        debug_assert!(
+            self.present[base_index(m, mp)],
+            "base ({m}, {mp}) not materialized — callers must check has()"
+        );
         let off = self.offsets[base_index(m, mp)] + (l - l0) * self.b;
         &self.data[off..off + self.b]
     }
@@ -311,6 +389,12 @@ impl WignerTables {
     /// rejected — rebuild them (docs/MIGRATION.md).
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> crate::error::Result<()> {
         use std::io::Write;
+        if self.data.len() != Self::storage_len(self.b) {
+            return Err(crate::error::Error::Runtime(
+                "refusing to persist a partially materialized (streamed) table set"
+                    .into(),
+            ));
+        }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         f.write_all(b"SO3W2")?;
         f.write_all(&(self.b as u64).to_le_bytes())?;
@@ -375,11 +459,16 @@ impl WignerTables {
             }
         }
         offsets[n_bases] = total;
+        let ledger = crate::util::ledger::LedgerSlot::new(
+            (data.len() + inv_cos.len()) * std::mem::size_of::<f64>(),
+        );
         Ok(Self {
             b,
             data,
             offsets,
             inv_cos,
+            present: vec![true; n_bases],
+            ledger,
         })
     }
 
@@ -647,6 +736,61 @@ mod tests {
         std::fs::write(&path, b"SO3W1old-format-payload").unwrap();
         let err = WignerTables::load(&path, b).unwrap_err();
         assert!(format!("{err}").contains("rebuild"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn partial_build_respects_budget_and_matches_full() {
+        let b = 8;
+        let angles = GridAngles::new(b).unwrap();
+        let full = WignerTables::build(b, &angles.betas);
+        assert!(full.is_complete());
+        // Half the full footprint: some bases present, some streamed.
+        let budget = WignerTables::full_bytes(b) / 2;
+        let part = WignerTables::build_partial(b, &angles.betas, budget);
+        assert!(!part.is_complete());
+        assert!(part.bytes() <= budget, "{} > {budget}", part.bytes());
+        let mut any_present = false;
+        let mut any_absent = false;
+        let mut buf_f = vec![0.0; 2 * b];
+        let mut buf_p = vec![0.0; 2 * b];
+        for m in 0..b as i64 {
+            for mp in 0..=m {
+                if part.has(m, mp) {
+                    any_present = true;
+                    // Present bases are bit-identical to the full build.
+                    let l0 = m.max(mp) as usize;
+                    for l in l0..b {
+                        let want = full.row_into(m, mp, l, &mut buf_f).to_vec();
+                        let got = part.row_into(m, mp, l, &mut buf_p).to_vec();
+                        assert_eq!(got, want, "m={m} mp={mp} l={l}");
+                    }
+                } else {
+                    any_absent = true;
+                }
+            }
+        }
+        assert!(any_present && any_absent, "budget should split the bases");
+        // Non-canonical pairs are never "present".
+        assert!(!part.has(0, 1));
+        assert!(!part.has(1, -1));
+        // A zero budget streams everything; a full budget streams nothing.
+        let none = WignerTables::build_partial(b, &angles.betas, 0);
+        assert!((0..b as i64).all(|m| (0..=m).all(|mp| !none.has(m, mp))));
+        let all = WignerTables::build_partial(b, &angles.betas, WignerTables::full_bytes(b));
+        assert!(all.is_complete());
+    }
+
+    #[test]
+    fn save_refuses_partial_tables() {
+        let b = 6;
+        let angles = GridAngles::new(b).unwrap();
+        let part = WignerTables::build_partial(b, &angles.betas, WignerTables::full_bytes(b) / 2);
+        let path =
+            std::env::temp_dir().join(format!("so3ft-wcache-part-{}.bin", std::process::id()));
+        let err = part.save(&path).unwrap_err();
+        assert!(format!("{err}").contains("partially materialized"), "{err}");
+        assert!(!path.exists(), "partial save must not create the file");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -43,6 +43,16 @@ pub enum Error {
     /// Thread-count request the pool cannot satisfy.
     InvalidThreads(usize),
 
+    /// A `MemoryBudget::Bytes` cap that the plan cannot fit under even
+    /// with every table streamed — the irreducible part (`context` says
+    /// which) alone exceeds the cap. Raised at plan build, never as a
+    /// silent fallback.
+    BudgetExceeded {
+        required: usize,
+        budget: usize,
+        context: &'static str,
+    },
+
     /// Job-service problems: a payload that does not match the job
     /// direction, a submission to a shut-down service, or a batch whose
     /// plan could not be built (the build error is embedded in the
@@ -103,6 +113,15 @@ impl fmt::Display for Error {
             Error::InvalidThreads(t) => {
                 write!(f, "invalid thread count {t}: must be >= 1")
             }
+            Error::BudgetExceeded {
+                required,
+                budget,
+                context,
+            } => write!(
+                f,
+                "memory budget exceeded ({context}): needs {required} bytes, \
+                 budget is {budget} bytes"
+            ),
             Error::Service(msg) => write!(f, "service error: {msg}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Runtime(msg) => write!(f, "xla runtime error: {msg}"),
@@ -161,6 +180,15 @@ mod tests {
             .to_string()
             .contains("power of two"));
         assert!(Error::InvalidThreads(0).to_string().contains("thread count 0"));
+        let budget = Error::BudgetExceeded {
+            required: 1024,
+            budget: 512,
+            context: "irreducible transform workspace",
+        }
+        .to_string();
+        assert!(budget.contains("memory budget exceeded"));
+        assert!(budget.contains("1024") && budget.contains("512"));
+        assert!(budget.contains("workspace"));
         assert!(Error::Service("queue closed".into())
             .to_string()
             .contains("queue closed"));

@@ -96,10 +96,12 @@ pub mod simulator;
 pub mod so3;
 pub mod testkit;
 pub mod transform;
+pub mod transpose;
 pub mod util;
 pub mod wisdom;
 pub mod xprec;
 
+pub use coordinator::{MemoryBudget, MemoryReport};
 pub use error::{Error, Result};
 pub use fft::complex::Complex64;
 pub use service::So3Service;

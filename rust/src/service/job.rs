@@ -85,6 +85,15 @@ impl JobSpec {
         self
     }
 
+    /// Override the memory budget for this job only (a new budget is a
+    /// new plan registry key — and a new batch key). An explicit spec
+    /// budget always wins over the service-level default set via
+    /// [`So3ServiceBuilder::memory_budget`](super::So3ServiceBuilder::memory_budget).
+    pub fn memory_budget(mut self, budget: crate::coordinator::MemoryBudget) -> Self {
+        self.options.memory = budget;
+        self
+    }
+
     /// The coalescing key: jobs batch together iff this matches.
     pub(crate) fn batch_key(&self) -> BatchKey {
         BatchKey {
@@ -334,6 +343,11 @@ mod tests {
         assert_ne!(a.batch_key(), b.batch_key());
         assert_ne!(a.batch_key(), c.batch_key());
         assert_ne!(a.batch_key(), d.batch_key());
+        // A per-job memory budget is part of the key too: capped and
+        // uncapped jobs never share a plan or a micro-batch.
+        let capped = JobSpec::forward(8)
+            .memory_budget(crate::coordinator::MemoryBudget::Bytes(1 << 30));
+        assert_ne!(a.batch_key(), capped.batch_key());
         // Priority does NOT split batches.
         assert_eq!(
             a.batch_key(),

@@ -366,6 +366,19 @@ impl So3ServiceBuilder {
         self
     }
 
+    /// Service-wide default [`MemoryBudget`](crate::coordinator::MemoryBudget),
+    /// applied to the [`So3Service::forward`] / [`So3Service::inverse`]
+    /// conveniences and any [`JobSpec`] built from the default options.
+    ///
+    /// Precedence: an explicit per-job budget
+    /// ([`JobSpec::memory_budget`]) always wins over this service-level
+    /// default; both default to `MemoryBudget::Auto`. Jobs with
+    /// different budgets resolve to distinct registry plans.
+    pub fn memory_budget(mut self, budget: crate::coordinator::MemoryBudget) -> Self {
+        self.default_options.memory = budget;
+        self
+    }
+
     /// Accept non-power-of-two bandwidths (Bluestein FFT fallback).
     pub fn allow_any_bandwidth(mut self) -> Self {
         self.allow_any_bandwidth = true;
@@ -892,6 +905,24 @@ mod tests {
         for h in handles {
             assert!(h.wait().is_ok(), "queued jobs must resolve across drop");
         }
+    }
+
+    #[test]
+    fn service_memory_budget_default_flows_to_convenience_jobs() {
+        use crate::coordinator::MemoryBudget;
+        let service = So3Service::builder()
+            .threads(1)
+            .memory_budget(MemoryBudget::Unlimited)
+            .build()
+            .unwrap();
+        let coeffs = So3Coeffs::random(4, 3);
+        let grid = service.inverse(coeffs).unwrap();
+        let _ = service.forward(grid).unwrap();
+        // The conveniences built exactly one plan, under the default
+        // budget; re-fetching under that key hits the cache.
+        let plan = service.plan(4, service.inner.default_options).unwrap();
+        assert_eq!(plan.memory_report().budget, MemoryBudget::Unlimited);
+        assert_eq!(service.registry().stats().plans, 1);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
-use crate::coordinator::{ExecutorConfig, PartitionStrategy};
+use crate::coordinator::{ExecutorConfig, MemoryBudget, PartitionStrategy};
 use crate::dwt::tables::WignerStorage;
 use crate::dwt::{DwtAlgorithm, Precision};
 use crate::error::Result;
@@ -48,6 +48,10 @@ pub struct PlanOptions {
     pub real_input: bool,
     /// SIMD kernel dispatch policy (resolved per plan at build time).
     pub simd: SimdPolicy,
+    /// Memory budget, resolved at plan build into table
+    /// materialization / streaming choices. Part of the key: jobs with
+    /// different budgets never share a cached plan.
+    pub memory: MemoryBudget,
 }
 
 impl Default for PlanOptions {
@@ -69,6 +73,7 @@ impl PlanOptions {
             fft_engine: config.fft_engine,
             real_input: config.real_input,
             simd: config.simd,
+            memory: config.memory,
         }
     }
 
@@ -84,6 +89,7 @@ impl PlanOptions {
             fft_engine: self.fft_engine,
             real_input: self.real_input,
             simd: self.simd,
+            memory: self.memory,
             pool,
         }
     }

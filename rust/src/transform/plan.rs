@@ -40,7 +40,8 @@ use std::sync::Arc;
 
 use crate::coordinator::exec::DwtOffload;
 use crate::coordinator::{
-    Executor, ExecutorConfig, PartitionStrategy, TransformStats, Workspace,
+    Executor, ExecutorConfig, MemoryBudget, MemoryReport, PartitionStrategy, TransformStats,
+    Workspace,
 };
 use crate::dwt::tables::WignerStorage;
 use crate::dwt::{DwtAlgorithm, Precision};
@@ -204,6 +205,14 @@ impl So3Plan {
     /// Memory held by precomputed Wigner tables (bytes).
     pub fn table_bytes(&self) -> usize {
         self.exec.table_bytes()
+    }
+
+    /// How this plan's [`MemoryBudget`] resolved at build time:
+    /// materialized table bytes versus a full set, the irreducible
+    /// workspace size, and whether any base pair streams from the
+    /// recurrence instead of tables.
+    pub fn memory_report(&self) -> MemoryReport {
+        self.exec.memory_report()
     }
 
     /// The instruction set the DWT/FFT hot kernels run with — the
@@ -441,6 +450,18 @@ impl So3PlanBuilder {
     /// Wigner row storage (precomputed tables vs on-the-fly recurrence).
     pub fn storage(mut self, storage: WignerStorage) -> Self {
         self.config.storage = storage;
+        self
+    }
+
+    /// Memory budget for the plan, resolved once at build time into
+    /// table materialization / streaming choices (see [`MemoryBudget`]):
+    /// `Auto` (default) caps tables at a soft 2 GiB and streams beyond;
+    /// `Unlimited` always materializes; `Bytes(cap)` is a hard cap over
+    /// workspace + tables, with [`Error::BudgetExceeded`] when even the
+    /// workspace alone does not fit. Inspect the outcome via
+    /// [`So3Plan::memory_report`].
+    pub fn memory_budget(mut self, budget: MemoryBudget) -> Self {
+        self.config.memory = budget;
         self
     }
 
@@ -688,6 +709,40 @@ mod tests {
         assert!(matches!(
             So3Plan::builder(8).simd(impossible).build(),
             Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn builder_memory_budget_resolves_and_reports() {
+        // Auto at a tiny bandwidth: everything fits, nothing streams.
+        let auto = So3Plan::builder(8).build().unwrap();
+        let report = auto.memory_report();
+        assert_eq!(report.budget, MemoryBudget::Auto);
+        assert!(!report.streamed);
+        assert_eq!(report.table_bytes, report.table_bytes_full);
+        assert!(report.table_bytes > 0);
+        // A cap that admits the workspace plus half a table set streams
+        // the rest and still reproduces the unconstrained answer.
+        let cap = crate::coordinator::workspace_bytes(8)
+            + crate::dwt::tables::WignerTables::full_bytes(8) / 2;
+        let tight = So3Plan::builder(8)
+            .memory_budget(MemoryBudget::Bytes(cap))
+            .build()
+            .unwrap();
+        let treport = tight.memory_report();
+        assert!(treport.streamed);
+        assert!(treport.table_bytes < treport.table_bytes_full);
+        assert!(treport.total_bytes() <= cap);
+        let coeffs = So3Coeffs::random(8, 23);
+        let g_auto = auto.inverse(&coeffs).unwrap();
+        let g_tight = tight.inverse(&coeffs).unwrap();
+        assert!(g_auto.max_abs_error(&g_tight) < 1e-11);
+        // A cap below the irreducible workspace is a typed build error.
+        assert!(matches!(
+            So3Plan::builder(8)
+                .memory_budget(MemoryBudget::Bytes(1024))
+                .build(),
+            Err(Error::BudgetExceeded { .. })
         ));
     }
 

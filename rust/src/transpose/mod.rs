@@ -1,0 +1,376 @@
+//! Cache-oblivious transpose kernels for the [TRN] stage.
+//!
+//! The executor's transpose stage moves the n³ FFT slab into the S-matrix
+//! layout (forward) and back (inverse). Before this module existed those
+//! moves were hand-tiled double loops with fixed tile sizes; large-B
+//! frameworks (P3DFFT, OpenFFT) show that the transpose organization is
+//! what decides whether b=512 is reachable at all, so the kernels here are
+//! written once, recursively, and reused by the executor:
+//!
+//! * [`tile_recurse`] — the cache-oblivious driver: recursively split the
+//!   longer dimension of an index rectangle until both sides fit a blocked
+//!   base case, then hand the block to a caller-supplied kernel. Every
+//!   other routine in the module (and the executor's scatter) is built on
+//!   it, so the traversal order — and therefore the floating-point result —
+//!   is identical across the copy-based, in-place, and parallel paths.
+//! * [`transpose_into`] / [`gather_permuted`] — out-of-place copies with
+//!   contiguous destination writes in the base case (SIMD-friendly: the
+//!   inner loop is a unit-stride store stream).
+//! * [`transpose_square_in_place`] / [`transpose_in_place`] — in-place
+//!   transposes. The square case is a recursive diagonal-block split that
+//!   swaps mirror blocks and never allocates. The rectangular case follows
+//!   permutation cycles (index j receives old index (j·cols) mod (rows·cols−1))
+//!   with a visited bitmap — O(rows·cols) bits of scratch instead of a full
+//!   element copy, the classic in-place trade.
+//! * [`transpose_into_parallel`] — column-band decomposition over the
+//!   existing [`WorkerPool`], engaged above [`PARALLEL_THRESHOLD`]. Each
+//!   band's destination rows are disjoint and contiguous, so bands write
+//!   through exclusive `&mut` sub-slices. Never call this from inside a
+//!   pool region (regions must not nest — see `pool`).
+//!
+//! All kernels are generic over `T: Copy` — the executor moves
+//! `Complex64`, which is `Copy` but deliberately not `util::Pod`.
+
+use crate::pool::{Schedule, WorkerPool};
+use crate::util::SyncUnsafeSlice;
+
+/// Base-case block edge for the recursive splits. 32×32 `Complex64`
+/// elements is 16 KiB — half of a typical 32 KiB L1D, leaving room for the
+/// source stream.
+pub const BLOCK: usize = 32;
+
+/// Minimum element count (`rows*cols`) before [`transpose_into_parallel`]
+/// engages the pool; below this the fork/join overhead exceeds the copy.
+pub const PARALLEL_THRESHOLD: usize = 1 << 16;
+
+/// Cache-oblivious tiling driver over the index rectangle
+/// `[r0, r1) × [c0, c1)`: recursively halve the longer dimension until both
+/// extents are at most `base`, then invoke `f(r0, r1, c0, c1)` on the leaf
+/// block. The recursion depth is O(log(max extent)) and the leaf visit
+/// order is deterministic, which the parity tests rely on.
+pub fn tile_recurse<F: FnMut(usize, usize, usize, usize)>(
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+    base: usize,
+    f: &mut F,
+) {
+    let rn = r1 - r0;
+    let cn = c1 - c0;
+    if rn == 0 || cn == 0 {
+        return;
+    }
+    if rn <= base && cn <= base {
+        f(r0, r1, c0, c1);
+        return;
+    }
+    if rn >= cn {
+        let rm = r0 + rn / 2;
+        tile_recurse(r0, rm, c0, c1, base, f);
+        tile_recurse(rm, r1, c0, c1, base, f);
+    } else {
+        let cm = c0 + cn / 2;
+        tile_recurse(r0, r1, c0, cm, base, f);
+        tile_recurse(r0, r1, cm, c1, base, f);
+    }
+}
+
+/// Out-of-place transpose: `dst` (row-major `cols × rows`) receives the
+/// transpose of `src` (row-major `rows × cols`).
+pub fn transpose_into<T: Copy>(dst: &mut [T], src: &[T], rows: usize, cols: usize) {
+    assert_eq!(src.len(), rows * cols, "transpose_into: src length mismatch");
+    assert_eq!(dst.len(), rows * cols, "transpose_into: dst length mismatch");
+    tile_recurse(0, rows, 0, cols, BLOCK, &mut |r0, r1, c0, c1| {
+        for c in c0..c1 {
+            let drow = c * rows;
+            for r in r0..r1 {
+                dst[drow + r] = src[r * cols + c];
+            }
+        }
+    });
+}
+
+/// Permuted gather used by the forward [TRN] stage: for each destination
+/// row `r` (of `rows`) and column `c` (of `cols`),
+/// `dst[r*dst_stride + c] = src[c*src_stride + perm[r]]`.
+/// Destination writes are unit-stride within the inner loop.
+pub fn gather_permuted<T: Copy>(
+    dst: &mut [T],
+    dst_stride: usize,
+    src: &[T],
+    src_stride: usize,
+    perm: &[usize],
+    rows: usize,
+    cols: usize,
+) {
+    assert!(rows <= perm.len(), "gather_permuted: perm too short");
+    assert!(
+        rows == 0 || (rows - 1) * dst_stride + cols <= dst.len(),
+        "gather_permuted: dst too short"
+    );
+    tile_recurse(0, rows, 0, cols, BLOCK, &mut |r0, r1, c0, c1| {
+        for r in r0..r1 {
+            let p = perm[r];
+            let drow = r * dst_stride;
+            for c in c0..c1 {
+                dst[drow + c] = src[c * src_stride + p];
+            }
+        }
+    });
+}
+
+/// Recursive in-place transpose of the `s × s` sub-matrix whose top-left
+/// element lives at flat offset `off` in a row-major matrix of row stride
+/// `stride`. Splits on the diagonal: transpose the two diagonal halves,
+/// then swap the off-diagonal mirror blocks.
+fn ip_diag<T: Copy>(a: &mut [T], stride: usize, off: usize, s: usize) {
+    if s <= BLOCK {
+        for i in 0..s {
+            for j in 0..i {
+                a.swap(off + i * stride + j, off + j * stride + i);
+            }
+        }
+        return;
+    }
+    let h = s / 2;
+    ip_diag(a, stride, off, h);
+    ip_diag(a, stride, off + h * stride + h, s - h);
+    ip_swap(a, stride, off + h * stride, off + h, s - h, h);
+}
+
+/// Swap block A (`ra × ca`, top-left at `off_a`) with the transpose of
+/// block B (`ca × ra`, top-left at `off_b`): `A[i][j] <-> B[j][i]`.
+fn ip_swap<T: Copy>(a: &mut [T], stride: usize, off_a: usize, off_b: usize, ra: usize, ca: usize) {
+    if ra <= BLOCK && ca <= BLOCK {
+        for i in 0..ra {
+            for j in 0..ca {
+                a.swap(off_a + i * stride + j, off_b + j * stride + i);
+            }
+        }
+        return;
+    }
+    if ra >= ca {
+        let h = ra / 2;
+        ip_swap(a, stride, off_a, off_b, h, ca);
+        ip_swap(a, stride, off_a + h * stride, off_b + h, ra - h, ca);
+    } else {
+        let h = ca / 2;
+        ip_swap(a, stride, off_a, off_b, ra, h);
+        ip_swap(a, stride, off_a + h, off_b + h * stride, ra, ca - h);
+    }
+}
+
+/// In-place transpose of a row-major `n × n` matrix. No allocation; the
+/// recursion mirrors [`tile_recurse`] so blocks stay cache-resident.
+pub fn transpose_square_in_place<T: Copy>(a: &mut [T], n: usize) {
+    assert_eq!(a.len(), n * n, "transpose_square_in_place: length mismatch");
+    if n > 1 {
+        ip_diag(a, n, 0, n);
+    }
+}
+
+/// In-place transpose of a row-major `rows × cols` matrix into row-major
+/// `cols × rows`. Square matrices delegate to the allocation-free
+/// [`transpose_square_in_place`]; rectangular matrices follow permutation
+/// cycles — destination index `j` receives old index `(j·cols) mod m` with
+/// `m = rows·cols − 1` — using a visited bitmap (`rows·cols` bools of
+/// scratch, versus a full element copy for the out-of-place route).
+pub fn transpose_in_place<T: Copy>(a: &mut [T], rows: usize, cols: usize) {
+    assert_eq!(a.len(), rows * cols, "transpose_in_place: length mismatch");
+    if rows == cols {
+        transpose_square_in_place(a, rows);
+        return;
+    }
+    let len = rows * cols;
+    if len < 2 {
+        return;
+    }
+    let m = len - 1;
+    let mut visited = vec![false; len];
+    for start in 1..m {
+        if visited[start] {
+            continue;
+        }
+        let mut j = start;
+        let saved = a[start];
+        loop {
+            visited[j] = true;
+            // The element that must land at j came from i = (j*cols) mod m:
+            // new index j = c*rows + r corresponds to old index i = r*cols + c,
+            // and i·rows ≡ j (mod m) because rows·cols ≡ 1 (mod m).
+            let i = (j * cols) % m;
+            if i == start {
+                a[j] = saved;
+                break;
+            }
+            a[j] = a[i];
+            j = i;
+        }
+    }
+}
+
+/// Parallel out-of-place transpose over `pool`: the destination (row-major
+/// `cols × rows`) is split into contiguous row bands, one region item per
+/// band. Falls back to the sequential [`transpose_into`] below
+/// [`PARALLEL_THRESHOLD`] elements or when `threads <= 1`.
+///
+/// Band boundaries only affect which thread writes a destination row, not
+/// the per-element arithmetic (these are pure copies), so the result is
+/// bit-identical to the sequential path — pinned by `transpose_parity.rs`.
+///
+/// # Panics
+/// Panics on length mismatch. Must not be called from inside an active
+/// pool region (regions do not nest).
+pub fn transpose_into_parallel<T: Copy + Send + Sync>(
+    dst: &mut [T],
+    src: &[T],
+    rows: usize,
+    cols: usize,
+    pool: &WorkerPool,
+    threads: usize,
+) {
+    assert_eq!(src.len(), rows * cols, "transpose_into_parallel: src length mismatch");
+    assert_eq!(dst.len(), rows * cols, "transpose_into_parallel: dst length mismatch");
+    if rows * cols < PARALLEL_THRESHOLD || threads <= 1 {
+        transpose_into(dst, src, rows, cols);
+        return;
+    }
+    let bands = cols.min(threads * 4).max(1);
+    let shared = SyncUnsafeSlice::new(dst);
+    pool.run_with(threads, bands, Schedule::Static, |band| {
+        let c0 = band * cols / bands;
+        let c1 = (band + 1) * cols / bands;
+        if c0 == c1 {
+            return;
+        }
+        // SAFETY: destination rows c0..c1 form a contiguous region owned
+        // exclusively by this band (bands partition 0..cols).
+        let dst_band = unsafe {
+            std::slice::from_raw_parts_mut(shared.ptr_at(c0 * rows), (c1 - c0) * rows)
+        };
+        tile_recurse(0, rows, c0, c1, BLOCK, &mut |r0, r1, b0, b1| {
+            for c in b0..b1 {
+                let drow = (c - c0) * rows;
+                for r in r0..r1 {
+                    dst_band[drow + r] = src[r * cols + c];
+                }
+            }
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_transpose<T: Copy + Default>(src: &[T], rows: usize, cols: usize) -> Vec<T> {
+        let mut out = vec![T::default(); rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = src[r * cols + c];
+            }
+        }
+        out
+    }
+
+    fn ramp(len: usize) -> Vec<f64> {
+        (0..len).map(|i| i as f64 * 1.5 - 7.0).collect()
+    }
+
+    #[test]
+    fn tile_recurse_covers_every_cell_once() {
+        let (rows, cols) = (67, 41);
+        let mut seen = vec![0u32; rows * cols];
+        tile_recurse(0, rows, 0, cols, 8, &mut |r0, r1, c0, c1| {
+            assert!(r1 - r0 <= 8 && c1 - c0 <= 8);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    seen[r * cols + c] += 1;
+                }
+            }
+        });
+        assert!(seen.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn transpose_into_matches_naive() {
+        for &(rows, cols) in &[(1, 1), (5, 3), (7, 4), (33, 17), (64, 64), (65, 65), (1, 9)] {
+            let src = ramp(rows * cols);
+            let mut dst = vec![0.0; rows * cols];
+            transpose_into(&mut dst, &src, rows, cols);
+            assert_eq!(dst, naive_transpose(&src, rows, cols), "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn square_in_place_matches_naive() {
+        for &n in &[1usize, 2, 3, 31, 32, 33, 64, 65, 100] {
+            let src: Vec<u32> = (0..n * n).map(|i| i as u32) .collect();
+            let mut a = src.clone();
+            transpose_square_in_place(&mut a, n);
+            assert_eq!(a, naive_transpose(&src, n, n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn rect_in_place_matches_naive() {
+        for &(rows, cols) in &[(2, 3), (5, 3), (3, 5), (7, 4), (33, 17), (17, 33), (1, 8), (8, 1)] {
+            let src = ramp(rows * cols);
+            let mut a = src.clone();
+            transpose_in_place(&mut a, rows, cols);
+            assert_eq!(a, naive_transpose(&src, rows, cols), "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn in_place_is_involutive() {
+        let (rows, cols) = (12, 29);
+        let src = ramp(rows * cols);
+        let mut a = src.clone();
+        transpose_in_place(&mut a, rows, cols);
+        transpose_in_place(&mut a, cols, rows);
+        assert_eq!(a, src);
+    }
+
+    #[test]
+    fn gather_permuted_matches_double_loop() {
+        let (rows, cols) = (9, 13);
+        let src_stride = 15;
+        let src = ramp(cols * src_stride);
+        let perm: Vec<usize> = (0..rows).map(|r| (r * 7 + 3) % src_stride).collect();
+        let dst_stride = cols + 2;
+        let mut dst = vec![0.0; rows * dst_stride];
+        let mut want = vec![0.0; rows * dst_stride];
+        for r in 0..rows {
+            for c in 0..cols {
+                want[r * dst_stride + c] = src[c * src_stride + perm[r]];
+            }
+        }
+        gather_permuted(&mut dst, dst_stride, &src, src_stride, &perm, rows, cols);
+        assert_eq!(dst, want);
+    }
+
+    #[test]
+    fn parallel_falls_back_below_threshold() {
+        let (rows, cols) = (10, 10);
+        let pool = WorkerPool::new(2).unwrap();
+        let src = ramp(rows * cols);
+        let mut dst = vec![0.0; rows * cols];
+        transpose_into_parallel(&mut dst, &src, rows, cols, &pool, 2);
+        assert_eq!(dst, naive_transpose(&src, rows, cols));
+    }
+
+    #[test]
+    fn parallel_matches_sequential_above_threshold() {
+        // 512*512 = 262144 > PARALLEL_THRESHOLD.
+        let (rows, cols) = (512, 512);
+        let pool = WorkerPool::new(3).unwrap();
+        let src = ramp(rows * cols);
+        let mut seq = vec![0.0; rows * cols];
+        transpose_into(&mut seq, &src, rows, cols);
+        let mut par = vec![0.0; rows * cols];
+        transpose_into_parallel(&mut par, &src, rows, cols, &pool, 3);
+        assert_eq!(par, seq);
+    }
+}

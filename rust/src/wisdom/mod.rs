@@ -216,6 +216,9 @@ pub(crate) fn tune(
                     algorithm: out.winner.algorithm,
                     fft_engine: out.winner.fft_engine,
                     simd: out.winner.simd,
+                    // Provenance only: records the budget the winning
+                    // time was measured under (never applied on a hit).
+                    mem: config.memory,
                     seconds: out.inv_seconds,
                 };
                 store.record(key, base_entry.clone());

@@ -12,9 +12,11 @@
 //!       algorithm=matvec-folded fft=split-radix seconds=1.234000e-3 simd=auto
 //! ```
 //!
-//! The `simd` field is optional on read (files written before the SIMD
-//! dispatch axis existed default to `auto`), so old SO3WIS1 stores stay
-//! readable.
+//! The `simd` and `mem` fields are optional on read (files written
+//! before the SIMD dispatch axis / the memory-budget axis existed
+//! default to `auto`), so old SO3WIS1 stores stay readable. `mem`
+//! records the budget the winning time was measured under; it is
+//! informational and never applied on a hit.
 //!
 //! Failure policy (the FFTW wisdom contract): a corrupt or
 //! wrong-version file is a [`WisdomWarning`], never an error — lookups
@@ -36,7 +38,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::{parse_algorithm, parse_fft_engine};
-use crate::coordinator::PartitionStrategy;
+use crate::coordinator::{MemoryBudget, PartitionStrategy};
 use crate::dwt::DwtAlgorithm;
 use crate::fft::FftEngine;
 use crate::pool::Schedule;
@@ -87,6 +89,10 @@ pub struct WisdomEntry {
     pub fft_engine: FftEngine,
     /// SIMD dispatch policy the winning time was measured with.
     pub simd: SimdPolicy,
+    /// Memory budget the winning time was measured under. Recorded for
+    /// provenance (a streamed-mode time is not comparable to a
+    /// precomputed-mode time); never applied on a hit.
+    pub mem: MemoryBudget,
     /// Best measured wall time (seconds) for this key.
     pub seconds: f64,
 }
@@ -112,12 +118,13 @@ impl WisdomEntry {
     /// One-line human description ("schedule=dynamic:1 strategy=… …").
     pub fn describe(&self) -> String {
         format!(
-            "schedule={} strategy={} algorithm={} fft={} simd={} seconds={:.3e}",
+            "schedule={} strategy={} algorithm={} fft={} simd={} mem={} seconds={:.3e}",
             self.schedule.name(),
             self.strategy.name(),
             algorithm_name(self.algorithm),
             fft_engine_name(self.fft_engine),
             self.simd.name(),
+            self.mem.name(),
             self.seconds
         )
     }
@@ -337,7 +344,7 @@ impl WisdomStore {
             let e = &state.entries[&k];
             out.push(format!(
                 "entry b={} dir={} threads={} schedule={} strategy={} algorithm={} \
-                 fft={} seconds={:.6e} simd={}",
+                 fft={} seconds={:.6e} simd={} mem={}",
                 k.bandwidth,
                 k.direction.name(),
                 k.threads,
@@ -346,7 +353,8 @@ impl WisdomStore {
                 algorithm_name(e.algorithm),
                 fft_engine_name(e.fft_engine),
                 e.seconds,
-                e.simd.name()
+                e.simd.name(),
+                e.mem.name()
             ));
         }
         // Write-then-rename so a crash mid-write never corrupts the store.
@@ -440,6 +448,11 @@ fn parse_file(
             Some(s) => SimdPolicy::parse(s).map_err(|_| bad("simd", s))?,
             None => SimdPolicy::Auto,
         };
+        // Optional: absent in stores written before the memory axis.
+        let mem = match fields.get("mem") {
+            Some(s) => MemoryBudget::parse(s).ok_or_else(|| bad("mem", s))?,
+            None => MemoryBudget::Auto,
+        };
         let key = WisdomKey {
             bandwidth: b_s.parse().map_err(|_| bad("b", b_s))?,
             direction: TuneDirection::parse(dir_s).ok_or_else(|| bad("dir", dir_s))?,
@@ -452,6 +465,7 @@ fn parse_file(
             algorithm: parse_algorithm(algo_s).map_err(|_| bad("algorithm", algo_s))?,
             fft_engine: parse_fft_engine(fft_s).map_err(|_| bad("fft", fft_s))?,
             simd,
+            mem,
             seconds: secs_s
                 .parse::<f64>()
                 .ok()
@@ -482,6 +496,7 @@ mod tests {
             algorithm: DwtAlgorithm::MatVec,
             fft_engine: FftEngine::Radix2Baseline,
             simd: SimdPolicy::Scalar,
+            mem: MemoryBudget::Auto,
             seconds,
         }
     }
@@ -597,6 +612,39 @@ mod tests {
         match reopened.lookup(key(8)) {
             WisdomLookup::Hit(e) => assert_eq!(e.simd, SimdPolicy::Auto),
             other => panic!("expected hit on pre-simd file, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pre_mem_entries_parse_with_auto_default() {
+        let path = temp_path("premem");
+        let _ = std::fs::remove_file(&path);
+        // Strip the mem= fields to imitate a file from a pre-0.9 release.
+        let store = WisdomStore::open(&path);
+        store.record(
+            key(8),
+            WisdomEntry {
+                mem: MemoryBudget::Bytes(1 << 30),
+                ..entry(1e-3)
+            },
+        );
+        drop(store);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let patched: Vec<String> = text
+            .lines()
+            .map(|l| {
+                l.split_whitespace()
+                    .filter(|tok| !tok.starts_with("mem="))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            })
+            .collect();
+        std::fs::write(&path, patched.join("\n")).unwrap();
+        let reopened = WisdomStore::open(&path);
+        match reopened.lookup(key(8)) {
+            WisdomLookup::Hit(e) => assert_eq!(e.mem, MemoryBudget::Auto),
+            other => panic!("expected hit on pre-mem file, got {other:?}"),
         }
         let _ = std::fs::remove_file(&path);
     }

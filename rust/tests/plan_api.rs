@@ -215,3 +215,80 @@ fn batch_into_shape_validation() {
         .forward_batch_into(&grids, &mut outs, &mut ws)
         .is_err());
 }
+
+/// The typed [`MemoryBudget`] sweep across the planner API: Auto keeps
+/// small bandwidths fully materialized, a table-squeezing cap switches
+/// the same plan to streamed (partial) Wigner tables while staying
+/// numerically interchangeable, and an infeasible cap is a typed
+/// [`Error::BudgetExceeded`] — never a panic or a silent OOM.
+#[test]
+fn memory_budget_sweep_across_plan_api() {
+    use so3ft::coordinator::workspace_bytes;
+    use so3ft::dwt::tables::{WignerStorage, WignerTables};
+    use so3ft::MemoryBudget;
+
+    // Auto at a small bandwidth: full tables, nothing streamed, and the
+    // report's arithmetic is self-consistent.
+    let plan = So3Plan::builder(8)
+        .storage(WignerStorage::Precomputed)
+        .memory_budget(MemoryBudget::Auto)
+        .build()
+        .unwrap();
+    let report = plan.memory_report();
+    assert_eq!(report.budget, MemoryBudget::Auto);
+    assert!(!report.streamed, "b=8 must fit the Auto table cap");
+    assert_eq!(report.table_bytes, report.table_bytes_full);
+    assert_eq!(report.workspace_bytes, workspace_bytes(8));
+    assert_eq!(
+        report.total_bytes(),
+        report.table_bytes + report.workspace_bytes
+    );
+
+    // A cap that admits only half the b=16 tables: the plan streams the
+    // evicted degrees, reports it, stays under budget — and remains
+    // numerically interchangeable with the unlimited plan.
+    let b = 16;
+    let cap = workspace_bytes(b) + WignerTables::full_bytes(b) / 2;
+    let squeezed = So3Plan::builder(b)
+        .storage(WignerStorage::Precomputed)
+        .memory_budget(MemoryBudget::Bytes(cap))
+        .build()
+        .unwrap();
+    let sq_report = squeezed.memory_report();
+    assert!(sq_report.streamed, "half the table bytes must stream");
+    assert!(sq_report.table_bytes < sq_report.table_bytes_full);
+    assert!(sq_report.total_bytes() <= cap, "plan exceeds its own budget");
+
+    let unlimited = So3Plan::builder(b)
+        .storage(WignerStorage::Precomputed)
+        .memory_budget(MemoryBudget::Unlimited)
+        .build()
+        .unwrap();
+    assert!(!unlimited.memory_report().streamed);
+
+    let coeffs = So3Coeffs::random(b, 99);
+    let grid_sq = squeezed.inverse(&coeffs).unwrap();
+    let grid_un = unlimited.inverse(&coeffs).unwrap();
+    let mut dev = 0.0f64;
+    for (a, c) in grid_sq.as_slice().iter().zip(grid_un.as_slice()) {
+        dev = dev.max((*a - *c).abs());
+    }
+    assert!(dev < 1e-11, "streamed vs materialized diverged: {dev:.3e}");
+    let back = squeezed.forward(&grid_sq).unwrap();
+    assert!(coeffs.max_abs_error(&back) < 1e-10, "streamed roundtrip");
+
+    // A budget below the irreducible workspace is a typed error at build
+    // time, naming both sides of the inequality.
+    match So3Plan::builder(b)
+        .memory_budget(MemoryBudget::Bytes(1024))
+        .build()
+    {
+        Err(Error::BudgetExceeded {
+            required, budget, ..
+        }) => {
+            assert_eq!(budget, 1024);
+            assert!(required >= workspace_bytes(b));
+        }
+        other => panic!("expected BudgetExceeded, got {:?}", other.map(|_| ())),
+    }
+}

@@ -1,0 +1,135 @@
+//! Bit-parity pins for the transpose module (ISSUE 8 tentpole).
+//!
+//! The executor's in-place / parallel transpose paths must be *bit
+//! identical* to the copy-based reference — these are pure element moves,
+//! so any deviation is an indexing bug, not a rounding difference. All
+//! assertions here are exact (`assert_eq!` on the raw values).
+
+use so3ft::pool::WorkerPool;
+use so3ft::transpose::{
+    gather_permuted, transpose_in_place, transpose_into, transpose_into_parallel,
+    transpose_square_in_place,
+};
+use so3ft::Complex64;
+
+fn pseudo(i: usize) -> Complex64 {
+    // Deterministic, irregular values; exact equality is meaningful.
+    let x = ((i as u64).wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407) >> 11)
+        as f64
+        / (1u64 << 53) as f64;
+    Complex64::new(x, 1.0 - 2.0 * x)
+}
+
+fn matrix(rows: usize, cols: usize) -> Vec<Complex64> {
+    (0..rows * cols).map(pseudo).collect()
+}
+
+fn naive(src: &[Complex64], rows: usize, cols: usize) -> Vec<Complex64> {
+    let mut out = vec![Complex64::zero(); rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = src[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Square, rectangular, and odd-tail shapes exercised everywhere below.
+const SHAPES: &[(usize, usize)] = &[
+    (1, 1),
+    (2, 2),
+    (8, 8),
+    (32, 32),
+    (33, 33),
+    (64, 64),
+    (65, 65),
+    (5, 3),
+    (3, 5),
+    (7, 4),
+    (16, 48),
+    (48, 16),
+    (33, 17),
+    (17, 33),
+    (1, 19),
+    (19, 1),
+    (63, 65),
+];
+
+#[test]
+fn copy_based_transpose_is_bit_exact() {
+    for &(rows, cols) in SHAPES {
+        let src = matrix(rows, cols);
+        let mut dst = vec![Complex64::zero(); rows * cols];
+        transpose_into(&mut dst, &src, rows, cols);
+        assert_eq!(dst, naive(&src, rows, cols), "shape {rows}x{cols}");
+    }
+}
+
+#[test]
+fn in_place_matches_copy_based_bitwise() {
+    for &(rows, cols) in SHAPES {
+        let src = matrix(rows, cols);
+        let mut copy = vec![Complex64::zero(); rows * cols];
+        transpose_into(&mut copy, &src, rows, cols);
+        let mut inplace = src.clone();
+        transpose_in_place(&mut inplace, rows, cols);
+        assert_eq!(inplace, copy, "shape {rows}x{cols}");
+    }
+}
+
+#[test]
+fn square_in_place_matches_copy_based_bitwise() {
+    for &n in &[1usize, 2, 16, 31, 32, 33, 64, 65, 127, 128] {
+        let src = matrix(n, n);
+        let mut copy = vec![Complex64::zero(); n * n];
+        transpose_into(&mut copy, &src, n, n);
+        let mut inplace = src.clone();
+        transpose_square_in_place(&mut inplace, n);
+        assert_eq!(inplace, copy, "n={n}");
+    }
+}
+
+#[test]
+fn double_in_place_restores_the_original_bitwise() {
+    for &(rows, cols) in SHAPES {
+        let src = matrix(rows, cols);
+        let mut a = src.clone();
+        transpose_in_place(&mut a, rows, cols);
+        transpose_in_place(&mut a, cols, rows);
+        assert_eq!(a, src, "shape {rows}x{cols}");
+    }
+}
+
+#[test]
+fn parallel_matches_sequential_bitwise_on_shared_pool() {
+    // One shared pool for every shape/thread combination, as the executor
+    // would use it; includes shapes above and below PARALLEL_THRESHOLD.
+    let pool = WorkerPool::new(4).expect("pool");
+    for &(rows, cols) in &[(64usize, 64usize), (128, 512), (512, 128), (300, 300), (511, 513)] {
+        let src = matrix(rows, cols);
+        let mut seq = vec![Complex64::zero(); rows * cols];
+        transpose_into(&mut seq, &src, rows, cols);
+        for threads in [1usize, 2, 3, 4] {
+            let mut par = vec![Complex64::zero(); rows * cols];
+            transpose_into_parallel(&mut par, &src, rows, cols, &pool, threads);
+            assert_eq!(par, seq, "shape {rows}x{cols} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn gather_permuted_matches_reference_bitwise() {
+    let (rows, cols) = (31, 40);
+    let src_stride = 37;
+    let src = matrix(cols, src_stride);
+    let perm: Vec<usize> = (0..rows).map(|r| (r * 11 + 5) % src_stride).collect();
+    let mut want = vec![Complex64::zero(); rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            want[r * cols + c] = src[c * src_stride + perm[r]];
+        }
+    }
+    let mut got = vec![Complex64::zero(); rows * cols];
+    gather_permuted(&mut got, cols, &src, src_stride, &perm, rows, cols);
+    assert_eq!(got, want);
+}
