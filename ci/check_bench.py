@@ -9,7 +9,8 @@ meta; deliberately generous — this is a smoke-level net against
 order-of-magnitude regressions, not a microbenchmark). Byte-counting
 stages (`*_bytes`, e.g. the large-B sweep's ledger peak) instead use a
 fixed tight BYTES_HEADROOM: memory footprints are deterministic, so the
-gate pins them closely.
+gate pins them closely. FLOOR_STAGES invert the polarity — observed
+must be >= the baseline (the chaos gate's typed-rejection count).
 
 Usage:
   check_bench.py BENCH_fft.json ci/bench_baseline.json [options]
@@ -57,6 +58,14 @@ STAGES = (
     "peak_bytes",
 )
 
+# Floor-gated stage keys: "higher (or equal) is better". Used by the
+# chaos-smoke job's saturation probe — `rejected_jobs` counts typed
+# Overloaded rejections from the serve-bench rate ramp, and the gate
+# fails if the service stopped shedding load (observed < baseline
+# floor). Floor stages are hand-set in the baseline and are never
+# rewritten by --update.
+FLOOR_STAGES = ("rejected_jobs",)
+
 # Byte-counting stages bypass the baseline meta's wall-time threshold:
 # ledger footprints are deterministic (no shared-runner jitter), so a
 # tight fixed 10% covers allocator/layout drift without letting a 2x
@@ -69,9 +78,12 @@ def is_bytes(stage):
 
 
 def fmt_val(stage, v):
-    """One stage value for the delta tables (MiB for byte stages)."""
+    """One stage value for the delta tables (MiB for byte stages,
+    bare integers for floor-gated counts)."""
     if is_bytes(stage):
         return f"{v / (1 << 20):8.1f}Mi"
+    if stage in FLOOR_STAGES:
+        return f"{v:10.0f}"
     return f"{v:9.6f}s"
 
 
@@ -203,6 +215,23 @@ def main(argv):
                     f"{fmt_key(k)} {stage}: {fmt_val(stage, observed).strip()} > "
                     f"{fmt_val(stage, allowed).strip()} (baseline "
                     f"{fmt_val(stage, want[stage]).strip()} x {stage_threshold})"
+                )
+        for stage in FLOOR_STAGES:
+            if stage not in want:
+                continue
+            observed = got.get(stage)
+            if observed is None:
+                failures.append(f"{fmt_key(k)}: stage {stage} missing from bench output")
+                continue
+            checked += 1
+            ratio = observed / want[stage] if want[stage] > 0 else float("inf")
+            status = "ok" if observed >= want[stage] else "REGRESSION"
+            rows.append((k, stage, want[stage], observed, ratio, status))
+            if observed < want[stage]:
+                failures.append(
+                    f"{fmt_key(k)} {stage}: {fmt_val(stage, observed).strip()} < "
+                    f"floor {fmt_val(stage, want[stage]).strip()} "
+                    f"(floor stage: higher is better)"
                 )
 
     # Per-stage delta table (vs baseline, not vs the threshold ceiling).

@@ -49,8 +49,14 @@ options: --config FILE, --bandwidth/-b B, --threads/-t N,
 serve-bench options: --clients N, --jobs N (per client),
   --bandwidths LIST (default 8,16), --window-us N (micro-batch window),
   --rate JOBS_PER_S (open-loop arrival per client; 0 = burst),
-  --json PATH (merge service_* records into a BENCH_fft.json report);
-  the worker pool is sized by [service] threads, falling back to -t
+  --rate-ramp (double the rate each round until the service sheds load
+  with typed rejections), --max-queue N (admission cap on queued jobs),
+  --deadline-ms N (default per-job deadline), --inject SPEC (arm fault
+  injection, e.g. "batch-runner=3*err(chaos);plan-build=1*sleep(20)"),
+  --json PATH (merge service_* records into a BENCH_fft.json
+  report), --metrics-json PATH (write the final service metrics
+  snapshot as JSON); the worker pool is sized by [service] threads,
+  falling back to -t
 
 wisdom usage: so3ft wisdom train [--bandwidths 8,16] [-t N]
   [--time-budget-ms N] [--wisdom-cache PATH]; `show` lists the stored
@@ -245,17 +251,166 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
+/// One prewarmed (input, reference) set for a `serve-bench` bandwidth;
+/// references come from the service's own registry plans, so the parity
+/// check demands bit-identical results.
+struct Template {
+    b: usize,
+    coeffs: So3Coeffs,
+    grid: crate::so3::sampling::So3Grid,
+    fwd: So3Coeffs,
+}
+
+/// One `serve-bench` round's outcome: latencies of completed jobs plus
+/// every shed-load bucket. `completed + rejected + expired + faulted`
+/// equals the round's submission attempts.
+#[derive(Default)]
+struct RoundTally {
+    /// `(bandwidth, seconds)` per completed, parity-checked job.
+    latencies: Vec<(usize, f64)>,
+    /// Submissions refused with a typed `Error::Overloaded`.
+    rejected: u64,
+    /// Jobs resolved `DeadlineExceeded` or `Cancelled`.
+    expired: u64,
+    /// Jobs resolved with an injected or plan-build failure.
+    faulted: u64,
+}
+
+impl RoundTally {
+    fn merge(&mut self, other: RoundTally) {
+        self.latencies.extend(other.latencies);
+        self.rejected += other.rejected;
+        self.expired += other.expired;
+        self.faulted += other.faulted;
+    }
+}
+
+/// Run one `serve-bench` round: `clients` threads each submit `jobs`
+/// mixed-bandwidth jobs open-loop (paced by `rate` jobs/s when > 0),
+/// then collect. Saturation is the measurement, not a failure: typed
+/// `Overloaded` rejections and deadline expiries are tallied; with
+/// `tolerate_failures` (fault injection armed) execution failures are
+/// tallied too instead of aborting the round. A parity mismatch is
+/// always fatal.
+fn serve_round(
+    service: &crate::service::So3Service,
+    templates: &[Template],
+    clients: usize,
+    jobs: usize,
+    options: crate::service::PlanOptions,
+    rate: f64,
+    tolerate_failures: bool,
+) -> Result<RoundTally> {
+    use crate::service::{Direction, JobHandle, JobSpec};
+
+    let mut per_client: Vec<Result<RoundTally>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for client in 0..clients {
+            handles.push(scope.spawn(move || -> Result<RoundTally> {
+                let interval =
+                    (rate > 0.0).then(|| std::time::Duration::from_secs_f64(1.0 / rate));
+                let mut tally = RoundTally::default();
+                let mut pending: Vec<(usize, Direction, JobHandle)> = Vec::with_capacity(jobs);
+                for i in 0..jobs {
+                    let ti = (client + i) % templates.len();
+                    let t = &templates[ti];
+                    let direction = if (client + i) % 2 == 0 {
+                        Direction::Inverse
+                    } else {
+                        Direction::Forward
+                    };
+                    // Inputs come from the buffer pool (filled from the
+                    // template), so the client side allocates nothing
+                    // per job in the steady state either.
+                    let submitted = match direction {
+                        Direction::Inverse => {
+                            let mut input = service.checkout_coeffs(t.b)?;
+                            input.as_mut_slice().copy_from_slice(t.coeffs.as_slice());
+                            service.submit(JobSpec::inverse(t.b).options(options), input)
+                        }
+                        Direction::Forward => {
+                            let mut input = service.checkout_grid(t.b)?;
+                            input.as_mut_slice().copy_from_slice(t.grid.as_slice());
+                            service.submit(JobSpec::forward(t.b).options(options), input)
+                        }
+                    };
+                    match submitted {
+                        Ok(handle) => pending.push((ti, direction, handle)),
+                        Err(Error::Overloaded { .. }) => tally.rejected += 1,
+                        Err(e) => return Err(e),
+                    }
+                    // Pace the NEXT arrival only — sleeping after the
+                    // final submission would pad the measured wall time.
+                    if let (Some(interval), true) = (interval, i + 1 < jobs) {
+                        std::thread::sleep(interval);
+                    }
+                }
+                for (ti, direction, handle) in pending {
+                    let t = &templates[ti];
+                    match handle.wait_timed() {
+                        Ok((out, latency)) => {
+                            let ok = match direction {
+                                Direction::Inverse => out
+                                    .grid()
+                                    .is_some_and(|g| g.as_slice() == t.grid.as_slice()),
+                                Direction::Forward => out
+                                    .coeffs()
+                                    .is_some_and(|c| c.as_slice() == t.fwd.as_slice()),
+                            };
+                            if !ok {
+                                return Err(Error::Service(format!(
+                                    "parity mismatch: {direction:?} b={} diverged from the plan",
+                                    t.b
+                                )));
+                            }
+                            service.recycle(out);
+                            tally.latencies.push((t.b, latency.as_secs_f64()));
+                        }
+                        Err(Error::DeadlineExceeded { .. }) | Err(Error::Cancelled) => {
+                            tally.expired += 1;
+                        }
+                        Err(Error::FaultInjected { .. }) | Err(Error::PlanBuildFailed { .. }) => {
+                            tally.faulted += 1;
+                        }
+                        Err(_) if tolerate_failures => tally.faulted += 1,
+                        Err(e) => return Err(e),
+                    }
+                }
+                Ok(tally)
+            }));
+        }
+        for h in handles {
+            per_client.push(h.join().expect("client thread panicked"));
+        }
+    });
+    let mut total = RoundTally::default();
+    for r in per_client {
+        total.merge(r?);
+    }
+    Ok(total)
+}
+
 /// `serve-bench`: N client threads submit mixed-bandwidth jobs to one
 /// `So3Service` at an open-loop arrival rate; reports throughput and
 /// latency percentiles, verifies every result bit-for-bit against the
 /// registry plan, and (with `--json`) merges `service_throughput` /
 /// `service_p99` records into a BENCH_fft.json-format report for the CI
-/// gate.
+/// gate. `--rate-ramp` turns it into an overload probe: the arrival
+/// rate doubles each round until the service sheds load with typed
+/// rejections (a final burst round guarantees saturation), and
+/// `service_rejected` / `service_admitted_p99` records capture the
+/// saturation behavior for the chaos gate. `--inject` arms
+/// [`crate::faults`] before the run.
 pub fn serve_bench(inv: &Invocation) -> Result<()> {
     use crate::bench_util::{append_json_records, fmt_seconds, Table};
-    use crate::service::{Direction, JobHandle, JobSpec, PlanOptions};
+    use crate::service::PlanOptions;
 
     let sb = &inv.serve;
+    if let Some(spec) = &sb.inject {
+        crate::faults::arm_from_spec(spec)?;
+        println!("fault injection armed: {spec}");
+    }
     let threads = if inv.run.service.threads > 0 {
         inv.run.service.threads
     } else {
@@ -273,14 +428,7 @@ pub fn serve_bench(inv: &Invocation) -> Result<()> {
 
     // Prewarm: one plan + one input/reference pair per bandwidth, built
     // through the service registry so the bench measures serving, not
-    // first-touch planning. References come from the same plans, so the
-    // parity check below demands bit-identical results.
-    struct Template {
-        b: usize,
-        coeffs: So3Coeffs,
-        grid: crate::so3::sampling::So3Grid,
-        fwd: So3Coeffs,
-    }
+    // first-touch planning.
     let mut templates = Vec::with_capacity(sb.bandwidths.len());
     for &b in &sb.bandwidths {
         let plan = service.plan(b, options)?;
@@ -295,10 +443,9 @@ pub fn serve_bench(inv: &Invocation) -> Result<()> {
         });
     }
 
-    let total_jobs = sb.clients * sb.jobs;
     println!(
         "serve-bench: {} clients x {} jobs, bandwidths {:?}, {} worker threads, \
-         window {} us, rate {}",
+         window {} us, rate {}{}",
         sb.clients,
         sb.jobs,
         sb.bandwidths,
@@ -308,88 +455,49 @@ pub fn serve_bench(inv: &Invocation) -> Result<()> {
             format!("{} jobs/s/client", sb.rate)
         } else {
             "burst".to_string()
-        }
+        },
+        if sb.rate_ramp { " (ramping)" } else { "" }
     );
 
+    let tolerate = sb.inject.is_some();
     let t0 = std::time::Instant::now();
-    let mut per_client: Vec<Result<Vec<(usize, f64)>>> = Vec::new();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for client in 0..sb.clients {
-            let service = &service;
-            let templates = &templates;
-            handles.push(scope.spawn(move || -> Result<Vec<(usize, f64)>> {
-                let interval = (sb.rate > 0.0)
-                    .then(|| std::time::Duration::from_secs_f64(1.0 / sb.rate));
-                // Open-loop arrival: submit everything (paced by the
-                // interval when set), then collect — completions never
-                // gate submissions.
-                let mut pending: Vec<(usize, Direction, JobHandle)> = Vec::with_capacity(sb.jobs);
-                for i in 0..sb.jobs {
-                    let ti = (client + i) % templates.len();
-                    let t = &templates[ti];
-                    let direction = if (client + i) % 2 == 0 {
-                        Direction::Inverse
-                    } else {
-                        Direction::Forward
-                    };
-                    // Inputs come from the buffer pool (filled from the
-                    // template), so the client side allocates nothing
-                    // per job in the steady state either.
-                    let handle = match direction {
-                        Direction::Inverse => {
-                            let mut input = service.checkout_coeffs(t.b)?;
-                            input.as_mut_slice().copy_from_slice(t.coeffs.as_slice());
-                            service.submit(JobSpec::inverse(t.b).options(options), input)?
-                        }
-                        Direction::Forward => {
-                            let mut input = service.checkout_grid(t.b)?;
-                            input.as_mut_slice().copy_from_slice(t.grid.as_slice());
-                            service.submit(JobSpec::forward(t.b).options(options), input)?
-                        }
-                    };
-                    pending.push((ti, direction, handle));
-                    // Pace the NEXT arrival only — sleeping after the
-                    // final submission would pad the measured wall time.
-                    if let (Some(interval), true) = (interval, i + 1 < sb.jobs) {
-                        std::thread::sleep(interval);
-                    }
-                }
-                let mut latencies = Vec::with_capacity(pending.len());
-                for (ti, direction, handle) in pending {
-                    let t = &templates[ti];
-                    let (out, latency) = handle.wait_timed()?;
-                    let ok = match direction {
-                        Direction::Inverse => out
-                            .grid()
-                            .is_some_and(|g| g.as_slice() == t.grid.as_slice()),
-                        Direction::Forward => out
-                            .coeffs()
-                            .is_some_and(|c| c.as_slice() == t.fwd.as_slice()),
-                    };
-                    if !ok {
-                        return Err(Error::Service(format!(
-                            "parity mismatch: {direction:?} b={} diverged from the plan",
-                            t.b
-                        )));
-                    }
-                    service.recycle(out);
-                    latencies.push((t.b, latency.as_secs_f64()));
-                }
-                Ok(latencies)
-            }));
+    let mut tally = RoundTally::default();
+    if sb.rate_ramp {
+        // Overload probe: double the per-client rate each round until
+        // the service sheds load with a typed rejection; a final burst
+        // round guarantees saturation even if pacing never outran the
+        // workers.
+        const MAX_RAMP_ROUNDS: usize = 6;
+        let mut rate = if sb.rate > 0.0 { sb.rate } else { 50.0 };
+        for round in 1..=MAX_RAMP_ROUNDS {
+            println!("ramp round {round}: {rate} jobs/s/client");
+            let r = serve_round(
+                &service, &templates, sb.clients, sb.jobs, options, rate, tolerate,
+            )?;
+            let shed = r.rejected > 0;
+            tally.merge(r);
+            if shed {
+                break;
+            }
+            rate *= 2.0;
         }
-        for h in handles {
-            per_client.push(h.join().expect("client thread panicked"));
+        if tally.rejected == 0 {
+            println!("ramp final round: burst");
+            let r = serve_round(
+                &service, &templates, sb.clients, sb.jobs, options, 0.0, tolerate,
+            )?;
+            tally.merge(r);
         }
-    });
+    } else {
+        tally = serve_round(
+            &service, &templates, sb.clients, sb.jobs, options, sb.rate, tolerate,
+        )?;
+    }
     let wall = t0.elapsed().as_secs_f64();
 
-    let mut all: Vec<(usize, f64)> = Vec::with_capacity(total_jobs);
-    for r in per_client {
-        all.extend(r?);
-    }
-    let throughput = total_jobs as f64 / wall;
+    let all = &tally.latencies;
+    let completed = all.len();
+    let throughput = completed as f64 / wall;
     let stats = service.stats();
 
     let mut table = Table::new(&["B", "jobs", "p50", "p95", "p99", "max"]);
@@ -424,7 +532,7 @@ pub fn serve_bench(inv: &Invocation) -> Result<()> {
     }
     table.print();
     println!(
-        "throughput: {throughput:.1} jobs/s ({total_jobs} jobs in {}); \
+        "throughput: {throughput:.1} jobs/s ({completed} completed in {}); \
          batches {} (max size {}), registry {} plans ({} hits / {} misses / {} evictions), \
          buffers created: {} workspaces, {} grids, {} coeffs",
         fmt_seconds(wall),
@@ -438,19 +546,52 @@ pub fn serve_bench(inv: &Invocation) -> Result<()> {
         stats.buffers.grids_created,
         stats.buffers.coeffs_created,
     );
-    println!("parity: all {total_jobs} results bit-identical to the registry plans");
+    println!("parity: all {completed} completed results bit-identical to the registry plans");
+    if sb.rate_ramp || tally.rejected + tally.expired + tally.faulted > 0 {
+        println!(
+            "shed load: {} rejected (typed Overloaded), {} deadline-expired/cancelled, \
+             {} faulted",
+            tally.rejected, tally.expired, tally.faulted
+        );
+    }
     // b = 0 marks the mixed-traffic aggregate (the per-bandwidth rows
     // carry their own keys); per_job_s is gated in CI (lower = better,
     // unlike raw throughput).
     records.push(format!(
         "{{\"kind\": \"service_throughput\", \"b\": 0, \"threads\": {threads}, \
-         \"engine\": \"service\", \"jobs\": {total_jobs}, \"wall_s\": {wall:.6e}, \
+         \"engine\": \"service\", \"jobs\": {completed}, \"wall_s\": {wall:.6e}, \
          \"throughput_jobs_per_s\": {throughput:.3}, \"per_job_s\": {:.6e}}}",
-        wall / total_jobs as f64
+        wall / completed.max(1) as f64
     ));
+    if sb.rate_ramp {
+        // Chaos-gate records: `rejected_jobs` is gated as a FLOOR (the
+        // ramp must actually reach typed saturation), `p99_s` as the
+        // usual ceiling over admitted jobs.
+        let mut all_lat: Vec<f64> = all.iter().map(|&(_, s)| s).collect();
+        all_lat.sort_by(|x, y| x.partial_cmp(y).expect("latencies are finite"));
+        let p99_all = percentile(&all_lat, 99.0);
+        records.push(format!(
+            "{{\"kind\": \"service_rejected\", \"b\": 0, \"threads\": {threads}, \
+             \"engine\": \"service\", \"rejected_jobs\": {}}}",
+            tally.rejected
+        ));
+        records.push(format!(
+            "{{\"kind\": \"service_admitted_p99\", \"b\": 0, \"threads\": {threads}, \
+             \"engine\": \"service\", \"jobs\": {completed}, \"p99_s\": {p99_all:.6e}}}"
+        ));
+    }
     if let Some(path) = &sb.json {
         append_json_records(path, &records)?;
         println!("merged {} service records into {path}", records.len());
+    }
+    let metrics = service.metrics();
+    print!("{metrics}");
+    if let Some(path) = &sb.metrics_json {
+        std::fs::write(path, format!("{}\n", metrics.to_json()))?;
+        println!("wrote service metrics snapshot to {path}");
+    }
+    if sb.inject.is_some() {
+        crate::faults::disarm_all();
     }
     Ok(())
 }

@@ -41,8 +41,17 @@
 //!   --window-us <N>           micro-batch window override (µs)
 //!   --rate <jobs/s>           open-loop arrival rate per client
 //!                             (0 = burst, the default)
+//!   --rate-ramp               double the rate each round until the
+//!                             service sheds load (typed rejections)
+//!   --max-queue <N>           admission cap on queued jobs
+//!   --deadline-ms <N>         default per-job deadline, milliseconds
+//!   --inject <spec>           arm fault injection, e.g.
+//!                             "batch-runner=3*err(chaos);plan-build=1*sleep(20)"
+//!                             (needs the `fault-injection` build feature)
 //!   --json <path>             merge service_* records into a
 //!                             BENCH_fft.json-format report
+//!   --metrics-json <path>     write the final So3Service metrics
+//!                             snapshot as JSON
 //!
 //! wisdom usage:
 //!   so3ft wisdom train [--bandwidths 8,16] [-t N] [--time-budget-ms N]
@@ -70,8 +79,16 @@ pub struct ServeBenchOpts {
     pub bandwidths: Vec<usize>,
     /// Open-loop arrival rate per client in jobs/s (0 = burst).
     pub rate: f64,
+    /// Overload mode: double `rate` each round until the service sheds
+    /// load with typed rejections (then one final burst round).
+    pub rate_ramp: bool,
+    /// Fault-injection spec, armed before the run (see
+    /// [`crate::faults::arm_from_spec`]).
+    pub inject: Option<String>,
     /// Merge `service_*` records into this BENCH_fft.json-format file.
     pub json: Option<String>,
+    /// Write the final service metrics snapshot as JSON to this path.
+    pub metrics_json: Option<String>,
 }
 
 impl Default for ServeBenchOpts {
@@ -81,7 +98,10 @@ impl Default for ServeBenchOpts {
             jobs: 16,
             bandwidths: vec![8, 16],
             rate: 0.0,
+            rate_ramp: false,
+            inject: None,
             json: None,
+            metrics_json: None,
         }
     }
 }
@@ -300,8 +320,31 @@ pub fn parse_args(args: &[String]) -> Result<Invocation> {
                     .ok_or_else(|| Error::Config("bad --rate (jobs/s, >= 0)".into()))?;
                 i += 1;
             }
+            "--rate-ramp" => serve.rate_ramp = true,
+            "--max-queue" => {
+                let q = need(args, i, a)?
+                    .parse()
+                    .map_err(|_| Error::Config("bad --max-queue".into()))?;
+                run.service.max_queue = Some(q);
+                i += 1;
+            }
+            "--deadline-ms" => {
+                let ms = need(args, i, a)?
+                    .parse()
+                    .map_err(|_| Error::Config("bad --deadline-ms".into()))?;
+                run.service.default_deadline_ms = Some(ms);
+                i += 1;
+            }
+            "--inject" => {
+                serve.inject = Some(need(args, i, a)?);
+                i += 1;
+            }
             "--json" => {
                 serve.json = Some(need(args, i, a)?);
+                i += 1;
+            }
+            "--metrics-json" => {
+                serve.metrics_json = Some(need(args, i, a)?);
                 i += 1;
             }
             _ => {
@@ -423,7 +466,8 @@ mod tests {
     fn serve_bench_flags_parse() {
         let inv = parse_args(&argv(
             "serve-bench -t 2 --clients 3 --jobs 5 --bandwidths 4,8 --window-us 250 \
-             --rate 100 --json out.json",
+             --rate 100 --rate-ramp --max-queue 16 --deadline-ms 2000 \
+             --inject batch-runner=3*err(chaos) --json out.json --metrics-json m.json",
         ))
         .unwrap();
         assert_eq!(inv.command, "serve-bench");
@@ -432,15 +476,23 @@ mod tests {
         assert_eq!(inv.serve.bandwidths, vec![4, 8]);
         assert_eq!(inv.run.service.batch_window_us, 250);
         assert_eq!(inv.serve.rate, 100.0);
+        assert!(inv.serve.rate_ramp);
+        assert_eq!(inv.run.service.max_queue, Some(16));
+        assert_eq!(inv.run.service.default_deadline_ms, Some(2000));
+        assert_eq!(inv.serve.inject.as_deref(), Some("batch-runner=3*err(chaos)"));
         assert_eq!(inv.serve.json.as_deref(), Some("out.json"));
+        assert_eq!(inv.serve.metrics_json.as_deref(), Some("m.json"));
         // Defaults.
         let inv = parse_args(&argv("serve-bench")).unwrap();
         assert_eq!(inv.serve, ServeBenchOpts::default());
+        assert!(inv.run.service.max_queue.is_none());
         // Validation.
         assert!(parse_args(&argv("serve-bench --clients 0")).is_err());
         assert!(parse_args(&argv("serve-bench --jobs zero")).is_err());
         assert!(parse_args(&argv("serve-bench --bandwidths ,")).is_err());
         assert!(parse_args(&argv("serve-bench --rate -3")).is_err());
+        assert!(parse_args(&argv("serve-bench --max-queue many")).is_err());
+        assert!(parse_args(&argv("serve-bench --deadline-ms")).is_err());
     }
 
     #[test]

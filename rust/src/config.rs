@@ -26,6 +26,10 @@
 //! batch_window_us = 200       # micro-batch window, microseconds (0 = off)
 //! registry_budget_mb = 2048   # LRU plan-cache budget (omit = unbounded)
 //! max_batch = 32              # jobs per micro-batch
+//! max_queue = 256             # admission cap on queued jobs (omit = unlimited)
+//! max_inflight_bytes = 1073741824 # admission cap on in-flight payload bytes
+//! default_deadline_ms = 5000  # deadline for jobs that set none (omit = none)
+//! tenant_quota = 8            # per-tenant in-flight job cap (omit = none)
 //!
 //! [runtime]
 //! artifacts = "artifacts"
@@ -132,6 +136,15 @@ pub struct ServiceSettings {
     pub registry_budget_mb: Option<usize>,
     /// Upper bound on jobs per micro-batch.
     pub max_batch: usize,
+    /// Admission cap on queued jobs (`None` = unlimited).
+    pub max_queue: Option<usize>,
+    /// Admission cap on in-flight payload bytes (`None` = unlimited).
+    pub max_inflight_bytes: Option<usize>,
+    /// Deadline applied to jobs that set none, in milliseconds
+    /// (`None` = jobs without an explicit deadline never expire).
+    pub default_deadline_ms: Option<u64>,
+    /// Per-tenant in-flight job cap (`None` = no quota).
+    pub tenant_quota: Option<usize>,
 }
 
 impl Default for ServiceSettings {
@@ -141,6 +154,10 @@ impl Default for ServiceSettings {
             batch_window_us: 0,
             registry_budget_mb: None,
             max_batch: 32,
+            max_queue: None,
+            max_inflight_bytes: None,
+            default_deadline_ms: None,
+            tenant_quota: None,
         }
     }
 }
@@ -157,6 +174,18 @@ impl ServiceSettings {
         }
         if let Some(mb) = self.registry_budget_mb {
             builder = builder.registry_budget_bytes(mb << 20);
+        }
+        if let Some(q) = self.max_queue {
+            builder = builder.max_queue(q);
+        }
+        if let Some(bytes) = self.max_inflight_bytes {
+            builder = builder.max_inflight_bytes(bytes);
+        }
+        if let Some(ms) = self.default_deadline_ms {
+            builder = builder.default_deadline(std::time::Duration::from_millis(ms));
+        }
+        if let Some(q) = self.tenant_quota {
+            builder = builder.tenant_quota(q);
         }
         builder
     }
@@ -294,7 +323,16 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
     ("memory", &["budget"]),
     (
         "service",
-        &["threads", "batch_window_us", "registry_budget_mb", "max_batch"],
+        &[
+            "threads",
+            "batch_window_us",
+            "registry_budget_mb",
+            "max_batch",
+            "max_queue",
+            "max_inflight_bytes",
+            "default_deadline_ms",
+            "tenant_quota",
+        ],
     ),
     ("runtime", &["artifacts", "use_xla"]),
     ("run", &["seed"]),
@@ -383,6 +421,18 @@ impl RunConfig {
             }
             cfg.service.max_batch = m;
         }
+        if let Some(q) = p.get_usize("service", "max_queue")? {
+            cfg.service.max_queue = Some(q);
+        }
+        if let Some(bytes) = p.get_usize("service", "max_inflight_bytes")? {
+            cfg.service.max_inflight_bytes = Some(bytes);
+        }
+        if let Some(ms) = p.get_usize("service", "default_deadline_ms")? {
+            cfg.service.default_deadline_ms = Some(ms as u64);
+        }
+        if let Some(q) = p.get_usize("service", "tenant_quota")? {
+            cfg.service.tenant_quota = Some(q);
+        }
         if let Some(s) = p.get("runtime", "artifacts") {
             cfg.artifacts_dir = s.to_string();
         }
@@ -460,6 +510,18 @@ impl RunConfig {
             out.push_str(&format!("registry_budget_mb = {mb}\n"));
         }
         out.push_str(&format!("max_batch = {}\n", self.service.max_batch));
+        if let Some(q) = self.service.max_queue {
+            out.push_str(&format!("max_queue = {q}\n"));
+        }
+        if let Some(bytes) = self.service.max_inflight_bytes {
+            out.push_str(&format!("max_inflight_bytes = {bytes}\n"));
+        }
+        if let Some(ms) = self.service.default_deadline_ms {
+            out.push_str(&format!("default_deadline_ms = {ms}\n"));
+        }
+        if let Some(q) = self.service.tenant_quota {
+            out.push_str(&format!("tenant_quota = {q}\n"));
+        }
         out.push_str("\n[runtime]\n");
         out.push_str(&format!("artifacts = \"{}\"\n", self.artifacts_dir));
         out.push_str(&format!("use_xla = {}\n", self.use_xla));
@@ -505,6 +567,10 @@ threads = 3
 batch_window_us = 250
 registry_budget_mb = 64
 max_batch = 8
+max_queue = 128
+max_inflight_bytes = 1048576
+default_deadline_ms = 2500
+tenant_quota = 4
 
 [runtime]
 artifacts = "my-artifacts"
@@ -540,6 +606,10 @@ time_budget_ms = 125
                 batch_window_us: 250,
                 registry_budget_mb: Some(64),
                 max_batch: 8,
+                max_queue: Some(128),
+                max_inflight_bytes: Some(1048576),
+                default_deadline_ms: Some(2500),
+                tenant_quota: Some(4),
             }
         );
         assert_eq!(cfg.artifacts_dir, "my-artifacts");
@@ -645,6 +715,20 @@ time_budget_ms = 125
         .unwrap();
         let service = cfg.service.to_builder().build().unwrap();
         assert_eq!(service.threads(), 2);
+        // Overload knobs flow config -> settings -> builder -> admission.
+        let cfg = RunConfig::from_parsed(
+            &ParsedConfig::parse("[service]\nthreads = 1\nmax_queue = 0").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.service.max_queue, Some(0));
+        let service = cfg.service.to_builder().build().unwrap();
+        let spec = crate::service::JobSpec::forward(4);
+        let input =
+            crate::service::JobInput::Grid(crate::so3::sampling::So3Grid::zeros(4).unwrap());
+        match service.submit(spec, input) {
+            Err(crate::error::Error::Overloaded { .. }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
     }
 
     #[test]

@@ -473,6 +473,11 @@ impl Executor {
         // Resolve the memory budget once: a Bytes cap the workspace alone
         // exceeds is a typed error here, before any table is built.
         let table_budget = config.memory.table_budget_bytes(b)?;
+        // Fault site: exercised by the chaos suite to prove a failed
+        // table load surfaces as a typed constructor error, not a panic.
+        if let Some(action) = crate::faults::fire(crate::faults::WIGNER_LOAD) {
+            action.apply(crate::faults::WIGNER_LOAD)?;
+        }
         let tables = match (config.storage, config.algorithm) {
             (
                 WignerStorage::Precomputed,

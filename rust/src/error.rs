@@ -2,9 +2,31 @@
 //! derive crates are available offline).
 
 use std::fmt;
+use std::time::Duration;
 
 /// Convenience alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
+
+/// Which admission limit rejected a job (see [`Error::Overloaded`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OverloadCause {
+    /// The bounded queue is full (`max_queue`).
+    QueueDepth,
+    /// Admitting the payload would exceed `max_inflight_bytes`.
+    InflightBytes,
+    /// The submitting tenant is at its `tenant_quota`.
+    TenantQuota,
+}
+
+impl fmt::Display for OverloadCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            OverloadCause::QueueDepth => "queue depth",
+            OverloadCause::InflightBytes => "in-flight bytes",
+            OverloadCause::TenantQuota => "tenant quota",
+        })
+    }
+}
 
 /// Errors surfaced by the SO(3) transform stack.
 #[derive(Debug)]
@@ -58,6 +80,40 @@ pub enum Error {
     /// plan could not be built (the build error is embedded in the
     /// message, once per affected job).
     Service(String),
+
+    /// Admission control rejected the job: the service is saturated.
+    /// `retry_after_hint` estimates when the backlog will have drained
+    /// (queued work × the observed per-job rate) — a cooperative client
+    /// backs off at least that long before resubmitting.
+    Overloaded {
+        cause: OverloadCause,
+        retry_after_hint: Duration,
+    },
+
+    /// The job's (relative) deadline expired while it was still queued;
+    /// the dispatcher resolved it without executing it.
+    DeadlineExceeded { deadline: Duration },
+
+    /// The job was cancelled via `JobHandle::cancel` before dispatch.
+    Cancelled,
+
+    /// A drain-with-deadline shutdown (`So3Service::shutdown`) hit its
+    /// deadline while this job was still queued.
+    ShutdownDrain,
+
+    /// An armed fault fired at a named injection site (see
+    /// [`crate::faults`]). Only ever produced when faults are explicitly
+    /// armed — chaos tests and `serve-bench --inject`.
+    FaultInjected { site: String, msg: String },
+
+    /// A recent plan build for this registry key failed; the registry
+    /// serves the cached failure without rebuilding until the
+    /// exponential backoff elapses (`retry_in`).
+    PlanBuildFailed {
+        msg: String,
+        attempts: u32,
+        retry_in: Duration,
+    },
 
     /// Configuration file / CLI parsing problems.
     Config(String),
@@ -123,6 +179,38 @@ impl fmt::Display for Error {
                  budget is {budget} bytes"
             ),
             Error::Service(msg) => write!(f, "service error: {msg}"),
+            Error::Overloaded {
+                cause,
+                retry_after_hint,
+            } => write!(
+                f,
+                "service overloaded ({cause}); retry after ~{}ms",
+                retry_after_hint.as_millis()
+            ),
+            Error::DeadlineExceeded { deadline } => write!(
+                f,
+                "job deadline of {}ms expired before dispatch",
+                deadline.as_millis()
+            ),
+            Error::Cancelled => write!(f, "job cancelled before dispatch"),
+            Error::ShutdownDrain => write!(
+                f,
+                "service shut down before the job was dispatched \
+                 (drain deadline reached)"
+            ),
+            Error::FaultInjected { site, msg } => {
+                write!(f, "injected fault at {site}: {msg}")
+            }
+            Error::PlanBuildFailed {
+                msg,
+                attempts,
+                retry_in,
+            } => write!(
+                f,
+                "plan build failed ({attempts} attempt(s), cached): {msg}; \
+                 next retry allowed in ~{}ms",
+                retry_in.as_millis()
+            ),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Runtime(msg) => write!(f, "xla runtime error: {msg}"),
             Error::MissingArtifact { b, path } => write!(
@@ -200,5 +288,41 @@ mod tests {
         assert!(bw.contains("bandwidth mismatch") && bw.contains("workspace"));
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(io.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn overload_and_failure_variants_display_their_fields() {
+        let overloaded = Error::Overloaded {
+            cause: OverloadCause::QueueDepth,
+            retry_after_hint: Duration::from_millis(25),
+        }
+        .to_string();
+        assert!(overloaded.contains("overloaded"));
+        assert!(overloaded.contains("queue depth"));
+        assert!(overloaded.contains("25"));
+        assert_eq!(OverloadCause::InflightBytes.to_string(), "in-flight bytes");
+        assert_eq!(OverloadCause::TenantQuota.to_string(), "tenant quota");
+        let deadline = Error::DeadlineExceeded {
+            deadline: Duration::from_millis(50),
+        }
+        .to_string();
+        assert!(deadline.contains("deadline") && deadline.contains("50"));
+        assert!(Error::Cancelled.to_string().contains("cancelled"));
+        assert!(Error::ShutdownDrain.to_string().contains("shut down"));
+        let fault = Error::FaultInjected {
+            site: "plan-build".into(),
+            msg: "chaos".into(),
+        }
+        .to_string();
+        assert!(fault.contains("plan-build") && fault.contains("chaos"));
+        let cached = Error::PlanBuildFailed {
+            msg: "bad table".into(),
+            attempts: 3,
+            retry_in: Duration::from_millis(400),
+        }
+        .to_string();
+        assert!(cached.contains("bad table"));
+        assert!(cached.contains("3 attempt"));
+        assert!(cached.contains("400"));
     }
 }

@@ -1,0 +1,397 @@
+//! Deterministic fault injection (failpoint-style) for chaos testing.
+//!
+//! Production code is littered with a handful of **named fault sites**
+//! (plan build, Wigner table load, worker bodies, the batch runner, the
+//! wisdom store, the service dispatcher). Each site calls [`fire`] and,
+//! when a fault is armed for its name, applies the injected
+//! [`FaultAction`] — a typed error, a panic, or a delay. The chaos suite
+//! in `rust/tests/failure_injection.rs` and `serve-bench --inject` drive
+//! these sites deterministically; see `docs/PERF.md` ("Failure semantics
+//! & overload behavior").
+//!
+//! **Cost when disarmed:** [`fire`] is a single relaxed atomic load —
+//! the sites stay in release builds but are runtime no-ops. Faults only
+//! ever fire when explicitly armed, through one of:
+//!
+//! * the programmatic API ([`arm`] / [`arm_from_spec`] / [`ScopedFault`])
+//!   — what the chaos tests and the `serve-bench --inject` flag use;
+//! * the `SO3FT_FAULTS` environment variable, parsed once on first
+//!   [`fire`] — **only** when the crate is compiled with the
+//!   `fault-injection` feature, so a stray variable cannot destabilize a
+//!   default-featured production binary.
+//!
+//! # Spec grammar (`--inject` / `SO3FT_FAULTS`)
+//!
+//! ```text
+//! spec    := entry ( (';' | ',') entry )*
+//! entry   := site '=' [ count '*' ] action
+//! action  := 'err' [ '(' msg ')' ]     -- typed Error::FaultInjected
+//!          | 'panic' [ '(' msg ')' ]   -- panic at the site
+//!          | 'sleep' '(' millis ')'    -- delay, then proceed normally
+//! ```
+//!
+//! `count` bounds the number of fires (the fault disarms itself after);
+//! without it the fault fires on every hit. Examples:
+//! `plan-build=err(chaos)`, `batch-runner=2*panic`,
+//! `dispatcher=1*panic;wisdom-store=err`, `worker-body=sleep(5)`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::lock_unpoisoned as lock;
+
+/// Site: [`So3Plan`](crate::transform::So3Plan) construction inside the
+/// registry (`PlanRegistry::build`).
+pub const PLAN_BUILD: &str = "plan-build";
+/// Site: Wigner table build/load inside `Executor::new`.
+pub const WIGNER_LOAD: &str = "wigner-load";
+/// Site: top of every pool worker's region share (fires once per worker
+/// per parallel region; infallible context, so `err` acts like `panic`).
+pub const WORKER_BODY: &str = "worker-body";
+/// Site: the service batch runner — once before the `*_batch_into` fast
+/// path, then once per job on the per-job fallback reruns.
+pub const BATCH_RUNNER: &str = "batch-runner";
+/// Site: wisdom store file load (`err` degrades the store to Estimate
+/// fallback exactly like an unreadable file; `panic` propagates).
+pub const WISDOM_STORE: &str = "wisdom-store";
+/// Site: the service dispatcher loop, after work is available but
+/// **before** any job is dequeued — a panic here is recovered by the
+/// watchdog without losing a single queued handle.
+pub const DISPATCHER: &str = "dispatcher";
+
+/// Every site name [`arm_from_spec`] accepts.
+pub const SITES: &[&str] = &[
+    PLAN_BUILD,
+    WIGNER_LOAD,
+    WORKER_BODY,
+    BATCH_RUNNER,
+    WISDOM_STORE,
+    DISPATCHER,
+];
+
+/// What an armed fault does when its site fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Fail the site with [`Error::FaultInjected`] (at infallible sites
+    /// this escalates to a panic).
+    Err(String),
+    /// Panic at the site.
+    Panic(String),
+    /// Sleep, then let the site proceed normally (latency injection).
+    Sleep(Duration),
+}
+
+impl FaultAction {
+    /// Apply at a `Result`-typed site: `Err` becomes a typed
+    /// [`Error::FaultInjected`], `Panic` panics, `Sleep` delays and
+    /// returns `Ok` so the site proceeds.
+    pub fn apply(self, site: &str) -> Result<()> {
+        match self {
+            FaultAction::Err(msg) => Err(Error::FaultInjected {
+                site: site.to_string(),
+                msg,
+            }),
+            FaultAction::Panic(msg) => panic!("so3ft injected fault at {site}: {msg}"),
+            FaultAction::Sleep(d) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+        }
+    }
+
+    /// Apply at an infallible site (no `Result` to thread an error
+    /// through): `Err` escalates to a panic, `Panic` panics, `Sleep`
+    /// delays.
+    pub fn apply_infallible(self, site: &str) {
+        match self {
+            FaultAction::Err(msg) | FaultAction::Panic(msg) => {
+                panic!("so3ft injected fault at {site}: {msg}")
+            }
+            FaultAction::Sleep(d) => std::thread::sleep(d),
+        }
+    }
+}
+
+struct ArmedFault {
+    action: FaultAction,
+    /// Remaining fires; `None` = unlimited.
+    remaining: Option<u64>,
+}
+
+/// Number of currently armed sites — the disarmed fast path of [`fire`]
+/// is this one relaxed load.
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+fn registry() -> &'static Mutex<HashMap<String, ArmedFault>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, ArmedFault>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+#[cfg(feature = "fault-injection")]
+fn arm_from_env_once() {
+    static ENV_INIT: std::sync::Once = std::sync::Once::new();
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("SO3FT_FAULTS") {
+            if !spec.trim().is_empty() {
+                if let Err(e) = arm_from_spec(&spec) {
+                    eprintln!("so3ft: ignoring SO3FT_FAULTS: {e}");
+                }
+            }
+        }
+    });
+}
+
+/// Poll a site. `None` (one relaxed load) unless a fault is armed for
+/// `site`; otherwise the action to apply, decrementing a bounded count
+/// (the fault disarms itself once its count is exhausted).
+#[inline]
+pub fn fire(site: &str) -> Option<FaultAction> {
+    #[cfg(feature = "fault-injection")]
+    arm_from_env_once();
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    fire_slow(site)
+}
+
+#[cold]
+fn fire_slow(site: &str) -> Option<FaultAction> {
+    let mut sites = lock(registry());
+    let fault = sites.get_mut(site)?;
+    let action = fault.action.clone();
+    if let Some(rem) = &mut fault.remaining {
+        *rem -= 1;
+        if *rem == 0 {
+            sites.remove(site);
+            ARMED.store(sites.len(), Ordering::Relaxed);
+        }
+    }
+    Some(action)
+}
+
+/// Arm `site` with `action` for `count` fires (`None` = unlimited),
+/// replacing any fault already armed there. Process-global: concurrent
+/// tests sharing a site must serialize (see the chaos suite's lock).
+pub fn arm(site: &str, action: FaultAction, count: Option<u64>) {
+    if count == Some(0) {
+        return;
+    }
+    let mut sites = lock(registry());
+    sites.insert(
+        site.to_string(),
+        ArmedFault {
+            action,
+            remaining: count,
+        },
+    );
+    ARMED.store(sites.len(), Ordering::Relaxed);
+}
+
+/// Disarm one site (no-op if nothing is armed there).
+pub fn disarm(site: &str) {
+    let mut sites = lock(registry());
+    sites.remove(site);
+    ARMED.store(sites.len(), Ordering::Relaxed);
+}
+
+/// Disarm every site.
+pub fn disarm_all() {
+    let mut sites = lock(registry());
+    sites.clear();
+    ARMED.store(0, Ordering::Relaxed);
+}
+
+/// Whether a fault is currently armed for `site`.
+pub fn is_armed(site: &str) -> bool {
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return false;
+    }
+    lock(registry()).contains_key(site)
+}
+
+/// Parse a fault spec (see the [module docs](self) for the grammar) and
+/// arm every entry. Unknown sites and malformed actions are typed
+/// [`Error::Config`] errors; nothing is armed until the whole spec
+/// parses.
+pub fn arm_from_spec(spec: &str) -> Result<()> {
+    for (site, action, count) in parse_spec(spec)? {
+        arm(&site, action, count);
+    }
+    Ok(())
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<(String, FaultAction, Option<u64>)>> {
+    let mut out = Vec::new();
+    for part in spec
+        .split([';', ','])
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+    {
+        let bad = |detail: &str| Error::Config(format!("fault spec `{part}`: {detail}"));
+        let (site, action) = part
+            .split_once('=')
+            .ok_or_else(|| bad("expected site=action"))?;
+        let site = site.trim();
+        if !SITES.contains(&site) {
+            return Err(bad(&format!(
+                "unknown site `{site}` (known: {})",
+                SITES.join(", ")
+            )));
+        }
+        let (count, kind) = match action.split_once('*') {
+            Some((n, rest)) => {
+                let n: u64 = n
+                    .trim()
+                    .parse()
+                    .map_err(|_| bad(&format!("bad fire count `{}`", n.trim())))?;
+                if n == 0 {
+                    return Err(bad("fire count must be >= 1"));
+                }
+                (Some(n), rest.trim())
+            }
+            None => (None, action.trim()),
+        };
+        let (name, arg) = match kind.strip_suffix(')') {
+            Some(prefix) => match prefix.split_once('(') {
+                Some((name, arg)) => (name.trim(), Some(arg)),
+                None => return Err(bad("unbalanced parentheses")),
+            },
+            None => (kind, None),
+        };
+        let action = match name {
+            "err" => FaultAction::Err(arg.unwrap_or("injected").to_string()),
+            "panic" => FaultAction::Panic(arg.unwrap_or("injected").to_string()),
+            "sleep" => {
+                let ms: u64 = arg
+                    .ok_or_else(|| bad("sleep needs milliseconds: sleep(MS)"))?
+                    .trim()
+                    .parse()
+                    .map_err(|_| bad("sleep needs integer milliseconds"))?;
+                FaultAction::Sleep(Duration::from_millis(ms))
+            }
+            other => {
+                return Err(bad(&format!(
+                    "unknown action `{other}` (err | panic | sleep)"
+                )))
+            }
+        };
+        out.push((site.to_string(), action, count));
+    }
+    if out.is_empty() {
+        return Err(Error::Config("fault spec is empty".into()));
+    }
+    Ok(out)
+}
+
+/// RAII guard arming a fault for a scope: arms on construction, disarms
+/// its site on drop (even across a test panic). The registry is
+/// process-global — tests that share sites must serialize.
+pub struct ScopedFault {
+    site: &'static str,
+}
+
+impl ScopedFault {
+    pub fn new(site: &'static str, action: FaultAction, count: Option<u64>) -> Self {
+        arm(site, action, count);
+        Self { site }
+    }
+}
+
+impl Drop for ScopedFault {
+    fn drop(&mut self) {
+        disarm(self.site);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests fire only made-up site names so they cannot interfere
+    // with other lib tests exercising the real sites in this process.
+
+    #[test]
+    fn disarmed_site_is_a_no_op() {
+        assert!(fire("unit-test-never-armed").is_none());
+    }
+
+    #[test]
+    fn count_limited_fault_disarms_itself() {
+        arm("unit-test-count", FaultAction::Err("boom".into()), Some(2));
+        assert!(is_armed("unit-test-count"));
+        assert!(matches!(fire("unit-test-count"), Some(FaultAction::Err(_))));
+        assert!(fire("unit-test-count").is_some());
+        assert!(fire("unit-test-count").is_none(), "count exhausted");
+        assert!(!is_armed("unit-test-count"));
+    }
+
+    #[test]
+    fn scoped_fault_disarms_on_drop() {
+        {
+            let _guard =
+                ScopedFault::new("unit-test-scoped", FaultAction::Sleep(Duration::ZERO), None);
+            assert!(is_armed("unit-test-scoped"));
+        }
+        assert!(!is_armed("unit-test-scoped"));
+    }
+
+    #[test]
+    fn spec_grammar_parses_actions_counts_and_messages() {
+        let spec = "plan-build=err(chaos); batch-runner=2*panic,dispatcher=sleep(15)";
+        let parsed = parse_spec(spec).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0].0, PLAN_BUILD);
+        assert_eq!(parsed[0].1, FaultAction::Err("chaos".into()));
+        assert_eq!(parsed[0].2, None);
+        assert_eq!(parsed[1].0, BATCH_RUNNER);
+        assert_eq!(parsed[1].1, FaultAction::Panic("injected".into()));
+        assert_eq!(parsed[1].2, Some(2));
+        assert_eq!(parsed[2].1, FaultAction::Sleep(Duration::from_millis(15)));
+    }
+
+    #[test]
+    fn spec_grammar_rejects_malformed_entries() {
+        for bad in [
+            "",
+            "plan-build",
+            "no-such-site=err",
+            "plan-build=explode",
+            "plan-build=0*err",
+            "plan-build=x*err",
+            "plan-build=sleep",
+            "plan-build=sleep(ms)",
+            "plan-build=err(unbalanced",
+        ] {
+            assert!(
+                matches!(parse_spec(bad), Err(Error::Config(_))),
+                "spec {bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_maps_err_to_typed_error_and_sleep_to_ok() {
+        let e = FaultAction::Err("msg".into()).apply("some-site").unwrap_err();
+        match e {
+            Error::FaultInjected { site, msg } => {
+                assert_eq!(site, "some-site");
+                assert_eq!(msg, "msg");
+            }
+            other => panic!("expected FaultInjected, got {other:?}"),
+        }
+        assert!(FaultAction::Sleep(Duration::ZERO).apply("s").is_ok());
+    }
+
+    #[test]
+    fn apply_panic_panics_with_site_in_message() {
+        let err = std::panic::catch_unwind(|| {
+            FaultAction::Panic("kaboom".into()).apply("site-x").unwrap();
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("site-x") && msg.contains("kaboom"), "{msg}");
+    }
+}

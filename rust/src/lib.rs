@@ -86,6 +86,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dwt;
 pub mod error;
+pub mod faults;
 pub mod fft;
 pub mod pool;
 pub mod prng;

@@ -54,6 +54,13 @@ fn execute_worker<F>(
 where
     F: Fn(usize) + Sync + ?Sized,
 {
+    // Fault site: an `Err` action escalates to a panic here, which the
+    // per-worker `catch_unwind` in `runtime.rs` (and the scoped-spawn
+    // join in `parallel_for`) converts into a resumed panic on the
+    // caller — the shape a real worker-body bug would take.
+    if let Some(action) = crate::faults::fire(crate::faults::WORKER_BODY) {
+        action.apply_infallible(crate::faults::WORKER_BODY);
+    }
     let t0 = Instant::now();
     let mut packages = 0usize;
     match schedule {

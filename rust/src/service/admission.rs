@@ -1,0 +1,228 @@
+//! Bounded admission control for [`So3Service`](super::So3Service).
+//!
+//! Every `submit` passes through [`Admission::try_admit`] **before** the
+//! job is queued; a rejection is a typed
+//! [`Error::Overloaded`](crate::error::Error::Overloaded) returned to the
+//! caller in microseconds instead of unbounded queueing latency. Three
+//! independent limits, all optional (absent = unlimited):
+//!
+//! - **queue depth** (`max_queue`): number of admitted-but-undispatched
+//!   jobs;
+//! - **in-flight bytes** (`max_inflight_bytes`): summed
+//!   [`job_cost_bytes`] of every admitted job that has not yet been
+//!   resolved — queued *and* executing. One oversized job is still
+//!   admitted when the service is otherwise idle, so a cap smaller than a
+//!   single job degrades to serial admission rather than a permanent
+//!   reject;
+//! - **tenant quota** (`tenant_quota`): per-tenant in-flight job cap,
+//!   keyed by [`JobSpec::tenant`](super::JobSpec::tenant); untenanted
+//!   jobs are exempt.
+//!
+//! The `retry_after_hint` carried by the rejection is `queued × EWMA
+//! per-job wall time`, clamped to `[1ms, 5s]` — an estimate of when the
+//! current backlog will have drained.
+
+use std::collections::HashMap;
+use std::mem::size_of;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::{Error, OverloadCause, Result};
+use crate::fft::Complex64;
+use crate::util::lock_unpoisoned;
+
+/// Memory attributed to one job for the in-flight-bytes cap: its sample
+/// grid (`(2b)^3` complex values) plus its coefficient vector
+/// (`b(4b^2-1)/3` complex values). Both directions hold one of each
+/// (input + output), so the cost is direction-independent.
+pub(crate) fn job_cost_bytes(b: usize) -> usize {
+    let grid = (2 * b) * (2 * b) * (2 * b);
+    let coeffs = b * (4 * b * b - 1) / 3;
+    (grid + coeffs) * size_of::<Complex64>()
+}
+
+/// Shared admission state (one per service; all methods are lock-light
+/// and called from `submit` / the dispatcher).
+pub(crate) struct Admission {
+    max_queue: Option<usize>,
+    max_inflight_bytes: Option<usize>,
+    tenant_quota: Option<usize>,
+    /// Summed [`job_cost_bytes`] of admitted, unresolved jobs.
+    inflight_bytes: AtomicUsize,
+    /// In-flight job count per tenant (entries removed at zero). Only
+    /// maintained when a quota is configured.
+    tenants: Mutex<HashMap<u32, usize>>,
+    /// EWMA of per-job wall time in ns (0 = no observation yet).
+    ewma_job_ns: AtomicU64,
+}
+
+impl Admission {
+    pub(crate) fn new(
+        max_queue: Option<usize>,
+        max_inflight_bytes: Option<usize>,
+        tenant_quota: Option<usize>,
+    ) -> Self {
+        Self {
+            max_queue,
+            max_inflight_bytes,
+            tenant_quota,
+            inflight_bytes: AtomicUsize::new(0),
+            tenants: Mutex::new(HashMap::new()),
+            ewma_job_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Admit or reject a job. `queued` is the current queue depth (the
+    /// caller holds the queue lock, so the value is exact). On `Ok` the
+    /// job's cost and tenant slot are charged; the caller MUST later
+    /// [`release`](Self::release) exactly once, when the job resolves.
+    pub(crate) fn try_admit(&self, queued: usize, cost: usize, tenant: Option<u32>) -> Result<()> {
+        if let Some(cap) = self.max_queue {
+            if queued >= cap {
+                return Err(self.overloaded(OverloadCause::QueueDepth, queued));
+            }
+        }
+        if let Some(cap) = self.max_inflight_bytes {
+            let cur = self.inflight_bytes.load(Ordering::Acquire);
+            // Idle exception: never wedge on a single job larger than
+            // the cap — only reject when other work is already charged.
+            if cur > 0 && cur.saturating_add(cost) > cap {
+                return Err(self.overloaded(OverloadCause::InflightBytes, queued));
+            }
+        }
+        if let Some(quota) = self.tenant_quota {
+            if let Some(t) = tenant {
+                let mut tenants = lock_unpoisoned(&self.tenants);
+                let slot = tenants.entry(t).or_insert(0);
+                if *slot >= quota {
+                    return Err(self.overloaded(OverloadCause::TenantQuota, queued));
+                }
+                *slot += 1;
+            }
+        }
+        self.inflight_bytes.fetch_add(cost, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// Return a resolved job's charges (exactly once per admitted job).
+    pub(crate) fn release(&self, cost: usize, tenant: Option<u32>) {
+        self.inflight_bytes.fetch_sub(cost, Ordering::AcqRel);
+        if self.tenant_quota.is_some() {
+            if let Some(t) = tenant {
+                let mut tenants = lock_unpoisoned(&self.tenants);
+                if let Some(slot) = tenants.get_mut(&t) {
+                    *slot = slot.saturating_sub(1);
+                    if *slot == 0 {
+                        tenants.remove(&t);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Feed one completed job's wall time into the EWMA (α = 1/8).
+    pub(crate) fn observe_job(&self, per_job: Duration) {
+        let ns = per_job.as_nanos().min(u64::MAX as u128) as u64;
+        let prev = self.ewma_job_ns.load(Ordering::Relaxed);
+        let next = if prev == 0 { ns } else { prev - prev / 8 + ns / 8 };
+        self.ewma_job_ns.store(next.max(1), Ordering::Relaxed);
+    }
+
+    /// Estimated backlog drain time: `queued × EWMA`, clamped to
+    /// `[1ms, 5s]`; a fixed 10ms before any observation exists.
+    pub(crate) fn retry_hint(&self, queued: usize) -> Duration {
+        let ewma = self.ewma_job_ns.load(Ordering::Relaxed);
+        if ewma == 0 {
+            return Duration::from_millis(10);
+        }
+        let total = ewma.saturating_mul(queued.max(1) as u64);
+        Duration::from_nanos(total).clamp(Duration::from_millis(1), Duration::from_secs(5))
+    }
+
+    /// Current charged in-flight bytes (for the metrics snapshot).
+    pub(crate) fn inflight_bytes(&self) -> usize {
+        self.inflight_bytes.load(Ordering::Acquire)
+    }
+
+    fn overloaded(&self, cause: OverloadCause, queued: usize) -> Error {
+        Error::Overloaded {
+            cause,
+            retry_after_hint: self.retry_hint(queued),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_cost_matches_grid_plus_coeffs() {
+        // b=4: grid 8^3 = 512, coeffs 4*63/3 = 84.
+        assert_eq!(job_cost_bytes(4), (512 + 84) * size_of::<Complex64>());
+        assert_eq!(job_cost_bytes(1), (8 + 1) * size_of::<Complex64>());
+    }
+
+    #[test]
+    fn queue_depth_cap_rejects_at_capacity() {
+        let a = Admission::new(Some(2), None, None);
+        assert!(a.try_admit(0, 10, None).is_ok());
+        assert!(a.try_admit(1, 10, None).is_ok());
+        match a.try_admit(2, 10, None) {
+            Err(Error::Overloaded { cause, .. }) => {
+                assert_eq!(cause, OverloadCause::QueueDepth);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn inflight_bytes_cap_has_an_idle_exception() {
+        let a = Admission::new(None, Some(100), None);
+        // A job bigger than the cap is admitted while idle...
+        assert!(a.try_admit(0, 500, None).is_ok());
+        assert_eq!(a.inflight_bytes(), 500);
+        // ...but blocks everything else until it resolves.
+        match a.try_admit(1, 1, None) {
+            Err(Error::Overloaded { cause, .. }) => {
+                assert_eq!(cause, OverloadCause::InflightBytes);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        a.release(500, None);
+        assert_eq!(a.inflight_bytes(), 0);
+        assert!(a.try_admit(0, 1, None).is_ok());
+    }
+
+    #[test]
+    fn tenant_quota_is_per_tenant_and_released() {
+        let a = Admission::new(None, None, Some(1));
+        assert!(a.try_admit(0, 1, Some(7)).is_ok());
+        match a.try_admit(1, 1, Some(7)) {
+            Err(Error::Overloaded { cause, .. }) => {
+                assert_eq!(cause, OverloadCause::TenantQuota);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // Other tenants and untenanted jobs are unaffected.
+        assert!(a.try_admit(1, 1, Some(8)).is_ok());
+        assert!(a.try_admit(2, 1, None).is_ok());
+        a.release(1, Some(7));
+        assert!(a.try_admit(2, 1, Some(7)).is_ok());
+    }
+
+    #[test]
+    fn retry_hint_tracks_backlog_and_clamps() {
+        let a = Admission::new(Some(1), None, None);
+        assert_eq!(a.retry_hint(4), Duration::from_millis(10));
+        a.observe_job(Duration::from_millis(2));
+        let hint = a.retry_hint(4);
+        assert!(hint >= Duration::from_millis(2) && hint <= Duration::from_millis(16));
+        a.observe_job(Duration::from_secs(3600));
+        assert!(a.retry_hint(100) <= Duration::from_secs(5));
+        let b = Admission::new(None, None, None);
+        b.observe_job(Duration::from_nanos(1));
+        assert!(b.retry_hint(1) >= Duration::from_millis(1));
+    }
+}

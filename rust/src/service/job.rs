@@ -9,11 +9,13 @@
 
 use std::collections::VecDeque;
 use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::Result;
 use crate::service::registry::{PlanKey, PlanOptions};
+use crate::service::workspace_pool::WorkspacePool;
 use crate::so3::coeffs::So3Coeffs;
 use crate::so3::sampling::So3Grid;
 use crate::util::lock_unpoisoned as lock;
@@ -51,6 +53,17 @@ pub struct JobSpec {
     pub bandwidth: usize,
     pub options: PlanOptions,
     pub priority: JobPriority,
+    /// Admission-control tenant id. Only consulted when the service has
+    /// a `tenant_quota` configured; `None` is exempt from quotas.
+    /// Not part of the batch key.
+    pub tenant: Option<u32>,
+    /// Relative deadline, measured from submission. A job still queued
+    /// when it expires is resolved with
+    /// [`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded)
+    /// and **never dispatched**; a job already executing runs to
+    /// completion. `None` falls back to the service's
+    /// `default_deadline` (if any). Not part of the batch key.
+    pub deadline: Option<Duration>,
 }
 
 impl JobSpec {
@@ -61,6 +74,8 @@ impl JobSpec {
             bandwidth,
             options: PlanOptions::default(),
             priority: JobPriority::default(),
+            tenant: None,
+            deadline: None,
         }
     }
 
@@ -82,6 +97,18 @@ impl JobSpec {
     /// Override the dispatch priority.
     pub fn priority(mut self, priority: JobPriority) -> Self {
         self.priority = priority;
+        self
+    }
+
+    /// Tag the job with a tenant id (see the `tenant` field).
+    pub fn tenant(mut self, tenant: u32) -> Self {
+        self.tenant = Some(tenant);
+        self
+    }
+
+    /// Set a relative deadline (see the `deadline` field).
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 
@@ -209,14 +236,31 @@ pub(crate) struct JobState {
     slot: Mutex<Option<(Result<JobOutput>, Duration)>>,
     cv: Condvar,
     submitted: Instant,
+    /// Set (Release) after the slot is filled — the lock-free fast path
+    /// for `is_done` / `try_wait`.
+    done: AtomicBool,
+    /// Set by `JobHandle::cancel`; honored by the dispatcher for jobs
+    /// still queued at dequeue time.
+    cancelled: AtomicBool,
+    /// Pool to recycle an *unclaimed* successful output into when the
+    /// last reference (handle + dispatcher) drops — see `JobHandle`.
+    pool: Option<Arc<WorkspacePool>>,
 }
 
 impl JobState {
     pub(crate) fn new() -> Arc<Self> {
+        Self::with_pool(None)
+    }
+
+    /// A state whose abandoned output recycles into `pool`.
+    pub(crate) fn with_pool(pool: Option<Arc<WorkspacePool>>) -> Arc<Self> {
         Arc::new(Self {
             slot: Mutex::new(None),
             cv: Condvar::new(),
             submitted: Instant::now(),
+            done: AtomicBool::new(false),
+            cancelled: AtomicBool::new(false),
+            pool,
         })
     }
 
@@ -226,16 +270,57 @@ impl JobState {
         let latency = self.submitted.elapsed();
         let mut slot = lock(&self.slot);
         *slot = Some((result, latency));
+        self.done.store(true, Ordering::Release);
         self.cv.notify_all();
+    }
+
+    /// Wall time since submission (the latency an expiring job reports).
+    pub(crate) fn elapsed(&self) -> Duration {
+        self.submitted.elapsed()
+    }
+
+    pub(crate) fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
     }
 }
 
+impl Drop for JobState {
+    fn drop(&mut self) {
+        // Last reference gone with the result still in the slot: the
+        // handle was dropped without waiting. Recycle a successful
+        // output into the pool (subject to `MAX_FREE_PER_KEY`) so
+        // fire-and-forget traffic does not leak one buffer per job.
+        let Some(pool) = self.pool.take() else {
+            return;
+        };
+        let slot = self.slot.get_mut().unwrap_or_else(|p| p.into_inner());
+        if let Some((Ok(out), _)) = slot.take() {
+            match out {
+                JobOutput::Grid(g) => pool.checkin_grid(g),
+                JobOutput::Coeffs(c) => pool.checkin_coeffs(c),
+            }
+        }
+    }
+}
+
+/// Outcome of a non-blocking [`JobHandle::try_wait`].
+#[derive(Debug)]
+pub enum TryWait {
+    /// The job resolved; here is its result.
+    Ready(Result<JobOutput>),
+    /// Still in flight — the handle is returned for another poll.
+    Pending(JobHandle),
+}
+
 /// Handle to a submitted job. Blocks on [`Self::wait`] until the
-/// dispatcher fulfills it. Dropping the handle abandons the result:
-/// the job still runs and its *input* buffer is recycled, but the
-/// unclaimed *output* buffer is dropped with the handle instead of
-/// returning to the pool — fire-and-forget traffic therefore allocates
-/// one output per job; `wait()` + `recycle()` to stay allocation-free.
+/// dispatcher fulfills it, or polls with [`Self::try_wait`].
+///
+/// Dropping the handle abandons the result: the job still runs, and an
+/// unclaimed successful output is **recycled into the service's
+/// [`WorkspacePool`]** (subject to
+/// [`MAX_FREE_PER_KEY`](super::MAX_FREE_PER_KEY)) once the dispatcher
+/// releases its reference — fire-and-forget traffic stays
+/// allocation-free in steady state, same as `wait()` + `recycle()`.
 pub struct JobHandle {
     pub(crate) state: Arc<JobState>,
 }
@@ -258,9 +343,39 @@ impl JobHandle {
         }
     }
 
+    /// Non-blocking completion check: the result when the job has
+    /// resolved, the handle back otherwise.
+    pub fn try_wait(self) -> TryWait {
+        if !self.is_done() {
+            return TryWait::Pending(self);
+        }
+        match lock(&self.state.slot).take() {
+            Some((result, _)) => TryWait::Ready(result),
+            // `done` is set strictly after the slot is filled, so a
+            // taken slot here means a concurrent waiter consumed it —
+            // impossible for a by-value handle, but stay total.
+            None => TryWait::Pending(self),
+        }
+    }
+
+    /// Request cancellation. **Best-effort**: a job still queued when
+    /// the dispatcher next looks at it resolves with
+    /// [`Error::Cancelled`](crate::error::Error::Cancelled) and never
+    /// executes; a job already dispatched runs to completion and
+    /// fulfills normally. Returns `false` if the job had already
+    /// resolved (the request is then a no-op), `true` if the request
+    /// was recorded.
+    pub fn cancel(&self) -> bool {
+        if self.is_done() {
+            return false;
+        }
+        self.state.cancelled.store(true, Ordering::Release);
+        true
+    }
+
     /// Non-blocking completion check.
     pub fn is_done(&self) -> bool {
-        lock(&self.state.slot).is_some()
+        self.state.done.load(Ordering::Acquire)
     }
 }
 
@@ -272,11 +387,17 @@ impl fmt::Debug for JobHandle {
     }
 }
 
-/// One queued job (spec + payload + completion slot).
+/// One queued job (spec + payload + completion slot + admission data).
 pub(crate) struct QueuedJob {
     pub spec: JobSpec,
     pub input: JobInput,
     pub state: Arc<JobState>,
+    /// Absolute expiry (`submit time + effective deadline`); `None` =
+    /// no deadline.
+    pub deadline_at: Option<Instant>,
+    /// Bytes charged against the in-flight cap at admission; released
+    /// when the job resolves.
+    pub cost_bytes: usize,
 }
 
 /// Index of the job that leads the next batch: highest priority wins;
@@ -303,6 +424,8 @@ mod tests {
             spec,
             input: JobInput::Coeffs(So3Coeffs::zeros(spec.bandwidth)),
             state: JobState::new(),
+            deadline_at: None,
+            cost_bytes: 0,
         }
     }
 
@@ -353,6 +476,14 @@ mod tests {
             a.batch_key(),
             JobSpec::forward(8).priority(JobPriority::High).batch_key()
         );
+        // Neither do tenant or deadline: they are admission/expiry
+        // concerns, orthogonal to which plan executes the job.
+        let tagged = JobSpec::forward(8)
+            .tenant(42)
+            .deadline(Duration::from_millis(5));
+        assert_eq!(a.batch_key(), tagged.batch_key());
+        assert_eq!(tagged.tenant, Some(42));
+        assert_eq!(tagged.deadline, Some(Duration::from_millis(5)));
     }
 
     #[test]
@@ -390,5 +521,66 @@ mod tests {
         let (out, latency) = waiter.join().unwrap();
         assert_eq!(out.bandwidth(), 2);
         assert!(latency.as_nanos() > 0);
+    }
+
+    #[test]
+    fn try_wait_polls_without_blocking() {
+        let state = JobState::new();
+        let handle = JobHandle {
+            state: Arc::clone(&state),
+        };
+        let handle = match handle.try_wait() {
+            TryWait::Pending(h) => h,
+            TryWait::Ready(r) => panic!("unfulfilled job reported ready: {r:?}"),
+        };
+        state.fulfill(Ok(JobOutput::Coeffs(So3Coeffs::zeros(2))));
+        match handle.try_wait() {
+            TryWait::Ready(Ok(out)) => assert_eq!(out.bandwidth(), 2),
+            other => panic!("expected Ready(Ok), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancel_is_recorded_until_fulfilled() {
+        let state = JobState::new();
+        let handle = JobHandle {
+            state: Arc::clone(&state),
+        };
+        assert!(!state.is_cancelled());
+        assert!(handle.cancel());
+        assert!(state.is_cancelled());
+        state.fulfill(Err(crate::error::Error::Cancelled));
+        // Once resolved, further cancel requests are no-ops.
+        assert!(!handle.cancel());
+    }
+
+    #[test]
+    fn abandoned_output_recycles_into_the_pool() {
+        let pool = Arc::new(WorkspacePool::new());
+        let state = JobState::with_pool(Some(Arc::clone(&pool)));
+        let handle = JobHandle {
+            state: Arc::clone(&state),
+        };
+        state.fulfill(Ok(JobOutput::Grid(So3Grid::zeros(2).unwrap())));
+        drop(handle);
+        drop(state); // last reference — Drop recycles the output
+        assert_eq!(pool.stats().free_grids, 1);
+
+        // A waited handle consumes the slot: nothing left to recycle.
+        let state = JobState::with_pool(Some(Arc::clone(&pool)));
+        let handle = JobHandle {
+            state: Arc::clone(&state),
+        };
+        state.fulfill(Ok(JobOutput::Grid(So3Grid::zeros(2).unwrap())));
+        drop(state);
+        let out = handle.wait().unwrap();
+        drop(out); // caller-owned now; dropped without recycle()
+        assert_eq!(pool.stats().free_grids, 1);
+
+        // Failed results have no buffer; Drop is a no-op.
+        let state = JobState::with_pool(Some(Arc::clone(&pool)));
+        state.fulfill(Err(crate::error::Error::Cancelled));
+        drop(state);
+        assert_eq!(pool.stats().free_grids, 1);
     }
 }

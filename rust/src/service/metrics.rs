@@ -1,0 +1,270 @@
+//! Service metrics: per-bandwidth latency histograms and the
+//! point-in-time [`ServiceMetrics`] snapshot returned by
+//! [`So3Service::metrics`](super::So3Service::metrics).
+//!
+//! Latencies are recorded into **log2-bucketed histograms** (bucket `i`
+//! holds submit-to-completion times in `[2^i, 2^(i+1))` nanoseconds), so
+//! recording is O(1) with no per-sample allocation and quantiles are
+//! approximate: a reported quantile is its bucket's upper bound, i.e.
+//! within 2x of the true value. `serve-bench` computes exact percentiles
+//! from raw samples for the regression gate; the snapshot here is the
+//! always-on operational view.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Log2-bucketed latency histogram (see the [module docs](self)).
+#[derive(Debug, Clone)]
+pub(crate) struct LatencyHistogram {
+    /// `buckets[i]` counts latencies in `[2^i, 2^(i+1))` ns.
+    buckets: [u64; 64],
+    count: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: [0; 64],
+            count: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub(crate) fn record(&mut self, latency: Duration) {
+        let ns = latency.as_nanos().clamp(1, u64::MAX as u128) as u64;
+        let idx = (63 - ns.leading_zeros()) as usize;
+        self.buckets[idx] += 1;
+        self.count += 1;
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile (nearest-rank;
+    /// `Duration::ZERO` when empty).
+    pub(crate) fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let upper_ns = if i >= 63 { u64::MAX } else { 1u64 << (i + 1) };
+                return Duration::from_nanos(upper_ns);
+            }
+        }
+        Duration::ZERO
+    }
+
+    pub(crate) fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Admission rejections by cause (monotonic counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RejectionCounts {
+    pub queue_depth: u64,
+    pub inflight_bytes: u64,
+    pub tenant_quota: u64,
+}
+
+impl RejectionCounts {
+    pub fn total(&self) -> u64 {
+        self.queue_depth + self.inflight_bytes + self.tenant_quota
+    }
+}
+
+/// Approximate latency tail for one bandwidth (values are log2-bucket
+/// upper bounds — within 2x; see the [module docs](self)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BandwidthLatency {
+    pub bandwidth: usize,
+    /// Successfully completed jobs recorded at this bandwidth.
+    pub jobs: u64,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+/// Point-in-time serving snapshot (see
+/// [`So3Service::metrics`](super::So3Service::metrics)). Rendered by
+/// `serve-bench` and exportable as JSON via [`Self::to_json`].
+#[derive(Debug, Clone, Default)]
+pub struct ServiceMetrics {
+    /// Jobs queued right now (admitted, not yet dispatched).
+    pub queue_depth: usize,
+    /// Payload + output bytes of admitted, unresolved jobs.
+    pub inflight_bytes: usize,
+    pub rejected: RejectionCounts,
+    /// Jobs whose deadline expired while queued (never executed).
+    pub deadline_expired: u64,
+    /// Jobs cancelled via `JobHandle::cancel` before dispatch.
+    pub cancelled: u64,
+    /// Jobs aborted by a drain-deadline shutdown.
+    pub shutdown_aborted: u64,
+    /// Dispatcher panics recovered by the watchdog.
+    pub dispatcher_restarts: u64,
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub batches: u64,
+    pub max_batch_size: usize,
+    /// `jobs_completed / batches` (0 when no batch ran yet).
+    pub mean_batch_size: f64,
+    /// Per-bandwidth completion latency, sorted by bandwidth.
+    pub per_bandwidth: Vec<BandwidthLatency>,
+}
+
+impl ServiceMetrics {
+    /// Multi-line human-readable rendering (what `serve-bench` prints).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("service metrics:\n");
+        out.push_str(&format!("  queue depth          {}\n", self.queue_depth));
+        out.push_str(&format!("  in-flight bytes      {}\n", self.inflight_bytes));
+        out.push_str(&format!(
+            "  rejected             {} (queue {}, bytes {}, tenant {})\n",
+            self.rejected.total(),
+            self.rejected.queue_depth,
+            self.rejected.inflight_bytes,
+            self.rejected.tenant_quota
+        ));
+        out.push_str(&format!(
+            "  deadline expired     {}\n  cancelled            {}\n",
+            self.deadline_expired, self.cancelled
+        ));
+        out.push_str(&format!(
+            "  shutdown aborted     {}\n  dispatcher restarts  {}\n",
+            self.shutdown_aborted, self.dispatcher_restarts
+        ));
+        out.push_str(&format!(
+            "  jobs                 submitted {}, completed {}, batches {} \
+             (mean {:.2}, max {})\n",
+            self.jobs_submitted,
+            self.jobs_completed,
+            self.batches,
+            self.mean_batch_size,
+            self.max_batch_size
+        ));
+        for l in &self.per_bandwidth {
+            out.push_str(&format!(
+                "  b={:<5} latency      n={:<6} p50 ~{:.3}ms  p99 ~{:.3}ms\n",
+                l.bandwidth,
+                l.jobs,
+                l.p50.as_secs_f64() * 1e3,
+                l.p99.as_secs_f64() * 1e3
+            ));
+        }
+        out
+    }
+
+    /// One JSON object (hand-rolled — the crate is dependency-free).
+    pub fn to_json(&self) -> String {
+        let mut per_b = String::new();
+        for (i, l) in self.per_bandwidth.iter().enumerate() {
+            if i > 0 {
+                per_b.push_str(", ");
+            }
+            per_b.push_str(&format!(
+                "{{\"b\": {}, \"jobs\": {}, \"p50_s\": {:.6}, \"p99_s\": {:.6}}}",
+                l.bandwidth,
+                l.jobs,
+                l.p50.as_secs_f64(),
+                l.p99.as_secs_f64()
+            ));
+        }
+        format!(
+            "{{\"queue_depth\": {}, \"inflight_bytes\": {}, \
+             \"rejected_queue_depth\": {}, \"rejected_inflight_bytes\": {}, \
+             \"rejected_tenant_quota\": {}, \"deadline_expired\": {}, \
+             \"cancelled\": {}, \"shutdown_aborted\": {}, \
+             \"dispatcher_restarts\": {}, \"jobs_submitted\": {}, \
+             \"jobs_completed\": {}, \"batches\": {}, \"max_batch_size\": {}, \
+             \"mean_batch_size\": {:.3}, \"per_bandwidth\": [{}]}}",
+            self.queue_depth,
+            self.inflight_bytes,
+            self.rejected.queue_depth,
+            self.rejected.inflight_bytes,
+            self.rejected.tenant_quota,
+            self.deadline_expired,
+            self.cancelled,
+            self.shutdown_aborted,
+            self.dispatcher_restarts,
+            self.jobs_submitted,
+            self.jobs_completed,
+            self.batches,
+            self.max_batch_size,
+            self.mean_batch_size,
+            per_b
+        )
+    }
+}
+
+impl fmt::Display for ServiceMetrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_within_a_bucket() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        for _ in 0..99 {
+            h.record(Duration::from_micros(100)); // ~2^16.6 ns
+        }
+        h.record(Duration::from_millis(80)); // ~2^26.25 ns
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        assert!(p50 >= Duration::from_micros(100) && p50 <= Duration::from_micros(200));
+        let p99 = h.quantile(0.99);
+        assert!(p99 <= Duration::from_micros(200), "p99 is the 99th sample");
+        let p100 = h.quantile(1.0);
+        assert!(p100 >= Duration::from_millis(80) && p100 <= Duration::from_millis(160));
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::ZERO); // clamps into the first bucket
+        h.record(Duration::from_secs(u64::MAX)); // clamps into the last
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.01) <= Duration::from_nanos(2));
+        assert!(h.quantile(1.0) >= Duration::from_secs(1 << 40));
+    }
+
+    #[test]
+    fn render_and_json_carry_the_counters() {
+        let m = ServiceMetrics {
+            queue_depth: 2,
+            inflight_bytes: 4096,
+            rejected: RejectionCounts {
+                queue_depth: 3,
+                inflight_bytes: 1,
+                tenant_quota: 0,
+            },
+            deadline_expired: 5,
+            per_bandwidth: vec![BandwidthLatency {
+                bandwidth: 8,
+                jobs: 10,
+                p50: Duration::from_millis(1),
+                p99: Duration::from_millis(4),
+            }],
+            ..ServiceMetrics::default()
+        };
+        assert_eq!(m.rejected.total(), 4);
+        let text = m.render();
+        assert!(text.contains("queue depth"));
+        assert!(text.contains("rejected             4"));
+        assert!(text.contains("b=8"));
+        assert_eq!(text, m.to_string());
+        let json = m.to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"rejected_queue_depth\": 3"));
+        assert!(json.contains("\"deadline_expired\": 5"));
+        assert!(json.contains("\"b\": 8"));
+    }
+}

@@ -20,6 +20,37 @@
 //!   `inverse_batch_into` (bit-identical to per-job execution, proven
 //!   by `rust/tests/service_api.rs`).
 //!
+//! # Overload and failure behavior
+//!
+//! The service is hardened for saturation and partial failure:
+//!
+//! * **bounded admission** — optional queue-depth, in-flight-bytes, and
+//!   per-tenant caps ([`So3ServiceBuilder::max_queue`] /
+//!   [`max_inflight_bytes`](So3ServiceBuilder::max_inflight_bytes) /
+//!   [`tenant_quota`](So3ServiceBuilder::tenant_quota)) turn overload
+//!   into an immediate typed
+//!   [`Error::Overloaded`](crate::error::Error::Overloaded) with a
+//!   backlog-derived `retry_after_hint`, instead of unbounded queueing;
+//! * **deadlines and cancellation** — [`JobSpec::deadline`] (or the
+//!   service-wide [`default_deadline`](So3ServiceBuilder::default_deadline))
+//!   expires still-queued jobs without executing them, and
+//!   [`JobHandle::cancel`] / [`JobHandle::try_wait`] give callers a
+//!   non-blocking surface;
+//! * **graceful degradation** — a watchdog restarts the dispatcher
+//!   after a panic with the queue intact, failed plan builds are cached
+//!   with exponential backoff
+//!   ([`PlanRegistry::set_build_backoff`]), and
+//!   [`So3Service::shutdown`] drains with a deadline, resolving every
+//!   outstanding handle with its result or
+//!   [`Error::ShutdownDrain`](crate::error::Error::ShutdownDrain);
+//! * **observability** — [`So3Service::metrics`] snapshots queue depth,
+//!   rejections by cause, batch occupancy, and per-bandwidth p50/p99.
+//!
+//! See `docs/PERF.md` ("Failure semantics & overload behavior") for the
+//! admission math and the full rejection taxonomy, and
+//! [`crate::faults`] for the deterministic fault-injection sites the
+//! chaos suite drives.
+//!
 //! ```no_run
 //! use so3ft::service::{JobSpec, So3Service};
 //! use so3ft::so3::coeffs::So3Coeffs;
@@ -35,15 +66,18 @@
 //! service.recycle_coeffs(out); // keep the steady state allocation-free
 //! ```
 
+mod admission;
 pub mod job;
+pub mod metrics;
 pub mod registry;
 pub mod workspace_pool;
 
-pub use job::{Direction, JobHandle, JobInput, JobOutput, JobPriority, JobSpec};
+pub use job::{Direction, JobHandle, JobInput, JobOutput, JobPriority, JobSpec, TryWait};
+pub use metrics::{BandwidthLatency, RejectionCounts, ServiceMetrics};
 pub use registry::{PlanKey, PlanOptions, PlanRegistry, RegistryStats};
-pub use workspace_pool::{WorkspacePool, WorkspacePoolStats};
+pub use workspace_pool::{WorkspacePool, WorkspacePoolStats, MAX_FREE_PER_KEY};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -52,14 +86,17 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{TransformStats, Workspace};
-use crate::error::{Error, Result};
+use crate::error::{Error, OverloadCause, Result};
+use crate::faults;
 use crate::pool::WorkerPool;
 use crate::so3::coeffs::So3Coeffs;
 use crate::so3::sampling::So3Grid;
 use crate::transform::So3Plan;
 use crate::util::lock_unpoisoned as lock;
 use crate::wisdom::{PlanRigor, WisdomStore};
+use admission::{job_cost_bytes, Admission};
 use job::{pick_leader, JobState, QueuedJob};
+use metrics::LatencyHistogram;
 
 struct QueueState {
     /// Pending jobs in submission order.
@@ -79,6 +116,24 @@ struct Counters {
     completed: AtomicU64,
     batches: AtomicU64,
     max_batch: AtomicUsize,
+    rejected_queue: AtomicU64,
+    rejected_bytes: AtomicU64,
+    rejected_tenant: AtomicU64,
+    deadline_expired: AtomicU64,
+    cancelled: AtomicU64,
+    shutdown_aborted: AtomicU64,
+    dispatcher_restarts: AtomicU64,
+}
+
+impl Counters {
+    fn count_rejection(&self, cause: OverloadCause) {
+        let counter = match cause {
+            OverloadCause::QueueDepth => &self.rejected_queue,
+            OverloadCause::InflightBytes => &self.rejected_bytes,
+            OverloadCause::TenantQuota => &self.rejected_tenant,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// Aggregate serving counters (see [`So3Service::stats`]).
@@ -100,8 +155,15 @@ struct ServiceInner {
     threads: usize,
     pool: Option<Arc<WorkerPool>>,
     registry: PlanRegistry,
-    buffers: WorkspacePool,
+    /// Shared (`Arc`) so abandoned `JobHandle` outputs can recycle from
+    /// `JobState::drop` — see [`job::JobHandle`].
+    buffers: Arc<WorkspacePool>,
     queue: JobQueue,
+    admission: Admission,
+    /// Applied to jobs whose spec carries no deadline of its own.
+    default_deadline: Option<Duration>,
+    /// Per-bandwidth completion-latency histograms (successful jobs).
+    latencies: Mutex<HashMap<usize, LatencyHistogram>>,
     batch_window: Duration,
     max_batch: usize,
     allow_any_bandwidth: bool,
@@ -155,13 +217,21 @@ impl So3Service {
     }
 
     /// Submit a job. Validation (payload kind vs direction, bandwidth
-    /// match, power-of-two unless the builder allowed any) happens here,
-    /// synchronously — a returned handle always receives a transform
-    /// result unless the plan itself fails to build.
+    /// match, power-of-two unless the builder allowed any) and
+    /// **admission control** happen here, synchronously — an admitted
+    /// handle always resolves (result or typed error); a saturated
+    /// service answers with
+    /// [`Error::Overloaded`](crate::error::Error::Overloaded)
+    /// immediately instead of queueing without bound.
     pub fn submit(&self, spec: JobSpec, input: impl Into<JobInput>) -> Result<JobHandle> {
         let input = input.into();
         self.validate(&spec, &input)?;
-        let state = JobState::new();
+        let cost_bytes = job_cost_bytes(spec.bandwidth);
+        let deadline_at = spec
+            .deadline
+            .or(self.inner.default_deadline)
+            .and_then(|d| Instant::now().checked_add(d));
+        let state = JobState::with_pool(Some(Arc::clone(&self.inner.buffers)));
         let handle = JobHandle {
             state: Arc::clone(&state),
         };
@@ -170,6 +240,16 @@ impl So3Service {
             if st.shutdown {
                 return Err(Error::Service("service is shutting down".into()));
             }
+            if let Err(e) = self
+                .inner
+                .admission
+                .try_admit(st.jobs.len(), cost_bytes, spec.tenant)
+            {
+                if let Error::Overloaded { cause, .. } = &e {
+                    self.inner.stats.count_rejection(*cause);
+                }
+                return Err(e);
+            }
             // Count before the dispatcher can possibly complete the job,
             // so `submitted >= completed` holds for every observer.
             self.inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
@@ -177,6 +257,8 @@ impl So3Service {
                 spec,
                 input,
                 state,
+                deadline_at,
+                cost_bytes,
             });
         }
         self.inner.queue.cv.notify_all();
@@ -266,6 +348,118 @@ impl So3Service {
             buffers: self.inner.buffers.stats(),
         }
     }
+
+    /// Point-in-time serving snapshot: queue depth, in-flight bytes,
+    /// rejections by cause, batch occupancy, per-bandwidth latency
+    /// (rendered by `serve-bench`; see [`ServiceMetrics`]).
+    pub fn metrics(&self) -> ServiceMetrics {
+        let inner = &self.inner;
+        let queue_depth = lock(&inner.queue.state).jobs.len();
+        let completed = inner.stats.completed.load(Ordering::Relaxed);
+        let batches = inner.stats.batches.load(Ordering::Relaxed);
+        let per_bandwidth = {
+            let lat = lock(&inner.latencies);
+            let mut rows: Vec<BandwidthLatency> = lat
+                .iter()
+                .map(|(&b, h)| BandwidthLatency {
+                    bandwidth: b,
+                    jobs: h.count(),
+                    p50: h.quantile(0.50),
+                    p99: h.quantile(0.99),
+                })
+                .collect();
+            rows.sort_by_key(|r| r.bandwidth);
+            rows
+        };
+        ServiceMetrics {
+            queue_depth,
+            inflight_bytes: inner.admission.inflight_bytes(),
+            rejected: RejectionCounts {
+                queue_depth: inner.stats.rejected_queue.load(Ordering::Relaxed),
+                inflight_bytes: inner.stats.rejected_bytes.load(Ordering::Relaxed),
+                tenant_quota: inner.stats.rejected_tenant.load(Ordering::Relaxed),
+            },
+            deadline_expired: inner.stats.deadline_expired.load(Ordering::Relaxed),
+            cancelled: inner.stats.cancelled.load(Ordering::Relaxed),
+            shutdown_aborted: inner.stats.shutdown_aborted.load(Ordering::Relaxed),
+            dispatcher_restarts: inner.stats.dispatcher_restarts.load(Ordering::Relaxed),
+            jobs_submitted: inner.stats.submitted.load(Ordering::Relaxed),
+            jobs_completed: completed,
+            batches,
+            max_batch_size: inner.stats.max_batch.load(Ordering::Relaxed),
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                completed as f64 / batches as f64
+            },
+            per_bandwidth,
+        }
+    }
+
+    /// Drain-with-deadline shutdown: stop admitting, give queued work up
+    /// to `drain` to execute, then resolve every still-queued handle
+    /// with [`Error::ShutdownDrain`](crate::error::Error::ShutdownDrain).
+    /// A job already executing when the deadline hits finishes normally
+    /// (the dispatcher join waits for it). **Every outstanding handle
+    /// has been resolved — one way or the other — when this returns.**
+    ///
+    /// `Drop` remains the deadline-less variant: it drains everything,
+    /// however long that takes.
+    pub fn shutdown(mut self, drain: Duration) -> ShutdownReport {
+        let inner = Arc::clone(&self.inner);
+        let completed_at_entry = inner.stats.completed.load(Ordering::Relaxed);
+        {
+            let mut st = lock(&inner.queue.state);
+            st.shutdown = true;
+        }
+        inner.queue.cv.notify_all();
+        // `None` = an overflowing deadline: drain without bound.
+        let deadline = Instant::now().checked_add(drain);
+        let mut aborted = 0u64;
+        loop {
+            let outstanding = inner.stats.submitted.load(Ordering::Relaxed)
+                - inner.stats.completed.load(Ordering::Relaxed);
+            if outstanding == 0 {
+                break;
+            }
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                // Deadline hit: abort what is still *queued*. The
+                // dispatcher may be draining concurrently — the queue
+                // lock makes each job resolve on exactly one side.
+                let leftovers: Vec<QueuedJob> = {
+                    let mut st = lock(&inner.queue.state);
+                    st.jobs.drain(..).collect()
+                };
+                for job in leftovers {
+                    recycle_input(&inner, job.input);
+                    inner.stats.shutdown_aborted.fetch_add(1, Ordering::Relaxed);
+                    aborted += 1;
+                    let err = Err(Error::ShutdownDrain);
+                    inner.finish_job(&job.spec, &job.state, job.cost_bytes, err);
+                }
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        let completed_total = inner.stats.completed.load(Ordering::Relaxed);
+        ShutdownReport {
+            drained: (completed_total - completed_at_entry).saturating_sub(aborted),
+            aborted,
+        }
+    }
+}
+
+/// What a [`So3Service::shutdown`] resolved: jobs that ran to completion
+/// during the drain window vs. jobs aborted with
+/// [`Error::ShutdownDrain`](crate::error::Error::ShutdownDrain) when the
+/// deadline hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShutdownReport {
+    pub drained: u64,
+    pub aborted: u64,
 }
 
 impl fmt::Debug for So3Service {
@@ -305,6 +499,10 @@ pub struct So3ServiceBuilder {
     allow_any_bandwidth: bool,
     plan_rigor: PlanRigor,
     wisdom_store: Option<Arc<WisdomStore>>,
+    max_queue: Option<usize>,
+    max_inflight_bytes: Option<usize>,
+    default_deadline: Option<Duration>,
+    tenant_quota: Option<usize>,
 }
 
 impl So3ServiceBuilder {
@@ -319,6 +517,10 @@ impl So3ServiceBuilder {
             allow_any_bandwidth: false,
             plan_rigor: PlanRigor::Estimate,
             wisdom_store: None,
+            max_queue: None,
+            max_inflight_bytes: None,
+            default_deadline: None,
+            tenant_quota: None,
         }
     }
 
@@ -402,6 +604,41 @@ impl So3ServiceBuilder {
         self
     }
 
+    /// Cap the number of queued (admitted, undispatched) jobs; a full
+    /// queue rejects submissions with a typed
+    /// [`Error::Overloaded`](crate::error::Error::Overloaded)
+    /// (default: unbounded).
+    pub fn max_queue(mut self, max_queue: usize) -> Self {
+        self.max_queue = Some(max_queue);
+        self
+    }
+
+    /// Cap the summed payload+output bytes of admitted, unresolved jobs
+    /// (default: unbounded). A single job larger than the cap is still
+    /// admitted when the service is idle — the cap bounds *concurrent*
+    /// work, it never wedges the service.
+    pub fn max_inflight_bytes(mut self, bytes: usize) -> Self {
+        self.max_inflight_bytes = Some(bytes);
+        self
+    }
+
+    /// Deadline applied to every job whose [`JobSpec::deadline`] is
+    /// `None` (default: none). Expired jobs still queued at dispatch
+    /// time resolve with
+    /// [`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded)
+    /// and never execute.
+    pub fn default_deadline(mut self, deadline: Duration) -> Self {
+        self.default_deadline = Some(deadline);
+        self
+    }
+
+    /// Cap the in-flight jobs of any single [`JobSpec::tenant`]
+    /// (default: unbounded). Jobs without a tenant id are exempt.
+    pub fn tenant_quota(mut self, quota: usize) -> Self {
+        self.tenant_quota = Some(quota);
+        self
+    }
+
     pub fn build(self) -> Result<So3Service> {
         let threads = match self.threads {
             Some(0) => return Err(Error::InvalidThreads(0)),
@@ -429,7 +666,7 @@ impl So3ServiceBuilder {
                 self.wisdom_store,
             ),
             pool,
-            buffers: WorkspacePool::new(),
+            buffers: Arc::new(WorkspacePool::new()),
             queue: JobQueue {
                 state: Mutex::new(QueueState {
                     jobs: VecDeque::new(),
@@ -437,6 +674,9 @@ impl So3ServiceBuilder {
                 }),
                 cv: Condvar::new(),
             },
+            admission: Admission::new(self.max_queue, self.max_inflight_bytes, self.tenant_quota),
+            default_deadline: self.default_deadline,
+            latencies: Mutex::new(HashMap::new()),
             batch_window: self.batch_window,
             max_batch: self.max_batch,
             allow_any_bandwidth: self.allow_any_bandwidth,
@@ -446,7 +686,25 @@ impl So3ServiceBuilder {
         let dispatcher_inner = Arc::clone(&inner);
         let dispatcher = std::thread::Builder::new()
             .name("so3ft-service".into())
-            .spawn(move || dispatcher_loop(&dispatcher_inner))
+            .spawn(move || {
+                // Watchdog: a dispatcher panic (injected fault, or a bug
+                // outside the per-batch catch_unwind) restarts the loop
+                // over the intact queue instead of stranding every
+                // queued handle. The loop only holds dequeued jobs
+                // inside panic-caught scopes, so none are in hand when
+                // an unwind reaches this frame.
+                loop {
+                    let run =
+                        catch_unwind(AssertUnwindSafe(|| dispatcher_loop(&dispatcher_inner)));
+                    if run.is_ok() {
+                        break;
+                    }
+                    dispatcher_inner
+                        .stats
+                        .dispatcher_restarts
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+            })
             .map_err(Error::Io)?;
         Ok(So3Service {
             inner,
@@ -468,73 +726,151 @@ fn dispatcher_loop(inner: &ServiceInner) {
 /// Block for work, pick the leading job (priority, then FIFO), hold the
 /// batch open for the window, and drain every queued job sharing the
 /// leader's `(direction, bandwidth, options)` key in submission order.
+/// Jobs found **dead** at drain time — cancelled, or past their
+/// deadline — are resolved with their typed error and never dispatched.
 /// `None` once the queue is drained after shutdown.
 fn next_batch(inner: &ServiceInner) -> Option<Vec<QueuedJob>> {
     let queue = &inner.queue;
     let mut st = lock(&queue.state);
     loop {
-        if !st.jobs.is_empty() {
-            break;
-        }
-        if st.shutdown {
-            return None;
-        }
-        st = queue.cv.wait(st).unwrap_or_else(|p| p.into_inner());
-    }
-    let lead = pick_leader(&st.jobs).expect("queue is non-empty");
-    let key = st.jobs[lead].spec.batch_key();
-    if !inner.batch_window.is_zero() && !st.shutdown {
-        // Micro-batch window: wait for more same-key arrivals (the cv
-        // releases the lock, so submitters get in). Cut short on
-        // shutdown or once the batch is full.
-        let deadline = Instant::now() + inner.batch_window;
         loop {
-            let matching = st.jobs.iter().filter(|j| j.spec.batch_key() == key).count();
-            if matching >= inner.max_batch || st.shutdown {
+            if !st.jobs.is_empty() {
                 break;
             }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+            if st.shutdown {
+                return None;
             }
-            let (guard, _) = queue
-                .cv
-                .wait_timeout(st, deadline - now)
-                .unwrap_or_else(|p| p.into_inner());
-            st = guard;
+            st = queue.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        // Fault site: fires with the queue lock released and NO jobs
+        // dequeued, so a dispatcher panic here strands nothing — the
+        // watchdog restarts the loop over the intact queue.
+        if let Some(action) = faults::fire(faults::DISPATCHER) {
+            drop(st);
+            action.apply_infallible(faults::DISPATCHER);
+            st = lock(&queue.state);
+            continue;
+        }
+        let lead = pick_leader(&st.jobs).expect("queue is non-empty");
+        let key = st.jobs[lead].spec.batch_key();
+        if !inner.batch_window.is_zero() && !st.shutdown {
+            // Micro-batch window: wait for more same-key arrivals (the
+            // cv releases the lock, so submitters get in). Cut short on
+            // shutdown or once the batch is full.
+            let deadline = Instant::now() + inner.batch_window;
+            loop {
+                let matching = st.jobs.iter().filter(|j| j.spec.batch_key() == key).count();
+                if matching >= inner.max_batch || st.shutdown {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = queue
+                    .cv
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|p| p.into_inner());
+                st = guard;
+            }
+        }
+        // The leader joins its batch FIRST — under a hot key with more
+        // than `max_batch` earlier same-key jobs queued, a FIFO-only
+        // drain would leave the high-priority leader behind and void
+        // its priority. (`lead` is still valid: the window wait only
+        // `push_back`s.) Dead jobs are skimmed off into `dead`; when
+        // the leader itself is dead no batch forms this round and the
+        // outer loop picks the next leader.
+        let now = Instant::now();
+        let mut batch = Vec::new();
+        let mut dead = Vec::new();
+        let lead_job = st.jobs.remove(lead).expect("leader index is in range");
+        match dead_reason(&lead_job, now) {
+            Some(reason) => dead.push((lead_job, reason)),
+            None => batch.push(lead_job),
+        }
+        let mut rest = VecDeque::with_capacity(st.jobs.len());
+        while let Some(job) = st.jobs.pop_front() {
+            if let Some(reason) = dead_reason(&job, now) {
+                dead.push((job, reason));
+            } else if !batch.is_empty()
+                && batch.len() < inner.max_batch
+                && job.spec.batch_key() == key
+            {
+                batch.push(job);
+            } else {
+                rest.push_back(job);
+            }
+        }
+        st.jobs = rest;
+        if !dead.is_empty() {
+            // Resolve outside the queue lock: fulfill wakes waiters.
+            drop(st);
+            for (job, reason) in dead {
+                resolve_dead(inner, job, reason);
+            }
+            st = lock(&queue.state);
+        }
+        if !batch.is_empty() {
+            return Some(batch);
         }
     }
-    // The leader joins its batch FIRST — under a hot key with more than
-    // `max_batch` earlier same-key jobs queued, a FIFO-only drain would
-    // leave the high-priority leader behind and void its priority.
-    // (`lead` is still valid: the window wait only `push_back`s.)
-    let mut batch = Vec::new();
-    if let Some(job) = st.jobs.remove(lead) {
-        batch.push(job);
+}
+
+/// Why a queued job must not be dispatched.
+enum DeadReason {
+    Cancelled,
+    Expired,
+}
+
+fn dead_reason(job: &QueuedJob, now: Instant) -> Option<DeadReason> {
+    if job.state.is_cancelled() {
+        return Some(DeadReason::Cancelled);
     }
-    let mut rest = VecDeque::with_capacity(st.jobs.len());
-    while let Some(job) = st.jobs.pop_front() {
-        if batch.len() < inner.max_batch && job.spec.batch_key() == key {
-            batch.push(job);
-        } else {
-            rest.push_back(job);
+    if job.deadline_at.is_some_and(|d| now >= d) {
+        return Some(DeadReason::Expired);
+    }
+    None
+}
+
+/// Resolve a never-dispatched job with its typed error (input recycled).
+fn resolve_dead(inner: &ServiceInner, job: QueuedJob, reason: DeadReason) {
+    recycle_input(inner, job.input);
+    let err = match reason {
+        DeadReason::Cancelled => {
+            inner.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            Error::Cancelled
         }
-    }
-    st.jobs = rest;
-    Some(batch)
+        DeadReason::Expired => {
+            inner.stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            Error::DeadlineExceeded {
+                deadline: job
+                    .spec
+                    .deadline
+                    .or(inner.default_deadline)
+                    .unwrap_or_default(),
+            }
+        }
+    };
+    inner.finish_job(&job.spec, &job.state, job.cost_bytes, Err(err));
 }
 
 fn execute_batch(inner: &ServiceInner, batch: Vec<QueuedJob>) {
     let spec = batch[0].spec;
+    let n = batch.len() as u32;
     inner.stats.batches.fetch_add(1, Ordering::Relaxed);
     inner
         .stats
         .max_batch
         .fetch_max(batch.len(), Ordering::Relaxed);
 
-    let plan = match inner.plan_for(&spec) {
-        Ok(plan) => plan,
-        Err(e) => return fail_batch(inner, batch, format!("plan build failed: {e}")),
+    // The registry re-raises builder panics (so a direct `plan()` caller
+    // sees them); the dispatcher must not unwind holding this batch's
+    // handles, so the panic is caught and typed here.
+    let plan = match catch_unwind(AssertUnwindSafe(|| inner.plan_for(&spec))) {
+        Ok(Ok(plan)) => plan,
+        Ok(Err(e)) => return fail_batch(inner, batch, format!("plan build failed: {e}")),
+        Err(_) => return fail_batch(inner, batch, "plan build panicked".into()),
     };
     let ws = match inner.buffers.checkout_workspace(spec.bandwidth) {
         Ok(ws) => ws,
@@ -544,13 +880,12 @@ fn execute_batch(inner: &ServiceInner, batch: Vec<QueuedJob>) {
     // *before* the handles resolve, so a caller that waits and then
     // checks a buffer out is guaranteed the pooled allocation —
     // the pointer-stability contract the serving tests pin.
-    let (states, results) = run_batch(inner, &plan, ws, batch);
-    debug_assert_eq!(states.len(), results.len());
-    for (state, result) in states.iter().zip(results) {
-        // Count before waking the waiter: a caller whose `wait` just
-        // returned must observe its own job in `jobs_completed`.
-        inner.stats.completed.fetch_add(1, Ordering::Relaxed);
-        state.fulfill(result);
+    let wall = Instant::now();
+    let (metas, results) = run_batch(inner, &plan, ws, batch);
+    inner.admission.observe_job(wall.elapsed() / n);
+    debug_assert_eq!(metas.len(), results.len());
+    for (meta, result) in metas.iter().zip(results) {
+        inner.finish_job(&meta.spec, &meta.state, meta.cost_bytes, result);
     }
 }
 
@@ -561,10 +896,42 @@ impl ServiceInner {
             options: spec.options,
         })
     }
+
+    /// The single resolution point of every admitted job: release its
+    /// admission charges, record its latency (successes only), count it
+    /// completed, and fulfill its handle. Called exactly once per job.
+    fn finish_job(
+        &self,
+        spec: &JobSpec,
+        state: &JobState,
+        cost_bytes: usize,
+        result: Result<JobOutput>,
+    ) {
+        self.admission.release(cost_bytes, spec.tenant);
+        if result.is_ok() {
+            let mut latencies = lock(&self.latencies);
+            latencies
+                .entry(spec.bandwidth)
+                .or_default()
+                .record(state.elapsed());
+        }
+        // Count before waking the waiter: a caller whose `wait` just
+        // returned must observe its own job in `jobs_completed`.
+        self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        state.fulfill(result);
+    }
 }
 
-/// Per-job results paired with the completion slots to fulfill.
-type BatchOutcome = (Vec<Arc<JobState>>, Vec<Result<JobOutput>>);
+/// The parts of a dequeued job that outlive its payload: what
+/// `finish_job` needs once the transform has run.
+struct JobMeta {
+    spec: JobSpec,
+    state: Arc<JobState>,
+    cost_bytes: usize,
+}
+
+/// Per-job results paired with the job metadata to resolve them with.
+type BatchOutcome = (Vec<JobMeta>, Vec<Result<JobOutput>>);
 
 /// The direction-specific types and hooks of one micro-batch. Two
 /// zero-sized impls keep [`run_batch_dir`] generic instead of
@@ -718,11 +1085,15 @@ fn run_batch_dir<D: BatchDir>(
 ) -> BatchOutcome {
     let b = batch[0].spec.bandwidth;
     let n = batch.len();
-    let mut states = Vec::with_capacity(n);
+    let mut metas = Vec::with_capacity(n);
     let mut ins = Vec::with_capacity(n);
     for job in batch {
         ins.push(D::unpack(job.input));
-        states.push(job.state);
+        metas.push(JobMeta {
+            spec: job.spec,
+            state: job.state,
+            cost_bytes: job.cost_bytes,
+        });
     }
     // Pooled outputs. Checkout cannot fail for the b >= 1 validated at
     // submit; the graceful branch keeps the dispatcher alive anyway.
@@ -734,16 +1105,23 @@ fn run_batch_dir<D: BatchDir>(
                 D::recycle_in(&inner.buffers, input);
             }
             let msg = format!("output buffer checkout failed: {e}");
-            let results = states
+            let results = metas
                 .iter()
                 .map(|_| Err(Error::Service(msg.clone())))
                 .collect();
-            return (states, results);
+            return (metas, results);
         }
     };
-    // Fast path: the whole batch through one `*_batch_into` call.
+    // Fast path: the whole batch through one `*_batch_into` call. The
+    // fault site fires INSIDE the catch_unwind: an injected panic or
+    // error lands in the same recovery path as a real kernel failure.
     let batch_ok = matches!(
-        catch_unwind(AssertUnwindSafe(|| D::batch(plan, &ins, &mut outs, ws))),
+        catch_unwind(AssertUnwindSafe(|| -> Result<()> {
+            if let Some(action) = faults::fire(faults::BATCH_RUNNER) {
+                action.apply(faults::BATCH_RUNNER)?;
+            }
+            D::batch(plan, &ins, &mut outs, ws)
+        })),
         Ok(Ok(()))
     );
     let results: Vec<Result<JobOutput>> = if batch_ok {
@@ -755,10 +1133,20 @@ fn run_batch_dir<D: BatchDir>(
         ins.iter()
             .zip(outs)
             .map(|(input, mut out)| {
-                let run =
-                    catch_unwind(AssertUnwindSafe(|| D::single(plan, input, &mut out, ws)));
+                let run = catch_unwind(AssertUnwindSafe(|| -> Result<TransformStats> {
+                    if let Some(action) = faults::fire(faults::BATCH_RUNNER) {
+                        action.apply(faults::BATCH_RUNNER)?;
+                    }
+                    D::single(plan, input, &mut out, ws)
+                }));
                 match run {
                     Ok(Ok(_stats)) => Ok(D::wrap(out)),
+                    Ok(Err(e @ Error::FaultInjected { .. })) => {
+                        // Injected faults stay typed end to end — the
+                        // chaos suite asserts on the variant.
+                        D::recycle_out(&inner.buffers, out);
+                        Err(e)
+                    }
                     Ok(Err(e)) => {
                         D::recycle_out(&inner.buffers, out);
                         Err(Error::Service(format!("job execution failed: {e}")))
@@ -774,20 +1162,24 @@ fn run_batch_dir<D: BatchDir>(
     for input in ins {
         D::recycle_in(&inner.buffers, input);
     }
-    (states, results)
+    (metas, results)
+}
+
+/// Recycle a failed or never-run job's payload: the buffer is reusable
+/// even though the job is not.
+fn recycle_input(inner: &ServiceInner, input: JobInput) {
+    match input {
+        JobInput::Grid(g) => inner.buffers.checkin_grid(g),
+        JobInput::Coeffs(c) => inner.buffers.checkin_coeffs(c),
+    }
 }
 
 /// Fail every job of a batch with one (cloned) service error.
 fn fail_batch(inner: &ServiceInner, batch: Vec<QueuedJob>, msg: String) {
     for job in batch {
-        // Recycle the payloads: the buffers are reusable even though
-        // the jobs failed.
-        match job.input {
-            JobInput::Grid(g) => inner.buffers.checkin_grid(g),
-            JobInput::Coeffs(c) => inner.buffers.checkin_coeffs(c),
-        }
-        inner.stats.completed.fetch_add(1, Ordering::Relaxed);
-        job.state.fulfill(Err(Error::Service(msg.clone())));
+        recycle_input(inner, job.input);
+        let err = Err(Error::Service(msg.clone()));
+        inner.finish_job(&job.spec, &job.state, job.cost_bytes, err);
     }
 }
 
@@ -937,5 +1329,77 @@ mod tests {
         assert!(s.batches >= 1 && s.batches <= 3);
         assert!(s.max_batch_size >= 1);
         assert_eq!(s.registry.plans, 1);
+    }
+
+    #[test]
+    fn admission_knobs_reject_with_typed_overload() {
+        // max_queue = 0: every submission rejected before queueing.
+        let service = So3Service::builder()
+            .threads(1)
+            .max_queue(0)
+            .build()
+            .unwrap();
+        match service.submit(JobSpec::inverse(4), So3Coeffs::zeros(4)) {
+            Err(Error::Overloaded {
+                cause,
+                retry_after_hint,
+            }) => {
+                assert_eq!(cause, OverloadCause::QueueDepth);
+                assert!(retry_after_hint > Duration::ZERO);
+            }
+            other => panic!("expected Overloaded, got {:?}", other.map(|_| ())),
+        }
+        let m = service.metrics();
+        assert_eq!(m.rejected.queue_depth, 1);
+        assert_eq!(m.rejected.total(), 1);
+        assert_eq!(m.jobs_submitted, 0, "rejected jobs are never submitted");
+    }
+
+    #[test]
+    fn metrics_snapshot_counts_jobs_and_latency() {
+        let service = So3Service::builder().threads(1).build().unwrap();
+        for i in 0..3 {
+            let _ = service.inverse(So3Coeffs::random(4, i)).unwrap();
+        }
+        let m = service.metrics();
+        assert_eq!(m.jobs_submitted, 3);
+        assert_eq!(m.jobs_completed, 3);
+        assert_eq!(m.queue_depth, 0);
+        assert_eq!(m.inflight_bytes, 0, "resolved jobs release their bytes");
+        assert_eq!(m.rejected.total(), 0);
+        assert_eq!(m.dispatcher_restarts, 0);
+        assert_eq!(m.per_bandwidth.len(), 1);
+        assert_eq!(m.per_bandwidth[0].bandwidth, 4);
+        assert_eq!(m.per_bandwidth[0].jobs, 3);
+        assert!(m.per_bandwidth[0].p99 >= m.per_bandwidth[0].p50);
+        assert!(m.mean_batch_size >= 1.0);
+        assert!(m.render().contains("b=4"));
+    }
+
+    #[test]
+    fn shutdown_with_slack_drains_everything() {
+        let service = So3Service::builder().threads(1).build().unwrap();
+        let handles: Vec<JobHandle> = (0..3)
+            .map(|i| {
+                service
+                    .submit(JobSpec::inverse(4), So3Coeffs::random(4, i))
+                    .unwrap()
+            })
+            .collect();
+        let report = service.shutdown(Duration::from_secs(60));
+        assert_eq!(report.aborted, 0);
+        // Jobs completing before the shutdown snapshot don't count as
+        // drained, so only an upper bound is deterministic here.
+        assert!(report.drained <= 3);
+        for h in handles {
+            assert!(h.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn shutdown_on_idle_service_reports_zero() {
+        let service = So3Service::builder().threads(1).build().unwrap();
+        let report = service.shutdown(Duration::from_secs(1));
+        assert_eq!(report, ShutdownReport::default());
     }
 }

@@ -9,16 +9,26 @@
 //! Eviction only drops the registry's reference: in-flight callers
 //! holding an `Arc` keep executing on the evicted plan, and a later
 //! request for the key simply rebuilds it.
+//!
+//! **Failed builds are cached too**: a key whose build errors is served
+//! the typed
+//! [`Error::PlanBuildFailed`](crate::error::Error::PlanBuildFailed)
+//! without rebuilding until an exponential backoff elapses
+//! ([`PlanRegistry::set_build_backoff`]) — a persistently bad key (or a
+//! table file that keeps failing to load) costs one build per backoff
+//! window instead of one per miss. A successful build clears the entry.
 
 use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{ExecutorConfig, MemoryBudget, PartitionStrategy};
 use crate::dwt::tables::WignerStorage;
 use crate::dwt::{DwtAlgorithm, Precision};
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::faults;
 use crate::fft::FftEngine;
 use crate::pool::{PoolSpec, Schedule, WorkerPool};
 use crate::simd::SimdPolicy;
@@ -122,6 +132,18 @@ pub struct RegistryStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Builds that returned an error (monotonic).
+    pub build_failures: u64,
+    /// Keys currently carrying a cached build failure.
+    pub failed_keys: usize,
+}
+
+/// Cached outcome of a failed build (see the [module docs](self)).
+struct BuildFailure {
+    msg: String,
+    attempts: u32,
+    /// Next instant at which a rebuild is allowed.
+    retry_at: Instant,
 }
 
 /// See the [module docs](self).
@@ -145,6 +167,13 @@ pub struct PlanRegistry {
     /// (which would also spike memory N× past any budget).
     building: Mutex<HashSet<PlanKey>>,
     building_cv: Condvar,
+    /// Cached build failures, served until their backoff elapses.
+    /// Lock order: `building` → `failures` (never reversed).
+    failures: Mutex<HashMap<PlanKey, BuildFailure>>,
+    /// Backoff for failed builds: `base << (attempts-1)`, capped.
+    backoff_base_ms: AtomicU64,
+    backoff_cap_ms: AtomicU64,
+    build_failures: AtomicU64,
     clock: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -170,6 +199,10 @@ impl PlanRegistry {
             plans: RwLock::new(HashMap::new()),
             building: Mutex::new(HashSet::new()),
             building_cv: Condvar::new(),
+            failures: Mutex::new(HashMap::new()),
+            backoff_base_ms: AtomicU64::new(100),
+            backoff_cap_ms: AtomicU64::new(5_000),
+            build_failures: AtomicU64::new(0),
             clock: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -197,6 +230,12 @@ impl PlanRegistry {
             let mut building = lock_unpoisoned(&self.building);
             if let Some(plan) = self.lookup(key, tick) {
                 return Ok(plan);
+            }
+            // A recent failed build is served typed (no rebuild) until
+            // its backoff elapses — this is also what single-flight
+            // waiters woken by a failing builder observe.
+            if let Some(err) = self.cached_failure(key) {
+                return Err(err);
             }
             if building.insert(key) {
                 break;
@@ -242,9 +281,17 @@ impl PlanRegistry {
                 if let Some(budget) = self.budget {
                     Self::evict_lru(&mut map, budget, key, &self.evictions);
                 }
+                drop(map);
+                self.clear_failure(key);
                 Ok(plan)
             }
-            Ok(Err(e)) => Err(e),
+            Ok(Err(e)) => {
+                // The builder itself surfaces the original error; later
+                // misses within the backoff window get the cached
+                // `PlanBuildFailed` wrapper.
+                self.record_failure(key, &e);
+                Err(e)
+            }
             Err(payload) => {
                 release_marker();
                 resume_unwind(payload)
@@ -252,6 +299,53 @@ impl PlanRegistry {
         };
         release_marker();
         outcome
+    }
+
+    /// Configure the failed-build backoff: the first failure of a key
+    /// blocks rebuilds for `base`, doubling per subsequent failure up to
+    /// `cap`. Defaults: 100ms base, 5s cap. `Duration::ZERO` base
+    /// disables the caching (every miss retries the build).
+    pub fn set_build_backoff(&self, base: Duration, cap: Duration) {
+        let to_ms = |d: Duration| d.as_millis().min(u64::MAX as u128) as u64;
+        self.backoff_base_ms.store(to_ms(base), Ordering::Relaxed);
+        self.backoff_cap_ms.store(to_ms(cap), Ordering::Relaxed);
+    }
+
+    /// The typed error for a key still inside its failure backoff;
+    /// `None` allows a (re)build.
+    fn cached_failure(&self, key: PlanKey) -> Option<Error> {
+        let failures = lock_unpoisoned(&self.failures);
+        let f = failures.get(&key)?;
+        let now = Instant::now();
+        if now >= f.retry_at {
+            return None;
+        }
+        Some(Error::PlanBuildFailed {
+            msg: f.msg.clone(),
+            attempts: f.attempts,
+            retry_in: f.retry_at - now,
+        })
+    }
+
+    fn record_failure(&self, key: PlanKey, e: &Error) {
+        self.build_failures.fetch_add(1, Ordering::Relaxed);
+        let base = self.backoff_base_ms.load(Ordering::Relaxed);
+        let cap = self.backoff_cap_ms.load(Ordering::Relaxed);
+        let mut failures = lock_unpoisoned(&self.failures);
+        let f = failures.entry(key).or_insert_with(|| BuildFailure {
+            msg: String::new(),
+            attempts: 0,
+            retry_at: Instant::now(),
+        });
+        f.attempts += 1;
+        f.msg = e.to_string();
+        let shift = (f.attempts - 1).min(20);
+        let backoff = Duration::from_millis(base.saturating_mul(1u64 << shift).min(cap));
+        f.retry_at = Instant::now().checked_add(backoff).unwrap_or_else(Instant::now);
+    }
+
+    fn clear_failure(&self, key: PlanKey) {
+        lock_unpoisoned(&self.failures).remove(&key);
     }
 
     /// Cache lookup, bumping the LRU tick and hit counter on success.
@@ -264,6 +358,12 @@ impl PlanRegistry {
     }
 
     fn build(&self, key: PlanKey) -> Result<So3Plan> {
+        // Fault site: an injected error here exercises the failure
+        // cache; an injected panic exercises the single-flight marker
+        // release and the dispatcher's catch_unwind.
+        if let Some(action) = faults::fire(faults::PLAN_BUILD) {
+            action.apply(faults::PLAN_BUILD)?;
+        }
         let pool_spec = match &self.pool {
             Some(p) => PoolSpec::Shared(Arc::clone(p)),
             None => PoolSpec::Owned,
@@ -325,6 +425,8 @@ impl PlanRegistry {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            build_failures: self.build_failures.load(Ordering::Relaxed),
+            failed_keys: lock_unpoisoned(&self.failures).len(),
         }
     }
 }
@@ -466,5 +568,47 @@ mod tests {
         let reg = PlanRegistry::new(2, Some(Arc::clone(&pool)), None, false, PlanRigor::Estimate, None);
         let plan = reg.get(key(4)).unwrap();
         assert!(Arc::ptr_eq(plan.pool().unwrap(), &pool));
+    }
+
+    #[test]
+    fn failed_builds_are_cached_with_backoff() {
+        // Strict registry + key(6): the build fails deterministically
+        // (non-power-of-two) without needing an injected fault.
+        let reg = PlanRegistry::new(1, None, None, false, PlanRigor::Estimate, None);
+        reg.set_build_backoff(Duration::from_secs(5), Duration::from_secs(5));
+        assert!(matches!(
+            reg.get(key(6)),
+            Err(Error::NonPowerOfTwoBandwidth(6))
+        ));
+        // Within the backoff window the cached failure is served typed,
+        // with no rebuild attempt.
+        match reg.get(key(6)) {
+            Err(Error::PlanBuildFailed {
+                msg,
+                attempts,
+                retry_in,
+            }) => {
+                assert_eq!(attempts, 1);
+                assert!(msg.contains("power of two"));
+                assert!(retry_in <= Duration::from_secs(5));
+            }
+            other => panic!("expected PlanBuildFailed, got {:?}", other.map(|_| ())),
+        }
+        let s = reg.stats();
+        assert_eq!(s.build_failures, 1, "the cached miss ran no build");
+        assert_eq!(s.failed_keys, 1);
+        assert!(reg.is_empty());
+
+        // Zero backoff disables the failure cache: every miss retries
+        // the build and surfaces the original error.
+        let eager = PlanRegistry::new(1, None, None, false, PlanRigor::Estimate, None);
+        eager.set_build_backoff(Duration::ZERO, Duration::ZERO);
+        for _ in 0..2 {
+            assert!(matches!(
+                eager.get(key(6)),
+                Err(Error::NonPowerOfTwoBandwidth(6))
+            ));
+        }
+        assert_eq!(eager.stats().build_failures, 2);
     }
 }

@@ -19,6 +19,12 @@
 //! (every `So3Coeffs::random(..)` submitted by value) would grow the
 //! pool by one buffer per job forever — recycling must bound memory,
 //! not leak it.
+//!
+//! **Abandoned handles recycle too**: a [`JobHandle`](super::JobHandle)
+//! dropped without `wait` returns its completed output to these free
+//! lists from the job state's `Drop` (subject to the same cap), so
+//! fire-and-forget or cancelled callers no longer leak one output
+//! buffer per abandoned job.
 
 use std::collections::HashMap;
 use std::fmt;

@@ -305,6 +305,18 @@ impl WisdomStore {
             return;
         }
         state.loaded = true;
+        // Fault site: an injected I/O failure must degrade exactly like a
+        // real unreadable store — a one-shot warning and Estimate-mode
+        // fallback, never an error on the transform path.
+        if let Some(action) = crate::faults::fire(crate::faults::WISDOM_STORE) {
+            if let Err(e) = action.apply(crate::faults::WISDOM_STORE) {
+                state.warning = Some(WisdomWarning::Io {
+                    path: self.path.clone().unwrap_or_default(),
+                    detail: e.to_string(),
+                });
+                return;
+            }
+        }
         let Some(path) = &self.path else { return };
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,

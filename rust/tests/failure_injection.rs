@@ -1,15 +1,36 @@
 //! Integration: failure handling — malformed inputs, invalid configs,
-//! missing artifacts, poisoned values. The library must fail loudly and
-//! cleanly, never silently corrupt.
+//! missing artifacts, poisoned values, and the chaos suite driving the
+//! deterministic fault-injection sites in [`so3ft::faults`] against a
+//! live [`So3Service`]. The library must fail loudly, cleanly, and
+//! *typed* — never hang a handle, never silently corrupt.
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
 
 use so3ft::config::{ParsedConfig, RunConfig};
-use so3ft::dwt::{DwtAlgorithm, Precision};
 use so3ft::coordinator::PartitionStrategy;
+use so3ft::dwt::{DwtAlgorithm, Precision};
+use so3ft::error::OverloadCause;
+use so3ft::faults::{self, FaultAction, ScopedFault};
 use so3ft::runtime::XlaDwt;
+use so3ft::service::{JobSpec, PlanOptions, So3Service};
 use so3ft::so3::coeffs::So3Coeffs;
 use so3ft::so3::sampling::So3Grid;
 use so3ft::transform::So3Plan;
+use so3ft::wisdom::{PlanRigor, WisdomSource, WisdomStore};
 use so3ft::{Complex64, Error};
+
+/// The fault registry is process-global. Every test that arms a real
+/// site — or that builds plans / runs pool regions a concurrently armed
+/// fault could hit — serializes on this lock. Test binaries in other
+/// files run as separate processes and cannot interfere.
+static CHAOS: Mutex<()> = Mutex::new(());
+
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    // A failed chaos test poisons the lock; recovering keeps the rest
+    // of the suite meaningful instead of cascading the failure.
+    CHAOS.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 #[test]
 fn bandwidth_zero_rejected_everywhere() {
@@ -20,6 +41,7 @@ fn bandwidth_zero_rejected_everywhere() {
 
 #[test]
 fn mismatched_shapes_rejected() {
+    let _guard = chaos_lock();
     let fft = So3Plan::new(4).unwrap();
     assert!(fft.forward(&So3Grid::zeros(8).unwrap()).is_err());
     assert!(fft.inverse(&So3Coeffs::random(8, 1)).is_err());
@@ -48,6 +70,7 @@ fn from_vec_errors_report_expected_vs_got() {
 
 #[test]
 fn invalid_config_combinations_rejected() {
+    let _guard = chaos_lock();
     assert!(matches!(
         So3Plan::builder(4)
             .algorithm(DwtAlgorithm::Clenshaw)
@@ -102,6 +125,7 @@ fn config_file_errors_are_descriptive() {
 
 #[test]
 fn nan_input_propagates_not_hangs() {
+    let _guard = chaos_lock();
     // NaN samples must flow through to NaN coefficients (IEEE semantics),
     // not crash or hang the pool.
     let b = 4;
@@ -122,4 +146,425 @@ fn cli_rejects_bad_invocations() {
     assert_eq!(code, 2);
     let code = so3ft::cli::run(vec!["so3ft".into(), "info".into(), "--bogus".into()]);
     assert_eq!(code, 2);
+}
+
+// ----------------------------------------------------------------------
+// Chaos suite: overload, deadlines, and injected faults against the
+// real sites in `so3ft::faults`, driven through a live `So3Service`.
+// Invariant under test everywhere: every admitted handle resolves with
+// a result or a *typed* error — no hang, no lost handle, no panic
+// escaping the service.
+// ----------------------------------------------------------------------
+
+/// Saturation sheds load as typed `Overloaded { QueueDepth }` with an
+/// actionable retry hint — and every *admitted* job still resolves.
+#[test]
+fn saturation_sheds_load_with_typed_queue_rejections() {
+    let _guard = chaos_lock();
+    let service = So3Service::builder()
+        .threads(1)
+        .max_batch(1)
+        .max_queue(2)
+        .build()
+        .unwrap();
+    // Hold the dispatcher inside the first batch so the queue backs up.
+    let _fault = ScopedFault::new(
+        faults::BATCH_RUNNER,
+        FaultAction::Sleep(Duration::from_millis(300)),
+        Some(1),
+    );
+    let mut admitted = Vec::new();
+    let mut rejections = 0u32;
+    for i in 0..8u64 {
+        match service.submit(JobSpec::inverse(4), So3Coeffs::random(4, i)) {
+            Ok(h) => admitted.push(h),
+            Err(Error::Overloaded { cause, retry_after_hint }) => {
+                assert_eq!(cause, OverloadCause::QueueDepth);
+                assert!(retry_after_hint > Duration::ZERO, "hint must be actionable");
+                rejections += 1;
+            }
+            Err(e) => panic!("saturation must stay typed, got {e}"),
+        }
+    }
+    assert!(rejections >= 1, "8 submissions into a 2-deep queue must shed");
+    assert!(service.metrics().rejected.queue_depth >= 1);
+    for h in admitted {
+        h.wait().expect("admitted jobs resolve successfully");
+    }
+}
+
+/// `max_inflight_bytes` bounds *concurrent* work: a busy service
+/// rejects on bytes, but an idle one admits even an over-cap job — the
+/// cap must never wedge a lone caller.
+#[test]
+fn inflight_bytes_cap_rejects_busy_but_never_wedges_idle() {
+    let _guard = chaos_lock();
+    let service = So3Service::builder()
+        .threads(1)
+        .max_batch(1)
+        .max_inflight_bytes(1)
+        .build()
+        .unwrap();
+    let first = {
+        let _fault = ScopedFault::new(
+            faults::BATCH_RUNNER,
+            FaultAction::Sleep(Duration::from_millis(250)),
+            Some(1),
+        );
+        let first = service
+            .submit(JobSpec::inverse(4), So3Coeffs::random(4, 0))
+            .unwrap();
+        match service.submit(JobSpec::inverse(4), So3Coeffs::random(4, 1)) {
+            Err(Error::Overloaded { cause, .. }) => {
+                assert_eq!(cause, OverloadCause::InflightBytes);
+            }
+            other => panic!("expected a bytes rejection, got {:?}", other.map(|_| ())),
+        }
+        first
+    };
+    first.wait().unwrap();
+    assert_eq!(service.metrics().rejected.inflight_bytes, 1);
+    // Idle again: the over-cap job is admitted.
+    let out = service.inverse(So3Coeffs::random(4, 2)).unwrap();
+    assert_eq!(out.bandwidth(), 4);
+}
+
+/// A tenant at its quota is rejected typed; other tenants and untagged
+/// jobs are unaffected.
+#[test]
+fn tenant_quota_rejects_only_the_noisy_tenant() {
+    let _guard = chaos_lock();
+    let service = So3Service::builder()
+        .threads(1)
+        .max_batch(1)
+        .tenant_quota(1)
+        .build()
+        .unwrap();
+    let _fault = ScopedFault::new(
+        faults::BATCH_RUNNER,
+        FaultAction::Sleep(Duration::from_millis(250)),
+        Some(1),
+    );
+    let noisy = service
+        .submit(JobSpec::inverse(4).tenant(7), So3Coeffs::random(4, 0))
+        .unwrap();
+    match service.submit(JobSpec::inverse(4).tenant(7), So3Coeffs::random(4, 1)) {
+        Err(Error::Overloaded { cause, .. }) => {
+            assert_eq!(cause, OverloadCause::TenantQuota);
+        }
+        other => panic!("expected a quota rejection, got {:?}", other.map(|_| ())),
+    }
+    let other_tenant = service
+        .submit(JobSpec::inverse(4).tenant(8), So3Coeffs::random(4, 2))
+        .unwrap();
+    let untagged = service
+        .submit(JobSpec::inverse(4), So3Coeffs::random(4, 3))
+        .unwrap();
+    for h in [noisy, other_tenant, untagged] {
+        h.wait().expect("jobs within quota resolve");
+    }
+    assert_eq!(service.metrics().rejected.tenant_quota, 1);
+}
+
+/// A job whose deadline expires while queued resolves typed and never
+/// executes; the job blocking it is unaffected.
+#[test]
+fn expired_deadline_resolves_typed_without_executing() {
+    let _guard = chaos_lock();
+    let service = So3Service::builder()
+        .threads(1)
+        .max_batch(1)
+        .build()
+        .unwrap();
+    let _fault = ScopedFault::new(
+        faults::BATCH_RUNNER,
+        FaultAction::Sleep(Duration::from_millis(300)),
+        Some(1),
+    );
+    let blocker = service
+        .submit(JobSpec::inverse(4), So3Coeffs::random(4, 0))
+        .unwrap();
+    let doomed = service
+        .submit(
+            JobSpec::inverse(4).deadline(Duration::from_millis(30)),
+            So3Coeffs::random(4, 1),
+        )
+        .unwrap();
+    match doomed.wait() {
+        Err(Error::DeadlineExceeded { deadline }) => {
+            assert_eq!(deadline, Duration::from_millis(30));
+        }
+        other => panic!("expected DeadlineExceeded, got {:?}", other.map(|_| ())),
+    }
+    blocker.wait().expect("the blocking job is unaffected");
+    assert_eq!(service.metrics().deadline_expired, 1);
+}
+
+/// Cancellation before dispatch resolves `Cancelled` without executing;
+/// cancelling an already-resolved job is a no-op that returns `false`.
+#[test]
+fn cancel_before_dispatch_resolves_typed() {
+    let _guard = chaos_lock();
+    let service = So3Service::builder()
+        .threads(1)
+        .max_batch(1)
+        .build()
+        .unwrap();
+    {
+        let _fault = ScopedFault::new(
+            faults::BATCH_RUNNER,
+            FaultAction::Sleep(Duration::from_millis(250)),
+            Some(1),
+        );
+        let blocker = service
+            .submit(JobSpec::inverse(4), So3Coeffs::random(4, 0))
+            .unwrap();
+        let victim = service
+            .submit(JobSpec::inverse(4), So3Coeffs::random(4, 1))
+            .unwrap();
+        assert!(victim.cancel(), "an undispatched job accepts cancellation");
+        assert!(matches!(victim.wait(), Err(Error::Cancelled)));
+        blocker.wait().expect("the blocking job is unaffected");
+    }
+    assert_eq!(service.metrics().cancelled, 1);
+    // Cancel after completion: recorded as a no-op, result unharmed.
+    let done = service
+        .submit(JobSpec::inverse(4), So3Coeffs::random(4, 2))
+        .unwrap();
+    while !done.is_done() {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(!done.cancel(), "cancel after completion is a no-op");
+    done.wait().expect("a completed job still yields its result");
+}
+
+/// An injected plan-build failure surfaces typed to the caller, is
+/// cached with backoff (served as `PlanBuildFailed` without a rebuild),
+/// and clears on the first successful rebuild after the window.
+#[test]
+fn injected_plan_build_failure_is_typed_cached_and_recoverable() {
+    let _guard = chaos_lock();
+    let service = So3Service::builder().threads(1).build().unwrap();
+    let backoff = Duration::from_millis(500);
+    service.registry().set_build_backoff(backoff, backoff);
+    {
+        let _fault = ScopedFault::new(
+            faults::PLAN_BUILD,
+            FaultAction::Err("chaos: table oom".into()),
+            Some(1),
+        );
+        match service.plan(4, PlanOptions::default()) {
+            Err(Error::FaultInjected { site, .. }) => assert_eq!(site, faults::PLAN_BUILD),
+            other => panic!("expected FaultInjected, got {:?}", other.map(|_| ())),
+        }
+    }
+    // Within the backoff window the failure is served from cache, typed
+    // — the fault is already disarmed, so an (incorrect) rebuild here
+    // would succeed and break the assertion.
+    match service.plan(4, PlanOptions::default()) {
+        Err(Error::PlanBuildFailed { attempts, retry_in, .. }) => {
+            assert_eq!(attempts, 1);
+            assert!(retry_in <= backoff);
+        }
+        other => panic!("expected PlanBuildFailed, got {:?}", other.map(|_| ())),
+    }
+    let stats = service.registry().stats();
+    assert_eq!(stats.build_failures, 1);
+    assert_eq!(stats.failed_keys, 1);
+    assert_eq!(stats.plans, 0, "failed keys cache no plan");
+    // Past the backoff the rebuild succeeds and clears the failure.
+    std::thread::sleep(backoff + Duration::from_millis(50));
+    assert!(service.plan(4, PlanOptions::default()).is_ok());
+    let stats = service.registry().stats();
+    assert_eq!(stats.plans, 1);
+    assert_eq!(stats.failed_keys, 0, "success clears the cached failure");
+}
+
+/// One injected batch fault fails exactly one job with the typed
+/// `FaultInjected` error; its batch neighbors complete bit-identical to
+/// an unfaulted run through the same serving path.
+#[test]
+fn injected_batch_fault_is_isolated_and_neighbors_stay_bit_identical() {
+    let _guard = chaos_lock();
+    let service = So3Service::builder()
+        .threads(1)
+        .batch_window(Duration::from_millis(50))
+        .max_batch(8)
+        .build()
+        .unwrap();
+    let input = So3Coeffs::random(4, 42);
+    // Unfaulted reference through the same serving path.
+    let reference = service.inverse(input.clone()).unwrap();
+    // Fire 1 fails the whole-batch fast path (forcing per-job
+    // isolation); fire 2 fails the first rerun job. However the
+    // dispatcher splits these jobs into batches, exactly one faults.
+    let _fault = ScopedFault::new(
+        faults::BATCH_RUNNER,
+        FaultAction::Err("chaos: kernel fault".into()),
+        Some(2),
+    );
+    let handles: Vec<_> = (0..3)
+        .map(|_| service.submit(JobSpec::inverse(4), input.clone()).unwrap())
+        .collect();
+    let mut faulted = 0;
+    let mut survivors = Vec::new();
+    for handle in handles {
+        match handle.wait() {
+            Err(Error::FaultInjected { site, .. }) => {
+                assert_eq!(site, faults::BATCH_RUNNER);
+                faulted += 1;
+            }
+            Ok(out) => survivors.push(out),
+            Err(e) => panic!("unexpected error from a batch neighbor: {e}"),
+        }
+    }
+    assert_eq!(faulted, 1, "exactly the faulted job fails, typed");
+    assert_eq!(survivors.len(), 2, "batch neighbors must complete");
+    for out in survivors {
+        let grid = out.into_grid().expect("inverse jobs yield grids");
+        assert_eq!(
+            grid.as_slice(),
+            reference.as_slice(),
+            "neighbors of a faulted job stay bit-identical"
+        );
+    }
+}
+
+/// A panic inside a pool worker body is contained: the job resolves
+/// with a typed error, the pool and dispatcher survive, and the next
+/// job completes normally on the same workers.
+#[test]
+fn injected_worker_panic_is_contained_and_the_service_recovers() {
+    let _guard = chaos_lock();
+    let service = So3Service::builder().threads(2).build().unwrap();
+    // Warm the plan so the fault hits job execution, not the build.
+    let warm = service.inverse(So3Coeffs::random(8, 1)).unwrap();
+    service.recycle_grid(warm);
+    {
+        let _fault = ScopedFault::new(
+            faults::WORKER_BODY,
+            FaultAction::Panic("chaos: worker bug".into()),
+            None,
+        );
+        let handle = service
+            .submit(JobSpec::inverse(8), So3Coeffs::random(8, 2))
+            .unwrap();
+        match handle.wait() {
+            Err(Error::Service(msg)) => {
+                assert!(msg.contains("panicked"), "typed panic wrap, got: {msg}");
+            }
+            other => panic!("expected a contained panic, got {:?}", other.map(|_| ())),
+        }
+    }
+    // Disarmed: the same pool serves the next job.
+    let out = service.inverse(So3Coeffs::random(8, 3)).unwrap();
+    assert_eq!(out.bandwidth(), 8);
+}
+
+/// An injected dispatcher panic trips the watchdog: the loop restarts
+/// over the intact queue, every queued job completes, and the restart
+/// is visible in the metrics snapshot.
+#[test]
+fn dispatcher_panic_restarts_watchdog_without_losing_jobs() {
+    let _guard = chaos_lock();
+    let service = So3Service::builder().threads(1).build().unwrap();
+    let _fault = ScopedFault::new(
+        faults::DISPATCHER,
+        FaultAction::Panic("chaos: dispatcher bug".into()),
+        Some(1),
+    );
+    let handles: Vec<_> = (0..2u64)
+        .map(|i| {
+            service
+                .submit(JobSpec::inverse(4), So3Coeffs::random(4, i))
+                .unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.wait().expect("jobs survive a dispatcher restart");
+    }
+    assert_eq!(service.metrics().dispatcher_restarts, 1);
+}
+
+/// Drain-with-deadline shutdown: the in-flight job finishes, queued
+/// jobs abort typed at the deadline, and every handle resolves.
+#[test]
+fn shutdown_deadline_aborts_queued_jobs_typed() {
+    let _guard = chaos_lock();
+    let service = So3Service::builder()
+        .threads(1)
+        .max_batch(1)
+        .build()
+        .unwrap();
+    let _fault = ScopedFault::new(
+        faults::BATCH_RUNNER,
+        FaultAction::Sleep(Duration::from_millis(300)),
+        Some(1),
+    );
+    let running = service
+        .submit(JobSpec::inverse(4), So3Coeffs::random(4, 0))
+        .unwrap();
+    // Give the dispatcher time to take the first job into its batch.
+    std::thread::sleep(Duration::from_millis(50));
+    let queued: Vec<_> = (1..3u64)
+        .map(|i| {
+            service
+                .submit(JobSpec::inverse(4), So3Coeffs::random(4, i))
+                .unwrap()
+        })
+        .collect();
+    let report = service.shutdown(Duration::from_millis(50));
+    assert_eq!(report.aborted, 2, "still-queued jobs abort at the deadline");
+    assert_eq!(report.drained, 1, "the in-flight job drains");
+    running.wait().expect("the dispatched job finishes normally");
+    for h in queued {
+        assert!(matches!(h.wait(), Err(Error::ShutdownDrain)));
+    }
+}
+
+/// An injected Wigner-table load failure is a typed constructor error —
+/// never a panic — and the next build succeeds once disarmed.
+#[test]
+fn injected_table_load_failure_is_a_typed_constructor_error() {
+    let _guard = chaos_lock();
+    {
+        let _fault = ScopedFault::new(
+            faults::WIGNER_LOAD,
+            FaultAction::Err("chaos: table io".into()),
+            Some(1),
+        );
+        match So3Plan::new(4) {
+            Err(Error::FaultInjected { site, .. }) => assert_eq!(site, faults::WIGNER_LOAD),
+            other => panic!("expected FaultInjected, got {:?}", other.map(|_| ())),
+        }
+    }
+    assert!(So3Plan::new(4).is_ok(), "disarmed: the same build succeeds");
+}
+
+/// An injected wisdom-store failure degrades exactly like a real
+/// unreadable store: the `Measure` build falls back to Estimate
+/// defaults with a typed warning, and the plan still transforms.
+#[test]
+fn injected_wisdom_store_failure_degrades_to_estimate_fallback() {
+    let _guard = chaos_lock();
+    let store = WisdomStore::in_memory();
+    let _fault = ScopedFault::new(
+        faults::WISDOM_STORE,
+        FaultAction::Err("chaos: store io".into()),
+        Some(1),
+    );
+    let plan = So3Plan::builder(4)
+        .rigor(PlanRigor::Measure)
+        .wisdom_store(store)
+        .build()
+        .unwrap();
+    let outcome = plan.wisdom().expect("Measure builds record an outcome");
+    assert!(
+        matches!(outcome.source, WisdomSource::Fallback(_)),
+        "an unreadable store must fall back, got {:?}",
+        outcome.source
+    );
+    // The degraded plan still transforms.
+    let grid = plan.inverse(&So3Coeffs::random(4, 5)).unwrap();
+    assert_eq!(grid.bandwidth(), 4);
 }
