@@ -1,0 +1,456 @@
+#!/usr/bin/env python3
+"""In-tree invariant linter for the so3ft concurrency / unsafe surface.
+
+Zero dependencies (stdlib only). Wired into the CI lint job; run locally
+with:
+
+    python3 ci/lint_invariants.py            # lint the tree
+    python3 ci/lint_invariants.py --self-test # prove seeded violations fail
+
+Rules (see docs/CONCURRENCY.md for the rationale):
+
+  R1 unsafe-allowlist   `unsafe` code may appear only in the allow-listed
+                        module set below. Anything else is a layering
+                        violation: new unsafe belongs in an audited leaf
+                        module, not sprinkled through orchestration code.
+  R2 safety-comment     Every `unsafe` block / impl / fn must carry an
+                        adjacent `// SAFETY:` comment (or `# Safety` doc
+                        section for unsafe fns) within ADJACENCY lines
+                        above it.
+  R3 ordering-protocol  Every `Ordering::*` use outside tests must carry a
+                        one-line protocol comment tagged `ordering:` on
+                        the same line or within ADJACENCY lines above —
+                        naming what the ordering synchronizes with (or
+                        why Relaxed suffices).
+  R4 lock-unpoisoned    Raw `.lock().unwrap()` / `.read().unwrap()` /
+                        `.write().unwrap()` on sync primitives is banned
+                        outside tests; use util::lock_unpoisoned /
+                        read_unpoisoned / write_unpoisoned so a panicked
+                        peer doesn't cascade into poisoned-lock panics.
+  R5 hot-loop-hygiene   Kernel files must mark their innermost hot loops
+                        with `// lint: hot-loop-begin` / `// lint:
+                        hot-loop-end`; inside a marked region, timing
+                        syscalls (`Instant::now`) and allocation
+                        (`Vec::new`, `vec![`, `to_vec`, `Box::new`,
+                        `with_capacity`, `collect()`) are banned. Each
+                        file listed in HOT_FILES must contain at least
+                        one marked region, so the markers cannot be
+                        silently deleted to dodge the rule.
+
+Test code is exempt from R3/R4 (but not R1/R2): the linter stops applying
+those rules after a `#[cfg(test)]` module marker, inside `rust/tests/`,
+and inside `rust/benches/`.
+"""
+
+import argparse
+import os
+import re
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "rust", "src")
+
+# How many lines above a site we search for its justifying comment.
+ADJACENCY = 6
+
+# R1: modules allowed to contain unsafe code, relative to rust/src.
+# Keep in sync with the table in docs/CONCURRENCY.md.
+UNSAFE_ALLOWLIST = {
+    "util.rs",  # AlignedVec (Pod casts), SyncUnsafeSlice
+    "simd.rs",  # runtime ISA detection helpers
+    "dwt/simd.rs",  # AVX2/FMA + NEON Wigner kernels
+    "fft/simd.rs",  # AVX2/FMA + NEON butterfly kernels
+    "fft/complex.rs",  # split re/im panel views over raw parts
+    "fft/split_radix.rs",  # ISA dispatch into the fft/simd kernels
+    "dwt/kernels.rs",  # disjoint SyncUnsafeSlice writes (matvec kernels)
+    "dwt/folded.rs",  # disjoint SyncUnsafeSlice writes + ISA dispatch
+    "dwt/clenshaw.rs",  # disjoint SyncUnsafeSlice writes
+    "coordinator/exec.rs",  # disjoint SyncUnsafeSlice writes per (u,v) task
+    "pool/runtime.rs",  # lifetime-erased JobBody handoff
+    "runtime/xla_dwt.rs",  # AOT artifact mmap surface (stub)
+    "transpose/mod.rs",  # in-place blocked transpose raw swaps
+    "xprec.rs",  # Pod impl for DdComplex (plain f64 pairs)
+}
+
+# R5: kernel files that must contain >= 1 marked hot-loop region.
+HOT_FILES = {
+    "dwt/kernels.rs",
+    "dwt/folded.rs",
+    "dwt/simd.rs",
+    "fft/radix2.rs",
+    "fft/split_radix.rs",
+    "fft/simd.rs",
+}
+
+HOT_BEGIN = "// lint: hot-loop-begin"
+HOT_END = "// lint: hot-loop-end"
+
+# Banned inside hot-loop regions: wall-clock reads and allocator calls.
+HOT_BANNED = [
+    (re.compile(r"\bInstant::now\b"), "Instant::now"),
+    (re.compile(r"\bSystemTime::now\b"), "SystemTime::now"),
+    (re.compile(r"\bVec::new\b"), "Vec::new"),
+    (re.compile(r"\bvec!\s*\["), "vec!["),
+    (re.compile(r"\.to_vec\(\)"), ".to_vec()"),
+    (re.compile(r"\bBox::new\b"), "Box::new"),
+    (re.compile(r"\bwith_capacity\s*\("), "with_capacity"),
+    (re.compile(r"\.collect::<|\.collect\(\)"), ".collect()"),
+]
+
+RE_ORDERING = re.compile(r"\bOrdering::(Relaxed|Acquire|Release|AcqRel|SeqCst)\b")
+RE_RAW_LOCK = re.compile(r"\.(lock|read|write)\(\)\s*\.unwrap\(\)")
+RE_UNSAFE = re.compile(r"\bunsafe\b")
+RE_CFG_TEST_MOD = re.compile(r"#\[cfg\(test\)\]")
+RE_SAFETY = re.compile(r"//\s*SAFETY:", re.IGNORECASE)
+RE_SAFETY_DOC = re.compile(r"///?\s*#+\s*Safety", re.IGNORECASE)
+RE_ORDER_TAG = re.compile(r"//.*\bordering:", re.IGNORECASE)
+
+
+class Violation:
+    def __init__(self, rule, path, line, msg):
+        self.rule = rule
+        self.path = path
+        self.line = line
+        self.msg = msg
+
+    def __str__(self):
+        rel = os.path.relpath(self.path, REPO)
+        return f"{rel}:{self.line}: [{self.rule}] {self.msg}"
+
+
+def strip_strings(line):
+    """Blank out string/char literal contents so tokens inside literals
+    (e.g. an "unsafe" in an error message) don't trip the lexers."""
+    line = re.sub(r'"(?:[^"\\]|\\.)*"', '""', line)
+    # Char literals: only plain 'x' / '\n' forms; leave lifetimes alone.
+    line = re.sub(r"'(?:[^'\\]|\\.)'", "' '", line)
+    return line
+
+
+def code_part(line):
+    """The code before any // comment, with string contents blanked."""
+    s = strip_strings(line)
+    idx = s.find("//")
+    return s if idx < 0 else s[:idx]
+
+
+def iter_rust_files(root):
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if fn.endswith(".rs"):
+                yield os.path.join(dirpath, fn)
+
+
+def first_test_mod_line(lines):
+    """Line index (0-based) of the first `#[cfg(test)]` marker, or
+    len(lines). Everything at or after it is test code for R3/R4."""
+    for i, line in enumerate(lines):
+        if RE_CFG_TEST_MOD.search(line):
+            return i
+    return len(lines)
+
+
+def has_adjacent(lines, i, pattern, extra=None):
+    """True if `pattern` (or `extra`) matches on line i or above it.
+
+    The upward scan has a budget of ADJACENCY non-comment lines;
+    comment-only lines are free, so a long justifying comment block is
+    always searched in full no matter how many lines it spans."""
+    if pattern.search(lines[i]) or (extra is not None and extra.search(lines[i])):
+        return True
+    budget = ADJACENCY
+    j = i - 1
+    while j >= 0 and budget > 0:
+        if pattern.search(lines[j]):
+            return True
+        if extra is not None and extra.search(lines[j]):
+            return True
+        if not lines[j].strip().startswith("//"):
+            budget -= 1
+        j -= 1
+    return False
+
+
+def lint_file(path, violations):
+    rel = os.path.relpath(path, SRC).replace(os.sep, "/")
+    in_tests_dir = "rust/tests/" in path.replace(os.sep, "/") or "rust/benches/" in path.replace(
+        os.sep, "/"
+    )
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().split("\n")
+
+    test_start = 0 if in_tests_dir else first_test_mod_line(lines)
+
+    hot_depth = 0
+    hot_regions = 0
+
+    for i, raw in enumerate(lines):
+        lineno = i + 1
+        code = code_part(raw)
+        in_test = in_tests_dir or i >= test_start
+
+        # R5 region tracking (comments, so inspect the raw line).
+        if HOT_BEGIN in raw:
+            hot_depth += 1
+            hot_regions += 1
+            continue
+        if HOT_END in raw:
+            if hot_depth == 0:
+                violations.append(
+                    Violation("hot-loop-hygiene", path, lineno, "hot-loop-end without begin")
+                )
+            else:
+                hot_depth -= 1
+            continue
+        if hot_depth > 0:
+            for pat, name in HOT_BANNED:
+                if pat.search(code):
+                    violations.append(
+                        Violation(
+                            "hot-loop-hygiene",
+                            path,
+                            lineno,
+                            f"`{name}` inside a marked hot loop "
+                            "(timing/allocation belongs outside the kernel)",
+                        )
+                    )
+
+        # R1 + R2: unsafe surface (applies to test code too — unsafe in a
+        # test needs the same audit trail).
+        if RE_UNSAFE.search(code):
+            if not in_tests_dir and rel not in UNSAFE_ALLOWLIST:
+                violations.append(
+                    Violation(
+                        "unsafe-allowlist",
+                        path,
+                        lineno,
+                        f"`unsafe` outside the allow-listed module set ({rel}); "
+                        "extend UNSAFE_ALLOWLIST deliberately or move the code",
+                    )
+                )
+            if not has_adjacent(lines, i, RE_SAFETY, RE_SAFETY_DOC):
+                violations.append(
+                    Violation(
+                        "safety-comment",
+                        path,
+                        lineno,
+                        "`unsafe` without an adjacent `// SAFETY:` comment "
+                        f"(within {ADJACENCY} lines above)",
+                    )
+                )
+
+        if in_test:
+            continue
+
+        # R3: every Ordering::* use carries an `ordering:` protocol tag.
+        if RE_ORDERING.search(code):
+            # `use std::sync::atomic::Ordering` imports don't count; the
+            # regex above only matches qualified `Ordering::Variant` uses,
+            # so plain imports never get here.
+            if not has_adjacent(lines, i, RE_ORDER_TAG):
+                violations.append(
+                    Violation(
+                        "ordering-protocol",
+                        path,
+                        lineno,
+                        "`Ordering::*` without an `// ordering:` protocol comment "
+                        "(same line or above) naming what it synchronizes with",
+                    )
+                )
+
+        # R4: raw lock unwraps outside util.rs (which defines the
+        # helpers) are banned in non-test code.
+        if rel != "util.rs" and RE_RAW_LOCK.search(code):
+            violations.append(
+                Violation(
+                    "lock-unpoisoned",
+                    path,
+                    lineno,
+                    "raw `.lock()/.read()/.write().unwrap()`; use "
+                    "util::{lock,read,write}_unpoisoned so peer panics "
+                    "don't cascade into poisoned-lock panics",
+                )
+            )
+
+    if hot_depth != 0:
+        violations.append(
+            Violation("hot-loop-hygiene", path, len(lines), "unclosed hot-loop-begin region")
+        )
+    if rel in HOT_FILES and hot_regions == 0:
+        violations.append(
+            Violation(
+                "hot-loop-hygiene",
+                path,
+                1,
+                "kernel file has no `// lint: hot-loop-begin` region; "
+                "mark the innermost loop (see docs/CONCURRENCY.md)",
+            )
+        )
+
+
+def lint_tree(src=SRC):
+    violations = []
+    for path in iter_rust_files(src):
+        lint_file(path, violations)
+    return violations
+
+
+# --------------------------------------------------------------------------
+# Self-test: each rule class must fail on a seeded violation and pass on
+# the corrected form. Run in CI before linting the tree so a silently
+# broken linter can't green-light the tree.
+# --------------------------------------------------------------------------
+
+SELF_TEST_CASES = [
+    (
+        "unsafe-allowlist",
+        # Seeded: unsafe in a module not on the allowlist.
+        "disallowed.rs",
+        """
+pub fn f(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid.
+    unsafe { *p }
+}
+""",
+        None,  # no clean variant: the module itself is the violation
+    ),
+    (
+        "safety-comment",
+        "util.rs",
+        """
+pub fn f(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+""",
+        """
+pub fn f(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid for reads.
+    unsafe { *p }
+}
+""",
+    ),
+    (
+        "ordering-protocol",
+        "counters.rs",
+        """
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+""",
+        """
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn bump(c: &AtomicU64) {
+    // ordering: Relaxed — standalone statistic, no data published.
+    c.fetch_add(1, Ordering::Relaxed);
+}
+""",
+    ),
+    (
+        "lock-unpoisoned",
+        "locks.rs",
+        """
+use std::sync::Mutex;
+pub fn peek(m: &Mutex<u64>) -> u64 {
+    *m.lock().unwrap()
+}
+""",
+        """
+use std::sync::Mutex;
+use crate::util::lock_unpoisoned;
+pub fn peek(m: &Mutex<u64>) -> u64 {
+    *lock_unpoisoned(m)
+}
+""",
+    ),
+    (
+        "hot-loop-hygiene",
+        "dwt/kernels.rs",
+        """
+pub fn kernel(x: &mut [f64]) {
+    // lint: hot-loop-begin
+    for v in x.iter_mut() {
+        let t = std::time::Instant::now();
+        *v += t.elapsed().as_secs_f64();
+    }
+    // lint: hot-loop-end
+}
+""",
+        """
+pub fn kernel(x: &mut [f64]) {
+    // lint: hot-loop-begin
+    for v in x.iter_mut() {
+        *v += 1.0;
+    }
+    // lint: hot-loop-end
+}
+""",
+    ),
+]
+
+
+def self_test():
+    failures = []
+    for rule, relname, bad, good in SELF_TEST_CASES:
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, relname)
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w", encoding="utf-8") as f:
+                f.write(bad)
+            vs = []
+            # Lint relative to tmp as the source root so allowlist paths
+            # resolve the same way they do for the real tree.
+            global SRC
+            saved = SRC
+            SRC = tmp
+            try:
+                lint_file(path, vs)
+            finally:
+                SRC = saved
+            if not any(v.rule == rule for v in vs):
+                failures.append(f"seeded `{rule}` violation was NOT caught")
+            if good is not None:
+                with open(path, "w", encoding="utf-8") as f:
+                    f.write(good)
+                vs = []
+                SRC = tmp
+                try:
+                    lint_file(path, vs)
+                finally:
+                    SRC = saved
+                wrong = [v for v in vs if v.rule == rule]
+                if wrong:
+                    failures.append(
+                        f"clean `{rule}` variant still flagged: "
+                        + "; ".join(str(v) for v in wrong)
+                    )
+    if failures:
+        for f in failures:
+            print(f"SELF-TEST FAIL: {f}", file=sys.stderr)
+        return 1
+    print(f"self-test ok: {len(SELF_TEST_CASES)} rule classes fail on seeded violations")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--self-test", action="store_true", help="run the seeded-violation self-test")
+    ap.add_argument("--src", default=SRC, help="source root to lint (default rust/src)")
+    args = ap.parse_args()
+
+    if args.self_test:
+        sys.exit(self_test())
+
+    violations = lint_tree(args.src)
+    if violations:
+        for v in violations:
+            print(v, file=sys.stderr)
+        print(f"\n{len(violations)} invariant violation(s)", file=sys.stderr)
+        sys.exit(1)
+    print("lint_invariants: tree clean")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

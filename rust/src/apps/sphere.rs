@@ -39,6 +39,7 @@ fn sph_index(l: usize, m: i64) -> usize {
 }
 
 impl SphCoeffs {
+    /// Zero-filled spherical coefficients for bandwidth `b`.
     pub fn zeros(b: usize) -> Self {
         assert!(b >= 1);
         Self {
@@ -57,27 +58,32 @@ impl SphCoeffs {
         c
     }
 
+    /// Bandwidth B of this coefficient set.
     #[inline]
     pub fn bandwidth(&self) -> usize {
         self.b
     }
 
+    /// Coefficient `f_l^m`.
     #[inline]
     pub fn at(&self, l: usize, m: i64) -> Complex64 {
         debug_assert!(l < self.b && m.unsigned_abs() as usize <= l);
         self.data[sph_index(l, m)]
     }
 
+    /// Mutable coefficient `f_l^m`.
     #[inline]
     pub fn at_mut(&mut self, l: usize, m: i64) -> &mut Complex64 {
         debug_assert!(l < self.b && m.unsigned_abs() as usize <= l);
         &mut self.data[sph_index(l, m)]
     }
 
+    /// Flat coefficient storage.
     pub fn as_slice(&self) -> &[Complex64] {
         &self.data
     }
 
+    /// Largest elementwise absolute difference.
     pub fn max_abs_error(&self, other: &SphCoeffs) -> f64 {
         assert_eq!(self.b, other.b);
         self.data
@@ -130,10 +136,12 @@ impl SphCoeffs {
 #[derive(Debug, Clone)]
 pub struct SphGrid {
     b: usize,
+    /// Row-major samples, `2B × 2B`.
     pub data: Vec<Complex64>,
 }
 
 impl SphGrid {
+    /// Zero-filled sphere grid for bandwidth `b`.
     pub fn zeros(b: usize) -> Self {
         Self {
             b,
@@ -141,11 +149,13 @@ impl SphGrid {
         }
     }
 
+    /// Bandwidth B of this grid.
     #[inline]
     pub fn bandwidth(&self) -> usize {
         self.b
     }
 
+    /// Sample at colatitude index `j`, longitude index `k`.
     #[inline]
     pub fn at(&self, j: usize, k: usize) -> Complex64 {
         self.data[j * 2 * self.b + k]

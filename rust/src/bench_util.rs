@@ -13,18 +13,22 @@ use std::time::Instant;
 /// Summary statistics over timed samples (seconds).
 #[derive(Debug, Clone)]
 pub struct Samples {
+    /// Raw per-repetition wall times, in seconds.
     pub seconds: Vec<f64>,
 }
 
 impl Samples {
+    /// Fastest repetition.
     pub fn min(&self) -> f64 {
         self.seconds.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Arithmetic mean of the repetitions.
     pub fn mean(&self) -> f64 {
         self.seconds.iter().sum::<f64>() / self.seconds.len() as f64
     }
 
+    /// Sample standard deviation of the repetitions.
     pub fn std(&self) -> f64 {
         if self.seconds.len() < 2 {
             return 0.0;
@@ -39,6 +43,7 @@ impl Samples {
         var.sqrt()
     }
 
+    /// Median repetition time.
     pub fn median(&self) -> f64 {
         let mut v = self.seconds.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -93,6 +98,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Start a table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Self {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -100,11 +106,13 @@ impl Table {
         }
     }
 
+    /// Append one row; must have as many cells as there are headers.
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
     }
 
+    /// Render the table to stdout with aligned columns.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {

@@ -17,6 +17,7 @@ use crate::so3::sampling::GridAngles;
 use crate::transform::So3Plan;
 use crate::wisdom::{MachineFingerprint, PlanRigor, WisdomSource, WisdomStore};
 
+/// Top-level usage text for the `so3ft` binary.
 pub const HELP: &str = "\
 so3ft — parallel fast Fourier transforms on SO(3)
 
@@ -89,6 +90,7 @@ fn build_plan(inv: &Invocation) -> Result<So3Plan> {
     builder.build()
 }
 
+/// `info`: print the resolved configuration and plan summary.
 pub fn info(inv: &Invocation) -> Result<()> {
     let b = inv.run.bandwidth;
     let plan = TransformPlan::new(b, inv.run.exec.strategy);
@@ -149,6 +151,7 @@ pub fn info(inv: &Invocation) -> Result<()> {
     Ok(())
 }
 
+/// `roundtrip`: inverse-then-forward accuracy check.
 pub fn roundtrip(inv: &Invocation) -> Result<()> {
     let fft = build_plan(inv)?;
     let b = inv.run.bandwidth;
@@ -179,6 +182,7 @@ pub fn roundtrip(inv: &Invocation) -> Result<()> {
     Ok(())
 }
 
+/// `forward`: run and time one analysis (FSOFT) transform.
 pub fn forward(inv: &Invocation) -> Result<()> {
     let fft = build_plan(inv)?;
     let coeffs = So3Coeffs::random(inv.run.bandwidth, inv.run.seed);
@@ -197,6 +201,7 @@ pub fn forward(inv: &Invocation) -> Result<()> {
     Ok(())
 }
 
+/// `inverse`: run and time one synthesis (iFSOFT) transform.
 pub fn inverse(inv: &Invocation) -> Result<()> {
     let fft = build_plan(inv)?;
     let coeffs = So3Coeffs::random(inv.run.bandwidth, inv.run.seed);
@@ -208,6 +213,7 @@ pub fn inverse(inv: &Invocation) -> Result<()> {
     Ok(())
 }
 
+/// `match`: rotation-estimation demo via SO(3) correlation.
 pub fn match_demo(inv: &Invocation) -> Result<()> {
     let b = inv.run.bandwidth;
     let fft = build_plan(inv)?;
@@ -692,6 +698,7 @@ pub fn wisdom(inv: &Invocation) -> Result<()> {
     Ok(())
 }
 
+/// `simulate`: multicore scaling prediction (paper Figs. 4–7).
 pub fn simulate(inv: &Invocation) -> Result<()> {
     let b = inv.run.bandwidth;
     let kind = if inv.kind == "inv" {

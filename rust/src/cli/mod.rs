@@ -109,10 +109,15 @@ impl Default for ServeBenchOpts {
 /// Parsed invocation.
 #[derive(Debug, Clone)]
 pub struct Invocation {
+    /// Subcommand name.
     pub command: String,
+    /// Fully-resolved run configuration.
     pub run: RunConfig,
+    /// Core counts for `simulate` sweeps.
     pub cores: Vec<usize>,
+    /// Transform kind argument (`forward` | `inverse`).
     pub kind: String,
+    /// `serve-bench` options.
     pub serve: ServeBenchOpts,
     /// `wisdom` subcommand action (`train` | `show` | `clear`); empty
     /// for every other command.

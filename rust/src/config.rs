@@ -92,14 +92,17 @@ impl ParsedConfig {
         Ok(Self { sections })
     }
 
+    /// Parse a config file from disk.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         Self::parse(&std::fs::read_to_string(path)?)
     }
 
+    /// Raw string value for `key` in `[section]`, if present.
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
         self.sections.get(section)?.get(key).map(|s| s.as_str())
     }
 
+    /// Integer value for `key` in `[section]`; `Err` on a non-integer.
     pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
         match self.get(section, key) {
             None => Ok(None),
@@ -109,6 +112,7 @@ impl ParsedConfig {
         }
     }
 
+    /// Boolean value for `key` in `[section]`; `Err` unless `true`/`false`.
     pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
         match self.get(section, key) {
             None => Ok(None),
@@ -217,12 +221,19 @@ impl Default for WisdomSettings {
 /// Fully-resolved run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Transform bandwidth B.
     pub bandwidth: usize,
+    /// Executor knobs (threads, schedule, partition, DWT backend).
     pub exec: ExecutorConfig,
+    /// Serving-layer settings (queue bounds, batch window, deadlines).
     pub service: ServiceSettings,
+    /// Auto-tuning (wisdom) settings.
     pub wisdom: WisdomSettings,
+    /// Directory holding AOT-compiled XLA artifacts.
     pub artifacts_dir: String,
+    /// Route the DWT through the XLA runtime backend.
     pub use_xla: bool,
+    /// Seed for reproducible test payloads.
     pub seed: u64,
 }
 
@@ -454,6 +465,7 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// Load and resolve a run configuration from a config file.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         Self::from_parsed(&ParsedConfig::load(path)?)
     }

@@ -277,9 +277,13 @@ impl RegionProfiles {
 /// Wall-clock breakdown of one transform run.
 #[derive(Debug, Clone, Default)]
 pub struct TransformStats {
+    /// Time in the FFT stage.
     pub fft: Duration,
+    /// Time in the transpose stages.
     pub transpose: Duration,
+    /// Time in the DWT stage.
     pub dwt: Duration,
+    /// End-to-end wall time of the transform.
     pub total: Duration,
     /// Region stats of the DWT loop (imbalance diagnostics).
     pub dwt_region: Option<RegionStats>,
@@ -395,6 +399,7 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// Allocate every per-transform buffer for bandwidth `b`.
     pub fn new(b: usize) -> Result<Self> {
         if b == 0 {
             return Err(Error::InvalidBandwidth(b));
@@ -413,6 +418,7 @@ impl Workspace {
         })
     }
 
+    /// Bandwidth the workspace was sized for.
     #[inline]
     pub fn bandwidth(&self) -> usize {
         self.b
@@ -438,6 +444,7 @@ impl std::fmt::Debug for Executor {
 }
 
 impl Executor {
+    /// Build an executor for bandwidth `b` (plans, tables, pool).
     pub fn new(b: usize, config: ExecutorConfig) -> Result<Self> {
         if b == 0 {
             return Err(Error::InvalidBandwidth(b));
@@ -544,23 +551,28 @@ impl Executor {
         self
     }
 
+    /// Bandwidth this executor was built for.
     #[inline]
     pub fn bandwidth(&self) -> usize {
         self.b
     }
 
+    /// The configuration the executor was built with.
     pub fn config(&self) -> &ExecutorConfig {
         &self.config
     }
 
+    /// The cluster partition plan in use.
     pub fn plan(&self) -> &TransformPlan {
         &self.plan
     }
 
+    /// Quadrature weights for the β grid.
     pub fn weights(&self) -> &[f64] {
         &self.weights
     }
 
+    /// The sampling grid angles.
     pub fn angles(&self) -> &GridAngles {
         &self.angles
     }

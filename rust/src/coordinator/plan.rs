@@ -19,6 +19,7 @@ pub enum PartitionStrategy {
 }
 
 impl PartitionStrategy {
+    /// Parse from a CLI/config string (`rect` | `triangle`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "geometric" => Some(Self::GeometricClustered),
@@ -28,6 +29,7 @@ impl PartitionStrategy {
         }
     }
 
+    /// Canonical name (round-trips through [`Self::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             Self::GeometricClustered => "geometric",
@@ -40,12 +42,16 @@ impl PartitionStrategy {
 /// The ordered package list for one transform.
 #[derive(Debug, Clone)]
 pub struct TransformPlan {
+    /// Transform bandwidth B.
     pub b: usize,
+    /// Partition strategy the clusters were built with.
     pub strategy: PartitionStrategy,
+    /// The symmetry clusters, in execution order.
     pub clusters: Vec<Cluster>,
 }
 
 impl TransformPlan {
+    /// Build the cluster partition for bandwidth `b`.
     pub fn new(b: usize, strategy: PartitionStrategy) -> Self {
         assert!(b >= 1);
         let clusters = match strategy {

@@ -34,6 +34,7 @@ use crate::util::parity_sign;
 pub struct Member {
     /// The order pair (μ, μ') this member computes.
     pub m: i64,
+    /// See [`Self::m`].
     pub mp: i64,
     /// Read the base row reversed in j (the π−β reflection)?
     pub reflected: bool,
@@ -61,7 +62,9 @@ impl Member {
 pub struct Cluster {
     /// Base orders, m ≥ m' ≥ 0.
     pub m: i64,
+    /// See [`Self::m`].
     pub mp: i64,
+    /// The (μ, μ') pairs computed from this base pair's tables.
     pub members: Vec<Member>,
 }
 

@@ -181,6 +181,7 @@ pub fn forward_cluster_folded_tables(
         scratch.oblock.resize(DEG_BLOCK * b, 0.0);
     }
     let mut l = l0;
+    // lint: hot-loop-begin
     while l < b {
         let nb = DEG_BLOCK.min(b - l);
         for k in 0..nb {
@@ -244,6 +245,7 @@ pub fn forward_cluster_folded_tables(
         }
         l += nb;
     }
+    // lint: hot-loop-end
 }
 
 /// Extended-precision folded forward (double-double accumulation over
@@ -423,6 +425,7 @@ pub fn inverse_cluster_folded_tables(
         scratch.oblock.resize(DEG_BLOCK * b, 0.0);
     }
     let mut l = l0;
+    // lint: hot-loop-begin
     while l < b {
         let nb = DEG_BLOCK.min(b - l);
         for k in 0..nb {
@@ -461,6 +464,7 @@ pub fn inverse_cluster_folded_tables(
         }
         l += nb;
     }
+    // lint: hot-loop-end
     for (mi, member) in cluster.members.iter().enumerate() {
         let t = &scratch.t[mi * n..(mi + 1) * n];
         let base = smat_layout.vec_index(member.m, member.mp);

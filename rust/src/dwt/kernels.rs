@@ -49,6 +49,7 @@ pub struct DwtScratch {
 }
 
 impl DwtScratch {
+    /// Allocate scratch for bandwidth `b`.
     pub fn new(b: usize) -> Self {
         let mut s = Self::default();
         s.ensure(b);
@@ -118,6 +119,7 @@ pub fn forward_cluster(
     }
     // Contract row-by-row.
     source.reset(cluster.m, cluster.mp);
+    // lint: hot-loop-begin
     for l in l0..b {
         let row = source.row(l, &mut scratch.row);
         let vs = v_scale(l, b);
@@ -133,6 +135,7 @@ pub fn forward_cluster(
             unsafe { out.write(idx, value) };
         }
     }
+    // lint: hot-loop-end
 }
 
 /// Extended-precision forward DWT (double-double accumulation), used for
@@ -209,9 +212,11 @@ pub fn inverse_cluster(
                 .scale(member.sign(l));
             let t = &mut scratch.t[mi * n..(mi + 1) * n];
             // axpy: t[j] += c · row[j] — reflection applied at scatter.
+            // lint: hot-loop-begin
             for j in 0..n {
                 t[j] += c.scale(row[j]);
             }
+            // lint: hot-loop-end
         }
     }
     for (mi, member) in cluster.members.iter().enumerate() {

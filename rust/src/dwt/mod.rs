@@ -65,7 +65,9 @@ pub enum DwtAlgorithm {
 /// extended precision; we use double-double, see [`crate::xprec`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
+    /// IEEE double accumulation.
     Double,
+    /// Double-double (~31 significant digits) accumulation.
     Extended,
 }
 
@@ -87,6 +89,7 @@ impl SMatrix {
         2 * b - 1
     }
 
+    /// Zero-filled coefficient storage for bandwidth `b`.
     pub fn zeros(b: usize) -> Result<Self> {
         if b == 0 {
             return Err(Error::InvalidBandwidth(b));
@@ -110,6 +113,7 @@ impl SMatrix {
         Ok(Self { b, data: Vec::new() })
     }
 
+    /// Bandwidth B of this coefficient set.
     #[inline]
     pub fn bandwidth(&self) -> usize {
         self.b
@@ -133,24 +137,29 @@ impl SMatrix {
         &self.data[i..i + 2 * self.b]
     }
 
+    /// Mutable j-vector for the order pair `(m, mp)`.
     #[inline]
     pub fn vec_mut(&mut self, m: i64, mp: i64) -> &mut [Complex64] {
         let i = self.vec_index(m, mp);
         &mut self.data[i..i + 2 * self.b]
     }
 
+    /// Flat coefficient storage.
     pub fn as_slice(&self) -> &[Complex64] {
         &self.data
     }
 
+    /// Flat mutable coefficient storage.
     pub fn as_mut_slice(&mut self) -> &mut [Complex64] {
         &mut self.data
     }
 
+    /// Total number of stored coefficients.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the storage is empty.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

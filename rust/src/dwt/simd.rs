@@ -31,9 +31,13 @@ use crate::simd::SimdIsa;
 /// the (E, O) half-contraction sums, real and imaginary parts, for
 /// [`DEG_BLOCK`] consecutive degrees.
 pub struct BlockAcc {
+    /// Even-row real dot products, one per degree.
     pub er: [f64; DEG_BLOCK],
+    /// Even-row imaginary dot products, one per degree.
     pub ei: [f64; DEG_BLOCK],
+    /// Odd-row real dot products, one per degree.
     pub or: [f64; DEG_BLOCK],
+    /// Odd-row imaginary dot products, one per degree.
     pub oi: [f64; DEG_BLOCK],
 }
 
@@ -167,10 +171,12 @@ pub fn axpy_pair_rows(
 fn dot_half_scalar(t: &[Complex64], r: &[f64]) -> Complex64 {
     let mut re = 0.0f64;
     let mut im = 0.0f64;
+    // lint: hot-loop-begin
     for (v, &x) in t.iter().zip(r.iter()) {
         re = v.re.mul_add(x, re);
         im = v.im.mul_add(x, im);
     }
+    // lint: hot-loop-end
     Complex64::new(re, im)
 }
 
@@ -226,7 +232,14 @@ fn inverse_block_scalar(
     }
 }
 
+// `unsafe_op_in_unsafe_fn` straddle: on the 1.75 MSRV every intrinsic
+// call is an unsafe op, so the bodies below carry explicit `unsafe {}`
+// blocks; on newer toolchains (target_feature 1.1) intrinsic calls
+// inside a matching `#[target_feature]` fn are safe and those same
+// blocks would trip `unused_unsafe` under `-D warnings`. Allow the
+// lint so both toolchains stay warning-clean.
 #[cfg(target_arch = "x86_64")]
+#[allow(unused_unsafe)]
 mod avx2 {
     //! AVX2+FMA kernels: 4-wide f64 = two interleaved complexes per
     //! register. Callers guarantee AVX2+FMA support (dispatch only
@@ -242,8 +255,13 @@ mod avx2 {
     /// Requires AVX2; `p` must be readable for two f64.
     #[inline(always)]
     unsafe fn dup2(p: *const f64) -> __m256d {
-        let lo = _mm256_castpd128_pd256(_mm_loadu_pd(p));
-        _mm256_permute4x64_pd(lo, 0x50)
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let lo = _mm256_castpd128_pd256(_mm_loadu_pd(p));
+            _mm256_permute4x64_pd(lo, 0x50)
+        }
     }
 
     /// Horizontal reduce of an interleaved accumulator to one complex.
@@ -252,39 +270,49 @@ mod avx2 {
     /// Requires AVX2.
     #[inline(always)]
     unsafe fn reduce(acc: __m256d) -> Complex64 {
-        let mut lanes = [0.0f64; 4];
-        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
-        Complex64::new(lanes[0] + lanes[2], lanes[1] + lanes[3])
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let mut lanes = [0.0f64; 4];
+            _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+            Complex64::new(lanes[0] + lanes[2], lanes[1] + lanes[3])
+        }
     }
 
     /// # Safety
     /// Requires AVX2+FMA and `t.len() == r.len()`.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub(super) unsafe fn dot_half(t: &[Complex64], r: &[f64]) -> Complex64 {
-        let n = t.len();
-        let tp = t.as_ptr() as *const f64;
-        let rp = r.as_ptr();
-        let mut acc0 = _mm256_setzero_pd();
-        let mut acc1 = _mm256_setzero_pd();
-        let mut j = 0usize;
-        while j + 4 <= n {
-            let t0 = _mm256_loadu_pd(tp.add(2 * j));
-            let t1 = _mm256_loadu_pd(tp.add(2 * j + 4));
-            acc0 = _mm256_fmadd_pd(t0, dup2(rp.add(j)), acc0);
-            acc1 = _mm256_fmadd_pd(t1, dup2(rp.add(j + 2)), acc1);
-            j += 4;
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let n = t.len();
+            let tp = t.as_ptr() as *const f64;
+            let rp = r.as_ptr();
+            let mut acc0 = _mm256_setzero_pd();
+            let mut acc1 = _mm256_setzero_pd();
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let t0 = _mm256_loadu_pd(tp.add(2 * j));
+                let t1 = _mm256_loadu_pd(tp.add(2 * j + 4));
+                acc0 = _mm256_fmadd_pd(t0, dup2(rp.add(j)), acc0);
+                acc1 = _mm256_fmadd_pd(t1, dup2(rp.add(j + 2)), acc1);
+                j += 4;
+            }
+            if j + 2 <= n {
+                let t0 = _mm256_loadu_pd(tp.add(2 * j));
+                acc0 = _mm256_fmadd_pd(t0, dup2(rp.add(j)), acc0);
+                j += 2;
+            }
+            let mut acc = reduce(_mm256_add_pd(acc0, acc1));
+            if j < n {
+                acc.re = t[j].re.mul_add(r[j], acc.re);
+                acc.im = t[j].im.mul_add(r[j], acc.im);
+            }
+            acc
         }
-        if j + 2 <= n {
-            let t0 = _mm256_loadu_pd(tp.add(2 * j));
-            acc0 = _mm256_fmadd_pd(t0, dup2(rp.add(j)), acc0);
-            j += 2;
-        }
-        let mut acc = reduce(_mm256_add_pd(acc0, acc1));
-        if j < n {
-            acc.re = t[j].re.mul_add(r[j], acc.re);
-            acc.im = t[j].im.mul_add(r[j], acc.im);
-        }
-        acc
     }
 
     /// # Safety
@@ -297,49 +325,54 @@ mod avx2 {
         e: &[&[f64]; DEG_BLOCK],
         o: &[f64],
     ) -> BlockAcc {
-        let b = tp.len();
-        let tpp = tp.as_ptr() as *const f64;
-        let tmp = tm.as_ptr() as *const f64;
-        let op = o.as_ptr();
-        let mut acc_e = [_mm256_setzero_pd(); DEG_BLOCK];
-        let mut acc_o = [_mm256_setzero_pd(); DEG_BLOCK];
-        let mut j = 0usize;
-        while j + 2 <= b {
-            let tpv = _mm256_loadu_pd(tpp.add(2 * j));
-            let tmv = _mm256_loadu_pd(tmp.add(2 * j));
-            for k in 0..DEG_BLOCK {
-                acc_e[k] = _mm256_fmadd_pd(tpv, dup2(e[k].as_ptr().add(j)), acc_e[k]);
-                acc_o[k] = _mm256_fmadd_pd(tmv, dup2(op.add(k * b + j)), acc_o[k]);
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let b = tp.len();
+            let tpp = tp.as_ptr() as *const f64;
+            let tmp = tm.as_ptr() as *const f64;
+            let op = o.as_ptr();
+            let mut acc_e = [_mm256_setzero_pd(); DEG_BLOCK];
+            let mut acc_o = [_mm256_setzero_pd(); DEG_BLOCK];
+            let mut j = 0usize;
+            while j + 2 <= b {
+                let tpv = _mm256_loadu_pd(tpp.add(2 * j));
+                let tmv = _mm256_loadu_pd(tmp.add(2 * j));
+                for k in 0..DEG_BLOCK {
+                    acc_e[k] = _mm256_fmadd_pd(tpv, dup2(e[k].as_ptr().add(j)), acc_e[k]);
+                    acc_o[k] = _mm256_fmadd_pd(tmv, dup2(op.add(k * b + j)), acc_o[k]);
+                }
+                j += 2;
             }
-            j += 2;
-        }
-        let mut out = BlockAcc {
-            er: [0.0; DEG_BLOCK],
-            ei: [0.0; DEG_BLOCK],
-            or: [0.0; DEG_BLOCK],
-            oi: [0.0; DEG_BLOCK],
-        };
-        for k in 0..DEG_BLOCK {
-            let ce = reduce(acc_e[k]);
-            out.er[k] = ce.re;
-            out.ei[k] = ce.im;
-            let co = reduce(acc_o[k]);
-            out.or[k] = co.re;
-            out.oi[k] = co.im;
-        }
-        if j < b {
-            let pr = tp[j].re;
-            let pi = tp[j].im;
-            let qr = tm[j].re;
-            let qi = tm[j].im;
+            let mut out = BlockAcc {
+                er: [0.0; DEG_BLOCK],
+                ei: [0.0; DEG_BLOCK],
+                or: [0.0; DEG_BLOCK],
+                oi: [0.0; DEG_BLOCK],
+            };
             for k in 0..DEG_BLOCK {
-                out.er[k] = pr.mul_add(e[k][j], out.er[k]);
-                out.ei[k] = pi.mul_add(e[k][j], out.ei[k]);
-                out.or[k] = qr.mul_add(o[k * b + j], out.or[k]);
-                out.oi[k] = qi.mul_add(o[k * b + j], out.oi[k]);
+                let ce = reduce(acc_e[k]);
+                out.er[k] = ce.re;
+                out.ei[k] = ce.im;
+                let co = reduce(acc_o[k]);
+                out.or[k] = co.re;
+                out.oi[k] = co.im;
             }
+            if j < b {
+                let pr = tp[j].re;
+                let pi = tp[j].im;
+                let qr = tm[j].re;
+                let qi = tm[j].im;
+                for k in 0..DEG_BLOCK {
+                    out.er[k] = pr.mul_add(e[k][j], out.er[k]);
+                    out.ei[k] = pi.mul_add(e[k][j], out.ei[k]);
+                    out.or[k] = qr.mul_add(o[k * b + j], out.or[k]);
+                    out.oi[k] = qi.mul_add(o[k * b + j], out.oi[k]);
+                }
+            }
+            out
         }
-        out
     }
 
     /// # Safety
@@ -353,39 +386,44 @@ mod avx2 {
         e: &[&[f64]; DEG_BLOCK],
         o: &[f64],
     ) {
-        let b = u.len();
-        let up = u.as_mut_ptr() as *mut f64;
-        let vp = v.as_mut_ptr() as *mut f64;
-        let op = o.as_ptr();
-        let mut cv = [_mm256_setzero_pd(); DEG_BLOCK];
-        for k in 0..DEG_BLOCK {
-            cv[k] = _mm256_setr_pd(c[k].re, c[k].im, c[k].re, c[k].im);
-        }
-        let mut j = 0usize;
-        while j + 2 <= b {
-            let mut uv = _mm256_loadu_pd(up.add(2 * j));
-            let mut vv = _mm256_loadu_pd(vp.add(2 * j));
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let b = u.len();
+            let up = u.as_mut_ptr() as *mut f64;
+            let vp = v.as_mut_ptr() as *mut f64;
+            let op = o.as_ptr();
+            let mut cv = [_mm256_setzero_pd(); DEG_BLOCK];
             for k in 0..DEG_BLOCK {
-                uv = _mm256_fmadd_pd(cv[k], dup2(e[k].as_ptr().add(j)), uv);
-                vv = _mm256_fmadd_pd(cv[k], dup2(op.add(k * b + j)), vv);
+                cv[k] = _mm256_setr_pd(c[k].re, c[k].im, c[k].re, c[k].im);
             }
-            _mm256_storeu_pd(up.add(2 * j), uv);
-            _mm256_storeu_pd(vp.add(2 * j), vv);
-            j += 2;
-        }
-        if j < b {
-            let mut ur = u[j].re;
-            let mut ui = u[j].im;
-            let mut vr = v[j].re;
-            let mut vi = v[j].im;
-            for k in 0..DEG_BLOCK {
-                ur = c[k].re.mul_add(e[k][j], ur);
-                ui = c[k].im.mul_add(e[k][j], ui);
-                vr = c[k].re.mul_add(o[k * b + j], vr);
-                vi = c[k].im.mul_add(o[k * b + j], vi);
+            let mut j = 0usize;
+            while j + 2 <= b {
+                let mut uv = _mm256_loadu_pd(up.add(2 * j));
+                let mut vv = _mm256_loadu_pd(vp.add(2 * j));
+                for k in 0..DEG_BLOCK {
+                    uv = _mm256_fmadd_pd(cv[k], dup2(e[k].as_ptr().add(j)), uv);
+                    vv = _mm256_fmadd_pd(cv[k], dup2(op.add(k * b + j)), vv);
+                }
+                _mm256_storeu_pd(up.add(2 * j), uv);
+                _mm256_storeu_pd(vp.add(2 * j), vv);
+                j += 2;
             }
-            u[j] = Complex64::new(ur, ui);
-            v[j] = Complex64::new(vr, vi);
+            if j < b {
+                let mut ur = u[j].re;
+                let mut ui = u[j].im;
+                let mut vr = v[j].re;
+                let mut vi = v[j].im;
+                for k in 0..DEG_BLOCK {
+                    ur = c[k].re.mul_add(e[k][j], ur);
+                    ui = c[k].im.mul_add(e[k][j], ui);
+                    vr = c[k].re.mul_add(o[k * b + j], vr);
+                    vi = c[k].im.mul_add(o[k * b + j], vi);
+                }
+                u[j] = Complex64::new(ur, ui);
+                v[j] = Complex64::new(vr, vi);
+            }
         }
     }
 
@@ -399,23 +437,28 @@ mod avx2 {
         cs: Complex64,
         h: &[f64],
     ) {
-        let b = h.len();
-        let up = u.as_mut_ptr() as *mut f64;
-        let vp = v.as_mut_ptr() as *mut f64;
-        let cv = _mm256_setr_pd(c.re, c.im, c.re, c.im);
-        let csv = _mm256_setr_pd(cs.re, cs.im, cs.re, cs.im);
-        let mut j = 0usize;
-        while j + 2 <= b {
-            let hd = dup2(h.as_ptr().add(j));
-            let uv = _mm256_fmadd_pd(cv, hd, _mm256_loadu_pd(up.add(2 * j)));
-            _mm256_storeu_pd(up.add(2 * j), uv);
-            let vv = _mm256_fmadd_pd(csv, hd, _mm256_loadu_pd(vp.add(2 * j)));
-            _mm256_storeu_pd(vp.add(2 * j), vv);
-            j += 2;
-        }
-        if j < b {
-            u[j] += c.scale(h[j]);
-            v[j] += cs.scale(h[j]);
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let b = h.len();
+            let up = u.as_mut_ptr() as *mut f64;
+            let vp = v.as_mut_ptr() as *mut f64;
+            let cv = _mm256_setr_pd(c.re, c.im, c.re, c.im);
+            let csv = _mm256_setr_pd(cs.re, cs.im, cs.re, cs.im);
+            let mut j = 0usize;
+            while j + 2 <= b {
+                let hd = dup2(h.as_ptr().add(j));
+                let uv = _mm256_fmadd_pd(cv, hd, _mm256_loadu_pd(up.add(2 * j)));
+                _mm256_storeu_pd(up.add(2 * j), uv);
+                let vv = _mm256_fmadd_pd(csv, hd, _mm256_loadu_pd(vp.add(2 * j)));
+                _mm256_storeu_pd(vp.add(2 * j), vv);
+                j += 2;
+            }
+            if j < b {
+                u[j] += c.scale(h[j]);
+                v[j] += cs.scale(h[j]);
+            }
         }
     }
 
@@ -430,26 +473,40 @@ mod avx2 {
         e: &[f64],
         o: &[f64],
     ) {
-        let b = e.len();
-        let up = u.as_mut_ptr() as *mut f64;
-        let vp = v.as_mut_ptr() as *mut f64;
-        let cv = _mm256_setr_pd(c.re, c.im, c.re, c.im);
-        let mut j = 0usize;
-        while j + 2 <= b {
-            let uv = _mm256_fmadd_pd(cv, dup2(e.as_ptr().add(j)), _mm256_loadu_pd(up.add(2 * j)));
-            _mm256_storeu_pd(up.add(2 * j), uv);
-            let vv = _mm256_fmadd_pd(cv, dup2(o.as_ptr().add(j)), _mm256_loadu_pd(vp.add(2 * j)));
-            _mm256_storeu_pd(vp.add(2 * j), vv);
-            j += 2;
-        }
-        if j < b {
-            u[j] += c.scale(e[j]);
-            v[j] += c.scale(o[j]);
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let b = e.len();
+            let up = u.as_mut_ptr() as *mut f64;
+            let vp = v.as_mut_ptr() as *mut f64;
+            let cv = _mm256_setr_pd(c.re, c.im, c.re, c.im);
+            let mut j = 0usize;
+            while j + 2 <= b {
+                let uv =
+                    _mm256_fmadd_pd(cv, dup2(e.as_ptr().add(j)), _mm256_loadu_pd(up.add(2 * j)));
+                _mm256_storeu_pd(up.add(2 * j), uv);
+                let vv =
+                    _mm256_fmadd_pd(cv, dup2(o.as_ptr().add(j)), _mm256_loadu_pd(vp.add(2 * j)));
+                _mm256_storeu_pd(vp.add(2 * j), vv);
+                j += 2;
+            }
+            if j < b {
+                u[j] += c.scale(e[j]);
+                v[j] += c.scale(o[j]);
+            }
         }
     }
 }
 
+// `unsafe_op_in_unsafe_fn` straddle: on the 1.75 MSRV every intrinsic
+// call is an unsafe op, so the bodies below carry explicit `unsafe {}`
+// blocks; on newer toolchains (target_feature 1.1) intrinsic calls
+// inside a matching `#[target_feature]` fn are safe and those same
+// blocks would trip `unused_unsafe` under `-D warnings`. Allow the
+// lint so both toolchains stay warning-clean.
 #[cfg(target_arch = "aarch64")]
+#[allow(unused_unsafe)]
 mod neon {
     //! NEON kernels: 2-wide f64 = one interleaved complex per register.
     //! NEON is baseline on aarch64, so these are unconditionally sound
@@ -462,24 +519,29 @@ mod neon {
     /// Requires `t.len() == r.len()` (NEON is baseline on aarch64).
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn dot_half(t: &[Complex64], r: &[f64]) -> Complex64 {
-        let n = t.len();
-        let tp = t.as_ptr() as *const f64;
-        let mut acc0 = vdupq_n_f64(0.0);
-        let mut acc1 = vdupq_n_f64(0.0);
-        let mut j = 0usize;
-        while j + 2 <= n {
-            acc0 = vfmaq_n_f64(acc0, vld1q_f64(tp.add(2 * j)), r[j]);
-            acc1 = vfmaq_n_f64(acc1, vld1q_f64(tp.add(2 * j + 2)), r[j + 1]);
-            j += 2;
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let n = t.len();
+            let tp = t.as_ptr() as *const f64;
+            let mut acc0 = vdupq_n_f64(0.0);
+            let mut acc1 = vdupq_n_f64(0.0);
+            let mut j = 0usize;
+            while j + 2 <= n {
+                acc0 = vfmaq_n_f64(acc0, vld1q_f64(tp.add(2 * j)), r[j]);
+                acc1 = vfmaq_n_f64(acc1, vld1q_f64(tp.add(2 * j + 2)), r[j + 1]);
+                j += 2;
+            }
+            let acc = vaddq_f64(acc0, acc1);
+            let mut re = vgetq_lane_f64::<0>(acc);
+            let mut im = vgetq_lane_f64::<1>(acc);
+            if j < n {
+                re = t[j].re.mul_add(r[j], re);
+                im = t[j].im.mul_add(r[j], im);
+            }
+            Complex64::new(re, im)
         }
-        let acc = vaddq_f64(acc0, acc1);
-        let mut re = vgetq_lane_f64::<0>(acc);
-        let mut im = vgetq_lane_f64::<1>(acc);
-        if j < n {
-            re = t[j].re.mul_add(r[j], re);
-            im = t[j].im.mul_add(r[j], im);
-        }
-        Complex64::new(re, im)
     }
 
     /// # Safety
@@ -491,32 +553,37 @@ mod neon {
         e: &[&[f64]; DEG_BLOCK],
         o: &[f64],
     ) -> BlockAcc {
-        let b = tp.len();
-        let tpp = tp.as_ptr() as *const f64;
-        let tmp = tm.as_ptr() as *const f64;
-        let mut acc_e = [vdupq_n_f64(0.0); DEG_BLOCK];
-        let mut acc_o = [vdupq_n_f64(0.0); DEG_BLOCK];
-        for j in 0..b {
-            let tpv = vld1q_f64(tpp.add(2 * j));
-            let tmv = vld1q_f64(tmp.add(2 * j));
-            for k in 0..DEG_BLOCK {
-                acc_e[k] = vfmaq_n_f64(acc_e[k], tpv, e[k][j]);
-                acc_o[k] = vfmaq_n_f64(acc_o[k], tmv, o[k * b + j]);
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let b = tp.len();
+            let tpp = tp.as_ptr() as *const f64;
+            let tmp = tm.as_ptr() as *const f64;
+            let mut acc_e = [vdupq_n_f64(0.0); DEG_BLOCK];
+            let mut acc_o = [vdupq_n_f64(0.0); DEG_BLOCK];
+            for j in 0..b {
+                let tpv = vld1q_f64(tpp.add(2 * j));
+                let tmv = vld1q_f64(tmp.add(2 * j));
+                for k in 0..DEG_BLOCK {
+                    acc_e[k] = vfmaq_n_f64(acc_e[k], tpv, e[k][j]);
+                    acc_o[k] = vfmaq_n_f64(acc_o[k], tmv, o[k * b + j]);
+                }
             }
+            let mut out = BlockAcc {
+                er: [0.0; DEG_BLOCK],
+                ei: [0.0; DEG_BLOCK],
+                or: [0.0; DEG_BLOCK],
+                oi: [0.0; DEG_BLOCK],
+            };
+            for k in 0..DEG_BLOCK {
+                out.er[k] = vgetq_lane_f64::<0>(acc_e[k]);
+                out.ei[k] = vgetq_lane_f64::<1>(acc_e[k]);
+                out.or[k] = vgetq_lane_f64::<0>(acc_o[k]);
+                out.oi[k] = vgetq_lane_f64::<1>(acc_o[k]);
+            }
+            out
         }
-        let mut out = BlockAcc {
-            er: [0.0; DEG_BLOCK],
-            ei: [0.0; DEG_BLOCK],
-            or: [0.0; DEG_BLOCK],
-            oi: [0.0; DEG_BLOCK],
-        };
-        for k in 0..DEG_BLOCK {
-            out.er[k] = vgetq_lane_f64::<0>(acc_e[k]);
-            out.ei[k] = vgetq_lane_f64::<1>(acc_e[k]);
-            out.or[k] = vgetq_lane_f64::<0>(acc_o[k]);
-            out.oi[k] = vgetq_lane_f64::<1>(acc_o[k]);
-        }
-        out
     }
 
     /// # Safety
@@ -529,22 +596,27 @@ mod neon {
         e: &[&[f64]; DEG_BLOCK],
         o: &[f64],
     ) {
-        let b = u.len();
-        let up = u.as_mut_ptr() as *mut f64;
-        let vp = v.as_mut_ptr() as *mut f64;
-        let mut cv = [vdupq_n_f64(0.0); DEG_BLOCK];
-        for k in 0..DEG_BLOCK {
-            cv[k] = vld1q_f64(&c[k] as *const Complex64 as *const f64);
-        }
-        for j in 0..b {
-            let mut uv = vld1q_f64(up.add(2 * j));
-            let mut vv = vld1q_f64(vp.add(2 * j));
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let b = u.len();
+            let up = u.as_mut_ptr() as *mut f64;
+            let vp = v.as_mut_ptr() as *mut f64;
+            let mut cv = [vdupq_n_f64(0.0); DEG_BLOCK];
             for k in 0..DEG_BLOCK {
-                uv = vfmaq_n_f64(uv, cv[k], e[k][j]);
-                vv = vfmaq_n_f64(vv, cv[k], o[k * b + j]);
+                cv[k] = vld1q_f64(&c[k] as *const Complex64 as *const f64);
             }
-            vst1q_f64(up.add(2 * j), uv);
-            vst1q_f64(vp.add(2 * j), vv);
+            for j in 0..b {
+                let mut uv = vld1q_f64(up.add(2 * j));
+                let mut vv = vld1q_f64(vp.add(2 * j));
+                for k in 0..DEG_BLOCK {
+                    uv = vfmaq_n_f64(uv, cv[k], e[k][j]);
+                    vv = vfmaq_n_f64(vv, cv[k], o[k * b + j]);
+                }
+                vst1q_f64(up.add(2 * j), uv);
+                vst1q_f64(vp.add(2 * j), vv);
+            }
         }
     }
 
@@ -558,14 +630,19 @@ mod neon {
         cs: Complex64,
         h: &[f64],
     ) {
-        let b = h.len();
-        let up = u.as_mut_ptr() as *mut f64;
-        let vp = v.as_mut_ptr() as *mut f64;
-        let cv = vld1q_f64(&c as *const Complex64 as *const f64);
-        let csv = vld1q_f64(&cs as *const Complex64 as *const f64);
-        for j in 0..b {
-            vst1q_f64(up.add(2 * j), vfmaq_n_f64(vld1q_f64(up.add(2 * j)), cv, h[j]));
-            vst1q_f64(vp.add(2 * j), vfmaq_n_f64(vld1q_f64(vp.add(2 * j)), csv, h[j]));
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let b = h.len();
+            let up = u.as_mut_ptr() as *mut f64;
+            let vp = v.as_mut_ptr() as *mut f64;
+            let cv = vld1q_f64(&c as *const Complex64 as *const f64);
+            let csv = vld1q_f64(&cs as *const Complex64 as *const f64);
+            for j in 0..b {
+                vst1q_f64(up.add(2 * j), vfmaq_n_f64(vld1q_f64(up.add(2 * j)), cv, h[j]));
+                vst1q_f64(vp.add(2 * j), vfmaq_n_f64(vld1q_f64(vp.add(2 * j)), csv, h[j]));
+            }
         }
     }
 
@@ -579,13 +656,18 @@ mod neon {
         e: &[f64],
         o: &[f64],
     ) {
-        let b = e.len();
-        let up = u.as_mut_ptr() as *mut f64;
-        let vp = v.as_mut_ptr() as *mut f64;
-        let cv = vld1q_f64(&c as *const Complex64 as *const f64);
-        for j in 0..b {
-            vst1q_f64(up.add(2 * j), vfmaq_n_f64(vld1q_f64(up.add(2 * j)), cv, e[j]));
-            vst1q_f64(vp.add(2 * j), vfmaq_n_f64(vld1q_f64(vp.add(2 * j)), cv, o[j]));
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let b = e.len();
+            let up = u.as_mut_ptr() as *mut f64;
+            let vp = v.as_mut_ptr() as *mut f64;
+            let cv = vld1q_f64(&c as *const Complex64 as *const f64);
+            for j in 0..b {
+                vst1q_f64(up.add(2 * j), vfmaq_n_f64(vld1q_f64(up.add(2 * j)), cv, e[j]));
+                vst1q_f64(vp.add(2 * j), vfmaq_n_f64(vld1q_f64(vp.add(2 * j)), cv, o[j]));
+            }
         }
     }
 }

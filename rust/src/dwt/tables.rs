@@ -40,6 +40,7 @@ use crate::so3::wigner::{step_coeffs, WignerRowStepper};
 /// base pair, consumed degree-by-degree (l ascending from the cluster's
 /// l₀). `reset` rebinds the source to a new base pair.
 pub trait WignerSource {
+    /// Re-seed the source for the order pair `(m, mp)`.
     fn reset(&mut self, m: i64, mp: i64);
     /// The row at degree `l`; rows must be requested with l strictly
     /// increasing between resets. `buf` (len ≥ 2B) may be used as backing
@@ -58,6 +59,7 @@ pub struct OnTheFlySource<'b> {
 }
 
 impl<'b> OnTheFlySource<'b> {
+    /// Source recurring over the given β angles.
     pub fn new(betas: &'b [f64]) -> Self {
         Self {
             betas,
@@ -240,6 +242,7 @@ impl WignerTables {
         }
     }
 
+    /// Bandwidth the tables were built for.
     #[inline]
     pub fn bandwidth(&self) -> usize {
         self.b

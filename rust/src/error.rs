@@ -40,8 +40,11 @@ pub enum Error {
 
     /// A buffer had the wrong length for the requested bandwidth.
     ShapeMismatch {
+        /// Element count the operation required.
         expected: usize,
+        /// Element count actually supplied.
         got: usize,
+        /// Which buffer or call site failed the check.
         context: &'static str,
     },
 
@@ -49,18 +52,33 @@ pub enum Error {
     /// than the plan executing it (the values are bandwidths, not element
     /// counts).
     BandwidthMismatch {
+        /// Bandwidth the plan was built for.
         expected: usize,
+        /// Bandwidth of the offending buffer.
         got: usize,
+        /// Which buffer or call site failed the check.
         context: &'static str,
     },
 
     /// An (l, m, m') index outside the coefficient domain.
-    IndexOutOfRange { l: i64, m: i64, mp: i64, b: usize },
+    IndexOutOfRange {
+        /// Requested degree.
+        l: i64,
+        /// Requested order m.
+        m: i64,
+        /// Requested order m'.
+        mp: i64,
+        /// Bandwidth bounding the domain.
+        b: usize,
+    },
 
     /// A plan built in `real_input` mode received data with nonzero
     /// imaginary parts (the conjugate-even FFT path is only valid for
     /// real samples).
-    RealInputRequired { context: &'static str },
+    RealInputRequired {
+        /// Which call site rejected the data.
+        context: &'static str,
+    },
 
     /// Thread-count request the pool cannot satisfy.
     InvalidThreads(usize),
@@ -70,8 +88,11 @@ pub enum Error {
     /// which) alone exceeds the cap. Raised at plan build, never as a
     /// silent fallback.
     BudgetExceeded {
+        /// Bytes the irreducible part needs.
         required: usize,
+        /// The configured cap in bytes.
         budget: usize,
+        /// Which component could not fit.
         context: &'static str,
     },
 
@@ -86,13 +107,18 @@ pub enum Error {
     /// (queued work × the observed per-job rate) — a cooperative client
     /// backs off at least that long before resubmitting.
     Overloaded {
+        /// Which admission limit rejected the job.
         cause: OverloadCause,
+        /// Estimated backlog-drain time; back off at least this long.
         retry_after_hint: Duration,
     },
 
     /// The job's (relative) deadline expired while it was still queued;
     /// the dispatcher resolved it without executing it.
-    DeadlineExceeded { deadline: Duration },
+    DeadlineExceeded {
+        /// The relative deadline the job was submitted with.
+        deadline: Duration,
+    },
 
     /// The job was cancelled via `JobHandle::cancel` before dispatch.
     Cancelled,
@@ -104,14 +130,22 @@ pub enum Error {
     /// An armed fault fired at a named injection site (see
     /// [`crate::faults`]). Only ever produced when faults are explicitly
     /// armed — chaos tests and `serve-bench --inject`.
-    FaultInjected { site: String, msg: String },
+    FaultInjected {
+        /// The injection site that fired.
+        site: String,
+        /// The armed fault's message.
+        msg: String,
+    },
 
     /// A recent plan build for this registry key failed; the registry
     /// serves the cached failure without rebuilding until the
     /// exponential backoff elapses (`retry_in`).
     PlanBuildFailed {
+        /// The original build error, rendered.
         msg: String,
+        /// Consecutive failed build attempts for this key.
         attempts: u32,
+        /// Time until the registry will try building again.
         retry_in: Duration,
     },
 
@@ -122,7 +156,12 @@ pub enum Error {
     Runtime(String),
 
     /// Requested AOT artifact is not present on disk.
-    MissingArtifact { b: usize, path: String },
+    MissingArtifact {
+        /// Bandwidth the artifact would serve.
+        b: usize,
+        /// Path that was probed.
+        path: String,
+    },
 
     /// I/O errors (artifact files, config files, trace dumps).
     Io(std::io::Error),

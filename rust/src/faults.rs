@@ -151,6 +151,9 @@ fn arm_from_env_once() {
 pub fn fire(site: &str) -> Option<FaultAction> {
     #[cfg(feature = "fault-injection")]
     arm_from_env_once();
+    // ordering: Relaxed — ARMED is a hint; the registry mutex in
+    // fire_slow is the real synchronization. A stale 0 only delays a
+    // freshly armed fault by one poll, which the arm/fire API permits.
     if ARMED.load(Ordering::Relaxed) == 0 {
         return None;
     }
@@ -166,6 +169,8 @@ fn fire_slow(site: &str) -> Option<FaultAction> {
         *rem -= 1;
         if *rem == 0 {
             sites.remove(site);
+            // ordering: Relaxed — published under the registry mutex;
+            // ARMED is only ever a fast-path hint (see `fire`).
             ARMED.store(sites.len(), Ordering::Relaxed);
         }
     }
@@ -187,6 +192,8 @@ pub fn arm(site: &str, action: FaultAction, count: Option<u64>) {
             remaining: count,
         },
     );
+    // ordering: Relaxed — written under the registry mutex; readers that
+    // miss the update (fast-path hint in `fire`) just poll again later.
     ARMED.store(sites.len(), Ordering::Relaxed);
 }
 
@@ -194,6 +201,7 @@ pub fn arm(site: &str, action: FaultAction, count: Option<u64>) {
 pub fn disarm(site: &str) {
     let mut sites = lock(registry());
     sites.remove(site);
+    // ordering: Relaxed — hint store under the registry mutex (see `arm`).
     ARMED.store(sites.len(), Ordering::Relaxed);
 }
 
@@ -201,11 +209,13 @@ pub fn disarm(site: &str) {
 pub fn disarm_all() {
     let mut sites = lock(registry());
     sites.clear();
+    // ordering: Relaxed — hint store under the registry mutex (see `arm`).
     ARMED.store(0, Ordering::Relaxed);
 }
 
 /// Whether a fault is currently armed for `site`.
 pub fn is_armed(site: &str) -> bool {
+    // ordering: Relaxed — fast-path hint; the mutex below is authoritative.
     if ARMED.load(Ordering::Relaxed) == 0 {
         return false;
     }
@@ -294,6 +304,8 @@ pub struct ScopedFault {
 }
 
 impl ScopedFault {
+    /// Arm `site` with `action` for the guard's lifetime; `count` bounds
+    /// how many times it fires (`None` = unlimited).
     pub fn new(site: &'static str, action: FaultAction, count: Option<u64>) -> Self {
         arm(site, action, count);
         Self { site }

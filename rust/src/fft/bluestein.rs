@@ -23,6 +23,7 @@ pub struct BluesteinPlan {
 }
 
 impl BluesteinPlan {
+    /// Plan an arbitrary-size transform of length `n`.
     pub fn new(n: usize) -> Self {
         assert!(n >= 1);
         let m = (2 * n - 1).next_power_of_two();
@@ -55,11 +56,13 @@ impl BluesteinPlan {
         }
     }
 
+    /// Transform size n.
     #[inline]
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Whether the transform size is zero.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.n == 0

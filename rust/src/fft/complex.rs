@@ -11,28 +11,36 @@ use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 #[repr(C)]
 pub struct Complex64 {
+    /// Real part.
     pub re: f64,
+    /// Imaginary part.
     pub im: f64,
 }
 
 // SAFETY: two f64s, `repr(C)`, no drop glue, any bit pattern valid.
 unsafe impl crate::util::Pod for Complex64 {}
 
+/// 0 + 0i.
 pub const ZERO: Complex64 = Complex64 { re: 0.0, im: 0.0 };
+/// 1 + 0i.
 pub const ONE: Complex64 = Complex64 { re: 1.0, im: 0.0 };
+/// 0 + 1i.
 pub const I: Complex64 = Complex64 { re: 0.0, im: 1.0 };
 
 impl Complex64 {
+    /// Complex number from parts.
     #[inline]
     pub const fn new(re: f64, im: f64) -> Self {
         Self { re, im }
     }
 
+    /// 0 + 0i.
     #[inline]
     pub const fn zero() -> Self {
         ZERO
     }
 
+    /// 1 + 0i.
     #[inline]
     pub const fn one() -> Self {
         ONE
@@ -269,6 +277,8 @@ mod tests {
     #[test]
     fn repr_c_interleave() {
         let v = [Complex64::new(1.0, 2.0), Complex64::new(3.0, 4.0)];
+        // SAFETY: Complex64 is repr(C) { re: f64, im: f64 }, so two of
+        // them are exactly four contiguous f64s; `v` outlives the view.
         let flat: &[f64] =
             unsafe { std::slice::from_raw_parts(v.as_ptr() as *const f64, 4) };
         assert_eq!(flat, &[1.0, 2.0, 3.0, 4.0]);

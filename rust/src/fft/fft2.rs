@@ -74,11 +74,13 @@ impl Fft2 {
         Self::new(n, std::sync::Arc::new(FftPlan::new(n)))
     }
 
+    /// Edge length n of the n×n transform.
     #[inline]
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Whether the edge length is zero.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.n == 0
@@ -185,6 +187,7 @@ impl Fft2 {
         note = "allocates per call; use `process` with a reused \
                 `scratch_len()`-sized buffer (or the executor's workspace)"
     )]
+    /// Deprecated allocating wrapper around [`Self::process`].
     pub fn process_alloc(&self, slice: &mut [Complex64], sign: Sign) {
         let mut scratch = vec![Complex64::zero(); self.scratch_len()];
         self.process(slice, &mut scratch, sign);

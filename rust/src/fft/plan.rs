@@ -35,8 +35,11 @@ pub enum FftAlgo {
 /// A prepared 1-D transform of a fixed size.
 #[derive(Debug, Clone)]
 pub enum FftPlan {
+    /// Radix-4 plan (power-of-two sizes).
     SplitRadix(Radix4Plan),
+    /// Radix-2 plan (power-of-two sizes).
     Radix2(Radix2Plan),
+    /// Bluestein chirp-z plan (any size).
     Bluestein(BluesteinPlan),
 }
 
@@ -81,6 +84,7 @@ impl FftPlan {
         }
     }
 
+    /// Transform size n.
     #[inline]
     pub fn len(&self) -> usize {
         match self {
@@ -90,6 +94,7 @@ impl FftPlan {
         }
     }
 
+    /// Whether the transform size is zero.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len() == 0
@@ -153,6 +158,7 @@ pub struct FftPlanner {
 }
 
 impl FftPlanner {
+    /// An empty planner cache.
     pub fn new() -> Self {
         Self::default()
     }

@@ -50,11 +50,13 @@ impl Radix2Plan {
         }
     }
 
+    /// Transform size n.
     #[inline]
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Whether the transform size is zero.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.n == 0
@@ -88,6 +90,7 @@ impl Radix2Plan {
         let n = self.n;
         let mut h = 1;
         let mut toff = 0; // offset into the packed twiddle table
+        // lint: hot-loop-begin
         while h < n {
             let step = 2 * h;
             let tw = &self.twiddles_neg[toff..toff + h];
@@ -106,6 +109,7 @@ impl Radix2Plan {
             toff += h;
             h = step;
         }
+        // lint: hot-loop-end
     }
 }
 

@@ -58,11 +58,13 @@ impl RealFftPlan {
         }
     }
 
+    /// Transform size n.
     #[inline]
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// Whether the transform size is zero.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.n == 0
@@ -168,6 +170,7 @@ pub struct RealFft2 {
 }
 
 impl RealFft2 {
+    /// Real 2-D wrapper over a complex row plan of size `n`.
     pub fn new(n: usize, plan: Arc<FftPlan>) -> Self {
         Self::from_fft2(&Fft2::new(n, plan))
     }
@@ -182,11 +185,13 @@ impl RealFft2 {
         Self { fft2: fft2.clone() }
     }
 
+    /// Edge length n.
     #[inline]
     pub fn len(&self) -> usize {
         self.fft2.len()
     }
 
+    /// Whether the edge length is zero.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.fft2.is_empty()

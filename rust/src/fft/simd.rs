@@ -18,7 +18,14 @@
 //! differ from scalar by ≤ a few ulp per butterfly — well inside the
 //! 1e-12 parity budget pinned by `tests/simd_parity.rs`.
 
+// `unsafe_op_in_unsafe_fn` straddle: on the 1.75 MSRV every intrinsic
+// call is an unsafe op, so the bodies below carry explicit `unsafe {}`
+// blocks; on newer toolchains (target_feature 1.1) intrinsic calls
+// inside a matching `#[target_feature]` fn are safe and those same
+// blocks would trip `unused_unsafe` under `-D warnings`. Allow the
+// lint so both toolchains stay warning-clean.
 #[cfg(target_arch = "x86_64")]
+#[allow(unused_unsafe)]
 pub(crate) mod avx2 {
     use crate::fft::complex::Complex64;
     use std::arch::x86_64::*;
@@ -32,8 +39,13 @@ pub(crate) mod avx2 {
     /// Requires AVX2+FMA.
     #[inline(always)]
     unsafe fn cmul(z: __m256d, wr: __m256d, wi: __m256d) -> __m256d {
-        let swap = _mm256_permute_pd(z, 0b0101);
-        _mm256_fmaddsub_pd(wr, z, _mm256_mul_pd(wi, swap))
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let swap = _mm256_permute_pd(z, 0b0101);
+            _mm256_fmaddsub_pd(wr, z, _mm256_mul_pd(wi, swap))
+        }
     }
 
     /// Load the twiddle pair `(tw[i], tw[i + 3])` (the packed table is
@@ -43,23 +55,35 @@ pub(crate) mod avx2 {
     /// Requires AVX2; `tw` must be readable at `i` and `i + 3`.
     #[inline(always)]
     unsafe fn twiddle_pair(tw: &[Complex64], i: usize, conj_mask: __m256d) -> (__m256d, __m256d) {
-        let lo = _mm_loadu_pd(tw.as_ptr().add(i) as *const f64);
-        let hi = _mm_loadu_pd(tw.as_ptr().add(i + 3) as *const f64);
-        let w = _mm256_set_m128d(hi, lo);
-        let wr = _mm256_movedup_pd(w);
-        let wi = _mm256_xor_pd(_mm256_permute_pd(w, 0b1111), conj_mask);
-        (wr, wi)
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let lo = _mm_loadu_pd(tw.as_ptr().add(i) as *const f64);
+            let hi = _mm_loadu_pd(tw.as_ptr().add(i + 3) as *const f64);
+            let w = _mm256_set_m128d(hi, lo);
+            let wr = _mm256_movedup_pd(w);
+            let wi = _mm256_xor_pd(_mm256_permute_pd(w, 0b1111), conj_mask);
+            (wr, wi)
+        }
     }
 
+    /// # Safety
+    /// Requires AVX2 (vector constant materialization only).
     #[inline(always)]
     unsafe fn masks(conj: bool) -> (__m256d, __m256d) {
-        // conj_mask flips the twiddle imaginary sign; rot_mask turns
-        // the pair-swapped odd difference into ·(−i) (negative sign)
-        // or ·(+i) (conjugate/positive sign).
-        if conj {
-            (_mm256_set1_pd(-0.0), _mm256_setr_pd(-0.0, 0.0, -0.0, 0.0))
-        } else {
-            (_mm256_setzero_pd(), _mm256_setr_pd(0.0, -0.0, 0.0, -0.0))
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            // conj_mask flips the twiddle imaginary sign; rot_mask turns
+            // the pair-swapped odd difference into ·(−i) (negative sign)
+            // or ·(+i) (conjugate/positive sign).
+            if conj {
+                (_mm256_set1_pd(-0.0), _mm256_setr_pd(-0.0, 0.0, -0.0, 0.0))
+            } else {
+                (_mm256_setzero_pd(), _mm256_setr_pd(0.0, -0.0, 0.0, -0.0))
+            }
         }
     }
 
@@ -72,85 +96,92 @@ pub(crate) mod avx2 {
     /// `n = data.len()` (a power of two).
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn stages(data: &mut [Complex64], twiddles_neg: &[Complex64], conj: bool) {
-        let n = data.len();
-        let ptr = data.as_mut_ptr() as *mut f64;
-        let (conj_mask, rot_mask) = masks(conj);
-        let mut h = 1usize;
-        if n.trailing_zeros() % 2 == 1 {
-            // Radix-2 head (twiddle-free): one 2-complex vector per pair.
-            let mut g = 0;
-            while g < n {
-                let v = _mm256_loadu_pd(ptr.add(2 * g)); // [a, b]
-                let sw = _mm256_permute2f128_pd(v, v, 0x01); // [b, a]
-                let sum = _mm256_add_pd(v, sw); // [a+b, b+a]
-                let diff = _mm256_sub_pd(v, sw); // [a−b, b−a]
-                _mm256_storeu_pd(ptr.add(2 * g), _mm256_blend_pd(sum, diff, 0b1100));
-                g += 2;
-            }
-            h = 2;
-        }
-        let mut toff = 0usize;
-        while h < n {
-            let step = 4 * h;
-            let tw = &twiddles_neg[toff..toff + 3 * h];
-            if h == 1 {
-                // Quarter-size 1: unit twiddles, blocks of 4 complexes
-                // [E0, E2, E1, E3]. Two vectors per block.
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let n = data.len();
+            let ptr = data.as_mut_ptr() as *mut f64;
+            let (conj_mask, rot_mask) = masks(conj);
+            let mut h = 1usize;
+            if n.trailing_zeros() % 2 == 1 {
+                // Radix-2 head (twiddle-free): one 2-complex vector per pair.
                 let mut g = 0;
                 while g < n {
-                    let v0 = _mm256_loadu_pd(ptr.add(2 * g)); // [a, c]
-                    let v1 = _mm256_loadu_pd(ptr.add(2 * g + 4)); // [b, d]
-                    let sw0 = _mm256_permute2f128_pd(v0, v0, 0x01);
-                    let sw1 = _mm256_permute2f128_pd(v1, v1, 0x01);
-                    let t01 = _mm256_blend_pd(
-                        _mm256_add_pd(v0, sw0),
-                        _mm256_sub_pd(v0, sw0),
-                        0b1100,
-                    ); // [t0, t1]
-                    let t23 = _mm256_blend_pd(
-                        _mm256_add_pd(v1, sw1),
-                        _mm256_sub_pd(v1, sw1),
-                        0b1100,
-                    ); // [t2, t3]
-                    let rot = _mm256_xor_pd(_mm256_permute_pd(t23, 0b0101), rot_mask);
-                    let mixed = _mm256_blend_pd(t23, rot, 0b1100); // [t2, rot]
-                    _mm256_storeu_pd(ptr.add(2 * g), _mm256_add_pd(t01, mixed));
-                    _mm256_storeu_pd(ptr.add(2 * g + 4), _mm256_sub_pd(t01, mixed));
-                    g += 4;
+                    let v = _mm256_loadu_pd(ptr.add(2 * g)); // [a, b]
+                    let sw = _mm256_permute2f128_pd(v, v, 0x01); // [b, a]
+                    let sum = _mm256_add_pd(v, sw); // [a+b, b+a]
+                    let diff = _mm256_sub_pd(v, sw); // [a−b, b−a]
+                    _mm256_storeu_pd(ptr.add(2 * g), _mm256_blend_pd(sum, diff, 0b1100));
+                    g += 2;
                 }
-            } else {
-                // h is even from here on: two butterflies per vector.
-                let mut g = 0;
-                while g < n {
-                    let off0 = 2 * g;
-                    let off2 = off0 + 2 * h;
-                    let off1 = off0 + 4 * h;
-                    let off3 = off0 + 6 * h;
-                    let mut k = 0;
-                    while k < h {
-                        let (w1r, w1i) = twiddle_pair(tw, 3 * k, conj_mask);
-                        let (w2r, w2i) = twiddle_pair(tw, 3 * k + 1, conj_mask);
-                        let (w3r, w3i) = twiddle_pair(tw, 3 * k + 2, conj_mask);
-                        let a = _mm256_loadu_pd(ptr.add(off0 + 2 * k));
-                        let c = cmul(_mm256_loadu_pd(ptr.add(off2 + 2 * k)), w2r, w2i);
-                        let b = cmul(_mm256_loadu_pd(ptr.add(off1 + 2 * k)), w1r, w1i);
-                        let d = cmul(_mm256_loadu_pd(ptr.add(off3 + 2 * k)), w3r, w3i);
-                        let t0 = _mm256_add_pd(a, c);
-                        let t1 = _mm256_sub_pd(a, c);
-                        let t2 = _mm256_add_pd(b, d);
-                        let t3 = _mm256_sub_pd(b, d);
-                        let rot = _mm256_xor_pd(_mm256_permute_pd(t3, 0b0101), rot_mask);
-                        _mm256_storeu_pd(ptr.add(off0 + 2 * k), _mm256_add_pd(t0, t2));
-                        _mm256_storeu_pd(ptr.add(off2 + 2 * k), _mm256_add_pd(t1, rot));
-                        _mm256_storeu_pd(ptr.add(off1 + 2 * k), _mm256_sub_pd(t0, t2));
-                        _mm256_storeu_pd(ptr.add(off3 + 2 * k), _mm256_sub_pd(t1, rot));
-                        k += 2;
+                h = 2;
+            }
+            let mut toff = 0usize;
+            // lint: hot-loop-begin
+            while h < n {
+                let step = 4 * h;
+                let tw = &twiddles_neg[toff..toff + 3 * h];
+                if h == 1 {
+                    // Quarter-size 1: unit twiddles, blocks of 4 complexes
+                    // [E0, E2, E1, E3]. Two vectors per block.
+                    let mut g = 0;
+                    while g < n {
+                        let v0 = _mm256_loadu_pd(ptr.add(2 * g)); // [a, c]
+                        let v1 = _mm256_loadu_pd(ptr.add(2 * g + 4)); // [b, d]
+                        let sw0 = _mm256_permute2f128_pd(v0, v0, 0x01);
+                        let sw1 = _mm256_permute2f128_pd(v1, v1, 0x01);
+                        let t01 = _mm256_blend_pd(
+                            _mm256_add_pd(v0, sw0),
+                            _mm256_sub_pd(v0, sw0),
+                            0b1100,
+                        ); // [t0, t1]
+                        let t23 = _mm256_blend_pd(
+                            _mm256_add_pd(v1, sw1),
+                            _mm256_sub_pd(v1, sw1),
+                            0b1100,
+                        ); // [t2, t3]
+                        let rot = _mm256_xor_pd(_mm256_permute_pd(t23, 0b0101), rot_mask);
+                        let mixed = _mm256_blend_pd(t23, rot, 0b1100); // [t2, rot]
+                        _mm256_storeu_pd(ptr.add(2 * g), _mm256_add_pd(t01, mixed));
+                        _mm256_storeu_pd(ptr.add(2 * g + 4), _mm256_sub_pd(t01, mixed));
+                        g += 4;
                     }
-                    g += step;
+                } else {
+                    // h is even from here on: two butterflies per vector.
+                    let mut g = 0;
+                    while g < n {
+                        let off0 = 2 * g;
+                        let off2 = off0 + 2 * h;
+                        let off1 = off0 + 4 * h;
+                        let off3 = off0 + 6 * h;
+                        let mut k = 0;
+                        while k < h {
+                            let (w1r, w1i) = twiddle_pair(tw, 3 * k, conj_mask);
+                            let (w2r, w2i) = twiddle_pair(tw, 3 * k + 1, conj_mask);
+                            let (w3r, w3i) = twiddle_pair(tw, 3 * k + 2, conj_mask);
+                            let a = _mm256_loadu_pd(ptr.add(off0 + 2 * k));
+                            let c = cmul(_mm256_loadu_pd(ptr.add(off2 + 2 * k)), w2r, w2i);
+                            let b = cmul(_mm256_loadu_pd(ptr.add(off1 + 2 * k)), w1r, w1i);
+                            let d = cmul(_mm256_loadu_pd(ptr.add(off3 + 2 * k)), w3r, w3i);
+                            let t0 = _mm256_add_pd(a, c);
+                            let t1 = _mm256_sub_pd(a, c);
+                            let t2 = _mm256_add_pd(b, d);
+                            let t3 = _mm256_sub_pd(b, d);
+                            let rot = _mm256_xor_pd(_mm256_permute_pd(t3, 0b0101), rot_mask);
+                            _mm256_storeu_pd(ptr.add(off0 + 2 * k), _mm256_add_pd(t0, t2));
+                            _mm256_storeu_pd(ptr.add(off2 + 2 * k), _mm256_add_pd(t1, rot));
+                            _mm256_storeu_pd(ptr.add(off1 + 2 * k), _mm256_sub_pd(t0, t2));
+                            _mm256_storeu_pd(ptr.add(off3 + 2 * k), _mm256_sub_pd(t1, rot));
+                            k += 2;
+                        }
+                        g += step;
+                    }
                 }
+                toff += 3 * h;
+                h = step;
             }
-            toff += 3 * h;
-            h = step;
+            // lint: hot-loop-end
         }
     }
 
@@ -171,71 +202,83 @@ pub(crate) mod avx2 {
         twiddles_neg: &[Complex64],
         conj: bool,
     ) {
-        let ptr = data.as_mut_ptr() as *mut f64;
-        let (conj_mask, rot_mask) = masks(conj);
-        let mut h = 1usize;
-        if n.trailing_zeros() % 2 == 1 {
-            let mut g = 0;
-            while g < n {
-                let r0 = 2 * g * stride;
-                let r1 = r0 + 2 * stride;
-                for half in 0..2 {
-                    let o = 4 * half;
-                    let a = _mm256_loadu_pd(ptr.add(r0 + o));
-                    let b = _mm256_loadu_pd(ptr.add(r1 + o));
-                    _mm256_storeu_pd(ptr.add(r0 + o), _mm256_add_pd(a, b));
-                    _mm256_storeu_pd(ptr.add(r1 + o), _mm256_sub_pd(a, b));
-                }
-                g += 2;
-            }
-            h = 2;
-        }
-        let mut toff = 0usize;
-        while h < n {
-            let step = 4 * h;
-            let tw = &twiddles_neg[toff..toff + 3 * h];
-            let mut g = 0;
-            while g < n {
-                for k in 0..h {
-                    let w1 = tw[3 * k];
-                    let w2 = tw[3 * k + 1];
-                    let w3 = tw[3 * k + 2];
-                    let w1r = _mm256_set1_pd(w1.re);
-                    let w1i = _mm256_xor_pd(_mm256_set1_pd(w1.im), conj_mask);
-                    let w2r = _mm256_set1_pd(w2.re);
-                    let w2i = _mm256_xor_pd(_mm256_set1_pd(w2.im), conj_mask);
-                    let w3r = _mm256_set1_pd(w3.re);
-                    let w3i = _mm256_xor_pd(_mm256_set1_pd(w3.im), conj_mask);
-                    let i0 = 2 * (g + k) * stride;
-                    let i2 = 2 * (g + h + k) * stride;
-                    let i1 = 2 * (g + 2 * h + k) * stride;
-                    let i3 = 2 * (g + 3 * h + k) * stride;
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let ptr = data.as_mut_ptr() as *mut f64;
+            let (conj_mask, rot_mask) = masks(conj);
+            let mut h = 1usize;
+            if n.trailing_zeros() % 2 == 1 {
+                let mut g = 0;
+                while g < n {
+                    let r0 = 2 * g * stride;
+                    let r1 = r0 + 2 * stride;
                     for half in 0..2 {
                         let o = 4 * half;
-                        let a = _mm256_loadu_pd(ptr.add(i0 + o));
-                        let c = cmul(_mm256_loadu_pd(ptr.add(i2 + o)), w2r, w2i);
-                        let b = cmul(_mm256_loadu_pd(ptr.add(i1 + o)), w1r, w1i);
-                        let d = cmul(_mm256_loadu_pd(ptr.add(i3 + o)), w3r, w3i);
-                        let t0 = _mm256_add_pd(a, c);
-                        let t1 = _mm256_sub_pd(a, c);
-                        let t2 = _mm256_add_pd(b, d);
-                        let t3 = _mm256_sub_pd(b, d);
-                        let rot = _mm256_xor_pd(_mm256_permute_pd(t3, 0b0101), rot_mask);
-                        _mm256_storeu_pd(ptr.add(i0 + o), _mm256_add_pd(t0, t2));
-                        _mm256_storeu_pd(ptr.add(i2 + o), _mm256_add_pd(t1, rot));
-                        _mm256_storeu_pd(ptr.add(i1 + o), _mm256_sub_pd(t0, t2));
-                        _mm256_storeu_pd(ptr.add(i3 + o), _mm256_sub_pd(t1, rot));
+                        let a = _mm256_loadu_pd(ptr.add(r0 + o));
+                        let b = _mm256_loadu_pd(ptr.add(r1 + o));
+                        _mm256_storeu_pd(ptr.add(r0 + o), _mm256_add_pd(a, b));
+                        _mm256_storeu_pd(ptr.add(r1 + o), _mm256_sub_pd(a, b));
                     }
+                    g += 2;
                 }
-                g += step;
+                h = 2;
             }
-            toff += 3 * h;
-            h = step;
+            let mut toff = 0usize;
+            while h < n {
+                let step = 4 * h;
+                let tw = &twiddles_neg[toff..toff + 3 * h];
+                let mut g = 0;
+                while g < n {
+                    for k in 0..h {
+                        let w1 = tw[3 * k];
+                        let w2 = tw[3 * k + 1];
+                        let w3 = tw[3 * k + 2];
+                        let w1r = _mm256_set1_pd(w1.re);
+                        let w1i = _mm256_xor_pd(_mm256_set1_pd(w1.im), conj_mask);
+                        let w2r = _mm256_set1_pd(w2.re);
+                        let w2i = _mm256_xor_pd(_mm256_set1_pd(w2.im), conj_mask);
+                        let w3r = _mm256_set1_pd(w3.re);
+                        let w3i = _mm256_xor_pd(_mm256_set1_pd(w3.im), conj_mask);
+                        let i0 = 2 * (g + k) * stride;
+                        let i2 = 2 * (g + h + k) * stride;
+                        let i1 = 2 * (g + 2 * h + k) * stride;
+                        let i3 = 2 * (g + 3 * h + k) * stride;
+                        for half in 0..2 {
+                            let o = 4 * half;
+                            let a = _mm256_loadu_pd(ptr.add(i0 + o));
+                            let c = cmul(_mm256_loadu_pd(ptr.add(i2 + o)), w2r, w2i);
+                            let b = cmul(_mm256_loadu_pd(ptr.add(i1 + o)), w1r, w1i);
+                            let d = cmul(_mm256_loadu_pd(ptr.add(i3 + o)), w3r, w3i);
+                            let t0 = _mm256_add_pd(a, c);
+                            let t1 = _mm256_sub_pd(a, c);
+                            let t2 = _mm256_add_pd(b, d);
+                            let t3 = _mm256_sub_pd(b, d);
+                            let rot = _mm256_xor_pd(_mm256_permute_pd(t3, 0b0101), rot_mask);
+                            _mm256_storeu_pd(ptr.add(i0 + o), _mm256_add_pd(t0, t2));
+                            _mm256_storeu_pd(ptr.add(i2 + o), _mm256_add_pd(t1, rot));
+                            _mm256_storeu_pd(ptr.add(i1 + o), _mm256_sub_pd(t0, t2));
+                            _mm256_storeu_pd(ptr.add(i3 + o), _mm256_sub_pd(t1, rot));
+                        }
+                    }
+                    g += step;
+                }
+                toff += 3 * h;
+                h = step;
+            }
         }
     }
 }
 
+// `unsafe_op_in_unsafe_fn` straddle: on the 1.75 MSRV every intrinsic
+// call is an unsafe op, so the bodies below carry explicit `unsafe {}`
+// blocks; on newer toolchains (target_feature 1.1) intrinsic calls
+// inside a matching `#[target_feature]` fn are safe and those same
+// blocks would trip `unused_unsafe` under `-D warnings`. Allow the
+// lint so both toolchains stay warning-clean.
 #[cfg(target_arch = "aarch64")]
+#[allow(unused_unsafe)]
 pub(crate) mod neon {
     use crate::fft::complex::Complex64;
     use std::arch::aarch64::*;
@@ -248,25 +291,44 @@ pub(crate) mod neon {
     /// NEON is baseline on aarch64.
     #[inline(always)]
     unsafe fn cmul(z: float64x2_t, wr: float64x2_t, wi: float64x2_t) -> float64x2_t {
-        let swap = vextq_f64::<1>(z, z);
-        vfmaq_f64(vmulq_f64(wr, z), wi, swap)
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let swap = vextq_f64::<1>(z, z);
+            vfmaq_f64(vmulq_f64(wr, z), wi, swap)
+        }
     }
 
+    /// # Safety
+    /// NEON is baseline on aarch64.
     #[inline(always)]
     unsafe fn twiddle(w: Complex64, conj: bool) -> (float64x2_t, float64x2_t) {
-        let s = if conj { 1.0 } else { -1.0 };
-        let wi = [s * w.im, -s * w.im];
-        (vdupq_n_f64(w.re), vld1q_f64(wi.as_ptr()))
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let s = if conj { 1.0 } else { -1.0 };
+            let wi = [s * w.im, -s * w.im];
+            (vdupq_n_f64(w.re), vld1q_f64(wi.as_ptr()))
+        }
     }
 
+    /// # Safety
+    /// NEON is baseline on aarch64.
     #[inline(always)]
     unsafe fn rotate(t3: float64x2_t, conj: bool) -> float64x2_t {
-        if conj {
-            // ·(+i): [−im, re]
-            vextq_f64::<1>(vnegq_f64(t3), t3)
-        } else {
-            // ·(−i): [im, −re]
-            vextq_f64::<1>(t3, vnegq_f64(t3))
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            if conj {
+                // ·(+i): [−im, re]
+                vextq_f64::<1>(vnegq_f64(t3), t3)
+            } else {
+                // ·(−i): [im, −re]
+                vextq_f64::<1>(t3, vnegq_f64(t3))
+            }
         }
     }
 
@@ -278,53 +340,58 @@ pub(crate) mod neon {
     /// `n = data.len()` (a power of two).
     #[target_feature(enable = "neon")]
     pub unsafe fn stages(data: &mut [Complex64], twiddles_neg: &[Complex64], conj: bool) {
-        let n = data.len();
-        let ptr = data.as_mut_ptr() as *mut f64;
-        let mut h = 1usize;
-        if n.trailing_zeros() % 2 == 1 {
-            let mut g = 0;
-            while g < n {
-                let a = vld1q_f64(ptr.add(2 * g));
-                let b = vld1q_f64(ptr.add(2 * g + 2));
-                vst1q_f64(ptr.add(2 * g), vaddq_f64(a, b));
-                vst1q_f64(ptr.add(2 * g + 2), vsubq_f64(a, b));
-                g += 2;
-            }
-            h = 2;
-        }
-        let mut toff = 0usize;
-        while h < n {
-            let step = 4 * h;
-            let tw = &twiddles_neg[toff..toff + 3 * h];
-            let mut g = 0;
-            while g < n {
-                let base = 2 * g;
-                for k in 0..h {
-                    let (w1r, w1i) = twiddle(tw[3 * k], conj);
-                    let (w2r, w2i) = twiddle(tw[3 * k + 1], conj);
-                    let (w3r, w3i) = twiddle(tw[3 * k + 2], conj);
-                    let i0 = base + 2 * k;
-                    let i2 = base + 2 * (h + k);
-                    let i1 = base + 2 * (2 * h + k);
-                    let i3 = base + 2 * (3 * h + k);
-                    let a = vld1q_f64(ptr.add(i0));
-                    let c = cmul(vld1q_f64(ptr.add(i2)), w2r, w2i);
-                    let b = cmul(vld1q_f64(ptr.add(i1)), w1r, w1i);
-                    let d = cmul(vld1q_f64(ptr.add(i3)), w3r, w3i);
-                    let t0 = vaddq_f64(a, c);
-                    let t1 = vsubq_f64(a, c);
-                    let t2 = vaddq_f64(b, d);
-                    let t3 = vsubq_f64(b, d);
-                    let rot = rotate(t3, conj);
-                    vst1q_f64(ptr.add(i0), vaddq_f64(t0, t2));
-                    vst1q_f64(ptr.add(i2), vaddq_f64(t1, rot));
-                    vst1q_f64(ptr.add(i1), vsubq_f64(t0, t2));
-                    vst1q_f64(ptr.add(i3), vsubq_f64(t1, rot));
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let n = data.len();
+            let ptr = data.as_mut_ptr() as *mut f64;
+            let mut h = 1usize;
+            if n.trailing_zeros() % 2 == 1 {
+                let mut g = 0;
+                while g < n {
+                    let a = vld1q_f64(ptr.add(2 * g));
+                    let b = vld1q_f64(ptr.add(2 * g + 2));
+                    vst1q_f64(ptr.add(2 * g), vaddq_f64(a, b));
+                    vst1q_f64(ptr.add(2 * g + 2), vsubq_f64(a, b));
+                    g += 2;
                 }
-                g += step;
+                h = 2;
             }
-            toff += 3 * h;
-            h = step;
+            let mut toff = 0usize;
+            while h < n {
+                let step = 4 * h;
+                let tw = &twiddles_neg[toff..toff + 3 * h];
+                let mut g = 0;
+                while g < n {
+                    let base = 2 * g;
+                    for k in 0..h {
+                        let (w1r, w1i) = twiddle(tw[3 * k], conj);
+                        let (w2r, w2i) = twiddle(tw[3 * k + 1], conj);
+                        let (w3r, w3i) = twiddle(tw[3 * k + 2], conj);
+                        let i0 = base + 2 * k;
+                        let i2 = base + 2 * (h + k);
+                        let i1 = base + 2 * (2 * h + k);
+                        let i3 = base + 2 * (3 * h + k);
+                        let a = vld1q_f64(ptr.add(i0));
+                        let c = cmul(vld1q_f64(ptr.add(i2)), w2r, w2i);
+                        let b = cmul(vld1q_f64(ptr.add(i1)), w1r, w1i);
+                        let d = cmul(vld1q_f64(ptr.add(i3)), w3r, w3i);
+                        let t0 = vaddq_f64(a, c);
+                        let t1 = vsubq_f64(a, c);
+                        let t2 = vaddq_f64(b, d);
+                        let t3 = vsubq_f64(b, d);
+                        let rot = rotate(t3, conj);
+                        vst1q_f64(ptr.add(i0), vaddq_f64(t0, t2));
+                        vst1q_f64(ptr.add(i2), vaddq_f64(t1, rot));
+                        vst1q_f64(ptr.add(i1), vsubq_f64(t0, t2));
+                        vst1q_f64(ptr.add(i3), vsubq_f64(t1, rot));
+                    }
+                    g += step;
+                }
+                toff += 3 * h;
+                h = step;
+            }
         }
     }
 
@@ -344,58 +411,63 @@ pub(crate) mod neon {
         twiddles_neg: &[Complex64],
         conj: bool,
     ) {
-        let ptr = data.as_mut_ptr() as *mut f64;
-        let mut h = 1usize;
-        if n.trailing_zeros() % 2 == 1 {
-            let mut g = 0;
-            while g < n {
-                let r0 = 2 * g * stride;
-                let r1 = r0 + 2 * stride;
-                for c in 0..cols {
-                    let a = vld1q_f64(ptr.add(r0 + 2 * c));
-                    let b = vld1q_f64(ptr.add(r1 + 2 * c));
-                    vst1q_f64(ptr.add(r0 + 2 * c), vaddq_f64(a, b));
-                    vst1q_f64(ptr.add(r1 + 2 * c), vsubq_f64(a, b));
-                }
-                g += 2;
-            }
-            h = 2;
-        }
-        let mut toff = 0usize;
-        while h < n {
-            let step = 4 * h;
-            let tw = &twiddles_neg[toff..toff + 3 * h];
-            let mut g = 0;
-            while g < n {
-                for k in 0..h {
-                    let (w1r, w1i) = twiddle(tw[3 * k], conj);
-                    let (w2r, w2i) = twiddle(tw[3 * k + 1], conj);
-                    let (w3r, w3i) = twiddle(tw[3 * k + 2], conj);
-                    let i0 = 2 * (g + k) * stride;
-                    let i2 = 2 * (g + h + k) * stride;
-                    let i1 = 2 * (g + 2 * h + k) * stride;
-                    let i3 = 2 * (g + 3 * h + k) * stride;
+        // SAFETY: caller upholds this fn's `# Safety` contract
+        // (ISA support and slice bounds); all unsafe ops below are
+        // the intrinsics/raw loads that contract licenses.
+        unsafe {
+            let ptr = data.as_mut_ptr() as *mut f64;
+            let mut h = 1usize;
+            if n.trailing_zeros() % 2 == 1 {
+                let mut g = 0;
+                while g < n {
+                    let r0 = 2 * g * stride;
+                    let r1 = r0 + 2 * stride;
                     for c in 0..cols {
-                        let o = 2 * c;
-                        let a = vld1q_f64(ptr.add(i0 + o));
-                        let cc = cmul(vld1q_f64(ptr.add(i2 + o)), w2r, w2i);
-                        let b = cmul(vld1q_f64(ptr.add(i1 + o)), w1r, w1i);
-                        let d = cmul(vld1q_f64(ptr.add(i3 + o)), w3r, w3i);
-                        let t0 = vaddq_f64(a, cc);
-                        let t1 = vsubq_f64(a, cc);
-                        let t2 = vaddq_f64(b, d);
-                        let t3 = vsubq_f64(b, d);
-                        let rot = rotate(t3, conj);
-                        vst1q_f64(ptr.add(i0 + o), vaddq_f64(t0, t2));
-                        vst1q_f64(ptr.add(i2 + o), vaddq_f64(t1, rot));
-                        vst1q_f64(ptr.add(i1 + o), vsubq_f64(t0, t2));
-                        vst1q_f64(ptr.add(i3 + o), vsubq_f64(t1, rot));
+                        let a = vld1q_f64(ptr.add(r0 + 2 * c));
+                        let b = vld1q_f64(ptr.add(r1 + 2 * c));
+                        vst1q_f64(ptr.add(r0 + 2 * c), vaddq_f64(a, b));
+                        vst1q_f64(ptr.add(r1 + 2 * c), vsubq_f64(a, b));
                     }
+                    g += 2;
                 }
-                g += step;
+                h = 2;
             }
-            toff += 3 * h;
-            h = step;
+            let mut toff = 0usize;
+            while h < n {
+                let step = 4 * h;
+                let tw = &twiddles_neg[toff..toff + 3 * h];
+                let mut g = 0;
+                while g < n {
+                    for k in 0..h {
+                        let (w1r, w1i) = twiddle(tw[3 * k], conj);
+                        let (w2r, w2i) = twiddle(tw[3 * k + 1], conj);
+                        let (w3r, w3i) = twiddle(tw[3 * k + 2], conj);
+                        let i0 = 2 * (g + k) * stride;
+                        let i2 = 2 * (g + h + k) * stride;
+                        let i1 = 2 * (g + 2 * h + k) * stride;
+                        let i3 = 2 * (g + 3 * h + k) * stride;
+                        for c in 0..cols {
+                            let o = 2 * c;
+                            let a = vld1q_f64(ptr.add(i0 + o));
+                            let cc = cmul(vld1q_f64(ptr.add(i2 + o)), w2r, w2i);
+                            let b = cmul(vld1q_f64(ptr.add(i1 + o)), w1r, w1i);
+                            let d = cmul(vld1q_f64(ptr.add(i3 + o)), w3r, w3i);
+                            let t0 = vaddq_f64(a, cc);
+                            let t1 = vsubq_f64(a, cc);
+                            let t2 = vaddq_f64(b, d);
+                            let t3 = vsubq_f64(b, d);
+                            let rot = rotate(t3, conj);
+                            vst1q_f64(ptr.add(i0 + o), vaddq_f64(t0, t2));
+                            vst1q_f64(ptr.add(i2 + o), vaddq_f64(t1, rot));
+                            vst1q_f64(ptr.add(i1 + o), vsubq_f64(t0, t2));
+                            vst1q_f64(ptr.add(i3 + o), vsubq_f64(t1, rot));
+                        }
+                    }
+                    g += step;
+                }
+                toff += 3 * h;
+                h = step;
+            }
         }
     }
 }

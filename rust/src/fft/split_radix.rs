@@ -97,6 +97,7 @@ impl Radix4Plan {
         }
     }
 
+    /// Transform size n.
     #[inline]
     pub fn len(&self) -> usize {
         self.n
@@ -108,6 +109,7 @@ impl Radix4Plan {
         self.isa
     }
 
+    /// Whether the transform size is zero.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.n == 0
@@ -223,6 +225,7 @@ impl Radix4Plan {
             h = 2;
         }
         let mut toff = 0; // offset into the packed twiddle-triple table
+        // lint: hot-loop-begin
         while h < n {
             let step = 4 * h;
             let tw = &self.twiddles_neg[toff..toff + 3 * h];
@@ -257,6 +260,7 @@ impl Radix4Plan {
             toff += 3 * h;
             h = step;
         }
+        // lint: hot-loop-end
     }
 
     /// Strided-panel butterfly stages: identical arithmetic to
@@ -288,6 +292,7 @@ impl Radix4Plan {
             h = 2;
         }
         let mut toff = 0;
+        // lint: hot-loop-begin
         while h < n {
             let step = 4 * h;
             let tw = &self.twiddles_neg[toff..toff + 3 * h];
@@ -324,6 +329,7 @@ impl Radix4Plan {
             toff += 3 * h;
             h = step;
         }
+        // lint: hot-loop-end
     }
 }
 

@@ -79,6 +79,14 @@
 //! The pre-planner handle `transform::So3Fft` is **deprecated** (a thin
 //! facade over `So3Plan`); see `docs/MIGRATION.md`.
 
+// Concurrency-soundness gates (see docs/CONCURRENCY.md): every unsafe
+// operation must sit inside an explicit `unsafe {}` block with its own
+// `// SAFETY:` justification, even inside `unsafe fn` bodies; and every
+// public item carries docs so the unsafe/atomic contracts stay written
+// down next to the API they protect.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(missing_docs)]
+
 pub mod apps;
 pub mod bench_util;
 pub mod cli;
@@ -91,6 +99,8 @@ pub mod fft;
 pub mod pool;
 pub mod prng;
 pub mod runtime;
+#[cfg(feature = "sched-test")]
+pub mod schedtest;
 pub mod service;
 pub mod simd;
 pub mod simulator;
@@ -101,6 +111,24 @@ pub mod transpose;
 pub mod util;
 pub mod wisdom;
 pub mod xprec;
+
+/// Named concurrency yield point for the deterministic schedule
+/// explorer (the `schedtest` module, `sched-test` feature).
+///
+/// Placed at the decision points of the crate's concurrent state
+/// machines (registry single-flight, admission, dispatcher, worker
+/// pool, shutdown drain). Without the `sched-test` feature the macro
+/// expands to **nothing** — not even an atomic load — so instrumented
+/// hot paths cost zero in release builds. With the feature, the point
+/// hands control to an installed `schedtest::Controller`, which decides
+/// which instrumented thread runs next.
+#[macro_export]
+macro_rules! sched_point {
+    ($name:expr) => {
+        #[cfg(feature = "sched-test")]
+        $crate::schedtest::point($name);
+    };
+}
 
 pub use coordinator::{MemoryBudget, MemoryReport};
 pub use error::{Error, Result};

@@ -67,6 +67,10 @@ where
         Schedule::Dynamic { chunk } => {
             let chunk = chunk.max(1);
             loop {
+                // ordering: Relaxed — the cursor only partitions the
+                // index space; workers never read data through it. The
+                // region data is published by the epoch/mutex handoff in
+                // `runtime.rs` (or the thread spawn in `parallel_for`).
                 let start = cursor.fetch_add(chunk, Ordering::Relaxed);
                 if start >= n {
                     break;
@@ -102,6 +106,9 @@ where
             loop {
                 // Claim max(remaining/(2T), min) items.
                 let start = {
+                    // ordering: Relaxed — claim-cursor CAS loop, same
+                    // protocol as the Dynamic arm above: the cursor
+                    // partitions indices, it does not publish data.
                     let mut cur = cursor.load(Ordering::Relaxed);
                     loop {
                         if cur >= n {
@@ -109,6 +116,8 @@ where
                         }
                         let remaining = n - cur;
                         let take = (remaining / (2 * threads)).max(min_chunk);
+                        // ordering: Relaxed/Relaxed — index-claim CAS,
+                        // no data published through the cursor.
                         match cursor.compare_exchange_weak(
                             cur,
                             cur + take,

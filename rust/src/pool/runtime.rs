@@ -101,6 +101,7 @@ fn wait<'a>(cv: &Condvar, guard: MutexGuard<'a, PoolState>) -> MutexGuard<'a, Po
 fn worker_loop(shared: Arc<PoolShared>, index: usize) {
     let mut last_epoch = 0u64;
     loop {
+        crate::sched_point!("pool.worker.park");
         let job = {
             let mut st = lock(&shared.state);
             loop {
@@ -115,6 +116,7 @@ fn worker_loop(shared: Arc<PoolShared>, index: usize) {
             last_epoch = st.epoch;
             st.job
         };
+        crate::sched_point!("pool.worker.wake");
         let Some(job) = job else { continue };
         if index >= job.participants {
             continue;
@@ -270,6 +272,9 @@ impl WorkerPool {
         }
 
         let region = self.region.lock().unwrap_or_else(|p| p.into_inner());
+        // ordering: Relaxed — cursor reset happens-before the workers
+        // see the new job via the `state` mutex + condvar below; the
+        // cursor itself never publishes data (see pool/mod.rs).
         self.shared.cursor.store(0, Ordering::Relaxed);
         let body_ref: &(dyn Fn(usize) + Sync) = &body;
         // SAFETY: lifetime erasure only. This function does not return
@@ -281,6 +286,7 @@ impl WorkerPool {
             )
         };
 
+        crate::sched_point!("pool.epoch.bump");
         let mut st = lock(&self.shared.state);
         st.epoch = st.epoch.wrapping_add(1);
         st.job = Some(Job {
@@ -408,10 +414,19 @@ mod tests {
 
     #[test]
     fn every_index_exactly_once_all_schedules_reusing_one_pool() {
-        for &threads in &[1usize, 2, 3, 8] {
+        // The wide-pool / large-n combinations are shrunk under Miri
+        // (interpreted threads are slow); the claim/park protocol under
+        // test is identical at the smaller sizes.
+        const THREADS: &[usize] = if cfg!(miri) { &[1, 2, 3] } else { &[1, 2, 3, 8] };
+        const SIZES: &[usize] = if cfg!(miri) {
+            &[0, 1, 7, 64]
+        } else {
+            &[0, 1, 7, 64, 500]
+        };
+        for &threads in THREADS {
             let pool = WorkerPool::new(threads).unwrap();
             // Many regions through the same pool: reuse is the point.
-            for &n in &[0usize, 1, 7, 64, 500] {
+            for &n in SIZES {
                 for &schedule in &ALL_SCHEDULES {
                     let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
                     let stats = pool.run(n, schedule, |i| {
@@ -511,11 +526,14 @@ mod tests {
     #[test]
     fn concurrent_callers_interleave_safely() {
         let pool = Arc::new(WorkerPool::new(3).unwrap());
+        // Fewer rounds under Miri; the caller-interleaving coverage
+        // comes from the four concurrent submitters, not round count.
+        const ROUNDS: usize = if cfg!(miri) { 3 } else { 20 };
         std::thread::scope(|scope| {
             for caller in 0..4usize {
                 let pool = Arc::clone(&pool);
                 scope.spawn(move || {
-                    for round in 0..20usize {
+                    for round in 0..ROUNDS {
                         let n = 16 + caller + round;
                         let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
                         pool.run(n, Schedule::Dynamic { chunk: 1 }, |i| {

@@ -6,14 +6,20 @@ pub enum Schedule {
     /// Self-scheduling from a shared atomic cursor, `chunk` iterations at
     /// a time — OpenMP `schedule(dynamic, chunk)`. The paper's choice
     /// (`schedule(dynamic)` = chunk 1).
-    Dynamic { chunk: usize },
+    Dynamic {
+        /// Iterations claimed per cursor fetch.
+        chunk: usize,
+    },
     /// One contiguous block per worker — OpenMP default `schedule(static)`.
     Static,
     /// Round-robin single iterations — OpenMP `schedule(static, 1)`.
     StaticInterleaved,
     /// Exponentially decreasing chunks with a floor — OpenMP
     /// `schedule(guided, min_chunk)`.
-    Guided { min_chunk: usize },
+    Guided {
+        /// Smallest chunk the decreasing schedule hands out.
+        min_chunk: usize,
+    },
 }
 
 impl Schedule {

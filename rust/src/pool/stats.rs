@@ -15,6 +15,7 @@ pub struct WorkerStats {
 /// Aggregated statistics for one parallel region.
 #[derive(Debug, Clone)]
 pub struct RegionStats {
+    /// Per-worker execution statistics, one entry per participant.
     pub workers: Vec<WorkerStats>,
     /// Wall-clock time of the whole region (including spawn/join).
     pub wall: Duration,

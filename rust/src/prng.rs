@@ -16,10 +16,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the generator.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -44,6 +46,7 @@ impl Xoshiro256 {
         Self { s }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]

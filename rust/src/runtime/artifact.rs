@@ -16,8 +16,11 @@ pub const DEFAULT_DIR: &str = "artifacts";
 /// Paths for one bandwidth's artifact pair.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArtifactPair {
+    /// Bandwidth the artifacts were compiled for.
     pub b: usize,
+    /// Path of the forward-DWT HLO artifact.
     pub forward: PathBuf,
+    /// Path of the inverse-DWT HLO artifact.
     pub inverse: PathBuf,
 }
 
@@ -28,6 +31,7 @@ pub struct ArtifactRegistry {
 }
 
 impl ArtifactRegistry {
+    /// Registry rooted at `dir`.
     pub fn new(dir: impl Into<PathBuf>) -> Self {
         Self { dir: dir.into() }
     }
@@ -39,6 +43,7 @@ impl ArtifactRegistry {
         Self::new(dir)
     }
 
+    /// The artifact directory.
     pub fn dir(&self) -> &Path {
         &self.dir
     }

@@ -88,6 +88,9 @@ mod backend {
         pub(super) fn literal(data: &[f64], dims: &[usize]) -> Result<xla::Literal> {
             let len: usize = dims.iter().product();
             debug_assert_eq!(data.len(), len);
+            // SAFETY: viewing `len` f64s as `len * 8` bytes; the source
+            // slice outlives the view (same scope), u8 has no alignment
+            // requirement, and every byte of an f64 is initialized.
             let bytes = unsafe {
                 std::slice::from_raw_parts(data.as_ptr() as *const u8, len * 8)
             };
@@ -160,6 +163,7 @@ impl XlaDwt {
         Self::load(reg.dir(), b)
     }
 
+    /// Bandwidth the loaded executables were compiled for.
     pub fn bandwidth(&self) -> usize {
         self.b
     }

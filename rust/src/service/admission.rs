@@ -78,12 +78,17 @@ impl Admission {
     /// job's cost and tenant slot are charged; the caller MUST later
     /// [`release`](Self::release) exactly once, when the job resolves.
     pub(crate) fn try_admit(&self, queued: usize, cost: usize, tenant: Option<u32>) -> Result<()> {
+        crate::sched_point!("admission.check");
         if let Some(cap) = self.max_queue {
             if queued >= cap {
                 return Err(self.overloaded(OverloadCause::QueueDepth, queued));
             }
         }
         if let Some(cap) = self.max_inflight_bytes {
+            // ordering: Acquire — pairs with the AcqRel RMWs below so a
+            // submitter observes the latest charge set. The cap check
+            // itself is serialized by the queue lock the caller holds;
+            // Acquire keeps the read from sinking below it.
             let cur = self.inflight_bytes.load(Ordering::Acquire);
             // Idle exception: never wedge on a single job larger than
             // the cap — only reject when other work is already charged.
@@ -101,13 +106,20 @@ impl Admission {
                 *slot += 1;
             }
         }
+        // ordering: AcqRel — charge must be visible to the next
+        // admission check (Release) and see prior releases (Acquire);
+        // pairs with `release` and the Acquire load above.
         self.inflight_bytes.fetch_add(cost, Ordering::AcqRel);
+        crate::sched_point!("admission.charge");
         Ok(())
     }
 
     /// Return a resolved job's charges (exactly once per admitted job).
     pub(crate) fn release(&self, cost: usize, tenant: Option<u32>) {
+        // ordering: AcqRel — pairs with `try_admit`'s charge so the
+        // freed capacity is visible to the next admission check.
         self.inflight_bytes.fetch_sub(cost, Ordering::AcqRel);
+        crate::sched_point!("admission.release");
         if self.tenant_quota.is_some() {
             if let Some(t) = tenant {
                 let mut tenants = lock_unpoisoned(&self.tenants);
@@ -124,6 +136,8 @@ impl Admission {
     /// Feed one completed job's wall time into the EWMA (α = 1/8).
     pub(crate) fn observe_job(&self, per_job: Duration) {
         let ns = per_job.as_nanos().min(u64::MAX as u128) as u64;
+        // ordering: Relaxed — lossy EWMA estimate; a racing update may
+        // drop one observation, which the hint consumers tolerate.
         let prev = self.ewma_job_ns.load(Ordering::Relaxed);
         let next = if prev == 0 { ns } else { prev - prev / 8 + ns / 8 };
         self.ewma_job_ns.store(next.max(1), Ordering::Relaxed);
@@ -132,6 +146,7 @@ impl Admission {
     /// Estimated backlog drain time: `queued × EWMA`, clamped to
     /// `[1ms, 5s]`; a fixed 10ms before any observation exists.
     pub(crate) fn retry_hint(&self, queued: usize) -> Duration {
+        // ordering: Relaxed — best-effort estimate read (see observe_job).
         let ewma = self.ewma_job_ns.load(Ordering::Relaxed);
         if ewma == 0 {
             return Duration::from_millis(10);
@@ -142,6 +157,8 @@ impl Admission {
 
     /// Current charged in-flight bytes (for the metrics snapshot).
     pub(crate) fn inflight_bytes(&self) -> usize {
+        // ordering: Acquire — metrics snapshot sees the latest AcqRel
+        // charge/release (pairs with try_admit/release).
         self.inflight_bytes.load(Ordering::Acquire)
     }
 

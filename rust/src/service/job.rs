@@ -35,9 +35,12 @@ pub enum Direction {
 /// priority into the led batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub enum JobPriority {
+    /// Drained only when no Normal/High work is pending.
     Low,
+    /// Default priority.
     #[default]
     Normal,
+    /// Drained before Normal/Low work.
     High,
 }
 
@@ -49,9 +52,13 @@ pub enum JobPriority {
 /// (bit-identical to per-job execution).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct JobSpec {
+    /// Analysis or synthesis.
     pub direction: Direction,
+    /// Transform bandwidth B.
     pub bandwidth: usize,
+    /// Plan options the job must execute under.
     pub options: PlanOptions,
+    /// Queue priority.
     pub priority: JobPriority,
     /// Admission-control tenant id. Only consulted when the service has
     /// a `tenant_quota` configured; `None` is exempt from quotas.
@@ -148,11 +155,14 @@ pub(crate) struct BatchKey {
 /// steady-state loop that allocates nothing per job.
 #[derive(Debug, Clone)]
 pub enum JobInput {
+    /// Grid samples (forward/analysis input).
     Grid(So3Grid),
+    /// SO(3) coefficients (inverse/synthesis input).
     Coeffs(So3Coeffs),
 }
 
 impl JobInput {
+    /// Bandwidth of the payload.
     pub fn bandwidth(&self) -> usize {
         match self {
             JobInput::Grid(g) => g.bandwidth(),
@@ -187,11 +197,14 @@ impl From<So3Coeffs> for JobInput {
 /// keep the steady-state path allocation-free.
 #[derive(Debug, Clone, PartialEq)]
 pub enum JobOutput {
+    /// SO(3) coefficients (forward/analysis output).
     Coeffs(So3Coeffs),
+    /// Grid samples (inverse/synthesis output).
     Grid(So3Grid),
 }
 
 impl JobOutput {
+    /// Bandwidth of the payload.
     pub fn bandwidth(&self) -> usize {
         match self {
             JobOutput::Coeffs(c) => c.bandwidth(),
@@ -215,6 +228,7 @@ impl JobOutput {
         }
     }
 
+    /// The coefficients, if this is a forward result.
     pub fn coeffs(&self) -> Option<&So3Coeffs> {
         match self {
             JobOutput::Coeffs(c) => Some(c),
@@ -222,6 +236,7 @@ impl JobOutput {
         }
     }
 
+    /// The grid, if this is an inverse result.
     pub fn grid(&self) -> Option<&So3Grid> {
         match self {
             JobOutput::Grid(g) => Some(g),
@@ -270,6 +285,9 @@ impl JobState {
         let latency = self.submitted.elapsed();
         let mut slot = lock(&self.slot);
         *slot = Some((result, latency));
+        // ordering: Release — publishes the filled slot above; pairs
+        // with the Acquire load in `is_done` so a lock-free poll that
+        // sees `done == true` also sees the result under the slot lock.
         self.done.store(true, Ordering::Release);
         self.cv.notify_all();
     }
@@ -280,6 +298,8 @@ impl JobState {
     }
 
     pub(crate) fn is_cancelled(&self) -> bool {
+        // ordering: Acquire — pairs with the Release store in `cancel`;
+        // the dispatcher's skim must not act on a reordered-early read.
         self.cancelled.load(Ordering::Acquire)
     }
 }
@@ -369,12 +389,17 @@ impl JobHandle {
         if self.is_done() {
             return false;
         }
+        // ordering: Release — pairs with the Acquire in `is_cancelled`
+        // (dispatcher skim); everything the caller did before cancelling
+        // is visible to whoever observes the flag.
         self.state.cancelled.store(true, Ordering::Release);
         true
     }
 
     /// Non-blocking completion check.
     pub fn is_done(&self) -> bool {
+        // ordering: Acquire — pairs with `fulfill`'s Release store; see
+        // the comment there.
         self.state.done.load(Ordering::Acquire)
     }
 }

@@ -64,12 +64,16 @@ impl LatencyHistogram {
 /// Admission rejections by cause (monotonic counters).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct RejectionCounts {
+    /// Rejections because the bounded queue was full.
     pub queue_depth: u64,
+    /// Rejections because `max_inflight_bytes` would be exceeded.
     pub inflight_bytes: u64,
+    /// Rejections because the tenant hit its quota.
     pub tenant_quota: u64,
 }
 
 impl RejectionCounts {
+    /// Total rejections across all causes.
     pub fn total(&self) -> u64 {
         self.queue_depth + self.inflight_bytes + self.tenant_quota
     }
@@ -79,10 +83,13 @@ impl RejectionCounts {
 /// upper bounds — within 2x; see the [module docs](self)).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BandwidthLatency {
+    /// Bandwidth this row describes.
     pub bandwidth: usize,
     /// Successfully completed jobs recorded at this bandwidth.
     pub jobs: u64,
+    /// Median queue-to-completion latency (log2-bucket bound).
     pub p50: Duration,
+    /// 99th-percentile queue-to-completion latency (log2-bucket bound).
     pub p99: Duration,
 }
 
@@ -95,6 +102,7 @@ pub struct ServiceMetrics {
     pub queue_depth: usize,
     /// Payload + output bytes of admitted, unresolved jobs.
     pub inflight_bytes: usize,
+    /// Admission rejections by cause.
     pub rejected: RejectionCounts,
     /// Jobs whose deadline expired while queued (never executed).
     pub deadline_expired: u64,
@@ -104,9 +112,13 @@ pub struct ServiceMetrics {
     pub shutdown_aborted: u64,
     /// Dispatcher panics recovered by the watchdog.
     pub dispatcher_restarts: u64,
+    /// Jobs admitted since startup.
     pub jobs_submitted: u64,
+    /// Jobs fulfilled (successfully or with an error).
     pub jobs_completed: u64,
+    /// Micro-batches executed.
     pub batches: u64,
+    /// Largest micro-batch executed so far.
     pub max_batch_size: usize,
     /// `jobs_completed / batches` (0 when no batch ran yet).
     pub mean_batch_size: f64,

@@ -132,6 +132,7 @@ impl Counters {
             OverloadCause::InflightBytes => &self.rejected_bytes,
             OverloadCause::TenantQuota => &self.rejected_tenant,
         };
+        // ordering: Relaxed — standalone rejection tally for metrics.
         counter.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -139,6 +140,7 @@ impl Counters {
 /// Aggregate serving counters (see [`So3Service::stats`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct ServiceStats {
+    /// Jobs admitted since startup.
     pub jobs_submitted: u64,
     /// Jobs fulfilled (successfully or with an error).
     pub jobs_completed: u64,
@@ -147,7 +149,9 @@ pub struct ServiceStats {
     pub batches: u64,
     /// Largest micro-batch executed so far.
     pub max_batch_size: usize,
+    /// Plan-registry counters.
     pub registry: RegistryStats,
+    /// Workspace/buffer-pool counters.
     pub buffers: WorkspacePoolStats,
 }
 
@@ -226,6 +230,7 @@ impl So3Service {
     pub fn submit(&self, spec: JobSpec, input: impl Into<JobInput>) -> Result<JobHandle> {
         let input = input.into();
         self.validate(&spec, &input)?;
+        crate::sched_point!("service.submit.start");
         let cost_bytes = job_cost_bytes(spec.bandwidth);
         let deadline_at = spec
             .deadline
@@ -252,6 +257,12 @@ impl So3Service {
             }
             // Count before the dispatcher can possibly complete the job,
             // so `submitted >= completed` holds for every observer.
+            // ordering: Relaxed — the increment is published to the
+            // dispatcher by the queue-lock release below; observers get
+            // the `submitted >= completed` invariant from the Release
+            // store in `finish_job` + Acquire loads (metrics/shutdown
+            // read `completed` FIRST, so seeing a completion implies
+            // seeing its submission).
             self.inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
             st.jobs.push_back(QueuedJob {
                 spec,
@@ -262,6 +273,7 @@ impl So3Service {
             });
         }
         self.inner.queue.cv.notify_all();
+        crate::sched_point!("service.submit.enqueued");
         Ok(handle)
     }
 
@@ -330,18 +342,29 @@ impl So3Service {
         }
     }
 
+    /// Return a grid buffer to the pool for reuse.
     pub fn recycle_grid(&self, g: So3Grid) {
         self.inner.buffers.checkin_grid(g);
     }
 
+    /// Return a coefficient buffer to the pool for reuse.
     pub fn recycle_coeffs(&self, c: So3Coeffs) {
         self.inner.buffers.checkin_coeffs(c);
     }
 
+    /// Aggregate serving counters (cheap; safe to poll).
     pub fn stats(&self) -> ServiceStats {
+        // ordering: Acquire on `completed` (pairs with the Release in
+        // `finish_job`), loaded BEFORE `submitted`: any completion we
+        // observe happens-after its own submission, so the snapshot can
+        // never report `completed > submitted`. The remaining counters
+        // are Relaxed independent tallies.
+        let jobs_completed = self.inner.stats.completed.load(Ordering::Acquire);
         ServiceStats {
+            // ordering: Relaxed — read after the Acquire above; the
+            // remaining counters are independent tallies.
             jobs_submitted: self.inner.stats.submitted.load(Ordering::Relaxed),
-            jobs_completed: self.inner.stats.completed.load(Ordering::Relaxed),
+            jobs_completed,
             batches: self.inner.stats.batches.load(Ordering::Relaxed),
             max_batch_size: self.inner.stats.max_batch.load(Ordering::Relaxed),
             registry: self.inner.registry.stats(),
@@ -355,7 +378,11 @@ impl So3Service {
     pub fn metrics(&self) -> ServiceMetrics {
         let inner = &self.inner;
         let queue_depth = lock(&inner.queue.state).jobs.len();
-        let completed = inner.stats.completed.load(Ordering::Relaxed);
+        // ordering: Acquire — pairs with the Release in `finish_job`;
+        // loaded before `submitted` below so the snapshot never shows
+        // `completed > submitted` (see `stats`).
+        let completed = inner.stats.completed.load(Ordering::Acquire);
+        // ordering: Relaxed — independent tally.
         let batches = inner.stats.batches.load(Ordering::Relaxed);
         let per_bandwidth = {
             let lat = lock(&inner.latencies);
@@ -375,14 +402,19 @@ impl So3Service {
             queue_depth,
             inflight_bytes: inner.admission.inflight_bytes(),
             rejected: RejectionCounts {
+                // ordering: Relaxed — independent tallies, not a
+                // consistent cut across causes.
                 queue_depth: inner.stats.rejected_queue.load(Ordering::Relaxed),
                 inflight_bytes: inner.stats.rejected_bytes.load(Ordering::Relaxed),
                 tenant_quota: inner.stats.rejected_tenant.load(Ordering::Relaxed),
             },
+            // ordering: Relaxed — independent tallies (see above).
             deadline_expired: inner.stats.deadline_expired.load(Ordering::Relaxed),
             cancelled: inner.stats.cancelled.load(Ordering::Relaxed),
             shutdown_aborted: inner.stats.shutdown_aborted.load(Ordering::Relaxed),
             dispatcher_restarts: inner.stats.dispatcher_restarts.load(Ordering::Relaxed),
+            // ordering: Relaxed — ordered AFTER the Acquire `completed`
+            // load above, which is what keeps submitted >= completed.
             jobs_submitted: inner.stats.submitted.load(Ordering::Relaxed),
             jobs_completed: completed,
             batches,
@@ -407,7 +439,10 @@ impl So3Service {
     /// however long that takes.
     pub fn shutdown(mut self, drain: Duration) -> ShutdownReport {
         let inner = Arc::clone(&self.inner);
-        let completed_at_entry = inner.stats.completed.load(Ordering::Relaxed);
+        // ordering: Acquire — pairs with the Release in `finish_job` so
+        // the drained-count baseline includes every job whose
+        // fulfillment we can observe.
+        let completed_at_entry = inner.stats.completed.load(Ordering::Acquire);
         {
             let mut st = lock(&inner.queue.state);
             st.shutdown = true;
@@ -417,8 +452,15 @@ impl So3Service {
         let deadline = Instant::now().checked_add(drain);
         let mut aborted = 0u64;
         loop {
-            let outstanding = inner.stats.submitted.load(Ordering::Relaxed)
-                - inner.stats.completed.load(Ordering::Relaxed);
+            crate::sched_point!("service.shutdown.drain");
+            // ordering: Acquire on `completed`, loaded FIRST: every
+            // completion observed happens-after its own submission
+            // (Release in `finish_job` + queue-lock handoff), so the
+            // subsequent `submitted` read is >= it and the subtraction
+            // cannot wrap. Admission is closed, so `submitted` can only
+            // grow by jobs this loop will still observe.
+            let completed_now = inner.stats.completed.load(Ordering::Acquire);
+            let outstanding = inner.stats.submitted.load(Ordering::Relaxed) - completed_now;
             if outstanding == 0 {
                 break;
             }
@@ -432,6 +474,7 @@ impl So3Service {
                 };
                 for job in leftovers {
                     recycle_input(&inner, job.input);
+                    // ordering: Relaxed — standalone tally for metrics.
                     inner.stats.shutdown_aborted.fetch_add(1, Ordering::Relaxed);
                     aborted += 1;
                     let err = Err(Error::ShutdownDrain);
@@ -444,7 +487,9 @@ impl So3Service {
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
-        let completed_total = inner.stats.completed.load(Ordering::Relaxed);
+        // ordering: Acquire — see `completed_at_entry`; the dispatcher
+        // has joined, so this is the final count.
+        let completed_total = inner.stats.completed.load(Ordering::Acquire);
         ShutdownReport {
             drained: (completed_total - completed_at_entry).saturating_sub(aborted),
             aborted,
@@ -458,7 +503,9 @@ impl So3Service {
 /// deadline hit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct ShutdownReport {
+    /// Jobs that ran to completion during the drain window.
     pub drained: u64,
+    /// Jobs aborted with `Error::ShutdownDrain` at the deadline.
     pub aborted: u64,
 }
 
@@ -639,6 +686,7 @@ impl So3ServiceBuilder {
         self
     }
 
+    /// Build the service (spawns the pool and dispatcher).
     pub fn build(self) -> Result<So3Service> {
         let threads = match self.threads {
             Some(0) => return Err(Error::InvalidThreads(0)),
@@ -699,6 +747,9 @@ impl So3ServiceBuilder {
                     if run.is_ok() {
                         break;
                     }
+                    crate::sched_point!("service.watchdog.restart");
+                    // ordering: Relaxed — standalone tally; the queue
+                    // itself survives the unwind under its own mutex.
                     dispatcher_inner
                         .stats
                         .dispatcher_restarts
@@ -719,6 +770,7 @@ impl So3ServiceBuilder {
 
 fn dispatcher_loop(inner: &ServiceInner) {
     while let Some(batch) = next_batch(inner) {
+        crate::sched_point!("dispatch.batch.start");
         execute_batch(inner, batch);
     }
 }
@@ -806,6 +858,7 @@ fn next_batch(inner: &ServiceInner) -> Option<Vec<QueuedJob>> {
         if !dead.is_empty() {
             // Resolve outside the queue lock: fulfill wakes waiters.
             drop(st);
+            crate::sched_point!("dispatch.dead.skim");
             for (job, reason) in dead {
                 resolve_dead(inner, job, reason);
             }
@@ -838,10 +891,12 @@ fn resolve_dead(inner: &ServiceInner, job: QueuedJob, reason: DeadReason) {
     recycle_input(inner, job.input);
     let err = match reason {
         DeadReason::Cancelled => {
+            // ordering: Relaxed — standalone tally for metrics.
             inner.stats.cancelled.fetch_add(1, Ordering::Relaxed);
             Error::Cancelled
         }
         DeadReason::Expired => {
+            // ordering: Relaxed — standalone tally for metrics.
             inner.stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
             Error::DeadlineExceeded {
                 deadline: job
@@ -858,6 +913,7 @@ fn resolve_dead(inner: &ServiceInner, job: QueuedJob, reason: DeadReason) {
 fn execute_batch(inner: &ServiceInner, batch: Vec<QueuedJob>) {
     let spec = batch[0].spec;
     let n = batch.len() as u32;
+    // ordering: Relaxed — batch statistics; independent tallies.
     inner.stats.batches.fetch_add(1, Ordering::Relaxed);
     inner
         .stats
@@ -884,6 +940,7 @@ fn execute_batch(inner: &ServiceInner, batch: Vec<QueuedJob>) {
     let (metas, results) = run_batch(inner, &plan, ws, batch);
     inner.admission.observe_job(wall.elapsed() / n);
     debug_assert_eq!(metas.len(), results.len());
+    crate::sched_point!("dispatch.batch.finish");
     for (meta, result) in metas.iter().zip(results) {
         inner.finish_job(&meta.spec, &meta.state, meta.cost_bytes, result);
     }
@@ -907,6 +964,7 @@ impl ServiceInner {
         cost_bytes: usize,
         result: Result<JobOutput>,
     ) {
+        crate::sched_point!("service.finish_job");
         self.admission.release(cost_bytes, spec.tenant);
         if result.is_ok() {
             let mut latencies = lock(&self.latencies);
@@ -917,7 +975,12 @@ impl ServiceInner {
         }
         // Count before waking the waiter: a caller whose `wait` just
         // returned must observe its own job in `jobs_completed`.
-        self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        // ordering: Release — pairs with the Acquire loads in
+        // `stats`/`metrics`/`shutdown`: an observer that sees this
+        // completion also sees the submission that preceded it
+        // (queue-lock handoff), keeping `submitted >= completed` in
+        // every snapshot.
+        self.stats.completed.fetch_add(1, Ordering::Release);
         state.fulfill(result);
     }
 }

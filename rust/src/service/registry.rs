@@ -108,7 +108,9 @@ impl PlanOptions {
 /// Registry key: one cached plan per `(bandwidth, options)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PlanKey {
+    /// Transform bandwidth B.
     pub bandwidth: usize,
+    /// Plan options baked into the cached plan.
     pub options: PlanOptions,
 }
 
@@ -129,8 +131,11 @@ pub struct RegistryStats {
     pub plans: usize,
     /// Sum of `table_bytes()` over the cached plans.
     pub table_bytes: usize,
+    /// Lookups served from cache.
     pub hits: u64,
+    /// Lookups that triggered (or waited on) a build.
     pub misses: u64,
+    /// Plans evicted by the LRU capacity policy.
     pub evictions: u64,
     /// Builds that returned an error (monotonic).
     pub build_failures: u64,
@@ -214,11 +219,15 @@ impl PlanRegistry {
     /// of an equal key receives the **same** `Arc` (until eviction);
     /// concurrent cold requests for one key share a single build.
     pub fn get(&self, key: PlanKey) -> Result<Arc<So3Plan>> {
+        // ordering: Relaxed — the LRU clock only needs uniqueness and
+        // rough monotonicity per caller; ticks are compared, never used
+        // to publish data.
         let tick = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
         // Fast path: hits touch only the read lock.
         if let Some(plan) = self.lookup(key, tick) {
             return Ok(plan);
         }
+        crate::sched_point!("registry.get.miss");
         // Single-flight claim: leave the loop only as the builder of
         // `key`. Everyone else parks on the condvar until the in-flight
         // build resolves, then re-checks the cache. The re-check happens
@@ -248,6 +257,7 @@ impl PlanRegistry {
                 .wait(building)
                 .unwrap_or_else(|p| p.into_inner());
         }
+        crate::sched_point!("registry.build.claim");
         // Build outside every lock: table construction is the expensive
         // part, and a slow build must not block hits on other keys. The
         // marker comes off (and waiters wake) on EVERY exit, including a
@@ -269,6 +279,8 @@ impl PlanRegistry {
                     !map.contains_key(&key),
                     "single-flight guarantees one builder"
                 );
+                // ordering: Relaxed — statistic counter; the inserted
+                // entry is published by the plans write lock.
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 map.insert(
                     key,
@@ -283,6 +295,7 @@ impl PlanRegistry {
                 }
                 drop(map);
                 self.clear_failure(key);
+                crate::sched_point!("registry.build.publish");
                 Ok(plan)
             }
             Ok(Err(e)) => {
@@ -307,6 +320,8 @@ impl PlanRegistry {
     /// disables the caching (every miss retries the build).
     pub fn set_build_backoff(&self, base: Duration, cap: Duration) {
         let to_ms = |d: Duration| d.as_millis().min(u64::MAX as u128) as u64;
+        // ordering: Relaxed — tuning knobs read at the next failure; a
+        // racing reader using the previous value is acceptable.
         self.backoff_base_ms.store(to_ms(base), Ordering::Relaxed);
         self.backoff_cap_ms.store(to_ms(cap), Ordering::Relaxed);
     }
@@ -328,6 +343,9 @@ impl PlanRegistry {
     }
 
     fn record_failure(&self, key: PlanKey, e: &Error) {
+        // ordering: Relaxed — statistic counter + knob reads (see
+        // `set_build_backoff`); the failure record itself is published
+        // under the failures mutex below.
         self.build_failures.fetch_add(1, Ordering::Relaxed);
         let base = self.backoff_base_ms.load(Ordering::Relaxed);
         let cap = self.backoff_cap_ms.load(Ordering::Relaxed);
@@ -352,7 +370,13 @@ impl PlanRegistry {
     fn lookup(&self, key: PlanKey, tick: u64) -> Option<Arc<So3Plan>> {
         let map = read(&self.plans);
         let e = map.get(&key)?;
-        e.last_used.store(tick, Ordering::Relaxed);
+        // ordering: Release — pairs with the Acquire load in
+        // `evict_lru`: an evictor that takes the plans *write* lock
+        // already happens-after this read-locked touch, but the
+        // release/acquire pair makes the tick publication explicit
+        // rather than leaning on the RwLock upgrade for it.
+        e.last_used.store(tick, Ordering::Release);
+        // ordering: Relaxed — statistic counter.
         self.hits.fetch_add(1, Ordering::Relaxed);
         Some(Arc::clone(&e.plan))
     }
@@ -396,11 +420,15 @@ impl PlanRegistry {
             let victim = map
                 .iter()
                 .filter(|(k, _)| **k != keep)
-                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                // ordering: Acquire — pairs with the Release store in
+                // `lookup` so the evictor ranks entries by the freshest
+                // published touch ticks.
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Acquire))
                 .map(|(k, _)| *k);
             match victim {
                 Some(k) => {
                     map.remove(&k);
+                    // ordering: Relaxed — statistic counter.
                     evictions.fetch_add(1, Ordering::Relaxed);
                 }
                 None => return,
@@ -413,15 +441,20 @@ impl PlanRegistry {
         read(&self.plans).len()
     }
 
+    /// Whether no plan is currently cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Cache counters and current footprint.
     pub fn stats(&self) -> RegistryStats {
         let map = read(&self.plans);
         RegistryStats {
             plans: map.len(),
             table_bytes: map.values().map(|e| e.bytes).sum(),
+            // ordering: Relaxed — statistics snapshot; counters are
+            // independent tallies, not a consistent cut (hits may lead
+            // misses by an in-flight lookup).
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),

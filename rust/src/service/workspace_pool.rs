@@ -62,11 +62,17 @@ struct FreeLists {
 /// load they stop growing once the pool warmed up.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct WorkspacePoolStats {
+    /// Workspaces ever constructed (high-watermark, not current).
     pub workspaces_created: usize,
+    /// Grid buffers ever constructed.
     pub grids_created: usize,
+    /// Coefficient buffers ever constructed.
     pub coeffs_created: usize,
+    /// Workspaces currently checked in.
     pub free_workspaces: usize,
+    /// Grid buffers currently checked in.
     pub free_grids: usize,
+    /// Coefficient buffers currently checked in.
     pub free_coeffs: usize,
 }
 
@@ -80,6 +86,7 @@ pub struct WorkspacePool {
 }
 
 impl WorkspacePool {
+    /// An empty pool.
     pub fn new() -> Self {
         Self::default()
     }
@@ -91,6 +98,7 @@ impl WorkspacePool {
             return Ok(ws);
         }
         let ws = Workspace::new(b)?;
+        // ordering: Relaxed — standalone high-watermark statistic.
         self.workspaces_created.fetch_add(1, Ordering::Relaxed);
         Ok(ws)
     }
@@ -107,10 +115,12 @@ impl WorkspacePool {
             return Ok(g);
         }
         let g = So3Grid::zeros(b)?;
+        // ordering: Relaxed — standalone high-watermark statistic.
         self.grids_created.fetch_add(1, Ordering::Relaxed);
         Ok(g)
     }
 
+    /// Return a grid buffer for reuse.
     pub fn checkin_grid(&self, g: So3Grid) {
         let mut free = lock(&self.free);
         push_capped(free.grids.entry(g.bandwidth()).or_default(), g);
@@ -125,18 +135,23 @@ impl WorkspacePool {
             return Ok(c);
         }
         let c = So3Coeffs::zeros(b);
+        // ordering: Relaxed — standalone high-watermark statistic.
         self.coeffs_created.fetch_add(1, Ordering::Relaxed);
         Ok(c)
     }
 
+    /// Return a coefficient buffer for reuse.
     pub fn checkin_coeffs(&self, c: So3Coeffs) {
         let mut free = lock(&self.free);
         push_capped(free.coeffs.entry(c.bandwidth()).or_default(), c);
     }
 
+    /// Construction and free-list counters.
     pub fn stats(&self) -> WorkspacePoolStats {
         let free = lock(&self.free);
         WorkspacePoolStats {
+            // ordering: Relaxed — statistics snapshot; each counter is
+            // an independent tally, not a consistent cut.
             workspaces_created: self.workspaces_created.load(Ordering::Relaxed),
             grids_created: self.grids_created.load(Ordering::Relaxed),
             coeffs_created: self.coeffs_created.load(Ordering::Relaxed),

@@ -115,19 +115,25 @@ impl SimdIsa {
 }
 
 /// Does this host support the AVX2+FMA kernels?
+///
+/// Always `false` under Miri: the interpreter does not model the vector
+/// intrinsics, so detection reports "unsupported" and every dispatch
+/// (including the parity tests, which gate on this) takes the scalar
+/// path instead of hitting an unsupported-intrinsic error.
 pub fn avx2_supported() -> bool {
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     let ok = std::arch::is_x86_feature_detected!("avx2")
         && std::arch::is_x86_feature_detected!("fma");
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
     let ok = false;
     ok
 }
 
 /// Does this host support the NEON kernels? (NEON is baseline on
-/// aarch64, so this is a compile-time fact.)
+/// aarch64, so this is a compile-time fact — except under Miri, which
+/// does not model the intrinsics; see [`avx2_supported`].)
 pub fn neon_supported() -> bool {
-    cfg!(target_arch = "aarch64")
+    cfg!(all(target_arch = "aarch64", not(miri)))
 }
 
 /// Pure detection logic: the ISA `Auto` resolves to, given whether the

@@ -23,11 +23,14 @@ use crate::so3::coeffs::So3Coeffs;
 /// Which direction of the transform is being modeled.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TransformKind {
+    /// Analysis (FSOFT).
     Forward,
+    /// Synthesis (iFSOFT).
     Inverse,
 }
 
 impl TransformKind {
+    /// Short label for tables and plots.
     pub fn label(&self) -> &'static str {
         match self {
             TransformKind::Forward => "fsoft",

@@ -19,7 +19,9 @@ pub struct RegionSpec {
 /// serial time between them.
 #[derive(Debug, Clone)]
 pub struct TransformSpec {
+    /// The parallel regions of the transform, in order.
     pub regions: Vec<RegionSpec>,
+    /// Serial (non-parallelizable) seconds outside the regions.
     pub serial: f64,
     /// Human label ("fsoft b=128" etc.) for reports.
     pub label: String,

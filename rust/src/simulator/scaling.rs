@@ -6,9 +6,13 @@ use crate::simulator::machine::{simulate_transform, MachineParams, TransformSpec
 /// One point of a scaling curve.
 #[derive(Debug, Clone, Copy)]
 pub struct ScalingPoint {
+    /// Core count of this point.
     pub cores: usize,
+    /// Simulated (or measured) seconds.
     pub seconds: f64,
+    /// Speedup relative to one core.
     pub speedup: f64,
+    /// Parallel efficiency (`speedup / cores`).
     pub efficiency: f64,
 }
 
@@ -45,9 +49,13 @@ pub fn paper_core_counts() -> Vec<usize> {
 /// One bandwidth's scaling series for one transform direction.
 #[derive(Debug, Clone)]
 pub struct FigureSeries {
+    /// Transform bandwidth B.
     pub b: usize,
+    /// Forward or inverse transform.
     pub kind: crate::simulator::cost::TransformKind,
+    /// Whether the points are measured (vs. simulated).
     pub measured: bool,
+    /// The scaling curve.
     pub points: Vec<ScalingPoint>,
 }
 

@@ -74,16 +74,19 @@ impl So3Coeffs {
         Ok(Self { b, data })
     }
 
+    /// Bandwidth B of this coefficient set.
     #[inline]
     pub fn bandwidth(&self) -> usize {
         self.b
     }
 
+    /// Total number of stored coefficients.
     #[inline]
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the storage is empty.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
@@ -108,6 +111,7 @@ impl So3Coeffs {
         self.data[flat_index(l, m, mp)]
     }
 
+    /// Mutable coefficient `f(l, m, m')`.
     #[inline]
     pub fn at_mut(&mut self, l: usize, m: i64, mp: i64) -> &mut Complex64 {
         &mut self.data[flat_index(l, m, mp)]
@@ -126,14 +130,17 @@ impl So3Coeffs {
         Ok(())
     }
 
+    /// Flat coefficient storage.
     pub fn as_slice(&self) -> &[Complex64] {
         &self.data
     }
 
+    /// Flat mutable coefficient storage.
     pub fn as_mut_slice(&mut self) -> &mut [Complex64] {
         &mut self.data
     }
 
+    /// The flat storage, consuming `self`.
     pub fn into_vec(self) -> Vec<Complex64> {
         self.data
     }

@@ -7,18 +7,23 @@ use std::ops::Mul;
 /// A 3×3 rotation matrix (row-major).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Rotation {
+    /// Row-major 3×3 rotation matrix.
     pub m: [[f64; 3]; 3],
 }
 
 /// z-y-z Euler angles: α, γ ∈ [0, 2π), β ∈ [0, π].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EulerZyz {
+    /// First z-rotation angle α ∈ [0, 2π).
     pub alpha: f64,
+    /// y-rotation angle β ∈ [0, π].
     pub beta: f64,
+    /// Second z-rotation angle γ ∈ [0, 2π).
     pub gamma: f64,
 }
 
 impl Rotation {
+    /// The identity rotation.
     pub const IDENTITY: Rotation = Rotation {
         m: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]],
     };
@@ -158,6 +163,7 @@ impl Mul for Rotation {
 }
 
 impl EulerZyz {
+    /// Euler angles in zyz convention.
     pub fn new(alpha: f64, beta: f64, gamma: f64) -> Self {
         Self { alpha, beta, gamma }
     }

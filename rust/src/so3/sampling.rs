@@ -15,13 +15,18 @@ use crate::so3::rotation::EulerZyz;
 /// Grid angles for bandwidth B.
 #[derive(Debug, Clone)]
 pub struct GridAngles {
+    /// Bandwidth B of the grid.
     pub b: usize,
+    /// The 2B equispaced α samples.
     pub alphas: Vec<f64>,
+    /// The 2B Chebyshev β samples.
     pub betas: Vec<f64>,
+    /// The 2B equispaced γ samples.
     pub gammas: Vec<f64>,
 }
 
 impl GridAngles {
+    /// Sampling angles for bandwidth `b` (paper Eq. 9).
     pub fn new(b: usize) -> Result<Self> {
         if b == 0 {
             return Err(Error::InvalidBandwidth(b));
@@ -76,6 +81,7 @@ impl So3Grid {
         Ok(Self { b, data })
     }
 
+    /// Bandwidth B of this grid.
     #[inline]
     pub fn bandwidth(&self) -> usize {
         self.b
@@ -87,16 +93,19 @@ impl So3Grid {
         2 * self.b
     }
 
+    /// Total number of samples (`(2B)³`).
     #[inline]
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the grid is empty.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Flat index of sample `(i, j, k)` = (α, β, γ).
     #[inline]
     pub fn flat_index(&self, i: usize, j: usize, k: usize) -> usize {
         let n = self.edge();
@@ -110,6 +119,7 @@ impl So3Grid {
         self.data[self.flat_index(i, j, k)]
     }
 
+    /// Store sample `(i, j, k)`.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, k: usize, v: Complex64) {
         let idx = self.flat_index(i, j, k);
@@ -122,19 +132,23 @@ impl So3Grid {
         &self.data[j * n * n..(j + 1) * n * n]
     }
 
+    /// Mutable α×γ plane at β index `j`.
     pub fn slice_mut(&mut self, j: usize) -> &mut [Complex64] {
         let n = self.edge();
         &mut self.data[j * n * n..(j + 1) * n * n]
     }
 
+    /// Flat sample storage.
     pub fn as_slice(&self) -> &[Complex64] {
         &self.data
     }
 
+    /// Flat mutable sample storage.
     pub fn as_mut_slice(&mut self) -> &mut [Complex64] {
         &mut self.data
     }
 
+    /// The flat storage, consuming `self`.
     pub fn into_vec(self) -> Vec<Complex64> {
         self.data
     }

@@ -29,11 +29,17 @@ use crate::xprec::Dd;
 
 /// Scalar abstraction so the recurrence can run in f64 or double-double.
 pub trait WScalar: Copy {
+    /// Widen from `f64`.
     fn from_f64(x: f64) -> Self;
+    /// Round back to `f64`.
     fn to_f64(self) -> f64;
+    /// Sum.
     fn add(self, o: Self) -> Self;
+    /// Difference.
     fn sub(self, o: Self) -> Self;
+    /// Product.
     fn mul(self, o: Self) -> Self;
+    /// Product with an `f64` scale.
     fn mul_f64(self, s: f64) -> Self;
 }
 
@@ -94,7 +100,9 @@ impl WScalar for Dd {
 /// Reduced order pair: m ≥ |m'| ≥ 0 plus the sign of the reduction.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ReducedOrders {
+    /// Reduced order μ.
     pub m: i64,
+    /// Reduced order μ'.
     pub mp: i64,
     /// +1 or −1; `d(l, m_orig, mp_orig) = sign · d(l, m, mp)` for all l.
     pub sign: f64,
@@ -149,8 +157,11 @@ pub fn d_seed(m: i64, mp: i64, beta: f64) -> f64 {
 /// `d_{l+1} = (a1·cosβ + a2)·d_l − a3·d_{l−1}`.
 #[derive(Debug, Clone, Copy)]
 pub struct StepCoeffs {
+    /// Coefficient of `x · d_{l-1}` in the three-term recurrence.
     pub a1: f64,
+    /// Coefficient of `d_{l-1}` in the three-term recurrence.
     pub a2: f64,
+    /// Coefficient of `d_{l-2}` in the three-term recurrence.
     pub a3: f64,
 }
 
@@ -261,10 +272,12 @@ impl<R: WScalar> WignerRowStepper<R> {
 /// below l₀ are zero.
 #[derive(Debug, Clone)]
 pub struct WignerRowBuf {
+    /// Row values, one per β sample.
     pub values: Vec<f64>,
 }
 
 impl WignerRowBuf {
+    /// Row buffer for bandwidth `b` (2B samples).
     pub fn new(b: usize) -> Self {
         Self {
             values: vec![0.0; b],

@@ -84,6 +84,7 @@ pub struct Prop {
 }
 
 impl Prop {
+    /// Start a named property check.
     pub fn new(name: &'static str) -> Self {
         // Honor SO3FT_PROP_SEED for replaying failures.
         let seed = std::env::var("SO3FT_PROP_SEED")

@@ -44,6 +44,7 @@ use crate::transform::plan::{So3Plan, Transform};
     since = "0.6.0",
     note = "use So3Plan (explicit planning) or So3Service (serving front door)"
 )]
+/// Deprecated pre-planner transform handle (facade over `So3Plan`).
 pub struct So3Fft {
     plan: So3Plan,
 }
@@ -87,6 +88,7 @@ impl So3Fft {
         self.plan.inverse_with_stats(coeffs)
     }
 
+    /// Bandwidth this handle was built for.
     pub fn bandwidth(&self) -> usize {
         self.plan.bandwidth()
     }
@@ -137,6 +139,7 @@ impl Transform for So3Fft {
     since = "0.6.0",
     note = "use So3PlanBuilder (explicit planning) or So3ServiceBuilder (serving front door)"
 )]
+/// Builder for the deprecated [`So3Fft`] handle.
 #[allow(deprecated)]
 pub struct So3FftBuilder {
     b: usize,
@@ -195,6 +198,7 @@ impl So3FftBuilder {
         self
     }
 
+    /// Build the deprecated handle.
     pub fn build(self) -> Result<So3Fft> {
         // Historical behavior: any bandwidth >= 1 is accepted here (the
         // strict power-of-two validation lives on So3PlanBuilder).

@@ -74,6 +74,7 @@ pub enum BackendKind {
 /// caller-owned outputs and workspace. The allocating `forward`/`inverse`
 /// conveniences are provided for one-off use.
 pub trait Transform: Send + Sync {
+    /// Bandwidth this transform was built for.
     fn bandwidth(&self) -> usize;
 
     /// Analysis (FSOFT) into caller-owned storage.
@@ -170,6 +171,7 @@ impl So3Plan {
         }
     }
 
+    /// Bandwidth this plan was built for.
     #[inline]
     pub fn bandwidth(&self) -> usize {
         self.exec.bandwidth()
@@ -198,6 +200,7 @@ impl So3Plan {
         &self.exec
     }
 
+    /// The executor configuration the plan resolved to.
     pub fn config(&self) -> &ExecutorConfig {
         self.exec.config()
     }
@@ -565,6 +568,7 @@ impl So3PlanBuilder {
         self
     }
 
+    /// Build the plan (validates bandwidth and configuration).
     pub fn build(self) -> Result<So3Plan> {
         if self.b == 0 {
             return Err(Error::InvalidBandwidth(0));

@@ -80,6 +80,7 @@ impl<T: Pod> AlignedVec<T> {
         self.len = 0;
     }
 
+    /// The elements as a plain slice.
     pub fn as_slice(&self) -> &[T] {
         debug_assert!(std::mem::align_of::<T>() <= 64);
         let ptr = self.chunks.as_ptr() as *const T;
@@ -94,6 +95,7 @@ impl<T: Pod> AlignedVec<T> {
         unsafe { std::slice::from_raw_parts(ptr, self.len) }
     }
 
+    /// The elements as a plain mutable slice.
     pub fn as_mut_slice(&mut self) -> &mut [T] {
         debug_assert!(std::mem::align_of::<T>() <= 64);
         let ptr = self.chunks.as_mut_ptr() as *mut T;
@@ -175,10 +177,18 @@ pub struct SyncUnsafeSlice<'a, T> {
     data: &'a [UnsafeCell<T>],
 }
 
+// SAFETY: the slice is only a view over `&[UnsafeCell<T>]`; sending or
+// sharing it across threads is sound because every access goes through
+// the `unsafe fn` surface below, whose contract (disjoint index sets per
+// worker, enforced by the coordinator's work partition) rules out
+// concurrent aliasing. `T: Send + Sync` bounds keep the element type
+// itself thread-safe.
 unsafe impl<'a, T: Send + Sync> Send for SyncUnsafeSlice<'a, T> {}
+// SAFETY: see the Send impl above — same disjointness contract.
 unsafe impl<'a, T: Send + Sync> Sync for SyncUnsafeSlice<'a, T> {}
 
 impl<'a, T> SyncUnsafeSlice<'a, T> {
+    /// Wrap a mutable slice for disjoint concurrent writes.
     pub fn new(slice: &'a mut [T]) -> Self {
         // SAFETY: UnsafeCell<T> has the same layout as T.
         let data = unsafe {
@@ -187,11 +197,13 @@ impl<'a, T> SyncUnsafeSlice<'a, T> {
         Self { data }
     }
 
+    /// Number of elements.
     #[inline]
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the slice is empty.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
@@ -205,7 +217,10 @@ impl<'a, T> SyncUnsafeSlice<'a, T> {
     #[inline]
     pub unsafe fn write(&self, index: usize, value: T) {
         debug_assert!(index < self.data.len());
-        *self.data[index].get() = value;
+        // SAFETY: caller guarantees exclusive access to `index` (see
+        // `# Safety` above), so this write cannot alias a concurrent
+        // read or write of the same element.
+        unsafe { *self.data[index].get() = value };
     }
 
     /// Read the value at `index`.
@@ -218,7 +233,9 @@ impl<'a, T> SyncUnsafeSlice<'a, T> {
         T: Copy,
     {
         debug_assert!(index < self.data.len());
-        *self.data[index].get()
+        // SAFETY: caller guarantees no concurrent writer for `index`
+        // (see `# Safety` above), so the element is readable.
+        unsafe { *self.data[index].get() }
     }
 
     /// Raw pointer to element `index` (for slice-at-a-time writes).
@@ -363,23 +380,29 @@ pub mod ledger {
 
     /// Charge `bytes` to the ledger, updating the high-water mark.
     pub fn charge(bytes: usize) {
+        // ordering: Relaxed — monotonic gauge counters; readers only
+        // need an eventually-consistent byte total, no data is
+        // published through these atomics.
         let now = CURRENT.fetch_add(bytes, Ordering::Relaxed) + bytes;
         PEAK.fetch_max(now, Ordering::Relaxed);
     }
 
     /// Discharge `bytes` previously charged.
     pub fn discharge(bytes: usize) {
+        // ordering: Relaxed — gauge counter, see `charge`.
         CURRENT.fetch_sub(bytes, Ordering::Relaxed);
     }
 
     /// Bytes currently charged across the process.
     pub fn current_bytes() -> usize {
+        // ordering: Relaxed — best-effort gauge read, see `charge`.
         CURRENT.load(Ordering::Relaxed)
     }
 
     /// High-water mark since the last [`rebase_peak`] (never below the
     /// current charge).
     pub fn peak_bytes() -> usize {
+        // ordering: Relaxed — best-effort gauge read, see `charge`.
         PEAK.load(Ordering::Relaxed).max(current_bytes())
     }
 
@@ -388,6 +411,9 @@ pub mod ledger {
     /// covers that run's steady state rather than all of process
     /// history.
     pub fn rebase_peak() {
+        // ordering: Relaxed — gauge reset; concurrent charges may land
+        // on either side of the rebase, which the best-effort contract
+        // of this module (see module docs) explicitly allows.
         PEAK.store(CURRENT.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
@@ -399,11 +425,13 @@ pub mod ledger {
     }
 
     impl LedgerSlot {
+        /// Record a ledger charge of `bytes` (charged on construction).
         pub fn new(bytes: usize) -> Self {
             charge(bytes);
             Self { bytes }
         }
 
+        /// The charged size in bytes.
         pub fn bytes(&self) -> usize {
             self.bytes
         }
@@ -485,8 +513,11 @@ mod tests {
             let b = ln_gamma(n as f64 + 1.0);
             assert!((a - b).abs() < 1e-8 * b.abs().max(1.0));
         }
-        // Recurrence ln((n+1)!) = ln(n!) + ln(n+1).
-        for n in 0..1024u64 {
+        // Recurrence ln((n+1)!) = ln(n!) + ln(n+1). Miri interprets
+        // ~1000x slower than native; a shorter sweep still covers the
+        // small-n table edge and the asymptotic branch.
+        const RECURRENCE_SWEEP: u64 = if cfg!(miri) { 64 } else { 1024 };
+        for n in 0..RECURRENCE_SWEEP {
             let lhs = ln_factorial(n + 1);
             let rhs = ln_factorial(n) + ((n + 1) as f64).ln();
             assert!((lhs - rhs).abs() < 1e-8 * rhs.abs().max(1.0));
@@ -630,14 +661,17 @@ mod tests {
 
     #[test]
     fn sync_slice_disjoint_parallel_writes() {
-        let mut data = vec![0usize; 1000];
+        // Shrunk under Miri (threads + per-element interpretation are
+        // slow); the aliasing structure is identical at any length.
+        const LEN: usize = if cfg!(miri) { 128 } else { 1000 };
+        let mut data = vec![0usize; LEN];
         {
             let shared = SyncUnsafeSlice::new(&mut data);
             std::thread::scope(|s| {
                 for t in 0..4 {
                     let shared = &shared;
                     s.spawn(move || {
-                        for i in (t..1000).step_by(4) {
+                        for i in (t..LEN).step_by(4) {
                             // SAFETY: indices are partitioned by residue class.
                             unsafe { shared.write(i, i * 2) };
                         }

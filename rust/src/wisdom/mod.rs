@@ -55,6 +55,7 @@ pub enum PlanRigor {
 }
 
 impl PlanRigor {
+    /// Parse from a CLI/config string (`estimate` | `measure` | `exhaustive`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "estimate" => Some(PlanRigor::Estimate),
@@ -63,6 +64,7 @@ impl PlanRigor {
         }
     }
 
+    /// Canonical name (round-trips through [`Self::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             PlanRigor::Estimate => "estimate",
@@ -76,17 +78,35 @@ impl PlanRigor {
 #[derive(Debug, Clone, PartialEq)]
 pub enum WisdomWarning {
     /// The wisdom file exists but is not parseable.
-    CorruptStore { path: PathBuf, detail: String },
+    CorruptStore {
+        /// The store file that failed to parse.
+        path: PathBuf,
+        /// Parser detail.
+        detail: String,
+    },
     /// The wisdom file carries a different `SO3WIS*` format version.
-    VersionMismatch { path: PathBuf, found: String },
+    VersionMismatch {
+        /// The store file that was ignored.
+        path: PathBuf,
+        /// Version string found in the file.
+        found: String,
+    },
     /// The wisdom file could not be read (permissions, I/O).
-    Io { path: PathBuf, detail: String },
+    Io {
+        /// The store path that could not be read or written.
+        path: PathBuf,
+        /// OS error detail.
+        detail: String,
+    },
     /// Measure was requested on a plan with a DWT offload attached —
     /// the search times the CPU engines, which would mis-tune the
     /// offloaded plan.
     OffloadAttached,
     /// The measurement pass itself failed (e.g. pool spawn failure).
-    SearchFailed { detail: String },
+    SearchFailed {
+        /// Why the measured search was abandoned.
+        detail: String,
+    },
 }
 
 impl std::fmt::Display for WisdomWarning {
@@ -128,12 +148,19 @@ pub enum WisdomSource {
 /// The knobs a `Measure` build settled on, with their measured times.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TunedChoice {
+    /// Loop-scheduling policy.
     pub schedule: crate::pool::Schedule,
+    /// Order-domain partition strategy.
     pub strategy: crate::coordinator::PartitionStrategy,
+    /// DWT algorithm choice.
     pub algorithm: crate::dwt::DwtAlgorithm,
+    /// 1-D FFT engine.
     pub fft_engine: crate::fft::FftEngine,
+    /// SIMD dispatch policy.
     pub simd: crate::simd::SimdPolicy,
+    /// Measured forward-transform seconds (0 when estimated).
     pub fwd_seconds: f64,
+    /// Measured inverse-transform seconds (0 when estimated).
     pub inv_seconds: f64,
 }
 
@@ -141,6 +168,7 @@ pub struct TunedChoice {
 /// [`crate::transform::So3Plan::wisdom`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WisdomOutcome {
+    /// Where the winning configuration came from.
     pub source: WisdomSource,
     /// The applied knobs; `None` on fallback.
     pub choice: Option<TunedChoice>,

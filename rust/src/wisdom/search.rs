@@ -30,10 +30,15 @@ use crate::so3::sampling::So3Grid;
 /// One point of the search space.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Candidate {
+    /// Loop-scheduling policy.
     pub schedule: Schedule,
+    /// Order-domain partition strategy.
     pub strategy: PartitionStrategy,
+    /// DWT algorithm choice.
     pub algorithm: DwtAlgorithm,
+    /// 1-D FFT engine.
     pub fft_engine: FftEngine,
+    /// SIMD dispatch policy.
     pub simd: SimdPolicy,
 }
 

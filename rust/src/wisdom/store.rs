@@ -51,11 +51,14 @@ use super::WisdomWarning;
 /// Transform direction a measurement applies to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TuneDirection {
+    /// Analysis (FSOFT) direction.
     Forward,
+    /// Synthesis (iFSOFT) direction.
     Inverse,
 }
 
 impl TuneDirection {
+    /// Canonical name (round-trips through [`Self::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             TuneDirection::Forward => "fwd",
@@ -63,6 +66,7 @@ impl TuneDirection {
         }
     }
 
+    /// Parse from a stored string (`forward` | `inverse`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "fwd" => Some(TuneDirection::Forward),
@@ -75,17 +79,24 @@ impl TuneDirection {
 /// One wisdom slot: the measured-best knobs for a transform shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct WisdomKey {
+    /// Transform bandwidth B.
     pub bandwidth: usize,
+    /// Transform direction the entry was tuned for.
     pub direction: TuneDirection,
+    /// Worker-thread count the entry was tuned at.
     pub threads: usize,
 }
 
 /// The winning knob setting for a [`WisdomKey`], with its measured time.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WisdomEntry {
+    /// Loop-scheduling policy.
     pub schedule: Schedule,
+    /// Order-domain partition strategy.
     pub strategy: PartitionStrategy,
+    /// DWT algorithm choice.
     pub algorithm: DwtAlgorithm,
+    /// 1-D FFT engine.
     pub fft_engine: FftEngine,
     /// SIMD dispatch policy the winning time was measured with.
     pub simd: SimdPolicy,
@@ -223,10 +234,13 @@ impl WisdomStore {
         }
         match state.entries.get(&key) {
             Some(e) => {
+                // ordering: Relaxed — standalone statistic counter; the
+                // entry itself is read under the state mutex above.
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 WisdomLookup::Hit(e.clone())
             }
             None => {
+                // ordering: Relaxed — standalone statistic counter.
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 WisdomLookup::Miss
             }
@@ -246,6 +260,9 @@ impl WisdomStore {
         }
         state.entries.insert(key, entry);
         if let Err(e) = self.persist(&state) {
+            // ordering: Relaxed — once-flag for a log line; duplicate
+            // warnings on a lost race would be cosmetic, and the swap
+            // itself is already atomic.
             if !self.warned.swap(true, Ordering::Relaxed) {
                 eprintln!(
                     "so3ft wisdom: could not persist {:?}: {e} (entries stay in-memory)",
@@ -257,11 +274,15 @@ impl WisdomStore {
 
     /// Count one full measurement pass (for tests and `wisdom train`).
     pub fn note_measurement(&self) {
+        // ordering: Relaxed — standalone statistic counter.
         self.measurements.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Hit/miss/measurement counters for this store.
     pub fn stats(&self) -> WisdomStats {
         WisdomStats {
+            // ordering: Relaxed — statistics snapshot; the three
+            // counters are independent tallies, not a consistent cut.
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             measurements: self.measurements.load(Ordering::Relaxed),
@@ -295,6 +316,7 @@ impl WisdomStore {
 
     /// Emit `warning` to stderr once per store lifetime.
     pub(crate) fn warn_once(&self, warning: &WisdomWarning) {
+        // ordering: Relaxed — once-flag for a log line (see `record`).
         if !self.warned.swap(true, Ordering::Relaxed) {
             eprintln!("so3ft wisdom: {warning}; falling back to Estimate defaults");
         }

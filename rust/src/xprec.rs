@@ -13,7 +13,9 @@ use std::ops::{Add, Div, Mul, Neg, Sub};
 /// An unevaluated sum `hi + lo` with |lo| ≤ ulp(hi)/2.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Dd {
+    /// High (leading) component.
     pub hi: f64,
+    /// Low (error) component; `hi + lo` is the represented value.
     pub lo: f64,
 }
 
@@ -43,9 +45,12 @@ fn two_prod(a: f64, b: f64) -> (f64, f64) {
 }
 
 impl Dd {
+    /// Double-double zero.
     pub const ZERO: Dd = Dd { hi: 0.0, lo: 0.0 };
+    /// Double-double one.
     pub const ONE: Dd = Dd { hi: 1.0, lo: 0.0 };
 
+    /// Widen an `f64` (exact).
     #[inline]
     pub fn from_f64(x: f64) -> Self {
         Dd { hi: x, lo: 0.0 }
@@ -58,11 +63,13 @@ impl Dd {
         Dd { hi: s, lo: e }
     }
 
+    /// Round back to the nearest `f64`.
     #[inline]
     pub fn to_f64(self) -> f64 {
         self.hi + self.lo
     }
 
+    /// Absolute value.
     #[inline]
     pub fn abs(self) -> Dd {
         if self.hi < 0.0 || (self.hi == 0.0 && self.lo < 0.0) {
@@ -160,7 +167,9 @@ impl Neg for Dd {
 /// accumulation.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DdComplex {
+    /// Real part.
     pub re: Dd,
+    /// Imaginary part.
     pub im: Dd,
 }
 
@@ -168,11 +177,13 @@ pub struct DdComplex {
 unsafe impl crate::util::Pod for DdComplex {}
 
 impl DdComplex {
+    /// Double-double complex zero.
     pub const ZERO: DdComplex = DdComplex {
         re: Dd::ZERO,
         im: Dd::ZERO,
     };
 
+    /// Widen an `(re, im)` pair (exact).
     #[inline]
     pub fn from_f64(re: f64, im: f64) -> Self {
         Self {
@@ -189,6 +200,7 @@ impl DdComplex {
         self.im = self.im + Dd::from_f64(im).mul_f64(s);
     }
 
+    /// Round both components back to `f64`.
     #[inline]
     pub fn to_f64(self) -> (f64, f64) {
         (self.re.to_f64(), self.im.to_f64())
